@@ -1,0 +1,59 @@
+//! Dataflow ablation (Figure-2-class study): OS vs WS vs IS, pipelined vs
+//! conservative folds, on the paper suite — plus the per-cycle PE wavefront
+//! occupancy series from the register-level OS stepper.
+//!
+//! ```sh
+//! cargo run --release --example dataflow_ablation
+//! ```
+
+use tpu_imac::systolic::{
+    array, simulate_network, ArrayConfig, Dataflow, FoldOverlap, Schedule, SramConfig,
+};
+use tpu_imac::util::table::{Align, Table};
+use tpu_imac::workload::zoo;
+
+fn main() {
+    // 1. Cycle totals per dataflow/overlap for every model (TPU-only, so
+    //    dense layers are included — the ablation the OS choice rests on).
+    let sram = SramConfig::default();
+    let mut t = Table::new(&[
+        "model", "OS-pipe", "OS-cons", "WS-pipe", "IS-pipe", "OS util%",
+    ])
+    .with_title("Dataflow ablation — total TPU cycles (32x32 array)")
+    .with_aligns(&[Align::Left, Align::Right, Align::Right, Align::Right, Align::Right, Align::Right]);
+    for model in zoo::paper_suite() {
+        let mut cells = vec![format!("{}/{}", model.name, model.dataset.label())];
+        let mut os_util = 0.0;
+        for (df, ov) in [
+            (Dataflow::Os, FoldOverlap::Pipelined),
+            (Dataflow::Os, FoldOverlap::Conservative),
+            (Dataflow::Ws, FoldOverlap::Pipelined),
+            (Dataflow::Is, FoldOverlap::Pipelined),
+        ] {
+            let cfg = ArrayConfig { rows: 32, cols: 32, dataflow: df, overlap: ov };
+            let (_, stats) = simulate_network(&cfg, &sram, &model, Schedule::TpuOnly);
+            if df == Dataflow::Os && ov == FoldOverlap::Pipelined {
+                os_util = stats.avg_utilization;
+            }
+            cells.push(format!("{}", stats.total_cycles));
+        }
+        cells.push(format!("{:.1}", os_util * 100.0));
+        t.row(cells);
+    }
+    println!("{}", t.to_ascii());
+
+    // 2. Wavefront occupancy (Figure 2a): an 8x8 OS fold with K=12.
+    let a = vec![vec![1.0f32; 12]; 8];
+    let b = vec![vec![1.0f32; 8]; 12];
+    let run = array::run_os_fold(&a, &b);
+    println!("OS 8x8 fold (K=12) wavefront — active PEs per cycle:");
+    for (t, n) in run.occupancy.iter().enumerate() {
+        println!("  cycle {t:>2}: {}", "#".repeat(*n as usize / 2 + 1));
+    }
+    println!(
+        "last MAC at cycle {} (analytic r+c+K-2 = {}), drain completes at {}",
+        run.cycles_to_last_mac - 1,
+        8 + 8 + 12 - 2,
+        run.cycles_with_drain
+    );
+}

@@ -1,0 +1,16 @@
+//! IMAC non-ideality study (Figure-1-class characterization): the analog
+//! sigmoid VTC, plus accuracy-relevant deviation under device variation and
+//! interconnect IR drop — the effects that motivate the paper's bounded
+//! subarray sizes (Amin et al.'s Xbar-partitioning).
+//!
+//! ```sh
+//! cargo run --release --example imac_noise_study [-- sigma alpha trials]
+//! ```
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let sigma = args.first().and_then(|s| s.parse().ok()).unwrap_or(0.2);
+    let alpha = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(0.2);
+    let trials = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(32);
+    tpu_imac::studies::imac_noise_study(sigma, alpha, trials);
+}

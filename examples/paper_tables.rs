@@ -1,0 +1,23 @@
+//! Regenerate the paper's Table 2 and Table 3 (ours vs published values).
+//!
+//! ```sh
+//! cargo run --release --example paper_tables [-- --artifacts artifacts]
+//! ```
+//!
+//! Accuracy columns fill in once `make train` has produced
+//! `artifacts/accuracy.json` (LeNet full-size; CIFAR rows are reduced-width
+//! proxies on synthetic data — see DESIGN.md §5).
+
+use tpu_imac::arch;
+use tpu_imac::report::{self, AccuracyTable};
+use tpu_imac::systolic::{ArrayConfig, SramConfig};
+
+fn main() -> anyhow::Result<()> {
+    let artifacts =
+        std::env::args().skip_while(|a| a != "--artifacts").nth(1).unwrap_or_else(|| "artifacts".into());
+    let evals = arch::evaluate_suite(&ArrayConfig::default(), &SramConfig::default())?;
+    let acc = AccuracyTable::load(&format!("{artifacts}/accuracy.json"));
+    println!("{}", report::table2(&evals, &acc).to_ascii());
+    println!("{}", report::table3(&evals, &acc).to_ascii());
+    Ok(())
+}

@@ -1,0 +1,65 @@
+//! Quickstart: evaluate one CNN on the TPU-IMAC architecture model and run
+//! one inference through the IMAC analog fabric.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use tpu_imac::arch;
+use tpu_imac::imac::{AdcConfig, ImacConfig, ImacFabric};
+use tpu_imac::systolic::{ArrayConfig, SramConfig};
+use tpu_imac::util::rng::Xoshiro256;
+use tpu_imac::workload::zoo;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Architecture evaluation: cycles + memory for LeNet (paper row 1).
+    let model = zoo::lenet();
+    println!("{}", model.summary());
+    let eval = arch::evaluate(&model, &ArrayConfig::default(), &SramConfig::default())?;
+    println!(
+        "TPU:      {:>8} cycles   {:.3} MB",
+        eval.cycles_tpu,
+        eval.mem.tpu_mb()
+    );
+    println!(
+        "TPU-IMAC: {:>8} cycles   {:.3} MB (SRAM {:.3} + RRAM {:.3})",
+        eval.cycles_hybrid,
+        eval.mem.hybrid_mb(),
+        eval.mem.sram_mb(),
+        eval.mem.rram_mb()
+    );
+    println!(
+        "=> speedup {:.2}x, memory reduction {:.2}% (paper: 2.59x, 88.34%)",
+        eval.speedup(),
+        eval.memory_reduction() * 100.0
+    );
+
+    // 2. One analog inference through a ternary IMAC head.
+    let mut rng = Xoshiro256::seed_from_u64(1);
+    let (n_in, n_hidden, n_out) = (256, 120, 10);
+    let w1: Vec<i8> = (0..n_in * n_hidden).map(|_| (rng.next_below(3) as i8) - 1).collect();
+    let w2: Vec<i8> = (0..n_hidden * n_out).map(|_| (rng.next_below(3) as i8) - 1).collect();
+    let fabric = ImacFabric::build(
+        &[(w1, n_in, n_hidden), (w2, n_hidden, n_out)],
+        &ImacConfig::default(),
+        AdcConfig::default(),
+        0,
+    );
+    let x: Vec<f32> = (0..n_in).map(|_| if rng.next_u64() & 1 == 1 { 1.0 } else { -1.0 }).collect();
+    let scores = fabric.forward(&x);
+    println!(
+        "\nIMAC head: {} subarrays, {} cycles/inference, {} B RRAM",
+        fabric.subarrays_used(),
+        fabric.latency_cycles(),
+        fabric.rram_bytes()
+    );
+    println!("scores: {scores:.3?}");
+    let cost = tpu_imac::imac::inference_cost(&fabric, &tpu_imac::imac::EnergyConfig::default());
+    println!(
+        "energy: {:.2} nJ/inference ({} device reads, {} neuron evals)",
+        cost.energy_j * 1e9,
+        cost.device_reads,
+        cost.neuron_evals
+    );
+    Ok(())
+}

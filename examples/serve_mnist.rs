@@ -1,0 +1,175 @@
+//! END-TO-END driver: the full three-layer stack on a real small workload.
+//!
+//! 1. Loads the two-step-trained LeNet (conv FP32 + ternary FC) produced by
+//!    `make train`;
+//! 2. Starts the rust serving coordinator with the **PJRT backend** (the
+//!    JAX-AOT `lenet_conv_b{B}.hlo.txt` artifact compiled via the xla
+//!    crate) and the **rust IMAC analog fabric** for the FC section —
+//!    exactly the hardware partition (systolic conv → sign bridge →
+//!    analog FC), with Python nowhere on the path;
+//! 3. Replays a synthetic-MNIST test set as a batched request stream;
+//! 4. Reports end-to-end accuracy (must match training-time ternary
+//!    accuracy) and latency/throughput.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example serve_mnist
+//! ```
+
+use anyhow::{Context, Result};
+
+use tpu_imac::coordinator::{
+    Coordinator, CoordinatorConfig, InferenceBackend, NativeBackend, PjrtConvBackend,
+};
+use tpu_imac::imac::{AdcConfig, ImacConfig};
+use tpu_imac::nn::{DeployedModel, Tensor};
+use tpu_imac::runtime::Runtime;
+
+/// Deterministic synthetic-MNIST mirror of python/compile/datasets.py.
+/// (Rust replays the *saved* test set if present; else it generates its own
+/// images purely for throughput measurement.)
+fn load_test_set(artifacts: &str) -> Option<(Vec<Tensor>, Vec<usize>)> {
+    let path = format!("{artifacts}/testset_mnist.json");
+    let text = std::fs::read_to_string(path).ok()?;
+    let doc = tpu_imac::util::json::Json::parse(&text).ok()?;
+    let images = doc.get("images").as_arr()?.to_vec();
+    let labels: Vec<usize> =
+        doc.get("labels").as_arr()?.iter().filter_map(|v| v.as_usize()).collect();
+    let mut tensors = Vec::with_capacity(images.len());
+    for img in &images {
+        let data = img.as_f32_vec()?;
+        tensors.push(Tensor::from_vec(28, 28, 1, data));
+    }
+    Some((tensors, labels))
+}
+
+fn main() -> Result<()> {
+    let artifacts = std::env::args()
+        .skip_while(|a| a != "--artifacts")
+        .nth(1)
+        .unwrap_or_else(|| "artifacts".into());
+    let max_batch = 8usize;
+
+    let model = DeployedModel::load(
+        &format!("{artifacts}/weights_lenet.json"),
+        &ImacConfig::default(),
+        AdcConfig { bits: 0, full_scale: 1.0 },
+        0,
+    )
+    .context("run `make train` first (produces artifacts/weights_lenet.json)")?;
+    println!(
+        "loaded {} [{}]: training-time fp32 {:.2}%, ternary {:.2}%",
+        model.row,
+        model.dataset,
+        model.acc_fp32 * 100.0,
+        model.acc_ternary * 100.0
+    );
+    drop(model);
+
+    let artifacts2 = artifacts.clone();
+    let coord = Coordinator::start(
+        CoordinatorConfig { max_batch, ..Default::default() },
+        move || -> Box<dyn InferenceBackend> {
+            let model = DeployedModel::load(
+                &format!("{artifacts2}/weights_lenet.json"),
+                &ImacConfig::default(),
+                AdcConfig { bits: 0, full_scale: 1.0 },
+                0,
+            )
+            .expect("weights json");
+            let artifact = format!("lenet_conv_b{max_batch}.hlo.txt");
+            match Runtime::open(&artifacts2)
+                .and_then(|mut rt| {
+                    rt.check_spec(&ImacConfig::default())?;
+                    rt.load(&artifact)?;
+                    Ok(rt)
+                })
+                .and_then(|rt| PjrtConvBackend::new(rt, &artifact, model))
+            {
+                Ok(b) => {
+                    eprintln!("backend: PJRT conv ({artifact}) + rust IMAC fabric");
+                    Box::new(b)
+                }
+                Err(e) => {
+                    eprintln!("PJRT unavailable ({e:#}); native fallback");
+                    let m = DeployedModel::load(
+                        &format!("{artifacts2}/weights_lenet.json"),
+                        &ImacConfig::default(),
+                        AdcConfig { bits: 0, full_scale: 1.0 },
+                        0,
+                    )
+                    .expect("weights json");
+                    Box::new(NativeBackend::new(m))
+                }
+            }
+        },
+    );
+    let client = coord.client();
+
+    // Request stream: the saved test set (accuracy + perf) or synthetic
+    // noise (perf only).
+    let (images, labels) = match load_test_set(&artifacts) {
+        Some((i, l)) => {
+            println!("replaying saved test set: {} images", i.len());
+            (i, l)
+        }
+        None => {
+            println!("no saved test set (artifacts/testset_mnist.json); using 512 noise images");
+            let mut rng = tpu_imac::util::rng::Xoshiro256::seed_from_u64(3);
+            let imgs = (0..512)
+                .map(|_| Tensor::from_vec(28, 28, 1, (0..784).map(|_| rng.next_f32()).collect()))
+                .collect();
+            (imgs, Vec::new())
+        }
+    };
+
+    let t0 = std::time::Instant::now();
+    let mut rxs = Vec::with_capacity(images.len());
+    for img in images {
+        rxs.push(client.submit(img)?.1);
+    }
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv()?;
+        if let Some(&label) = labels.get(i) {
+            total += 1;
+            if resp.predicted == label {
+                correct += 1;
+            }
+        }
+    }
+    let wall = t0.elapsed();
+    let snap = coord.metrics.snapshot();
+
+    println!(
+        "\nserved {} requests in {:.3}s => {:.1} req/s",
+        snap.completed,
+        wall.as_secs_f64(),
+        snap.completed as f64 / wall.as_secs_f64()
+    );
+    println!(
+        "latency mean {:.2} ms | p50 {:.2} | p95 {:.2} | p99 {:.2} ms; {} batches (fill {:.0}%)",
+        snap.mean_latency_us / 1e3,
+        snap.p50_latency_us / 1e3,
+        snap.p95_latency_us / 1e3,
+        snap.p99_latency_us / 1e3,
+        snap.batches,
+        snap.mean_batch_fill * 100.0
+    );
+    println!(
+        "stage totals: conv(PJRT) {:.1} ms, IMAC-FC {:.1} ms, queue {:.1} ms",
+        snap.conv_us_total as f64 / 1e3,
+        snap.imac_us_total as f64 / 1e3,
+        snap.queue_us_total as f64 / 1e3
+    );
+    if total > 0 {
+        println!(
+            "end-to-end accuracy: {}/{} = {:.2}%",
+            correct,
+            total,
+            100.0 * correct as f64 / total as f64
+        );
+    }
+    coord.shutdown();
+    Ok(())
+}

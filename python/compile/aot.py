@@ -1,0 +1,154 @@
+"""AOT lowering: JAX -> HLO **text** artifacts for the rust PJRT runtime.
+
+Interchange is HLO text, not a serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids that the xla crate's xla_extension 0.5.1
+rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (per batch size B in --batches):
+
+* ``lenet_conv_b{B}.hlo.txt``  — conv stack only: image (B,28,28,1) ->
+  raw bridge features (B,256). This is what the systolic array computes.
+* ``lenet_full_b{B}.hlo.txt``  — the whole deployed pipeline: image ->
+  sign bridge -> Pallas ``imac_mvm`` ternary FC stack -> (B,10) sigmoid
+  outputs. Lowered from the same code path the tests verify.
+* ``imac_fc_b{B}.hlo.txt``     — FC section only: bridge levels (B,256) ->
+  (B,10). The rust coordinator uses conv_b{B} + its own IMAC fabric on the
+  request path and keeps this one for cross-validation.
+* ``manifest.json``            — artifact index with shapes + accuracy.
+* ``imac_spec.json``           — the shared hardware constants.
+
+Trained weights are baked in as constants (XLA folds them), so the rust
+binary needs no weight loading for the PJRT path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .imac_spec import SPEC, write_spec
+from .kernels.imac_mvm import imac_fc_stack
+from .model import conv_stack, lenet_spec
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring).
+
+    CRITICAL: print with ``print_large_constants=True``. The default HLO
+    printer elides big literals as ``{...}``, and xla_extension 0.5.1's text
+    parser silently parses the ellipsis as an all-zeros literal — the model
+    "runs" with zeroed weights. (Found the hard way; pinned by
+    test_aot.py::test_hlo_text_has_no_elided_constants and the rust
+    runtime_pjrt integration tests.)
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # The 0.5.1 text parser predates newer metadata attributes
+    # (source_end_line etc.) — strip metadata entirely.
+    opts.print_metadata = False
+    return comp.get_hlo_module().to_string(opts)
+
+
+def load_trained(path: str):
+    """Rebuild jax params + ternary FC weights from weights_lenet.json."""
+    with open(path) as f:
+        doc = json.load(f)
+    conv = []
+    for layer in doc["conv_layers"]:
+        if layer["kind"] in ("conv", "dwconv"):
+            w = np.asarray(layer["w"], dtype=np.float32).reshape(layer["w_shape"])
+            b = np.asarray(layer["b"], dtype=np.float32)
+            conv.append({"w": jnp.asarray(w), "b": jnp.asarray(b)})
+    fc = []
+    for layer in doc["fc_layers"]:
+        w = np.asarray(layer["w_ternary"], dtype=np.float32).reshape(
+            layer["n_in"], layer["n_out"]
+        )
+        fc.append(jnp.asarray(w))
+    return {"conv": conv}, fc, doc
+
+
+def build_fns(params, fc_weights, spec):
+    """The three lowered computations. Each returns a 1-tuple (the rust
+    side unwraps with to_tuple1)."""
+
+    def conv_only(x):
+        return (conv_stack(params, spec, x),)
+
+    def fc_only(h_sign):
+        return (imac_fc_stack(h_sign, fc_weights),)
+
+    def full(x):
+        feats = conv_stack(params, spec, x)
+        h = jnp.where(feats >= 0, 1.0, -1.0).astype(jnp.float32)
+        return (imac_fc_stack(h, fc_weights),)
+
+    return conv_only, fc_only, full
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--weights", default=None,
+                    help="weights json (default <out>/weights_lenet.json)")
+    ap.add_argument("--batches", type=int, nargs="+", default=[1, 8])
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    weights_path = args.weights or os.path.join(args.out, "weights_lenet.json")
+    if not os.path.exists(weights_path):
+        raise SystemExit(
+            f"{weights_path} missing - run `python -m compile.train --row lenet` first"
+        )
+    spec = lenet_spec()
+    params, fc_weights, doc = load_trained(weights_path)
+    conv_only, fc_only, full = build_fns(params, fc_weights, spec)
+
+    bridge_w = int(fc_weights[0].shape[0])
+    classes = int(fc_weights[-1].shape[1])
+    manifest = {
+        "model": "lenet",
+        "bridge_width": bridge_w,
+        "classes": classes,
+        "acc_fp32": doc.get("acc_fp32"),
+        "acc_ternary": doc.get("acc_ternary"),
+        "artifacts": {},
+    }
+    for b in args.batches:
+        img = jax.ShapeDtypeStruct((b, 28, 28, 1), jnp.float32)
+        sign = jax.ShapeDtypeStruct((b, bridge_w), jnp.float32)
+        for tag, fn, arg in [
+            ("lenet_conv", conv_only, img),
+            ("imac_fc", fc_only, sign),
+            ("lenet_full", full, img),
+        ]:
+            name = f"{tag}_b{b}.hlo.txt"
+            text = to_hlo_text(jax.jit(fn).lower(arg))
+            with open(os.path.join(args.out, name), "w") as f:
+                f.write(text)
+            manifest["artifacts"][name] = {
+                "input": list(arg.shape),
+                "output": [b, bridge_w if tag == "lenet_conv" else classes],
+            }
+            print(f"wrote {name} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+        f.write("\n")
+    write_spec(os.path.join(args.out, "imac_spec.json"))
+    print("manifest + imac_spec written")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,136 @@
+"""Deterministic synthetic datasets (the environment has no network access,
+so MNIST/CIFAR are substituted per DESIGN.md §5).
+
+* ``synth_mnist`` — 28x28x1 glyph classes: 10 digit-like templates drawn
+  procedurally, then randomly translated, scaled and noised. LeNet-class
+  CNNs separate them well but not trivially (pixel noise + jitter).
+* ``synth_cifar`` — 32x32x3 texture classes: each class is a distinct
+  (orientation, frequency, color-phase, blob-layout) generative recipe;
+  100-class mode subdivides recipes more finely, which makes the task
+  genuinely harder (mirroring CIFAR-100 vs CIFAR-10 in the paper's
+  accuracy table).
+
+All sampling is keyed: the same (seed, split) always yields the same data.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# synth-MNIST
+# ---------------------------------------------------------------------------
+
+# 7x5 coarse glyphs for digits 0-9 (hand-drawn bitmaps).
+_DIGIT_ROWS = {
+    0: ["01110", "10001", "10011", "10101", "11001", "10001", "01110"],
+    1: ["00100", "01100", "00100", "00100", "00100", "00100", "01110"],
+    2: ["01110", "10001", "00001", "00110", "01000", "10000", "11111"],
+    3: ["11110", "00001", "00001", "01110", "00001", "00001", "11110"],
+    4: ["00010", "00110", "01010", "10010", "11111", "00010", "00010"],
+    5: ["11111", "10000", "11110", "00001", "00001", "10001", "01110"],
+    6: ["00110", "01000", "10000", "11110", "10001", "10001", "01110"],
+    7: ["11111", "00001", "00010", "00100", "01000", "01000", "01000"],
+    8: ["01110", "10001", "10001", "01110", "10001", "10001", "01110"],
+    9: ["01110", "10001", "10001", "01111", "00001", "00010", "01100"],
+}
+
+
+def _digit_template(d: int) -> np.ndarray:
+    rows = _DIGIT_ROWS[d]
+    return np.array([[float(c) for c in r] for r in rows], dtype=np.float32)
+
+
+def _paste_scaled(canvas: np.ndarray, tmpl: np.ndarray, scale: int, dy: int, dx: int) -> None:
+    """Nearest-neighbour upscale of tmpl by `scale`, pasted at (dy, dx)."""
+    big = np.kron(tmpl, np.ones((scale, scale), dtype=np.float32))
+    h, w = big.shape
+    canvas[dy : dy + h, dx : dx + w] = np.maximum(canvas[dy : dy + h, dx : dx + w], big)
+
+
+def synth_mnist(n: int, *, seed: int = 0, split: str = "train"):
+    """Returns (images (n,28,28,1) float32 in [0,1], labels (n,) int32)."""
+    rng = np.random.default_rng(np.random.SeedSequence([seed, hash(split) & 0xFFFF, 1]))
+    xs = np.zeros((n, 28, 28, 1), dtype=np.float32)
+    ys = rng.integers(0, 10, n).astype(np.int32)
+    for i in range(n):
+        d = int(ys[i])
+        tmpl = _digit_template(d)
+        scale = int(rng.integers(2, 4))  # 2 or 3 => glyph 10x14 or 15x21
+        gh, gw = 7 * scale, 5 * scale
+        dy = int(rng.integers(0, 28 - gh + 1))
+        dx = int(rng.integers(0, 28 - gw + 1))
+        canvas = np.zeros((28, 28), dtype=np.float32)
+        _paste_scaled(canvas, tmpl, scale, dy, dx)
+        # Stroke-intensity jitter + additive noise.
+        canvas *= float(rng.uniform(0.7, 1.0))
+        canvas += rng.normal(0.0, 0.12, canvas.shape).astype(np.float32)
+        xs[i, :, :, 0] = np.clip(canvas, 0.0, 1.0)
+    return xs, ys
+
+
+# ---------------------------------------------------------------------------
+# synth-CIFAR
+# ---------------------------------------------------------------------------
+
+
+def _class_recipe(c: int, n_classes: int):
+    """Deterministic generative parameters for class c."""
+    r = np.random.default_rng(np.random.SeedSequence([9177, n_classes, c]))
+    return {
+        "theta": r.uniform(0, np.pi),
+        "freq": r.uniform(0.15, 0.9),
+        "phase_rgb": r.uniform(0, 2 * np.pi, 3),
+        "blob_xy": r.uniform(4, 28, (2, 2)),
+        "blob_sigma": r.uniform(2.0, 5.0),
+        "blob_color": r.uniform(0.3, 1.0, 3),
+        "mix": r.uniform(0.3, 0.7),
+    }
+
+
+def synth_cifar(n: int, *, n_classes: int = 10, seed: int = 0, split: str = "train"):
+    """Returns (images (n,32,32,3) float32 in [0,1], labels (n,) int32)."""
+    assert n_classes in (10, 100)
+    rng = np.random.default_rng(np.random.SeedSequence([seed, hash(split) & 0xFFFF, 2]))
+    recipes = [_class_recipe(c, n_classes) for c in range(n_classes)]
+    yy, xx = np.mgrid[0:32, 0:32].astype(np.float32)
+    xs = np.zeros((n, 32, 32, 3), dtype=np.float32)
+    ys = rng.integers(0, n_classes, n).astype(np.int32)
+    for i in range(n):
+        rc = recipes[int(ys[i])]
+        # Oriented grating with per-channel phase; orientation/frequency are
+        # jittered per sample so classes have real intra-class variation.
+        theta = rc["theta"] + rng.normal(0.0, 0.12)
+        freq = rc["freq"] * rng.uniform(0.85, 1.15)
+        proj = np.cos(theta) * xx + np.sin(theta) * yy
+        jitter = rng.uniform(-1.0, 1.0)
+        img = np.stack(
+            [0.5 + 0.5 * np.sin(freq * proj + p + jitter) for p in rc["phase_rgb"]],
+            axis=-1,
+        )
+        # Class-specific Gaussian blobs (position jittered per sample).
+        for bx, by in rc["blob_xy"]:
+            bx_j = bx + rng.uniform(-4, 4)
+            by_j = by + rng.uniform(-4, 4)
+            blob = np.exp(-(((xx - bx_j) ** 2 + (yy - by_j) ** 2) / (2 * rc["blob_sigma"] ** 2)))
+            img = img * (1 - rc["mix"] * blob[..., None]) + rc["mix"] * blob[..., None] * rc[
+                "blob_color"
+            ]
+        img += rng.normal(0.0, 0.10, img.shape)
+        xs[i] = np.clip(img, 0.0, 1.0).astype(np.float32)
+    return xs, ys
+
+
+def load(name: str, n: int, *, seed: int = 0, split: str = "train"):
+    """Dataset dispatch: 'mnist' | 'cifar10' | 'cifar100'."""
+    if name == "mnist":
+        return synth_mnist(n, seed=seed, split=split)
+    if name == "cifar10":
+        return synth_cifar(n, n_classes=10, seed=seed, split=split)
+    if name == "cifar100":
+        return synth_cifar(n, n_classes=100, seed=seed, split=split)
+    raise ValueError(f"unknown dataset {name}")
+
+
+def num_classes(name: str) -> int:
+    return {"mnist": 10, "cifar10": 10, "cifar100": 100}[name]

@@ -1,0 +1,47 @@
+"""Shared TPU-IMAC hardware constants — the single source of truth for the
+numerics contract between the Python build path (training, Pallas kernels,
+AOT lowering) and the rust runtime/IMAC simulator.
+
+Rust mirrors these in `imac::ImacConfig` / `arch::bridge`; `make artifacts`
+writes them to `artifacts/imac_spec.json` so the rust side can assert the
+contract at load time.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+from dataclasses import asdict, dataclass
+
+
+@dataclass(frozen=True)
+class ImacSpec:
+    # Differential-amplifier gain policy: gain(fan_in) = gain_num / sqrt(fan_in).
+    gain_num: float = 4.0
+    # Analog sigmoid neuron VTC slope: y = sigmoid(k * x).
+    neuron_k: float = 1.0
+    # Bridge convention: x >= 0 -> +1 else -1 (paper's inverted sign bit).
+    bridge_nonneg_is_one: bool = True
+    # Physical subarray bounds (rows=inputs, cols=outputs).
+    subarray_rows: int = 256
+    subarray_cols: int = 256
+    # Terminal ADC resolution (bits); 0 disables quantization.
+    adc_bits: int = 8
+    # Systolic array (the paper's 32x32 OS edge TPU).
+    array_rows: int = 32
+    array_cols: int = 32
+
+    def amp_gain(self, fan_in: int) -> float:
+        """Per-layer amplifier gain."""
+        return self.gain_num / math.sqrt(float(fan_in))
+
+    def to_json(self) -> str:
+        return json.dumps(asdict(self), indent=2, sort_keys=True) + "\n"
+
+
+SPEC = ImacSpec()
+
+
+def write_spec(path: str) -> None:
+    with open(path, "w") as f:
+        f.write(SPEC.to_json())

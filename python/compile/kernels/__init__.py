@@ -1,0 +1,4 @@
+"""Layer-1 Pallas kernels and their pure-jnp oracles."""
+
+from .imac_mvm import imac_fc_stack, imac_mvm  # noqa: F401
+from .systolic_gemm import systolic_gemm  # noqa: F401

@@ -1,0 +1,94 @@
+"""Pallas kernel: the IMAC analog MVM + sigmoid neuron (the paper's FC
+hot-spot, Layer 1 of the stack).
+
+The kernel computes one logical IMAC layer,
+
+    y = sigmoid(k * gain * (x @ W)),
+
+for x (B, K) bridge/activation voltages and W (K, N) ternary weights stored
+as f32 {-1, 0, +1}. On real TPU silicon the contraction would hit the MXU
+as a bf16 matmul with f32 accumulation; here we lower with interpret=True
+(CPU PJRT cannot execute Mosaic custom-calls) but keep the Block structure
+TPU-shaped:
+
+* grid over N in TILE_N-column stripes (one IMAC "subarray column group"
+  per program), K resident — mirroring the crossbar, where the entire input
+  vector drives all rows simultaneously and columns are physically parallel;
+* VMEM per program = x tile (B*K*4 B) + W stripe (K*TILE_N*4 B) + out tile,
+  sized well under the ~16 MB VMEM budget for the paper's 1024x1024 head
+  (see DESIGN.md "Perf").
+
+HARDWARE ADAPTATION (DESIGN.md §Hardware-Adaptation): the paper's "analog
+parallelism over crossbar columns" becomes "grid parallelism over column
+stripes"; the differential-pair normalization and amplifier gain fold into
+a single scalar `gain` baked at lowering time.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..imac_spec import SPEC
+
+# Column-stripe width. 128 matches the TPU lane width (and keeps the VMEM
+# footprint of the 1024-wide head at ~0.5 MB/program).
+TILE_N = 128
+
+
+def _imac_kernel(x_ref, w_ref, o_ref, *, gain: float, k: float):
+    """One grid step: full-K contraction for a TILE_N column stripe."""
+    x = x_ref[...]          # (B, K)
+    w = w_ref[...]          # (K, TILE_N)
+    pre = jnp.dot(x, w, preferred_element_type=jnp.float32) * (gain * k)
+    o_ref[...] = (1.0 / (1.0 + jnp.exp(-pre))).astype(jnp.float32)
+
+
+def imac_mvm(x: jnp.ndarray, w: jnp.ndarray, *, gain: float | None = None,
+             k: float = SPEC.neuron_k, tile_n: int = TILE_N,
+             interpret: bool = True) -> jnp.ndarray:
+    """Apply one IMAC layer via the Pallas kernel.
+
+    x: (B, K) f32; w: (K, N) f32 ternary values. N padded internally to a
+    multiple of tile_n.
+    """
+    b, kk = x.shape
+    k_in, n = w.shape
+    assert kk == k_in, f"x K={kk} vs w K={k_in}"
+    if gain is None:
+        gain = SPEC.amp_gain(k_in)
+
+    n_pad = (-n) % tile_n
+    if n_pad:
+        w = jnp.pad(w, ((0, 0), (0, n_pad)))
+    n_total = n + n_pad
+    grid = (n_total // tile_n,)
+
+    out = pl.pallas_call(
+        functools.partial(_imac_kernel, gain=float(gain), k=float(k)),
+        out_shape=jax.ShapeDtypeStruct((b, n_total), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, kk), lambda j: (0, 0)),        # x: resident
+            pl.BlockSpec((kk, tile_n), lambda j: (0, j)),   # W: column stripe j
+        ],
+        out_specs=pl.BlockSpec((b, tile_n), lambda j: (0, j)),
+        interpret=interpret,
+    )(x, w)
+    return out[:, :n]
+
+
+def imac_fc_stack(x_sign: jnp.ndarray, weights: list[jnp.ndarray], **kw) -> jnp.ndarray:
+    """Chain IMAC layers in the analog domain (kernel per layer)."""
+    h = x_sign
+    for w in weights:
+        h = imac_mvm(h, w, **kw)
+    return h
+
+
+def vmem_bytes(b: int, kk: int, n: int, tile_n: int = TILE_N) -> int:
+    """Estimated VMEM footprint per grid program (see module docs)."""
+    return 4 * (b * kk + kk * min(tile_n, n) + b * min(tile_n, n))

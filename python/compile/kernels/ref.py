@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Everything here is the *numerics contract*: the Pallas kernels, the rust
+IMAC functional simulator, and the deployed HLO artifacts must all agree
+with these references up to float tolerance.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..imac_spec import SPEC
+
+
+def bridge_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """The PE->IMAC sign-bit bridge: x >= 0 -> +1, x < 0 -> -1.
+
+    Note `jnp.where(x >= 0, ...)` maps IEEE -0.0 to +1, matching the rust
+    `sign_level` canonicalization.
+    """
+    return jnp.where(x >= 0, 1.0, -1.0).astype(jnp.float32)
+
+
+def imac_layer_ref(x: jnp.ndarray, w: jnp.ndarray, gain: float | None = None,
+                   k: float = SPEC.neuron_k) -> jnp.ndarray:
+    """One analog IMAC layer: sigmoid(k * gain * (x @ w)).
+
+    x: (..., n_in) inputs (first layer: bridge levels +-1; deeper layers:
+       previous sigmoid outputs in (0,1)).
+    w: (n_in, n_out) ternary weights stored as f32 {-1, 0, +1}.
+    """
+    n_in = w.shape[0]
+    if gain is None:
+        gain = SPEC.amp_gain(n_in)
+    pre = (x @ w) * gain
+    return jnp.asarray(1.0 / (1.0 + jnp.exp(-k * pre)), dtype=jnp.float32)
+
+
+def imac_fc_stack_ref(x_sign: jnp.ndarray, weights: list[jnp.ndarray]) -> jnp.ndarray:
+    """The full FC section chained in the analog domain (no ADC between
+    layers); returns the final layer's sigmoid outputs."""
+    h = x_sign
+    for w in weights:
+        h = imac_layer_ref(h, w)
+    return h
+
+
+def adc_ref(x: jnp.ndarray, bits: int = SPEC.adc_bits, full_scale: float = 1.0) -> jnp.ndarray:
+    """Terminal ADC: mid-rise uniform quantizer on [0, full_scale]."""
+    if bits == 0:
+        return x
+    levels = float(2 ** bits - 1)
+    clamped = jnp.clip(x, 0.0, full_scale)
+    return jnp.round(clamped / full_scale * levels) / levels * full_scale
+
+
+def systolic_gemm_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Reference for the OS-tiled GEMM kernel: plain matmul, f32 accumulate."""
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32)

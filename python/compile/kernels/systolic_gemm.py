@@ -1,0 +1,66 @@
+"""Pallas kernel: output-stationary tiled GEMM (the conv-side hot-spot).
+
+Mirrors the paper's 32x32 OS systolic array as a Pallas grid: each program
+owns one 32x32 output tile (the "stationary" OFMap block held in the PE
+registers) and streams the K dimension in TILE_K chunks — the BlockSpec
+expresses as an HBM->VMEM schedule what the hardware does with wavefront
+streaming. Accumulation is f32 (each paper PE is a full FP32 MAC), carried
+in the output tile itself: the (i, j) output block is revisited across the
+kk grid dimension, which Pallas guarantees sequential for the same output
+block (and interpret mode executes serially anyway).
+
+Convolutions lower to this kernel through im2col (`conv_as_gemm` in
+model.py); on a real TPU the 32x32xTILE_K blocks would map onto MXU passes.
+interpret=True because CPU PJRT cannot run Mosaic custom-calls.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# The paper's array is 32x32; output tiles match it exactly.
+TILE_M = 32
+TILE_N = 32
+TILE_K = 128
+
+
+def _gemm_kernel(a_ref, b_ref, o_ref):
+    """Grid (i, j, kk): accumulate A[i,kk] @ B[kk,j] into output tile (i,j)."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+
+
+def systolic_gemm(a: jnp.ndarray, b: jnp.ndarray, *, interpret: bool = True) -> jnp.ndarray:
+    """C = A @ B with OS 32x32 output tiling. Pads all dims internally."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"A K={k} vs B K={k2}"
+    mp, kp, np_ = (-m) % TILE_M, (-k) % TILE_K, (-n) % TILE_N
+    if mp or kp:
+        a = jnp.pad(a, ((0, mp), (0, kp)))
+    if kp or np_:
+        b = jnp.pad(b, ((0, kp), (0, np_)))
+    mt, kt, nt = a.shape[0] // TILE_M, a.shape[1] // TILE_K, b.shape[1] // TILE_N
+
+    out = pl.pallas_call(
+        _gemm_kernel,
+        out_shape=jax.ShapeDtypeStruct((a.shape[0], b.shape[1]), jnp.float32),
+        grid=(mt, nt, kt),
+        in_specs=[
+            pl.BlockSpec((TILE_M, TILE_K), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((TILE_K, TILE_N), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((TILE_M, TILE_N), lambda i, j, kk: (i, j)),
+        interpret=interpret,
+    )(a, b)
+    return out[:m, :n]
+
+
+def vmem_bytes() -> int:
+    """Per-program VMEM estimate: A tile + B tile + out tile, f32."""
+    return 4 * (TILE_M * TILE_K + TILE_K * TILE_N + TILE_M * TILE_N)

@@ -1,0 +1,265 @@
+"""Layer-2 JAX models: the CNNs of the paper's evaluation, with the
+mixed-precision deployment path that calls the Layer-1 Pallas kernels.
+
+A model is a *spec* (list of conv-stage ops + an FC head) interpreted by
+``apply``; the same spec runs in three modes:
+
+* ``mode="fp32"``   — step-1 training/eval: everything FP32; tanh inserted
+  before the FC section (paper §4) so activations land in [-1, 1]; FC
+  neurons ReLU (paper Table 1 step 1).
+* ``mode="ternary"`` — step-2 training/eval: conv stack frozen FP32; bridge
+  sign function replaces tanh; FC weights ternarized with STE; sigmoid
+  neurons with the IMAC gain policy. The final layer's pre-activation is
+  returned as logits (sigmoid is monotone, so argmax/softmax-CE both work).
+* ``mode="deploy"`` — inference exactly as the TPU-IMAC executes it: conv
+  stack FP32 (systolic array), hard sign bridge, FC via the **Pallas
+  ``imac_mvm`` kernel** with hard ternary weights.
+
+The conv stack always ends with a raw (activation-free) final conv + pool so
+the bridge sees signed OFMaps (paper §3: the PE sign bit feeds the IMAC).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .imac_spec import SPEC
+from .kernels.imac_mvm import imac_fc_stack
+from .quant import sign_ste, ternarize, ternarize_ste
+
+# ---------------------------------------------------------------------------
+# Specs
+# ---------------------------------------------------------------------------
+
+# op forms:
+#   ("conv", k, cout, stride, pad, relu?)     - standard conv (+bias)
+#   ("dwconv", k, stride, pad, relu?)         - depthwise conv (+bias)
+#   ("maxpool", k, stride) / ("avgpool", k, stride) / ("gap",)
+ModelSpec = dict[str, Any]
+
+
+def lenet_spec() -> ModelSpec:
+    """Classic LeNet-5 (paper row 1). Flatten 4*4*16 = 256; FC 120/84/10.
+    The final conv keeps ReLU off so the bridge sees signed values."""
+    return {
+        "name": "LeNet",
+        "dataset": "mnist",
+        "conv": [
+            ("conv", 5, 6, 1, 0, True),
+            ("maxpool", 2, 2),
+            ("conv", 5, 16, 1, 0, False),  # raw: feeds the bridge
+            ("maxpool", 2, 2),
+        ],
+        "fc": [120, 84, 10],
+    }
+
+
+def proxy_spec(name: str, dataset: str) -> ModelSpec:
+    """Reduced-width CIFAR proxies for the accuracy experiment (full-size
+    training is outside this CPU budget — DESIGN.md §5). Each mirrors its
+    namesake's *structural* character (VGG: plain 3x3 stacks; MobileNets:
+    depthwise-separable; ResNet: deeper plain stack standing in for the
+    residual trunk) and ends with a 256-wide bridge + 256->256->classes FC
+    head (the 1024 head scaled by 1/4)."""
+    classes = {"cifar10": 10, "cifar100": 100}[dataset]
+    if name == "vgg9":
+        conv = [
+            ("conv", 3, 16, 1, 1, True),
+            ("conv", 3, 16, 1, 1, True),
+            ("maxpool", 2, 2),
+            ("conv", 3, 32, 1, 1, True),
+            ("maxpool", 2, 2),
+            ("conv", 3, 64, 1, 1, True),
+            ("maxpool", 2, 2),
+            ("conv", 3, 64, 1, 1, False),  # 4x4x64 -> pool -> 2x2x64 = 256
+            ("maxpool", 2, 2),
+        ]
+    elif name == "mobilenetv1":
+        conv = [
+            ("conv", 3, 16, 1, 1, True),
+            ("dwconv", 3, 1, 1, True),
+            ("conv", 1, 32, 1, 0, True),
+            ("dwconv", 3, 2, 1, True),
+            ("conv", 1, 64, 1, 0, True),
+            ("dwconv", 3, 2, 1, True),
+            ("conv", 1, 64, 1, 0, True),
+            ("dwconv", 3, 2, 1, True),
+            ("conv", 1, 64, 1, 0, False),  # 4x4x64
+            ("maxpool", 2, 2),  # 2x2x64 = 256
+        ]
+    elif name == "mobilenetv2":
+        conv = [
+            ("conv", 3, 16, 1, 1, True),
+            ("conv", 1, 48, 1, 0, True),  # expand
+            ("dwconv", 3, 2, 1, True),
+            ("conv", 1, 24, 1, 0, True),  # project (relu kept: no residual)
+            ("conv", 1, 72, 1, 0, True),
+            ("dwconv", 3, 2, 1, True),
+            ("conv", 1, 40, 1, 0, True),
+            ("conv", 1, 120, 1, 0, True),
+            ("dwconv", 3, 2, 1, True),
+            ("conv", 1, 64, 1, 0, False),  # 4x4x64
+            ("maxpool", 2, 2),
+        ]
+    elif name == "resnet18":
+        conv = [
+            ("conv", 3, 16, 1, 1, True),
+            ("conv", 3, 16, 1, 1, True),
+            ("conv", 3, 32, 2, 1, True),
+            ("conv", 3, 32, 1, 1, True),
+            ("conv", 3, 64, 2, 1, True),
+            ("conv", 3, 64, 1, 1, True),
+            ("conv", 3, 64, 2, 1, False),  # 4x4x64
+            ("maxpool", 2, 2),
+        ]
+    else:
+        raise ValueError(f"unknown proxy {name}")
+    return {"name": name, "dataset": dataset, "conv": conv, "fc": [256, classes]}
+
+
+def spec_by_row(row: str) -> ModelSpec:
+    """Paper Table 2 row id -> spec. 'lenet' is full-size; others proxies."""
+    if row == "lenet":
+        return lenet_spec()
+    name, ds = row.rsplit("-", 1)
+    return proxy_spec(name, ds)
+
+
+PAPER_ROWS = [
+    "lenet",
+    "vgg9-cifar10",
+    "mobilenetv1-cifar10",
+    "mobilenetv2-cifar10",
+    "resnet18-cifar10",
+    "mobilenetv1-cifar100",
+    "mobilenetv2-cifar100",
+]
+
+# ---------------------------------------------------------------------------
+# Init / apply
+# ---------------------------------------------------------------------------
+
+
+def _conv_out(h: int, k: int, s: int, p: int) -> int:
+    return (h + 2 * p - k) // s + 1
+
+
+def init_params(spec: ModelSpec, seed: int = 0) -> dict:
+    """He-init conv weights (HWIO layout) and FC matrices (no FC biases —
+    the analog sigmoid neuron has no bias input; FP32 mode matches for
+    comparability)."""
+    rng = np.random.default_rng(seed)
+    h = w = 28 if spec["dataset"] == "mnist" else 32
+    c = 1 if spec["dataset"] == "mnist" else 3
+    params: dict[str, Any] = {"conv": [], "fc": []}
+    for op in spec["conv"]:
+        if op[0] == "conv":
+            _, k, cout, s, p, _ = op
+            fan_in = k * k * c
+            wgt = rng.normal(0, np.sqrt(2.0 / fan_in), (k, k, c, cout)).astype(np.float32)
+            params["conv"].append({"w": jnp.asarray(wgt), "b": jnp.zeros(cout, jnp.float32)})
+            h, w, c = _conv_out(h, k, s, p), _conv_out(w, k, s, p), cout
+        elif op[0] == "dwconv":
+            _, k, s, p, _ = op
+            fan_in = k * k
+            wgt = rng.normal(0, np.sqrt(2.0 / fan_in), (k, k, 1, c)).astype(np.float32)
+            params["conv"].append({"w": jnp.asarray(wgt), "b": jnp.zeros(c, jnp.float32)})
+            h, w = _conv_out(h, k, s, p), _conv_out(w, k, s, p)
+        elif op[0] in ("maxpool", "avgpool"):
+            _, k, s = op
+            h, w = (h - k) // s + 1, (w - k) // s + 1
+        elif op[0] == "gap":
+            h = w = 1
+        else:
+            raise ValueError(f"bad op {op}")
+    dim = h * w * c
+    for out in spec["fc"]:
+        scale = 1.0 / np.sqrt(dim)
+        params["fc"].append(
+            {"w": jnp.asarray(rng.normal(0, scale, (dim, out)).astype(np.float32))}
+        )
+        dim = out
+    return params
+
+
+def conv_stack(params: dict, spec: ModelSpec, x: jnp.ndarray) -> jnp.ndarray:
+    """The conv section (NHWC). Returns the raw pre-bridge feature map,
+    flattened to (B, bridge_width)."""
+    ci = 0
+    for op in spec["conv"]:
+        if op[0] == "conv":
+            _, k, cout, s, p, relu = op
+            pw = params["conv"][ci]
+            x = jax.lax.conv_general_dilated(
+                x, pw["w"], (s, s), [(p, p), (p, p)],
+                dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            ) + pw["b"]
+            if relu:
+                x = jax.nn.relu(x)
+            ci += 1
+        elif op[0] == "dwconv":
+            _, k, s, p, relu = op
+            pw = params["conv"][ci]
+            c = x.shape[-1]
+            x = jax.lax.conv_general_dilated(
+                x, pw["w"], (s, s), [(p, p), (p, p)],
+                dimension_numbers=("NHWC", "HWIO", "NHWC"),
+                feature_group_count=c,
+            ) + pw["b"]
+            if relu:
+                x = jax.nn.relu(x)
+            ci += 1
+        elif op[0] == "maxpool":
+            _, k, s = op
+            x = jax.lax.reduce_window(
+                x, -jnp.inf, jax.lax.max, (1, k, k, 1), (1, s, s, 1), "VALID"
+            )
+        elif op[0] == "avgpool":
+            _, k, s = op
+            x = jax.lax.reduce_window(
+                x, 0.0, jax.lax.add, (1, k, k, 1), (1, s, s, 1), "VALID"
+            ) / float(k * k)
+        elif op[0] == "gap":
+            x = jnp.mean(x, axis=(1, 2), keepdims=True)
+    return x.reshape(x.shape[0], -1)
+
+
+def apply(params: dict, spec: ModelSpec, x: jnp.ndarray, *, mode: str) -> jnp.ndarray:
+    """Forward pass. Returns logits (B, classes)."""
+    feats = conv_stack(params, spec, x)
+    if mode == "fp32":
+        # Step 1: tanh bounds the bridge features; FC ReLU hidden layers.
+        h = jnp.tanh(feats)
+        for i, layer in enumerate(params["fc"]):
+            h = h @ layer["w"]
+            if i + 1 < len(params["fc"]):
+                h = jax.nn.relu(h)
+        return h
+    if mode == "ternary":
+        # Step 2: sign bridge (STE), ternary FC (STE), sigmoid hiddens with
+        # the IMAC gain policy; final pre-activation as logits.
+        h = sign_ste(feats)
+        for i, layer in enumerate(params["fc"]):
+            wq = ternarize_ste(layer["w"])
+            gain = SPEC.amp_gain(wq.shape[0])
+            pre = (h @ wq) * gain * SPEC.neuron_k
+            if i + 1 < len(params["fc"]):
+                h = jax.nn.sigmoid(pre)
+            else:
+                return pre
+        raise AssertionError("fc head empty")
+    if mode == "deploy":
+        # Exactly the hardware: hard sign, hard ternary, Pallas kernel.
+        h = jnp.where(feats >= 0, 1.0, -1.0).astype(jnp.float32)
+        weights = [ternarize(layer["w"]) for layer in params["fc"]]
+        return imac_fc_stack(h, weights)
+    raise ValueError(f"unknown mode {mode}")
+
+
+def deploy_fc_weights(params: dict) -> list[np.ndarray]:
+    """Hard-ternary FC weights as int8 arrays (for the rust IMAC fabric)."""
+    return [np.asarray(ternarize(layer["w"]), dtype=np.int8) for layer in params["fc"]]

@@ -1,0 +1,36 @@
+"""Ternary quantization with straight-through-estimator gradients.
+
+The paper's step-2 training (Table 1): forward pass uses ternary weights
+W in {-1, 0, +1}; backward pass updates the underlying FP weights. We use
+the TWN threshold rule (Li & Liu 2016): delta = 0.7 * mean(|w|), w -> +1
+above +delta, -1 below -delta, 0 in between.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ternary_threshold(w: jnp.ndarray) -> jnp.ndarray:
+    """TWN per-tensor threshold."""
+    return 0.7 * jnp.mean(jnp.abs(w))
+
+
+def ternarize(w: jnp.ndarray) -> jnp.ndarray:
+    """Hard ternarization to f32 {-1, 0, +1}."""
+    delta = ternary_threshold(w)
+    return jnp.where(w > delta, 1.0, jnp.where(w < -delta, -1.0, 0.0)).astype(jnp.float32)
+
+
+def ternarize_ste(w: jnp.ndarray) -> jnp.ndarray:
+    """Forward: ternarize; backward: identity (straight-through)."""
+    return w + jax.lax.stop_gradient(ternarize(w) - w)
+
+
+def sign_ste(x: jnp.ndarray) -> jnp.ndarray:
+    """Forward: bridge sign (+1 for x >= 0 else -1); backward: hard-tanh STE
+    (gradient passes where |x| <= 1, the standard binarized-net estimator)."""
+    s = jnp.where(x >= 0, 1.0, -1.0).astype(jnp.float32)
+    ste = jnp.clip(x, -1.0, 1.0)
+    return ste + jax.lax.stop_gradient(s - ste)

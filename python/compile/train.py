@@ -1,0 +1,264 @@
+"""The paper's two-step architecture-aware training algorithm (§4).
+
+Step 1  — train the full-precision CNN: conv + FC all FP32, ReLU conv
+          neurons, tanh inserted before the FC section.
+Step 2  — freeze the conv stack; replace tanh with sign; retrain the FC
+          section with ternary weights in the forward pass (STE backward)
+          and sigmoid neurons under the IMAC gain policy.
+
+Running `python -m compile.train --row lenet` trains one Table-2 row and
+appends its FP32/ternary accuracies to `artifacts/accuracy.json`;
+`--all` sweeps every row. The LeNet row also dumps
+`artifacts/weights_lenet.json` (FP32 conv + ternary FC) for the rust
+runtime and the AOT pipeline.
+
+Optimizer: hand-rolled Adam (no optax in the offline image).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import datasets
+from .model import PAPER_ROWS, apply, deploy_fc_weights, init_params, spec_by_row
+
+# ---------------------------------------------------------------------------
+# Adam
+# ---------------------------------------------------------------------------
+
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_update(params, grads, state, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    mh = jax.tree_util.tree_map(lambda x: x / (1 - b1**t), m)
+    vh = jax.tree_util.tree_map(lambda x: x / (1 - b2**t), v)
+    new = jax.tree_util.tree_map(
+        lambda p, mh_, vh_: p - lr * mh_ / (jnp.sqrt(vh_) + eps), params, mh, vh
+    )
+    return new, {"m": m, "v": v, "t": t}
+
+
+# ---------------------------------------------------------------------------
+# Training loops
+# ---------------------------------------------------------------------------
+
+
+def cross_entropy(logits, labels):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def accuracy(logits, labels) -> float:
+    return float(jnp.mean((jnp.argmax(logits, axis=1) == labels).astype(jnp.float32)))
+
+
+def _batches(x, y, bs, steps, seed):
+    rng = np.random.default_rng(seed)
+    n = x.shape[0]
+    for _ in range(steps):
+        idx = rng.integers(0, n, bs)
+        yield jnp.asarray(x[idx]), jnp.asarray(y[idx])
+
+
+def train_row(row: str, *, steps1: int, steps2: int, n_train: int, n_test: int,
+              batch: int, seed: int = 0, log=print) -> dict:
+    spec = spec_by_row(row)
+    ds = spec["dataset"]
+    xtr, ytr = datasets.load(ds, n_train, seed=seed, split="train")
+    xte, yte = datasets.load(ds, n_test, seed=seed, split="test")
+    xte_j, yte_j = jnp.asarray(xte), jnp.asarray(yte)
+
+    params = init_params(spec, seed=seed)
+
+    # ---- Step 1: FP32 ----
+    @jax.jit
+    def loss1(p, x, y):
+        return cross_entropy(apply(p, spec, x, mode="fp32"), y)
+
+    grad1 = jax.jit(jax.value_and_grad(loss1))
+    opt = adam_init(params)
+    t0 = time.time()
+    for i, (xb, yb) in enumerate(_batches(xtr, ytr, batch, steps1, seed + 1)):
+        lv, g = grad1(params, xb, yb)
+        params, opt = adam_update(params, g, opt, lr=1e-3)
+        if i % 100 == 0:
+            log(f"[{row}] step1 {i}/{steps1} loss={float(lv):.4f}")
+
+    @jax.jit
+    def eval_fp32(p):
+        return apply(p, spec, xte_j, mode="fp32")
+
+    acc_fp32 = accuracy(eval_fp32(params), yte_j)
+    log(f"[{row}] step1 done in {time.time()-t0:.1f}s  fp32 acc={acc_fp32:.4f}")
+
+    # ---- Step 2: freeze conv, ternary FC ----
+    fc_params = {"fc": params["fc"]}
+    frozen_conv = {"conv": params["conv"]}
+
+    @jax.jit
+    def loss2(fc, x, y):
+        p = {"conv": frozen_conv["conv"], "fc": fc["fc"]}
+        return cross_entropy(apply(p, spec, x, mode="ternary"), y)
+
+    grad2 = jax.jit(jax.value_and_grad(loss2))
+    opt2 = adam_init(fc_params)
+    t0 = time.time()
+    for i, (xb, yb) in enumerate(_batches(xtr, ytr, batch, steps2, seed + 2)):
+        lv, g = grad2(fc_params, xb, yb)
+        fc_params, opt2 = adam_update(fc_params, g, opt2, lr=2e-3)
+        if i % 100 == 0:
+            log(f"[{row}] step2 {i}/{steps2} loss={float(lv):.4f}")
+
+    params2 = {"conv": frozen_conv["conv"], "fc": fc_params["fc"]}
+
+    @jax.jit
+    def eval_tern(p):
+        return apply(p, spec, xte_j, mode="ternary")
+
+    acc_tern = accuracy(eval_tern(params2), yte_j)
+    log(f"[{row}] step2 done in {time.time()-t0:.1f}s  ternary acc={acc_tern:.4f}")
+
+    return {
+        "row": row,
+        "dataset": ds,
+        "acc_fp32": acc_fp32,
+        "acc_ternary": acc_tern,
+        "proxy": row != "lenet",
+        "steps": [steps1, steps2],
+        "n_train": n_train,
+        "n_test": n_test,
+        "params": params2,
+        "spec": spec,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Artifact dumps
+# ---------------------------------------------------------------------------
+
+
+def dump_weights_json(result: dict, path: str) -> None:
+    """FP32 conv + hard-ternary FC weights for the rust engine."""
+    params, spec = result["params"], result["spec"]
+    conv_ops = [op for op in spec["conv"] if op[0] in ("conv", "dwconv")]
+    layers = []
+    ci = 0
+    for op in spec["conv"]:
+        if op[0] == "conv":
+            _, k, cout, s, p, relu = op
+            pw = params["conv"][ci]
+            layers.append({
+                "kind": "conv", "k": k, "cout": cout, "stride": s, "pad": p,
+                "relu": relu,
+                "w": np.asarray(pw["w"], dtype=np.float64).flatten().tolist(),
+                "w_shape": list(pw["w"].shape),
+                "b": np.asarray(pw["b"], dtype=np.float64).tolist(),
+            })
+            ci += 1
+        elif op[0] == "dwconv":
+            _, k, s, p, relu = op
+            pw = params["conv"][ci]
+            layers.append({
+                "kind": "dwconv", "k": k, "stride": s, "pad": p, "relu": relu,
+                "w": np.asarray(pw["w"], dtype=np.float64).flatten().tolist(),
+                "w_shape": list(pw["w"].shape),
+                "b": np.asarray(pw["b"], dtype=np.float64).tolist(),
+            })
+            ci += 1
+        elif op[0] in ("maxpool", "avgpool"):
+            layers.append({"kind": op[0], "k": op[1], "stride": op[2]})
+        elif op[0] == "gap":
+            layers.append({"kind": "gap"})
+    fc = []
+    for wq in deploy_fc_weights(params):
+        fc.append({
+            "n_in": int(wq.shape[0]), "n_out": int(wq.shape[1]),
+            "w_ternary": wq.flatten().astype(int).tolist(),
+        })
+    doc = {
+        "row": result["row"], "dataset": result["dataset"],
+        "acc_fp32": result["acc_fp32"], "acc_ternary": result["acc_ternary"],
+        "conv_layers": layers, "fc_layers": fc,
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f)
+    assert len(conv_ops) == ci
+
+
+def dump_testset_json(path: str, n: int = 400) -> None:
+    """A saved synthetic-MNIST test slice for the rust end-to-end driver
+    (examples/serve_mnist.rs) so rust measures *accuracy*, not just
+    throughput. Pixels rounded to 4 decimals to keep the file small."""
+    x, y = datasets.load("mnist", n, seed=0, split="test")
+    doc = {
+        "images": [np.round(img.flatten(), 4).tolist() for img in x],
+        "labels": y.tolist(),
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f)
+
+
+def update_accuracy_json(path: str, result: dict) -> None:
+    doc = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            doc = json.load(f)
+    doc[result["row"]] = {
+        "dataset": result["dataset"],
+        "acc_fp32": result["acc_fp32"],
+        "acc_ternary": result["acc_ternary"],
+        "proxy": result["proxy"],
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--row", choices=PAPER_ROWS, help="train one Table-2 row")
+    ap.add_argument("--all", action="store_true", help="train every row")
+    ap.add_argument("--steps1", type=int, default=500)
+    ap.add_argument("--steps2", type=int, default=400)
+    ap.add_argument("--n-train", type=int, default=4000)
+    ap.add_argument("--n-test", type=int, default=1000)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    rows = PAPER_ROWS if args.all else [args.row or "lenet"]
+    for row in rows:
+        result = train_row(
+            row, steps1=args.steps1, steps2=args.steps2,
+            n_train=args.n_train, n_test=args.n_test, batch=args.batch,
+        )
+        update_accuracy_json(os.path.join(args.out, "accuracy.json"), result)
+        if row == "lenet":
+            dump_weights_json(result, os.path.join(args.out, "weights_lenet.json"))
+            dump_testset_json(os.path.join(args.out, "testset_mnist.json"))
+        drop = result["acc_fp32"] - result["acc_ternary"]
+        print(f"== {row}: fp32={result['acc_fp32']:.4f} "
+              f"ternary={result['acc_ternary']:.4f} drop={drop:+.4f}")
+
+
+if __name__ == "__main__":
+    main()

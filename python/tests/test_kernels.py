@@ -1,0 +1,154 @@
+"""Layer-1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and input domains; assert_allclose against ref.py
+is the core correctness signal for everything the rust runtime executes.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.imac_spec import SPEC
+from compile.kernels.imac_mvm import imac_fc_stack, imac_mvm, vmem_bytes
+from compile.kernels.systolic_gemm import TILE_K, TILE_M, TILE_N, systolic_gemm
+from compile.kernels.systolic_gemm import vmem_bytes as gemm_vmem_bytes
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def rng_for(b, k, n, salt=0):
+    return np.random.default_rng(np.random.SeedSequence([b, k, n, salt]))
+
+
+# ---------------------------------------------------------------------------
+# imac_mvm
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 8),
+    k=st.integers(1, 300),
+    n=st.integers(1, 200),
+)
+def test_imac_mvm_matches_ref_sign_inputs(b, k, n):
+    r = rng_for(b, k, n)
+    x = jnp.asarray(np.where(r.standard_normal((b, k)) >= 0, 1.0, -1.0).astype(np.float32))
+    w = jnp.asarray(r.integers(-1, 2, (k, n)).astype(np.float32))
+    got = imac_mvm(x, w)
+    want = ref.imac_layer_ref(x, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 4),
+    k=st.integers(1, 128),
+    n=st.integers(1, 150),
+)
+def test_imac_mvm_matches_ref_analog_inputs(b, k, n):
+    """Deeper layers see continuous sigmoid outputs in (0,1)."""
+    r = rng_for(b, k, n, salt=1)
+    x = jnp.asarray(r.uniform(0, 1, (b, k)).astype(np.float32))
+    w = jnp.asarray(r.integers(-1, 2, (k, n)).astype(np.float32))
+    np.testing.assert_allclose(
+        np.asarray(imac_mvm(x, w)), np.asarray(ref.imac_layer_ref(x, w)), atol=1e-5
+    )
+
+
+def test_imac_mvm_outputs_in_unit_interval():
+    r = rng_for(4, 1024, 1024)
+    x = jnp.asarray(np.where(r.standard_normal((4, 1024)) >= 0, 1.0, -1.0).astype(np.float32))
+    w = jnp.asarray(r.integers(-1, 2, (1024, 1024)).astype(np.float32))
+    y = np.asarray(imac_mvm(x, w))
+    assert (y > 0).all() and (y < 1).all()
+
+
+def test_imac_stack_matches_ref_chain():
+    """The paper's CIFAR head: 1024 -> 1024 -> 10 chained in analog."""
+    r = rng_for(2, 1024, 10, salt=2)
+    x = jnp.asarray(np.where(r.standard_normal((2, 1024)) >= 0, 1.0, -1.0).astype(np.float32))
+    w1 = jnp.asarray(r.integers(-1, 2, (1024, 1024)).astype(np.float32))
+    w2 = jnp.asarray(r.integers(-1, 2, (1024, 10)).astype(np.float32))
+    got = imac_fc_stack(x, [w1, w2])
+    want = ref.imac_fc_stack_ref(x, [w1, w2])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_imac_gain_policy_default():
+    """Default gain must be the shared spec's 1/sqrt(fan_in)."""
+    r = rng_for(1, 64, 3, salt=3)
+    x = jnp.ones((1, 64), jnp.float32)
+    w = jnp.asarray(r.integers(-1, 2, (64, 3)).astype(np.float32))
+    got = imac_mvm(x, w)
+    want = ref.imac_layer_ref(x, w, gain=SPEC.amp_gain(64))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+
+
+def test_imac_vmem_budget_for_paper_head():
+    """The 1024x1024 head must fit VMEM comfortably (DESIGN.md Perf)."""
+    assert vmem_bytes(8, 1024, 1024) < 2 * 1024 * 1024  # < 2 MB per program
+
+
+# ---------------------------------------------------------------------------
+# systolic_gemm
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 100),
+    k=st.integers(1, 300),
+    n=st.integers(1, 80),
+)
+def test_systolic_gemm_matches_ref(m, k, n):
+    r = rng_for(m, k, n, salt=4)
+    a = jnp.asarray(r.standard_normal((m, k)).astype(np.float32))
+    b = jnp.asarray(r.standard_normal((k, n)).astype(np.float32))
+    got = systolic_gemm(a, b)
+    want = ref.systolic_gemm_ref(a, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_systolic_gemm_exact_tile_multiples():
+    r = rng_for(2 * TILE_M, 2 * TILE_K, 2 * TILE_N, salt=5)
+    a = jnp.asarray(r.standard_normal((2 * TILE_M, 2 * TILE_K)).astype(np.float32))
+    b = jnp.asarray(r.standard_normal((2 * TILE_K, 2 * TILE_N)).astype(np.float32))
+    np.testing.assert_allclose(
+        np.asarray(systolic_gemm(a, b)),
+        np.asarray(ref.systolic_gemm_ref(a, b)),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+def test_gemm_tiles_match_paper_array():
+    assert TILE_M == 32 and TILE_N == 32  # the 32x32 OS array
+    assert gemm_vmem_bytes() < 64 * 1024
+
+
+# ---------------------------------------------------------------------------
+# bridge + adc refs
+# ---------------------------------------------------------------------------
+
+
+def test_bridge_convention_pinned():
+    x = jnp.asarray([0.0, -0.0, 1e-30, -1e-30, 5.0, -5.0], jnp.float32)
+    out = np.asarray(ref.bridge_ref(x))
+    np.testing.assert_array_equal(out, [1.0, 1.0, 1.0, -1.0, 1.0, -1.0])
+
+
+@settings(**SETTINGS)
+@given(bits=st.integers(1, 12), v=st.floats(-0.5, 1.5))
+def test_adc_quantization_grid(bits, v):
+    q = float(ref.adc_ref(jnp.asarray([v], jnp.float32), bits=bits)[0])
+    levels = 2**bits - 1
+    assert 0.0 <= q <= 1.0
+    # q is on the grid
+    assert abs(q * levels - round(q * levels)) < 1e-3
+
+
+def test_adc_bypass():
+    x = jnp.asarray([0.123], jnp.float32)
+    assert float(ref.adc_ref(x, bits=0)[0]) == pytest.approx(0.123)

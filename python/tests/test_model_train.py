@@ -1,0 +1,133 @@
+"""Layer-2 tests: model modes, quantization, two-step training smoke, and
+dataset determinism."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import datasets
+from compile.model import (PAPER_ROWS, apply, deploy_fc_weights, init_params,
+                           lenet_spec, spec_by_row)
+from compile.quant import sign_ste, ternarize, ternarize_ste
+from compile.train import train_row
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# quant
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(4, 400), seed=st.integers(0, 10_000))
+def test_ternarize_domain(n, seed):
+    w = jnp.asarray(np.random.default_rng(seed).standard_normal(n).astype(np.float32))
+    q = np.asarray(ternarize(w))
+    assert set(np.unique(q)).issubset({-1.0, 0.0, 1.0})
+
+
+def test_ternarize_keeps_large_signs():
+    w = jnp.asarray([3.0, -3.0, 0.01, -0.01], jnp.float32)
+    q = np.asarray(ternarize(w))
+    assert q[0] == 1.0 and q[1] == -1.0 and q[2] == 0.0 and q[3] == 0.0
+
+
+def test_ste_gradients_flow():
+    w = jnp.asarray([0.5, -0.5, 2.0], jnp.float32)
+    g = jax.grad(lambda w_: jnp.sum(ternarize_ste(w_) * jnp.asarray([1.0, 2.0, 3.0])))(w)
+    np.testing.assert_allclose(np.asarray(g), [1.0, 2.0, 3.0])
+    # sign STE: gradient clipped outside [-1, 1]
+    x = jnp.asarray([0.3, -4.0], jnp.float32)
+    gx = jax.grad(lambda x_: jnp.sum(sign_ste(x_)))(x)
+    np.testing.assert_allclose(np.asarray(gx), [1.0, 0.0])
+
+
+# ---------------------------------------------------------------------------
+# model modes
+# ---------------------------------------------------------------------------
+
+
+def test_all_specs_shape_check():
+    for row in PAPER_ROWS:
+        spec = spec_by_row(row)
+        params = init_params(spec, seed=0)
+        b = 2
+        hw = 28 if spec["dataset"] == "mnist" else 32
+        c = 1 if spec["dataset"] == "mnist" else 3
+        x = jnp.zeros((b, hw, hw, c), jnp.float32)
+        classes = datasets.num_classes(spec["dataset"])
+        for mode in ("fp32", "ternary", "deploy"):
+            out = apply(params, spec, x, mode=mode)
+            assert out.shape == (b, classes), f"{row} {mode}: {out.shape}"
+
+
+def test_deploy_argmax_matches_ternary_mode():
+    """Deploy (hard ops + Pallas kernel + final sigmoid) must pick the same
+    class as the step-2 training graph (STE ops, preact logits)."""
+    spec = lenet_spec()
+    params = init_params(spec, seed=1)
+    x, _ = datasets.load("mnist", 16, seed=3, split="test")
+    xj = jnp.asarray(x)
+    t = np.argmax(np.asarray(apply(params, spec, xj, mode="ternary")), axis=1)
+    d = np.argmax(np.asarray(apply(params, spec, xj, mode="deploy")), axis=1)
+    np.testing.assert_array_equal(t, d)
+
+
+def test_deploy_outputs_are_sigmoid_range():
+    spec = lenet_spec()
+    params = init_params(spec, seed=2)
+    x = jnp.asarray(datasets.load("mnist", 4, seed=4)[0])
+    y = np.asarray(apply(params, spec, x, mode="deploy"))
+    assert (y > 0).all() and (y < 1).all()
+
+
+def test_deploy_fc_weights_are_ternary_int8():
+    params = init_params(lenet_spec(), seed=0)
+    for wq in deploy_fc_weights(params):
+        assert wq.dtype == np.int8
+        assert set(np.unique(wq)).issubset({-1, 0, 1})
+
+
+def test_lenet_bridge_width_is_256():
+    spec = lenet_spec()
+    params = init_params(spec, seed=0)
+    assert params["fc"][0]["w"].shape == (256, 120)
+
+
+# ---------------------------------------------------------------------------
+# datasets
+# ---------------------------------------------------------------------------
+
+
+def test_datasets_deterministic_and_split_disjoint():
+    a1, l1 = datasets.load("mnist", 32, seed=0, split="train")
+    a2, l2 = datasets.load("mnist", 32, seed=0, split="train")
+    b1, _ = datasets.load("mnist", 32, seed=0, split="test")
+    np.testing.assert_array_equal(a1, a2)
+    np.testing.assert_array_equal(l1, l2)
+    assert not np.array_equal(a1, b1)
+
+
+def test_cifar100_has_many_classes():
+    _, y = datasets.load("cifar100", 512, seed=0)
+    assert len(set(y.tolist())) > 60
+
+
+# ---------------------------------------------------------------------------
+# two-step training smoke
+# ---------------------------------------------------------------------------
+
+
+def test_two_step_training_learns_above_chance():
+    res = train_row(
+        "lenet", steps1=120, steps2=120, n_train=1200, n_test=300, batch=64,
+        log=lambda *_: None,
+    )
+    assert res["acc_fp32"] > 0.5, res["acc_fp32"]
+    assert res["acc_ternary"] > 0.4, res["acc_ternary"]
+    # Step 2 must not collapse. (This is a 2-minute smoke budget; the full
+    # sweep in EXPERIMENTS.md uses 500/400 steps where the gap closes to a
+    # few points, as in the paper.)
+    assert res["acc_fp32"] - res["acc_ternary"] < 0.35

@@ -1,0 +1,97 @@
+//! End-to-end serving bench: coordinator + native backend (rust conv +
+//! IMAC fabric) on LeNet-class work. Uses trained weights when present,
+//! otherwise a synthetic LeNet-shaped model, so `cargo bench` works before
+//! `make train`.
+
+use std::time::Instant;
+
+use tpu_imac::coordinator::{Coordinator, CoordinatorConfig, NativeBackend};
+use tpu_imac::imac::{AdcConfig, ImacConfig};
+use tpu_imac::nn::{DeployedModel, Tensor};
+use tpu_imac::util::json::Json;
+use tpu_imac::util::rng::Xoshiro256;
+
+/// Synthetic LeNet-shaped weights doc (random values) for benching without
+/// artifacts.
+fn synthetic_lenet_doc(rng: &mut Xoshiro256) -> Json {
+    let randf = |rng: &mut Xoshiro256, n: usize| -> String {
+        let v: Vec<String> =
+            (0..n).map(|_| format!("{:.4}", rng.uniform(-0.2, 0.2))).collect();
+        format!("[{}]", v.join(","))
+    };
+    let randt = |rng: &mut Xoshiro256, n: usize| -> String {
+        let v: Vec<String> = (0..n).map(|_| ((rng.next_below(3) as i64) - 1).to_string()).collect();
+        format!("[{}]", v.join(","))
+    };
+    let text = format!(
+        r#"{{"row":"lenet-bench","dataset":"mnist","acc_fp32":0,"acc_ternary":0,
+        "conv_layers":[
+          {{"kind":"conv","k":5,"cout":6,"stride":1,"pad":0,"relu":true,"w":{},"w_shape":[5,5,1,6],"b":{}}},
+          {{"kind":"maxpool","k":2,"stride":2}},
+          {{"kind":"conv","k":5,"cout":16,"stride":1,"pad":0,"relu":false,"w":{},"w_shape":[5,5,6,16],"b":{}}},
+          {{"kind":"maxpool","k":2,"stride":2}}
+        ],
+        "fc_layers":[
+          {{"n_in":256,"n_out":120,"w_ternary":{}}},
+          {{"n_in":120,"n_out":84,"w_ternary":{}}},
+          {{"n_in":84,"n_out":10,"w_ternary":{}}}
+        ]}}"#,
+        randf(rng, 150),
+        randf(rng, 6),
+        randf(rng, 2400),
+        randf(rng, 16),
+        randt(rng, 256 * 120),
+        randt(rng, 120 * 84),
+        randt(rng, 84 * 10),
+    );
+    Json::parse(&text).expect("synthetic doc")
+}
+
+fn load_model() -> DeployedModel {
+    let imac = ImacConfig::default();
+    let adc = AdcConfig { bits: 0, full_scale: 1.0 };
+    if let Ok(m) = DeployedModel::load("artifacts/weights_lenet.json", &imac, adc, 0) {
+        eprintln!("using trained weights");
+        return m;
+    }
+    eprintln!("no artifacts; using synthetic LeNet-shaped weights");
+    let mut rng = Xoshiro256::seed_from_u64(5);
+    DeployedModel::from_json(&synthetic_lenet_doc(&mut rng), &imac, adc, 0).expect("synthetic")
+}
+
+fn main() {
+    let n_requests: usize = std::env::var("TPU_IMAC_BENCH_FAST")
+        .ok()
+        .map(|_| 64)
+        .unwrap_or(512);
+
+    for max_batch in [1usize, 8, 32] {
+        let coord = Coordinator::start(
+            CoordinatorConfig { max_batch, ..Default::default() },
+            || Box::new(NativeBackend::new(load_model())),
+        );
+        let client = coord.client();
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        let t0 = Instant::now();
+        let mut rxs = Vec::with_capacity(n_requests);
+        for _ in 0..n_requests {
+            let img = Tensor::from_vec(28, 28, 1, (0..784).map(|_| rng.next_f32()).collect());
+            rxs.push(client.submit(img).unwrap().1);
+        }
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        let wall = t0.elapsed();
+        let snap = coord.metrics.snapshot();
+        println!(
+            "max_batch={max_batch:>2}: {:.1} req/s | p50 {:.2} ms p95 {:.2} ms | {} batches | conv {:.0} ms imac {:.0} ms",
+            n_requests as f64 / wall.as_secs_f64(),
+            snap.p50_latency_us / 1e3,
+            snap.p95_latency_us / 1e3,
+            snap.batches,
+            snap.conv_us_total as f64 / 1e3,
+            snap.imac_us_total as f64 / 1e3,
+        );
+        coord.shutdown();
+    }
+}

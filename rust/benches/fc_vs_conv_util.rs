@@ -1,0 +1,66 @@
+//! The paper's §1 motivating claim: "poor performance and inefficient
+//! hardware utilization of TPUs when executing FC layers compared to
+//! convolutional layers" (their in-house Scale-Sim experiment). This bench
+//! regenerates that comparison on our simulator: per-layer-class
+//! utilization of the 32x32 OS array across the paper suite.
+
+use tpu_imac::systolic::{simulate_network, ArrayConfig, Schedule, SramConfig};
+use tpu_imac::util::bench::{black_box, BenchSuite};
+use tpu_imac::util::table::{Align, Table};
+use tpu_imac::workload::zoo;
+
+fn main() {
+    let cfg = ArrayConfig::default();
+    let sram = SramConfig::default();
+    let mut t = Table::new(&[
+        "model", "conv util%", "dw util%", "fc util%", "fc/conv cycle share",
+    ])
+    .with_title("§1 claim — OS-array utilization by layer class")
+    .with_aligns(&[Align::Left, Align::Right, Align::Right, Align::Right, Align::Right]);
+    for model in zoo::paper_suite() {
+        let (recs, _) = simulate_network(&cfg, &sram, &model, Schedule::TpuOnly);
+        let (mut cs, mut cc) = (0.0f64, 0u64); // conv util-weighted sum / cycles
+        let (mut ds, mut dc) = (0.0f64, 0u64);
+        let (mut fs, mut fc) = (0.0f64, 0u64);
+        let mut conv_cycles = 0u64;
+        for (r, l) in recs.iter().zip(&model.layers) {
+            use tpu_imac::workload::LayerKind::*;
+            match l.kind {
+                Conv2d { .. } => {
+                    cs += r.utilization * r.cycles as f64;
+                    cc += r.cycles;
+                    conv_cycles += r.cycles;
+                }
+                DepthwiseConv2d { .. } => {
+                    ds += r.utilization * r.cycles as f64;
+                    dc += r.cycles;
+                    conv_cycles += r.cycles;
+                }
+                Dense { .. } => {
+                    fs += r.utilization * r.cycles as f64;
+                    fc += r.cycles;
+                }
+                _ => {}
+            }
+        }
+        let pct = |s: f64, c: u64| if c == 0 { "-".into() } else { format!("{:.1}", 100.0 * s / c as f64) };
+        t.row(vec![
+            format!("{}/{}", model.name, model.dataset.label()),
+            pct(cs, cc),
+            pct(ds, dc),
+            pct(fs, fc),
+            format!("{:.2}", fc as f64 / conv_cycles.max(1) as f64),
+        ]);
+    }
+    println!("{}", t.to_ascii());
+    println!("(FC utilization ~1/32 of conv on the OS array: one output row per batch-1 GEMM.)");
+
+    let mut suite = BenchSuite::new("per-layer simulation cost");
+    let cfg2 = cfg;
+    suite.bench("simulate lenet (TpuOnly)", move || {
+        let m = zoo::lenet();
+        let (_, s) = simulate_network(&cfg2, &SramConfig::default(), &m, Schedule::TpuOnly);
+        black_box(s.total_cycles)
+    });
+    suite.run();
+}

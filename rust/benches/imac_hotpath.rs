@@ -1,0 +1,96 @@
+//! Hot-path bench: the IMAC analog fabric forward pass — the request-path
+//! work the coordinator does per inference after the conv features arrive.
+//! Reports MAC throughput for the paper's CIFAR head (1024->1024->10) and
+//! the LeNet head, ideal and noisy.
+
+use tpu_imac::imac::{AdcConfig, CrossbarConfig, DeviceConfig, ImacConfig, ImacFabric};
+use tpu_imac::util::bench::{black_box, BenchSuite};
+use tpu_imac::util::rng::Xoshiro256;
+
+fn rand_tern(rng: &mut Xoshiro256, n: usize) -> Vec<i8> {
+    (0..n).map(|_| (rng.next_below(3) as i8) - 1).collect()
+}
+
+fn rand_sign(rng: &mut Xoshiro256, n: usize) -> Vec<f32> {
+    (0..n).map(|_| if rng.next_u64() & 1 == 1 { 1.0 } else { -1.0 }).collect()
+}
+
+fn main() {
+    let mut rng = Xoshiro256::seed_from_u64(9);
+    let adc = AdcConfig { bits: 0, full_scale: 1.0 };
+
+    // Paper CIFAR head.
+    let cifar = ImacFabric::build(
+        &[
+            (rand_tern(&mut rng, 1024 * 1024), 1024, 1024),
+            (rand_tern(&mut rng, 1024 * 10), 1024, 10),
+        ],
+        &ImacConfig::default(),
+        adc,
+        1,
+    );
+    let macs_cifar = (1024 * 1024 + 1024 * 10) as f64;
+    let x_cifar = rand_sign(&mut rng, 1024);
+
+    // LeNet head.
+    let lenet = ImacFabric::build(
+        &[
+            (rand_tern(&mut rng, 256 * 120), 256, 120),
+            (rand_tern(&mut rng, 120 * 84), 120, 84),
+            (rand_tern(&mut rng, 84 * 10), 84, 10),
+        ],
+        &ImacConfig::default(),
+        adc,
+        2,
+    );
+    let macs_lenet = (256 * 120 + 120 * 84 + 84 * 10) as f64;
+    let x_lenet = rand_sign(&mut rng, 256);
+
+    // Noisy CIFAR head (non-ideal path).
+    let noisy_cfg = ImacConfig {
+        crossbar: CrossbarConfig {
+            device: DeviceConfig { sigma: 0.1, ..Default::default() },
+            wire_alpha: 0.05,
+            amp_offset_sigma: 0.01,
+        },
+        ..ImacConfig::default()
+    };
+    let cifar_noisy = ImacFabric::build(
+        &[
+            (rand_tern(&mut rng, 1024 * 1024), 1024, 1024),
+            (rand_tern(&mut rng, 1024 * 10), 1024, 10),
+        ],
+        &noisy_cfg,
+        adc,
+        3,
+    );
+
+    let mut suite = BenchSuite::new("IMAC fabric forward (request hot path)");
+    {
+        let f = cifar;
+        let x = x_cifar.clone();
+        suite.bench_throughput("cifar_head 1024-1024-10 (ideal)", macs_cifar, move || {
+            black_box(f.forward(&x)[0].to_bits() as u64)
+        });
+    }
+    {
+        let f = lenet;
+        let x = x_lenet;
+        suite.bench_throughput("lenet_head 256-120-84-10 (ideal)", macs_lenet, move || {
+            black_box(f.forward(&x)[0].to_bits() as u64)
+        });
+    }
+    {
+        let f = cifar_noisy;
+        let x = x_cifar;
+        suite.bench_throughput("cifar_head (sigma=0.1, ir=0.05)", macs_cifar, move || {
+            black_box(f.forward(&x)[0].to_bits() as u64)
+        });
+    }
+    let results = suite.run();
+    for r in &results {
+        if let Some(tput) = r.throughput_per_sec() {
+            println!("{}: {:.2} GMAC/s", r.name, tput / 1e9);
+        }
+    }
+}

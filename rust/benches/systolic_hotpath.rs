@@ -1,0 +1,50 @@
+//! Hot-path bench: the systolic simulators. The analytic model must stay
+//! cheap enough to sweep (tables regenerate in <1 s); the register-level
+//! stepper is the validation path (PE-slot updates/s).
+
+use tpu_imac::systolic::{analytic, array, ArrayConfig};
+use tpu_imac::util::bench::{black_box, BenchSuite};
+use tpu_imac::workload::{zoo, GemmShape};
+
+fn main() {
+    let mut suite = BenchSuite::new("systolic simulators");
+
+    // Analytic model over the whole MobileNetV1 (30 GEMM layers incl. all
+    // depthwise groups).
+    suite.bench("analytic mobilenetv1 (all layers)", || {
+        let m = zoo::mobilenet_v1(tpu_imac::workload::Dataset::Cifar10);
+        let cfg = ArrayConfig::default();
+        let mut acc = 0u64;
+        for l in &m.layers {
+            if let Some(g) = l.gemm() {
+                acc = acc.wrapping_add(analytic::simulate_gemm(&cfg, &g).cycles);
+            }
+        }
+        black_box(acc)
+    });
+
+    // Single analytic GEMM (the inner primitive).
+    suite.bench_throughput("analytic single GEMM", 1.0, || {
+        let g = GemmShape::new(1024, 576, 128);
+        black_box(analytic::simulate_gemm(&ArrayConfig::default(), &g).cycles)
+    });
+
+    // Register-level stepper: 32x32 fold with K=64 = 65,536 MACs and
+    // ~32*32*(32+32+64) PE-slot updates.
+    let a: Vec<Vec<f32>> = (0..32).map(|i| (0..64).map(|k| ((i * k) % 7) as f32).collect()).collect();
+    let b: Vec<Vec<f32>> = (0..64).map(|k| (0..32).map(|j| ((k + j) % 5) as f32).collect()).collect();
+    let pe_slots = (32 * 32 * (32 + 32 + 64)) as f64;
+    suite.bench_throughput("stepper 32x32 fold K=64 (PE-slots)", pe_slots, move || {
+        let run = array::run_os_fold(&a, &b);
+        black_box(run.total_macs)
+    });
+
+    let results = suite.run();
+    for r in &results {
+        if r.name.contains("stepper") {
+            if let Some(tput) = r.throughput_per_sec() {
+                println!("stepper: {:.1} M PE-slot updates/s", tput / 1e6);
+            }
+        }
+    }
+}

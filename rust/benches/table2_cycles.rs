@@ -1,0 +1,41 @@
+//! Bench + regeneration of Table 2's cycle columns: per-model TPU vs
+//! TPU-IMAC cycles, printed in paper row order with the published values,
+//! plus the wall-time cost of the cycle simulation itself.
+
+use tpu_imac::arch;
+use tpu_imac::report::paper_rows;
+use tpu_imac::systolic::{ArrayConfig, SramConfig};
+use tpu_imac::util::bench::{black_box, BenchSuite};
+use tpu_imac::util::table::{Align, Table};
+use tpu_imac::workload::zoo;
+
+fn main() {
+    // --- Regenerate the table rows ---
+    let cfg = ArrayConfig::default();
+    let sram = SramConfig::default();
+    let evals = arch::evaluate_suite(&cfg, &sram).expect("suite");
+    let paper: Vec<_> = paper_rows();
+    let mut t = Table::new(&["model", "TPU kcyc", "(paper)", "TPU-IMAC kcyc", "(paper)"])
+        .with_title("Table 2 — cycles (regenerated)")
+        .with_aligns(&[Align::Left, Align::Right, Align::Right, Align::Right, Align::Right]);
+    for (e, (key, p)) in evals.iter().zip(&paper) {
+        t.row(vec![
+            key.to_string(),
+            format!("{:.3}", e.cycles_tpu as f64 / 1e3),
+            format!("{:.3}", p.kcycles_tpu),
+            format!("{:.3}", e.cycles_hybrid as f64 / 1e3),
+            format!("{:.3}", p.kcycles_hybrid),
+        ]);
+    }
+    println!("{}", t.to_ascii());
+
+    // --- Bench the simulator itself ---
+    let mut suite = BenchSuite::new("table2_cycles simulation cost");
+    let models = zoo::paper_suite();
+    let total_layers: usize = models.iter().map(|m| m.layers.len()).sum();
+    suite.bench_throughput("evaluate_suite(7 CNNs)", total_layers as f64, move || {
+        let evals = arch::evaluate_suite(&cfg, &sram).unwrap();
+        black_box(evals.iter().map(|e| e.cycles_tpu).sum::<u64>())
+    });
+    suite.run();
+}

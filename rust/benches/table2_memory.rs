@@ -1,0 +1,41 @@
+//! Bench + regeneration of Table 2's memory columns (exact reproduction:
+//! decimal MB, conv FP32 SRAM + ternary 2-bit RRAM).
+
+use tpu_imac::arch::MemoryFootprint;
+use tpu_imac::report::paper_rows;
+use tpu_imac::util::bench::{black_box, BenchSuite};
+use tpu_imac::util::table::{Align, Table};
+use tpu_imac::workload::zoo;
+
+fn main() {
+    let models = zoo::paper_suite();
+    let paper = paper_rows();
+    let mut t = Table::new(&[
+        "model", "TPU MB", "(paper)", "SRAM MB", "(paper)", "RRAM MB", "(paper)",
+    ])
+    .with_title("Table 2 — memory (regenerated)")
+    .with_aligns(&[
+        Align::Left, Align::Right, Align::Right, Align::Right, Align::Right, Align::Right,
+        Align::Right,
+    ]);
+    for (m, (key, p)) in models.iter().zip(&paper) {
+        let f = MemoryFootprint::of(m);
+        t.row(vec![
+            key.to_string(),
+            format!("{:.3}", f.tpu_mb()),
+            format!("{:.3}", p.mem_tpu_mb),
+            format!("{:.3}", f.sram_mb()),
+            format!("{:.3}", p.mem_sram_mb),
+            format!("{:.3}", f.rram_mb()),
+            format!("{:.3}", p.mem_rram_mb),
+        ]);
+    }
+    println!("{}", t.to_ascii());
+
+    let mut suite = BenchSuite::new("table2_memory model cost");
+    suite.bench("footprint(7 CNNs)", move || {
+        let s: u64 = zoo::paper_suite().iter().map(|m| MemoryFootprint::of(m).tpu_bytes).sum();
+        black_box(s)
+    });
+    suite.run();
+}

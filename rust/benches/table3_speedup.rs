@@ -1,0 +1,39 @@
+//! Bench + regeneration of Table 3: speedup and memory reduction per model,
+//! against the paper's published factors.
+
+use tpu_imac::arch;
+use tpu_imac::report::paper_rows;
+use tpu_imac::systolic::{ArrayConfig, SramConfig};
+use tpu_imac::util::bench::{black_box, BenchSuite};
+use tpu_imac::util::table::{Align, Table};
+
+fn main() {
+    let cfg = ArrayConfig::default();
+    let sram = SramConfig::default();
+    let evals = arch::evaluate_suite(&cfg, &sram).expect("suite");
+    let paper = paper_rows();
+    let mut t = Table::new(&["model", "speedup", "(paper)", "mem reduction", "(paper)"])
+        .with_title("Table 3 — speedup & memory reduction (regenerated)")
+        .with_aligns(&[Align::Left, Align::Right, Align::Right, Align::Right, Align::Right]);
+    let mut max_rel_err: f64 = 0.0;
+    for (e, (key, p)) in evals.iter().zip(&paper) {
+        let rel = (e.speedup() - p.speedup).abs() / p.speedup;
+        max_rel_err = max_rel_err.max(rel);
+        t.row(vec![
+            key.to_string(),
+            format!("{:.2}x", e.speedup()),
+            format!("{:.2}x", p.speedup),
+            format!("{:.2}%", e.memory_reduction() * 100.0),
+            format!("{:.2}%", p.mem_reduction_pct),
+        ]);
+    }
+    println!("{}", t.to_ascii());
+    println!("max speedup relative error vs paper: {:.1}%", max_rel_err * 100.0);
+
+    let mut suite = BenchSuite::new("table3 evaluation cost");
+    suite.bench("evaluate_suite+derive", move || {
+        let evals = arch::evaluate_suite(&cfg, &sram).unwrap();
+        black_box(evals.iter().map(|e| (e.speedup() * 1000.0) as u64).sum::<u64>())
+    });
+    suite.run();
+}

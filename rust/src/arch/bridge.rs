@@ -1,0 +1,137 @@
+//! The PE→IMAC sign-bit bridge.
+//!
+//! Paper §3: each OS-stationary PE holds one OFMap value; its **sign bit**
+//! runs through an inverter (so non-negative values become logic '1') and a
+//! tri-state buffer (enabled by the *Main Controller* during FC execution)
+//! straight onto the IMAC word lines. Quantization to binary happens "for
+//! free" — no DAC, no extra cycles, no main-memory round trip.
+//!
+//! Logical convention used everywhere in this repo (rust, JAX, Pallas):
+//!
+//! `bridge(x) = +1 if x ≥ 0 else −1`
+//!
+//! (IEEE −0.0 carries a set sign bit, so hardware maps −0.0 → −1; we pin
+//! the *logical* convention x ≥ 0 → +1 instead and canonicalize −0.0 to
+//! +0.0 at the PE drain, which the tests document explicitly.)
+
+/// Tri-state buffer control from the Main Controller.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BridgeState {
+    /// High-impedance: systolic array busy with conv layers.
+    Disconnected,
+    /// Driving: FC execution on the IMAC.
+    Driving,
+}
+
+/// The bridge between an `R×C` systolic array and an IMAC fabric input.
+#[derive(Clone, Debug)]
+pub struct SignBridge {
+    pub width: usize,
+    pub state: BridgeState,
+}
+
+impl SignBridge {
+    /// `width` must not exceed the PE count: one sign line per PE.
+    pub fn new(width: usize, array_pes: usize) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            width <= array_pes,
+            "bridge width {width} exceeds PE count {array_pes}"
+        );
+        Ok(Self { width, state: BridgeState::Disconnected })
+    }
+
+    pub fn enable(&mut self) {
+        self.state = BridgeState::Driving;
+    }
+
+    pub fn disable(&mut self) {
+        self.state = BridgeState::Disconnected;
+    }
+
+    /// Quantize OFMap registers to bridge levels. Panics if not driving —
+    /// the controller must enable the tri-state buffers first (this models
+    /// the bus-contention hazard a real controller must avoid).
+    pub fn drive(&self, ofmap: &[f32], out: &mut [f32]) {
+        assert_eq!(self.state, BridgeState::Driving, "tri-state buffers are Hi-Z");
+        assert_eq!(ofmap.len(), self.width, "OFMap width mismatch");
+        assert!(out.len() >= self.width);
+        for (o, &v) in out.iter_mut().zip(ofmap) {
+            *o = sign_level(v);
+        }
+    }
+
+    /// Transfer cost in cycles: zero — the defining property (paper §5.3:
+    /// "no cycles are wasted transferring data between the systolic array
+    /// and the IMAC").
+    pub const fn transfer_cycles(&self) -> u64 {
+        0
+    }
+}
+
+/// The logical sign-bit quantizer: x ≥ 0 → +1, x < 0 → −1 (−0.0
+/// canonicalized to +1).
+#[inline]
+pub fn sign_level(x: f32) -> f32 {
+    if x >= 0.0 {
+        1.0
+    } else {
+        -1.0
+    }
+}
+
+/// Vector helper used by tests and the NN engine.
+pub fn sign_levels(xs: &[f32]) -> Vec<f32> {
+    xs.iter().map(|&x| sign_level(x)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn convention_pinned() {
+        assert_eq!(sign_level(0.0), 1.0);
+        assert_eq!(sign_level(-0.0), 1.0); // canonicalized
+        assert_eq!(sign_level(1e-30), 1.0);
+        assert_eq!(sign_level(-1e-30), -1.0);
+        assert_eq!(sign_level(f32::INFINITY), 1.0);
+        assert_eq!(sign_level(f32::NEG_INFINITY), -1.0);
+    }
+
+    #[test]
+    fn drive_quantizes_everything_to_pm1() {
+        forall(50, |g| {
+            let n = g.usize_in(1, 1024);
+            let ofmap = g.vec_f32(n, -10.0, 10.0);
+            let mut bridge = SignBridge::new(n, 1024).unwrap();
+            bridge.enable();
+            let mut out = vec![0.0f32; n];
+            bridge.drive(&ofmap, &mut out);
+            for (&o, &x) in out.iter().zip(&ofmap) {
+                assert!(o == 1.0 || o == -1.0);
+                assert_eq!(o, sign_level(x));
+            }
+        });
+    }
+
+    #[test]
+    fn width_bounded_by_pe_count() {
+        assert!(SignBridge::new(1024, 1024).is_ok());
+        assert!(SignBridge::new(1025, 1024).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "Hi-Z")]
+    fn driving_while_disconnected_is_a_bug() {
+        let bridge = SignBridge::new(4, 1024).unwrap();
+        let mut out = vec![0.0f32; 4];
+        bridge.drive(&[1.0, -1.0, 0.5, -0.5], &mut out);
+    }
+
+    #[test]
+    fn zero_transfer_cycles() {
+        let b = SignBridge::new(256, 1024).unwrap();
+        assert_eq!(b.transfer_cycles(), 0);
+    }
+}

@@ -1,0 +1,130 @@
+//! Memory-footprint model (paper Table 2 "Memory" columns).
+//!
+//! Accounting rules recovered from the paper's numbers (they reproduce all
+//! seven rows to the printed precision; see the tests):
+//!
+//! * **TPU deployment** — everything FP32 (4 bytes): conv weights + conv
+//!   biases + FC weights + FC biases.
+//! * **TPU-IMAC deployment** —
+//!   * SRAM: conv weights + conv biases, FP32;
+//!   * RRAM: FC weights only, ternary = 2 bits each (no FC biases — the
+//!     analog sigmoid neuron has no bias input);
+//!   * total = SRAM + RRAM.
+//! * Megabytes are **decimal** (1 MB = 10⁶ B), matching the paper's
+//!   arithmetic (e.g. LeNet: 44,426 params × 4 B = 0.177 MB).
+
+use crate::workload::Model;
+
+/// Bytes per FP32 word.
+const FP32: u64 = 4;
+
+/// Memory footprint of one model under both deployments.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct MemoryFootprint {
+    /// TPU-only: all-FP32 model bytes (lives in SRAM/LPDDR).
+    pub tpu_bytes: u64,
+    /// TPU-IMAC SRAM share (conv FP32).
+    pub hybrid_sram_bytes: u64,
+    /// TPU-IMAC RRAM share (FC ternary, 2b packed).
+    pub hybrid_rram_bytes: u64,
+}
+
+impl MemoryFootprint {
+    pub fn of(model: &Model) -> Self {
+        let conv = model.conv_params();
+        let fc_w = model.fc_weight_params();
+        let fc_b = model.fc_bias_params();
+        Self {
+            tpu_bytes: (conv + fc_w + fc_b) * FP32,
+            hybrid_sram_bytes: conv * FP32,
+            hybrid_rram_bytes: (2 * fc_w + 7) / 8,
+        }
+    }
+
+    pub fn hybrid_total_bytes(&self) -> u64 {
+        self.hybrid_sram_bytes + self.hybrid_rram_bytes
+    }
+
+    /// Fractional reduction vs the TPU deployment (Table 3 column).
+    pub fn reduction(&self) -> f64 {
+        1.0 - self.hybrid_total_bytes() as f64 / self.tpu_bytes as f64
+    }
+
+    /// Decimal megabytes, the paper's unit.
+    pub fn tpu_mb(&self) -> f64 {
+        self.tpu_bytes as f64 / 1e6
+    }
+    pub fn sram_mb(&self) -> f64 {
+        self.hybrid_sram_bytes as f64 / 1e6
+    }
+    pub fn rram_mb(&self) -> f64 {
+        self.hybrid_rram_bytes as f64 / 1e6
+    }
+    pub fn hybrid_mb(&self) -> f64 {
+        self.hybrid_total_bytes() as f64 / 1e6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{zoo, Dataset};
+
+    fn close(a: f64, b: f64, tol: f64) -> bool {
+        (a - b).abs() <= tol
+    }
+
+    #[test]
+    fn lenet_matches_paper_row() {
+        // Paper: TPU 0.177 | SRAM 0.01 | RRAM 0.01 | total 0.02
+        let f = MemoryFootprint::of(&zoo::lenet());
+        assert!(close(f.tpu_mb(), 0.177, 0.001), "{}", f.tpu_mb());
+        assert!(close(f.sram_mb(), 0.010, 0.0005), "{}", f.sram_mb());
+        assert!(close(f.rram_mb(), 0.010, 0.0005), "{}", f.rram_mb());
+        assert!(close(f.hybrid_mb(), 0.020, 0.001));
+        // Table 3: 88.34% reduction.
+        assert!(close(f.reduction(), 0.8834, 0.005), "{}", f.reduction());
+    }
+
+    #[test]
+    fn cifar10_rram_is_0265() {
+        for m in [
+            zoo::vgg9(Dataset::Cifar10),
+            zoo::mobilenet_v1(Dataset::Cifar10),
+            zoo::mobilenet_v2(Dataset::Cifar10),
+            zoo::resnet18(Dataset::Cifar10),
+        ] {
+            let f = MemoryFootprint::of(&m);
+            assert!(close(f.rram_mb(), 0.265, 0.001), "{}: {}", m.name, f.rram_mb());
+        }
+    }
+
+    #[test]
+    fn cifar100_rram_is_0288() {
+        for m in [zoo::mobilenet_v1(Dataset::Cifar100), zoo::mobilenet_v2(Dataset::Cifar100)] {
+            let f = MemoryFootprint::of(&m);
+            assert!(close(f.rram_mb(), 0.288, 0.001), "{}: {}", m.name, f.rram_mb());
+        }
+    }
+
+    #[test]
+    fn tpu_total_is_sram_plus_fc_fp32() {
+        // TPU total = conv FP32 + FC(weights+biases) FP32, e.g. MobileNetV2
+        // CIFAR-10: paper 12.904 = 8.668 + 4.236.
+        let m = zoo::mobilenet_v2(Dataset::Cifar10);
+        let f = MemoryFootprint::of(&m);
+        let fc_fp32 = (m.fc_weight_params() + m.fc_bias_params()) as f64 * 4.0 / 1e6;
+        assert!(close(f.tpu_mb(), f.sram_mb() + fc_fp32, 1e-9));
+        assert!(close(fc_fp32, 4.236, 0.005), "{fc_fp32}");
+    }
+
+    #[test]
+    fn reductions_monotone_in_fc_share() {
+        // Bigger FC share => bigger reduction. LeNet (mostly FC) >> ResNet
+        // (mostly conv).
+        let lenet = MemoryFootprint::of(&zoo::lenet());
+        let resnet = MemoryFootprint::of(&zoo::resnet18(Dataset::Cifar10));
+        assert!(lenet.reduction() > 0.8);
+        assert!(resnet.reduction() < 0.15);
+    }
+}

@@ -1,0 +1,240 @@
+//! Heterogeneous layer scheduler + Main Controller FSM.
+//!
+//! Paper §3: the *scheduler* walks the CNN topology layer by layer, the
+//! *dataflow generator* emits LPDDR address traces for the layer the array
+//! is executing, and the *Main Controller* sequences component enables —
+//! including the tri-state buffers of the PE→IMAC bridge when the FC
+//! section begins. This module produces the full execution **timeline** of
+//! one inference: an ordered list of [`Phase`]s with engine assignment and
+//! cycle extents, plus the controller [`Event`] log.
+
+use anyhow::Result;
+
+use crate::systolic::{self, ArrayConfig, Schedule, SramConfig};
+use crate::workload::{Engine, Model};
+
+use super::bridge::SignBridge;
+
+/// Execution mode being scheduled.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    TpuOnly,
+    TpuImac,
+}
+
+/// One scheduled phase of the inference.
+#[derive(Clone, Debug)]
+pub struct Phase {
+    pub layer: String,
+    pub engine: Engine,
+    pub start_cycle: u64,
+    pub cycles: u64,
+}
+
+/// Main-controller events, in issue order.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Event {
+    /// Dataflow generator starts emitting read traces for a layer.
+    GenTraces { layer: String },
+    /// Systolic array streams a layer.
+    SystolicCompute { layer: String, cycles: u64 },
+    /// OFMap written back to LPDDR via OFMap SRAM.
+    WriteBack { layer: String },
+    /// Vector unit op (pool/activation/add) — off the array's critical path.
+    VectorOp { layer: String },
+    /// Tri-state buffers enabled: sign bits drive the IMAC inputs.
+    BridgeEnable,
+    /// IMAC evaluates one FC layer (one cycle).
+    ImacEval { layer: String },
+    /// ADC converts final outputs; results written to LPDDR.
+    AdcWriteBack,
+    BridgeDisable,
+}
+
+/// A complete inference schedule.
+#[derive(Clone, Debug)]
+pub struct InferenceSchedule {
+    pub mode: Mode,
+    pub phases: Vec<Phase>,
+    pub events: Vec<Event>,
+    pub total_cycles: u64,
+    /// Cycles spent on the systolic array / on the IMAC.
+    pub systolic_cycles: u64,
+    pub imac_cycles: u64,
+}
+
+/// Build the schedule for one model under a mode.
+///
+/// Cycle accounting (paper §5.3): TPU-only = Σ systolic cycles of every
+/// GEMM layer (conv *and* FC). TPU-IMAC = Σ systolic cycles of conv layers
+/// + **1 cycle per FC layer** on the IMAC, with **0 transfer cycles**
+/// (sign-bit bridge). Vector-unit layers overlap the array pipeline and
+/// contribute no cycles in either mode (both modes treat them identically,
+/// so comparisons are unaffected).
+pub fn schedule(
+    model: &Model,
+    cfg: &ArrayConfig,
+    sram: &SramConfig,
+    mode: Mode,
+) -> Result<InferenceSchedule> {
+    model.validate(cfg.pes())?;
+    let sched = match mode {
+        Mode::TpuOnly => Schedule::TpuOnly,
+        Mode::TpuImac => Schedule::Hybrid,
+    };
+    let (records, _) = systolic::simulate_network(cfg, sram, model, sched);
+
+    let mut phases = Vec::new();
+    let mut events = Vec::new();
+    let mut cycle: u64 = 0;
+    let mut systolic_cycles: u64 = 0;
+    let mut imac_cycles: u64 = 0;
+    let mut bridge_enabled = false;
+
+    // Validate the bridge against the PE count up front (hybrid only).
+    if mode == Mode::TpuImac {
+        if let Some(w) = model.bridge_width() {
+            let _ = SignBridge::new(w, cfg.pes())?;
+        }
+    }
+
+    for (layer, rec) in model.layers.iter().zip(&records) {
+        match rec.engine {
+            Engine::Systolic => {
+                events.push(Event::GenTraces { layer: layer.name.clone() });
+                events.push(Event::SystolicCompute {
+                    layer: layer.name.clone(),
+                    cycles: rec.cycles,
+                });
+                events.push(Event::WriteBack { layer: layer.name.clone() });
+                phases.push(Phase {
+                    layer: layer.name.clone(),
+                    engine: Engine::Systolic,
+                    start_cycle: cycle,
+                    cycles: rec.cycles,
+                });
+                cycle += rec.cycles;
+                systolic_cycles += rec.cycles;
+            }
+            Engine::Imac => {
+                if !bridge_enabled {
+                    events.push(Event::BridgeEnable);
+                    bridge_enabled = true;
+                }
+                events.push(Event::ImacEval { layer: layer.name.clone() });
+                phases.push(Phase {
+                    layer: layer.name.clone(),
+                    engine: Engine::Imac,
+                    start_cycle: cycle,
+                    cycles: 1, // the paper's single-cycle FC evaluation
+                });
+                cycle += 1;
+                imac_cycles += 1;
+            }
+            Engine::Vector => {
+                if layer.gemm().is_none() {
+                    events.push(Event::VectorOp { layer: layer.name.clone() });
+                }
+                // Dense-on-TPU under TpuOnly never lands here (simulate_
+                // network assigns it Engine::Systolic); true vector ops are
+                // overlapped: zero cycles.
+            }
+        }
+    }
+    if bridge_enabled {
+        events.push(Event::AdcWriteBack);
+        events.push(Event::BridgeDisable);
+    }
+
+    Ok(InferenceSchedule {
+        mode,
+        phases,
+        events,
+        total_cycles: cycle,
+        systolic_cycles,
+        imac_cycles,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::zoo;
+
+    fn cfgs() -> (ArrayConfig, SramConfig) {
+        (ArrayConfig::default(), SramConfig::default())
+    }
+
+    #[test]
+    fn hybrid_fc_is_one_cycle_each() {
+        let (cfg, sram) = cfgs();
+        let m = zoo::lenet();
+        let s = schedule(&m, &cfg, &sram, Mode::TpuImac).unwrap();
+        assert_eq!(s.imac_cycles, 3); // three FC layers
+        let imac_phases: Vec<_> =
+            s.phases.iter().filter(|p| p.engine == Engine::Imac).collect();
+        assert_eq!(imac_phases.len(), 3);
+        assert!(imac_phases.iter().all(|p| p.cycles == 1));
+    }
+
+    #[test]
+    fn bridge_events_wrap_the_fc_section() {
+        let (cfg, sram) = cfgs();
+        let m = zoo::lenet();
+        let s = schedule(&m, &cfg, &sram, Mode::TpuImac).unwrap();
+        let idx_enable = s.events.iter().position(|e| *e == Event::BridgeEnable).unwrap();
+        let idx_adc = s.events.iter().position(|e| *e == Event::AdcWriteBack).unwrap();
+        let evals: Vec<usize> = s
+            .events
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| matches!(e, Event::ImacEval { .. }))
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(evals.len(), 3);
+        assert!(evals.iter().all(|&i| i > idx_enable && i < idx_adc));
+        // No systolic compute after the bridge is enabled.
+        assert!(s.events[idx_enable..]
+            .iter()
+            .all(|e| !matches!(e, Event::SystolicCompute { .. })));
+    }
+
+    #[test]
+    fn tpu_only_has_no_imac_events() {
+        let (cfg, sram) = cfgs();
+        let m = zoo::lenet();
+        let s = schedule(&m, &cfg, &sram, Mode::TpuOnly).unwrap();
+        assert_eq!(s.imac_cycles, 0);
+        assert!(s.events.iter().all(|e| !matches!(
+            e,
+            Event::BridgeEnable | Event::ImacEval { .. } | Event::AdcWriteBack
+        )));
+    }
+
+    #[test]
+    fn phases_are_contiguous() {
+        let (cfg, sram) = cfgs();
+        for m in zoo::paper_suite() {
+            for mode in [Mode::TpuOnly, Mode::TpuImac] {
+                let s = schedule(&m, &cfg, &sram, mode).unwrap();
+                let mut expect = 0;
+                for p in &s.phases {
+                    assert_eq!(p.start_cycle, expect, "{} {:?}", m.name, mode);
+                    expect += p.cycles;
+                }
+                assert_eq!(expect, s.total_cycles);
+                assert_eq!(s.total_cycles, s.systolic_cycles + s.imac_cycles);
+            }
+        }
+    }
+
+    #[test]
+    fn hybrid_is_never_slower() {
+        let (cfg, sram) = cfgs();
+        for m in zoo::paper_suite() {
+            let tpu = schedule(&m, &cfg, &sram, Mode::TpuOnly).unwrap();
+            let hyb = schedule(&m, &cfg, &sram, Mode::TpuImac).unwrap();
+            assert!(hyb.total_cycles < tpu.total_cycles, "{}", m.name);
+        }
+    }
+}

@@ -1,0 +1,112 @@
+//! Hand-rolled CLI argument parsing (no clap in the offline build).
+//!
+//! Grammar: `tpu-imac <subcommand> [--flag value]... [--switch]...`
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Self> {
+        let mut it = args.into_iter().peekable();
+        let subcommand = it.next().unwrap_or_else(|| "help".to_string());
+        let mut flags = BTreeMap::new();
+        let mut switches = Vec::new();
+        while let Some(a) = it.next() {
+            let Some(name) = a.strip_prefix("--") else {
+                bail!("unexpected positional argument '{a}'");
+            };
+            // `--key=value` or `--key value` or bare switch.
+            if let Some((k, v)) = name.split_once('=') {
+                flags.insert(k.to_string(), v.to_string());
+            } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                flags.insert(name.to_string(), it.next().unwrap());
+            } else {
+                switches.push(name.to_string());
+            }
+        }
+        Ok(Self { subcommand, flags, switches })
+    }
+
+    pub fn from_env() -> Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{key}: bad integer '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{key}: bad float '{v}'")),
+        }
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_flags_switches() {
+        let a = parse("simulate --model lenet --batch 8 --verbose");
+        assert_eq!(a.subcommand, "simulate");
+        assert_eq!(a.get("model"), Some("lenet"));
+        assert_eq!(a.get_usize("batch", 1).unwrap(), 8);
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("tables --format=markdown");
+        assert_eq!(a.get("format"), Some("markdown"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("tables");
+        assert_eq!(a.get_or("format", "ascii"), "ascii");
+        assert_eq!(a.get_usize("n", 42).unwrap(), 42);
+    }
+
+    #[test]
+    fn rejects_positional() {
+        assert!(Args::parse(["x".into(), "oops".into()]).is_err());
+    }
+
+    #[test]
+    fn bad_int_reported() {
+        let a = parse("x --n abc");
+        assert!(a.get_usize("n", 0).is_err());
+    }
+}

@@ -1,0 +1,201 @@
+//! Config system: JSON-file overrides for the architecture, memory and
+//! IMAC parameters, merged over built-in defaults.
+//!
+//! ```json
+//! {
+//!   "array":  {"rows": 32, "cols": 32, "dataflow": "os", "pipelined": true},
+//!   "sram":   {"ifmap_kb": 512, "weight_kb": 512, "ofmap_kb": 256},
+//!   "imac":   {"subarray_rows": 256, "subarray_cols": 256, "gain_num": 4.0,
+//!              "neuron_k": 1.0, "device_sigma": 0.0, "wire_alpha": 0.0,
+//!              "adc_bits": 8},
+//!   "serve":  {"max_batch": 8, "max_queue": 1024, "batch_timeout_us": 2000}
+//! }
+//! ```
+//!
+//! Every field is optional; omitted fields keep their defaults. The CLI's
+//! `--config <path>` loads one of these; explicit CLI flags still win.
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::CoordinatorConfig;
+use crate::imac::{AdcConfig, CrossbarConfig, DeviceConfig, ImacConfig, NeuronConfig};
+use crate::systolic::{ArrayConfig, Dataflow, FoldOverlap, SramConfig};
+use crate::util::json::Json;
+
+/// The full resolved configuration.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Config {
+    pub array: ArrayConfig,
+    pub sram: SramConfig,
+    pub imac: ImacConfig,
+    pub adc: AdcConfig,
+    pub serve: ServeDefaults,
+}
+
+/// Serde-free mirror of the coordinator tunables (Duration isn't JSON).
+#[derive(Clone, Copy, Debug)]
+pub struct ServeDefaults {
+    pub max_batch: usize,
+    pub max_queue: usize,
+    pub batch_timeout_us: u64,
+}
+
+impl Default for ServeDefaults {
+    fn default() -> Self {
+        Self { max_batch: 8, max_queue: 1024, batch_timeout_us: 2000 }
+    }
+}
+
+impl ServeDefaults {
+    pub fn coordinator(&self) -> CoordinatorConfig {
+        CoordinatorConfig {
+            max_batch: self.max_batch,
+            max_queue: self.max_queue,
+            batch_timeout: std::time::Duration::from_micros(self.batch_timeout_us),
+        }
+    }
+}
+
+impl Config {
+    /// Load from a JSON file, merging over defaults.
+    pub fn load(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        let doc = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        Self::from_json(&doc)
+    }
+
+    pub fn from_json(doc: &Json) -> Result<Self> {
+        let mut cfg = Config::default();
+
+        let arr = doc.get("array");
+        if !arr.is_null() {
+            if let Some(v) = arr.get("rows").as_usize() {
+                cfg.array.rows = v;
+            }
+            if let Some(v) = arr.get("cols").as_usize() {
+                cfg.array.cols = v;
+            }
+            if let Some(s) = arr.get("dataflow").as_str() {
+                cfg.array.dataflow =
+                    Dataflow::parse(s).with_context(|| format!("bad dataflow {s}"))?;
+            }
+            if let Some(b) = arr.get("pipelined").as_bool() {
+                cfg.array.overlap =
+                    if b { FoldOverlap::Pipelined } else { FoldOverlap::Conservative };
+            }
+            if cfg.array.rows == 0 || cfg.array.cols == 0 {
+                bail!("array dims must be positive");
+            }
+        }
+
+        let sram = doc.get("sram");
+        if !sram.is_null() {
+            if let Some(v) = sram.get("ifmap_kb").as_usize() {
+                cfg.sram.ifmap_bytes = v * 1024;
+            }
+            if let Some(v) = sram.get("weight_kb").as_usize() {
+                cfg.sram.weight_bytes = v * 1024;
+            }
+            if let Some(v) = sram.get("ofmap_kb").as_usize() {
+                cfg.sram.ofmap_bytes = v * 1024;
+            }
+        }
+
+        let imac = doc.get("imac");
+        if !imac.is_null() {
+            let mut device = DeviceConfig::default();
+            let mut crossbar = CrossbarConfig::default();
+            let mut neuron = NeuronConfig::default();
+            if let Some(v) = imac.get("device_sigma").as_f64() {
+                device.sigma = v;
+            }
+            if let Some(v) = imac.get("stuck_prob").as_f64() {
+                device.stuck_prob = v;
+            }
+            if let Some(v) = imac.get("wire_alpha").as_f64() {
+                crossbar.wire_alpha = v;
+            }
+            if let Some(v) = imac.get("amp_offset_sigma").as_f64() {
+                crossbar.amp_offset_sigma = v;
+            }
+            if let Some(v) = imac.get("neuron_k").as_f64() {
+                neuron.k = v;
+            }
+            crossbar.device = device;
+            cfg.imac.crossbar = crossbar;
+            cfg.imac.neuron = neuron;
+            if let Some(v) = imac.get("subarray_rows").as_usize() {
+                cfg.imac.subarray_rows = v;
+            }
+            if let Some(v) = imac.get("subarray_cols").as_usize() {
+                cfg.imac.subarray_cols = v;
+            }
+            if let Some(v) = imac.get("gain_num").as_f64() {
+                cfg.imac.gain_num = v;
+            }
+            if let Some(v) = imac.get("adc_bits").as_u64() {
+                cfg.adc.bits = v as u32;
+            }
+        }
+
+        let serve = doc.get("serve");
+        if !serve.is_null() {
+            if let Some(v) = serve.get("max_batch").as_usize() {
+                cfg.serve.max_batch = v;
+            }
+            if let Some(v) = serve.get("max_queue").as_usize() {
+                cfg.serve.max_queue = v;
+            }
+            if let Some(v) = serve.get("batch_timeout_us").as_u64() {
+                cfg.serve.batch_timeout_us = v;
+            }
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_config() {
+        let c = Config::default();
+        assert_eq!((c.array.rows, c.array.cols), (32, 32));
+        assert_eq!(c.array.dataflow, Dataflow::Os);
+        assert_eq!(c.imac.gain_num, 4.0);
+    }
+
+    #[test]
+    fn partial_override() {
+        let doc = Json::parse(
+            r#"{"array": {"rows": 64, "dataflow": "ws"},
+                "imac": {"device_sigma": 0.1, "adc_bits": 6},
+                "serve": {"max_batch": 16}}"#,
+        )
+        .unwrap();
+        let c = Config::from_json(&doc).unwrap();
+        assert_eq!(c.array.rows, 64);
+        assert_eq!(c.array.cols, 32); // default preserved
+        assert_eq!(c.array.dataflow, Dataflow::Ws);
+        assert_eq!(c.imac.crossbar.device.sigma, 0.1);
+        assert_eq!(c.adc.bits, 6);
+        assert_eq!(c.serve.max_batch, 16);
+        assert_eq!(c.serve.coordinator().max_batch, 16);
+    }
+
+    #[test]
+    fn rejects_bad_dataflow_and_zero_dims() {
+        assert!(Config::from_json(&Json::parse(r#"{"array":{"dataflow":"xx"}}"#).unwrap())
+            .is_err());
+        assert!(
+            Config::from_json(&Json::parse(r#"{"array":{"rows":0}}"#).unwrap()).is_err()
+        );
+    }
+
+    #[test]
+    fn empty_object_is_all_defaults() {
+        let c = Config::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(c.array.rows, Config::default().array.rows);
+    }
+}

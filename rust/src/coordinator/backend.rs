@@ -1,0 +1,139 @@
+//! Inference backends: how a batch of images becomes class scores.
+//!
+//! Both backends mirror the hardware split — conv section FP32 (systolic
+//! array), FC section in the rust IMAC analog fabric:
+//!
+//! * [`NativeBackend`] — conv via the rust NN ops. Always available; the
+//!   numerics oracle.
+//! * [`PjrtConvBackend`] — conv via the JAX-AOT-compiled PJRT executable
+//!   (`lenet_conv_b{B}.hlo.txt`), padded to the artifact batch size. This
+//!   is the production path: XLA-optimized conv, zero Python.
+
+use std::sync::atomic::Ordering;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::metrics::Metrics;
+use crate::nn::{DeployedModel, Tensor};
+use crate::runtime::Runtime;
+
+/// A batch executor. `infer_batch` returns one score vector per image.
+pub trait InferenceBackend {
+    fn infer_batch(&mut self, images: &[&Tensor], metrics: &Metrics) -> Vec<Vec<f32>>;
+    /// The batch the backend prefers (artifact batch size), for padding
+    /// accounting. None = flexible.
+    fn preferred_batch(&self) -> Option<usize> {
+        None
+    }
+}
+
+/// Pure-rust backend: conv ops + IMAC fabric.
+pub struct NativeBackend {
+    pub model: DeployedModel,
+}
+
+impl NativeBackend {
+    pub fn new(model: DeployedModel) -> Self {
+        Self { model }
+    }
+}
+
+impl InferenceBackend for NativeBackend {
+    fn infer_batch(&mut self, images: &[&Tensor], metrics: &Metrics) -> Vec<Vec<f32>> {
+        let mut out = Vec::with_capacity(images.len());
+        for img in images {
+            let t0 = Instant::now();
+            let feats = self.model.conv_features(img);
+            metrics
+                .conv_us_total
+                .fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+            let t1 = Instant::now();
+            let scores = self.model.infer_from_features(&feats);
+            metrics
+                .imac_us_total
+                .fetch_add(t1.elapsed().as_micros() as u64, Ordering::Relaxed);
+            out.push(scores);
+        }
+        out
+    }
+}
+
+/// PJRT-conv backend: the AOT artifact computes bridge features for a fixed
+/// batch; the IMAC fabric finishes each row.
+pub struct PjrtConvBackend {
+    runtime: Runtime,
+    artifact: String,
+    batch: usize,
+    in_elems: usize,
+    out_elems: usize,
+    pub model: DeployedModel,
+}
+
+impl PjrtConvBackend {
+    /// `artifact` e.g. "lenet_conv_b8.hlo.txt" (must exist in the runtime's
+    /// manifest with input/output shapes).
+    pub fn new(mut runtime: Runtime, artifact: &str, model: DeployedModel) -> Result<Self> {
+        let exe = runtime.load(artifact)?;
+        let batch = exe.batch();
+        let in_elems: usize = exe.input_shape.iter().skip(1).product();
+        let out_elems: usize = exe.output_shape.iter().skip(1).product();
+        anyhow::ensure!(batch > 0, "artifact batch 0");
+        anyhow::ensure!(
+            out_elems == model.fabric.n_in(),
+            "artifact bridge width {out_elems} != fabric {}",
+            model.fabric.n_in()
+        );
+        Ok(Self { runtime, artifact: artifact.to_string(), batch, in_elems, out_elems, model })
+    }
+
+    fn run_chunk(&mut self, chunk: &[&Tensor], metrics: &Metrics) -> Result<Vec<Vec<f32>>> {
+        // Pack images into the fixed-batch buffer (zero-pad the tail).
+        let mut buf = vec![0.0f32; self.batch * self.in_elems];
+        for (i, img) in chunk.iter().enumerate() {
+            anyhow::ensure!(
+                img.data.len() == self.in_elems,
+                "image elems {} != artifact {}",
+                img.data.len(),
+                self.in_elems
+            );
+            buf[i * self.in_elems..(i + 1) * self.in_elems].copy_from_slice(&img.data);
+        }
+        let t0 = Instant::now();
+        let exe = self.runtime.get(&self.artifact).context("artifact loaded")?;
+        let feats = exe.run_f32(&buf)?;
+        metrics.conv_us_total.fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+
+        let t1 = Instant::now();
+        let mut out = Vec::with_capacity(chunk.len());
+        for i in 0..chunk.len() {
+            let row = &feats[i * self.out_elems..(i + 1) * self.out_elems];
+            out.push(self.model.infer_from_features(row));
+        }
+        metrics.imac_us_total.fetch_add(t1.elapsed().as_micros() as u64, Ordering::Relaxed);
+        Ok(out)
+    }
+}
+
+impl InferenceBackend for PjrtConvBackend {
+    fn infer_batch(&mut self, images: &[&Tensor], metrics: &Metrics) -> Vec<Vec<f32>> {
+        let mut out = Vec::with_capacity(images.len());
+        for chunk in images.chunks(self.batch) {
+            match self.run_chunk(chunk, metrics) {
+                Ok(mut scores) => out.append(&mut scores),
+                Err(e) => {
+                    log::error!("pjrt chunk failed: {e:#}");
+                    // Degrade: native path for this chunk.
+                    for img in chunk {
+                        out.push(self.model.infer(img));
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    fn preferred_batch(&self) -> Option<usize> {
+        Some(self.batch)
+    }
+}

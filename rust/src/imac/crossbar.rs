@@ -1,0 +1,297 @@
+//! Memristive crossbar: the analog MVM engine.
+//!
+//! An `n_in × n_out` crossbar stores one [`SynapsePair`] per (input, output)
+//! and computes, for input voltages `v ∈ {−1,+1}·V_read` (logical ±1 after
+//! the bridge), the per-column differential current
+//!
+//! `ΔI_j = Σ_i v_i · (G⁺_ij − G⁻_ij)`   (Ohm + Kirchhoff, paper §2)
+//!
+//! which the differential amplifier converts to a voltage
+//! `v_out_j = gain · ΔI_j / (G_high − G_low)` — normalized so an ideal
+//! crossbar yields exactly `gain · Σ_i x_i·w_ij` in logical units.
+//!
+//! Non-idealities modeled:
+//! * device programming variation / stuck-ats (via [`DeviceConfig`]),
+//! * first-order interconnect IR drop: the effective drive voltage of row
+//!   `i` decays with its distance from the driver,
+//!   `v_eff(i) = v_i · (1 − α·i/n_in)` (α = `wire_alpha`; the
+//!   Xbar-partitioning paper's motivation for bounded subarray sizes),
+//! * differential-amplifier input-referred offset (Gaussian per column).
+//!
+//! The ideal path (`sigma = stuck = α = offset = 0`) is exact integer
+//! arithmetic in disguise and is used on the serving hot path.
+
+use crate::util::rng::Xoshiro256;
+
+use super::device::{DeviceConfig, SynapsePair};
+
+/// Crossbar + periphery non-ideality parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct CrossbarConfig {
+    pub device: DeviceConfig,
+    /// IR-drop coefficient α (0 = ideal wires).
+    pub wire_alpha: f64,
+    /// Differential-amplifier offset sigma in logical units.
+    pub amp_offset_sigma: f64,
+}
+
+impl Default for CrossbarConfig {
+    fn default() -> Self {
+        Self { device: DeviceConfig::default(), wire_alpha: 0.0, amp_offset_sigma: 0.0 }
+    }
+}
+
+/// A programmed crossbar instance.
+#[derive(Clone, Debug)]
+pub struct Crossbar {
+    pub n_in: usize,
+    pub n_out: usize,
+    cfg: CrossbarConfig,
+    /// Row-major `n_in × n_out` differential conductances, pre-normalized to
+    /// weight units (so the ideal case is exactly the ternary weight).
+    weights_norm: Vec<f32>,
+    /// Ideal-path copy of the ternary weights as i8 — 4x less memory
+    /// traffic than f32 on the bandwidth-bound MVM (EXPERIMENTS.md §Perf).
+    weights_i8: Vec<i8>,
+    /// Per-column amplifier offsets (logical units).
+    amp_offsets: Vec<f32>,
+    /// Whether any non-ideality is active (enables the fast path).
+    ideal: bool,
+}
+
+impl Crossbar {
+    /// Program ternary weights `w[i][j]` (row-major `n_in × n_out`).
+    pub fn program(
+        w: &[i8],
+        n_in: usize,
+        n_out: usize,
+        cfg: CrossbarConfig,
+        rng: &mut Xoshiro256,
+    ) -> Self {
+        assert_eq!(w.len(), n_in * n_out, "weight buffer shape mismatch");
+        let dev = &cfg.device;
+        let denom = dev.g_high() - dev.g_low();
+        let ideal_devices = dev.sigma == 0.0 && dev.stuck_prob == 0.0;
+        let mut weights_norm = Vec::with_capacity(w.len());
+        for &wi in w {
+            let norm = if ideal_devices {
+                wi as f32
+            } else {
+                let p = SynapsePair::programmed(wi, dev, rng);
+                (p.diff() / denom) as f32
+            };
+            weights_norm.push(norm);
+        }
+        let amp_offsets: Vec<f32> = (0..n_out)
+            .map(|_| {
+                if cfg.amp_offset_sigma == 0.0 {
+                    0.0
+                } else {
+                    rng.normal_with(0.0, cfg.amp_offset_sigma) as f32
+                }
+            })
+            .collect();
+        let ideal = ideal_devices && cfg.wire_alpha == 0.0 && cfg.amp_offset_sigma == 0.0;
+        let weights_i8 = if ideal { w.to_vec() } else { Vec::new() };
+        Self { n_in, n_out, cfg, weights_norm, weights_i8, amp_offsets, ideal }
+    }
+
+    /// Analog MVM: `out_j = Σ_i v_eff(i)·w_norm[i][j] + offset_j`, in
+    /// weight·input logical units (the diff-amp normalization).
+    pub fn mvm(&self, x: &[f32], out: &mut [f32]) {
+        assert_eq!(x.len(), self.n_in);
+        assert_eq!(out.len(), self.n_out);
+        out.fill(0.0);
+        if self.ideal {
+            // Fast path. The kernel is memory-bound on the `out` read-
+            // modify-write: processing four input rows per pass amortizes
+            // that traffic 4x and gives the autovectorizer straight-line
+            // FMA chains. Wide layers (n_out >= 64) additionally stream the
+            // i8 ternary copy (4x less weight traffic); narrow layers stay
+            // f32 where the i8->f32 convert dominates (EXPERIMENTS.md §Perf).
+            if self.n_out >= 64 {
+                return self.mvm_ideal_i8(x, out);
+            }
+            return self.mvm_ideal_f32(x, out);
+        }
+        let alpha = self.cfg.wire_alpha as f32;
+        let n = self.n_in as f32;
+        for (i, &xi) in x.iter().enumerate() {
+            // First-order IR drop along the word line.
+            let v_eff = xi * (1.0 - alpha * i as f32 / n);
+            if v_eff == 0.0 {
+                continue;
+            }
+            let row = &self.weights_norm[i * self.n_out..(i + 1) * self.n_out];
+            for (o, &wv) in out.iter_mut().zip(row) {
+                *o += v_eff * wv;
+            }
+        }
+        for (o, &off) in out.iter_mut().zip(&self.amp_offsets) {
+            *o += off;
+        }
+    }
+
+    /// Ideal path, i8 weights (wide layers: weight-bandwidth-bound).
+    fn mvm_ideal_i8(&self, x: &[f32], out: &mut [f32]) {
+        let n = self.n_out;
+        let w = &self.weights_i8;
+        let mut chunks = x.chunks_exact(4);
+        let mut i = 0;
+        for xc in &mut chunks {
+            let (x0, x1, x2, x3) = (xc[0], xc[1], xc[2], xc[3]);
+            let r0 = &w[i * n..(i + 1) * n];
+            let r1 = &w[(i + 1) * n..(i + 2) * n];
+            let r2 = &w[(i + 2) * n..(i + 3) * n];
+            let r3 = &w[(i + 3) * n..(i + 4) * n];
+            for j in 0..n {
+                out[j] += x0 * r0[j] as f32
+                    + x1 * r1[j] as f32
+                    + x2 * r2[j] as f32
+                    + x3 * r3[j] as f32;
+            }
+            i += 4;
+        }
+        for (k, &xi) in chunks.remainder().iter().enumerate() {
+            if xi == 0.0 {
+                continue;
+            }
+            let row = &w[(i + k) * n..(i + k + 1) * n];
+            for (o, &wv) in out.iter_mut().zip(row) {
+                *o += xi * wv as f32;
+            }
+        }
+    }
+
+    /// Ideal path, f32 weights (narrow layers: convert cost dominates).
+    fn mvm_ideal_f32(&self, x: &[f32], out: &mut [f32]) {
+        let n = self.n_out;
+        let w = &self.weights_norm;
+        let mut chunks = x.chunks_exact(4);
+        let mut i = 0;
+        for xc in &mut chunks {
+            let (x0, x1, x2, x3) = (xc[0], xc[1], xc[2], xc[3]);
+            let r0 = &w[i * n..(i + 1) * n];
+            let r1 = &w[(i + 1) * n..(i + 2) * n];
+            let r2 = &w[(i + 2) * n..(i + 3) * n];
+            let r3 = &w[(i + 3) * n..(i + 4) * n];
+            for j in 0..n {
+                out[j] += x0 * r0[j] + x1 * r1[j] + x2 * r2[j] + x3 * r3[j];
+            }
+            i += 4;
+        }
+        for (k, &xi) in chunks.remainder().iter().enumerate() {
+            if xi == 0.0 {
+                continue;
+            }
+            let row = &w[(i + k) * n..(i + k + 1) * n];
+            for (o, &wv) in out.iter_mut().zip(row) {
+                *o += xi * wv;
+            }
+        }
+    }
+
+    /// Convenience allocating wrapper.
+    pub fn mvm_vec(&self, x: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0; self.n_out];
+        self.mvm(x, &mut out);
+        out
+    }
+
+    /// The realized (normalized) weight matrix — for inspection/tests.
+    pub fn realized_weights(&self) -> &[f32] {
+        &self.weights_norm
+    }
+
+    pub fn is_ideal(&self) -> bool {
+        self.ideal
+    }
+}
+
+/// Reference integer MVM for the ideal case.
+pub fn reference_mvm(w: &[i8], n_in: usize, n_out: usize, x: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0f32; n_out];
+    for i in 0..n_in {
+        for j in 0..n_out {
+            out[j] += x[i] * w[i * n_out + j] as f32;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn ideal_crossbar_is_exact() {
+        forall(30, |g| {
+            let n_in = g.usize_in(1, 64);
+            let n_out = g.usize_in(1, 32);
+            let w = g.vec_ternary(n_in * n_out);
+            let x: Vec<f32> = g.vec_sign(n_in).iter().map(|&s| s as f32).collect();
+            let mut rng = Xoshiro256::seed_from_u64(1);
+            let xb = Crossbar::program(&w, n_in, n_out, CrossbarConfig::default(), &mut rng);
+            assert!(xb.is_ideal());
+            let got = xb.mvm_vec(&x);
+            let want = reference_mvm(&w, n_in, n_out, &x);
+            assert_eq!(got, want);
+        });
+    }
+
+    #[test]
+    fn ir_drop_attenuates_far_rows() {
+        // All-ones weights and inputs: with IR drop the sum is strictly
+        // below the ideal n_in, and row n-1 contributes least.
+        let n_in = 64;
+        let w = vec![1i8; n_in];
+        let x = vec![1.0f32; n_in];
+        let cfg = CrossbarConfig { wire_alpha: 0.2, ..Default::default() };
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let xb = Crossbar::program(&w, n_in, 1, cfg, &mut rng);
+        let out = xb.mvm_vec(&x);
+        let ideal = n_in as f32;
+        assert!(out[0] < ideal);
+        // Expected attenuation: Σ (1 - 0.2*i/64) = 64 - 0.2*(63*64/2)/64
+        let expect: f32 = (0..n_in).map(|i| 1.0 - 0.2 * i as f32 / n_in as f32).sum();
+        assert!((out[0] - expect).abs() < 1e-4);
+    }
+
+    #[test]
+    fn variation_perturbs_but_tracks_sign() {
+        let n_in = 128;
+        let w = vec![1i8; n_in];
+        let x = vec![1.0f32; n_in];
+        let cfg = CrossbarConfig {
+            device: DeviceConfig { sigma: 0.1, ..Default::default() },
+            ..Default::default()
+        };
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let xb = Crossbar::program(&w, n_in, 1, cfg, &mut rng);
+        assert!(!xb.is_ideal());
+        let out = xb.mvm_vec(&x);
+        // Perturbed, but a 128-strong all-positive sum stays near 128.
+        assert!(out[0] > 100.0 && out[0] < 160.0, "{}", out[0]);
+        assert_ne!(out[0], 128.0);
+    }
+
+    #[test]
+    fn amp_offsets_add_per_column() {
+        let cfg = CrossbarConfig { amp_offset_sigma: 0.5, ..Default::default() };
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        let xb = Crossbar::program(&[0i8, 0], 1, 2, cfg, &mut rng);
+        let out = xb.mvm_vec(&[1.0]);
+        // zero weights -> output is exactly the offsets, which are nonzero.
+        assert!(out[0] != 0.0 || out[1] != 0.0);
+    }
+
+    #[test]
+    fn zero_input_rows_skipped() {
+        let w = vec![1i8; 8];
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let xb = Crossbar::program(&w, 8, 1, CrossbarConfig::default(), &mut rng);
+        let x = vec![0.0f32; 8];
+        assert_eq!(xb.mvm_vec(&x), vec![0.0]);
+    }
+}

@@ -1,0 +1,164 @@
+//! Memristive device model.
+//!
+//! Each synaptic weight is a *differential pair* of memristors with
+//! conductances `G⁺`, `G⁻` (paper §2): `W ∝ G⁺ − G⁻`. A ternary weight maps
+//! to the pair states
+//!
+//! | w  | G⁺      | G⁻      |
+//! |----|---------|---------|
+//! | +1 | G_high  | G_low   |
+//! | 0  | G_low   | G_low   |
+//! | −1 | G_low   | G_high  |
+//!
+//! where `G_high = 1/R_low`, `G_low = 1/R_high`. Device non-idealities:
+//! lognormal conductance variation (cycle-to-cycle + device-to-device
+//! programming spread) and stuck-at faults (SA-high / SA-low).
+
+use crate::util::rng::Xoshiro256;
+
+/// Device technology parameters. Defaults follow the RRAM devices used in
+/// the authors' IMAC line of work (R_low = 10 kΩ, R_high = 1 MΩ class).
+#[derive(Clone, Copy, Debug)]
+pub struct DeviceConfig {
+    /// Low-resistance (SET) state, ohms.
+    pub r_low: f64,
+    /// High-resistance (RESET) state, ohms.
+    pub r_high: f64,
+    /// Lognormal sigma of programmed conductance (0 = ideal).
+    pub sigma: f64,
+    /// Probability a device is stuck (half SA-low, half SA-high).
+    pub stuck_prob: f64,
+}
+
+impl Default for DeviceConfig {
+    fn default() -> Self {
+        Self { r_low: 10e3, r_high: 1e6, sigma: 0.0, stuck_prob: 0.0 }
+    }
+}
+
+impl DeviceConfig {
+    pub fn g_high(&self) -> f64 {
+        1.0 / self.r_low
+    }
+    pub fn g_low(&self) -> f64 {
+        1.0 / self.r_high
+    }
+    /// On/off conductance ratio.
+    pub fn on_off(&self) -> f64 {
+        self.r_high / self.r_low
+    }
+
+    /// Sample a programmed conductance targeting `g_target`, applying
+    /// variation and stuck-at faults.
+    pub fn program(&self, g_target: f64, rng: &mut Xoshiro256) -> f64 {
+        if self.stuck_prob > 0.0 && rng.next_f64() < self.stuck_prob {
+            return if rng.next_f64() < 0.5 { self.g_high() } else { self.g_low() };
+        }
+        if self.sigma == 0.0 {
+            g_target
+        } else {
+            // Lognormal multiplicative spread with unit median.
+            g_target * rng.lognormal(0.0, self.sigma)
+        }
+    }
+}
+
+/// The differential conductance pair realizing one ternary weight.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SynapsePair {
+    pub g_pos: f64,
+    pub g_neg: f64,
+}
+
+impl SynapsePair {
+    /// Ideal mapping of a ternary weight.
+    pub fn ideal(w: i8, cfg: &DeviceConfig) -> Self {
+        match w {
+            1 => Self { g_pos: cfg.g_high(), g_neg: cfg.g_low() },
+            0 => Self { g_pos: cfg.g_low(), g_neg: cfg.g_low() },
+            -1 => Self { g_pos: cfg.g_low(), g_neg: cfg.g_high() },
+            _ => panic!("non-ternary weight {w}"),
+        }
+    }
+
+    /// Programmed (noisy) mapping.
+    pub fn programmed(w: i8, cfg: &DeviceConfig, rng: &mut Xoshiro256) -> Self {
+        let ideal = Self::ideal(w, cfg);
+        Self {
+            g_pos: cfg.program(ideal.g_pos, rng),
+            g_neg: cfg.program(ideal.g_neg, rng),
+        }
+    }
+
+    /// Differential conductance (∝ the realized weight).
+    pub fn diff(&self) -> f64 {
+        self.g_pos - self.g_neg
+    }
+
+    /// The weight this pair encodes, normalized to `{-1, 0, +1}` units:
+    /// `diff / (G_high − G_low)`.
+    pub fn normalized_weight(&self, cfg: &DeviceConfig) -> f64 {
+        self.diff() / (cfg.g_high() - cfg.g_low())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn ideal_mapping_encodes_ternary() {
+        let cfg = DeviceConfig::default();
+        for w in [-1i8, 0, 1] {
+            let p = SynapsePair::ideal(w, &cfg);
+            let back = p.normalized_weight(&cfg);
+            assert!((back - w as f64).abs() < 1e-12, "w={w} back={back}");
+        }
+    }
+
+    #[test]
+    fn on_off_ratio() {
+        let cfg = DeviceConfig::default();
+        assert_eq!(cfg.on_off(), 100.0);
+    }
+
+    #[test]
+    fn zero_sigma_is_deterministic() {
+        let cfg = DeviceConfig::default();
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        for w in [-1i8, 0, 1] {
+            let a = SynapsePair::programmed(w, &cfg, &mut rng);
+            assert_eq!(a, SynapsePair::ideal(w, &cfg));
+        }
+    }
+
+    #[test]
+    fn variation_stays_positive_and_centered() {
+        let cfg = DeviceConfig { sigma: 0.15, ..DeviceConfig::default() };
+        forall(50, |g| {
+            let mut rng = Xoshiro256::seed_from_u64(g.u64_in(0, u64::MAX - 1));
+            let p = SynapsePair::programmed(1, &cfg, &mut rng);
+            assert!(p.g_pos > 0.0 && p.g_neg > 0.0);
+            // within ~5 sigma of the target (lognormal)
+            let ratio = p.g_pos / cfg.g_high();
+            assert!(ratio > (0.15f64 * -5.0).exp() && ratio < (0.15f64 * 5.0).exp());
+        });
+    }
+
+    #[test]
+    fn stuck_devices_land_on_rails() {
+        let cfg = DeviceConfig { stuck_prob: 1.0, ..DeviceConfig::default() };
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        for _ in 0..100 {
+            let g = cfg.program(cfg.g_high(), &mut rng);
+            assert!(g == cfg.g_high() || g == cfg.g_low());
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn non_ternary_rejected() {
+        SynapsePair::ideal(2, &DeviceConfig::default());
+    }
+}

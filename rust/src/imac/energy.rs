@@ -1,0 +1,114 @@
+//! IMAC timing and energy model.
+//!
+//! The paper's headline timing claim is architectural: **one TPU clock
+//! cycle per FC layer**, with zero transfer cycles thanks to the PE→IMAC
+//! sign-bit bridge. Energy is reported as supplementary analysis (the paper
+//! defers detailed energy to its references); the constants below follow
+//! the authors' IMAC co-processor paper (Elbtity et al., ISVLSI 2021) and
+//! the MRAM-sigmoid paper (Amin et al., GLSVLSI 2022) in order of magnitude.
+
+use super::fabric::ImacFabric;
+
+/// Per-event energy constants (joules).
+#[derive(Clone, Copy, Debug)]
+pub struct EnergyConfig {
+    /// Energy per device read (one memristor, one cycle).
+    pub device_read: f64,
+    /// Differential amplifier energy per column per evaluation.
+    pub amp_eval: f64,
+    /// Analog neuron energy per evaluation.
+    pub neuron_eval: f64,
+    /// ADC energy per converted sample.
+    pub adc_sample: f64,
+    /// TPU clock period in seconds (700 MHz edge TPU class).
+    pub clock_period: f64,
+}
+
+impl Default for EnergyConfig {
+    fn default() -> Self {
+        Self {
+            device_read: 0.2e-15,  // 0.2 fJ per cell read
+            amp_eval: 50e-15,      // 50 fJ per diff-amp evaluation
+            neuron_eval: 20e-15,   // 20 fJ per analog sigmoid
+            adc_sample: 2e-12,     // 2 pJ per 8-bit conversion
+            clock_period: 1.0 / 700e6,
+        }
+    }
+}
+
+/// Per-inference IMAC cost report.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ImacCost {
+    pub cycles: u64,
+    pub latency_s: f64,
+    pub energy_j: f64,
+    pub device_reads: u64,
+    pub amp_evals: u64,
+    pub neuron_evals: u64,
+    pub adc_samples: u64,
+}
+
+/// Evaluate the cost of one inference through the fabric.
+pub fn inference_cost(fabric: &ImacFabric, cfg: &EnergyConfig) -> ImacCost {
+    let mut device_reads: u64 = 0;
+    let mut amp_evals: u64 = 0;
+    let mut neuron_evals: u64 = 0;
+    for layer in &fabric.layers {
+        // Two devices (differential pair) per synapse.
+        device_reads += 2 * (layer.n_in as u64) * (layer.n_out as u64);
+        amp_evals += layer.n_out as u64;
+        neuron_evals += layer.n_out as u64;
+    }
+    let adc_samples = fabric.n_out() as u64;
+    let cycles = fabric.latency_cycles();
+    let energy_j = device_reads as f64 * cfg.device_read
+        + amp_evals as f64 * cfg.amp_eval
+        + neuron_evals as f64 * cfg.neuron_eval
+        + adc_samples as f64 * cfg.adc_sample;
+    ImacCost {
+        cycles,
+        latency_s: cycles as f64 * cfg.clock_period,
+        energy_j,
+        device_reads,
+        amp_evals,
+        neuron_evals,
+        adc_samples,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::imac::fabric::{AdcConfig, ImacConfig};
+
+    fn head_fabric() -> ImacFabric {
+        ImacFabric::build(
+            &[(vec![0i8; 1024 * 1024], 1024, 1024), (vec![0i8; 1024 * 10], 1024, 10)],
+            &ImacConfig::default(),
+            AdcConfig::default(),
+            0,
+        )
+    }
+
+    #[test]
+    fn counts_follow_topology() {
+        let c = inference_cost(&head_fabric(), &EnergyConfig::default());
+        assert_eq!(c.cycles, 2);
+        assert_eq!(c.device_reads, 2 * (1024 * 1024 + 1024 * 10) as u64);
+        assert_eq!(c.amp_evals, (1024 + 10) as u64);
+        assert_eq!(c.neuron_evals, (1024 + 10) as u64);
+        assert_eq!(c.adc_samples, 10);
+        assert!(c.energy_j > 0.0);
+        assert!((c.latency_s - 2.0 / 700e6).abs() < 1e-15);
+    }
+
+    #[test]
+    fn energy_dominated_by_devices_at_scale() {
+        let cfg = EnergyConfig::default();
+        let c = inference_cost(&head_fabric(), &cfg);
+        let dev = c.device_reads as f64 * cfg.device_read;
+        // For a 1M-synapse head, device reads are a large share but the ADC
+        // is only 10 samples — sanity of orders of magnitude.
+        assert!(dev > 0.3 * c.energy_j, "dev={dev} total={}", c.energy_j);
+    }
+}

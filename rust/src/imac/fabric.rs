@@ -1,0 +1,347 @@
+//! IMAC subarrays and the switch-box fabric.
+//!
+//! The IMAC architecture (paper Figure 1a) is a grid of tightly-coupled
+//! subarrays joined by programmable switch blocks. One FC layer maps onto
+//! one *logical* layer of the fabric; if the layer exceeds the physical
+//! subarray size, it is partitioned (Amin et al.'s Xbar-partitioning):
+//! input-dimension partitions drive separate crossbars whose column
+//! currents merge through the switch block before the shared differential
+//! amplifier, and output-dimension partitions simply occupy horizontally
+//! adjacent subarrays.
+//!
+//! Each logical layer applies: crossbar MVM (partitioned) → differential
+//! amp gain → analog sigmoid neurons. Layers chain in the analog domain
+//! (the paper's key point: no ADC/DAC between layers); only the final
+//! layer's outputs pass through the ADC.
+
+use crate::util::rng::Xoshiro256;
+
+use super::crossbar::{Crossbar, CrossbarConfig};
+use super::neuron::{Neuron, NeuronConfig};
+
+/// Fabric-level configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ImacConfig {
+    pub crossbar: CrossbarConfig,
+    pub neuron: NeuronConfig,
+    /// Physical subarray bounds (rows = inputs, cols = outputs).
+    pub subarray_rows: usize,
+    pub subarray_cols: usize,
+    /// Differential-amp gain policy: `gain = gain_num / sqrt(fan_in)`.
+    /// The Python trainer bakes the same policy (see python/compile/imac.py).
+    pub gain_num: f64,
+}
+
+impl Default for ImacConfig {
+    fn default() -> Self {
+        Self {
+            crossbar: CrossbarConfig::default(),
+            neuron: NeuronConfig::default(),
+            subarray_rows: 256,
+            subarray_cols: 256,
+            gain_num: 4.0,
+        }
+    }
+}
+
+impl ImacConfig {
+    /// The amplifier gain used for a layer with `fan_in` inputs.
+    pub fn amp_gain(&self, fan_in: usize) -> f64 {
+        self.gain_num / (fan_in as f64).sqrt()
+    }
+}
+
+/// One logical FC layer mapped onto the fabric.
+#[derive(Clone, Debug)]
+pub struct ImacLayer {
+    pub n_in: usize,
+    pub n_out: usize,
+    /// Input-dimension partitions (each a crossbar over a row slice).
+    partitions: Vec<(usize, Crossbar)>, // (row offset, crossbar)
+    pub amp_gain: f32,
+    neurons: Vec<Neuron>,
+    /// scratch-free accumulation buffer reused across forward calls would
+    /// require &mut self; serving uses per-thread scratch instead.
+    pub subarrays_used: usize,
+}
+
+impl ImacLayer {
+    /// Map ternary weights (`n_in × n_out`, row-major) onto the fabric.
+    pub fn map(
+        w: &[i8],
+        n_in: usize,
+        n_out: usize,
+        cfg: &ImacConfig,
+        rng: &mut Xoshiro256,
+    ) -> Self {
+        assert_eq!(w.len(), n_in * n_out);
+        assert!(n_in > 0 && n_out > 0);
+        let mut partitions = Vec::new();
+        let mut subarrays_used = 0;
+        let mut row = 0;
+        while row < n_in {
+            let rows = cfg.subarray_rows.min(n_in - row);
+            // Slice rows [row, row+rows) of the weight matrix.
+            let slice: Vec<i8> = w[row * n_out..(row + rows) * n_out].to_vec();
+            let xb = Crossbar::program(&slice, rows, n_out, cfg.crossbar, rng);
+            subarrays_used += ceil_div(n_out, cfg.subarray_cols);
+            partitions.push((row, xb));
+            row += rows;
+        }
+        let neurons: Vec<Neuron> =
+            (0..n_out).map(|_| Neuron::fabricated(&cfg.neuron, rng)).collect();
+        Self {
+            n_in,
+            n_out,
+            partitions,
+            amp_gain: cfg.amp_gain(n_in) as f32,
+            neurons,
+            subarrays_used,
+        }
+    }
+
+    /// Pre-activation (amp output, before the neuron), for inspection.
+    pub fn preact(&self, x: &[f32], out: &mut [f32]) {
+        assert_eq!(x.len(), self.n_in);
+        assert_eq!(out.len(), self.n_out);
+        out.fill(0.0);
+        let mut part_out = vec![0.0f32; self.n_out];
+        for (row, xb) in &self.partitions {
+            xb.mvm(&x[*row..*row + xb.n_in], &mut part_out);
+            for (o, p) in out.iter_mut().zip(&part_out) {
+                *o += p; // switch-block current merge
+            }
+        }
+        for o in out.iter_mut() {
+            *o *= self.amp_gain;
+        }
+    }
+
+    /// Full analog forward: preact → sigmoid neurons.
+    pub fn forward(&self, x: &[f32], out: &mut [f32]) {
+        self.preact(x, out);
+        for (o, n) in out.iter_mut().zip(&self.neurons) {
+            *o = n.transfer_f32(*o);
+        }
+    }
+}
+
+/// ADC converting the final layer's analog outputs for write-back to LPDDR.
+#[derive(Clone, Copy, Debug)]
+pub struct AdcConfig {
+    /// Resolution in bits (0 = ideal / bypass).
+    pub bits: u32,
+    /// Full-scale input range `[0, full_scale]` (sigmoid outputs → 1.0).
+    pub full_scale: f32,
+}
+
+impl Default for AdcConfig {
+    fn default() -> Self {
+        Self { bits: 8, full_scale: 1.0 }
+    }
+}
+
+impl AdcConfig {
+    /// Quantize one sample (mid-rise, clamped).
+    #[inline]
+    pub fn quantize(&self, x: f32) -> f32 {
+        if self.bits == 0 {
+            return x;
+        }
+        let levels = ((1u64 << self.bits) - 1) as f32;
+        let clamped = x.clamp(0.0, self.full_scale);
+        (clamped / self.full_scale * levels).round() / levels * self.full_scale
+    }
+}
+
+/// The whole FC section mapped onto the IMAC: a chain of logical layers and
+/// the terminal ADC.
+#[derive(Clone, Debug)]
+pub struct ImacFabric {
+    pub layers: Vec<ImacLayer>,
+    pub adc: AdcConfig,
+}
+
+impl ImacFabric {
+    /// Build from per-layer ternary weights `(w, n_in, n_out)`.
+    pub fn build(
+        layers: &[(Vec<i8>, usize, usize)],
+        cfg: &ImacConfig,
+        adc: AdcConfig,
+        seed: u64,
+    ) -> Self {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut mapped = Vec::new();
+        let mut prev_out: Option<usize> = None;
+        for (w, n_in, n_out) in layers {
+            if let Some(p) = prev_out {
+                assert_eq!(p, *n_in, "layer dims must chain");
+            }
+            mapped.push(ImacLayer::map(w, *n_in, *n_out, cfg, &mut rng));
+            prev_out = Some(*n_out);
+        }
+        Self { layers: mapped, adc }
+    }
+
+    pub fn n_in(&self) -> usize {
+        self.layers.first().map(|l| l.n_in).unwrap_or(0)
+    }
+
+    pub fn n_out(&self) -> usize {
+        self.layers.last().map(|l| l.n_out).unwrap_or(0)
+    }
+
+    /// End-to-end analog forward from bridge sign inputs (±1) to quantized
+    /// digital outputs. `scratch` must have capacity ≥ max layer width.
+    pub fn forward(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.n_in());
+        let mut cur = x.to_vec();
+        let mut next = Vec::new();
+        for layer in &self.layers {
+            next.resize(layer.n_out, 0.0);
+            layer.forward(&cur, &mut next);
+            std::mem::swap(&mut cur, &mut next);
+        }
+        for v in cur.iter_mut() {
+            *v = self.adc.quantize(*v);
+        }
+        cur
+    }
+
+    /// Total IMAC latency in TPU cycles: one cycle per logical layer
+    /// (paper §3: "each FC layer executed in a single clock cycle").
+    pub fn latency_cycles(&self) -> u64 {
+        self.layers.len() as u64
+    }
+
+    /// Total physical subarrays occupied.
+    pub fn subarrays_used(&self) -> usize {
+        self.layers.iter().map(|l| l.subarrays_used).sum()
+    }
+
+    /// RRAM storage: 2 bits per ternary weight, packed.
+    pub fn rram_bytes(&self) -> u64 {
+        let weights: u64 = self.layers.iter().map(|l| (l.n_in * l.n_out) as u64).sum();
+        (2 * weights + 7) / 8
+    }
+}
+
+fn ceil_div(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::imac::crossbar::reference_mvm;
+    use crate::util::prop::forall;
+
+    fn ideal_cfg() -> ImacConfig {
+        ImacConfig::default()
+    }
+
+    #[test]
+    fn partitioned_layer_equals_monolithic() {
+        forall(20, |g| {
+            let n_in = g.usize_in(1, 600);
+            let n_out = g.usize_in(1, 40);
+            let w = g.vec_ternary(n_in * n_out);
+            let x: Vec<f32> = g.vec_sign(n_in).iter().map(|&s| s as f32).collect();
+            let mut rng = Xoshiro256::seed_from_u64(1);
+            // Small subarrays force partitioning.
+            let cfg = ImacConfig { subarray_rows: 128, subarray_cols: 64, ..ideal_cfg() };
+            let layer = ImacLayer::map(&w, n_in, n_out, &cfg, &mut rng);
+            let mut pre = vec![0.0f32; n_out];
+            layer.preact(&x, &mut pre);
+            let want = reference_mvm(&w, n_in, n_out, &x);
+            let gain = cfg.amp_gain(n_in) as f32;
+            for (p, w_) in pre.iter().zip(&want) {
+                assert!((p - w_ * gain).abs() < 1e-3, "{p} vs {}", w_ * gain);
+            }
+        });
+    }
+
+    #[test]
+    fn forward_applies_sigmoid() {
+        let w = vec![1i8; 4]; // 4x1, all +1
+        let fabric = ImacFabric::build(
+            &[(w, 4, 1)],
+            &ideal_cfg(),
+            AdcConfig { bits: 0, full_scale: 1.0 },
+            0,
+        );
+        let out = fabric.forward(&[1.0, 1.0, 1.0, 1.0]);
+        // preact = 4 * gain(4) = 4 * (4/2) = 8.0 -> sigmoid(8.0)
+        let g = ImacConfig::default().amp_gain(4) as f32;
+        let expect = 1.0 / (1.0 + (-(4.0 * g)).exp());
+        assert!((out[0] - expect).abs() < 1e-6, "{} vs {expect}", out[0]);
+    }
+
+    #[test]
+    fn multilayer_chains_in_analog() {
+        // 2 -> 2 -> 1 with hand-computable weights.
+        let w1 = vec![1i8, -1, 1, -1]; // rows=2 in, cols=2 out
+        let w2 = vec![1i8, 1]; // 2 -> 1
+        let fabric = ImacFabric::build(
+            &[(w1, 2, 2), (w2, 2, 1)],
+            &ideal_cfg(),
+            AdcConfig { bits: 0, full_scale: 1.0 },
+            0,
+        );
+        let g1 = ImacConfig::default().amp_gain(2) as f32;
+        let x = [1.0f32, -1.0];
+        let pre1 = [(1.0 - 1.0) * g1, (-1.0 + 1.0) * g1]; // both 0
+        let h1 = [0.5f32, 0.5]; // sigmoid(0)
+        let pre2 = (h1[0] + h1[1]) * g1;
+        let expect = 1.0 / (1.0 + (-pre2).exp());
+        let out = fabric.forward(&x);
+        assert!((out[0] - expect).abs() < 1e-6, "{} vs {expect}", out[0]);
+        let _ = pre1;
+    }
+
+    #[test]
+    fn adc_quantizes_to_grid() {
+        let adc = AdcConfig { bits: 2, full_scale: 1.0 };
+        // 2-bit: levels 0, 1/3, 2/3, 1.
+        assert_eq!(adc.quantize(0.0), 0.0);
+        assert_eq!(adc.quantize(0.49), 1.0 / 3.0);
+        assert_eq!(adc.quantize(0.51), 2.0 / 3.0);
+        assert_eq!(adc.quantize(1.2), 1.0);
+        // 0 bits = bypass
+        let ideal = AdcConfig { bits: 0, full_scale: 1.0 };
+        assert_eq!(ideal.quantize(0.1234), 0.1234);
+    }
+
+    #[test]
+    fn paper_head_latency_and_rram() {
+        // CIFAR-10 head: 1024->1024->10, ternary.
+        let w1 = vec![0i8; 1024 * 1024];
+        let w2 = vec![0i8; 1024 * 10];
+        let fabric = ImacFabric::build(
+            &[(w1, 1024, 1024), (w2, 1024, 10)],
+            &ideal_cfg(),
+            AdcConfig::default(),
+            0,
+        );
+        assert_eq!(fabric.latency_cycles(), 2); // 1 cycle per FC layer
+        // 0.2647 decimal MB (paper's 0.265)
+        let mb = fabric.rram_bytes() as f64 / 1e6;
+        assert!((mb - 0.2647).abs() < 0.0005, "{mb}");
+        // 1024x1024 on 256x256 subarrays = 4 row partitions x 4 col = 16,
+        // plus 4 partitions x 1 for the 1024x10 layer.
+        assert_eq!(fabric.subarrays_used(), 16 + 4);
+    }
+
+    #[test]
+    fn dim_chain_enforced() {
+        let r = std::panic::catch_unwind(|| {
+            ImacFabric::build(
+                &[(vec![0i8; 4], 2, 2), (vec![0i8; 9], 3, 3)],
+                &ImacConfig::default(),
+                AdcConfig::default(),
+                0,
+            )
+        });
+        assert!(r.is_err());
+    }
+}

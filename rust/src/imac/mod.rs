@@ -1,0 +1,21 @@
+//! In-memory analog computing (IMAC) simulator.
+//!
+//! * [`device`] — memristor differential pairs, programming variation;
+//! * [`crossbar`] — analog MVM via Ohm/Kirchhoff with IR-drop and amplifier
+//!   offsets;
+//! * [`neuron`] — inverter-VTC analog sigmoid;
+//! * [`fabric`] — subarray partitioning, switch-box current merge, layer
+//!   chaining in the analog domain, terminal ADC;
+//! * [`energy`] — per-inference latency/energy accounting.
+
+pub mod crossbar;
+pub mod device;
+pub mod energy;
+pub mod fabric;
+pub mod neuron;
+
+pub use crossbar::{Crossbar, CrossbarConfig};
+pub use device::DeviceConfig;
+pub use energy::{inference_cost, EnergyConfig, ImacCost};
+pub use fabric::{AdcConfig, ImacConfig, ImacFabric, ImacLayer};
+pub use neuron::{Neuron, NeuronConfig};

@@ -1,0 +1,142 @@
+//! Analog sigmoid neuron model.
+//!
+//! The paper (§2, citing Amin et al. 2022) builds the sigmoid from two
+//! resistive devices and a CMOS inverter: the resistive voltage divider
+//! flattens the inverter's voltage-transfer characteristic (VTC) so the
+//! sharp high↔low transition becomes a smooth sigmoidal curve. We model the
+//! resulting VTC as a logistic function of the differential-amplifier
+//! output voltage:
+//!
+//! `V_out = V_dd / (1 + exp(−k·(V_in − V_m)))`
+//!
+//! normalized here to logical units: `y = σ(k·x)` with `x` the amplifier
+//! output in weight·input units and midpoint 0 (the differential pair is
+//! symmetric). `k` (the VTC slope) and its device-to-device variation are
+//! configurable; the same `k` is baked into the Python trainer so the
+//! deployed weights see the exact transfer curve they were trained for.
+
+use crate::util::rng::Xoshiro256;
+
+/// Analog neuron parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct NeuronConfig {
+    /// VTC slope in logical units (σ(k·x)).
+    pub k: f64,
+    /// Relative device-to-device slope variation (lognormal sigma; 0=ideal).
+    pub k_sigma: f64,
+    /// Input-referred offset voltage, logical units (0=ideal).
+    pub offset_sigma: f64,
+}
+
+impl Default for NeuronConfig {
+    fn default() -> Self {
+        Self { k: 1.0, k_sigma: 0.0, offset_sigma: 0.0 }
+    }
+}
+
+/// One instantiated neuron (slope/offset frozen at "fabrication").
+#[derive(Clone, Copy, Debug)]
+pub struct Neuron {
+    pub k: f64,
+    pub offset: f64,
+}
+
+impl Neuron {
+    pub fn ideal(cfg: &NeuronConfig) -> Self {
+        Self { k: cfg.k, offset: 0.0 }
+    }
+
+    pub fn fabricated(cfg: &NeuronConfig, rng: &mut Xoshiro256) -> Self {
+        let k = if cfg.k_sigma == 0.0 { cfg.k } else { cfg.k * rng.lognormal(0.0, cfg.k_sigma) };
+        let offset =
+            if cfg.offset_sigma == 0.0 { 0.0 } else { rng.normal_with(0.0, cfg.offset_sigma) };
+        Self { k, offset }
+    }
+
+    /// The VTC: σ(k·(x − offset)).
+    #[inline]
+    pub fn transfer(&self, x: f64) -> f64 {
+        sigmoid(self.k * (x - self.offset))
+    }
+
+    /// f32 fast path used on the serving hot path.
+    #[inline]
+    pub fn transfer_f32(&self, x: f32) -> f32 {
+        let z = (self.k as f32) * (x - self.offset as f32);
+        1.0 / (1.0 + (-z).exp())
+    }
+}
+
+#[inline]
+pub fn sigmoid(z: f64) -> f64 {
+    1.0 / (1.0 + (-z).exp())
+}
+
+/// Sweep the VTC over `[lo, hi]` with `n` points — the Figure-1-style
+/// neuron characterization series used by `examples/imac_noise_study`.
+pub fn vtc_sweep(neuron: &Neuron, lo: f64, hi: f64, n: usize) -> Vec<(f64, f64)> {
+    assert!(n >= 2);
+    (0..n)
+        .map(|i| {
+            let x = lo + (hi - lo) * i as f64 / (n - 1) as f64;
+            (x, neuron.transfer(x))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn vtc_limits_and_midpoint() {
+        let n = Neuron::ideal(&NeuronConfig::default());
+        assert!((n.transfer(0.0) - 0.5).abs() < 1e-12);
+        assert!(n.transfer(40.0) > 0.999_999);
+        assert!(n.transfer(-40.0) < 1e-6);
+    }
+
+    #[test]
+    fn vtc_monotone() {
+        let n = Neuron::ideal(&NeuronConfig { k: 2.5, ..Default::default() });
+        let sweep = vtc_sweep(&n, -8.0, 8.0, 257);
+        for w in sweep.windows(2) {
+            assert!(w[1].1 >= w[0].1);
+        }
+    }
+
+    #[test]
+    fn slope_controls_transition_width() {
+        let soft = Neuron::ideal(&NeuronConfig { k: 0.5, ..Default::default() });
+        let hard = Neuron::ideal(&NeuronConfig { k: 8.0, ..Default::default() });
+        // At x = 0.5 the hard VTC is much closer to saturation.
+        assert!(hard.transfer(0.5) > soft.transfer(0.5));
+    }
+
+    #[test]
+    fn f32_path_matches_f64() {
+        let n = Neuron::ideal(&NeuronConfig { k: 1.7, ..Default::default() });
+        forall(100, |g| {
+            let x = g.f64_in(-10.0, 10.0);
+            let a = n.transfer(x);
+            let b = n.transfer_f32(x as f32) as f64;
+            assert!((a - b).abs() < 1e-5, "x={x}: {a} vs {b}");
+        });
+    }
+
+    #[test]
+    fn fabricated_ideal_when_sigmas_zero() {
+        let cfg = NeuronConfig::default();
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let n = Neuron::fabricated(&cfg, &mut rng);
+        assert_eq!(n.k, cfg.k);
+        assert_eq!(n.offset, 0.0);
+    }
+
+    #[test]
+    fn offset_shifts_midpoint() {
+        let n = Neuron { k: 1.0, offset: 1.5 };
+        assert!((n.transfer(1.5) - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,41 @@
+//! # tpu-imac
+//!
+//! Production-grade reproduction of *"Heterogeneous Integration of In-Memory
+//! Analog Computing Architectures with Tensor Processing Units"* (Elbtity,
+//! Amin, Reidy, Zand — cs.AR 2023).
+//!
+//! The crate provides, in one workspace:
+//!
+//! * a **cycle-accurate systolic-array simulator** (Scale-Sim-equivalent;
+//!   OS/WS/IS dataflows) — [`systolic`];
+//! * an **in-memory analog computing (IMAC) simulator** — memristive
+//!   crossbars, differential amplifiers, analog sigmoid neurons, switch-box
+//!   fabric — [`imac`];
+//! * the **hybrid TPU-IMAC architecture model**: heterogeneous scheduler,
+//!   sign-bit PE→IMAC bridge, LPDDR/SRAM/RRAM memory accounting — [`arch`];
+//! * a **workload IR + zoo** of the paper's seven CNNs — [`workload`];
+//! * a functional **NN inference engine** (FP32 + ternary) — [`nn`];
+//! * a **PJRT runtime** that loads JAX-AOT-compiled HLO artifacts — [`runtime`];
+//! * a threaded **serving coordinator** (batching, routing, metrics) —
+//!   [`coordinator`];
+//! * report generators reproducing every table in the paper — [`report`].
+//!
+//! Python (JAX + Pallas) exists only on the build path (`python/compile`):
+//! it trains the mixed-precision models and AOT-lowers inference graphs to
+//! the HLO text artifacts the rust runtime executes. Nothing Python runs at
+//! request time.
+
+pub mod arch;
+pub mod coordinator;
+pub mod metrics;
+pub mod nn;
+pub mod quant;
+pub mod runtime;
+pub mod cli;
+pub mod config;
+pub mod report;
+pub mod studies;
+pub mod imac;
+pub mod systolic;
+pub mod util;
+pub mod workload;

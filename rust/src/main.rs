@@ -1,0 +1,408 @@
+//! `tpu-imac` — leader binary for the TPU-IMAC reproduction.
+//!
+//! Subcommands:
+//!
+//! * `tables`    — regenerate paper Table 2 + Table 3 (ours vs published).
+//! * `simulate`  — per-layer systolic/IMAC report for one model.
+//! * `trace`     — LPDDR address traces (Scale-Sim CSV format) for a layer.
+//! * `serve`     — run the serving coordinator on the AOT artifacts with a
+//!                 synthetic request stream; print latency/throughput.
+//! * `imac-study`— IMAC non-ideality sweep (device variation, IR drop).
+//! * `spec`      — print the resolved architecture configuration.
+
+use anyhow::{bail, Context, Result};
+
+use tpu_imac::arch::{self, Mode};
+use tpu_imac::cli::Args;
+use tpu_imac::coordinator::{Coordinator, CoordinatorConfig, NativeBackend, PjrtConvBackend};
+use tpu_imac::imac::{AdcConfig, DeviceConfig, ImacConfig};
+use tpu_imac::nn::{DeployedModel, Tensor};
+use tpu_imac::report::{self, AccuracyTable};
+use tpu_imac::runtime::Runtime;
+use tpu_imac::systolic::{self, ArrayConfig, Dataflow, FoldOverlap, Schedule, SramConfig};
+use tpu_imac::util::table::{Align, Table};
+use tpu_imac::workload::{zoo, Dataset};
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+/// Resolve the full config: defaults <- --config file <- explicit flags.
+fn full_config(args: &Args) -> Result<tpu_imac::config::Config> {
+    let mut cfg = match args.get("config") {
+        Some(path) => tpu_imac::config::Config::load(path)?,
+        None => tpu_imac::config::Config::default(),
+    };
+    if let Some(s) = args.get("dataflow") {
+        cfg.array.dataflow = Dataflow::parse(s).context("--dataflow must be os|ws|is")?;
+    }
+    if args.has("conservative") {
+        cfg.array.overlap = FoldOverlap::Conservative;
+    }
+    if let Some(v) = args.get("rows") {
+        cfg.array.rows = v.parse().context("--rows")?;
+    }
+    if let Some(v) = args.get("cols") {
+        cfg.array.cols = v.parse().context("--cols")?;
+    }
+    Ok(cfg)
+}
+
+fn array_config(args: &Args) -> Result<ArrayConfig> {
+    Ok(full_config(args)?.array)
+}
+
+fn dataset_arg(args: &Args) -> Result<Dataset> {
+    Ok(match args.get_or("dataset", "cifar10").as_str() {
+        "mnist" => Dataset::Mnist,
+        "cifar10" => Dataset::Cifar10,
+        "cifar100" => Dataset::Cifar100,
+        other => bail!("unknown dataset {other}"),
+    })
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.subcommand.as_str() {
+        "tables" => cmd_tables(args),
+        "simulate" => cmd_simulate(args),
+        "trace" => cmd_trace(args),
+        "serve" => cmd_serve(args),
+        "imac-study" => cmd_imac_study(args),
+        "energy" => cmd_energy(args),
+        "spec" => cmd_spec(args),
+        "help" | "--help" => {
+            println!("{HELP}");
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{other}' (try `tpu-imac help`)"),
+    }
+}
+
+const HELP: &str = "tpu-imac — heterogeneous TPU-IMAC architecture reproduction
+USAGE: tpu-imac <tables|simulate|trace|serve|imac-study|spec> [--flags]
+  tables     [--format ascii|markdown|csv] [--artifacts DIR]
+  simulate   --model lenet|vgg9|mobilenetv1|mobilenetv2|resnet18
+             [--dataset mnist|cifar10|cifar100] [--dataflow os|ws|is]
+             [--mode tpu|hybrid] [--conservative]
+  trace      --model lenet [--layer NAME] --out DIR
+  serve      [--artifacts DIR] [--requests N] [--max-batch B] [--native]
+  imac-study [--sigma S] [--alpha A] [--trials N]
+  energy     (per-model IMAC latency/energy per inference)
+  spec       [--dataflow os|ws|is] [--rows R] [--cols C]";
+
+fn cmd_tables(args: &Args) -> Result<()> {
+    let cfg = array_config(args)?;
+    let sram = SramConfig::default();
+    let evals = arch::evaluate_suite(&cfg, &sram)?;
+    let artifacts = args.get_or("artifacts", "artifacts");
+    let acc = AccuracyTable::load(&format!("{artifacts}/accuracy.json"));
+    let t2 = report::table2(&evals, &acc);
+    let t3 = report::table3(&evals, &acc);
+    match args.get_or("format", "ascii").as_str() {
+        "markdown" => println!("{}\n{}", t2.to_markdown(), t3.to_markdown()),
+        "csv" => println!("{}\n{}", t2.to_csv(), t3.to_csv()),
+        _ => println!("{}\n{}", t2.to_ascii(), t3.to_ascii()),
+    }
+    if acc.rows.is_empty() {
+        println!("(accuracy columns empty: run `make train` first)");
+    } else {
+        println!("(* = reduced-width proxy model on synthetic data; DESIGN.md §5)");
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let model_name = args.get("model").context("--model required")?;
+    let dataset = if model_name == "lenet" { Dataset::Mnist } else { dataset_arg(args)? };
+    let model = zoo::by_name(model_name, dataset).context("unknown model")?;
+    let cfg = array_config(args)?;
+    let sram = SramConfig::default();
+    let schedule = match args.get_or("mode", "hybrid").as_str() {
+        "tpu" => Schedule::TpuOnly,
+        "hybrid" => Schedule::Hybrid,
+        other => bail!("--mode must be tpu|hybrid, got {other}"),
+    };
+    println!("{}", model.summary());
+    let (records, stats) = systolic::simulate_network(&cfg, &sram, &model, schedule);
+    let mut t = Table::new(&["layer", "engine", "cycles", "MACs", "util%", "map%", "bw B/cyc"])
+        .with_title(&format!(
+            "{} on {}x{} {} ({:?})",
+            model.name,
+            cfg.rows,
+            cfg.cols,
+            cfg.dataflow.label(),
+            schedule
+        ))
+        .with_aligns(&[
+            Align::Left,
+            Align::Left,
+            Align::Right,
+            Align::Right,
+            Align::Right,
+            Align::Right,
+            Align::Right,
+        ]);
+    for r in &records {
+        if r.cycles == 0 && r.macs == 0 {
+            continue;
+        }
+        t.row(vec![
+            r.name.clone(),
+            format!("{:?}", r.engine),
+            r.cycles.to_string(),
+            r.macs.to_string(),
+            format!("{:.1}", r.utilization * 100.0),
+            format!("{:.1}", r.mapping_efficiency * 100.0),
+            format!("{:.1}", r.mem.bw_bytes_per_cycle),
+        ]);
+    }
+    println!("{}", t.to_ascii());
+    println!(
+        "total: {} cycles, {} MACs, avg util {:.1}%, peak bw {:.1} B/cyc",
+        stats.total_cycles,
+        stats.total_macs,
+        stats.avg_utilization * 100.0,
+        stats.peak_bw_bytes_per_cycle
+    );
+    let mode = if schedule == Schedule::Hybrid { Mode::TpuImac } else { Mode::TpuOnly };
+    let sched = arch::schedule(&model, &cfg, &sram, mode)?;
+    println!(
+        "schedule: {} systolic + {} IMAC cycles over {} phases ({} controller events)",
+        sched.systolic_cycles,
+        sched.imac_cycles,
+        sched.phases.len(),
+        sched.events.len()
+    );
+    Ok(())
+}
+
+fn cmd_trace(args: &Args) -> Result<()> {
+    let model_name = args.get_or("model", "lenet");
+    let dataset = if model_name == "lenet" { Dataset::Mnist } else { dataset_arg(args)? };
+    let model = zoo::by_name(&model_name, dataset).context("unknown model")?;
+    let out_dir = args.get("out").context("--out required")?;
+    std::fs::create_dir_all(out_dir)?;
+    let cfg = array_config(args)?;
+    let tg = systolic::dram::TraceGen::new(cfg);
+    let layer_filter = args.get("layer");
+    let mut wrote = 0;
+    for layer in &model.layers {
+        if let Some(f) = layer_filter {
+            if layer.name != f {
+                continue;
+            }
+        }
+        let Some(g) = layer.gemm() else { continue };
+        if g.groups != 1 {
+            continue; // depthwise traces are per-channel; skip in CSV dump
+        }
+        let (ifr, wr, ofw) = tg.gemm_traces(&g);
+        for (tag, trace) in [("ifmap_read", &ifr), ("weight_read", &wr), ("ofmap_write", &ofw)] {
+            let path =
+                format!("{out_dir}/{}_{}_{tag}.csv", model.name.to_lowercase(), layer.name);
+            systolic::dram::TraceGen::write_csv(&path, trace)?;
+            let st = systolic::dram::TraceGen::stats(trace);
+            println!(
+                "{path}: {} records, {} words, cycles {}..{}",
+                st.records, st.words, st.first_cycle, st.last_cycle
+            );
+        }
+        wrote += 1;
+    }
+    if wrote == 0 {
+        bail!("no layers matched (use --layer <name> from `simulate` output)");
+    }
+    Ok(())
+}
+
+fn load_model(artifacts: &str) -> Result<DeployedModel> {
+    DeployedModel::load(
+        &format!("{artifacts}/weights_lenet.json"),
+        &ImacConfig::default(),
+        AdcConfig { bits: 0, full_scale: 1.0 },
+        0,
+    )
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let artifacts = args.get_or("artifacts", "artifacts");
+    let n_requests = args.get_usize("requests", 256)?;
+    let max_batch = args.get_usize("max-batch", 8)?;
+    let native = args.has("native");
+
+    let model = load_model(&artifacts)?;
+    println!(
+        "model {} [{}] loaded: fp32 acc {:.2}%, ternary acc {:.2}% (training-time)",
+        model.row,
+        model.dataset,
+        model.acc_fp32 * 100.0,
+        model.acc_ternary * 100.0
+    );
+    let input_hwc = model.input_hwc;
+    drop(model);
+
+    let artifacts2 = artifacts.clone();
+    let coord = Coordinator::start(CoordinatorConfig { max_batch, ..Default::default() }, move || {
+        make_backend(&artifacts2, max_batch, native)
+    });
+
+    // Synthetic request stream: deterministic pseudo-images.
+    let client = coord.client();
+    let (h, w, c) = input_hwc;
+    let t0 = std::time::Instant::now();
+    let mut rxs = Vec::with_capacity(n_requests);
+    let mut rng = tpu_imac::util::rng::Xoshiro256::seed_from_u64(42);
+    for _ in 0..n_requests {
+        let img = Tensor::from_vec(h, w, c, (0..h * w * c).map(|_| rng.next_f32()).collect());
+        rxs.push(client.submit(img)?.1);
+    }
+    for rx in rxs {
+        let _ = rx.recv()?;
+    }
+    let wall = t0.elapsed();
+    let snap = coord.metrics.snapshot();
+    println!(
+        "served {} requests in {:.3}s => {:.1} req/s",
+        snap.completed,
+        wall.as_secs_f64(),
+        snap.completed as f64 / wall.as_secs_f64()
+    );
+    println!(
+        "latency: mean {:.2} ms  p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms",
+        snap.mean_latency_us / 1e3,
+        snap.p50_latency_us / 1e3,
+        snap.p95_latency_us / 1e3,
+        snap.p99_latency_us / 1e3
+    );
+    println!(
+        "batches {} (mean fill {:.0}%), stage totals: conv {:.1} ms, imac {:.1} ms, queue {:.1} ms",
+        snap.batches,
+        snap.mean_batch_fill * 100.0,
+        snap.conv_us_total as f64 / 1e3,
+        snap.imac_us_total as f64 / 1e3,
+        snap.queue_us_total as f64 / 1e3
+    );
+    coord.shutdown();
+    Ok(())
+}
+
+/// Build the serving backend: PJRT conv artifact if available, else native.
+fn make_backend(
+    artifacts: &str,
+    max_batch: usize,
+    force_native: bool,
+) -> Box<dyn tpu_imac::coordinator::InferenceBackend> {
+    let model = load_model(artifacts).expect("load weights json");
+    if force_native {
+        eprintln!("backend: native rust conv + IMAC fabric");
+        return Box::new(NativeBackend::new(model));
+    }
+    let artifact = format!("lenet_conv_b{max_batch}.hlo.txt");
+    let rt = Runtime::open(artifacts).and_then(|mut rt| {
+        rt.check_spec(&ImacConfig::default())?;
+        rt.load(&artifact)?;
+        Ok(rt)
+    });
+    match rt {
+        Ok(rt) => match PjrtConvBackend::new(rt, &artifact, model) {
+            Ok(b) => {
+                eprintln!("backend: PJRT conv ({artifact}) + rust IMAC fabric");
+                Box::new(b)
+            }
+            Err(e) => {
+                eprintln!("PJRT backend unavailable ({e:#}); using native");
+                Box::new(NativeBackend::new(load_model(artifacts).expect("reload")))
+            }
+        },
+        Err(e) => {
+            eprintln!("PJRT runtime unavailable ({e:#}); using native");
+            Box::new(NativeBackend::new(load_model(artifacts).expect("reload")))
+        }
+    }
+}
+
+fn cmd_imac_study(args: &Args) -> Result<()> {
+    let sigma = args.get_f64("sigma", 0.1)?;
+    let alpha = args.get_f64("alpha", 0.1)?;
+    let trials = args.get_usize("trials", 8)?;
+    tpu_imac::studies::imac_noise_study(sigma, alpha, trials);
+    Ok(())
+}
+
+/// Supplementary: per-model IMAC latency/energy per inference (the paper
+/// defers detailed energy to its references; constants in imac::energy).
+fn cmd_energy(_args: &Args) -> Result<()> {
+    use tpu_imac::imac::{inference_cost, AdcConfig as Adc, EnergyConfig, ImacConfig as Ic, ImacFabric};
+    let mut t = Table::new(&["model", "fc layers", "subarrays", "cycles", "latency ns", "energy nJ"])
+        .with_title("IMAC per-inference cost (ideal devices)")
+        .with_aligns(&[Align::Left, Align::Right, Align::Right, Align::Right, Align::Right, Align::Right]);
+    let energy = EnergyConfig::default();
+    for m in zoo::paper_suite() {
+        let layers: Vec<(Vec<i8>, usize, usize)> = m
+            .dense_layers()
+            .iter()
+            .map(|l| {
+                let g = l.gemm().unwrap();
+                (vec![0i8; g.k * g.n], g.k, g.n)
+            })
+            .collect();
+        let fabric = ImacFabric::build(&layers, &Ic::default(), Adc::default(), 0);
+        let c = inference_cost(&fabric, &energy);
+        t.row(vec![
+            format!("{}/{}", m.name, m.dataset.label()),
+            fabric.layers.len().to_string(),
+            fabric.subarrays_used().to_string(),
+            c.cycles.to_string(),
+            format!("{:.1}", c.latency_s * 1e9),
+            format!("{:.2}", c.energy_j * 1e9),
+        ]);
+    }
+    println!("{}", t.to_ascii());
+    Ok(())
+}
+
+fn cmd_spec(args: &Args) -> Result<()> {
+    let cfg = array_config(args)?;
+    let sram = SramConfig::default();
+    let imac = ImacConfig::default();
+    let dev = DeviceConfig::default();
+    println!(
+        "systolic: {}x{} {} ({:?} folds), {} PEs",
+        cfg.rows,
+        cfg.cols,
+        cfg.dataflow.label(),
+        cfg.overlap,
+        cfg.pes()
+    );
+    println!(
+        "sram: ifmap {} KB, weight {} KB, ofmap {} KB",
+        sram.ifmap_bytes / 1024,
+        sram.weight_bytes / 1024,
+        sram.ofmap_bytes / 1024
+    );
+    println!(
+        "imac: subarrays {}x{}, gain {}/sqrt(fan_in), neuron k={}",
+        imac.subarray_rows, imac.subarray_cols, imac.gain_num, imac.neuron.k
+    );
+    println!(
+        "devices: R_low {} kohm, R_high {} kohm (on/off {})",
+        dev.r_low / 1e3,
+        dev.r_high / 1e3,
+        dev.on_off()
+    );
+    Ok(())
+}

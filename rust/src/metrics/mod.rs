@@ -1,0 +1,112 @@
+//! Serving metrics: counters and latency histograms, lock-cheap and
+//! thread-shared.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::util::stats::percentile_sorted;
+
+/// Shared serving metrics (one instance per coordinator).
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests_enqueued: AtomicU64,
+    pub requests_completed: AtomicU64,
+    pub requests_rejected: AtomicU64,
+    pub batches_executed: AtomicU64,
+    pub batch_slots_used: AtomicU64,
+    pub batch_slots_padded: AtomicU64,
+    /// End-to-end latencies (µs). Mutex-guarded; appenders batch at batch
+    /// granularity so contention is negligible.
+    latencies_us: Mutex<Vec<u64>>,
+    /// Per-stage time (µs) totals.
+    pub conv_us_total: AtomicU64,
+    pub imac_us_total: AtomicU64,
+    pub queue_us_total: AtomicU64,
+}
+
+/// A read-only snapshot for reporting.
+#[derive(Clone, Debug, Default)]
+pub struct Snapshot {
+    pub enqueued: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub batches: u64,
+    pub mean_batch_fill: f64,
+    pub p50_latency_us: f64,
+    pub p95_latency_us: f64,
+    pub p99_latency_us: f64,
+    pub mean_latency_us: f64,
+    pub conv_us_total: u64,
+    pub imac_us_total: u64,
+    pub queue_us_total: u64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_latencies(&self, batch: &[Duration]) {
+        let mut g = self.latencies_us.lock().unwrap();
+        g.extend(batch.iter().map(|d| d.as_micros() as u64));
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        let mut lat: Vec<f64> = self
+            .latencies_us
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|&v| v as f64)
+            .collect();
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let batches = self.batches_executed.load(Ordering::Relaxed);
+        let used = self.batch_slots_used.load(Ordering::Relaxed);
+        let padded = self.batch_slots_padded.load(Ordering::Relaxed);
+        Snapshot {
+            enqueued: self.requests_enqueued.load(Ordering::Relaxed),
+            completed: self.requests_completed.load(Ordering::Relaxed),
+            rejected: self.requests_rejected.load(Ordering::Relaxed),
+            batches,
+            mean_batch_fill: if used + padded == 0 {
+                0.0
+            } else {
+                used as f64 / (used + padded) as f64
+            },
+            p50_latency_us: if lat.is_empty() { 0.0 } else { percentile_sorted(&lat, 50.0) },
+            p95_latency_us: if lat.is_empty() { 0.0 } else { percentile_sorted(&lat, 95.0) },
+            p99_latency_us: if lat.is_empty() { 0.0 } else { percentile_sorted(&lat, 99.0) },
+            mean_latency_us: if lat.is_empty() {
+                0.0
+            } else {
+                lat.iter().sum::<f64>() / lat.len() as f64
+            },
+            conv_us_total: self.conv_us_total.load(Ordering::Relaxed),
+            imac_us_total: self.imac_us_total.load(Ordering::Relaxed),
+            queue_us_total: self.queue_us_total.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_percentiles() {
+        let m = Metrics::new();
+        m.record_latencies(
+            &(1..=100).map(Duration::from_micros).collect::<Vec<_>>(),
+        );
+        m.requests_completed.store(100, Ordering::Relaxed);
+        m.batches_executed.store(10, Ordering::Relaxed);
+        m.batch_slots_used.store(90, Ordering::Relaxed);
+        m.batch_slots_padded.store(10, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.p50_latency_us, 50.0);
+        assert_eq!(s.p95_latency_us, 95.0);
+        assert_eq!(s.completed, 100);
+        assert!((s.mean_batch_fill - 0.9).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,244 @@
+//! The deployed-model inference engine: FP32 conv stack (the systolic
+//! array's numerics) + sign bridge + IMAC analog FC section.
+//!
+//! Weights come from `artifacts/weights_lenet.json`, written by the Python
+//! two-step trainer: FP32 conv weights/biases and hard-ternary FC weights.
+//! The FC section executes in the [`crate::imac::ImacFabric`] — i.e. the
+//! request path runs through the same analog model the paper's hardware
+//! implements, with configurable non-idealities.
+
+use anyhow::{bail, Context, Result};
+
+use crate::arch::bridge::sign_level;
+use crate::imac::{AdcConfig, ImacConfig, ImacFabric};
+use crate::util::json::Json;
+
+use super::ops;
+use super::tensor::Tensor;
+
+/// One conv-section op.
+#[derive(Clone, Debug)]
+pub enum ConvOp {
+    Conv { k: usize, cout: usize, stride: usize, pad: usize, relu: bool, w: Vec<f32>, b: Vec<f32> },
+    DwConv { k: usize, stride: usize, pad: usize, relu: bool, w: Vec<f32>, b: Vec<f32> },
+    MaxPool { k: usize, stride: usize },
+    AvgPool { k: usize, stride: usize },
+    Gap,
+}
+
+/// A deployed mixed-precision model.
+pub struct DeployedModel {
+    pub row: String,
+    pub dataset: String,
+    pub conv_ops: Vec<ConvOp>,
+    pub fabric: ImacFabric,
+    /// Accuracies recorded at training time (for reports).
+    pub acc_fp32: f64,
+    pub acc_ternary: f64,
+    pub input_hwc: (usize, usize, usize),
+}
+
+impl DeployedModel {
+    /// Load from the trainer's weights JSON.
+    pub fn load(path: &str, imac: &ImacConfig, adc: AdcConfig, seed: u64) -> Result<Self> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        let doc = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        Self::from_json(&doc, imac, adc, seed)
+    }
+
+    pub fn from_json(doc: &Json, imac: &ImacConfig, adc: AdcConfig, seed: u64) -> Result<Self> {
+        let dataset = doc.get("dataset").as_str().unwrap_or("mnist").to_string();
+        let input_hwc = match dataset.as_str() {
+            "mnist" => (28, 28, 1),
+            "cifar10" | "cifar100" => (32, 32, 3),
+            other => bail!("unknown dataset {other}"),
+        };
+        let mut conv_ops = Vec::new();
+        for layer in doc.get("conv_layers").as_arr().context("conv_layers")? {
+            let kind = layer.get("kind").as_str().context("kind")?;
+            match kind {
+                "conv" | "dwconv" => {
+                    let k = layer.get("k").as_usize().context("k")?;
+                    let stride = layer.get("stride").as_usize().context("stride")?;
+                    let pad = layer.get("pad").as_usize().unwrap_or(0);
+                    let relu = layer.get("relu").as_bool().unwrap_or(false);
+                    let w = layer.get("w").as_f32_vec().context("w")?;
+                    let b = layer.get("b").as_f32_vec().context("b")?;
+                    if kind == "conv" {
+                        let cout = layer.get("cout").as_usize().context("cout")?;
+                        conv_ops.push(ConvOp::Conv { k, cout, stride, pad, relu, w, b });
+                    } else {
+                        conv_ops.push(ConvOp::DwConv { k, stride, pad, relu, w, b });
+                    }
+                }
+                "maxpool" => conv_ops.push(ConvOp::MaxPool {
+                    k: layer.get("k").as_usize().context("k")?,
+                    stride: layer.get("stride").as_usize().context("stride")?,
+                }),
+                "avgpool" => conv_ops.push(ConvOp::AvgPool {
+                    k: layer.get("k").as_usize().context("k")?,
+                    stride: layer.get("stride").as_usize().context("stride")?,
+                }),
+                "gap" => conv_ops.push(ConvOp::Gap),
+                other => bail!("unknown conv op {other}"),
+            }
+        }
+        let mut fc_specs = Vec::new();
+        for layer in doc.get("fc_layers").as_arr().context("fc_layers")? {
+            let n_in = layer.get("n_in").as_usize().context("n_in")?;
+            let n_out = layer.get("n_out").as_usize().context("n_out")?;
+            let wt = layer.get("w_ternary").as_arr().context("w_ternary")?;
+            if wt.len() != n_in * n_out {
+                bail!("fc layer weight count {} != {n_in}x{n_out}", wt.len());
+            }
+            let w: Vec<i8> = wt
+                .iter()
+                .map(|v| v.as_f64().map(|f| f as i8).context("ternary value"))
+                .collect::<Result<_>>()?;
+            if w.iter().any(|&x| !(-1..=1).contains(&x)) {
+                bail!("non-ternary FC weight");
+            }
+            fc_specs.push((w, n_in, n_out));
+        }
+        if fc_specs.is_empty() {
+            bail!("model has no FC layers");
+        }
+        let fabric = ImacFabric::build(&fc_specs, imac, adc, seed);
+        Ok(Self {
+            row: doc.get("row").as_str().unwrap_or("?").to_string(),
+            dataset,
+            conv_ops,
+            fabric,
+            acc_fp32: doc.get("acc_fp32").as_f64().unwrap_or(f64::NAN),
+            acc_ternary: doc.get("acc_ternary").as_f64().unwrap_or(f64::NAN),
+            input_hwc,
+        })
+    }
+
+    /// The conv stack: image -> raw bridge features (flattened HWC).
+    pub fn conv_features(&self, img: &Tensor) -> Vec<f32> {
+        let mut x = img.clone();
+        for op in &self.conv_ops {
+            x = match op {
+                ConvOp::Conv { k, cout, stride, pad, relu, w, b } => {
+                    let mut y = ops::conv2d(&x, w, b, *k, *cout, *stride, *pad);
+                    if *relu {
+                        ops::relu(&mut y);
+                    }
+                    y
+                }
+                ConvOp::DwConv { k, stride, pad, relu, w, b } => {
+                    let mut y = ops::dwconv2d(&x, w, b, *k, *stride, *pad);
+                    if *relu {
+                        ops::relu(&mut y);
+                    }
+                    y
+                }
+                ConvOp::MaxPool { k, stride } => ops::maxpool(&x, *k, *stride),
+                ConvOp::AvgPool { k, stride } => ops::avgpool(&x, *k, *stride),
+                ConvOp::Gap => ops::global_avgpool(&x),
+            };
+        }
+        x.flatten()
+    }
+
+    /// The bridge: features -> ±1 levels.
+    pub fn bridge(&self, feats: &[f32]) -> Vec<f32> {
+        feats.iter().map(|&v| sign_level(v)).collect()
+    }
+
+    /// Full inference: image -> class scores (final sigmoid/ADC outputs).
+    pub fn infer(&self, img: &Tensor) -> Vec<f32> {
+        let feats = self.conv_features(img);
+        let signs = self.bridge(&feats);
+        self.fabric.forward(&signs)
+    }
+
+    /// FC-only path from precomputed bridge features (used when the conv
+    /// section ran on the PJRT executable).
+    pub fn infer_from_features(&self, feats: &[f32]) -> Vec<f32> {
+        self.fabric.forward(&self.bridge(feats))
+    }
+
+    pub fn predict(&self, img: &Tensor) -> usize {
+        crate::util::stats::argmax(&self.infer(img))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A tiny hand-built model document: 1 conv (identity-ish) + 1 FC.
+    fn tiny_doc() -> Json {
+        // input 28x28x1 (mnist); conv 1x1x1x1 w=1 b=0 no relu; maxpool 28 ->
+        // 1x1x1; fc 1 -> 2 with weights [+1, -1].
+        Json::parse(
+            r#"{
+              "row": "tiny", "dataset": "mnist",
+              "acc_fp32": 1.0, "acc_ternary": 1.0,
+              "conv_layers": [
+                {"kind": "conv", "k": 1, "cout": 1, "stride": 1, "pad": 0,
+                 "relu": false, "w": [1.0], "w_shape": [1,1,1,1], "b": [0.0]},
+                {"kind": "maxpool", "k": 28, "stride": 28}
+              ],
+              "fc_layers": [
+                {"n_in": 1, "n_out": 2, "w_ternary": [1, -1]}
+              ]
+            }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn loads_and_infers() {
+        let m = DeployedModel::from_json(
+            &tiny_doc(),
+            &ImacConfig::default(),
+            AdcConfig { bits: 0, full_scale: 1.0 },
+            0,
+        )
+        .unwrap();
+        let img = Tensor::from_vec(28, 28, 1, vec![0.5; 28 * 28]);
+        let out = m.infer(&img);
+        // features = max over image = 0.5 >= 0 -> +1; gain = gain_num/sqrt(1);
+        // outputs = sigmoid(+gain), sigmoid(-gain).
+        let g = ImacConfig::default().amp_gain(1) as f32;
+        let s = |z: f32| 1.0 / (1.0 + (-z).exp());
+        assert!((out[0] - s(g)).abs() < 1e-6);
+        assert!((out[1] - s(-g)).abs() < 1e-6);
+        assert_eq!(m.predict(&img), 0);
+    }
+
+    #[test]
+    fn bridge_and_feature_split_consistent() {
+        let m = DeployedModel::from_json(
+            &tiny_doc(),
+            &ImacConfig::default(),
+            AdcConfig { bits: 0, full_scale: 1.0 },
+            0,
+        )
+        .unwrap();
+        let img = Tensor::from_vec(28, 28, 1, vec![-0.25; 28 * 28]);
+        let feats = m.conv_features(&img);
+        assert_eq!(m.infer_from_features(&feats), m.infer(&img));
+    }
+
+    #[test]
+    fn rejects_non_ternary() {
+        let mut doc = tiny_doc();
+        if let Json::Obj(o) = &mut doc {
+            o.insert(
+                "fc_layers".into(),
+                Json::parse(r#"[{"n_in":1,"n_out":1,"w_ternary":[2]}]"#).unwrap(),
+            );
+        }
+        let r = DeployedModel::from_json(
+            &doc,
+            &ImacConfig::default(),
+            AdcConfig::default(),
+            0,
+        );
+        assert!(r.is_err());
+    }
+}

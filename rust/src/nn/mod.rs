@@ -1,0 +1,10 @@
+//! Functional NN inference engine: NHWC tensor ops (the systolic array's
+//! numerics oracle) and the deployed mixed-precision model (FP32 conv +
+//! sign bridge + IMAC analog FC).
+
+pub mod engine;
+pub mod ops;
+pub mod tensor;
+
+pub use engine::{ConvOp, DeployedModel};
+pub use tensor::Tensor;

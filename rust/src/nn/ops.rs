@@ -1,0 +1,213 @@
+//! Functional NN ops (NHWC, f32) matching JAX semantics exactly:
+//! `lax.conv_general_dilated` with HWIO weights, VALID-window pooling.
+//! These are the oracle for the PJRT artifacts and the request-path conv
+//! fallback when artifacts are absent.
+
+use super::tensor::Tensor;
+
+/// Standard conv. Weights HWIO: `w[ky][kx][cin][cout]` flattened; bias per
+/// cout. Symmetric zero padding `pad`, stride `stride`.
+pub fn conv2d(
+    x: &Tensor,
+    w: &[f32],
+    b: &[f32],
+    k: usize,
+    cout: usize,
+    stride: usize,
+    pad: usize,
+) -> Tensor {
+    let cin = x.c;
+    assert_eq!(w.len(), k * k * cin * cout, "weight len");
+    assert_eq!(b.len(), cout, "bias len");
+    let oh = (x.h + 2 * pad - k) / stride + 1;
+    let ow = (x.w + 2 * pad - k) / stride + 1;
+    let mut out = Tensor::zeros(oh, ow, cout);
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let base = (oy * ow + ox) * cout;
+            out.data[base..base + cout].copy_from_slice(b);
+            for ky in 0..k {
+                let iy = (oy * stride + ky) as isize - pad as isize;
+                if iy < 0 || iy as usize >= x.h {
+                    continue;
+                }
+                for kx in 0..k {
+                    let ix = (ox * stride + kx) as isize - pad as isize;
+                    if ix < 0 || ix as usize >= x.w {
+                        continue;
+                    }
+                    let xin = &x.data[((iy as usize) * x.w + ix as usize) * cin..][..cin];
+                    let wbase = ((ky * k + kx) * cin) * cout;
+                    for (ci, &xv) in xin.iter().enumerate() {
+                        if xv == 0.0 {
+                            continue;
+                        }
+                        let wrow = &w[wbase + ci * cout..][..cout];
+                        let orow = &mut out.data[base..base + cout];
+                        for (o, &wv) in orow.iter_mut().zip(wrow) {
+                            *o += xv * wv;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Depthwise conv (channel multiplier 1). Weights HWIO with I=1:
+/// `w[ky][kx][0][c]`.
+pub fn dwconv2d(x: &Tensor, w: &[f32], b: &[f32], k: usize, stride: usize, pad: usize) -> Tensor {
+    let c = x.c;
+    assert_eq!(w.len(), k * k * c);
+    assert_eq!(b.len(), c);
+    let oh = (x.h + 2 * pad - k) / stride + 1;
+    let ow = (x.w + 2 * pad - k) / stride + 1;
+    let mut out = Tensor::zeros(oh, ow, c);
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let base = (oy * ow + ox) * c;
+            out.data[base..base + c].copy_from_slice(b);
+            for ky in 0..k {
+                let iy = (oy * stride + ky) as isize - pad as isize;
+                if iy < 0 || iy as usize >= x.h {
+                    continue;
+                }
+                for kx in 0..k {
+                    let ix = (ox * stride + kx) as isize - pad as isize;
+                    if ix < 0 || ix as usize >= x.w {
+                        continue;
+                    }
+                    let xin = &x.data[((iy as usize) * x.w + ix as usize) * c..][..c];
+                    let wrow = &w[(ky * k + kx) * c..][..c];
+                    let orow = &mut out.data[base..base + c];
+                    for ((o, &xv), &wv) in orow.iter_mut().zip(xin).zip(wrow) {
+                        *o += xv * wv;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Max pooling, VALID windows (floor division), matching
+/// `lax.reduce_window(max)`.
+pub fn maxpool(x: &Tensor, k: usize, stride: usize) -> Tensor {
+    pool(x, k, stride, true)
+}
+
+/// Average pooling, VALID windows.
+pub fn avgpool(x: &Tensor, k: usize, stride: usize) -> Tensor {
+    pool(x, k, stride, false)
+}
+
+fn pool(x: &Tensor, k: usize, stride: usize, max: bool) -> Tensor {
+    let oh = (x.h - k) / stride + 1;
+    let ow = (x.w - k) / stride + 1;
+    let mut out = Tensor::zeros(oh, ow, x.c);
+    for oy in 0..oh {
+        for ox in 0..ow {
+            for c in 0..x.c {
+                let mut acc = if max { f32::NEG_INFINITY } else { 0.0 };
+                for ky in 0..k {
+                    for kx in 0..k {
+                        let v = x.at(oy * stride + ky, ox * stride + kx, c);
+                        if max {
+                            acc = acc.max(v);
+                        } else {
+                            acc += v;
+                        }
+                    }
+                }
+                *out.at_mut(oy, ox, c) = if max { acc } else { acc / (k * k) as f32 };
+            }
+        }
+    }
+    out
+}
+
+/// Global average pool to 1x1xC.
+pub fn global_avgpool(x: &Tensor) -> Tensor {
+    let mut out = Tensor::zeros(1, 1, x.c);
+    let n = (x.h * x.w) as f32;
+    for y in 0..x.h {
+        for xx in 0..x.w {
+            for c in 0..x.c {
+                out.data[c] += x.at(y, xx, c);
+            }
+        }
+    }
+    for v in out.data.iter_mut() {
+        *v /= n;
+    }
+    out
+}
+
+/// In-place ReLU.
+pub fn relu(x: &mut Tensor) {
+    for v in x.data.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_identity_kernel() {
+        // 1x1 conv with identity weights reproduces the input.
+        let x = Tensor::from_vec(2, 2, 2, vec![1., 2., 3., 4., 5., 6., 7., 8.]);
+        // w[0][0][cin][cout] = I
+        let w = vec![1., 0., 0., 1.];
+        let out = conv2d(&x, &w, &[0., 0.], 1, 2, 1, 0);
+        assert_eq!(out.data, x.data);
+    }
+
+    #[test]
+    fn conv_known_value() {
+        // 2x2 input, 2x2 kernel of ones, single channel: sum of all = 10.
+        let x = Tensor::from_vec(2, 2, 1, vec![1., 2., 3., 4.]);
+        let w = vec![1.; 4];
+        let out = conv2d(&x, &w, &[0.5], 2, 1, 1, 0);
+        assert_eq!(out.h, 1);
+        assert_eq!(out.data, vec![10.5]);
+    }
+
+    #[test]
+    fn conv_padding_and_stride() {
+        // 3x3 ones input, 3x3 ones kernel, pad 1 stride 2 -> 2x2 outputs:
+        // corners of padded conv = 4 each (2x2 valid overlap).
+        let x = Tensor::from_vec(3, 3, 1, vec![1.; 9]);
+        let w = vec![1.; 9];
+        let out = conv2d(&x, &w, &[0.], 3, 1, 2, 1);
+        assert_eq!((out.h, out.w), (2, 2));
+        assert_eq!(out.data, vec![4., 4., 4., 4.]);
+    }
+
+    #[test]
+    fn dwconv_per_channel() {
+        // 2 channels, 1x1 depthwise kernel scaling ch0 by 2, ch1 by 3.
+        let x = Tensor::from_vec(1, 2, 2, vec![1., 10., 2., 20.]);
+        let out = dwconv2d(&x, &[2., 3.], &[0., 0.], 1, 1, 0);
+        assert_eq!(out.data, vec![2., 30., 4., 60.]);
+    }
+
+    #[test]
+    fn pools() {
+        let x = Tensor::from_vec(2, 2, 1, vec![1., 2., 3., 4.]);
+        assert_eq!(maxpool(&x, 2, 2).data, vec![4.]);
+        assert_eq!(avgpool(&x, 2, 2).data, vec![2.5]);
+        assert_eq!(global_avgpool(&x).data, vec![2.5]);
+    }
+
+    #[test]
+    fn relu_clamps() {
+        let mut x = Tensor::from_vec(1, 1, 3, vec![-1., 0., 2.]);
+        relu(&mut x);
+        assert_eq!(x.data, vec![0., 0., 2.]);
+    }
+}

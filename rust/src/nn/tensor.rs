@@ -1,0 +1,60 @@
+//! Minimal NHWC tensor for the functional inference engine.
+
+/// A dense f32 tensor, NHWC with N folded out (single image per call on the
+/// engine's inner path; batching happens at the coordinator level).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(h: usize, w: usize, c: usize) -> Self {
+        Self { h, w, c, data: vec![0.0; h * w * c] }
+    }
+
+    pub fn from_vec(h: usize, w: usize, c: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), h * w * c, "shape/data mismatch");
+        Self { h, w, c, data }
+    }
+
+    #[inline]
+    pub fn at(&self, y: usize, x: usize, ch: usize) -> f32 {
+        self.data[(y * self.w + x) * self.c + ch]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, y: usize, x: usize, ch: usize) -> &mut f32 {
+        &mut self.data[(y * self.w + x) * self.c + ch]
+    }
+
+    pub fn elems(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Flatten in HWC order (matches `jnp.reshape(B, -1)` on NHWC).
+    pub fn flatten(self) -> Vec<f32> {
+        self.data
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing_is_hwc() {
+        let mut t = Tensor::zeros(2, 3, 4);
+        *t.at_mut(1, 2, 3) = 7.0;
+        assert_eq!(t.data[(1 * 3 + 2) * 4 + 3], 7.0);
+        assert_eq!(t.at(1, 2, 3), 7.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::from_vec(2, 2, 2, vec![0.0; 7]);
+    }
+}

@@ -1,0 +1,124 @@
+//! Quantization library: the TWN ternarization and sign binarization used
+//! across the stack, mirrored from `python/compile/quant.py` so rust-side
+//! tooling (weight auditing, re-quantization of FP checkpoints, tests) can
+//! reproduce the trainer's deployment arithmetic bit-for-bit.
+
+use crate::arch::bridge::sign_level;
+
+/// TWN per-tensor threshold: `Δ = 0.7 · mean(|w|)` (Li & Liu 2016), the
+/// rule the paper's step-2 forward pass uses.
+pub fn ternary_threshold(w: &[f32]) -> f32 {
+    if w.is_empty() {
+        return 0.0;
+    }
+    0.7 * w.iter().map(|v| v.abs()).sum::<f32>() / w.len() as f32
+}
+
+/// Hard ternarization to {-1, 0, +1}.
+pub fn ternarize(w: &[f32]) -> Vec<i8> {
+    let delta = ternary_threshold(w);
+    w.iter()
+        .map(|&v| {
+            if v > delta {
+                1
+            } else if v < -delta {
+                -1
+            } else {
+                0
+            }
+        })
+        .collect()
+}
+
+/// Sign binarization with the bridge convention (x ≥ 0 → +1).
+pub fn binarize_signs(x: &[f32]) -> Vec<i8> {
+    x.iter().map(|&v| if sign_level(v) > 0.0 { 1i8 } else { -1 }).collect()
+}
+
+/// Pack ternary weights 4-per-byte (2 bits each; 0b00=0, 0b01=+1, 0b10=−1)
+/// — the RRAM storage layout behind Table 2's 2-bit accounting.
+pub fn pack_ternary(w: &[i8]) -> Vec<u8> {
+    let mut out = vec![0u8; (w.len() + 3) / 4];
+    for (i, &v) in w.iter().enumerate() {
+        let code: u8 = match v {
+            0 => 0b00,
+            1 => 0b01,
+            -1 => 0b10,
+            _ => panic!("non-ternary {v}"),
+        };
+        out[i / 4] |= code << ((i % 4) * 2);
+    }
+    out
+}
+
+/// Inverse of [`pack_ternary`].
+pub fn unpack_ternary(bytes: &[u8], n: usize) -> Vec<i8> {
+    assert!(n <= bytes.len() * 4);
+    (0..n)
+        .map(|i| match (bytes[i / 4] >> ((i % 4) * 2)) & 0b11 {
+            0b00 => 0,
+            0b01 => 1,
+            0b10 => -1,
+            code => panic!("invalid ternary code {code:#b}"),
+        })
+        .collect()
+}
+
+/// Sparsity (fraction of zeros) of a ternary tensor — reported by the
+/// weight-audit tooling; TWN typically lands near ~45–55%.
+pub fn sparsity(w: &[i8]) -> f64 {
+    if w.is_empty() {
+        return 0.0;
+    }
+    w.iter().filter(|&&v| v == 0).count() as f64 / w.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn threshold_and_domain() {
+        let w = [3.0f32, -3.0, 0.01, -0.01];
+        // mean|w| = 1.505, delta = 1.0535
+        let t = ternarize(&w);
+        assert_eq!(t, vec![1, -1, 0, 0]);
+    }
+
+    #[test]
+    fn matches_python_rule_on_uniform() {
+        // For |w| uniform, delta = 0.7*mean keeps ~30% zeros.
+        forall(30, |g| {
+            let w = g.vec_f32(500, -1.0, 1.0);
+            let t = ternarize(&w);
+            assert!(t.iter().all(|v| [-1, 0, 1].contains(v)));
+            let s = sparsity(&t);
+            assert!(s > 0.15 && s < 0.55, "sparsity {s}");
+        });
+    }
+
+    #[test]
+    fn pack_roundtrip() {
+        forall(100, |g| {
+            let n = g.usize_in(0, 130);
+            let w = g.vec_ternary(n);
+            let packed = pack_ternary(&w);
+            assert_eq!(packed.len(), (n + 3) / 4);
+            assert_eq!(unpack_ternary(&packed, n), w);
+        });
+    }
+
+    #[test]
+    fn packed_bytes_match_table2_accounting() {
+        // 1024x1024 + 1024x10 head -> 264,704 bytes = 0.2647 decimal MB.
+        let n = 1024 * 1024 + 1024 * 10;
+        let w = vec![0i8; n];
+        assert_eq!(pack_ternary(&w).len() as u64, (2 * n as u64 + 7) / 8);
+    }
+
+    #[test]
+    fn signs_follow_bridge() {
+        assert_eq!(binarize_signs(&[0.0, -0.0, 2.0, -2.0]), vec![1, 1, 1, -1]);
+    }
+}

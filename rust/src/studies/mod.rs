@@ -1,0 +1,128 @@
+//! Behavioral studies of the IMAC analog fabric — the Figure-1-class
+//! characterization series (neuron VTC, crossbar non-ideality impact).
+
+use crate::imac::{
+    fabric::{AdcConfig, ImacConfig, ImacFabric},
+    neuron::{vtc_sweep, Neuron, NeuronConfig},
+    CrossbarConfig, DeviceConfig,
+};
+use crate::util::rng::Xoshiro256;
+use crate::util::stats::{argmax, Summary};
+use crate::util::table::{Align, Table};
+
+/// Result of one non-ideality configuration.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NoiseStudyPoint {
+    pub sigma: f64,
+    pub alpha: f64,
+    pub mean_abs_dev: f64,
+    pub argmax_flip_rate: f64,
+}
+
+/// Compare an ideal 256→128→10 IMAC head against a noisy instance over
+/// random sign inputs. Returns per-(sigma, alpha) deviation statistics.
+pub fn noise_sweep(
+    sigmas: &[f64],
+    alphas: &[f64],
+    trials: usize,
+    seed: u64,
+) -> Vec<NoiseStudyPoint> {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let (n0, n1, n2) = (256usize, 128usize, 10usize);
+    let w1: Vec<i8> = (0..n0 * n1).map(|_| (rng.next_below(3) as i8) - 1).collect();
+    let w2: Vec<i8> = (0..n1 * n2).map(|_| (rng.next_below(3) as i8) - 1).collect();
+    let layers = vec![(w1, n0, n1), (w2, n1, n2)];
+    let adc = AdcConfig { bits: 0, full_scale: 1.0 };
+    let ideal = ImacFabric::build(&layers, &ImacConfig::default(), adc, 7);
+
+    let inputs: Vec<Vec<f32>> = (0..trials)
+        .map(|_| (0..n0).map(|_| if rng.next_u64() & 1 == 1 { 1.0 } else { -1.0 }).collect())
+        .collect();
+    let ideal_outs: Vec<Vec<f32>> = inputs.iter().map(|x| ideal.forward(x)).collect();
+
+    let mut points = Vec::new();
+    for &sigma in sigmas {
+        for &alpha in alphas {
+            let cfg = ImacConfig {
+                crossbar: CrossbarConfig {
+                    device: DeviceConfig { sigma, ..Default::default() },
+                    wire_alpha: alpha,
+                    amp_offset_sigma: 0.0,
+                },
+                ..ImacConfig::default()
+            };
+            let noisy = ImacFabric::build(&layers, &cfg, adc, 7);
+            let mut dev = Summary::new();
+            let mut flips = 0usize;
+            for (x, want) in inputs.iter().zip(&ideal_outs) {
+                let got = noisy.forward(x);
+                for (g, w) in got.iter().zip(want) {
+                    dev.add((g - w).abs() as f64);
+                }
+                if argmax(&got) != argmax(want) {
+                    flips += 1;
+                }
+            }
+            points.push(NoiseStudyPoint {
+                sigma,
+                alpha,
+                mean_abs_dev: dev.mean(),
+                argmax_flip_rate: flips as f64 / trials as f64,
+            });
+        }
+    }
+    points
+}
+
+/// CLI entry: print the VTC series and the noise sweep table.
+pub fn imac_noise_study(sigma_max: f64, alpha_max: f64, trials: usize) {
+    // Figure-1(b)-style neuron characterization.
+    let neuron = Neuron::ideal(&NeuronConfig::default());
+    println!("analog sigmoid VTC (x, y):");
+    for (x, y) in vtc_sweep(&neuron, -6.0, 6.0, 13) {
+        println!("  {x:+.1}  {y:.4}");
+    }
+
+    let sigmas: Vec<f64> = (0..=4).map(|i| sigma_max * i as f64 / 4.0).collect();
+    let alphas: Vec<f64> = (0..=2).map(|i| alpha_max * i as f64 / 2.0).collect();
+    let points = noise_sweep(&sigmas, &alphas, trials, 11);
+    let mut t = Table::new(&["sigma", "alpha", "mean |dev|", "argmax flips"])
+        .with_title("IMAC non-ideality sweep (256-128-10 ternary head)")
+        .with_aligns(&[Align::Right, Align::Right, Align::Right, Align::Right]);
+    for p in &points {
+        t.row(vec![
+            format!("{:.3}", p.sigma),
+            format!("{:.3}", p.alpha),
+            format!("{:.5}", p.mean_abs_dev),
+            format!("{:.1}%", p.argmax_flip_rate * 100.0),
+        ]);
+    }
+    println!("{}", t.to_ascii());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_noise_is_exact() {
+        let pts = noise_sweep(&[0.0], &[0.0], 4, 1);
+        assert_eq!(pts.len(), 1);
+        assert_eq!(pts[0].mean_abs_dev, 0.0);
+        assert_eq!(pts[0].argmax_flip_rate, 0.0);
+    }
+
+    #[test]
+    fn deviation_grows_with_sigma() {
+        let pts = noise_sweep(&[0.0, 0.05, 0.3], &[0.0], 6, 2);
+        assert!(pts[0].mean_abs_dev <= pts[1].mean_abs_dev);
+        assert!(pts[1].mean_abs_dev < pts[2].mean_abs_dev);
+    }
+
+    #[test]
+    fn ir_drop_alone_causes_deviation() {
+        let pts = noise_sweep(&[0.0], &[0.0, 0.3], 4, 3);
+        assert_eq!(pts[0].mean_abs_dev, 0.0);
+        assert!(pts[1].mean_abs_dev > 0.0);
+    }
+}

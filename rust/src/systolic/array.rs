@@ -1,0 +1,244 @@
+//! Register-level output-stationary systolic array stepper.
+//!
+//! This simulates the paper's Figure 2(a) array literally: weights enter
+//! from the west edge (skewed by row), IFMap values from the north edge
+//! (skewed by column), each PE multiply-accumulates the operands meeting in
+//! it each cycle, and results drain south after streaming. It serves three
+//! purposes:
+//!
+//! 1. **Validation** — the analytic model's per-fold cycle expression is
+//!    asserted against this stepper in tests;
+//! 2. **Figures** — it emits a per-cycle active-PE occupancy trace (the
+//!    diagonal wavefront of Figure 2) used by `examples/dataflow_ablation`;
+//! 3. **Functional truth** — it computes the actual GEMM product, so the
+//!    dataflow wiring is provably correct, and exposes the OFMap **sign
+//!    bits held in the PE registers** that the TPU→IMAC bridge taps.
+//!
+//! Operand timing: element `a[i][k]` is injected into row `i` at cycle
+//! `i + k`; element `b[k][j]` into column `j` at cycle `j + k`. Travelling
+//! one hop per cycle, both reach PE `(i,j)` at cycle `i + j + k`, where the
+//! MAC `acc += a[i][k] * b[k][j]` fires. The last MAC lands at
+//! `(r-1)+(c-1)+(K-1)`; the drain shifts each column's accumulators south,
+//! `r` more cycles. Total: `r + c + K - 2` to final MAC (+`r` drain), i.e.
+//! the analytic `2r + c + K - 2` per fold.
+
+/// One processing element: the stationary accumulator plus the pass-through
+/// registers for the travelling operands.
+#[derive(Clone, Copy, Debug, Default)]
+struct Pe {
+    acc: f32,
+    a_reg: Option<f32>,
+    b_reg: Option<f32>,
+    /// MACs this PE performed (for occupancy accounting).
+    macs: u64,
+}
+
+/// Result of stepping one fold.
+#[derive(Clone, Debug)]
+pub struct FoldRun {
+    /// Cycles until the last MAC completed (fill + stream).
+    pub cycles_to_last_mac: u64,
+    /// Total cycles including the drain phase.
+    pub cycles_with_drain: u64,
+    /// outputs[i][j] = Σ_k a[i][k]·b[k][j]
+    pub outputs: Vec<Vec<f32>>,
+    /// Sign bits as the bridge sees them: `true` ⇔ OFMap ≥ 0 (the paper's
+    /// inverter on the sign bit maps non-negative to logic '1').
+    pub sign_bits: Vec<Vec<bool>>,
+    /// occupancy[t] = number of PEs that fired a MAC in cycle t.
+    pub occupancy: Vec<u32>,
+    /// Total MACs performed (must equal r·c·K).
+    pub total_macs: u64,
+}
+
+/// Step an `r × c` OS fold with reduction length `k`, given operand tiles
+/// `a` (`r×k`, IFMap rows) and `b` (`k×c`, weight columns).
+pub fn run_os_fold(a: &[Vec<f32>], b: &[Vec<f32>]) -> FoldRun {
+    let r = a.len();
+    assert!(r > 0);
+    let k = a[0].len();
+    assert!(a.iter().all(|row| row.len() == k), "ragged A");
+    assert_eq!(b.len(), k, "A cols != B rows");
+    let c = b[0].len();
+    assert!(b.iter().all(|row| row.len() == c), "ragged B");
+
+    let mut grid = vec![vec![Pe::default(); c]; r];
+    let mut occupancy: Vec<u32> = Vec::new();
+    let mut total_macs: u64 = 0;
+    let mut last_mac_cycle: u64 = 0;
+
+    // Upper bound on interesting cycles: last operand injected at
+    // (r-1)+(k-1) or (c-1)+(k-1); last MAC at (r-1)+(c-1)+(k-1).
+    let horizon = r + c + k; // strictly past the last MAC cycle index
+    for t in 0..horizon {
+        // Values entering the edges this cycle.
+        // Row i receives a[i][t - i] from the west iff 0 <= t-i < k.
+        // Column j receives b[t - j][j] from the north iff 0 <= t-j < k.
+        //
+        // Propagation: a-regs shift east, b-regs shift south, one hop per
+        // cycle. Evaluate from the far corner to avoid overwriting values
+        // still to be consumed this cycle.
+        let mut fired: u32 = 0;
+        // Shift pass: move registers (east/south) starting from the corner.
+        for i in (0..r).rev() {
+            for j in (0..c).rev() {
+                let a_in = if j == 0 {
+                    // west edge of row i
+                    t.checked_sub(i).filter(|&kk| kk < k).map(|kk| a[i][kk])
+                } else {
+                    grid[i][j - 1].a_reg
+                };
+                let b_in = if i == 0 {
+                    // north edge of column j
+                    t.checked_sub(j).filter(|&kk| kk < k).map(|kk| b[kk][j])
+                } else {
+                    grid[i - 1][j].b_reg
+                };
+                grid[i][j].a_reg = a_in;
+                grid[i][j].b_reg = b_in;
+            }
+        }
+        // MAC pass: every PE with both operands present fires.
+        for row in grid.iter_mut() {
+            for pe in row.iter_mut() {
+                if let (Some(av), Some(bv)) = (pe.a_reg, pe.b_reg) {
+                    pe.acc += av * bv;
+                    pe.macs += 1;
+                    fired += 1;
+                }
+            }
+        }
+        occupancy.push(fired);
+        if fired > 0 {
+            last_mac_cycle = t as u64;
+            total_macs += fired as u64;
+        }
+    }
+
+    let outputs: Vec<Vec<f32>> =
+        grid.iter().map(|row| row.iter().map(|pe| pe.acc).collect()).collect();
+    let sign_bits: Vec<Vec<bool>> =
+        outputs.iter().map(|row| row.iter().map(|&v| v >= 0.0).collect()).collect();
+
+    // Trim trailing zero-occupancy cycles from the trace.
+    while occupancy.last() == Some(&0) {
+        occupancy.pop();
+    }
+
+    FoldRun {
+        cycles_to_last_mac: last_mac_cycle + 1,
+        cycles_with_drain: last_mac_cycle + 1 + r as u64,
+        outputs,
+        sign_bits,
+        occupancy,
+        total_macs,
+    }
+}
+
+/// Reference matmul for validation.
+pub fn naive_matmul(a: &[Vec<f32>], b: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    let r = a.len();
+    let k = a[0].len();
+    let c = b[0].len();
+    let mut out = vec![vec![0.0f32; c]; r];
+    for i in 0..r {
+        for j in 0..c {
+            let mut s = 0.0f32;
+            for t in 0..k {
+                s += a[i][t] * b[t][j];
+            }
+            out[i][j] = s;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall, Gen};
+
+    fn rand_mat(g: &mut Gen, r: usize, c: usize) -> Vec<Vec<f32>> {
+        (0..r).map(|_| g.vec_f32(c, -2.0, 2.0)).collect()
+    }
+
+    #[test]
+    fn computes_the_gemm() {
+        forall(40, |g| {
+            let r = g.usize_in(1, 8);
+            let k = g.usize_in(1, 10);
+            let c = g.usize_in(1, 8);
+            let a = rand_mat(g, r, k);
+            let b = rand_mat(g, k, c);
+            let run = run_os_fold(&a, &b);
+            let want = naive_matmul(&a, &b);
+            for i in 0..r {
+                for j in 0..c {
+                    assert!(
+                        (run.outputs[i][j] - want[i][j]).abs() < 1e-4,
+                        "({i},{j}): {} vs {}",
+                        run.outputs[i][j],
+                        want[i][j]
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn cycle_count_matches_analytic_formula() {
+        forall(40, |g| {
+            let r = g.usize_in(1, 12);
+            let k = g.usize_in(1, 16);
+            let c = g.usize_in(1, 12);
+            let a = rand_mat(g, r, k);
+            let b = rand_mat(g, k, c);
+            let run = run_os_fold(&a, &b);
+            // Last MAC at (r-1)+(c-1)+(k-1) => count = r+c+k-2.
+            assert_eq!(run.cycles_to_last_mac, (r + c + k - 2) as u64, "r={r} c={c} k={k}");
+            assert_eq!(run.cycles_with_drain, (2 * r + c + k - 2) as u64);
+            assert_eq!(run.total_macs, (r * c * k) as u64);
+        });
+    }
+
+    #[test]
+    fn wavefront_occupancy_shape() {
+        // 4x4, K=8: occupancy ramps up along the diagonal wavefront, holds,
+        // then ramps down; peak = full array.
+        let a = vec![vec![1.0f32; 8]; 4];
+        let b = vec![vec![1.0f32; 4]; 8];
+        let run = run_os_fold(&a, &b);
+        let peak = *run.occupancy.iter().max().unwrap();
+        assert_eq!(peak, 16);
+        // Monotone ramp at the start (1, 3, 6, 10 for the first 4 cycles of
+        // a 4-wide diagonal fill).
+        assert_eq!(&run.occupancy[..4], &[1, 3, 6, 10]);
+        // Symmetric tail.
+        let n = run.occupancy.len();
+        assert_eq!(&run.occupancy[n - 3..], &[6, 3, 1]);
+    }
+
+    #[test]
+    fn sign_bits_follow_bridge_convention() {
+        // OFMap >= 0 maps to '1' (true); negative to '0' (false). x = 0 is
+        // non-negative: the sign bit is 0, the inverter emits 1.
+        let a = vec![vec![1.0f32, 0.0], vec![-1.0, 0.0], vec![0.0, 0.0]];
+        let b = vec![vec![1.0f32], vec![1.0]];
+        let run = run_os_fold(&a, &b);
+        assert_eq!(run.outputs[0][0], 1.0);
+        assert_eq!(run.outputs[1][0], -1.0);
+        assert_eq!(run.outputs[2][0], 0.0);
+        assert_eq!(run.sign_bits[0][0], true);
+        assert_eq!(run.sign_bits[1][0], false);
+        assert_eq!(run.sign_bits[2][0], true); // zero is non-negative
+    }
+
+    #[test]
+    fn single_pe_degenerate() {
+        let a = vec![vec![2.0f32, 3.0]];
+        let b = vec![vec![4.0f32], vec![5.0]];
+        let run = run_os_fold(&a, &b);
+        assert_eq!(run.outputs[0][0], 23.0);
+        assert_eq!(run.cycles_to_last_mac, 2); // 1+1+2-2
+    }
+}

@@ -1,0 +1,202 @@
+//! Scale-Sim-equivalent systolic-array simulator.
+//!
+//! * [`analytic`] — per-GEMM cycle/utilization model (OS/WS/IS dataflows,
+//!   conservative or pipelined fold accounting);
+//! * [`array`] — register-level OS array stepper (validation + wavefront
+//!   traces + functional GEMM);
+//! * [`sram`] — double-buffered scratchpad model and DRAM traffic;
+//! * [`dram`] — LPDDR address-trace generation and bandwidth model.
+//!
+//! [`simulate_network`] runs a whole CNN and produces the per-layer records
+//! the paper's Table 2 aggregates.
+
+pub mod analytic;
+pub mod array;
+pub mod dram;
+pub mod sram;
+
+pub use analytic::{simulate_gemm, ArrayConfig, Dataflow, FoldOverlap, GemmStats};
+pub use sram::{MemStats, SramConfig};
+
+use crate::workload::{Engine, Model};
+
+/// Per-layer simulation record.
+#[derive(Clone, Debug)]
+pub struct LayerRecord {
+    pub name: String,
+    pub engine: Engine,
+    /// Systolic cycles (0 for vector-unit layers and — under hybrid
+    /// scheduling — for IMAC-executed dense layers; the IMAC cycle itself is
+    /// accounted by the arch layer).
+    pub cycles: u64,
+    pub macs: u64,
+    pub utilization: f64,
+    pub mapping_efficiency: f64,
+    pub mem: MemStats,
+    pub gemm_stats: Option<GemmStats>,
+}
+
+/// Network-level aggregate.
+#[derive(Clone, Debug, Default)]
+pub struct NetworkStats {
+    pub total_cycles: u64,
+    pub total_macs: u64,
+    /// MAC-weighted average utilization.
+    pub avg_utilization: f64,
+    pub dram_read_words: u64,
+    pub dram_write_words: u64,
+    pub peak_bw_bytes_per_cycle: f64,
+}
+
+/// Which layers run on the systolic array.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Schedule {
+    /// Everything GEMM-like on the array (the TPU baseline).
+    TpuOnly,
+    /// Conv-like on the array; dense on the IMAC (cycles excluded here).
+    Hybrid,
+}
+
+/// Simulate a CNN on the systolic array under a schedule.
+pub fn simulate_network(
+    cfg: &ArrayConfig,
+    sram: &SramConfig,
+    model: &Model,
+    schedule: Schedule,
+) -> (Vec<LayerRecord>, NetworkStats) {
+    let mut records = Vec::new();
+    for layer in &model.layers {
+        let engine = match schedule {
+            Schedule::TpuOnly => {
+                if layer.gemm().is_some() {
+                    Engine::Systolic
+                } else {
+                    Engine::Vector
+                }
+            }
+            Schedule::Hybrid => layer.engine_hybrid(),
+        };
+        let (cycles, macs, util, mapeff, mem, gs) = match (engine, layer.gemm()) {
+            (Engine::Systolic, Some(g)) => {
+                let gs = simulate_gemm(cfg, &g);
+                let mem = sram::analyze(cfg, sram, &g, &gs);
+                (gs.cycles, gs.macs, gs.utilization, gs.mapping_efficiency, mem, Some(gs))
+            }
+            _ => (0, 0, 0.0, 0.0, MemStats::default(), None),
+        };
+        records.push(LayerRecord {
+            name: layer.name.clone(),
+            engine,
+            cycles,
+            macs,
+            utilization: util,
+            mapping_efficiency: mapeff,
+            mem,
+            gemm_stats: gs,
+        });
+    }
+    let stats = aggregate(&records);
+    (records, stats)
+}
+
+/// Aggregate per-layer records into network statistics.
+pub fn aggregate(records: &[LayerRecord]) -> NetworkStats {
+    let mut s = NetworkStats::default();
+    let mut mac_weighted_util = 0.0;
+    for r in records {
+        s.total_cycles += r.cycles;
+        s.total_macs += r.macs;
+        mac_weighted_util += r.utilization * r.macs as f64;
+        s.dram_read_words += r.mem.dram_ifmap_reads + r.mem.dram_weight_reads;
+        s.dram_write_words += r.mem.dram_ofmap_writes;
+        s.peak_bw_bytes_per_cycle = s.peak_bw_bytes_per_cycle.max(r.mem.bw_bytes_per_cycle);
+    }
+    s.avg_utilization =
+        if s.total_macs == 0 { 0.0 } else { mac_weighted_util / s.total_macs as f64 };
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::zoo;
+
+    #[test]
+    fn lenet_tpu_cycles_near_paper() {
+        // Paper Table 2: LeNet TPU total = 2475 cycles; TPU-IMAC (conv only
+        // on the array) = 956 - 3 IMAC cycles. Our pipelined model lands
+        // within ~10% of both (exactness is not expected — their Scale-Sim
+        // config has unpublished details).
+        let cfg = ArrayConfig::default();
+        let sram = SramConfig::default();
+        let m = zoo::lenet();
+        let (_, tpu) = simulate_network(&cfg, &sram, &m, Schedule::TpuOnly);
+        let (_, hybrid) = simulate_network(&cfg, &sram, &m, Schedule::Hybrid);
+        let paper_tpu = 2475.0;
+        let paper_conv = 956.0 - 3.0;
+        let rel_tpu = (tpu.total_cycles as f64 - paper_tpu).abs() / paper_tpu;
+        let rel_conv = (hybrid.total_cycles as f64 - paper_conv).abs() / paper_conv;
+        assert!(rel_tpu < 0.10, "TPU cycles {} vs paper {paper_tpu}", tpu.total_cycles);
+        assert!(rel_conv < 0.10, "conv cycles {} vs paper {paper_conv}", hybrid.total_cycles);
+    }
+
+    #[test]
+    fn hybrid_removes_exactly_the_dense_cycles() {
+        let cfg = ArrayConfig::default();
+        let sram = SramConfig::default();
+        for m in zoo::paper_suite() {
+            let (recs_tpu, tpu) = simulate_network(&cfg, &sram, &m, Schedule::TpuOnly);
+            let (_, hybrid) = simulate_network(&cfg, &sram, &m, Schedule::Hybrid);
+            let dense_cycles: u64 = recs_tpu
+                .iter()
+                .zip(&m.layers)
+                .filter(|(_, l)| l.is_dense())
+                .map(|(r, _)| r.cycles)
+                .sum();
+            assert_eq!(tpu.total_cycles - dense_cycles, hybrid.total_cycles, "{}", m.name);
+            assert!(dense_cycles > 0, "{} must have dense cycles", m.name);
+        }
+    }
+
+    #[test]
+    fn cifar10_fc_delta_matches_paper() {
+        // All CIFAR-10 models share the 1024->1024->10 head; the paper's
+        // TPU-vs-TPU-IMAC cycle delta is ~33.8k. Ours: 33,834.
+        let cfg = ArrayConfig::default();
+        let sram = SramConfig::default();
+        let m = zoo::vgg9(crate::workload::Dataset::Cifar10);
+        let (recs, _) = simulate_network(&cfg, &sram, &m, Schedule::TpuOnly);
+        let dense: u64 = recs
+            .iter()
+            .zip(&m.layers)
+            .filter(|(_, l)| l.is_dense())
+            .map(|(r, _)| r.cycles)
+            .sum();
+        assert_eq!(dense, 33_834);
+    }
+
+    #[test]
+    fn mobilenet_v1_cycles_near_paper() {
+        // Paper: MobileNetV1/CIFAR-10 conv-only = 181.1k cycles.
+        let cfg = ArrayConfig::default();
+        let sram = SramConfig::default();
+        let m = zoo::mobilenet_v1(crate::workload::Dataset::Cifar10);
+        let (_, hybrid) = simulate_network(&cfg, &sram, &m, Schedule::Hybrid);
+        let paper = 181_100.0;
+        let rel = (hybrid.total_cycles as f64 - paper).abs() / paper;
+        assert!(rel < 0.10, "conv cycles {} vs paper {paper}", hybrid.total_cycles);
+    }
+
+    #[test]
+    fn depthwise_layers_drag_utilization() {
+        let cfg = ArrayConfig::default();
+        let sram = SramConfig::default();
+        let m = zoo::mobilenet_v1(crate::workload::Dataset::Cifar10);
+        let (recs, _) = simulate_network(&cfg, &sram, &m, Schedule::Hybrid);
+        for (r, l) in recs.iter().zip(&m.layers) {
+            if matches!(l.kind, crate::workload::LayerKind::DepthwiseConv2d { .. }) {
+                assert!(r.utilization < 0.05, "{}: {}", l.name, r.utilization);
+            }
+        }
+    }
+}

@@ -1,0 +1,259 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Benches under `rust/benches/` are `harness = false` binaries that build a
+//! [`BenchSuite`], register closures, and call [`BenchSuite::run`]. The
+//! harness does warmup, adaptive iteration-count calibration to a target
+//! measurement time, and reports mean / median / p95 with throughput.
+
+use std::time::{Duration, Instant};
+
+use crate::util::table::{Align, Table};
+
+/// One measured benchmark result.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    /// Optional items-per-iteration for throughput reporting.
+    pub items_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn throughput_per_sec(&self) -> Option<f64> {
+        self.items_per_iter.map(|n| n * 1e9 / self.mean_ns)
+    }
+}
+
+/// Configuration for a suite run.
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_samples: usize,
+    pub max_samples: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        // Keep defaults modest: full `cargo bench` covers many benches.
+        Self {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(800),
+            min_samples: 10,
+            max_samples: 200,
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Honour `TPU_IMAC_BENCH_FAST=1` for CI/test runs.
+    pub fn from_env() -> Self {
+        if std::env::var("TPU_IMAC_BENCH_FAST").as_deref() == Ok("1") {
+            Self {
+                warmup: Duration::from_millis(20),
+                measure: Duration::from_millis(80),
+                min_samples: 5,
+                max_samples: 30,
+            }
+        } else {
+            Self::default()
+        }
+    }
+}
+
+/// A registered benchmark: name + closure returning a checksum-ish value to
+/// defeat dead-code elimination.
+struct Bench {
+    name: String,
+    items_per_iter: Option<f64>,
+    f: Box<dyn FnMut() -> u64>,
+}
+
+/// A named collection of benchmarks, run sequentially.
+pub struct BenchSuite {
+    title: String,
+    config: BenchConfig,
+    benches: Vec<Bench>,
+}
+
+/// Prevent the optimizer from discarding a value (stable-rust black_box).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    // std::hint::black_box is stable since 1.66.
+    std::hint::black_box(x)
+}
+
+impl BenchSuite {
+    pub fn new(title: &str) -> Self {
+        Self { title: title.to_string(), config: BenchConfig::from_env(), benches: Vec::new() }
+    }
+
+    pub fn with_config(mut self, config: BenchConfig) -> Self {
+        self.config = config;
+        self
+    }
+
+    /// Register a benchmark. The closure should return some value derived
+    /// from the computation (it is black_box'ed).
+    pub fn bench<F: FnMut() -> u64 + 'static>(&mut self, name: &str, f: F) -> &mut Self {
+        self.benches.push(Bench { name: name.to_string(), items_per_iter: None, f: Box::new(f) });
+        self
+    }
+
+    /// Register a benchmark with a throughput annotation (items processed
+    /// per closure invocation, e.g. MACs or requests).
+    pub fn bench_throughput<F: FnMut() -> u64 + 'static>(
+        &mut self,
+        name: &str,
+        items_per_iter: f64,
+        f: F,
+    ) -> &mut Self {
+        self.benches.push(Bench {
+            name: name.to_string(),
+            items_per_iter: Some(items_per_iter),
+            f: Box::new(f),
+        });
+        self
+    }
+
+    fn measure_one(config: &BenchConfig, b: &mut Bench) -> BenchResult {
+        // Warmup + calibrate inner iteration count so one sample >= ~50us.
+        let warm_start = Instant::now();
+        let mut inner: u64 = 1;
+        let mut acc = 0u64;
+        loop {
+            let t0 = Instant::now();
+            for _ in 0..inner {
+                acc = acc.wrapping_add((b.f)());
+            }
+            let dt = t0.elapsed();
+            if warm_start.elapsed() >= config.warmup && dt >= Duration::from_micros(50) {
+                break;
+            }
+            if dt < Duration::from_micros(50) {
+                inner = inner.saturating_mul(2).min(1 << 24);
+            }
+            if warm_start.elapsed() > config.warmup * 10 {
+                break; // pathological: a single call is very slow
+            }
+        }
+        black_box(acc);
+
+        // Measurement: collect samples until the time budget is spent.
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let meas_start = Instant::now();
+        while (samples_ns.len() < config.min_samples
+            || meas_start.elapsed() < config.measure)
+            && samples_ns.len() < config.max_samples
+        {
+            let t0 = Instant::now();
+            let mut acc = 0u64;
+            for _ in 0..inner {
+                acc = acc.wrapping_add((b.f)());
+            }
+            black_box(acc);
+            samples_ns.push(t0.elapsed().as_nanos() as f64 / inner as f64);
+        }
+        samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples_ns.len();
+        let mean = samples_ns.iter().sum::<f64>() / n as f64;
+        let median = samples_ns[n / 2];
+        let p95 = samples_ns[((n as f64 * 0.95) as usize).min(n - 1)];
+        BenchResult {
+            name: b.name.clone(),
+            iters: inner * n as u64,
+            mean_ns: mean,
+            median_ns: median,
+            p95_ns: p95,
+            items_per_iter: b.items_per_iter,
+        }
+    }
+
+    /// Run all registered benches, print a table, return the results.
+    pub fn run(&mut self) -> Vec<BenchResult> {
+        let mut results = Vec::new();
+        for b in &mut self.benches {
+            eprintln!("  bench {} ...", b.name);
+            results.push(Self::measure_one(&self.config, b));
+        }
+        let mut t = Table::new(&["bench", "mean", "median", "p95", "throughput"])
+            .with_title(&self.title)
+            .with_aligns(&[Align::Left, Align::Right, Align::Right, Align::Right, Align::Right]);
+        for r in &results {
+            t.row(vec![
+                r.name.clone(),
+                fmt_ns(r.mean_ns),
+                fmt_ns(r.median_ns),
+                fmt_ns(r.p95_ns),
+                r.throughput_per_sec()
+                    .map(fmt_rate)
+                    .unwrap_or_else(|| "-".to_string()),
+            ]);
+        }
+        println!("{}", t.to_ascii());
+        results
+    }
+}
+
+/// Human-readable nanoseconds.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Human-readable rate/sec.
+pub fn fmt_rate(r: f64) -> String {
+    if r >= 1e9 {
+        format!("{:.2} G/s", r / 1e9)
+    } else if r >= 1e6 {
+        format!("{:.2} M/s", r / 1e6)
+    } else if r >= 1e3 {
+        format!("{:.2} k/s", r / 1e3)
+    } else {
+        format!("{r:.1} /s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_sane() {
+        let cfg = BenchConfig {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(20),
+            min_samples: 3,
+            max_samples: 10,
+        };
+        let mut suite = BenchSuite::new("test").with_config(cfg);
+        suite.bench_throughput("sum1k", 1000.0, || {
+            let mut s = 0u64;
+            for i in 0..1000u64 {
+                s = s.wrapping_add(black_box(i));
+            }
+            s
+        });
+        let rs = suite.run();
+        assert_eq!(rs.len(), 1);
+        assert!(rs[0].mean_ns > 0.0);
+        assert!(rs[0].throughput_per_sec().unwrap() > 1e6); // >1M adds/sec, trivially true
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_ns(12.3), "12.3 ns");
+        assert_eq!(fmt_ns(1500.0), "1.50 µs");
+        assert!(fmt_rate(2.5e9).contains("G/s"));
+    }
+}

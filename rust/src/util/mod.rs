@@ -1,0 +1,10 @@
+//! Infrastructure substrates: JSON, RNG, stats, tables, property tests,
+//! bench harness. Hand-rolled because the offline build only carries the
+//! crates the `xla` FFI needs (no serde/rand/criterion/proptest).
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;

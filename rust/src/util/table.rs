@@ -1,0 +1,242 @@
+//! Table formatting for reports: aligned ASCII, GitHub markdown, and CSV.
+//!
+//! Every benchmark/report in this repo renders through [`Table`], so the
+//! paper-table reproductions print rows in the same shape the paper reports.
+
+/// Column alignment.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// A simple rectangular table builder.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: Option<String>,
+    headers: Vec<String>,
+    aligns: Vec<Align>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self {
+            title: None,
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            aligns: headers.iter().map(|_| Align::Right).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn with_title(mut self, title: &str) -> Self {
+        self.title = Some(title.to_string());
+        self
+    }
+
+    /// Set alignment per column (defaults to Right; Left is typical for the
+    /// first, label, column).
+    pub fn with_aligns(mut self, aligns: &[Align]) -> Self {
+        assert_eq!(aligns.len(), self.headers.len());
+        self.aligns = aligns.to_vec();
+        self
+    }
+
+    pub fn left_first(mut self) -> Self {
+        if !self.aligns.is_empty() {
+            self.aligns[0] = Align::Left;
+        }
+        self
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.headers.len(),
+            "row width {} != header width {}",
+            cells.len(),
+            self.headers.len()
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.headers.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                w[i] = w[i].max(c.chars().count());
+            }
+        }
+        w
+    }
+
+    /// Render as an aligned ASCII table.
+    pub fn to_ascii(&self) -> String {
+        let w = self.widths();
+        let mut out = String::new();
+        if let Some(t) = &self.title {
+            out.push_str(t);
+            out.push('\n');
+        }
+        let sep: String = {
+            let mut s = String::from("+");
+            for wi in &w {
+                s.push_str(&"-".repeat(wi + 2));
+                s.push('+');
+            }
+            s
+        };
+        out.push_str(&sep);
+        out.push('\n');
+        out.push_str(&self.render_row(&self.headers, &w));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&self.render_row(row, &w));
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out
+    }
+
+    fn render_row(&self, cells: &[String], w: &[usize]) -> String {
+        let mut s = String::from("|");
+        for (i, c) in cells.iter().enumerate() {
+            let pad = w[i] - c.chars().count();
+            match self.aligns[i] {
+                Align::Left => {
+                    s.push(' ');
+                    s.push_str(c);
+                    s.push_str(&" ".repeat(pad + 1));
+                }
+                Align::Right => {
+                    s.push_str(&" ".repeat(pad + 1));
+                    s.push_str(c);
+                    s.push(' ');
+                }
+            }
+            s.push('|');
+        }
+        s
+    }
+
+    /// Render as GitHub-flavored markdown.
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        if let Some(t) = &self.title {
+            out.push_str(&format!("**{t}**\n\n"));
+        }
+        out.push_str(&format!("| {} |\n", self.headers.join(" | ")));
+        let dashes: Vec<String> = self
+            .aligns
+            .iter()
+            .map(|a| match a {
+                Align::Left => ":---".to_string(),
+                Align::Right => "---:".to_string(),
+            })
+            .collect();
+        out.push_str(&format!("| {} |\n", dashes.join(" | ")));
+        for row in &self.rows {
+            out.push_str(&format!("| {} |\n", row.join(" | ")));
+        }
+        out
+    }
+
+    /// Render as CSV (RFC 4180 quoting).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&csv_row(&self.headers));
+        for row in &self.rows {
+            out.push_str(&csv_row(row));
+        }
+        out
+    }
+}
+
+fn csv_row(cells: &[String]) -> String {
+    let quoted: Vec<String> = cells
+        .iter()
+        .map(|c| {
+            if c.contains(',') || c.contains('"') || c.contains('\n') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.clone()
+            }
+        })
+        .collect();
+    format!("{}\n", quoted.join(","))
+}
+
+/// Format helpers shared by reports.
+pub fn fmt_f(x: f64, prec: usize) -> String {
+    format!("{x:.prec$}")
+}
+
+pub fn fmt_pct(x: f64, prec: usize) -> String {
+    format!("{:.prec$}%", x * 100.0)
+}
+
+pub fn fmt_kcycles(cycles: u64) -> String {
+    format!("{:.3}", cycles as f64 / 1000.0)
+}
+
+pub fn fmt_mb(bytes: u64) -> String {
+    format!("{:.3}", bytes as f64 / (1024.0 * 1024.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Table {
+        let mut t = Table::new(&["model", "cycles", "speedup"]).left_first();
+        t.row(vec!["LeNet".into(), "2475".into(), "2.59".into()]);
+        t.row(vec!["VGG9".into(), "331000".into(), "1.11".into()]);
+        t
+    }
+
+    #[test]
+    fn ascii_aligns_columns() {
+        let s = sample().to_ascii();
+        let lines: Vec<&str> = s.lines().collect();
+        // all rows equal width
+        let w = lines[0].len();
+        assert!(lines.iter().all(|l| l.len() == w), "{s}");
+        assert!(s.contains("| LeNet"));
+        assert!(s.contains("2.59 |"));
+    }
+
+    #[test]
+    fn markdown_has_align_row() {
+        let s = sample().to_markdown();
+        assert!(s.contains("| :--- | ---: | ---: |"), "{s}");
+    }
+
+    #[test]
+    fn csv_quotes_commas() {
+        let mut t = Table::new(&["a"]);
+        t.row(vec!["x,y".into()]);
+        assert_eq!(t.to_csv(), "a\n\"x,y\"\n");
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_mismatch_panics() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_kcycles(2475), "2.475");
+        assert_eq!(fmt_mb(1024 * 1024), "1.000");
+        assert_eq!(fmt_pct(0.8834, 2), "88.34%");
+    }
+}

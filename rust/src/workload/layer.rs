@@ -1,0 +1,299 @@
+//! Layer descriptors: the workload IR consumed by the simulators.
+//!
+//! A CNN is a sequence of [`Layer`]s. Conv-like layers lower to GEMMs via
+//! im2col ([`GemmShape`]); dense layers are `1×K×N` GEMMs on the TPU or a
+//! single analog MVM on the IMAC. Pooling / activation / batch-norm layers
+//! execute on the dedicated vector unit outside the systolic array (paper §3:
+//! "a specialized hardware unit is implemented outside the TPU's systolic
+//! array") and therefore contribute no systolic cycles.
+
+use std::fmt;
+
+/// Spatial/channel tensor shape in NHWC with N=1 (single-image inference, as
+/// the paper evaluates).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FeatureShape {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+}
+
+impl FeatureShape {
+    pub fn new(h: usize, w: usize, c: usize) -> Self {
+        Self { h, w, c }
+    }
+    pub fn elems(&self) -> usize {
+        self.h * self.w * self.c
+    }
+}
+
+impl fmt::Display for FeatureShape {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}x{}x{}", self.h, self.w, self.c)
+    }
+}
+
+/// The GEMM a layer lowers to: `M×K · K×N` (M output pixels, K reduction,
+/// N filters). `groups > 1` models depthwise/grouped conv as `groups`
+/// independent GEMMs of these per-group dimensions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GemmShape {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub groups: usize,
+}
+
+impl GemmShape {
+    pub fn new(m: usize, k: usize, n: usize) -> Self {
+        Self { m, k, n, groups: 1 }
+    }
+    /// Total multiply-accumulate operations.
+    pub fn macs(&self) -> u64 {
+        (self.m as u64) * (self.k as u64) * (self.n as u64) * (self.groups as u64)
+    }
+}
+
+/// Layer kinds. Weights layouts: conv `KhKwCinCout`, dense `K×N`.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LayerKind {
+    /// Standard 2D convolution.
+    Conv2d {
+        kh: usize,
+        kw: usize,
+        cin: usize,
+        cout: usize,
+        stride: usize,
+        /// Symmetric spatial padding (SAME-style paddings precomputed).
+        pad: usize,
+    },
+    /// Depthwise 2D convolution (channel multiplier 1).
+    DepthwiseConv2d { kh: usize, kw: usize, c: usize, stride: usize, pad: usize },
+    /// Fully connected: `in_dim → out_dim`.
+    Dense { in_dim: usize, out_dim: usize },
+    /// Max or average pooling (vector unit; zero systolic cycles).
+    Pool { kh: usize, kw: usize, stride: usize, avg: bool },
+    /// Global average pooling to 1×1.
+    GlobalAvgPool,
+    /// Residual add join with the layer named by `from` (vector unit).
+    Add { from: String },
+    /// Activation on the vector unit (conv side). The IMAC side's sigmoid is
+    /// part of the analog subarray, not a Layer.
+    Activation(Activation),
+    /// Flatten HWC → vector (free: just an addressing change).
+    Flatten,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Activation {
+    Relu,
+    Relu6,
+    Tanh,
+    Sigmoid,
+    /// Sign function used by the TPU→IMAC bridge (x >= 0 → +1 else −1).
+    Sign,
+}
+
+/// A named layer instance with its input shape resolved.
+///
+/// `side = true` marks a residual-shortcut projection conv: it consumes the
+/// *branch* input (not the previous layer's output), so it is excluded from
+/// linear shape chaining but still contributes parameters and systolic
+/// cycles — exactly how Scale-Sim's flat layer CSV treats shortcut convs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Layer {
+    pub name: String,
+    pub kind: LayerKind,
+    pub input: FeatureShape,
+    pub side: bool,
+}
+
+/// Which execution engine a layer runs on in the hybrid architecture.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Engine {
+    /// Systolic array (conv-like layers).
+    Systolic,
+    /// IMAC analog fabric (dense layers under TPU-IMAC scheduling).
+    Imac,
+    /// Vector/activation unit outside the array (pool/act/add): zero
+    /// systolic-array cycles in the paper's accounting.
+    Vector,
+}
+
+impl Layer {
+    /// Output feature shape.
+    pub fn output(&self) -> FeatureShape {
+        let i = self.input;
+        match &self.kind {
+            LayerKind::Conv2d { kh, kw, cout, stride, pad, .. } => FeatureShape {
+                h: conv_out(i.h, *kh, *stride, *pad),
+                w: conv_out(i.w, *kw, *stride, *pad),
+                c: *cout,
+            },
+            LayerKind::DepthwiseConv2d { kh, kw, c, stride, pad } => FeatureShape {
+                h: conv_out(i.h, *kh, *stride, *pad),
+                w: conv_out(i.w, *kw, *stride, *pad),
+                c: *c,
+            },
+            LayerKind::Dense { out_dim, .. } => FeatureShape { h: 1, w: 1, c: *out_dim },
+            LayerKind::Pool { kh, kw, stride, .. } => FeatureShape {
+                h: pool_out(i.h, *kh, *stride),
+                w: pool_out(i.w, *kw, *stride),
+                c: i.c,
+            },
+            LayerKind::GlobalAvgPool => FeatureShape { h: 1, w: 1, c: i.c },
+            LayerKind::Add { .. } | LayerKind::Activation(_) => i,
+            LayerKind::Flatten => FeatureShape { h: 1, w: 1, c: i.elems() },
+        }
+    }
+
+    /// The GEMM this layer lowers to on the systolic array, if any.
+    pub fn gemm(&self) -> Option<GemmShape> {
+        let o = self.output();
+        match &self.kind {
+            LayerKind::Conv2d { kh, kw, cin, cout, .. } => {
+                Some(GemmShape::new(o.h * o.w, kh * kw * cin, *cout))
+            }
+            LayerKind::DepthwiseConv2d { kh, kw, c, .. } => Some(GemmShape {
+                m: o.h * o.w,
+                k: kh * kw,
+                n: 1,
+                groups: *c,
+            }),
+            LayerKind::Dense { in_dim, out_dim } => Some(GemmShape::new(1, *in_dim, *out_dim)),
+            _ => None,
+        }
+    }
+
+    /// Engine assignment under the *hybrid* schedule. Under TPU-only
+    /// scheduling, Dense also runs on [`Engine::Systolic`].
+    pub fn engine_hybrid(&self) -> Engine {
+        match self.kind {
+            LayerKind::Dense { .. } => Engine::Imac,
+            LayerKind::Conv2d { .. } | LayerKind::DepthwiseConv2d { .. } => Engine::Systolic,
+            _ => Engine::Vector,
+        }
+    }
+
+    /// Weight parameter count (weights only, excluding bias).
+    pub fn weight_params(&self) -> u64 {
+        match &self.kind {
+            LayerKind::Conv2d { kh, kw, cin, cout, .. } => (kh * kw * cin * cout) as u64,
+            LayerKind::DepthwiseConv2d { kh, kw, c, .. } => (kh * kw * c) as u64,
+            LayerKind::Dense { in_dim, out_dim } => (in_dim * out_dim) as u64,
+            _ => 0,
+        }
+    }
+
+    /// Bias parameter count.
+    pub fn bias_params(&self) -> u64 {
+        match &self.kind {
+            LayerKind::Conv2d { cout, .. } => *cout as u64,
+            LayerKind::DepthwiseConv2d { c, .. } => *c as u64,
+            LayerKind::Dense { out_dim, .. } => *out_dim as u64,
+            _ => 0,
+        }
+    }
+
+    pub fn is_dense(&self) -> bool {
+        matches!(self.kind, LayerKind::Dense { .. })
+    }
+
+    pub fn is_conv_like(&self) -> bool {
+        matches!(
+            self.kind,
+            LayerKind::Conv2d { .. } | LayerKind::DepthwiseConv2d { .. }
+        )
+    }
+}
+
+fn conv_out(dim: usize, k: usize, stride: usize, pad: usize) -> usize {
+    assert!(dim + 2 * pad >= k, "conv kernel {k} larger than padded input {dim}+2*{pad}");
+    (dim + 2 * pad - k) / stride + 1
+}
+
+fn pool_out(dim: usize, k: usize, stride: usize) -> usize {
+    // Ceil mode off; floor division like most frameworks' default.
+    if dim < k {
+        1
+    } else {
+        (dim - k) / stride + 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn conv(i: FeatureShape, kh: usize, cout: usize, stride: usize, pad: usize) -> Layer {
+        Layer {
+            name: "c".into(),
+            kind: LayerKind::Conv2d { kh, kw: kh, cin: i.c, cout, stride, pad },
+            input: i,
+            side: false,
+        }
+    }
+
+    #[test]
+    fn conv_output_shapes() {
+        // LeNet conv1: 28x28x1, 5x5x6, no pad -> 24x24x6
+        let l = conv(FeatureShape::new(28, 28, 1), 5, 6, 1, 0);
+        assert_eq!(l.output(), FeatureShape::new(24, 24, 6));
+        // SAME 3x3 stride 1 on 32x32
+        let l = conv(FeatureShape::new(32, 32, 3), 3, 64, 1, 1);
+        assert_eq!(l.output(), FeatureShape::new(32, 32, 64));
+        // stride 2 SAME on 32x32 -> 16x16
+        let l = conv(FeatureShape::new(32, 32, 16), 3, 32, 2, 1);
+        assert_eq!(l.output(), FeatureShape::new(16, 16, 32));
+    }
+
+    #[test]
+    fn gemm_lowering_conv() {
+        let l = conv(FeatureShape::new(28, 28, 1), 5, 6, 1, 0);
+        let g = l.gemm().unwrap();
+        assert_eq!((g.m, g.k, g.n, g.groups), (576, 25, 6, 1));
+        assert_eq!(g.macs(), 576 * 25 * 6);
+    }
+
+    #[test]
+    fn gemm_lowering_depthwise() {
+        let l = Layer {
+            name: "dw".into(),
+            kind: LayerKind::DepthwiseConv2d { kh: 3, kw: 3, c: 32, stride: 1, pad: 1 },
+            input: FeatureShape::new(16, 16, 32),
+            side: false,
+        };
+        let g = l.gemm().unwrap();
+        assert_eq!((g.m, g.k, g.n, g.groups), (256, 9, 1, 32));
+        assert_eq!(l.weight_params(), 9 * 32);
+    }
+
+    #[test]
+    fn dense_gemm_and_engines() {
+        let l = Layer {
+            name: "fc".into(),
+            kind: LayerKind::Dense { in_dim: 1024, out_dim: 10 },
+            input: FeatureShape::new(1, 1, 1024),
+            side: false,
+        };
+        assert_eq!(l.gemm().unwrap(), GemmShape::new(1, 1024, 10));
+        assert_eq!(l.engine_hybrid(), Engine::Imac);
+        assert_eq!(l.weight_params(), 10240);
+        assert_eq!(l.bias_params(), 10);
+    }
+
+    #[test]
+    fn pool_and_flatten() {
+        let p = Layer {
+            name: "p".into(),
+            kind: LayerKind::Pool { kh: 2, kw: 2, stride: 2, avg: false },
+            input: FeatureShape::new(24, 24, 6),
+            side: false,
+        };
+        assert_eq!(p.output(), FeatureShape::new(12, 12, 6));
+        assert_eq!(p.engine_hybrid(), Engine::Vector);
+        assert!(p.gemm().is_none());
+        let f = Layer { name: "f".into(), kind: LayerKind::Flatten, input: FeatureShape::new(4, 4, 64), side: false };
+        assert_eq!(f.output().c, 1024);
+    }
+}

@@ -1,0 +1,9 @@
+//! Workload IR: layer descriptors, model graphs, and the zoo of the seven
+//! CNNs the paper evaluates.
+
+pub mod layer;
+pub mod model;
+pub mod zoo;
+
+pub use layer::{Activation, Engine, FeatureShape, GemmShape, Layer, LayerKind};
+pub use model::{Dataset, Model, ModelBuilder};

@@ -1,0 +1,322 @@
+//! CNN model descriptors: an ordered list of layers with shape inference,
+//! validation, and the parameter accounting the memory model consumes.
+
+use super::layer::{Activation, FeatureShape, Layer, LayerKind};
+use anyhow::{bail, Result};
+
+/// Dataset tags used by the zoo and report labels.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dataset {
+    Mnist,
+    Cifar10,
+    Cifar100,
+}
+
+impl Dataset {
+    pub fn input_shape(&self) -> FeatureShape {
+        match self {
+            Dataset::Mnist => FeatureShape::new(28, 28, 1),
+            Dataset::Cifar10 | Dataset::Cifar100 => FeatureShape::new(32, 32, 3),
+        }
+    }
+    pub fn classes(&self) -> usize {
+        match self {
+            Dataset::Mnist | Dataset::Cifar10 => 10,
+            Dataset::Cifar100 => 100,
+        }
+    }
+    pub fn label(&self) -> &'static str {
+        match self {
+            Dataset::Mnist => "MNIST",
+            Dataset::Cifar10 => "CIFAR-10",
+            Dataset::Cifar100 => "CIFAR-100",
+        }
+    }
+}
+
+/// A full CNN workload.
+#[derive(Clone, Debug)]
+pub struct Model {
+    pub name: String,
+    pub dataset: Dataset,
+    pub layers: Vec<Layer>,
+}
+
+/// Builder that tracks the running feature shape.
+pub struct ModelBuilder {
+    name: String,
+    dataset: Dataset,
+    shape: FeatureShape,
+    layers: Vec<Layer>,
+    counter: usize,
+}
+
+impl ModelBuilder {
+    pub fn new(name: &str, dataset: Dataset) -> Self {
+        Self {
+            name: name.to_string(),
+            dataset,
+            shape: dataset.input_shape(),
+            layers: Vec::new(),
+            counter: 0,
+        }
+    }
+
+    pub fn shape(&self) -> FeatureShape {
+        self.shape
+    }
+
+    fn push(&mut self, prefix: &str, kind: LayerKind) -> &mut Self {
+        self.counter += 1;
+        let layer = Layer {
+            name: format!("{prefix}{}", self.counter),
+            kind,
+            input: self.shape,
+            side: false,
+        };
+        self.shape = layer.output();
+        self.layers.push(layer);
+        self
+    }
+
+    pub fn conv(&mut self, k: usize, cout: usize, stride: usize, pad: usize) -> &mut Self {
+        let cin = self.shape.c;
+        self.push("conv", LayerKind::Conv2d { kh: k, kw: k, cin, cout, stride, pad })
+    }
+
+    pub fn dwconv(&mut self, k: usize, stride: usize, pad: usize) -> &mut Self {
+        let c = self.shape.c;
+        self.push("dwconv", LayerKind::DepthwiseConv2d { kh: k, kw: k, c, stride, pad })
+    }
+
+    /// 1x1 pointwise conv.
+    pub fn pwconv(&mut self, cout: usize) -> &mut Self {
+        self.conv(1, cout, 1, 0)
+    }
+
+    pub fn relu(&mut self) -> &mut Self {
+        self.push("act", LayerKind::Activation(Activation::Relu))
+    }
+
+    pub fn relu6(&mut self) -> &mut Self {
+        self.push("act", LayerKind::Activation(Activation::Relu6))
+    }
+
+    pub fn maxpool(&mut self, k: usize, stride: usize) -> &mut Self {
+        self.push("pool", LayerKind::Pool { kh: k, kw: k, stride, avg: false })
+    }
+
+    pub fn avgpool(&mut self, k: usize, stride: usize) -> &mut Self {
+        self.push("pool", LayerKind::Pool { kh: k, kw: k, stride, avg: true })
+    }
+
+    pub fn global_avgpool(&mut self) -> &mut Self {
+        self.push("gap", LayerKind::GlobalAvgPool)
+    }
+
+    pub fn add_from(&mut self, from: &str) -> &mut Self {
+        self.push("add", LayerKind::Add { from: from.to_string() })
+    }
+
+    /// Residual-shortcut projection conv: consumes `input` (the branch
+    /// point's shape), not the running shape; does not advance the running
+    /// shape. Contributes params + systolic cycles like any conv.
+    pub fn side_conv(&mut self, input: FeatureShape, k: usize, cout: usize, stride: usize, pad: usize) -> &mut Self {
+        self.counter += 1;
+        self.layers.push(Layer {
+            name: format!("sideconv{}", self.counter),
+            kind: LayerKind::Conv2d { kh: k, kw: k, cin: input.c, cout, stride, pad },
+            input,
+            side: true,
+        });
+        self
+    }
+
+    pub fn flatten(&mut self) -> &mut Self {
+        self.push("flatten", LayerKind::Flatten)
+    }
+
+    pub fn dense(&mut self, out_dim: usize) -> &mut Self {
+        let in_dim = self.shape.elems();
+        self.push("fc", LayerKind::Dense { in_dim, out_dim })
+    }
+
+    /// Name of the most recently pushed layer (for residual joins).
+    pub fn last_name(&self) -> String {
+        self.layers.last().map(|l| l.name.clone()).unwrap_or_default()
+    }
+
+    pub fn build(self) -> Model {
+        Model { name: self.name, dataset: self.dataset, layers: self.layers }
+    }
+}
+
+impl Model {
+    /// Total weight params of conv-like layers (+their biases), i.e. what
+    /// stays FP32 in SRAM on the TPU-IMAC.
+    pub fn conv_params(&self) -> u64 {
+        self.layers
+            .iter()
+            .filter(|l| l.is_conv_like())
+            .map(|l| l.weight_params() + l.bias_params())
+            .sum()
+    }
+
+    /// Dense weight params (ternary in RRAM on the TPU-IMAC; no biases —
+    /// analog sigmoid neurons have no bias input).
+    pub fn fc_weight_params(&self) -> u64 {
+        self.layers.iter().filter(|l| l.is_dense()).map(|l| l.weight_params()).sum()
+    }
+
+    /// Dense bias params (present only in the FP32/TPU deployment).
+    pub fn fc_bias_params(&self) -> u64 {
+        self.layers.iter().filter(|l| l.is_dense()).map(|l| l.bias_params()).sum()
+    }
+
+    /// All params of the FP32/TPU deployment (weights + biases everywhere).
+    pub fn total_params_fp32(&self) -> u64 {
+        self.layers.iter().map(|l| l.weight_params() + l.bias_params()).sum()
+    }
+
+    pub fn dense_layers(&self) -> Vec<&Layer> {
+        self.layers.iter().filter(|l| l.is_dense()).collect()
+    }
+
+    pub fn conv_like_layers(&self) -> Vec<&Layer> {
+        self.layers.iter().filter(|l| l.is_conv_like()).collect()
+    }
+
+    /// Total MACs of all GEMM-lowered layers.
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().filter_map(|l| l.gemm()).map(|g| g.macs()).sum()
+    }
+
+    /// The flattened feature size entering the first dense layer (the
+    /// TPU→IMAC bridge width), if the model has dense layers.
+    pub fn bridge_width(&self) -> Option<usize> {
+        self.layers.iter().find(|l| l.is_dense()).map(|l| l.input.elems())
+    }
+
+    /// Validate structural invariants:
+    /// * shapes chain correctly (builder guarantees, re-checked),
+    /// * dense layers come after all conv-like layers (the paper's
+    ///   conv→FC split),
+    /// * residual `Add` joins reference an earlier layer with matching shape,
+    /// * under hybrid scheduling the bridge width must not exceed the
+    ///   systolic array PE count (sign bits come straight from PE registers);
+    ///   `array_pes = rows*cols`, e.g. 1024 for the paper's 32×32.
+    pub fn validate(&self, array_pes: usize) -> Result<()> {
+        let mut shape = self.dataset.input_shape();
+        let mut seen_dense = false;
+        for l in &self.layers {
+            if l.side {
+                // Shortcut projections sit outside the linear chain; only
+                // their own shape math needs to hold (output() asserts).
+                let _ = l.output();
+                continue;
+            }
+            if l.input != shape {
+                bail!(
+                    "layer {}: input shape {} does not chain from previous output {}",
+                    l.name,
+                    l.input,
+                    shape
+                );
+            }
+            if l.is_dense() {
+                seen_dense = true;
+            } else if seen_dense && l.is_conv_like() {
+                bail!("layer {}: conv after dense breaks the TPU->IMAC split", l.name);
+            }
+            if let LayerKind::Add { from } = &l.kind {
+                let src = self
+                    .layers
+                    .iter()
+                    .find(|x| &x.name == from)
+                    .ok_or_else(|| anyhow::anyhow!("add {} references unknown {from}", l.name))?;
+                if src.output() != l.input {
+                    bail!(
+                        "add {}: shape {} != source {} output {}",
+                        l.name,
+                        l.input,
+                        from,
+                        src.output()
+                    );
+                }
+            }
+            shape = l.output();
+        }
+        if let Some(w) = self.bridge_width() {
+            if w > array_pes {
+                bail!(
+                    "bridge width {w} exceeds systolic PE count {array_pes}; the sign-bit \
+                     bridge requires the flattened OFMap to fit in the array"
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// One-line summary for logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} [{}]: {} layers ({} conv-like, {} dense), {:.3}M params, {:.1}M MACs, bridge={}",
+            self.name,
+            self.dataset.label(),
+            self.layers.len(),
+            self.conv_like_layers().len(),
+            self.dense_layers().len(),
+            self.total_params_fp32() as f64 / 1e6,
+            self.total_macs() as f64 / 1e6,
+            self.bridge_width().map(|w| w.to_string()).unwrap_or_else(|| "-".into())
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Model {
+        let mut b = ModelBuilder::new("tiny", Dataset::Mnist);
+        b.conv(5, 6, 1, 0).relu().maxpool(2, 2).flatten().dense(10);
+        b.build()
+    }
+
+    #[test]
+    fn shapes_chain() {
+        let m = tiny();
+        assert!(m.validate(1024).is_ok());
+        assert_eq!(m.bridge_width(), Some(12 * 12 * 6));
+    }
+
+    #[test]
+    fn bridge_constraint_enforced() {
+        let m = tiny(); // bridge 864 <= 1024 ok; fails for an 8x8 array
+        assert!(m.validate(64).is_err());
+    }
+
+    #[test]
+    fn param_accounting() {
+        let m = tiny();
+        assert_eq!(m.conv_params(), (25 * 6 + 6) as u64);
+        assert_eq!(m.fc_weight_params(), (864 * 10) as u64);
+        assert_eq!(m.fc_bias_params(), 10);
+        assert_eq!(m.total_params_fp32(), (25 * 6 + 6 + 864 * 10 + 10) as u64);
+    }
+
+    #[test]
+    fn conv_after_dense_rejected() {
+        let mut b = ModelBuilder::new("bad", Dataset::Mnist);
+        b.flatten().dense(16);
+        let mut m = b.build();
+        // Manually splice a conv after the dense layer.
+        m.layers.push(Layer {
+            name: "rogue".into(),
+            kind: LayerKind::Conv2d { kh: 1, kw: 1, cin: 16, cout: 4, stride: 1, pad: 0 },
+            input: FeatureShape::new(1, 1, 16),
+            side: false,
+        });
+        assert!(m.validate(1024).is_err());
+    }
+}

@@ -1,0 +1,311 @@
+//! The seven CNN workloads evaluated in the paper (Table 2/3 rows):
+//! LeNet/MNIST; VGG9, MobileNetV1, MobileNetV2, ResNet-18 on CIFAR-10;
+//! MobileNetV1, MobileNetV2 on CIFAR-100.
+//!
+//! All CIFAR models follow the paper's §4 modification: the flattened output
+//! of the final convolutional stage is exactly **1024 = 32×32** elements so
+//! the OS-stationary OFMap sign bits map 1:1 onto the IMAC inputs, and the
+//! FC head is `1024 → 1024 → classes` (this head reproduces the paper's
+//! RRAM footprints: 0.265 MB for 10 classes, 0.288 MB for 100 — ternary
+//! weights at 2 bits each, decimal MB).
+//!
+//! LeNet is the classic LeNet-5 (28×28, conv 6/16, FC 120/84/10, flatten
+//! 256 ≤ 1024) — this reproduces the paper's 0.177 MB TPU / 0.02 MB
+//! TPU-IMAC footprints exactly.
+//!
+//! Where the paper's exact "increase final channels / decrease pool stride"
+//! recipe is underspecified, we pick the variant that matches the reported
+//! conv-parameter budget (see DESIGN.md §5 substitutions and the zoo tests).
+
+use super::layer::FeatureShape;
+use super::model::{Dataset, Model, ModelBuilder};
+
+/// LeNet-5 (MNIST). Conv params 2,572 (incl. bias); FC weights 41,640.
+pub fn lenet() -> Model {
+    let mut b = ModelBuilder::new("LeNet", Dataset::Mnist);
+    b.conv(5, 6, 1, 0) // 28->24
+        .relu()
+        .maxpool(2, 2) // 24->12
+        .conv(5, 16, 1, 0) // 12->8
+        .relu()
+        .maxpool(2, 2) // 8->4 => 4*4*16 = 256
+        .flatten()
+        .dense(120)
+        .dense(84)
+        .dense(10);
+    b.build()
+}
+
+/// VGG9 (7 conv + 2 FC), CIFAR. Channel ladder 64-64-128-256-512-512-1024
+/// lands at 8.667M conv params (paper: 8.628M, +0.5%); final stage is
+/// 4×4×1024 max-pooled to 1×1×1024 for the bridge.
+pub fn vgg9(dataset: Dataset) -> Model {
+    let mut b = ModelBuilder::new("VGG9", dataset);
+    b.conv(3, 64, 1, 1).relu(); // 32x32x64
+    b.conv(3, 64, 1, 1).relu();
+    b.maxpool(2, 2); // 16
+    b.conv(3, 128, 1, 1).relu();
+    b.maxpool(2, 2); // 8
+    b.conv(3, 256, 1, 1).relu();
+    b.conv(3, 512, 1, 1).relu();
+    b.maxpool(2, 2); // 4
+    b.conv(3, 512, 1, 1).relu();
+    b.conv(3, 1024, 1, 1).relu(); // 4x4x1024
+    b.maxpool(4, 4); // 1x1x1024 — the bridge
+    b.flatten();
+    b.dense(1024);
+    b.dense(dataset.classes());
+    b.build()
+}
+
+/// One MobileNetV1 depthwise-separable block.
+fn mbv1_block(b: &mut ModelBuilder, cout: usize, stride: usize) {
+    b.dwconv(3, stride, 1).relu();
+    b.pwconv(cout).relu();
+}
+
+/// MobileNetV1 (width 1.0), CIFAR stem stride 1, final pointwise widened to
+/// 1024 channels; GAP → 1×1×1024 bridge. Conv params ≈ 3.22M (paper 3.185M).
+pub fn mobilenet_v1(dataset: Dataset) -> Model {
+    let mut b = ModelBuilder::new("MobileNetV1", dataset);
+    b.conv(3, 32, 1, 1).relu(); // 32x32x32 (stock uses stride 2 on 224px)
+    mbv1_block(&mut b, 64, 1);
+    mbv1_block(&mut b, 128, 2); // 16
+    mbv1_block(&mut b, 128, 1);
+    mbv1_block(&mut b, 256, 2); // 8
+    mbv1_block(&mut b, 256, 1);
+    mbv1_block(&mut b, 512, 2); // 4
+    for _ in 0..5 {
+        mbv1_block(&mut b, 512, 1);
+    }
+    mbv1_block(&mut b, 1024, 2); // 2
+    mbv1_block(&mut b, 1024, 1);
+    b.global_avgpool(); // 1x1x1024 — the bridge
+    b.flatten();
+    b.dense(1024);
+    b.dense(dataset.classes());
+    b.build()
+}
+
+/// One MobileNetV2 inverted-residual bottleneck. `expand` is the expansion
+/// factor t; residual add when stride == 1 and cin == cout.
+fn mbv2_block(b: &mut ModelBuilder, cin: usize, cout: usize, expand: usize, stride: usize) {
+    let branch_point = b.last_name();
+    let hidden = cin * expand;
+    if expand != 1 {
+        b.pwconv(hidden).relu6();
+    }
+    b.dwconv(3, stride, 1).relu6();
+    b.pwconv(cout); // linear bottleneck: no activation
+    if stride == 1 && cin == cout && !branch_point.is_empty() {
+        b.add_from(&branch_point);
+    }
+}
+
+/// MobileNetV2, CIFAR stem stride 1 and first two stages undownsampled
+/// (standard CIFAR adaptation); final 1×1 conv emits 1024 channels (paper §4
+/// modification, stock is 1280); GAP → bridge. Conv params ≈ 2.14M
+/// (paper 2.167M).
+pub fn mobilenet_v2(dataset: Dataset) -> Model {
+    let mut b = ModelBuilder::new("MobileNetV2", dataset);
+    b.conv(3, 32, 1, 1).relu6(); // 32x32x32
+    // (t, c, n, s) per stage; CIFAR: s of stage 2 reduced to 1.
+    let stages: [(usize, usize, usize, usize); 7] = [
+        (1, 16, 1, 1),
+        (6, 24, 2, 1),
+        (6, 32, 3, 2),  // 16
+        (6, 64, 4, 2),  // 8
+        (6, 96, 3, 1),
+        (6, 160, 3, 2), // 4
+        (6, 320, 1, 1),
+    ];
+    let mut cin = 32;
+    for (t, c, n, s) in stages {
+        for i in 0..n {
+            let stride = if i == 0 { s } else { 1 };
+            mbv2_block(&mut b, cin, c, t, stride);
+            cin = c;
+        }
+    }
+    b.pwconv(1024).relu6(); // 4x4x1024
+    b.global_avgpool(); // 1x1x1024 — the bridge
+    b.flatten();
+    b.dense(1024);
+    b.dense(dataset.classes());
+    b.build()
+}
+
+/// One ResNet basic block (two 3×3 convs + identity/projection shortcut).
+fn resnet_basic_block(b: &mut ModelBuilder, cout: usize, stride: usize) {
+    let branch_shape = b.shape();
+    let branch_point = b.last_name();
+    b.conv(3, cout, stride, 1).relu();
+    b.conv(3, cout, 1, 1);
+    if stride != 1 || branch_shape.c != cout {
+        // Projection shortcut: 1×1 conv on the branch input.
+        b.side_conv(branch_shape, 1, cout, stride, 0);
+        let proj = b.last_name();
+        b.add_from(&proj);
+    } else {
+        b.add_from(&branch_point);
+    }
+    b.relu();
+}
+
+/// ResNet-18, CIFAR stem (3×3/s1, no stem pool); stages [2,2,2,2] at
+/// [64,128,256,512]; a 1×1 "bridge conv" 512→64 keeps the final stage's
+/// 4×4 spatial so the flatten is exactly 4·4·64 = 1024 (paper §4's
+/// final-layer modification, chosen to match the reported param budget).
+/// Conv params ≈ 11.21M (paper 11.159M).
+pub fn resnet18(dataset: Dataset) -> Model {
+    let mut b = ModelBuilder::new("ResNet-18", dataset);
+    b.conv(3, 64, 1, 1).relu(); // 32x32x64
+    resnet_basic_block(&mut b, 64, 1);
+    resnet_basic_block(&mut b, 64, 1);
+    resnet_basic_block(&mut b, 128, 2); // 16
+    resnet_basic_block(&mut b, 128, 1);
+    resnet_basic_block(&mut b, 256, 2); // 8
+    resnet_basic_block(&mut b, 256, 1);
+    resnet_basic_block(&mut b, 512, 2); // 4
+    resnet_basic_block(&mut b, 512, 1);
+    b.pwconv(64); // bridge conv: 4x4x64
+    b.flatten(); // 1024 — the bridge
+    b.dense(1024);
+    b.dense(dataset.classes());
+    b.build()
+}
+
+/// The paper's evaluation suite, in Table 2 row order.
+pub fn paper_suite() -> Vec<Model> {
+    vec![
+        lenet(),
+        vgg9(Dataset::Cifar10),
+        mobilenet_v1(Dataset::Cifar10),
+        mobilenet_v2(Dataset::Cifar10),
+        resnet18(Dataset::Cifar10),
+        mobilenet_v1(Dataset::Cifar100),
+        mobilenet_v2(Dataset::Cifar100),
+    ]
+}
+
+/// Look a model up by the CLI name (`lenet`, `vgg9`, `mobilenetv1`, ...).
+pub fn by_name(name: &str, dataset: Dataset) -> Option<Model> {
+    match name.to_ascii_lowercase().as_str() {
+        "lenet" => Some(lenet()),
+        "vgg9" => Some(vgg9(dataset)),
+        "mobilenetv1" | "mobilenet_v1" | "mbv1" => Some(mobilenet_v1(dataset)),
+        "mobilenetv2" | "mobilenet_v2" | "mbv2" => Some(mobilenet_v2(dataset)),
+        "resnet18" | "resnet-18" | "resnet" => Some(resnet18(dataset)),
+        _ => None,
+    }
+}
+
+#[allow(unused)]
+fn _shape_helper() -> FeatureShape {
+    FeatureShape::new(1, 1, 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_models_validate_against_32x32_array() {
+        for m in paper_suite() {
+            m.validate(1024).unwrap_or_else(|e| panic!("{}: {e}", m.name));
+        }
+    }
+
+    #[test]
+    fn all_cifar_bridges_are_1024() {
+        for m in paper_suite() {
+            if m.dataset != Dataset::Mnist {
+                assert_eq!(m.bridge_width(), Some(1024), "{}", m.name);
+            }
+        }
+    }
+
+    #[test]
+    fn lenet_matches_paper_exactly() {
+        let m = lenet();
+        assert_eq!(m.bridge_width(), Some(256));
+        assert_eq!(m.conv_params(), 2572); // 156 + 2416
+        assert_eq!(m.fc_weight_params(), 41640); // 30720 + 10080 + 840
+        assert_eq!(m.fc_bias_params(), 214);
+        assert_eq!(m.total_params_fp32(), 44426); // -> 0.1777 decimal MB FP32
+    }
+
+    #[test]
+    fn cifar10_fc_heads_match_paper_rram() {
+        // 1024*1024 + 1024*10 weights, 2 bits each = 0.2647 decimal MB
+        let m = vgg9(Dataset::Cifar10);
+        assert_eq!(m.fc_weight_params(), 1024 * 1024 + 1024 * 10);
+        let m = mobilenet_v1(Dataset::Cifar100);
+        assert_eq!(m.fc_weight_params(), 1024 * 1024 + 1024 * 100);
+    }
+
+    #[test]
+    fn conv_param_budgets_near_paper() {
+        // (model, paper conv params in M = paper SRAM MB / 4 bytes)
+        let cases: Vec<(Model, f64, f64)> = vec![
+            (vgg9(Dataset::Cifar10), 8.628, 0.02),
+            (mobilenet_v1(Dataset::Cifar10), 3.185, 0.05),
+            (mobilenet_v2(Dataset::Cifar10), 2.167, 0.08),
+            (resnet18(Dataset::Cifar10), 11.159, 0.02),
+        ];
+        for (m, target_m, tol) in cases {
+            let got = m.conv_params() as f64 / 1e6;
+            let rel = (got - target_m).abs() / target_m;
+            assert!(
+                rel <= tol,
+                "{}: conv params {got:.3}M vs paper {target_m}M (rel {rel:.3} > tol {tol})",
+                m.name
+            );
+        }
+    }
+
+    #[test]
+    fn depthwise_models_have_depthwise_layers() {
+        let m = mobilenet_v1(Dataset::Cifar10);
+        let n_dw = m
+            .layers
+            .iter()
+            .filter(|l| matches!(l.kind, crate::workload::layer::LayerKind::DepthwiseConv2d { .. }))
+            .count();
+        assert_eq!(n_dw, 13); // stock MobileNetV1 has 13 depthwise convs
+    }
+
+    #[test]
+    fn resnet_has_three_projections() {
+        let m = resnet18(Dataset::Cifar10);
+        let n_side = m.layers.iter().filter(|l| l.side).count();
+        assert_eq!(n_side, 3);
+    }
+
+    #[test]
+    fn suite_has_paper_row_order() {
+        let names: Vec<String> = paper_suite()
+            .iter()
+            .map(|m| format!("{}/{}", m.name, m.dataset.label()))
+            .collect();
+        assert_eq!(
+            names,
+            vec![
+                "LeNet/MNIST",
+                "VGG9/CIFAR-10",
+                "MobileNetV1/CIFAR-10",
+                "MobileNetV2/CIFAR-10",
+                "ResNet-18/CIFAR-10",
+                "MobileNetV1/CIFAR-100",
+                "MobileNetV2/CIFAR-100"
+            ]
+        );
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert!(by_name("LeNet", Dataset::Mnist).is_some());
+        assert!(by_name("vgg9", Dataset::Cifar10).is_some());
+        assert!(by_name("nope", Dataset::Cifar10).is_none());
+    }
+}

@@ -1,0 +1,152 @@
+//! Architecture-level invariants over the whole zoo + randomized models:
+//! scheduling, memory accounting, bridge constraints, IMAC fabric
+//! equivalences. These pin the claims the paper's tables rest on.
+
+use tpu_imac::arch::{self, Mode};
+use tpu_imac::arch::memory::MemoryFootprint;
+use tpu_imac::imac::{AdcConfig, ImacConfig, ImacFabric};
+use tpu_imac::systolic::{ArrayConfig, SramConfig};
+use tpu_imac::util::prop::{forall, Gen};
+use tpu_imac::workload::{zoo, Dataset, ModelBuilder};
+
+#[test]
+fn speedup_equals_cycle_ratio_and_exceeds_one() {
+    let cfg = ArrayConfig::default();
+    let sram = SramConfig::default();
+    for m in zoo::paper_suite() {
+        let e = arch::evaluate(&m, &cfg, &sram).unwrap();
+        assert!(e.speedup() > 1.0, "{}", m.name);
+        assert!(
+            (e.speedup() - e.cycles_tpu as f64 / e.cycles_hybrid as f64).abs() < 1e-12
+        );
+    }
+}
+
+#[test]
+fn amdahl_consistency() {
+    // Paper §6: improvements "follow Amdahl's law ... proportional to the
+    // ratio of FC to convolutional layers". Check: speedup == 1 / (1 - f +
+    // f*s) with f the FC cycle fraction and s the per-FC-cycle speedup
+    // implied by our own numbers — i.e. internal consistency of the split.
+    let cfg = ArrayConfig::default();
+    let sram = SramConfig::default();
+    for m in zoo::paper_suite() {
+        let tpu = arch::schedule(&m, &cfg, &sram, Mode::TpuOnly).unwrap();
+        let hyb = arch::schedule(&m, &cfg, &sram, Mode::TpuImac).unwrap();
+        let conv_cycles = hyb.systolic_cycles;
+        let fc_cycles_tpu = tpu.total_cycles - conv_cycles;
+        assert_eq!(
+            hyb.total_cycles,
+            conv_cycles + hyb.imac_cycles,
+            "{}: hybrid must be conv + 1/layer",
+            m.name
+        );
+        assert_eq!(hyb.imac_cycles as usize, m.dense_layers().len());
+        assert!(fc_cycles_tpu > 0);
+    }
+}
+
+#[test]
+fn memory_model_identities() {
+    forall(30, |g: &mut Gen| {
+        // Random small CNN: conv stack + FC head.
+        let mut b = ModelBuilder::new("rand", Dataset::Cifar10);
+        let c1 = g.usize_in(4, 32);
+        b.conv(3, c1, 1, 1).relu().maxpool(2, 2);
+        b.conv(3, g.usize_in(4, 64), 2, 1).relu();
+        b.global_avgpool().flatten();
+        b.dense(g.usize_in(4, 128));
+        b.dense(10);
+        let m = b.build();
+        let f = MemoryFootprint::of(&m);
+        // Identity: TPU bytes = SRAM + FC fp32 bytes.
+        let fc_fp32 = (m.fc_weight_params() + m.fc_bias_params()) * 4;
+        assert_eq!(f.tpu_bytes, f.hybrid_sram_bytes + fc_fp32);
+        // RRAM = 2 bits per FC weight.
+        assert_eq!(f.hybrid_rram_bytes, (2 * m.fc_weight_params() + 7) / 8);
+        // Reduction in (0, 1).
+        let r = f.reduction();
+        assert!(r > 0.0 && r < 1.0, "r={r}");
+    });
+}
+
+#[test]
+fn bridge_wider_than_array_is_rejected() {
+    let mut b = ModelBuilder::new("wide", Dataset::Cifar10);
+    b.conv(3, 8, 1, 1); // 32x32x8 = 8192 flatten > 1024 PEs
+    b.flatten();
+    b.dense(10);
+    let m = b.build();
+    let cfg = ArrayConfig::default();
+    let sram = SramConfig::default();
+    assert!(arch::schedule(&m, &cfg, &sram, Mode::TpuImac).is_err());
+    // A larger array accepts it.
+    let big = ArrayConfig { rows: 128, cols: 128, ..ArrayConfig::default() };
+    assert!(arch::schedule(&m, &big, &sram, Mode::TpuImac).is_ok());
+}
+
+#[test]
+fn imac_fabric_matches_scalar_reference() {
+    // The fabric (partitioned, gain, sigmoid, chained) must equal a direct
+    // scalar evaluation of sigmoid(gain * W^T x) layer by layer.
+    forall(15, |g: &mut Gen| {
+        let n0 = g.usize_in(1, 300);
+        let n1 = g.usize_in(1, 50);
+        let n2 = g.usize_in(1, 12);
+        let w1 = g.vec_ternary(n0 * n1);
+        let w2 = g.vec_ternary(n1 * n2);
+        let x: Vec<f32> = g.vec_sign(n0).iter().map(|&s| s as f32).collect();
+        let cfg = ImacConfig { subarray_rows: 64, subarray_cols: 32, ..Default::default() };
+        let fabric = ImacFabric::build(
+            &[(w1.clone(), n0, n1), (w2.clone(), n1, n2)],
+            &cfg,
+            AdcConfig { bits: 0, full_scale: 1.0 },
+            0,
+        );
+        let got = fabric.forward(&x);
+
+        let layer = |x: &[f32], w: &[i8], n_in: usize, n_out: usize| -> Vec<f32> {
+            let gain = cfg.amp_gain(n_in) as f32;
+            (0..n_out)
+                .map(|j| {
+                    let pre: f32 =
+                        (0..n_in).map(|i| x[i] * w[i * n_out + j] as f32).sum::<f32>() * gain;
+                    1.0 / (1.0 + (-pre).exp())
+                })
+                .collect()
+        };
+        let h1 = layer(&x, &w1, n0, n1);
+        let want = layer(&h1, &w2, n1, n2);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    });
+}
+
+#[test]
+fn adc_bits_only_quantize_do_not_reorder_strongly() {
+    // With 8-bit ADC the argmax of well-separated outputs must not change.
+    forall(20, |g: &mut Gen| {
+        let n0 = 64;
+        let n1 = 10;
+        let w = g.vec_ternary(n0 * n1);
+        let x: Vec<f32> = g.vec_sign(n0).iter().map(|&s| s as f32).collect();
+        let mk = |bits: u32| {
+            ImacFabric::build(
+                &[(w.clone(), n0, n1)],
+                &ImacConfig::default(),
+                AdcConfig { bits, full_scale: 1.0 },
+                0,
+            )
+        };
+        let ideal = mk(0).forward(&x);
+        let quant = mk(8).forward(&x);
+        let am = tpu_imac::util::stats::argmax(&ideal);
+        // Only assert when the winner is clear by more than one LSB (1/255).
+        let mut sorted = ideal.clone();
+        sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        if sorted[0] - sorted[1] > 2.0 / 255.0 {
+            assert_eq!(tpu_imac::util::stats::argmax(&quant), am);
+        }
+    });
+}

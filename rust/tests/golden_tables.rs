@@ -1,0 +1,56 @@
+//! Golden regression tests: the exact Table 2/3 numbers this repo ships in
+//! EXPERIMENTS.md. If a simulator change moves any of these, EXPERIMENTS.md
+//! must be regenerated — the test failure is the reminder.
+
+use tpu_imac::arch;
+use tpu_imac::systolic::{ArrayConfig, SramConfig};
+
+#[test]
+fn golden_cycles_and_memory() {
+    // (model/dataset, tpu_cycles, hybrid_cycles, tpu_mb, sram_mb, rram_mb)
+    let golden: [(&str, u64, u64, f64, f64, f64); 7] = [
+        ("LeNet/MNIST", 2_438, 899, 0.178, 0.010, 0.010),
+        ("VGG9/CIFAR-10", 404_796, 370_964, 38.909, 34.669, 0.265),
+        ("MobileNetV1/CIFAR-10", 213_889, 180_057, 17.024, 12.784, 0.265),
+        ("MobileNetV2/CIFAR-10", 342_515, 308_683, 12.738, 8.499, 0.265),
+        ("ResNet-18/CIFAR-10", 710_112, 676_280, 49.027, 44.787, 0.265),
+        ("MobileNetV1/CIFAR-100", 216_983, 180_057, 17.393, 12.784, 0.288),
+        ("MobileNetV2/CIFAR-100", 345_609, 308_683, 13.107, 8.499, 0.288),
+    ];
+    let evals =
+        arch::evaluate_suite(&ArrayConfig::default(), &SramConfig::default()).unwrap();
+    assert_eq!(evals.len(), golden.len());
+    for (e, g) in evals.iter().zip(&golden) {
+        let key = format!("{}/{}", e.model_name, e.dataset);
+        assert_eq!(key, g.0);
+        assert_eq!(e.cycles_tpu, g.1, "{key} tpu cycles");
+        assert_eq!(e.cycles_hybrid, g.2, "{key} hybrid cycles");
+        assert!((e.mem.tpu_mb() - g.3).abs() < 5e-4, "{key} tpu MB {}", e.mem.tpu_mb());
+        assert!((e.mem.sram_mb() - g.4).abs() < 5e-4, "{key} sram MB {}", e.mem.sram_mb());
+        assert!((e.mem.rram_mb() - g.5).abs() < 5e-4, "{key} rram MB {}", e.mem.rram_mb());
+    }
+}
+
+#[test]
+fn golden_speedups() {
+    let golden: [(&str, f64); 7] = [
+        ("LeNet/MNIST", 2.71),
+        ("VGG9/CIFAR-10", 1.09),
+        ("MobileNetV1/CIFAR-10", 1.19),
+        ("MobileNetV2/CIFAR-10", 1.11),
+        ("ResNet-18/CIFAR-10", 1.05),
+        ("MobileNetV1/CIFAR-100", 1.21),
+        ("MobileNetV2/CIFAR-100", 1.12),
+    ];
+    let evals =
+        arch::evaluate_suite(&ArrayConfig::default(), &SramConfig::default()).unwrap();
+    for (e, g) in evals.iter().zip(&golden) {
+        assert!(
+            (e.speedup() - g.1).abs() < 0.005,
+            "{}: {:.3} vs golden {}",
+            g.0,
+            e.speedup(),
+            g.1
+        );
+    }
+}

@@ -1,0 +1,117 @@
+//! Robustness / failure-injection tests: malformed inputs must produce
+//! errors, never panics or silent corruption.
+
+use tpu_imac::cli::Args;
+use tpu_imac::imac::{AdcConfig, ImacConfig};
+use tpu_imac::nn::DeployedModel;
+use tpu_imac::util::json::Json;
+use tpu_imac::util::prop::{forall, Gen};
+
+#[test]
+fn json_parser_never_panics_on_garbage() {
+    forall(300, |g: &mut Gen| {
+        let len = g.usize_in(0, 60);
+        let bytes: Vec<u8> = (0..len)
+            .map(|_| *g.choose(b"{}[]\",:0123456789.eE+-truefalsenul \n\t\\\"x"))
+            .collect();
+        let s = String::from_utf8_lossy(&bytes).to_string();
+        let _ = Json::parse(&s); // must return, not panic
+    });
+}
+
+#[test]
+fn json_parser_roundtrips_valid_documents() {
+    forall(100, |g: &mut Gen| {
+        // Build a random JSON value and round-trip it.
+        fn gen_val(g: &mut Gen, depth: usize) -> Json {
+            match if depth > 2 { g.usize_in(0, 3) } else { g.usize_in(0, 5) } {
+                0 => Json::Null,
+                1 => Json::Bool(g.bool()),
+                2 => Json::Num((g.i64_in(-1_000_000, 1_000_000) as f64) / 64.0),
+                3 => Json::Str(format!("s{}-\"q\"\n", g.usize_in(0, 99))),
+                4 => Json::Arr((0..g.usize_in(0, 4)).map(|_| gen_val(g, depth + 1)).collect()),
+                _ => {
+                    let mut m = std::collections::BTreeMap::new();
+                    for i in 0..g.usize_in(0, 4) {
+                        m.insert(format!("k{i}"), gen_val(g, depth + 1));
+                    }
+                    Json::Obj(m)
+                }
+            }
+        }
+        let v = gen_val(g, 0);
+        assert_eq!(Json::parse(&v.to_string()).unwrap(), v);
+        assert_eq!(Json::parse(&v.to_pretty()).unwrap(), v);
+    });
+}
+
+#[test]
+fn deployed_model_rejects_malformed_docs() {
+    let cases = [
+        r#"{}"#,                                                       // no layers
+        r#"{"dataset": "mars", "conv_layers": [], "fc_layers": []}"#,  // bad dataset
+        r#"{"dataset": "mnist", "conv_layers": [], "fc_layers": []}"#, // no FC
+        // wrong weight count
+        r#"{"dataset": "mnist", "conv_layers": [],
+            "fc_layers": [{"n_in": 4, "n_out": 2, "w_ternary": [1, 0]}]}"#,
+        // non-ternary
+        r#"{"dataset": "mnist", "conv_layers": [],
+            "fc_layers": [{"n_in": 1, "n_out": 2, "w_ternary": [3, 0]}]}"#,
+        // unknown op kind
+        r#"{"dataset": "mnist", "conv_layers": [{"kind": "warp"}],
+            "fc_layers": [{"n_in": 1, "n_out": 1, "w_ternary": [1]}]}"#,
+    ];
+    for c in cases {
+        let doc = Json::parse(c).unwrap();
+        let r = DeployedModel::from_json(
+            &doc,
+            &ImacConfig::default(),
+            AdcConfig::default(),
+            0,
+        );
+        assert!(r.is_err(), "should reject: {c}");
+    }
+}
+
+#[test]
+fn cli_parser_never_panics() {
+    forall(200, |g: &mut Gen| {
+        let n = g.usize_in(0, 6);
+        let toks: Vec<String> = (0..n)
+            .map(|_| {
+                (*g.choose(&[
+                    "tables", "--x", "--x=1", "--", "-y", "7", "--rows", "abc", "--=",
+                ]))
+                .to_string()
+            })
+            .collect();
+        let _ = Args::parse(toks); // must not panic
+    });
+}
+
+#[test]
+fn stuck_devices_degrade_gracefully() {
+    // Even 100% stuck devices must produce finite outputs (rails, not NaN).
+    use tpu_imac::imac::{CrossbarConfig, DeviceConfig, ImacFabric};
+    let cfg = ImacConfig {
+        crossbar: CrossbarConfig {
+            device: DeviceConfig { stuck_prob: 1.0, ..Default::default() },
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let w = vec![1i8; 64 * 8];
+    let fabric = ImacFabric::build(&[(w, 64, 8)], &cfg, AdcConfig::default(), 3);
+    let x = vec![1.0f32; 64];
+    let out = fabric.forward(&x);
+    assert!(out.iter().all(|v| v.is_finite() && (0.0..=1.0).contains(v)));
+}
+
+#[test]
+fn runtime_open_missing_dir_is_ok_but_load_fails() {
+    // Runtime::open tolerates a missing manifest (artifact-less start);
+    // loading a nonexistent artifact must be a clean error.
+    let mut rt = tpu_imac::runtime::Runtime::open("/nonexistent-dir-xyz").unwrap();
+    assert!(rt.load("nope.hlo.txt").is_err());
+    assert!(rt.artifact_names().is_empty());
+}

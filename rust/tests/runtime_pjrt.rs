@@ -1,0 +1,136 @@
+//! PJRT runtime integration: load the JAX-AOT HLO artifacts, execute them,
+//! and cross-validate against the rust NN engine — the proof that the
+//! three-layer stack composes (Pallas kernel → JAX graph → HLO text →
+//! xla-crate PJRT → rust).
+//!
+//! These tests are artifact-gated: they skip (with a notice) when
+//! `artifacts/` hasn't been built yet, so `cargo test` works pre-`make`.
+
+use tpu_imac::imac::{AdcConfig, ImacConfig};
+use tpu_imac::nn::{DeployedModel, Tensor};
+use tpu_imac::runtime::Runtime;
+use tpu_imac::util::rng::Xoshiro256;
+
+fn artifacts_dir() -> Option<String> {
+    let dir = std::env::var("TPU_IMAC_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if std::path::Path::new(&format!("{dir}/manifest.json")).exists()
+        && std::path::Path::new(&format!("{dir}/weights_lenet.json")).exists()
+    {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn rand_image(rng: &mut Xoshiro256) -> Tensor {
+    Tensor::from_vec(28, 28, 1, (0..784).map(|_| rng.next_f32()).collect())
+}
+
+#[test]
+fn conv_artifact_matches_rust_engine() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::open(&dir).unwrap();
+    rt.check_spec(&ImacConfig::default()).unwrap();
+    let exe = rt.load("lenet_conv_b1.hlo.txt").unwrap();
+    let model = DeployedModel::load(
+        &format!("{dir}/weights_lenet.json"),
+        &ImacConfig::default(),
+        AdcConfig { bits: 0, full_scale: 1.0 },
+        0,
+    )
+    .unwrap();
+
+    let mut rng = Xoshiro256::seed_from_u64(11);
+    for _ in 0..4 {
+        let img = rand_image(&mut rng);
+        let pjrt_feats = exe.run_f32(&img.data).unwrap();
+        let rust_feats = model.conv_features(&img);
+        assert_eq!(pjrt_feats.len(), rust_feats.len());
+        let mut max_diff = 0.0f32;
+        for (a, b) in pjrt_feats.iter().zip(&rust_feats) {
+            max_diff = max_diff.max((a - b).abs());
+        }
+        assert!(max_diff < 1e-3, "conv features diverge: max diff {max_diff}");
+    }
+}
+
+#[test]
+fn full_artifact_matches_composed_pipeline() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::open(&dir).unwrap();
+    let conv = rt.load("lenet_conv_b1.hlo.txt").unwrap();
+    let conv_name = conv.name.clone();
+    rt.load("lenet_full_b1.hlo.txt").unwrap();
+    rt.load("imac_fc_b1.hlo.txt").unwrap();
+
+    let mut rng = Xoshiro256::seed_from_u64(13);
+    for _ in 0..4 {
+        let img = rand_image(&mut rng);
+        let feats = rt.get(&conv_name).unwrap().run_f32(&img.data).unwrap();
+        let signs: Vec<f32> =
+            feats.iter().map(|&v| if v >= 0.0 { 1.0 } else { -1.0 }).collect();
+        let fc_out = rt.get("imac_fc_b1.hlo.txt").unwrap().run_f32(&signs).unwrap();
+        let full_out = rt.get("lenet_full_b1.hlo.txt").unwrap().run_f32(&img.data).unwrap();
+        for (a, b) in fc_out.iter().zip(&full_out) {
+            assert!((a - b).abs() < 1e-5, "composition mismatch: {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn pjrt_fc_matches_rust_imac_fabric() {
+    // The Pallas imac kernel (lowered into HLO) and the rust analog fabric
+    // must agree on the same ternary weights — the L1/L3 numerics contract.
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::open(&dir).unwrap();
+    let fc = rt.load("imac_fc_b1.hlo.txt").unwrap();
+    let model = DeployedModel::load(
+        &format!("{dir}/weights_lenet.json"),
+        &ImacConfig::default(),
+        AdcConfig { bits: 0, full_scale: 1.0 },
+        0,
+    )
+    .unwrap();
+    let n_in = model.fabric.n_in();
+    let mut rng = Xoshiro256::seed_from_u64(17);
+    for _ in 0..4 {
+        let signs: Vec<f32> =
+            (0..n_in).map(|_| if rng.next_u64() & 1 == 1 { 1.0 } else { -1.0 }).collect();
+        let pjrt_out = fc.run_f32(&signs).unwrap();
+        let rust_out = model.fabric.forward(&signs);
+        assert_eq!(pjrt_out.len(), rust_out.len());
+        for (a, b) in pjrt_out.iter().zip(&rust_out) {
+            assert!((a - b).abs() < 1e-4, "L1-vs-L3 mismatch: {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn end_to_end_predictions_agree_native_vs_pjrt() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::open(&dir).unwrap();
+    let full = rt.load("lenet_full_b1.hlo.txt").unwrap();
+    let model = DeployedModel::load(
+        &format!("{dir}/weights_lenet.json"),
+        &ImacConfig::default(),
+        AdcConfig { bits: 0, full_scale: 1.0 },
+        0,
+    )
+    .unwrap();
+    let mut rng = Xoshiro256::seed_from_u64(19);
+    let mut agree = 0;
+    let n = 16;
+    for _ in 0..n {
+        let img = rand_image(&mut rng);
+        let pjrt_scores = full.run_f32(&img.data).unwrap();
+        let rust_pred = model.predict(&img);
+        let pjrt_pred = tpu_imac::util::stats::argmax(&pjrt_scores);
+        if rust_pred == pjrt_pred {
+            agree += 1;
+        }
+    }
+    // Bit-identical float paths are not guaranteed (XLA fuses differently),
+    // but predictions must agree on essentially all random inputs.
+    assert!(agree >= n - 1, "only {agree}/{n} predictions agree");
+}

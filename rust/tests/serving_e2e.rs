@@ -1,0 +1,118 @@
+//! Serving-stack integration: coordinator + backends end to end.
+
+use std::time::Duration;
+
+use tpu_imac::coordinator::{Coordinator, CoordinatorConfig, NativeBackend, PjrtConvBackend};
+use tpu_imac::imac::{AdcConfig, ImacConfig};
+use tpu_imac::nn::{DeployedModel, Tensor};
+use tpu_imac::runtime::Runtime;
+use tpu_imac::util::rng::Xoshiro256;
+
+fn artifacts_dir() -> Option<String> {
+    let dir = std::env::var("TPU_IMAC_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if std::path::Path::new(&format!("{dir}/weights_lenet.json")).exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn load_model(dir: &str) -> DeployedModel {
+    DeployedModel::load(
+        &format!("{dir}/weights_lenet.json"),
+        &ImacConfig::default(),
+        AdcConfig { bits: 0, full_scale: 1.0 },
+        0,
+    )
+    .unwrap()
+}
+
+#[test]
+fn native_serving_matches_direct_inference() {
+    let Some(dir) = artifacts_dir() else { return };
+    let oracle = load_model(&dir);
+    let dir2 = dir.clone();
+    let coord = Coordinator::start(
+        CoordinatorConfig { max_batch: 4, ..Default::default() },
+        move || Box::new(NativeBackend::new(load_model(&dir2))),
+    );
+    let client = coord.client();
+    let mut rng = Xoshiro256::seed_from_u64(23);
+    for _ in 0..12 {
+        let img = Tensor::from_vec(28, 28, 1, (0..784).map(|_| rng.next_f32()).collect());
+        let want = oracle.predict(&img);
+        let resp = client.infer_blocking(img).unwrap();
+        assert_eq!(resp.predicted, want);
+        assert!(resp.latency < Duration::from_secs(5));
+    }
+    let snap = coord.metrics.snapshot();
+    assert_eq!(snap.completed, 12);
+    coord.shutdown();
+}
+
+#[test]
+fn pjrt_serving_matches_native_predictions() {
+    let Some(dir) = artifacts_dir() else { return };
+    if !std::path::Path::new(&format!("{dir}/lenet_conv_b8.hlo.txt")).exists() {
+        eprintln!("SKIP: batch-8 conv artifact missing");
+        return;
+    }
+    let oracle = load_model(&dir);
+    let dir2 = dir.clone();
+    let coord = Coordinator::start(
+        CoordinatorConfig { max_batch: 8, ..Default::default() },
+        move || {
+            let model = load_model(&dir2);
+            let mut rt = Runtime::open(&dir2).unwrap();
+            rt.check_spec(&ImacConfig::default()).unwrap();
+            rt.load("lenet_conv_b8.hlo.txt").unwrap();
+            Box::new(PjrtConvBackend::new(rt, "lenet_conv_b8.hlo.txt", model).unwrap())
+        },
+    );
+    let client = coord.client();
+    let mut rng = Xoshiro256::seed_from_u64(29);
+    let mut pairs = Vec::new();
+    for _ in 0..24 {
+        let img = Tensor::from_vec(28, 28, 1, (0..784).map(|_| rng.next_f32()).collect());
+        let want = oracle.predict(&img);
+        pairs.push((want, client.submit(img).unwrap().1));
+    }
+    let mut agree = 0;
+    for (want, rx) in pairs {
+        let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        if resp.predicted == want {
+            agree += 1;
+        }
+    }
+    assert!(agree >= 23, "only {agree}/24 predictions agree");
+    coord.shutdown();
+}
+
+#[test]
+fn metrics_accumulate_under_load() {
+    let Some(dir) = artifacts_dir() else { return };
+    let dir2 = dir.clone();
+    let coord = Coordinator::start(
+        CoordinatorConfig { max_batch: 8, ..Default::default() },
+        move || Box::new(NativeBackend::new(load_model(&dir2))),
+    );
+    let client = coord.client();
+    let mut rng = Xoshiro256::seed_from_u64(31);
+    let rxs: Vec<_> = (0..40)
+        .map(|_| {
+            let img =
+                Tensor::from_vec(28, 28, 1, (0..784).map(|_| rng.next_f32()).collect());
+            client.submit(img).unwrap().1
+        })
+        .collect();
+    for rx in rxs {
+        rx.recv().unwrap();
+    }
+    let snap = coord.metrics.snapshot();
+    assert_eq!(snap.completed, 40);
+    assert!(snap.batches >= 5);
+    assert!(snap.p95_latency_us >= snap.p50_latency_us);
+    assert!(snap.conv_us_total > 0 && snap.imac_us_total > 0);
+    coord.shutdown();
+}
