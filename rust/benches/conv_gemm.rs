@@ -1,0 +1,125 @@
+//! Conv hot-path bench: the scalar direct oracle (`nn::ops`, the seed's
+//! request path) vs the batched im2col+GEMM engine (`nn::gemm` +
+//! `ConvPlan`) on the LeNet conv stack at batch 8 — the serving shape.
+//!
+//! Run with `cargo bench --bench conv_gemm`; add `-- --json
+//! BENCH_hotpath.json` for a machine-readable report tracked across PRs.
+
+use tpu_imac::imac::{AdcConfig, ImacConfig};
+use tpu_imac::nn::synthetic::lenet_weights_doc;
+use tpu_imac::nn::{DeployedModel, Scratch, Tensor};
+use tpu_imac::util::bench::{black_box, BenchSuite};
+use tpu_imac::util::json::Json;
+use tpu_imac::util::rng::Xoshiro256;
+
+const BATCH: usize = 8;
+
+fn load_model(doc: &Json) -> DeployedModel {
+    DeployedModel::from_json(
+        doc,
+        &ImacConfig::default(),
+        AdcConfig { bits: 0, full_scale: 1.0 },
+        0,
+    )
+    .expect("synthetic model")
+}
+
+fn main() {
+    let mut rng = Xoshiro256::seed_from_u64(17);
+    let doc = lenet_weights_doc(&mut rng);
+    let images: Vec<Tensor> = (0..BATCH)
+        .map(|_| Tensor::from_vec(28, 28, 1, (0..784).map(|_| rng.next_f32() - 0.5).collect()))
+        .collect();
+
+    // Sanity: the two paths must agree before we time them.
+    {
+        let m = load_model(&doc);
+        let mut s = Scratch::new();
+        for img in &images {
+            let want = m.conv_features(img);
+            let got = m.conv_features_into(img, &mut s);
+            let d = tpu_imac::util::stats::max_abs_diff(got, &want);
+            assert!(d < 1e-4, "paths diverge before benching: {d}");
+        }
+    }
+
+    let mut suite = BenchSuite::new("LeNet conv stack, batch 8: direct oracle vs im2col+GEMM");
+    {
+        let m = load_model(&doc);
+        let imgs = images.clone();
+        suite.bench_throughput("direct conv (seed request path)", BATCH as f64, move || {
+            let mut acc = 0u64;
+            for img in &imgs {
+                acc = acc.wrapping_add(m.conv_features(img)[0].to_bits() as u64);
+            }
+            acc
+        });
+    }
+    {
+        let m = load_model(&doc);
+        let imgs = images.clone();
+        let mut s = Scratch::new();
+        suite.bench_throughput("im2col+GEMM, per image", BATCH as f64, move || {
+            let mut acc = 0u64;
+            for img in &imgs {
+                acc = acc.wrapping_add(m.conv_features_into(img, &mut s)[0].to_bits() as u64);
+            }
+            acc
+        });
+    }
+    {
+        let m = load_model(&doc);
+        let imgs = images.clone();
+        let mut s = Scratch::new();
+        suite.bench_throughput("im2col+GEMM, batched (hot path)", BATCH as f64, move || {
+            let refs: Vec<&Tensor> = imgs.iter().collect();
+            let feats = m.plan.run_parts(
+                &refs,
+                &mut s.cols,
+                &mut s.act_a,
+                &mut s.act_b,
+                &mut s.grow_events,
+            );
+            black_box(feats[0].to_bits() as u64)
+        });
+    }
+    {
+        let m = load_model(&doc);
+        let imgs = images.clone();
+        let mut s = Scratch::new();
+        suite.bench_throughput("e2e conv+bridge+IMAC, batched", BATCH as f64, move || {
+            let refs: Vec<&Tensor> = imgs.iter().collect();
+            let mut acc = 0u64;
+            m.infer_batch_into(&refs, &mut s, |_, scores| {
+                acc = acc.wrapping_add(scores[0].to_bits() as u64);
+            });
+            acc
+        });
+    }
+
+    let results = suite.run_cli();
+    let direct = results[0].mean_ns;
+    let gemm_batched = results[2].mean_ns;
+    println!(
+        "speedup (direct / batched GEMM): {:.2}x  [acceptance floor: 3.00x]",
+        direct / gemm_batched
+    );
+
+    // Steady-state allocation check: after warmup (the bench loops above),
+    // a fresh scratch must converge and then never regrow.
+    let m = load_model(&doc);
+    let mut s = Scratch::new();
+    let refs: Vec<&Tensor> = images.iter().collect();
+    m.infer_batch_into(&refs, &mut s, |_, _| {});
+    m.infer_batch_into(&refs, &mut s, |_, _| {});
+    let warm = s.grow_events;
+    for _ in 0..100 {
+        m.infer_batch_into(&refs, &mut s, |_, _| {});
+    }
+    assert_eq!(s.grow_events, warm, "scratch arena regrew at steady state");
+    println!(
+        "scratch arena: {} KiB, {} grow events (all during warmup), zero steady-state growth",
+        s.bytes() / 1024,
+        warm
+    );
+}

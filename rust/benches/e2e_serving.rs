@@ -7,45 +7,9 @@ use std::time::Instant;
 
 use tpu_imac::coordinator::{Coordinator, CoordinatorConfig, NativeBackend};
 use tpu_imac::imac::{AdcConfig, ImacConfig};
+use tpu_imac::nn::synthetic::lenet_weights_doc;
 use tpu_imac::nn::{DeployedModel, Tensor};
-use tpu_imac::util::json::Json;
 use tpu_imac::util::rng::Xoshiro256;
-
-/// Synthetic LeNet-shaped weights doc (random values) for benching without
-/// artifacts.
-fn synthetic_lenet_doc(rng: &mut Xoshiro256) -> Json {
-    let randf = |rng: &mut Xoshiro256, n: usize| -> String {
-        let v: Vec<String> =
-            (0..n).map(|_| format!("{:.4}", rng.uniform(-0.2, 0.2))).collect();
-        format!("[{}]", v.join(","))
-    };
-    let randt = |rng: &mut Xoshiro256, n: usize| -> String {
-        let v: Vec<String> = (0..n).map(|_| ((rng.next_below(3) as i64) - 1).to_string()).collect();
-        format!("[{}]", v.join(","))
-    };
-    let text = format!(
-        r#"{{"row":"lenet-bench","dataset":"mnist","acc_fp32":0,"acc_ternary":0,
-        "conv_layers":[
-          {{"kind":"conv","k":5,"cout":6,"stride":1,"pad":0,"relu":true,"w":{},"w_shape":[5,5,1,6],"b":{}}},
-          {{"kind":"maxpool","k":2,"stride":2}},
-          {{"kind":"conv","k":5,"cout":16,"stride":1,"pad":0,"relu":false,"w":{},"w_shape":[5,5,6,16],"b":{}}},
-          {{"kind":"maxpool","k":2,"stride":2}}
-        ],
-        "fc_layers":[
-          {{"n_in":256,"n_out":120,"w_ternary":{}}},
-          {{"n_in":120,"n_out":84,"w_ternary":{}}},
-          {{"n_in":84,"n_out":10,"w_ternary":{}}}
-        ]}}"#,
-        randf(rng, 150),
-        randf(rng, 6),
-        randf(rng, 2400),
-        randf(rng, 16),
-        randt(rng, 256 * 120),
-        randt(rng, 120 * 84),
-        randt(rng, 84 * 10),
-    );
-    Json::parse(&text).expect("synthetic doc")
-}
 
 fn load_model() -> DeployedModel {
     let imac = ImacConfig::default();
@@ -56,7 +20,7 @@ fn load_model() -> DeployedModel {
     }
     eprintln!("no artifacts; using synthetic LeNet-shaped weights");
     let mut rng = Xoshiro256::seed_from_u64(5);
-    DeployedModel::from_json(&synthetic_lenet_doc(&mut rng), &imac, adc, 0).expect("synthetic")
+    DeployedModel::from_json(&lenet_weights_doc(&mut rng), &imac, adc, 0).expect("synthetic")
 }
 
 fn main() {

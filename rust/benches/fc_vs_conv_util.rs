@@ -62,5 +62,5 @@ fn main() {
         let (_, s) = simulate_network(&cfg2, &SramConfig::default(), &m, Schedule::TpuOnly);
         black_box(s.total_cycles)
     });
-    suite.run();
+    suite.run_cli();
 }

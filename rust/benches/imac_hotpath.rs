@@ -87,7 +87,7 @@ fn main() {
             black_box(f.forward(&x)[0].to_bits() as u64)
         });
     }
-    let results = suite.run();
+    let results = suite.run_cli();
     for r in &results {
         if let Some(tput) = r.throughput_per_sec() {
             println!("{}: {:.2} GMAC/s", r.name, tput / 1e9);

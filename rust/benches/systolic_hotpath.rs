@@ -39,7 +39,7 @@ fn main() {
         black_box(run.total_macs)
     });
 
-    let results = suite.run();
+    let results = suite.run_cli();
     for r in &results {
         if r.name.contains("stepper") {
             if let Some(tput) = r.throughput_per_sec() {

@@ -37,5 +37,5 @@ fn main() {
         let evals = arch::evaluate_suite(&cfg, &sram).unwrap();
         black_box(evals.iter().map(|e| e.cycles_tpu).sum::<u64>())
     });
-    suite.run();
+    suite.run_cli();
 }

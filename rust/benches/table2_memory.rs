@@ -37,5 +37,5 @@ fn main() {
         let s: u64 = zoo::paper_suite().iter().map(|m| MemoryFootprint::of(m).tpu_bytes).sum();
         black_box(s)
     });
-    suite.run();
+    suite.run_cli();
 }

@@ -35,5 +35,5 @@ fn main() {
         let evals = arch::evaluate_suite(&cfg, &sram).unwrap();
         black_box(evals.iter().map(|e| (e.speedup() * 1000.0) as u64).sum::<u64>())
     });
-    suite.run();
+    suite.run_cli();
 }

@@ -38,11 +38,13 @@ pub struct ServeDefaults {
     pub max_batch: usize,
     pub max_queue: usize,
     pub batch_timeout_us: u64,
+    /// Native-backend worker pool size (1 = single batcher thread).
+    pub workers: usize,
 }
 
 impl Default for ServeDefaults {
     fn default() -> Self {
-        Self { max_batch: 8, max_queue: 1024, batch_timeout_us: 2000 }
+        Self { max_batch: 8, max_queue: 1024, batch_timeout_us: 2000, workers: 1 }
     }
 }
 
@@ -52,6 +54,7 @@ impl ServeDefaults {
             max_batch: self.max_batch,
             max_queue: self.max_queue,
             batch_timeout: std::time::Duration::from_micros(self.batch_timeout_us),
+            workers: self.workers,
         }
     }
 }
@@ -148,6 +151,9 @@ impl Config {
             }
             if let Some(v) = serve.get("batch_timeout_us").as_u64() {
                 cfg.serve.batch_timeout_us = v;
+            }
+            if let Some(v) = serve.get("workers").as_usize() {
+                cfg.serve.workers = v;
             }
         }
         Ok(cfg)

@@ -3,11 +3,17 @@
 //! Both backends mirror the hardware split — conv section FP32 (systolic
 //! array), FC section in the rust IMAC analog fabric:
 //!
-//! * [`NativeBackend`] — conv via the rust NN ops. Always available; the
-//!   numerics oracle.
+//! * [`NativeBackend`] — conv via the batched im2col+GEMM plan
+//!   ([`crate::nn::ConvPlan`]) with a per-worker scratch arena: one im2col
+//!   per batch layer, one GEMM over `batch×patches` rows, zero steady-state
+//!   allocations. Always available. (The scalar direct path in
+//!   [`crate::nn::ops`] remains the numerics oracle; the two are
+//!   property-tested equivalent.)
 //! * [`PjrtConvBackend`] — conv via the JAX-AOT-compiled PJRT executable
-//!   (`lenet_conv_b{B}.hlo.txt`), padded to the artifact batch size. This
-//!   is the production path: XLA-optimized conv, zero Python.
+//!   (`lenet_conv_b{B}.hlo.txt`), padded to the artifact batch size. The
+//!   production path when the `pjrt` feature (and artifact set) is
+//!   available; the FC section still finishes in the analog fabric through
+//!   the same scratch buffers.
 
 use std::sync::atomic::Ordering;
 use std::time::Instant;
@@ -15,7 +21,7 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use crate::metrics::Metrics;
-use crate::nn::{DeployedModel, Tensor};
+use crate::nn::{DeployedModel, Scratch, Tensor};
 use crate::runtime::Runtime;
 
 /// A batch executor. `infer_batch` returns one score vector per image.
@@ -28,33 +34,48 @@ pub trait InferenceBackend {
     }
 }
 
-/// Pure-rust backend: conv ops + IMAC fabric.
+/// Pure-rust backend: batched GEMM conv plan + IMAC fabric.
 pub struct NativeBackend {
     pub model: DeployedModel,
+    scratch: Scratch,
 }
 
 impl NativeBackend {
     pub fn new(model: DeployedModel) -> Self {
-        Self { model }
+        Self { model, scratch: Scratch::new() }
+    }
+
+    /// Scratch arena footprint (bytes) — the steady-state working set.
+    pub fn scratch_bytes(&self) -> usize {
+        self.scratch.bytes()
     }
 }
 
 impl InferenceBackend for NativeBackend {
     fn infer_batch(&mut self, images: &[&Tensor], metrics: &Metrics) -> Vec<Vec<f32>> {
-        let mut out = Vec::with_capacity(images.len());
-        for img in images {
-            let t0 = Instant::now();
-            let feats = self.model.conv_features(img);
-            metrics
-                .conv_us_total
-                .fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
-            let t1 = Instant::now();
-            let scores = self.model.infer_from_features(&feats);
-            metrics
-                .imac_us_total
-                .fetch_add(t1.elapsed().as_micros() as u64, Ordering::Relaxed);
-            out.push(scores);
+        if images.is_empty() {
+            return Vec::new();
         }
+        let model = &self.model;
+        let flen = model.plan.feat_len();
+        let Scratch { cols, act_a, act_b, fc_a, fc_b, grow_events } = &mut self.scratch;
+
+        // Conv section: one im2col + GEMM pass over the whole batch.
+        let t0 = Instant::now();
+        let feats = model.plan.run_parts(images, cols, act_a, act_b, grow_events);
+        metrics.conv_us_total.fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+
+        // Bridge + FC section: per image through the analog fabric.
+        let t1 = Instant::now();
+        let mut out = Vec::with_capacity(images.len());
+        for row in feats.chunks_exact_mut(flen) {
+            DeployedModel::bridge_in_place(row);
+            out.push(model.fabric.forward_into(row, fc_a, fc_b).to_vec());
+        }
+        metrics.imac_us_total.fetch_add(t1.elapsed().as_micros() as u64, Ordering::Relaxed);
+
+        metrics.gemm_images.fetch_add(images.len() as u64, Ordering::Relaxed);
+        metrics.scratch_bytes.fetch_max(self.scratch.bytes() as u64, Ordering::Relaxed);
         out
     }
 }
@@ -68,6 +89,7 @@ pub struct PjrtConvBackend {
     in_elems: usize,
     out_elems: usize,
     pub model: DeployedModel,
+    scratch: Scratch,
 }
 
 impl PjrtConvBackend {
@@ -84,7 +106,15 @@ impl PjrtConvBackend {
             "artifact bridge width {out_elems} != fabric {}",
             model.fabric.n_in()
         );
-        Ok(Self { runtime, artifact: artifact.to_string(), batch, in_elems, out_elems, model })
+        Ok(Self {
+            runtime,
+            artifact: artifact.to_string(),
+            batch,
+            in_elems,
+            out_elems,
+            model,
+            scratch: Scratch::new(),
+        })
     }
 
     fn run_chunk(&mut self, chunk: &[&Tensor], metrics: &Metrics) -> Result<Vec<Vec<f32>>> {
@@ -101,14 +131,22 @@ impl PjrtConvBackend {
         }
         let t0 = Instant::now();
         let exe = self.runtime.get(&self.artifact).context("artifact loaded")?;
-        let feats = exe.run_f32(&buf)?;
+        let mut feats = exe.run_f32(&buf)?;
+        anyhow::ensure!(
+            feats.len() == self.batch * self.out_elems,
+            "artifact returned {} elems, manifest says {}x{}",
+            feats.len(),
+            self.batch,
+            self.out_elems
+        );
         metrics.conv_us_total.fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
 
         let t1 = Instant::now();
         let mut out = Vec::with_capacity(chunk.len());
-        for i in 0..chunk.len() {
-            let row = &feats[i * self.out_elems..(i + 1) * self.out_elems];
-            out.push(self.model.infer_from_features(row));
+        let Scratch { fc_a, fc_b, .. } = &mut self.scratch;
+        for row in feats.chunks_exact_mut(self.out_elems).take(chunk.len()) {
+            DeployedModel::bridge_in_place(row);
+            out.push(self.model.fabric.forward_into(row, fc_a, fc_b).to_vec());
         }
         metrics.imac_us_total.fetch_add(t1.elapsed().as_micros() as u64, Ordering::Relaxed);
         Ok(out)
@@ -123,10 +161,11 @@ impl InferenceBackend for PjrtConvBackend {
                 Ok(mut scores) => out.append(&mut scores),
                 Err(e) => {
                     log::error!("pjrt chunk failed: {e:#}");
-                    // Degrade: native path for this chunk.
-                    for img in chunk {
-                        out.push(self.model.infer(img));
-                    }
+                    // Degrade: native GEMM path for this chunk.
+                    self.model.infer_batch_into(chunk, &mut self.scratch, |_, scores| {
+                        out.push(scores.to_vec())
+                    });
+                    metrics.gemm_images.fetch_add(chunk.len() as u64, Ordering::Relaxed);
                 }
             }
         }

@@ -99,9 +99,18 @@ impl Crossbar {
     /// Analog MVM: `out_j = Σ_i v_eff(i)·w_norm[i][j] + offset_j`, in
     /// weight·input logical units (the diff-amp normalization).
     pub fn mvm(&self, x: &[f32], out: &mut [f32]) {
+        out.fill(0.0);
+        self.mvm_acc(x, out);
+    }
+
+    /// Accumulating MVM: `out_j += Σ_i v_eff(i)·w_norm[i][j] + offset_j`.
+    ///
+    /// This is the switch-block current merge in zero-allocation form: the
+    /// fabric sums row-partitions of a logical layer directly into the
+    /// shared output column, with no per-partition staging buffer.
+    pub fn mvm_acc(&self, x: &[f32], out: &mut [f32]) {
         assert_eq!(x.len(), self.n_in);
         assert_eq!(out.len(), self.n_out);
-        out.fill(0.0);
         if self.ideal {
             // Fast path. The kernel is memory-bound on the `out` read-
             // modify-write: processing four input rows per pass amortizes
@@ -284,6 +293,25 @@ mod tests {
         let out = xb.mvm_vec(&[1.0]);
         // zero weights -> output is exactly the offsets, which are nonzero.
         assert!(out[0] != 0.0 || out[1] != 0.0);
+    }
+
+    #[test]
+    fn mvm_acc_accumulates_onto_existing() {
+        forall(20, |g| {
+            let n_in = g.usize_in(1, 40);
+            let n_out = g.usize_in(1, 20);
+            let w = g.vec_ternary(n_in * n_out);
+            let x: Vec<f32> = g.vec_sign(n_in).iter().map(|&s| s as f32).collect();
+            let mut rng = Xoshiro256::seed_from_u64(7);
+            let xb = Crossbar::program(&w, n_in, n_out, CrossbarConfig::default(), &mut rng);
+            let base: Vec<f32> = (0..n_out).map(|j| j as f32).collect();
+            let mut acc = base.clone();
+            xb.mvm_acc(&x, &mut acc);
+            let fresh = xb.mvm_vec(&x);
+            for j in 0..n_out {
+                assert_eq!(acc[j], base[j] + fresh[j]);
+            }
+        });
     }
 
     #[test]

@@ -60,8 +60,6 @@ pub struct ImacLayer {
     partitions: Vec<(usize, Crossbar)>, // (row offset, crossbar)
     pub amp_gain: f32,
     neurons: Vec<Neuron>,
-    /// scratch-free accumulation buffer reused across forward calls would
-    /// require &mut self; serving uses per-thread scratch instead.
     pub subarrays_used: usize,
 }
 
@@ -100,17 +98,15 @@ impl ImacLayer {
         }
     }
 
-    /// Pre-activation (amp output, before the neuron), for inspection.
+    /// Pre-activation (amp output, before the neuron). Allocation-free:
+    /// row-partitions accumulate straight into the shared output column via
+    /// [`Crossbar::mvm_acc`] (the switch-block current merge).
     pub fn preact(&self, x: &[f32], out: &mut [f32]) {
         assert_eq!(x.len(), self.n_in);
         assert_eq!(out.len(), self.n_out);
         out.fill(0.0);
-        let mut part_out = vec![0.0f32; self.n_out];
         for (row, xb) in &self.partitions {
-            xb.mvm(&x[*row..*row + xb.n_in], &mut part_out);
-            for (o, p) in out.iter_mut().zip(&part_out) {
-                *o += p; // switch-block current merge
-            }
+            xb.mvm_acc(&x[*row..*row + xb.n_in], out);
         }
         for o in out.iter_mut() {
             *o *= self.amp_gain;
@@ -192,20 +188,45 @@ impl ImacFabric {
     }
 
     /// End-to-end analog forward from bridge sign inputs (±1) to quantized
-    /// digital outputs. `scratch` must have capacity ≥ max layer width.
+    /// digital outputs. Allocating convenience wrapper over
+    /// [`ImacFabric::forward_into`] for tests/tools; the serving hot path
+    /// passes scratch ping-pong buffers instead.
     pub fn forward(&self, x: &[f32]) -> Vec<f32> {
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        self.forward_into(x, &mut a, &mut b).to_vec()
+    }
+
+    /// Zero-steady-state-allocation forward: chains every logical layer
+    /// through the `a`/`b` ping-pong buffers (grown on first use, reused
+    /// thereafter) and returns the quantized output slice. Pass the
+    /// `fc_a`/`fc_b` fields of one [`crate::nn::Scratch`] per worker.
+    pub fn forward_into<'s>(
+        &self,
+        x: &[f32],
+        a: &'s mut Vec<f32>,
+        b: &'s mut Vec<f32>,
+    ) -> &'s [f32] {
         assert_eq!(x.len(), self.n_in());
-        let mut cur = x.to_vec();
-        let mut next = Vec::new();
-        for layer in &self.layers {
-            next.resize(layer.n_out, 0.0);
-            layer.forward(&cur, &mut next);
-            std::mem::swap(&mut cur, &mut next);
+        if a.len() < x.len() {
+            a.resize(x.len(), 0.0);
         }
-        for v in cur.iter_mut() {
+        a[..x.len()].copy_from_slice(x);
+        let mut cur: &mut Vec<f32> = a;
+        let mut nxt: &mut Vec<f32> = b;
+        let mut width = x.len();
+        for layer in &self.layers {
+            if nxt.len() < layer.n_out {
+                nxt.resize(layer.n_out, 0.0);
+            }
+            layer.forward(&cur[..width], &mut nxt[..layer.n_out]);
+            width = layer.n_out;
+            std::mem::swap(&mut cur, &mut nxt);
+        }
+        for v in cur[..width].iter_mut() {
             *v = self.adc.quantize(*v);
         }
-        cur
+        &cur[..width]
     }
 
     /// Total IMAC latency in TPU cycles: one cycle per logical layer
@@ -297,6 +318,35 @@ mod tests {
         let out = fabric.forward(&x);
         assert!((out[0] - expect).abs() < 1e-6, "{} vs {expect}", out[0]);
         let _ = pre1;
+    }
+
+    #[test]
+    fn forward_into_reuses_buffers_and_matches_forward() {
+        forall(10, |g| {
+            let n_in = g.usize_in(1, 80);
+            let n_mid = g.usize_in(1, 40);
+            let n_out = g.usize_in(1, 12);
+            let w1 = g.vec_ternary(n_in * n_mid);
+            let w2 = g.vec_ternary(n_mid * n_out);
+            let fabric = ImacFabric::build(
+                &[(w1, n_in, n_mid), (w2, n_mid, n_out)],
+                &ideal_cfg(),
+                AdcConfig::default(),
+                g.case as u64,
+            );
+            let x: Vec<f32> = g.vec_sign(n_in).iter().map(|&s| s as f32).collect();
+            let want = fabric.forward(&x);
+            let mut a = Vec::new();
+            let mut b = Vec::new();
+            // Two passes through the same buffers: identical output, and the
+            // second pass must not need to regrow.
+            let first = fabric.forward_into(&x, &mut a, &mut b).to_vec();
+            let (cap_a, cap_b) = (a.capacity(), b.capacity());
+            let second = fabric.forward_into(&x, &mut a, &mut b).to_vec();
+            assert_eq!(first, want);
+            assert_eq!(second, want);
+            assert_eq!((a.capacity(), b.capacity()), (cap_a, cap_b));
+        });
     }
 
     #[test]

@@ -15,10 +15,32 @@
 //!   sign-bit PE→IMAC bridge, LPDDR/SRAM/RRAM memory accounting — [`arch`];
 //! * a **workload IR + zoo** of the paper's seven CNNs — [`workload`];
 //! * a functional **NN inference engine** (FP32 + ternary) — [`nn`];
-//! * a **PJRT runtime** that loads JAX-AOT-compiled HLO artifacts — [`runtime`];
-//! * a threaded **serving coordinator** (batching, routing, metrics) —
-//!   [`coordinator`];
+//! * a **PJRT runtime** that loads JAX-AOT-compiled HLO artifacts —
+//!   [`runtime`] (feature-gated: the default build ships a manifest-only
+//!   stub and serves natively; enable `pjrt` with a vendored `xla` crate
+//!   for the FFI path);
+//! * a threaded **serving coordinator** (batching, routing, backpressure,
+//!   optional multi-worker pool, metrics) — [`coordinator`];
 //! * report generators reproducing every table in the paper — [`report`].
+//!
+//! ## The two conv execution paths
+//!
+//! The conv section (the part the paper maps to the TPU's systolic array)
+//! has two software implementations sharing one weight set:
+//!
+//! * **Direct oracle** — [`nn::ops`]: scalar `lax.conv_general_dilated`
+//!   semantics, one allocation per op, one image at a time. Simple enough
+//!   to audit by eye; used to cross-validate PJRT artifacts, property
+//!   tests, and anything that prizes clarity over speed.
+//! * **GEMM hot path** — [`nn::gemm`] + [`nn::ConvPlan`]: batched im2col +
+//!   cache-blocked GEMM with weights prepacked at model load and every
+//!   intermediate staged in a per-worker [`nn::Scratch`] arena. Zero heap
+//!   allocations at steady state (`tests/alloc_steady_state.rs` proves it
+//!   with a counting allocator); `benches/conv_gemm.rs` tracks its speedup
+//!   over the oracle. This is what [`coordinator::NativeBackend`] serves.
+//!
+//! The paths are property-tested equivalent (≤1e-4, typically bit-equal:
+//! both accumulate the reduction in ascending HWIO order).
 //!
 //! Python (JAX + Pallas) exists only on the build path (`python/compile`):
 //! it trains the mixed-precision models and AOT-lowers inference graphs to

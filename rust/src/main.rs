@@ -14,7 +14,7 @@ use anyhow::{bail, Context, Result};
 
 use tpu_imac::arch::{self, Mode};
 use tpu_imac::cli::Args;
-use tpu_imac::coordinator::{Coordinator, CoordinatorConfig, NativeBackend, PjrtConvBackend};
+use tpu_imac::coordinator::{Coordinator, NativeBackend, PjrtConvBackend};
 use tpu_imac::imac::{AdcConfig, DeviceConfig, ImacConfig};
 use tpu_imac::nn::{DeployedModel, Tensor};
 use tpu_imac::report::{self, AccuracyTable};
@@ -100,6 +100,7 @@ USAGE: tpu-imac <tables|simulate|trace|serve|imac-study|spec> [--flags]
              [--mode tpu|hybrid] [--conservative]
   trace      --model lenet [--layer NAME] --out DIR
   serve      [--artifacts DIR] [--requests N] [--max-batch B] [--native]
+             [--workers N]  (N>1 forces the native GEMM backend pool)
   imac-study [--sigma S] [--alpha A] [--trials N]
   energy     (per-model IMAC latency/energy per inference)
   spec       [--dataflow os|ws|is] [--rows R] [--cols C]";
@@ -239,9 +240,12 @@ fn load_model(artifacts: &str) -> Result<DeployedModel> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    // Config-file serve defaults (--config), overridable by explicit flags.
+    let serve_defaults = full_config(args)?.serve;
     let artifacts = args.get_or("artifacts", "artifacts");
     let n_requests = args.get_usize("requests", 256)?;
-    let max_batch = args.get_usize("max-batch", 8)?;
+    let max_batch = args.get_usize("max-batch", serve_defaults.max_batch)?;
+    let workers = args.get_usize("workers", serve_defaults.workers)?;
     let native = args.has("native");
 
     let model = load_model(&artifacts)?;
@@ -256,9 +260,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
     drop(model);
 
     let artifacts2 = artifacts.clone();
-    let coord = Coordinator::start(CoordinatorConfig { max_batch, ..Default::default() }, move || {
-        make_backend(&artifacts2, max_batch, native)
-    });
+    let mut config = serve_defaults.coordinator();
+    config.max_batch = max_batch;
+    config.workers = workers;
+    let coord = if workers > 1 {
+        // A worker pool requires a re-invocable factory; the PJRT backend
+        // is single-owner state, so a pool always runs the native GEMM
+        // path (one backend + scratch arena per worker).
+        if !native {
+            eprintln!("--workers {workers}: forcing native GEMM backend (PJRT is single-owner)");
+        }
+        Coordinator::start_pool(config, move || make_backend(&artifacts2, max_batch, true))
+    } else {
+        Coordinator::start(config, move || make_backend(&artifacts2, max_batch, native))
+    };
 
     // Synthetic request stream: deterministic pseudo-images.
     let client = coord.client();
@@ -296,6 +311,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         snap.imac_us_total as f64 / 1e3,
         snap.queue_us_total as f64 / 1e3
     );
+    if snap.gemm_images > 0 {
+        println!(
+            "native GEMM path: {} images, scratch high-water {:.1} KiB/worker (zero steady-state allocs)",
+            snap.gemm_images,
+            snap.scratch_bytes as f64 / 1024.0
+        );
+    }
     coord.shutdown();
     Ok(())
 }

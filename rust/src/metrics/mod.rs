@@ -23,6 +23,11 @@ pub struct Metrics {
     pub conv_us_total: AtomicU64,
     pub imac_us_total: AtomicU64,
     pub queue_us_total: AtomicU64,
+    /// Images served through the native im2col+GEMM conv path.
+    pub gemm_images: AtomicU64,
+    /// High-water scratch-arena footprint across workers (bytes); the
+    /// steady-state working set of the zero-allocation hot path.
+    pub scratch_bytes: AtomicU64,
 }
 
 /// A read-only snapshot for reporting.
@@ -40,6 +45,8 @@ pub struct Snapshot {
     pub conv_us_total: u64,
     pub imac_us_total: u64,
     pub queue_us_total: u64,
+    pub gemm_images: u64,
+    pub scratch_bytes: u64,
 }
 
 impl Metrics {
@@ -85,6 +92,8 @@ impl Metrics {
             conv_us_total: self.conv_us_total.load(Ordering::Relaxed),
             imac_us_total: self.imac_us_total.load(Ordering::Relaxed),
             queue_us_total: self.queue_us_total.load(Ordering::Relaxed),
+            gemm_images: self.gemm_images.load(Ordering::Relaxed),
+            scratch_bytes: self.scratch_bytes.load(Ordering::Relaxed),
         }
     }
 }

@@ -13,7 +13,9 @@ use crate::arch::bridge::sign_level;
 use crate::imac::{AdcConfig, ImacConfig, ImacFabric};
 use crate::util::json::Json;
 
+use super::gemm;
 use super::ops;
+use super::scratch::Scratch;
 use super::tensor::Tensor;
 
 /// One conv-section op.
@@ -26,11 +28,263 @@ pub enum ConvOp {
     Gap,
 }
 
+/// One op of the compiled hot-path plan, shapes resolved and weights
+/// prepacked at model load.
+#[derive(Clone, Debug)]
+enum PlanOp {
+    /// Standard conv as im2col + GEMM. `w` is the `(k·k·cin) × cout`
+    /// row-major B matrix (HWIO is already that layout; the prepack is a
+    /// one-time contiguous copy).
+    Gemm {
+        k: usize,
+        cin: usize,
+        cout: usize,
+        stride: usize,
+        pad: usize,
+        relu: bool,
+        w: Vec<f32>,
+        bias: Vec<f32>,
+    },
+    Dw { k: usize, c: usize, stride: usize, pad: usize, relu: bool, w: Vec<f32>, bias: Vec<f32> },
+    MaxPool { k: usize, stride: usize },
+    AvgPool { k: usize, stride: usize },
+    Gap,
+}
+
+/// The compiled conv-section execution plan: shape-checked once at model
+/// load, executed batch-at-a-time through a [`Scratch`] arena with zero
+/// steady-state allocations. The interpretation of [`ConvOp`]s via
+/// [`ops`] remains the numerics oracle; this is the serving hot path.
+#[derive(Clone, Debug)]
+pub struct ConvPlan {
+    ops: Vec<PlanOp>,
+    in_hwc: (usize, usize, usize),
+    feat_len: usize,
+}
+
+impl ConvPlan {
+    /// Shape-check `conv_ops` against the model input and prepack weights.
+    pub fn compile(conv_ops: &[ConvOp], in_hwc: (usize, usize, usize)) -> Result<Self> {
+        let (mut h, mut w, mut c) = in_hwc;
+        let mut ops_out = Vec::with_capacity(conv_ops.len());
+        for (idx, op) in conv_ops.iter().enumerate() {
+            match op {
+                ConvOp::Conv { k, cout, stride, pad, relu, w: wgt, b } => {
+                    if *k == 0 || *cout == 0 {
+                        bail!("conv op {idx}: degenerate k={k} cout={cout}");
+                    }
+                    if wgt.len() != k * k * c * cout {
+                        bail!(
+                            "conv op {idx}: weight len {} != {k}x{k}x{c}x{cout}",
+                            wgt.len()
+                        );
+                    }
+                    if b.len() != *cout {
+                        bail!("conv op {idx}: bias len {} != cout {cout}", b.len());
+                    }
+                    if *stride == 0 || h + 2 * pad < *k || w + 2 * pad < *k {
+                        bail!("conv op {idx}: window {k}/{stride}/{pad} does not fit {h}x{w}");
+                    }
+                    let (oh, ow) = gemm::conv_out_dims(h, w, *k, *stride, *pad);
+                    ops_out.push(PlanOp::Gemm {
+                        k: *k,
+                        cin: c,
+                        cout: *cout,
+                        stride: *stride,
+                        pad: *pad,
+                        relu: *relu,
+                        w: wgt.clone(),
+                        bias: b.clone(),
+                    });
+                    h = oh;
+                    w = ow;
+                    c = *cout;
+                }
+                ConvOp::DwConv { k, stride, pad, relu, w: wgt, b } => {
+                    if *k == 0 || c == 0 {
+                        bail!("dwconv op {idx}: degenerate k={k} c={c}");
+                    }
+                    if wgt.len() != k * k * c {
+                        bail!("dwconv op {idx}: weight len {} != {k}x{k}x{c}", wgt.len());
+                    }
+                    if b.len() != c {
+                        bail!("dwconv op {idx}: bias len {} != c {c}", b.len());
+                    }
+                    if *stride == 0 || h + 2 * pad < *k || w + 2 * pad < *k {
+                        bail!("dwconv op {idx}: window {k}/{stride}/{pad} does not fit {h}x{w}");
+                    }
+                    let (oh, ow) = gemm::conv_out_dims(h, w, *k, *stride, *pad);
+                    ops_out.push(PlanOp::Dw {
+                        k: *k,
+                        c,
+                        stride: *stride,
+                        pad: *pad,
+                        relu: *relu,
+                        w: wgt.clone(),
+                        bias: b.clone(),
+                    });
+                    h = oh;
+                    w = ow;
+                }
+                ConvOp::MaxPool { k, stride } | ConvOp::AvgPool { k, stride } => {
+                    if *k == 0 || *stride == 0 || h < *k || w < *k {
+                        bail!("pool op {idx}: window {k}/{stride} does not fit {h}x{w}");
+                    }
+                    ops_out.push(match op {
+                        ConvOp::MaxPool { .. } => PlanOp::MaxPool { k: *k, stride: *stride },
+                        _ => PlanOp::AvgPool { k: *k, stride: *stride },
+                    });
+                    h = (h - k) / stride + 1;
+                    w = (w - k) / stride + 1;
+                }
+                ConvOp::Gap => {
+                    ops_out.push(PlanOp::Gap);
+                    h = 1;
+                    w = 1;
+                }
+            }
+        }
+        Ok(Self { ops: ops_out, in_hwc, feat_len: h * w * c })
+    }
+
+    /// Bridge-feature width produced per image.
+    pub fn feat_len(&self) -> usize {
+        self.feat_len
+    }
+
+    /// Execute the plan over a whole batch: im2col once per batch layer,
+    /// one GEMM over `batch·patches` rows. Takes the scratch buffers as
+    /// separate parts so callers can keep borrowing the rest of the arena
+    /// (see [`DeployedModel::infer_batch_into`]). Returns the flattened
+    /// `batch × feat_len` feature block living in one of the act buffers.
+    pub fn run_parts<'s>(
+        &self,
+        images: &[&Tensor],
+        cols: &mut Vec<f32>,
+        act_a: &'s mut Vec<f32>,
+        act_b: &'s mut Vec<f32>,
+        grow_events: &mut u64,
+    ) -> &'s mut [f32] {
+        let n = images.len();
+        let (mut h, mut w, mut c) = self.in_hwc;
+        Scratch::ensure(act_a, grow_events, n * h * w * c);
+        for (i, img) in images.iter().enumerate() {
+            assert_eq!(
+                (img.h, img.w, img.c),
+                (h, w, c),
+                "image {i} shape mismatch vs model input"
+            );
+            act_a[i * h * w * c..(i + 1) * h * w * c].copy_from_slice(&img.data);
+        }
+        let mut cur: &mut Vec<f32> = act_a;
+        let mut nxt: &mut Vec<f32> = act_b;
+        for op in &self.ops {
+            match op {
+                PlanOp::Gemm { k, cin, cout, stride, pad, relu, w: wgt, bias } => {
+                    let (oh, ow) = gemm::conv_out_dims(h, w, *k, *stride, *pad);
+                    let patches = oh * ow;
+                    let kk = k * k * cin;
+                    Scratch::ensure(cols, grow_events, n * patches * kk);
+                    Scratch::ensure(nxt, grow_events, n * patches * cout);
+                    let in_len = h * w * c;
+                    for i in 0..n {
+                        gemm::im2col_into(
+                            &cur[i * in_len..(i + 1) * in_len],
+                            h,
+                            w,
+                            c,
+                            *k,
+                            *stride,
+                            *pad,
+                            &mut cols[i * patches * kk..(i + 1) * patches * kk],
+                        );
+                    }
+                    gemm::gemm_bias(
+                        &cols[..n * patches * kk],
+                        n * patches,
+                        kk,
+                        wgt,
+                        *cout,
+                        bias,
+                        *relu,
+                        &mut nxt[..n * patches * cout],
+                    );
+                    h = oh;
+                    w = ow;
+                    c = *cout;
+                }
+                PlanOp::Dw { k, c: ch, stride, pad, relu, w: wgt, bias } => {
+                    let (oh, ow) = gemm::conv_out_dims(h, w, *k, *stride, *pad);
+                    Scratch::ensure(nxt, grow_events, n * oh * ow * ch);
+                    let in_len = h * w * c;
+                    let out_len = oh * ow * ch;
+                    for i in 0..n {
+                        gemm::dwconv2d_into(
+                            &cur[i * in_len..(i + 1) * in_len],
+                            h,
+                            w,
+                            *ch,
+                            wgt,
+                            bias,
+                            *k,
+                            *stride,
+                            *pad,
+                            *relu,
+                            &mut nxt[i * out_len..(i + 1) * out_len],
+                        );
+                    }
+                    h = oh;
+                    w = ow;
+                }
+                PlanOp::MaxPool { k, stride } | PlanOp::AvgPool { k, stride } => {
+                    let oh = (h - k) / stride + 1;
+                    let ow = (w - k) / stride + 1;
+                    Scratch::ensure(nxt, grow_events, n * oh * ow * c);
+                    let in_len = h * w * c;
+                    let out_len = oh * ow * c;
+                    let is_max = matches!(op, PlanOp::MaxPool { .. });
+                    for i in 0..n {
+                        let src = &cur[i * in_len..(i + 1) * in_len];
+                        let dst = &mut nxt[i * out_len..(i + 1) * out_len];
+                        if is_max {
+                            gemm::maxpool_into(src, h, w, c, *k, *stride, dst);
+                        } else {
+                            gemm::avgpool_into(src, h, w, c, *k, *stride, dst);
+                        }
+                    }
+                    h = oh;
+                    w = ow;
+                }
+                PlanOp::Gap => {
+                    Scratch::ensure(nxt, grow_events, n * c);
+                    let in_len = h * w * c;
+                    for i in 0..n {
+                        gemm::gap_into(
+                            &cur[i * in_len..(i + 1) * in_len],
+                            h,
+                            w,
+                            c,
+                            &mut nxt[i * c..(i + 1) * c],
+                        );
+                    }
+                    h = 1;
+                    w = 1;
+                }
+            }
+            std::mem::swap(&mut cur, &mut nxt);
+        }
+        debug_assert_eq!(h * w * c, self.feat_len);
+        &mut cur[..n * self.feat_len]
+    }
+}
+
 /// A deployed mixed-precision model.
 pub struct DeployedModel {
     pub row: String,
     pub dataset: String,
     pub conv_ops: Vec<ConvOp>,
+    /// Prepacked im2col+GEMM execution plan (compiled once at load).
+    pub plan: ConvPlan,
     pub fabric: ImacFabric,
     /// Accuracies recorded at training time (for reports).
     pub acc_fp32: f64,
@@ -104,10 +358,19 @@ impl DeployedModel {
             bail!("model has no FC layers");
         }
         let fabric = ImacFabric::build(&fc_specs, imac, adc, seed);
+        let plan = ConvPlan::compile(&conv_ops, input_hwc).context("compiling conv plan")?;
+        if plan.feat_len() != fabric.n_in() {
+            bail!(
+                "conv section produces {} bridge features but FC section expects {}",
+                plan.feat_len(),
+                fabric.n_in()
+            );
+        }
         Ok(Self {
             row: doc.get("row").as_str().unwrap_or("?").to_string(),
             dataset,
             conv_ops,
+            plan,
             fabric,
             acc_fp32: doc.get("acc_fp32").as_f64().unwrap_or(f64::NAN),
             acc_ternary: doc.get("acc_ternary").as_f64().unwrap_or(f64::NAN),
@@ -147,11 +410,61 @@ impl DeployedModel {
         feats.iter().map(|&v| sign_level(v)).collect()
     }
 
+    /// The bridge applied in place (the hot path re-uses the feature
+    /// buffer as the sign buffer — no copy, no allocation).
+    pub fn bridge_in_place(feats: &mut [f32]) {
+        for v in feats.iter_mut() {
+            *v = sign_level(*v);
+        }
+    }
+
     /// Full inference: image -> class scores (final sigmoid/ADC outputs).
     pub fn infer(&self, img: &Tensor) -> Vec<f32> {
         let feats = self.conv_features(img);
         let signs = self.bridge(&feats);
         self.fabric.forward(&signs)
+    }
+
+    /// Hot-path conv stack (im2col+GEMM plan): image -> raw bridge features
+    /// staged in the scratch arena. Zero allocations once warm.
+    pub fn conv_features_into<'s>(&self, img: &Tensor, scratch: &'s mut Scratch) -> &'s [f32] {
+        let Scratch { cols, act_a, act_b, grow_events, .. } = scratch;
+        &*self.plan.run_parts(&[img], cols, act_a, act_b, grow_events)
+    }
+
+    /// Hot-path full inference: image -> class scores through the GEMM conv
+    /// plan, in-place bridge, and the fabric's ping-pong buffers. The
+    /// returned slice lives in `scratch` — copy it out before the next call.
+    /// Zero allocations once warm.
+    pub fn infer_into<'s>(&self, img: &Tensor, scratch: &'s mut Scratch) -> &'s [f32] {
+        let Scratch { cols, act_a, act_b, fc_a, fc_b, grow_events } = scratch;
+        let feats = self.plan.run_parts(&[img], cols, act_a, act_b, grow_events);
+        Self::bridge_in_place(feats);
+        self.fabric.forward_into(feats, fc_a, fc_b)
+    }
+
+    /// Hot-path batched inference: conv runs as one im2col+GEMM over
+    /// `batch×patches` rows, then each image's features bridge and flow
+    /// through the analog fabric. `sink(i, scores)` is called once per
+    /// image in order. Zero allocations once warm (the sink decides what
+    /// to do with each score slice).
+    pub fn infer_batch_into<F: FnMut(usize, &[f32])>(
+        &self,
+        images: &[&Tensor],
+        scratch: &mut Scratch,
+        mut sink: F,
+    ) {
+        if images.is_empty() {
+            return;
+        }
+        let flen = self.plan.feat_len();
+        let Scratch { cols, act_a, act_b, fc_a, fc_b, grow_events } = scratch;
+        let feats = self.plan.run_parts(images, cols, act_a, act_b, grow_events);
+        for (i, row) in feats.chunks_exact_mut(flen).enumerate() {
+            Self::bridge_in_place(row);
+            let scores = self.fabric.forward_into(row, fc_a, fc_b);
+            sink(i, scores);
+        }
     }
 
     /// FC-only path from precomputed bridge features (used when the conv
@@ -222,6 +535,86 @@ mod tests {
         let img = Tensor::from_vec(28, 28, 1, vec![-0.25; 28 * 28]);
         let feats = m.conv_features(&img);
         assert_eq!(m.infer_from_features(&feats), m.infer(&img));
+    }
+
+    #[test]
+    fn gemm_plan_matches_direct_path() {
+        let m = DeployedModel::from_json(
+            &tiny_doc(),
+            &ImacConfig::default(),
+            AdcConfig { bits: 0, full_scale: 1.0 },
+            0,
+        )
+        .unwrap();
+        let mut rng = crate::util::rng::Xoshiro256::seed_from_u64(3);
+        let mut scratch = Scratch::new();
+        for _ in 0..4 {
+            let img =
+                Tensor::from_vec(28, 28, 1, (0..784).map(|_| rng.next_f32() - 0.5).collect());
+            let want_feats = m.conv_features(&img);
+            let got_feats = m.conv_features_into(&img, &mut scratch).to_vec();
+            assert_eq!(got_feats, want_feats, "GEMM plan features diverge from oracle");
+            let want = m.infer(&img);
+            let got = m.infer_into(&img, &mut scratch).to_vec();
+            assert_eq!(got.len(), want.len());
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-6, "{g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn batched_plan_matches_per_image() {
+        let m = DeployedModel::from_json(
+            &tiny_doc(),
+            &ImacConfig::default(),
+            AdcConfig { bits: 0, full_scale: 1.0 },
+            0,
+        )
+        .unwrap();
+        let mut rng = crate::util::rng::Xoshiro256::seed_from_u64(5);
+        let images: Vec<Tensor> = (0..5)
+            .map(|_| Tensor::from_vec(28, 28, 1, (0..784).map(|_| rng.next_f32() - 0.5).collect()))
+            .collect();
+        let refs: Vec<&Tensor> = images.iter().collect();
+        let mut scratch = Scratch::new();
+        let mut got: Vec<(usize, Vec<f32>)> = Vec::new();
+        m.infer_batch_into(&refs, &mut scratch, |i, scores| got.push((i, scores.to_vec())));
+        assert_eq!(got.len(), images.len());
+        for (i, scores) in &got {
+            let want = m.infer(&images[*i]);
+            for (g, w) in scores.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-6, "img {i}: {g} vs {w}");
+            }
+        }
+        // Steady state: a second batch through the same scratch must not grow.
+        let grows = scratch.grow_events;
+        m.infer_batch_into(&refs, &mut scratch, |_, _| {});
+        assert_eq!(scratch.grow_events, grows, "scratch regrew at steady state");
+    }
+
+    #[test]
+    fn plan_rejects_bad_shapes() {
+        // Weight length inconsistent with k/cin/cout must fail at load, not
+        // panic at request time.
+        let doc = Json::parse(
+            r#"{
+              "row": "bad", "dataset": "mnist",
+              "conv_layers": [
+                {"kind": "conv", "k": 3, "cout": 2, "stride": 1, "pad": 0,
+                 "relu": false, "w": [1.0, 2.0], "b": [0.0, 0.0]}
+              ],
+              "fc_layers": [ {"n_in": 1, "n_out": 2, "w_ternary": [1, -1]} ]
+            }"#,
+        )
+        .unwrap();
+        let r = DeployedModel::from_json(
+            &doc,
+            &ImacConfig::default(),
+            AdcConfig::default(),
+            0,
+        );
+        assert!(r.is_err());
     }
 
     #[test]

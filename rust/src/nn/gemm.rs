@@ -1,0 +1,487 @@
+//! im2col + cache-blocked GEMM conv engine: the serving hot path.
+//!
+//! [`super::ops`] is the numerics oracle — scalar, allocation-per-op,
+//! per-image. This module is the production path: convolution lowered to a
+//! dense `patches × (k·k·cin)` by `(k·k·cin) × cout` matrix product over a
+//! whole batch at once, staged through caller-owned scratch buffers so the
+//! steady state allocates nothing.
+//!
+//! Design (what the blocking buys on a bandwidth-bound CPU):
+//!
+//! * **im2col** turns the 7-deep conv loop nest into contiguous rows; all
+//!   padding/stride control flow happens once per patch during staging, and
+//!   the multiply loop is branch-free.
+//! * The GEMM kernel processes **four A-rows per pass** over a B panel:
+//!   each weight row is loaded once per four output rows, amortizing the
+//!   dominant B-matrix traffic 4× and giving the autovectorizer four
+//!   independent FMA streams (same recipe as `imac::crossbar`'s MVM).
+//! * B panels are walked in **`KC`-row blocks** so the active weight slice
+//!   stays cache-resident across the whole `m` dimension of a batch.
+//! * Accumulation order over the reduction dimension is ascending `p` for
+//!   every output element — identical to the direct oracle — so the two
+//!   paths agree to float associativity (property-tested at 1e-4, typically
+//!   bit-equal).
+//!
+//! Weights stay in HWIO layout (`w[ky][kx][cin][cout]`), which *is* the
+//! row-major B matrix — the prepack in `engine::ConvPlan` is a one-time
+//! copy into its own contiguous allocation plus shape bookkeeping.
+
+/// Reduction-dimension block size (rows of B kept hot per pass).
+pub const KC: usize = 256;
+
+/// Output spatial dims for a conv/pool window. Panics when the kernel does
+/// not fit (same contract as the oracle ops).
+#[inline]
+pub fn conv_out_dims(h: usize, w: usize, k: usize, stride: usize, pad: usize) -> (usize, usize) {
+    assert!(h + 2 * pad >= k && w + 2 * pad >= k, "kernel {k} exceeds padded input {h}x{w}+{pad}");
+    ((h + 2 * pad - k) / stride + 1, (w + 2 * pad - k) / stride + 1)
+}
+
+/// Stage one NHWC image (`h×w×c` at `x`) as im2col rows into `cols`, which
+/// must hold exactly `oh·ow·k·k·c` elements. Row `oy·ow+ox` holds the patch
+/// `[ky][kx][ci]` in HWIO reduction order; out-of-bounds taps are zeroed.
+pub fn im2col_into(
+    x: &[f32],
+    h: usize,
+    w: usize,
+    c: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    cols: &mut [f32],
+) -> (usize, usize) {
+    assert_eq!(x.len(), h * w * c, "input shape");
+    let (oh, ow) = conv_out_dims(h, w, k, stride, pad);
+    let kk = k * k * c;
+    assert_eq!(cols.len(), oh * ow * kk, "cols buffer shape");
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let row = (oy * ow + ox) * kk;
+            for ky in 0..k {
+                let iy = (oy * stride + ky) as isize - pad as isize;
+                let dst = row + ky * k * c;
+                if iy < 0 || iy as usize >= h {
+                    cols[dst..dst + k * c].fill(0.0);
+                    continue;
+                }
+                let iy = iy as usize;
+                let ix0 = (ox * stride) as isize - pad as isize;
+                if ix0 >= 0 && ix0 as usize + k <= w {
+                    // The kx taps are consecutive input columns regardless
+                    // of stride; whole run in-bounds: one memcpy.
+                    let src = (iy * w + ix0 as usize) * c;
+                    cols[dst..dst + k * c].copy_from_slice(&x[src..src + k * c]);
+                } else {
+                    for kx in 0..k {
+                        let ix = (ox * stride + kx) as isize - pad as isize;
+                        let d = dst + kx * c;
+                        if ix < 0 || ix as usize >= w {
+                            cols[d..d + c].fill(0.0);
+                        } else {
+                            let src = (iy * w + ix as usize) * c;
+                            cols[d..d + c].copy_from_slice(&x[src..src + c]);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    (oh, ow)
+}
+
+/// Blocked GEMM with fused bias and optional ReLU:
+/// `out[m×n] = a[m×kk] · b[kk×n] + bias[n]`, all row-major.
+///
+/// Every output row accumulates in ascending-`p` order (matching the direct
+/// conv oracle); rows are processed four at a time so each B row is read
+/// once per four A rows.
+pub fn gemm_bias(
+    a: &[f32],
+    m: usize,
+    kk: usize,
+    b: &[f32],
+    n: usize,
+    bias: &[f32],
+    relu: bool,
+    out: &mut [f32],
+) {
+    assert_eq!(a.len(), m * kk, "A shape");
+    assert_eq!(b.len(), kk * n, "B shape");
+    assert_eq!(bias.len(), n, "bias shape");
+    assert_eq!(out.len(), m * n, "out shape");
+    for row in out.chunks_exact_mut(n) {
+        row.copy_from_slice(bias);
+    }
+    let mut pc = 0;
+    while pc < kk {
+        let kc = KC.min(kk - pc);
+        let mut i = 0;
+        // Four-row register blocking over the current B panel.
+        while i + 4 <= m {
+            let block = &mut out[i * n..(i + 4) * n];
+            let (r0, rest) = block.split_at_mut(n);
+            let (r1, rest) = rest.split_at_mut(n);
+            let (r2, r3) = rest.split_at_mut(n);
+            for p in pc..pc + kc {
+                let a0 = a[i * kk + p];
+                let a1 = a[(i + 1) * kk + p];
+                let a2 = a[(i + 2) * kk + p];
+                let a3 = a[(i + 3) * kk + p];
+                if a0 == 0.0 && a1 == 0.0 && a2 == 0.0 && a3 == 0.0 {
+                    continue;
+                }
+                let brow = &b[p * n..(p + 1) * n];
+                for (j, &bv) in brow.iter().enumerate() {
+                    r0[j] += a0 * bv;
+                    r1[j] += a1 * bv;
+                    r2[j] += a2 * bv;
+                    r3[j] += a3 * bv;
+                }
+            }
+            i += 4;
+        }
+        // Tail rows, scalar.
+        while i < m {
+            let orow = &mut out[i * n..(i + 1) * n];
+            for p in pc..pc + kc {
+                let av = a[i * kk + p];
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b[p * n..(p + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+            i += 1;
+        }
+        pc += kc;
+    }
+    if relu {
+        for v in out.iter_mut() {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+    }
+}
+
+/// Depthwise conv into a caller-owned buffer with fused ReLU (depthwise
+/// gains nothing from im2col — each output channel touches only `k·k`
+/// weights — so this is the register-friendly direct form).
+pub fn dwconv2d_into(
+    x: &[f32],
+    h: usize,
+    w: usize,
+    c: usize,
+    wgt: &[f32],
+    bias: &[f32],
+    k: usize,
+    stride: usize,
+    pad: usize,
+    relu: bool,
+    out: &mut [f32],
+) -> (usize, usize) {
+    assert_eq!(x.len(), h * w * c, "input shape");
+    assert_eq!(wgt.len(), k * k * c, "weight shape");
+    assert_eq!(bias.len(), c, "bias shape");
+    let (oh, ow) = conv_out_dims(h, w, k, stride, pad);
+    assert_eq!(out.len(), oh * ow * c, "out shape");
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let base = (oy * ow + ox) * c;
+            out[base..base + c].copy_from_slice(bias);
+            for ky in 0..k {
+                let iy = (oy * stride + ky) as isize - pad as isize;
+                if iy < 0 || iy as usize >= h {
+                    continue;
+                }
+                for kx in 0..k {
+                    let ix = (ox * stride + kx) as isize - pad as isize;
+                    if ix < 0 || ix as usize >= w {
+                        continue;
+                    }
+                    let xin = &x[((iy as usize) * w + ix as usize) * c..][..c];
+                    let wrow = &wgt[(ky * k + kx) * c..][..c];
+                    let orow = &mut out[base..base + c];
+                    for ((o, &xv), &wv) in orow.iter_mut().zip(xin).zip(wrow) {
+                        *o += xv * wv;
+                    }
+                }
+            }
+            if relu {
+                for v in out[base..base + c].iter_mut() {
+                    if *v < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+            }
+        }
+    }
+    (oh, ow)
+}
+
+/// Max pool (VALID windows) into a caller-owned buffer, channel-vectorized.
+/// Matches `ops::maxpool` accumulation order exactly.
+pub fn maxpool_into(
+    x: &[f32],
+    h: usize,
+    w: usize,
+    c: usize,
+    k: usize,
+    stride: usize,
+    out: &mut [f32],
+) -> (usize, usize) {
+    pool_into(x, h, w, c, k, stride, true, out)
+}
+
+/// Average pool (VALID windows) into a caller-owned buffer.
+pub fn avgpool_into(
+    x: &[f32],
+    h: usize,
+    w: usize,
+    c: usize,
+    k: usize,
+    stride: usize,
+    out: &mut [f32],
+) -> (usize, usize) {
+    pool_into(x, h, w, c, k, stride, false, out)
+}
+
+fn pool_into(
+    x: &[f32],
+    h: usize,
+    w: usize,
+    c: usize,
+    k: usize,
+    stride: usize,
+    max: bool,
+    out: &mut [f32],
+) -> (usize, usize) {
+    assert_eq!(x.len(), h * w * c, "input shape");
+    assert!(h >= k && w >= k, "pool window {k} exceeds input {h}x{w}");
+    let oh = (h - k) / stride + 1;
+    let ow = (w - k) / stride + 1;
+    assert_eq!(out.len(), oh * ow * c, "out shape");
+    // Divide (not multiply-by-reciprocal): bit-identical to `ops::pool`.
+    let window = (k * k) as f32;
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let orow = &mut out[(oy * ow + ox) * c..][..c];
+            orow.fill(if max { f32::NEG_INFINITY } else { 0.0 });
+            for ky in 0..k {
+                for kx in 0..k {
+                    let src = ((oy * stride + ky) * w + ox * stride + kx) * c;
+                    let xin = &x[src..src + c];
+                    if max {
+                        for (o, &v) in orow.iter_mut().zip(xin) {
+                            if v > *o {
+                                *o = v;
+                            }
+                        }
+                    } else {
+                        for (o, &v) in orow.iter_mut().zip(xin) {
+                            *o += v;
+                        }
+                    }
+                }
+            }
+            if !max {
+                for o in orow.iter_mut() {
+                    *o /= window;
+                }
+            }
+        }
+    }
+    (oh, ow)
+}
+
+/// Global average pool into a caller-owned `c`-element buffer.
+pub fn gap_into(x: &[f32], h: usize, w: usize, c: usize, out: &mut [f32]) {
+    assert_eq!(x.len(), h * w * c, "input shape");
+    assert_eq!(out.len(), c, "out shape");
+    out.fill(0.0);
+    for row in x.chunks_exact(c) {
+        for (o, &v) in out.iter_mut().zip(row) {
+            *o += v;
+        }
+    }
+    // Divide to stay bit-identical to `ops::global_avgpool`.
+    let n = (h * w) as f32;
+    for o in out.iter_mut() {
+        *o /= n;
+    }
+}
+
+/// Allocating convenience: full im2col+GEMM conv on one image. The hot path
+/// goes through `engine::ConvPlan` with scratch reuse; this form exists for
+/// tests and one-off use, and is the function the equivalence property
+/// (`conv2d_gemm ≡ ops::conv2d`) is stated over.
+pub fn conv2d_gemm(
+    x: &super::tensor::Tensor,
+    w: &[f32],
+    b: &[f32],
+    k: usize,
+    cout: usize,
+    stride: usize,
+    pad: usize,
+) -> super::tensor::Tensor {
+    let cin = x.c;
+    assert_eq!(w.len(), k * k * cin * cout, "weight len");
+    assert_eq!(b.len(), cout, "bias len");
+    let (oh, ow) = conv_out_dims(x.h, x.w, k, stride, pad);
+    let kk = k * k * cin;
+    let mut cols = vec![0.0f32; oh * ow * kk];
+    im2col_into(&x.data, x.h, x.w, x.c, k, stride, pad, &mut cols);
+    let mut out = super::tensor::Tensor::zeros(oh, ow, cout);
+    gemm_bias(&cols, oh * ow, kk, w, cout, b, false, &mut out.data);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::ops;
+    use crate::nn::tensor::Tensor;
+    use crate::util::prop::forall;
+    use crate::util::stats::max_abs_diff;
+
+    /// The tentpole equivalence: GEMM path ≡ direct oracle across random
+    /// shapes, strides and paddings (satellite: property test at 1e-4).
+    #[test]
+    fn conv2d_gemm_matches_direct_oracle() {
+        forall(60, |g| {
+            let k = *g.choose(&[1usize, 2, 3, 5]);
+            let stride = g.usize_in(1, 3);
+            let pad = g.usize_in(0, 2);
+            let cin = g.usize_in(1, 6);
+            let cout = g.usize_in(1, 24);
+            let h = g.usize_in(k.max(2 * pad + 1), k + 9);
+            let w = g.usize_in(k.max(2 * pad + 1), k + 9);
+            let x = Tensor::from_vec(h, w, cin, g.vec_f32(h * w * cin, -1.0, 1.0));
+            let wgt = g.vec_f32(k * k * cin * cout, -1.0, 1.0);
+            let b = g.vec_f32(cout, -0.5, 0.5);
+            let want = ops::conv2d(&x, &wgt, &b, k, cout, stride, pad);
+            let got = conv2d_gemm(&x, &wgt, &b, k, cout, stride, pad);
+            assert_eq!((got.h, got.w, got.c), (want.h, want.w, want.c));
+            let d = max_abs_diff(&got.data, &want.data);
+            assert!(d < 1e-4, "k={k} s={stride} p={pad} cin={cin} cout={cout}: diff {d}");
+        });
+    }
+
+    #[test]
+    fn gemm_relu_fusion_matches_post_relu() {
+        forall(20, |g| {
+            let m = g.usize_in(1, 9);
+            let kk = g.usize_in(1, 40);
+            let n = g.usize_in(1, 17);
+            let a = g.vec_f32(m * kk, -1.0, 1.0);
+            let b = g.vec_f32(kk * n, -1.0, 1.0);
+            let bias = g.vec_f32(n, -0.5, 0.5);
+            let mut plain = vec![0.0; m * n];
+            gemm_bias(&a, m, kk, &b, n, &bias, false, &mut plain);
+            for v in plain.iter_mut() {
+                if *v < 0.0 {
+                    *v = 0.0;
+                }
+            }
+            let mut fused = vec![0.0; m * n];
+            gemm_bias(&a, m, kk, &b, n, &bias, true, &mut fused);
+            assert_eq!(plain, fused);
+        });
+    }
+
+    /// Reduction blocking must not change results even when kk spans
+    /// multiple KC panels.
+    #[test]
+    fn gemm_kc_blocking_consistent() {
+        forall(6, |g| {
+            let m = g.usize_in(1, 6);
+            let kk = g.usize_in(KC + 1, 2 * KC + 50);
+            let n = g.usize_in(1, 8);
+            let a = g.vec_f32(m * kk, -1.0, 1.0);
+            let b = g.vec_f32(kk * n, -1.0, 1.0);
+            let bias = vec![0.0; n];
+            let mut got = vec![0.0; m * n];
+            gemm_bias(&a, m, kk, &b, n, &bias, false, &mut got);
+            // Naive reference.
+            let mut want = vec![0.0f64; m * n];
+            for i in 0..m {
+                for p in 0..kk {
+                    for j in 0..n {
+                        want[i * n + j] += a[i * kk + p] as f64 * b[p * n + j] as f64;
+                    }
+                }
+            }
+            for (gv, wv) in got.iter().zip(&want) {
+                assert!((*gv as f64 - wv).abs() < 1e-3, "{gv} vs {wv}");
+            }
+        });
+    }
+
+    /// Satellite: dwconv scratch path ≡ oracle, padded/strided included.
+    #[test]
+    fn dwconv_into_matches_direct_oracle() {
+        forall(40, |g| {
+            let k = *g.choose(&[1usize, 2, 3, 5]);
+            let stride = g.usize_in(1, 3);
+            let pad = g.usize_in(0, 2);
+            let c = g.usize_in(1, 8);
+            let h = g.usize_in(k.max(2 * pad + 1), k + 8);
+            let w = g.usize_in(k.max(2 * pad + 1), k + 8);
+            let x = Tensor::from_vec(h, w, c, g.vec_f32(h * w * c, -1.0, 1.0));
+            let wgt = g.vec_f32(k * k * c, -1.0, 1.0);
+            let b = g.vec_f32(c, -0.5, 0.5);
+            let want = ops::dwconv2d(&x, &wgt, &b, k, stride, pad);
+            let mut out = vec![0.0; want.data.len()];
+            let (oh, ow) = dwconv2d_into(&x.data, h, w, c, &wgt, &b, k, stride, pad, false, &mut out);
+            assert_eq!((oh, ow), (want.h, want.w));
+            let d = max_abs_diff(&out, &want.data);
+            assert!(d < 1e-4, "dwconv k={k} s={stride} p={pad} c={c}: diff {d}");
+        });
+    }
+
+    #[test]
+    fn pools_and_gap_match_oracle() {
+        forall(30, |g| {
+            let k = g.usize_in(1, 3);
+            let stride = g.usize_in(1, 3);
+            let c = g.usize_in(1, 6);
+            let h = g.usize_in(k, k + 6);
+            let w = g.usize_in(k, k + 6);
+            let x = Tensor::from_vec(h, w, c, g.vec_f32(h * w * c, -1.0, 1.0));
+            let want_max = ops::maxpool(&x, k, stride);
+            let mut got = vec![0.0; want_max.data.len()];
+            maxpool_into(&x.data, h, w, c, k, stride, &mut got);
+            assert_eq!(got, want_max.data);
+            let want_avg = ops::avgpool(&x, k, stride);
+            let mut got = vec![0.0; want_avg.data.len()];
+            avgpool_into(&x.data, h, w, c, k, stride, &mut got);
+            assert!(max_abs_diff(&got, &want_avg.data) < 1e-5);
+            let want_gap = ops::global_avgpool(&x);
+            let mut got = vec![0.0; c];
+            gap_into(&x.data, h, w, c, &mut got);
+            assert!(max_abs_diff(&got, &want_gap.data) < 1e-5);
+        });
+    }
+
+    #[test]
+    fn im2col_identity_for_1x1() {
+        // 1x1 kernel, stride 1, no pad: im2col is the identity layout.
+        let x = Tensor::from_vec(2, 3, 4, (0..24).map(|v| v as f32).collect());
+        let mut cols = vec![0.0; 24];
+        let (oh, ow) = im2col_into(&x.data, 2, 3, 4, 1, 1, 0, &mut cols);
+        assert_eq!((oh, ow), (2, 3));
+        assert_eq!(cols, x.data);
+    }
+
+    #[test]
+    fn im2col_pads_with_zeros() {
+        // 1x1 input, 3x3 kernel, pad 1: single patch, center = pixel.
+        let x = Tensor::from_vec(1, 1, 1, vec![7.0]);
+        let mut cols = vec![1.0; 9];
+        im2col_into(&x.data, 1, 1, 1, 3, 1, 1, &mut cols);
+        let want = [0.0, 0.0, 0.0, 0.0, 7.0, 0.0, 0.0, 0.0, 0.0];
+        assert_eq!(cols, want);
+    }
+}

@@ -1,10 +1,22 @@
-//! Functional NN inference engine: NHWC tensor ops (the systolic array's
-//! numerics oracle) and the deployed mixed-precision model (FP32 conv +
-//! sign bridge + IMAC analog FC).
+//! Functional NN inference engine: NHWC tensor ops and the deployed
+//! mixed-precision model (FP32 conv + sign bridge + IMAC analog FC).
+//!
+//! Two conv execution paths share one weight set:
+//!
+//! * [`ops`] — scalar direct convolution. The **numerics oracle**: simple,
+//!   allocation-per-op, per-image; used for cross-checking PJRT artifacts
+//!   and as the reference in equivalence property tests.
+//! * [`gemm`] + [`engine::ConvPlan`] — the **serving hot path**: batched
+//!   im2col + cache-blocked GEMM with prepacked weights and a per-worker
+//!   [`Scratch`] arena, zero heap allocations at steady state.
 
 pub mod engine;
+pub mod gemm;
 pub mod ops;
+pub mod scratch;
+pub mod synthetic;
 pub mod tensor;
 
-pub use engine::{ConvOp, DeployedModel};
+pub use engine::{ConvOp, ConvPlan, DeployedModel};
+pub use scratch::Scratch;
 pub use tensor::Tensor;

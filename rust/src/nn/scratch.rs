@@ -1,0 +1,74 @@
+//! Per-worker scratch arena for the zero-allocation inference hot path.
+//!
+//! One [`Scratch`] lives in each serving worker (or bench loop) and is
+//! threaded through the conv plan, the sign bridge, and the IMAC fabric.
+//! Buffers grow monotonically to the high-water mark of the workload during
+//! warmup and are then reused verbatim: steady-state requests perform zero
+//! heap allocations inside the engine (proved by
+//! `tests/alloc_steady_state.rs` with a counting global allocator).
+//!
+//! Growth is tracked in [`Scratch::grow_events`] so tests and metrics can
+//! assert the arena has converged.
+
+/// Reusable buffers for one inference worker.
+#[derive(Debug, Default)]
+pub struct Scratch {
+    /// im2col staging: `batch·patches × k·k·cin` rows for the current layer.
+    pub cols: Vec<f32>,
+    /// Batched activation ping buffer (NHWC, batch-contiguous).
+    pub act_a: Vec<f32>,
+    /// Batched activation pong buffer.
+    pub act_b: Vec<f32>,
+    /// IMAC fabric layer-chain ping buffer.
+    pub fc_a: Vec<f32>,
+    /// IMAC fabric layer-chain pong buffer.
+    pub fc_b: Vec<f32>,
+    /// Number of times any buffer had to reallocate (warmup growth).
+    pub grow_events: u64,
+}
+
+impl Scratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Resize `buf` to exactly `len` elements, counting a grow event in
+    /// `grows` when the capacity had to increase (i.e. a real allocation).
+    /// Shrinking never releases memory, so steady-state calls are free.
+    #[inline]
+    pub fn ensure(buf: &mut Vec<f32>, grows: &mut u64, len: usize) {
+        if buf.capacity() < len {
+            *grows += 1;
+        }
+        buf.resize(len, 0.0);
+    }
+
+    /// Current arena footprint in bytes (capacity, not live length).
+    pub fn bytes(&self) -> usize {
+        4 * (self.cols.capacity()
+            + self.act_a.capacity()
+            + self.act_b.capacity()
+            + self.fc_a.capacity()
+            + self.fc_b.capacity())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ensure_counts_only_real_growth() {
+        let mut s = Scratch::new();
+        let mut grows = 0u64;
+        Scratch::ensure(&mut s.cols, &mut grows, 100);
+        assert_eq!(grows, 1);
+        // Shrink then regrow within capacity: no new allocation.
+        Scratch::ensure(&mut s.cols, &mut grows, 10);
+        Scratch::ensure(&mut s.cols, &mut grows, 100);
+        assert_eq!(grows, 1);
+        Scratch::ensure(&mut s.cols, &mut grows, 200);
+        assert_eq!(grows, 2);
+        assert!(s.bytes() >= 200 * 4);
+    }
+}

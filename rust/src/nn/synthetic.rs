@@ -1,0 +1,66 @@
+//! Synthetic model documents: LeNet-shaped random weights for benches and
+//! tests that need the serving conv stack without trained artifacts
+//! (`make train`). One definition so the alloc proof, the hot-path bench,
+//! and the e2e serving bench all measure the same shape.
+
+use crate::util::json::Json;
+use crate::util::rng::Xoshiro256;
+
+/// A LeNet-shaped weights doc (random values) mirroring
+/// `artifacts/weights_lenet.json`: conv 5×5×1×6 + ReLU, maxpool 2,
+/// conv 5×5×6×16, maxpool 2, then ternary FC 256→120→84→10.
+pub fn lenet_weights_doc(rng: &mut Xoshiro256) -> Json {
+    let randf = |rng: &mut Xoshiro256, n: usize| -> String {
+        let v: Vec<String> = (0..n).map(|_| format!("{:.4}", rng.uniform(-0.2, 0.2))).collect();
+        format!("[{}]", v.join(","))
+    };
+    let randt = |rng: &mut Xoshiro256, n: usize| -> String {
+        let v: Vec<String> =
+            (0..n).map(|_| ((rng.next_below(3) as i64) - 1).to_string()).collect();
+        format!("[{}]", v.join(","))
+    };
+    let text = format!(
+        r#"{{"row":"lenet-synthetic","dataset":"mnist","acc_fp32":0,"acc_ternary":0,
+        "conv_layers":[
+          {{"kind":"conv","k":5,"cout":6,"stride":1,"pad":0,"relu":true,"w":{},"w_shape":[5,5,1,6],"b":{}}},
+          {{"kind":"maxpool","k":2,"stride":2}},
+          {{"kind":"conv","k":5,"cout":16,"stride":1,"pad":0,"relu":false,"w":{},"w_shape":[5,5,6,16],"b":{}}},
+          {{"kind":"maxpool","k":2,"stride":2}}
+        ],
+        "fc_layers":[
+          {{"n_in":256,"n_out":120,"w_ternary":{}}},
+          {{"n_in":120,"n_out":84,"w_ternary":{}}},
+          {{"n_in":84,"n_out":10,"w_ternary":{}}}
+        ]}}"#,
+        randf(rng, 150),
+        randf(rng, 6),
+        randf(rng, 2400),
+        randf(rng, 16),
+        randt(rng, 256 * 120),
+        randt(rng, 120 * 84),
+        randt(rng, 84 * 10),
+    );
+    Json::parse(&text).expect("synthetic doc")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::imac::{AdcConfig, ImacConfig};
+    use crate::nn::DeployedModel;
+
+    #[test]
+    fn synthetic_doc_loads_as_model() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let doc = lenet_weights_doc(&mut rng);
+        let m = DeployedModel::from_json(
+            &doc,
+            &ImacConfig::default(),
+            AdcConfig { bits: 0, full_scale: 1.0 },
+            0,
+        )
+        .unwrap();
+        assert_eq!(m.plan.feat_len(), 256);
+        assert_eq!(m.fabric.n_out(), 10);
+    }
+}

@@ -1,0 +1,61 @@
+//! Manifest / spec handling shared by the PJRT runtime and its stub.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::util::json::Json;
+
+/// Read `manifest.json` from the artifacts dir; `Json::Null` if absent.
+pub fn read_manifest(dir: &Path) -> Result<Json> {
+    let path = dir.join("manifest.json");
+    if !path.exists() {
+        return Ok(Json::Null);
+    }
+    let text = std::fs::read_to_string(&path)?;
+    Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest.json: {e}"))
+}
+
+/// Input/output shapes recorded for one artifact.
+pub fn artifact_shapes(manifest: &Json, name: &str) -> (Vec<usize>, Vec<usize>) {
+    let meta = manifest.get("artifacts").get(name);
+    let shape = |key: &str| {
+        meta.get(key)
+            .as_arr()
+            .map(|a| a.iter().filter_map(|v| v.as_usize()).collect())
+            .unwrap_or_default()
+    };
+    (shape("input"), shape("output"))
+}
+
+/// Artifact names listed in the manifest.
+pub fn artifact_names(manifest: &Json) -> Vec<String> {
+    manifest
+        .get("artifacts")
+        .as_obj()
+        .map(|o| o.keys().cloned().collect())
+        .unwrap_or_default()
+}
+
+/// Check the shared hardware spec matches the rust defaults — the numerics
+/// contract (gain policy, neuron slope, bridge convention).
+pub fn check_spec(dir: &Path, imac: &crate::imac::ImacConfig) -> Result<()> {
+    let path = dir.join("imac_spec.json");
+    if !path.exists() {
+        return Ok(()); // nothing to check against
+    }
+    let spec = Json::parse(&std::fs::read_to_string(&path)?)
+        .map_err(|e| anyhow::anyhow!("imac_spec.json: {e}"))?;
+    let gain_num = spec.get("gain_num").as_f64().unwrap_or(1.0);
+    let neuron_k = spec.get("neuron_k").as_f64().unwrap_or(1.0);
+    if (gain_num - imac.gain_num).abs() > 1e-9 {
+        bail!("gain_num mismatch: artifacts {gain_num} vs runtime {}", imac.gain_num);
+    }
+    if (neuron_k - imac.neuron.k).abs() > 1e-9 {
+        bail!("neuron_k mismatch: artifacts {neuron_k} vs runtime {}", imac.neuron.k);
+    }
+    if spec.get("bridge_nonneg_is_one").as_bool() != Some(true) {
+        bail!("bridge convention mismatch");
+    }
+    Ok(())
+}

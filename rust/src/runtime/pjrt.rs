@@ -1,0 +1,102 @@
+//! The real PJRT runtime (enabled by the `pjrt` cargo feature): load the
+//! JAX-AOT HLO text artifacts and execute them on the CPU PJRT client (the
+//! `xla` crate).
+//!
+//! Interchange is HLO **text** (`HloModuleProto::from_text_file`): jax ≥ 0.5
+//! emits serialized protos with 64-bit instruction ids that xla_extension
+//! 0.5.1 rejects; the text parser reassigns ids (see /opt/xla-example).
+//!
+//! One [`Executable`] per artifact; all lowered functions return 1-tuples
+//! (lowered with `return_tuple=True`), unwrapped with `to_tuple1`.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+use super::manifest;
+
+/// A compiled artifact plus its manifest shapes.
+pub struct Executable {
+    pub name: String,
+    pub input_shape: Vec<usize>,
+    pub output_shape: Vec<usize>,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute on a flat f32 buffer of `input_shape` (row-major).
+    pub fn run_f32(&self, input: &[f32]) -> Result<Vec<f32>> {
+        let want: usize = self.input_shape.iter().product();
+        if input.len() != want {
+            bail!("{}: input len {} != shape {:?}", self.name, input.len(), self.input_shape);
+        }
+        let dims: Vec<i64> = self.input_shape.iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(input).reshape(&dims)?;
+        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    pub fn batch(&self) -> usize {
+        self.input_shape.first().copied().unwrap_or(1)
+    }
+}
+
+/// The artifact registry: a PJRT client plus compiled executables keyed by
+/// artifact file name.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Json,
+    executables: HashMap<String, Executable>,
+}
+
+impl Runtime {
+    /// Open `artifacts/` (reads `manifest.json`; compiles lazily via
+    /// [`Runtime::load`]).
+    pub fn open(dir: &str) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        let manifest = manifest::read_manifest(Path::new(dir))?;
+        Ok(Self { client, dir: PathBuf::from(dir), manifest, executables: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile one artifact (idempotent).
+    pub fn load(&mut self, name: &str) -> Result<&Executable> {
+        if !self.executables.contains_key(name) {
+            let path = self.dir.join(name);
+            let path_str = path.to_str().context("path utf8")?;
+            let proto = xla::HloModuleProto::from_text_file(path_str)
+                .with_context(|| format!("parsing {path_str}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).with_context(|| format!("compiling {name}"))?;
+            let (input_shape, output_shape) = manifest::artifact_shapes(&self.manifest, name);
+            self.executables.insert(
+                name.to_string(),
+                Executable { name: name.to_string(), input_shape, output_shape, exe },
+            );
+        }
+        Ok(&self.executables[name])
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Executable> {
+        self.executables.get(name)
+    }
+
+    /// Artifact names listed in the manifest.
+    pub fn artifact_names(&self) -> Vec<String> {
+        manifest::artifact_names(&self.manifest)
+    }
+
+    /// Check the shared hardware spec matches the rust defaults — the
+    /// numerics contract (gain policy, neuron slope, bridge convention).
+    pub fn check_spec(&self, imac: &crate::imac::ImacConfig) -> Result<()> {
+        manifest::check_spec(&self.dir, imac)
+    }
+}

@@ -1,0 +1,74 @@
+//! Stub runtime used when the `pjrt` feature is off (the default build):
+//! same API surface as the real [`super::pjrt`] module, but artifact
+//! compilation returns a clean error instead of linking the `xla` FFI.
+//!
+//! The serving stack degrades gracefully: `Runtime::open` still reads the
+//! manifest (so `tpu-imac serve` can report what artifacts exist), while
+//! [`Runtime::load`] fails and the coordinator falls back to the native
+//! GEMM conv path — the same numerics, pure rust.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Result};
+
+use crate::util::json::Json;
+
+use super::manifest;
+
+/// Artifact metadata; never executable in a stub build.
+pub struct Executable {
+    pub name: String,
+    pub input_shape: Vec<usize>,
+    pub output_shape: Vec<usize>,
+}
+
+impl Executable {
+    /// Always an error: there is no PJRT client in this build.
+    pub fn run_f32(&self, _input: &[f32]) -> Result<Vec<f32>> {
+        bail!("{}: built without the `pjrt` feature; no PJRT executor", self.name)
+    }
+
+    pub fn batch(&self) -> usize {
+        self.input_shape.first().copied().unwrap_or(1)
+    }
+}
+
+/// Manifest-only artifact registry (no PJRT client).
+pub struct Runtime {
+    dir: PathBuf,
+    pub manifest: Json,
+    executables: HashMap<String, Executable>,
+}
+
+impl Runtime {
+    /// Open `artifacts/` (reads `manifest.json` when present).
+    pub fn open(dir: &str) -> Result<Self> {
+        let manifest = manifest::read_manifest(Path::new(dir))?;
+        Ok(Self { dir: PathBuf::from(dir), manifest, executables: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        "stub (pjrt feature disabled)".to_string()
+    }
+
+    /// Always an error in a stub build: rebuild with `--features pjrt` (and
+    /// a vendored `xla` crate) to execute AOT artifacts.
+    pub fn load(&mut self, name: &str) -> Result<&Executable> {
+        bail!("cannot load {name}: built without the `pjrt` feature (native backend serves instead)")
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Executable> {
+        self.executables.get(name)
+    }
+
+    /// Artifact names listed in the manifest.
+    pub fn artifact_names(&self) -> Vec<String> {
+        manifest::artifact_names(&self.manifest)
+    }
+
+    /// Check the shared hardware spec matches the rust defaults.
+    pub fn check_spec(&self, imac: &crate::imac::ImacConfig) -> Result<()> {
+        manifest::check_spec(&self.dir, imac)
+    }
+}

@@ -1,12 +1,17 @@
 //! Micro-benchmark harness (criterion is unavailable offline).
 //!
 //! Benches under `rust/benches/` are `harness = false` binaries that build a
-//! [`BenchSuite`], register closures, and call [`BenchSuite::run`]. The
-//! harness does warmup, adaptive iteration-count calibration to a target
-//! measurement time, and reports mean / median / p95 with throughput.
+//! [`BenchSuite`], register closures, and call [`BenchSuite::run`] (or
+//! [`BenchSuite::run_cli`], which additionally honours `--json <path>` for
+//! machine-readable results — e.g.
+//! `cargo bench --bench conv_gemm -- --json BENCH_hotpath.json` — so the
+//! perf trajectory can be tracked across PRs). The harness does warmup,
+//! adaptive iteration-count calibration to a target measurement time, and
+//! reports mean / median / p95 with throughput.
 
 use std::time::{Duration, Instant};
 
+use crate::util::json::Json;
 use crate::util::table::{Align, Table};
 
 /// One measured benchmark result.
@@ -24,6 +29,21 @@ pub struct BenchResult {
 impl BenchResult {
     pub fn throughput_per_sec(&self) -> Option<f64> {
         self.items_per_iter.map(|n| n * 1e9 / self.mean_ns)
+    }
+
+    /// Machine-readable form for `--json` reports.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("iters", Json::Num(self.iters as f64)),
+            ("mean_ns", Json::Num(self.mean_ns)),
+            ("median_ns", Json::Num(self.median_ns)),
+            ("p95_ns", Json::Num(self.p95_ns)),
+            (
+                "throughput_per_sec",
+                self.throughput_per_sec().map(Json::Num).unwrap_or(Json::Null),
+            ),
+        ])
     }
 }
 
@@ -196,6 +216,53 @@ impl BenchSuite {
         println!("{}", t.to_ascii());
         results
     }
+
+    /// Bench-binary entry point: run, then honour a `--json <path>` (or
+    /// `--json=<path>`) argument by writing a machine-readable report.
+    /// Unknown arguments (e.g. cargo's `--bench`) are ignored.
+    pub fn run_cli(&mut self) -> Vec<BenchResult> {
+        let results = self.run();
+        if let Some(path) = json_path_from_args(std::env::args().skip(1)) {
+            match write_json(&path, &self.title, &results) {
+                Ok(()) => eprintln!("bench results written to {path}"),
+                Err(e) => eprintln!("failed to write {path}: {e}"),
+            }
+        }
+        results
+    }
+}
+
+/// Extract `--json <path>` / `--json=<path>` from an argument stream.
+pub fn json_path_from_args<I: Iterator<Item = String>>(mut args: I) -> Option<String> {
+    while let Some(a) = args.next() {
+        if a == "--json" {
+            return args.next();
+        }
+        if let Some(p) = a.strip_prefix("--json=") {
+            return Some(p.to_string());
+        }
+    }
+    None
+}
+
+/// Write a bench report: `{suites: {<title>: [{name, mean_ns, median_ns,
+/// p95_ns, iters, throughput_per_sec}]}}`.
+///
+/// Merges into an existing report at `path` rather than clobbering it, so
+/// `cargo bench -- --json out.json` (which hands the flag to *every*
+/// harness-less bench binary) accumulates all suites in one file.
+pub fn write_json(path: &str, suite: &str, results: &[BenchResult]) -> std::io::Result<()> {
+    let mut suites = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|text| Json::parse(&text).ok())
+        .and_then(|doc| doc.get("suites").as_obj().cloned())
+        .unwrap_or_default();
+    suites.insert(
+        suite.to_string(),
+        Json::Arr(results.iter().map(|r| r.to_json()).collect()),
+    );
+    let doc = Json::obj(vec![("suites", Json::Obj(suites))]);
+    std::fs::write(path, doc.to_pretty())
 }
 
 /// Human-readable nanoseconds.
@@ -255,5 +322,43 @@ mod tests {
         assert_eq!(fmt_ns(12.3), "12.3 ns");
         assert_eq!(fmt_ns(1500.0), "1.50 µs");
         assert!(fmt_rate(2.5e9).contains("G/s"));
+    }
+
+    #[test]
+    fn json_arg_parsing() {
+        let args = |s: &str| s.split_whitespace().map(String::from);
+        assert_eq!(json_path_from_args(args("--bench --json out.json")), Some("out.json".into()));
+        assert_eq!(json_path_from_args(args("--json=x.json")), Some("x.json".into()));
+        assert_eq!(json_path_from_args(args("--bench")), None);
+        assert_eq!(json_path_from_args(args("--json")), None);
+    }
+
+    #[test]
+    fn json_report_roundtrips() {
+        let r = BenchResult {
+            name: "lenet_conv".into(),
+            iters: 100,
+            mean_ns: 1234.5,
+            median_ns: 1200.0,
+            p95_ns: 1500.0,
+            items_per_iter: Some(8.0),
+        };
+        let path = std::env::temp_dir().join("tpu_imac_bench_test.json");
+        let path = path.to_str().unwrap().to_string();
+        let _ = std::fs::remove_file(&path);
+        write_json(&path, "hotpath", &[r.clone()]).unwrap();
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let results = doc.get("suites").get("hotpath").as_arr().unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].get("name").as_str(), Some("lenet_conv"));
+        assert_eq!(results[0].get("mean_ns").as_f64(), Some(1234.5));
+        assert!(results[0].get("p95_ns").as_f64().unwrap() >= 1200.0);
+        assert!(results[0].get("throughput_per_sec").as_f64().is_some());
+        // A second suite merges instead of clobbering.
+        write_json(&path, "other", &[r]).unwrap();
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert!(doc.get("suites").get("hotpath").as_arr().is_some());
+        assert!(doc.get("suites").get("other").as_arr().is_some());
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -1,0 +1,85 @@
+//! Counting-allocator proof of the zero-allocation inference hot path:
+//! after warmup, the GEMM conv plan + bridge + IMAC fabric must perform
+//! **zero** heap allocations per image (the scratch arena is fully grown
+//! and every buffer is reused).
+//!
+//! This file contains exactly one test so no concurrent test thread can
+//! pollute the global allocation counter.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use tpu_imac::imac::{AdcConfig, ImacConfig};
+use tpu_imac::nn::synthetic::lenet_weights_doc;
+use tpu_imac::nn::{DeployedModel, Scratch, Tensor};
+use tpu_imac::util::rng::Xoshiro256;
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[test]
+fn steady_state_inference_allocates_nothing() {
+    let mut rng = Xoshiro256::seed_from_u64(99);
+    let doc = lenet_weights_doc(&mut rng);
+    let model = DeployedModel::from_json(
+        &doc,
+        &ImacConfig::default(),
+        AdcConfig { bits: 0, full_scale: 1.0 },
+        0,
+    )
+    .unwrap();
+    let images: Vec<Tensor> = (0..8)
+        .map(|_| Tensor::from_vec(28, 28, 1, (0..784).map(|_| rng.next_f32() - 0.5).collect()))
+        .collect();
+    let refs: Vec<&Tensor> = images.iter().collect();
+    let mut scratch = Scratch::new();
+
+    // Warmup: grow the arena to the workload's high-water mark (single
+    // image AND batch shapes — the batch is the larger footprint).
+    let mut sum = 0.0f32;
+    for img in &images {
+        sum += model.infer_into(img, &mut scratch)[0];
+    }
+    model.infer_batch_into(&refs, &mut scratch, |_, scores| sum += scores[0]);
+    let warm_grows = scratch.grow_events;
+    assert!(warm_grows > 0, "warmup should have grown the arena");
+
+    // Steady state: count every heap allocation across single-image and
+    // batched inference. Must be exactly zero.
+    let before = ALLOCS.load(Ordering::SeqCst);
+    for _ in 0..3 {
+        for img in &images {
+            sum += model.infer_into(img, &mut scratch)[0];
+        }
+        model.infer_batch_into(&refs, &mut scratch, |_, scores| sum += scores[0]);
+    }
+    let delta = ALLOCS.load(Ordering::SeqCst) - before;
+    assert!(sum.is_finite());
+    assert_eq!(
+        delta, 0,
+        "steady-state request path performed {delta} heap allocations (want 0)"
+    );
+    assert_eq!(scratch.grow_events, warm_grows, "scratch arena regrew at steady state");
+}
