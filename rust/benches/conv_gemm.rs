@@ -1,27 +1,47 @@
 //! Conv hot-path bench: the scalar direct oracle (`nn::ops`, the seed's
 //! request path) vs the batched im2col+GEMM engine (`nn::gemm` +
-//! `ConvPlan`) on the LeNet conv stack at batch 8 — the serving shape.
+//! `ConvPlan`) — in both conv precisions — on the LeNet conv stack at
+//! batch 8, the serving shape.
 //!
 //! Run with `cargo bench --bench conv_gemm`; add `-- --json
 //! BENCH_hotpath.json` for a machine-readable report tracked across PRs.
+//! The int8 rows track the fp32→int8 speedup (acceptance floor 1.30×:
+//! both staged matrices drop to 1/4 the memory traffic).
 
 use tpu_imac::imac::{AdcConfig, ImacConfig};
 use tpu_imac::nn::synthetic::lenet_weights_doc;
-use tpu_imac::nn::{DeployedModel, Scratch, Tensor};
+use tpu_imac::nn::{DeployedModel, PrecisionPolicy, Scratch, Tensor};
 use tpu_imac::util::bench::{black_box, BenchSuite};
 use tpu_imac::util::json::Json;
 use tpu_imac::util::rng::Xoshiro256;
 
 const BATCH: usize = 8;
 
-fn load_model(doc: &Json) -> DeployedModel {
-    DeployedModel::from_json(
+fn load_model(doc: &Json, precision: PrecisionPolicy) -> DeployedModel {
+    DeployedModel::from_json_with(
         doc,
         &ImacConfig::default(),
         AdcConfig { bits: 0, full_scale: 1.0 },
         0,
+        precision,
     )
     .expect("synthetic model")
+}
+
+/// Run the conv plan over the batch through a scratch arena (the hot path).
+fn run_plan(m: &DeployedModel, imgs: &[Tensor], s: &mut Scratch) -> u64 {
+    let refs: Vec<&Tensor> = imgs.iter().collect();
+    let feats = m.plan.run_parts(
+        &refs,
+        &mut s.cols,
+        &mut s.cols_i8,
+        &mut s.act_i8,
+        &mut s.acc_i32,
+        &mut s.act_a,
+        &mut s.act_b,
+        &mut s.grow_events,
+    );
+    feats[0].to_bits() as u64
 }
 
 fn main() {
@@ -31,9 +51,10 @@ fn main() {
         .map(|_| Tensor::from_vec(28, 28, 1, (0..784).map(|_| rng.next_f32() - 0.5).collect()))
         .collect();
 
-    // Sanity: the two paths must agree before we time them.
+    // Sanity: fp32 paths must agree, and the int8 deployment must track
+    // the fp32 one (top-1 agreement reported below) before we time them.
     {
-        let m = load_model(&doc);
+        let m = load_model(&doc, PrecisionPolicy::Fp32);
         let mut s = Scratch::new();
         for img in &images {
             let want = m.conv_features(img);
@@ -42,10 +63,23 @@ fn main() {
             assert!(d < 1e-4, "paths diverge before benching: {d}");
         }
     }
-
-    let mut suite = BenchSuite::new("LeNet conv stack, batch 8: direct oracle vs im2col+GEMM");
     {
-        let m = load_model(&doc);
+        let m32 = load_model(&doc, PrecisionPolicy::Fp32);
+        let m8 = load_model(&doc, PrecisionPolicy::Int8);
+        let (mut s32, mut s8) = (Scratch::new(), Scratch::new());
+        let mut agree = 0;
+        for img in &images {
+            let p32 = tpu_imac::util::stats::argmax(m32.infer_into(img, &mut s32));
+            let p8 = tpu_imac::util::stats::argmax(m8.infer_into(img, &mut s8));
+            agree += (p32 == p8) as usize;
+        }
+        println!("int8 vs fp32 top-1 agreement on bench images: {agree}/{BATCH}");
+    }
+
+    let mut suite =
+        BenchSuite::new("LeNet conv stack, batch 8: direct oracle vs im2col+GEMM (fp32 + int8)");
+    {
+        let m = load_model(&doc, PrecisionPolicy::Fp32);
         let imgs = images.clone();
         suite.bench_throughput("direct conv (seed request path)", BATCH as f64, move || {
             let mut acc = 0u64;
@@ -56,9 +90,11 @@ fn main() {
         });
     }
     {
-        let m = load_model(&doc);
+        let m = load_model(&doc, PrecisionPolicy::Fp32);
         let imgs = images.clone();
         let mut s = Scratch::new();
+        // Row names predating the int8 split keep their PR-1 spelling so
+        // the BENCH_hotpath.json series stays comparable across PRs.
         suite.bench_throughput("im2col+GEMM, per image", BATCH as f64, move || {
             let mut acc = 0u64;
             for img in &imgs {
@@ -68,23 +104,23 @@ fn main() {
         });
     }
     {
-        let m = load_model(&doc);
+        let m = load_model(&doc, PrecisionPolicy::Fp32);
         let imgs = images.clone();
         let mut s = Scratch::new();
         suite.bench_throughput("im2col+GEMM, batched (hot path)", BATCH as f64, move || {
-            let refs: Vec<&Tensor> = imgs.iter().collect();
-            let feats = m.plan.run_parts(
-                &refs,
-                &mut s.cols,
-                &mut s.act_a,
-                &mut s.act_b,
-                &mut s.grow_events,
-            );
-            black_box(feats[0].to_bits() as u64)
+            black_box(run_plan(&m, &imgs, &mut s))
         });
     }
     {
-        let m = load_model(&doc);
+        let m = load_model(&doc, PrecisionPolicy::Int8);
+        let imgs = images.clone();
+        let mut s = Scratch::new();
+        suite.bench_throughput("im2col+GEMM int8, batched (hot path)", BATCH as f64, move || {
+            black_box(run_plan(&m, &imgs, &mut s))
+        });
+    }
+    {
+        let m = load_model(&doc, PrecisionPolicy::Fp32);
         let imgs = images.clone();
         let mut s = Scratch::new();
         suite.bench_throughput("e2e conv+bridge+IMAC, batched", BATCH as f64, move || {
@@ -96,30 +132,56 @@ fn main() {
             acc
         });
     }
+    {
+        let m = load_model(&doc, PrecisionPolicy::Int8);
+        let imgs = images.clone();
+        let mut s = Scratch::new();
+        suite.bench_throughput("e2e conv+bridge+IMAC int8, batched", BATCH as f64, move || {
+            let refs: Vec<&Tensor> = imgs.iter().collect();
+            let mut acc = 0u64;
+            m.infer_batch_into(&refs, &mut s, |_, scores| {
+                acc = acc.wrapping_add(scores[0].to_bits() as u64);
+            });
+            acc
+        });
+    }
 
     let results = suite.run_cli();
     let direct = results[0].mean_ns;
-    let gemm_batched = results[2].mean_ns;
+    let gemm_f32 = results[2].mean_ns;
+    let gemm_i8 = results[3].mean_ns;
     println!(
-        "speedup (direct / batched GEMM): {:.2}x  [acceptance floor: 3.00x]",
-        direct / gemm_batched
+        "speedup (direct / batched fp32 GEMM): {:.2}x  [acceptance floor: 3.00x]",
+        direct / gemm_f32
+    );
+    println!(
+        "speedup (fp32 GEMM / int8 GEMM):      {:.2}x  [acceptance floor: 1.30x]",
+        gemm_f32 / gemm_i8
     );
 
-    // Steady-state allocation check: after warmup (the bench loops above),
-    // a fresh scratch must converge and then never regrow.
-    let m = load_model(&doc);
-    let mut s = Scratch::new();
-    let refs: Vec<&Tensor> = images.iter().collect();
-    m.infer_batch_into(&refs, &mut s, |_, _| {});
-    m.infer_batch_into(&refs, &mut s, |_, _| {});
-    let warm = s.grow_events;
-    for _ in 0..100 {
+    // Steady-state allocation check for BOTH precisions: after warmup, a
+    // fresh scratch must converge and then never regrow.
+    for precision in [PrecisionPolicy::Fp32, PrecisionPolicy::Int8] {
+        let m = load_model(&doc, precision);
+        let mut s = Scratch::new();
+        let refs: Vec<&Tensor> = images.iter().collect();
         m.infer_batch_into(&refs, &mut s, |_, _| {});
+        m.infer_batch_into(&refs, &mut s, |_, _| {});
+        let warm = s.grow_events;
+        for _ in 0..100 {
+            m.infer_batch_into(&refs, &mut s, |_, _| {});
+        }
+        assert_eq!(
+            s.grow_events,
+            warm,
+            "{} scratch arena regrew at steady state",
+            precision.label()
+        );
+        println!(
+            "scratch arena [{}]: {} KiB, {} grow events (all during warmup), zero steady-state growth",
+            precision.label(),
+            s.bytes() / 1024,
+            warm
+        );
     }
-    assert_eq!(s.grow_events, warm, "scratch arena regrew at steady state");
-    println!(
-        "scratch arena: {} KiB, {} grow events (all during warmup), zero steady-state growth",
-        s.bytes() / 1024,
-        warm
-    );
 }

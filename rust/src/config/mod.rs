@@ -8,9 +8,14 @@
 //!   "imac":   {"subarray_rows": 256, "subarray_cols": 256, "gain_num": 4.0,
 //!              "neuron_k": 1.0, "device_sigma": 0.0, "wire_alpha": 0.0,
 //!              "adc_bits": 8},
-//!   "serve":  {"max_batch": 8, "max_queue": 1024, "batch_timeout_us": 2000}
+//!   "serve":  {"max_batch": 8, "max_queue": 1024, "batch_timeout_us": 2000,
+//!              "workers": 1, "precision": "fp32"}
 //! }
 //! ```
+//!
+//! `serve.precision` (`"fp32"` | `"int8"`) selects the conv-section
+//! arithmetic every worker's plan compiles to; `serve --precision` on the
+//! CLI overrides it per run.
 //!
 //! Every field is optional; omitted fields keep their defaults. The CLI's
 //! `--config <path>` loads one of these; explicit CLI flags still win.
@@ -19,6 +24,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::coordinator::CoordinatorConfig;
 use crate::imac::{AdcConfig, CrossbarConfig, DeviceConfig, ImacConfig, NeuronConfig};
+use crate::quant::PrecisionPolicy;
 use crate::systolic::{ArrayConfig, Dataflow, FoldOverlap, SramConfig};
 use crate::util::json::Json;
 
@@ -40,11 +46,19 @@ pub struct ServeDefaults {
     pub batch_timeout_us: u64,
     /// Native-backend worker pool size (1 = single batcher thread).
     pub workers: usize,
+    /// Conv-section arithmetic each worker's plan compiles to.
+    pub precision: PrecisionPolicy,
 }
 
 impl Default for ServeDefaults {
     fn default() -> Self {
-        Self { max_batch: 8, max_queue: 1024, batch_timeout_us: 2000, workers: 1 }
+        Self {
+            max_batch: 8,
+            max_queue: 1024,
+            batch_timeout_us: 2000,
+            workers: 1,
+            precision: PrecisionPolicy::Fp32,
+        }
     }
 }
 
@@ -155,6 +169,10 @@ impl Config {
             if let Some(v) = serve.get("workers").as_usize() {
                 cfg.serve.workers = v;
             }
+            if let Some(s) = serve.get("precision").as_str() {
+                cfg.serve.precision = PrecisionPolicy::parse(s)
+                    .with_context(|| format!("serve.precision must be fp32|int8, got {s}"))?;
+            }
         }
         Ok(cfg)
     }
@@ -197,6 +215,21 @@ mod tests {
         assert!(
             Config::from_json(&Json::parse(r#"{"array":{"rows":0}}"#).unwrap()).is_err()
         );
+    }
+
+    #[test]
+    fn serve_precision_parses_and_rejects_garbage() {
+        let c = Config::from_json(
+            &Json::parse(r#"{"serve": {"precision": "int8", "workers": 4}}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.serve.precision, PrecisionPolicy::Int8);
+        assert_eq!(c.serve.workers, 4);
+        assert_eq!(Config::default().serve.precision, PrecisionPolicy::Fp32);
+        assert!(Config::from_json(
+            &Json::parse(r#"{"serve": {"precision": "fp64"}}"#).unwrap()
+        )
+        .is_err());
     }
 
     #[test]

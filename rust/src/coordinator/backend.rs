@@ -3,12 +3,15 @@
 //! Both backends mirror the hardware split — conv section FP32 (systolic
 //! array), FC section in the rust IMAC analog fabric:
 //!
-//! * [`NativeBackend`] — conv via the batched im2col+GEMM plan
-//!   ([`crate::nn::ConvPlan`]) with a per-worker scratch arena: one im2col
-//!   per batch layer, one GEMM over `batch×patches` rows, zero steady-state
-//!   allocations. Always available. (The scalar direct path in
-//!   [`crate::nn::ops`] remains the numerics oracle; the two are
-//!   property-tested equivalent.)
+//! * [`NativeBackend`] — conv via the im2col+GEMM plan
+//!   ([`crate::nn::ConvPlan`]) with a per-worker scratch arena, zero
+//!   steady-state allocations. Always available, in either conv precision:
+//!   the worker's model carries its [`crate::nn::PrecisionPolicy`]
+//!   compiled into its plan at load — fp32 runs one GEMM over
+//!   `batch×patches` rows per layer, int8 runs the i8×i8→i32 kernel per
+//!   image (per-image activation scales). (The scalar direct path in
+//!   [`crate::nn::ops`] remains the numerics oracle; the paths are
+//!   property-tested equivalent/bounded.)
 //! * [`PjrtConvBackend`] — conv via the JAX-AOT-compiled PJRT executable
 //!   (`lenet_conv_b{B}.hlo.txt`), padded to the artifact batch size. The
 //!   production path when the `pjrt` feature (and artifact set) is
@@ -58,11 +61,17 @@ impl InferenceBackend for NativeBackend {
         }
         let model = &self.model;
         let flen = model.plan.feat_len();
-        let Scratch { cols, act_a, act_b, fc_a, fc_b, grow_events } = &mut self.scratch;
+        let Scratch { cols, cols_i8, act_i8, acc_i32, act_a, act_b, fc_a, fc_b, grow_events } =
+            &mut self.scratch;
 
-        // Conv section: one im2col + GEMM pass over the whole batch.
+        // Conv section: fp32 plans run one im2col + GEMM over the whole
+        // batch; int8 plans run a per-image quantize + im2col + i8 GEMM
+        // loop (per-image activation scales keep results independent of
+        // batch composition).
         let t0 = Instant::now();
-        let feats = model.plan.run_parts(images, cols, act_a, act_b, grow_events);
+        let feats = model
+            .plan
+            .run_parts(images, cols, cols_i8, act_i8, acc_i32, act_a, act_b, grow_events);
         metrics.conv_us_total.fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
 
         // Bridge + FC section: per image through the analog fabric.
@@ -75,6 +84,9 @@ impl InferenceBackend for NativeBackend {
         metrics.imac_us_total.fetch_add(t1.elapsed().as_micros() as u64, Ordering::Relaxed);
 
         metrics.gemm_images.fetch_add(images.len() as u64, Ordering::Relaxed);
+        if self.model.precision == crate::nn::PrecisionPolicy::Int8 {
+            metrics.int8_images.fetch_add(images.len() as u64, Ordering::Relaxed);
+        }
         metrics.scratch_bytes.fetch_max(self.scratch.bytes() as u64, Ordering::Relaxed);
         out
     }

@@ -7,7 +7,10 @@
 //! responses flow back through per-request channels. Python is never
 //! involved: artifacts were compiled at build time.
 //!
-//! Threading: each worker thread owns its backend exclusively.
+//! Threading: each worker thread owns its backend exclusively — including
+//! its deployed model, whose conv plan is compiled per worker under the
+//! deployment's precision policy (`serve --precision fp32|int8`) together
+//! with its own scratch arena.
 //! [`Coordinator::start`] spawns one worker — the right shape for the PJRT
 //! backend (the executable is single-threaded `Rc` state) and for
 //! single-core hosts. [`Coordinator::start_pool`] spawns

@@ -23,29 +23,45 @@
 //!   optional multi-worker pool, metrics) — [`coordinator`];
 //! * report generators reproducing every table in the paper — [`report`].
 //!
-//! ## The two conv execution paths
+//! ## The three conv execution paths
 //!
 //! The conv section (the part the paper maps to the TPU's systolic array)
-//! has two software implementations sharing one weight set:
+//! has three software implementations sharing one weight set:
 //!
 //! * **Direct oracle** — [`nn::ops`]: scalar `lax.conv_general_dilated`
 //!   semantics, one allocation per op, one image at a time. Simple enough
 //!   to audit by eye; used to cross-validate PJRT artifacts, property
 //!   tests, and anything that prizes clarity over speed.
-//! * **GEMM hot path** — [`nn::gemm`] + [`nn::ConvPlan`]: batched im2col +
-//!   cache-blocked GEMM with weights prepacked at model load and every
-//!   intermediate staged in a per-worker [`nn::Scratch`] arena. Zero heap
-//!   allocations at steady state (`tests/alloc_steady_state.rs` proves it
-//!   with a counting allocator); `benches/conv_gemm.rs` tracks its speedup
-//!   over the oracle. This is what [`coordinator::NativeBackend`] serves.
+//! * **FP32 GEMM hot path** — [`nn::gemm`] + [`nn::ConvPlan`]: batched
+//!   im2col + cache-blocked GEMM with weights prepacked at model load and
+//!   every intermediate staged in a per-worker [`nn::Scratch`] arena. Zero
+//!   heap allocations at steady state (`tests/alloc_steady_state.rs`
+//!   proves it with a counting allocator). Property-tested ≡ the oracle at
+//!   1e-4 (typically bit-equal: both accumulate in ascending HWIO order).
+//! * **Int8 GEMM hot path** — the [`quant::PrecisionPolicy::Int8`] plan
+//!   variant: per-output-channel symmetric int8 weights
+//!   (`scale = max|w|/127`), quantized i8 im2col staging, an i8×i8→i32
+//!   cache-blocked kernel ([`nn::gemm::gemm_i8_requant`]) and an f32
+//!   requantize epilogue with fused bias/ReLU — the edge TPU's int8
+//!   systolic numerics, at 1/4 the weight memory and GEMM traffic.
+//!   Property-tested against the oracle within the *derived* per-channel
+//!   quantization bound, and zero-alloc like the fp32 path.
 //!
-//! The paths are property-tested equivalent (≤1e-4, typically bit-equal:
-//! both accumulate the reduction in ascending HWIO order).
+//! The policy is a per-deployment choice threaded from [`config`] /
+//! `serve --precision` down to the kernels; every worker's plan compiles
+//! to exactly one precision. **Rule:** any change to conv numerics must
+//! update the oracle and the equivalence/bound property tests (or be
+//! oracle-only plus the tests).
 //!
 //! Python (JAX + Pallas) exists only on the build path (`python/compile`):
 //! it trains the mixed-precision models and AOT-lowers inference graphs to
 //! the HLO text artifacts the rust runtime executes. Nothing Python runs at
 //! request time.
+
+// Kernel entry points (im2col, blocked GEMMs, conv plans) thread many
+// scalar dims; bundling them into structs would obscure the hot-path
+// signatures, so keep clippy's argument-count lint advisory crate-wide.
+#![allow(clippy::too_many_arguments)]
 
 pub mod arch;
 pub mod coordinator;

@@ -16,7 +16,7 @@ use tpu_imac::arch::{self, Mode};
 use tpu_imac::cli::Args;
 use tpu_imac::coordinator::{Coordinator, NativeBackend, PjrtConvBackend};
 use tpu_imac::imac::{AdcConfig, DeviceConfig, ImacConfig};
-use tpu_imac::nn::{DeployedModel, Tensor};
+use tpu_imac::nn::{DeployedModel, PrecisionPolicy, Tensor};
 use tpu_imac::report::{self, AccuracyTable};
 use tpu_imac::runtime::Runtime;
 use tpu_imac::systolic::{self, ArrayConfig, Dataflow, FoldOverlap, Schedule, SramConfig};
@@ -101,6 +101,9 @@ USAGE: tpu-imac <tables|simulate|trace|serve|imac-study|spec> [--flags]
   trace      --model lenet [--layer NAME] --out DIR
   serve      [--artifacts DIR] [--requests N] [--max-batch B] [--native]
              [--workers N]  (N>1 forces the native GEMM backend pool)
+             [--precision fp32|int8]  (conv-section arithmetic; int8 runs
+             the quantized i8 GEMM kernel and forces the native backend;
+             config-file default: serve.precision)
   imac-study [--sigma S] [--alpha A] [--trials N]
   energy     (per-model IMAC latency/energy per inference)
   spec       [--dataflow os|ws|is] [--rows R] [--cols C]";
@@ -113,10 +116,13 @@ fn cmd_tables(args: &Args) -> Result<()> {
     let acc = AccuracyTable::load(&format!("{artifacts}/accuracy.json"));
     let t2 = report::table2(&evals, &acc);
     let t3 = report::table3(&evals, &acc);
+    let tmp = report::table_mixed_precision(&evals);
     match args.get_or("format", "ascii").as_str() {
-        "markdown" => println!("{}\n{}", t2.to_markdown(), t3.to_markdown()),
-        "csv" => println!("{}\n{}", t2.to_csv(), t3.to_csv()),
-        _ => println!("{}\n{}", t2.to_ascii(), t3.to_ascii()),
+        "markdown" => {
+            println!("{}\n{}\n{}", t2.to_markdown(), t3.to_markdown(), tmp.to_markdown())
+        }
+        "csv" => println!("{}\n{}\n{}", t2.to_csv(), t3.to_csv(), tmp.to_csv()),
+        _ => println!("{}\n{}\n{}", t2.to_ascii(), t3.to_ascii(), tmp.to_ascii()),
     }
     if acc.rows.is_empty() {
         println!("(accuracy columns empty: run `make train` first)");
@@ -230,12 +236,13 @@ fn cmd_trace(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn load_model(artifacts: &str) -> Result<DeployedModel> {
-    DeployedModel::load(
+fn load_model_with(artifacts: &str, precision: PrecisionPolicy) -> Result<DeployedModel> {
+    DeployedModel::load_with(
         &format!("{artifacts}/weights_lenet.json"),
         &ImacConfig::default(),
         AdcConfig { bits: 0, full_scale: 1.0 },
         0,
+        precision,
     )
 }
 
@@ -246,15 +253,28 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let n_requests = args.get_usize("requests", 256)?;
     let max_batch = args.get_usize("max-batch", serve_defaults.max_batch)?;
     let workers = args.get_usize("workers", serve_defaults.workers)?;
-    let native = args.has("native");
+    let precision = match args.get("precision") {
+        Some(s) => PrecisionPolicy::parse(s)
+            .with_context(|| format!("--precision must be fp32|int8, got {s}"))?,
+        None => serve_defaults.precision,
+    };
+    // The int8 conv path is a native-kernel feature; the PJRT artifacts
+    // are compiled fp32.
+    let native = args.has("native") || precision == PrecisionPolicy::Int8;
 
-    let model = load_model(&artifacts)?;
+    let model = load_model_with(&artifacts, precision)?;
     println!(
         "model {} [{}] loaded: fp32 acc {:.2}%, ternary acc {:.2}% (training-time)",
         model.row,
         model.dataset,
         model.acc_fp32 * 100.0,
         model.acc_ternary * 100.0
+    );
+    println!(
+        "deployment memory [{}]: conv weights {:.1} KiB, FC RRAM (2-bit packed) {:.1} KiB",
+        precision.label(),
+        model.plan.weight_bytes() as f64 / 1024.0,
+        model.fabric.rram_bytes() as f64 / 1024.0
     );
     let input_hwc = model.input_hwc;
     drop(model);
@@ -266,13 +286,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let coord = if workers > 1 {
         // A worker pool requires a re-invocable factory; the PJRT backend
         // is single-owner state, so a pool always runs the native GEMM
-        // path (one backend + scratch arena per worker).
+        // path (one backend + scratch arena per worker, each compiling
+        // its own plan under the deployment's precision policy).
         if !native {
             eprintln!("--workers {workers}: forcing native GEMM backend (PJRT is single-owner)");
         }
-        Coordinator::start_pool(config, move || make_backend(&artifacts2, max_batch, true))
+        Coordinator::start_pool(config, move || {
+            make_backend(&artifacts2, max_batch, true, precision)
+        })
     } else {
-        Coordinator::start(config, move || make_backend(&artifacts2, max_batch, native))
+        Coordinator::start(config, move || {
+            make_backend(&artifacts2, max_batch, native, precision)
+        })
     };
 
     // Synthetic request stream: deterministic pseudo-images.
@@ -313,8 +338,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     if snap.gemm_images > 0 {
         println!(
-            "native GEMM path: {} images, scratch high-water {:.1} KiB/worker (zero steady-state allocs)",
+            "native GEMM path: {} images ({} via int8 kernel), scratch high-water {:.1} KiB/worker (zero steady-state allocs)",
             snap.gemm_images,
+            snap.int8_images,
             snap.scratch_bytes as f64 / 1024.0
         );
     }
@@ -323,14 +349,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
 }
 
 /// Build the serving backend: PJRT conv artifact if available, else native.
+/// `precision` is the per-worker conv policy; int8 always compiles a
+/// native quantized plan (PJRT artifacts are fp32).
 fn make_backend(
     artifacts: &str,
     max_batch: usize,
     force_native: bool,
+    precision: PrecisionPolicy,
 ) -> Box<dyn tpu_imac::coordinator::InferenceBackend> {
-    let model = load_model(artifacts).expect("load weights json");
+    let model = load_model_with(artifacts, precision).expect("load weights json");
     if force_native {
-        eprintln!("backend: native rust conv + IMAC fabric");
+        eprintln!("backend: native rust conv [{}] + IMAC fabric", precision.label());
         return Box::new(NativeBackend::new(model));
     }
     let artifact = format!("lenet_conv_b{max_batch}.hlo.txt");
@@ -347,12 +376,16 @@ fn make_backend(
             }
             Err(e) => {
                 eprintln!("PJRT backend unavailable ({e:#}); using native");
-                Box::new(NativeBackend::new(load_model(artifacts).expect("reload")))
+                Box::new(NativeBackend::new(
+                    load_model_with(artifacts, precision).expect("reload"),
+                ))
             }
         },
         Err(e) => {
             eprintln!("PJRT runtime unavailable ({e:#}); using native");
-            Box::new(NativeBackend::new(load_model(artifacts).expect("reload")))
+            Box::new(NativeBackend::new(
+                load_model_with(artifacts, precision).expect("reload"),
+            ))
         }
     }
 }

@@ -25,6 +25,9 @@ pub struct Metrics {
     pub queue_us_total: AtomicU64,
     /// Images served through the native im2col+GEMM conv path.
     pub gemm_images: AtomicU64,
+    /// Subset of `gemm_images` executed by the int8 quantized kernel
+    /// (workers whose deployment policy is `--precision int8`).
+    pub int8_images: AtomicU64,
     /// High-water scratch-arena footprint across workers (bytes); the
     /// steady-state working set of the zero-allocation hot path.
     pub scratch_bytes: AtomicU64,
@@ -46,6 +49,7 @@ pub struct Snapshot {
     pub imac_us_total: u64,
     pub queue_us_total: u64,
     pub gemm_images: u64,
+    pub int8_images: u64,
     pub scratch_bytes: u64,
 }
 
@@ -93,6 +97,7 @@ impl Metrics {
             imac_us_total: self.imac_us_total.load(Ordering::Relaxed),
             queue_us_total: self.queue_us_total.load(Ordering::Relaxed),
             gemm_images: self.gemm_images.load(Ordering::Relaxed),
+            int8_images: self.int8_images.load(Ordering::Relaxed),
             scratch_bytes: self.scratch_bytes.load(Ordering::Relaxed),
         }
     }

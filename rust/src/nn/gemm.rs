@@ -40,15 +40,19 @@ pub fn conv_out_dims(h: usize, w: usize, k: usize, stride: usize, pad: usize) ->
 /// Stage one NHWC image (`h×w×c` at `x`) as im2col rows into `cols`, which
 /// must hold exactly `oh·ow·k·k·c` elements. Row `oy·ow+ox` holds the patch
 /// `[ky][kx][ci]` in HWIO reduction order; out-of-bounds taps are zeroed.
-pub fn im2col_into(
-    x: &[f32],
+///
+/// Generic over the element type so the int8 path stages pre-quantized `i8`
+/// activations through the identical control flow at 4× less memory
+/// traffic (`T::default()` is the zero pad value for both f32 and i8).
+pub fn im2col_into<T: Copy + Default>(
+    x: &[T],
     h: usize,
     w: usize,
     c: usize,
     k: usize,
     stride: usize,
     pad: usize,
-    cols: &mut [f32],
+    cols: &mut [T],
 ) -> (usize, usize) {
     assert_eq!(x.len(), h * w * c, "input shape");
     let (oh, ow) = conv_out_dims(h, w, k, stride, pad);
@@ -61,7 +65,7 @@ pub fn im2col_into(
                 let iy = (oy * stride + ky) as isize - pad as isize;
                 let dst = row + ky * k * c;
                 if iy < 0 || iy as usize >= h {
-                    cols[dst..dst + k * c].fill(0.0);
+                    cols[dst..dst + k * c].fill(T::default());
                     continue;
                 }
                 let iy = iy as usize;
@@ -76,7 +80,7 @@ pub fn im2col_into(
                         let ix = (ox * stride + kx) as isize - pad as isize;
                         let d = dst + kx * c;
                         if ix < 0 || ix as usize >= w {
-                            cols[d..d + c].fill(0.0);
+                            cols[d..d + c].fill(T::default());
                         } else {
                             let src = (iy * w + ix as usize) * c;
                             cols[d..d + c].copy_from_slice(&x[src..src + c]);
@@ -164,6 +168,134 @@ pub fn gemm_bias(
             }
         }
     }
+}
+
+/// Largest reduction depth the i8×i8→i32 kernel accepts without risking
+/// accumulator overflow: `kk · 127·127 ≤ i32::MAX`.
+pub const I8_GEMM_MAX_KK: usize = (i32::MAX / (127 * 127)) as usize;
+
+/// Quantized GEMM with fused requantize/bias/ReLU epilogue — the int8 conv
+/// hot path's kernel (TPU int8 systolic numerics):
+///
+/// `acc[m×n] = a[m×kk] · b[kk×n]` in exact i32 arithmetic, then
+/// `out[i][j] = acc[i][j] · scale_x·scale_w[j] + bias[j]` (ReLU optional).
+///
+/// `a` is the quantized im2col staging (per-tensor activation scale
+/// `scale_x`), `b` the prepacked per-output-channel int8 weights. Blocking
+/// mirrors [`gemm_bias`]: `KC`-row B panels, four A rows per pass (each at
+/// 1/4 the f32 kernel's memory traffic — both matrices are bytes). `acc`
+/// is caller-owned scratch (`m·n` i32) so the steady state allocates
+/// nothing; accumulation order over `p` is ascending, and the i32 section
+/// is *exact*, so blocking can never change results.
+pub fn gemm_i8_requant(
+    a: &[i8],
+    m: usize,
+    kk: usize,
+    b: &[i8],
+    n: usize,
+    scale_x: f32,
+    scale_w: &[f32],
+    bias: &[f32],
+    relu: bool,
+    acc: &mut [i32],
+    out: &mut [f32],
+) {
+    assert_eq!(a.len(), m * kk, "A shape");
+    assert_eq!(b.len(), kk * n, "B shape");
+    assert_eq!(scale_w.len(), n, "weight scales shape");
+    assert_eq!(bias.len(), n, "bias shape");
+    assert_eq!(acc.len(), m * n, "acc shape");
+    assert_eq!(out.len(), m * n, "out shape");
+    assert!(kk <= I8_GEMM_MAX_KK, "reduction depth {kk} overflows i32 accumulation");
+    acc.fill(0);
+    let mut pc = 0;
+    while pc < kk {
+        let kc = KC.min(kk - pc);
+        let mut i = 0;
+        // Four-row register blocking over the current B panel.
+        while i + 4 <= m {
+            let block = &mut acc[i * n..(i + 4) * n];
+            let (r0, rest) = block.split_at_mut(n);
+            let (r1, rest) = rest.split_at_mut(n);
+            let (r2, r3) = rest.split_at_mut(n);
+            for p in pc..pc + kc {
+                let a0 = a[i * kk + p] as i32;
+                let a1 = a[(i + 1) * kk + p] as i32;
+                let a2 = a[(i + 2) * kk + p] as i32;
+                let a3 = a[(i + 3) * kk + p] as i32;
+                if (a0 | a1 | a2 | a3) == 0 {
+                    continue;
+                }
+                let brow = &b[p * n..(p + 1) * n];
+                for (j, &bv) in brow.iter().enumerate() {
+                    let bv = bv as i32;
+                    r0[j] += a0 * bv;
+                    r1[j] += a1 * bv;
+                    r2[j] += a2 * bv;
+                    r3[j] += a3 * bv;
+                }
+            }
+            i += 4;
+        }
+        // Tail rows, scalar.
+        while i < m {
+            let arow = &mut acc[i * n..(i + 1) * n];
+            for p in pc..pc + kc {
+                let av = a[i * kk + p] as i32;
+                if av == 0 {
+                    continue;
+                }
+                let brow = &b[p * n..(p + 1) * n];
+                for (o, &bv) in arow.iter_mut().zip(brow) {
+                    *o += av * bv as i32;
+                }
+            }
+            i += 1;
+        }
+        pc += kc;
+    }
+    // Requantize epilogue: one f32 multiply-add per element, fused ReLU.
+    for (orow, arow) in out.chunks_exact_mut(n).zip(acc.chunks_exact(n)) {
+        for ((o, &av), (&sw, &bv)) in
+            orow.iter_mut().zip(arow).zip(scale_w.iter().zip(bias))
+        {
+            let v = av as f32 * (scale_x * sw) + bv;
+            *o = if relu && v < 0.0 { 0.0 } else { v };
+        }
+    }
+}
+
+/// Allocating convenience: int8 conv (quantize → im2col → i8 GEMM →
+/// requantize) on one image, dynamic per-tensor activation scale. The hot
+/// path runs the same arithmetic through `engine::ConvPlan`'s prepacked
+/// int8 variant with scratch reuse; this form exists for tests and is the
+/// function the quantization-error property is stated over.
+pub fn conv2d_gemm_i8(
+    x: &super::tensor::Tensor,
+    w: &[f32],
+    b: &[f32],
+    k: usize,
+    cout: usize,
+    stride: usize,
+    pad: usize,
+) -> super::tensor::Tensor {
+    let cin = x.c;
+    assert_eq!(w.len(), k * k * cin * cout, "weight len");
+    assert_eq!(b.len(), cout, "bias len");
+    let (oh, ow) = conv_out_dims(x.h, x.w, k, stride, pad);
+    let kk = k * k * cin;
+    let (wq, scales) = crate::quant::quantize_weights_per_cout(w, kk, cout);
+    let sx = crate::quant::act_scale_i8(crate::quant::max_abs(&x.data));
+    let mut xq = vec![0i8; x.data.len()];
+    crate::quant::quantize_i8_into(&x.data, sx, &mut xq);
+    let mut cols = vec![0i8; oh * ow * kk];
+    im2col_into(&xq, x.h, x.w, x.c, k, stride, pad, &mut cols);
+    let mut acc = vec![0i32; oh * ow * cout];
+    let mut out = super::tensor::Tensor::zeros(oh, ow, cout);
+    gemm_i8_requant(
+        &cols, oh * ow, kk, &wq, cout, sx, &scales, b, false, &mut acc, &mut out.data,
+    );
+    out
 }
 
 /// Depthwise conv into a caller-owned buffer with fused ReLU (depthwise
@@ -462,6 +594,140 @@ mod tests {
             let mut got = vec![0.0; c];
             gap_into(&x.data, h, w, c, &mut got);
             assert!(max_abs_diff(&got, &want_gap.data) < 1e-5);
+        });
+    }
+
+    /// Satellite property: the int8 conv path agrees with the FP32 oracle
+    /// to within the *derived* per-channel quantization bound — no tuned
+    /// epsilon. With `x̂ = sx·qx` (|x−x̂| ≤ sx/2), `ŵ = sw_j·qw`
+    /// (|w−ŵ| ≤ sw_j/2, |ŵ| ≤ max|w_j|), each of the `kk` product terms
+    /// errs by at most `|x|·sw_j/2 + |ŵ|·sx/2`, so
+    /// `|y_j − ŷ_j| ≤ kk·(max|x|·sw_j + max|w_j|·sx)/2` — the i32
+    /// accumulation itself is exact.
+    #[test]
+    fn conv2d_gemm_i8_within_derived_quant_bound() {
+        forall(60, |g| {
+            let k = *g.choose(&[1usize, 2, 3, 5]);
+            let stride = g.usize_in(1, 3);
+            let pad = g.usize_in(0, 2);
+            let cin = g.usize_in(1, 6);
+            let cout = g.usize_in(1, 24);
+            let h = g.usize_in(k.max(2 * pad + 1), k + 9);
+            let w = g.usize_in(k.max(2 * pad + 1), k + 9);
+            let x = Tensor::from_vec(h, w, cin, g.vec_f32(h * w * cin, -1.0, 1.0));
+            let wgt = g.vec_f32(k * k * cin * cout, -1.0, 1.0);
+            let b = g.vec_f32(cout, -0.5, 0.5);
+            let want = ops::conv2d(&x, &wgt, &b, k, cout, stride, pad);
+            let got = conv2d_gemm_i8(&x, &wgt, &b, k, cout, stride, pad);
+            assert_eq!((got.h, got.w, got.c), (want.h, want.w, want.c));
+            let kk = k * k * cin;
+            let mx = crate::quant::max_abs(&x.data) as f64;
+            let sx = crate::quant::act_scale_i8(mx as f32) as f64;
+            let (_, sw) = crate::quant::quantize_weights_per_cout(&wgt, kk, cout);
+            // Per-channel max |w| (the |ŵ| bound).
+            let mut mw = vec![0.0f64; cout];
+            for row in wgt.chunks_exact(cout) {
+                for (m, &v) in mw.iter_mut().zip(row) {
+                    *m = m.max(v.abs() as f64);
+                }
+            }
+            for (idx, (gv, wv)) in got.data.iter().zip(&want.data).enumerate() {
+                let j = idx % cout;
+                // 1% headroom covers both paths' f32 accumulation error
+                // (≲ kk·127·ε relative); the derived term dominates.
+                let bound =
+                    kk as f64 * (mx * sw[j] as f64 + mw[j] * sx) * 0.5 * 1.01 + 1e-4;
+                let d = (*gv as f64 - *wv as f64).abs();
+                assert!(
+                    d <= bound,
+                    "k={k} s={stride} p={pad} cin={cin} cout={cout} j={j}: diff {d} > bound {bound}"
+                );
+            }
+        });
+    }
+
+    /// The i8 kernel's requantize epilogue must match a dequantize-then-f32
+    /// reference exactly (same operation order), ReLU fusion included.
+    #[test]
+    fn gemm_i8_requant_matches_integer_reference() {
+        forall(30, |g| {
+            let m = g.usize_in(1, 9);
+            let kk = g.usize_in(1, 40);
+            let n = g.usize_in(1, 17);
+            let a: Vec<i8> = (0..m * kk).map(|_| g.i64_in(-127, 127) as i8).collect();
+            let b: Vec<i8> = (0..kk * n).map(|_| g.i64_in(-127, 127) as i8).collect();
+            let sx = g.f32_in(1e-4, 0.1);
+            let sw = g.vec_f32(n, 1e-4, 0.1);
+            let bias = g.vec_f32(n, -0.5, 0.5);
+            let relu = g.bool();
+            let mut acc = vec![0i32; m * n];
+            let mut out = vec![0.0f32; m * n];
+            gemm_i8_requant(&a, m, kk, &b, n, sx, &sw, &bias, relu, &mut acc, &mut out);
+            for i in 0..m {
+                for j in 0..n {
+                    let mut iacc = 0i64;
+                    for p in 0..kk {
+                        iacc += a[i * kk + p] as i64 * b[p * n + j] as i64;
+                    }
+                    assert_eq!(acc[i * n + j] as i64, iacc, "i32 section must be exact");
+                    let v = iacc as f32 * (sx * sw[j]) + bias[j];
+                    let v = if relu && v < 0.0 { 0.0 } else { v };
+                    assert_eq!(out[i * n + j], v);
+                }
+            }
+        });
+    }
+
+    /// KC blocking across panels must not change the (exact) i32 result.
+    #[test]
+    fn gemm_i8_kc_blocking_exact() {
+        forall(4, |g| {
+            let m = g.usize_in(1, 6);
+            let kk = g.usize_in(KC + 1, 2 * KC + 50);
+            let n = g.usize_in(1, 8);
+            let a: Vec<i8> = (0..m * kk).map(|_| g.i64_in(-127, 127) as i8).collect();
+            let b: Vec<i8> = (0..kk * n).map(|_| g.i64_in(-127, 127) as i8).collect();
+            let sw = vec![1.0f32; n];
+            let bias = vec![0.0f32; n];
+            let mut acc = vec![0i32; m * n];
+            let mut out = vec![0.0f32; m * n];
+            gemm_i8_requant(&a, m, kk, &b, n, 1.0, &sw, &bias, false, &mut acc, &mut out);
+            for i in 0..m {
+                for j in 0..n {
+                    let mut want = 0i64;
+                    for p in 0..kk {
+                        want += a[i * kk + p] as i64 * b[p * n + j] as i64;
+                    }
+                    assert_eq!(acc[i * n + j] as i64, want);
+                }
+            }
+        });
+    }
+
+    /// i8 staging through the generic im2col matches quantize-after-f32
+    /// staging (same zeros, same patch layout).
+    #[test]
+    fn im2col_i8_matches_quantized_f32_staging() {
+        forall(30, |g| {
+            let k = *g.choose(&[1usize, 2, 3]);
+            let stride = g.usize_in(1, 2);
+            let pad = g.usize_in(0, 2);
+            let c = g.usize_in(1, 4);
+            let h = g.usize_in(k.max(2 * pad + 1), k + 6);
+            let w = g.usize_in(k.max(2 * pad + 1), k + 6);
+            let x = g.vec_f32(h * w * c, -1.0, 1.0);
+            let sx = crate::quant::act_scale_i8(crate::quant::max_abs(&x));
+            let mut xq = vec![0i8; x.len()];
+            crate::quant::quantize_i8_into(&x, sx, &mut xq);
+            let (oh, ow) = conv_out_dims(h, w, k, stride, pad);
+            let kk = k * k * c;
+            let mut cols_q = vec![0i8; oh * ow * kk];
+            im2col_into(&xq, h, w, c, k, stride, pad, &mut cols_q);
+            let mut cols_f = vec![0.0f32; oh * ow * kk];
+            im2col_into(&x, h, w, c, k, stride, pad, &mut cols_f);
+            let mut want = vec![0i8; cols_f.len()];
+            crate::quant::quantize_i8_into(&cols_f, sx, &mut want);
+            assert_eq!(cols_q, want);
         });
     }
 

@@ -1,14 +1,27 @@
 //! Functional NN inference engine: NHWC tensor ops and the deployed
-//! mixed-precision model (FP32 conv + sign bridge + IMAC analog FC).
+//! mixed-precision model (conv section + sign bridge + IMAC analog FC).
 //!
-//! Two conv execution paths share one weight set:
+//! Three conv execution paths share one weight set:
 //!
 //! * [`ops`] — scalar direct convolution. The **numerics oracle**: simple,
 //!   allocation-per-op, per-image; used for cross-checking PJRT artifacts
 //!   and as the reference in equivalence property tests.
-//! * [`gemm`] + [`engine::ConvPlan`] — the **serving hot path**: batched
-//!   im2col + cache-blocked GEMM with prepacked weights and a per-worker
-//!   [`Scratch`] arena, zero heap allocations at steady state.
+//! * [`gemm`] + [`engine::ConvPlan`] (fp32) — the **FP32 serving hot
+//!   path**: batched im2col + cache-blocked GEMM with prepacked weights
+//!   and a per-worker [`Scratch`] arena, zero heap allocations at steady
+//!   state. Property-tested ≡ the oracle at 1e-4.
+//! * [`gemm::gemm_i8_requant`] + the int8 [`engine::ConvPlan`] variant —
+//!   the **int8 serving hot path** ([`quant::PrecisionPolicy::Int8`]):
+//!   per-output-channel symmetric int8 weights, quantized i8 im2col
+//!   staging, i32 accumulation, f32 requantize with fused bias/ReLU.
+//!   Property-tested against the oracle within the *derived* per-channel
+//!   quantization bound (no tuned epsilons).
+//!
+//! Rule: any change to conv numerics must update the oracle **and** the
+//! equivalence/bound property tests — or be oracle-only plus the tests.
+//!
+//! [`quant::PrecisionPolicy`]: crate::quant::PrecisionPolicy
+//! [`quant::PrecisionPolicy::Int8`]: crate::quant::PrecisionPolicy::Int8
 
 pub mod engine;
 pub mod gemm;
@@ -17,6 +30,7 @@ pub mod scratch;
 pub mod synthetic;
 pub mod tensor;
 
+pub use crate::quant::PrecisionPolicy;
 pub use engine::{ConvOp, ConvPlan, DeployedModel};
 pub use scratch::Scratch;
 pub use tensor::Tensor;

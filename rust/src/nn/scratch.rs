@@ -5,7 +5,9 @@
 //! Buffers grow monotonically to the high-water mark of the workload during
 //! warmup and are then reused verbatim: steady-state requests perform zero
 //! heap allocations inside the engine (proved by
-//! `tests/alloc_steady_state.rs` with a counting global allocator).
+//! `tests/alloc_steady_state.rs` with a counting global allocator) — on
+//! both the fp32 and the int8 conv path, including the i8 quantized
+//! staging and i32 accumulator buffers.
 //!
 //! Growth is tracked in [`Scratch::grow_events`] so tests and metrics can
 //! assert the arena has converged.
@@ -15,6 +17,13 @@
 pub struct Scratch {
     /// im2col staging: `batch·patches × k·k·cin` rows for the current layer.
     pub cols: Vec<f32>,
+    /// Quantized im2col staging for the int8 conv path (one image at a
+    /// time — int8 layers loop per image: `patches × k·k·cin`).
+    pub cols_i8: Vec<i8>,
+    /// Quantized copy of one image's input activations (int8 path).
+    pub act_i8: Vec<i8>,
+    /// i32 GEMM accumulators for the int8 path (`patches × cout`).
+    pub acc_i32: Vec<i32>,
     /// Batched activation ping buffer (NHWC, batch-contiguous).
     pub act_a: Vec<f32>,
     /// Batched activation pong buffer.
@@ -35,12 +44,13 @@ impl Scratch {
     /// Resize `buf` to exactly `len` elements, counting a grow event in
     /// `grows` when the capacity had to increase (i.e. a real allocation).
     /// Shrinking never releases memory, so steady-state calls are free.
+    /// Generic so the f32, i8 and i32 arena buffers share one policy.
     #[inline]
-    pub fn ensure(buf: &mut Vec<f32>, grows: &mut u64, len: usize) {
+    pub fn ensure<T: Copy + Default>(buf: &mut Vec<T>, grows: &mut u64, len: usize) {
         if buf.capacity() < len {
             *grows += 1;
         }
-        buf.resize(len, 0.0);
+        buf.resize(len, T::default());
     }
 
     /// Current arena footprint in bytes (capacity, not live length).
@@ -49,7 +59,10 @@ impl Scratch {
             + self.act_a.capacity()
             + self.act_b.capacity()
             + self.fc_a.capacity()
-            + self.fc_b.capacity())
+            + self.fc_b.capacity()
+            + self.acc_i32.capacity())
+            + self.cols_i8.capacity()
+            + self.act_i8.capacity()
     }
 }
 
@@ -70,5 +83,21 @@ mod tests {
         Scratch::ensure(&mut s.cols, &mut grows, 200);
         assert_eq!(grows, 2);
         assert!(s.bytes() >= 200 * 4);
+    }
+
+    #[test]
+    fn ensure_is_generic_over_arena_element_types() {
+        let mut s = Scratch::new();
+        let mut grows = 0u64;
+        Scratch::ensure(&mut s.cols_i8, &mut grows, 64);
+        Scratch::ensure(&mut s.act_i8, &mut grows, 32);
+        Scratch::ensure(&mut s.acc_i32, &mut grows, 16);
+        assert_eq!(grows, 3);
+        assert_eq!(s.cols_i8.len(), 64);
+        assert_eq!(s.acc_i32.len(), 16);
+        // i8 buffers count 1 byte each, i32 four.
+        assert!(s.bytes() >= 64 + 32 + 16 * 4);
+        Scratch::ensure(&mut s.cols_i8, &mut grows, 48);
+        assert_eq!(grows, 3, "shrink must not count as growth");
     }
 }

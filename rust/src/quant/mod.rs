@@ -1,9 +1,121 @@
 //! Quantization library: the TWN ternarization and sign binarization used
-//! across the stack, mirrored from `python/compile/quant.py` so rust-side
-//! tooling (weight auditing, re-quantization of FP checkpoints, tests) can
-//! reproduce the trainer's deployment arithmetic bit-for-bit.
+//! across the stack (mirrored from `python/compile/quant.py` so rust-side
+//! tooling can reproduce the trainer's deployment arithmetic bit-for-bit),
+//! plus the **int8 conv quantization** behind the TPU-side serving path:
+//! per-output-channel symmetric weights (`scale = max|w| / 127`), symmetric
+//! per-tensor activations, i32 accumulation, f32 requantize at layer
+//! boundaries — the edge-TPU numerics convention (arXiv:2102.10423).
 
 use crate::arch::bridge::sign_level;
+
+/// Which arithmetic the conv section runs in, per deployment. Threaded from
+/// config/CLI (`serve --precision int8`) through [`crate::nn::ConvPlan`]
+/// down to the GEMM kernels; the FC section is always ternary-analog.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PrecisionPolicy {
+    /// FP32 conv weights + FP32 GEMM (the numerics oracle's arithmetic).
+    #[default]
+    Fp32,
+    /// Per-output-channel symmetric int8 weights, int8 activations, i32
+    /// accumulators, f32 requantize — the TPU's int8 systolic datapath.
+    Int8,
+}
+
+impl PrecisionPolicy {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "fp32" | "f32" => Some(Self::Fp32),
+            "int8" | "i8" => Some(Self::Int8),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::Fp32 => "fp32",
+            Self::Int8 => "int8",
+        }
+    }
+}
+
+/// Largest int8 magnitude used by the symmetric scheme ([-127, 127]; -128
+/// is never produced so negation stays closed).
+pub const I8_LEVELS: f32 = 127.0;
+
+/// Per-output-channel symmetric int8 quantization of a conv weight matrix
+/// in B-matrix layout (`kk × cout`, row-major — HWIO flattened). Returns
+/// `(q, scales)` with `scales[j] = max_p |w[p][j]| / 127` (1.0 for an
+/// all-zero column so requantize stays finite) and
+/// `q[p][j] = round(w[p][j] / scales[j])`.
+pub fn quantize_weights_per_cout(w: &[f32], kk: usize, cout: usize) -> (Vec<i8>, Vec<f32>) {
+    assert_eq!(w.len(), kk * cout, "weight matrix shape");
+    let mut scales = vec![0.0f32; cout];
+    for row in w.chunks_exact(cout) {
+        for (s, &v) in scales.iter_mut().zip(row) {
+            let a = v.abs();
+            if a > *s {
+                *s = a;
+            }
+        }
+    }
+    for s in scales.iter_mut() {
+        *s = if *s == 0.0 { 1.0 } else { *s / I8_LEVELS };
+    }
+    let mut q = Vec::with_capacity(w.len());
+    for row in w.chunks_exact(cout) {
+        for (&s, &v) in scales.iter().zip(row) {
+            q.push(quantize_one(v, 1.0 / s));
+        }
+    }
+    (q, scales)
+}
+
+/// Inverse of [`quantize_weights_per_cout`]: `w[p][j] = q[p][j] · scales[j]`.
+pub fn dequantize_per_cout(q: &[i8], scales: &[f32], kk: usize, cout: usize) -> Vec<f32> {
+    assert_eq!(q.len(), kk * cout, "quantized matrix shape");
+    assert_eq!(scales.len(), cout, "scales len");
+    let mut w = Vec::with_capacity(q.len());
+    for row in q.chunks_exact(cout) {
+        for (&s, &v) in scales.iter().zip(row) {
+            w.push(v as f32 * s);
+        }
+    }
+    w
+}
+
+/// Max-|x| of an activation slice (the symmetric quantization range).
+pub fn max_abs(x: &[f32]) -> f32 {
+    x.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+}
+
+/// Per-tensor symmetric activation scale for int8: `max|x| / 127`, with an
+/// all-zero tensor mapping to scale 1.0 (every sample quantizes to 0 and
+/// the requantize product stays finite).
+pub fn act_scale_i8(max_abs: f32) -> f32 {
+    if max_abs == 0.0 {
+        1.0
+    } else {
+        max_abs / I8_LEVELS
+    }
+}
+
+/// Quantize one value given the *inverse* scale (hot loops hoist the
+/// division): `round(v / scale)` clamped to [-127, 127].
+#[inline]
+pub fn quantize_one(v: f32, inv_scale: f32) -> i8 {
+    (v * inv_scale).round().clamp(-I8_LEVELS, I8_LEVELS) as i8
+}
+
+/// Quantize a slice into a caller-owned i8 buffer (zero allocations):
+/// `out[i] = round(x[i] / scale)` clamped to [-127, 127].
+pub fn quantize_i8_into(x: &[f32], scale: f32, out: &mut [i8]) {
+    assert_eq!(x.len(), out.len(), "quantize buffer shape");
+    assert!(scale > 0.0, "non-positive quantization scale {scale}");
+    let inv = 1.0 / scale;
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o = quantize_one(v, inv);
+    }
+}
 
 /// TWN per-tensor threshold: `Δ = 0.7 · mean(|w|)` (Li & Liu 2016), the
 /// rule the paper's step-2 forward pass uses.
@@ -38,7 +150,7 @@ pub fn binarize_signs(x: &[f32]) -> Vec<i8> {
 /// Pack ternary weights 4-per-byte (2 bits each; 0b00=0, 0b01=+1, 0b10=−1)
 /// — the RRAM storage layout behind Table 2's 2-bit accounting.
 pub fn pack_ternary(w: &[i8]) -> Vec<u8> {
-    let mut out = vec![0u8; (w.len() + 3) / 4];
+    let mut out = vec![0u8; w.len().div_ceil(4)];
     for (i, &v) in w.iter().enumerate() {
         let code: u8 = match v {
             0 => 0b00,
@@ -104,7 +216,7 @@ mod tests {
             let n = g.usize_in(0, 130);
             let w = g.vec_ternary(n);
             let packed = pack_ternary(&w);
-            assert_eq!(packed.len(), (n + 3) / 4);
+            assert_eq!(packed.len(), n.div_ceil(4));
             assert_eq!(unpack_ternary(&packed, n), w);
         });
     }
@@ -114,11 +226,104 @@ mod tests {
         // 1024x1024 + 1024x10 head -> 264,704 bytes = 0.2647 decimal MB.
         let n = 1024 * 1024 + 1024 * 10;
         let w = vec![0i8; n];
-        assert_eq!(pack_ternary(&w).len() as u64, (2 * n as u64 + 7) / 8);
+        assert_eq!(pack_ternary(&w).len() as u64, (2 * n as u64).div_ceil(8));
     }
 
     #[test]
     fn signs_follow_bridge() {
         assert_eq!(binarize_signs(&[0.0, -0.0, 2.0, -2.0]), vec![1, 1, 1, -1]);
+    }
+
+    #[test]
+    fn precision_policy_parses() {
+        assert_eq!(PrecisionPolicy::parse("fp32"), Some(PrecisionPolicy::Fp32));
+        assert_eq!(PrecisionPolicy::parse("int8"), Some(PrecisionPolicy::Int8));
+        assert_eq!(PrecisionPolicy::parse("i8"), Some(PrecisionPolicy::Int8));
+        assert_eq!(PrecisionPolicy::parse("fp16"), None);
+        assert_eq!(PrecisionPolicy::default(), PrecisionPolicy::Fp32);
+        assert_eq!(PrecisionPolicy::Int8.label(), "int8");
+    }
+
+    /// Round-trip bound: dequantized weights sit within half a scale step of
+    /// the originals, per output channel (the satellite round-trip test).
+    #[test]
+    fn per_cout_roundtrip_within_half_step() {
+        forall(60, |g| {
+            let kk = g.usize_in(1, 60);
+            let cout = g.usize_in(1, 12);
+            let w = g.vec_f32(kk * cout, -2.0, 2.0);
+            let (q, scales) = quantize_weights_per_cout(&w, kk, cout);
+            assert_eq!(q.len(), w.len());
+            assert_eq!(scales.len(), cout);
+            let deq = dequantize_per_cout(&q, &scales, kk, cout);
+            for p in 0..kk {
+                for j in 0..cout {
+                    let err = (w[p * cout + j] - deq[p * cout + j]).abs();
+                    // Half a step, plus f32 division/rounding slack (the
+                    // reciprocal-scale path can shift a boundary value by
+                    // ~|q|·2⁻²⁴ ≤ 127·ulp before rounding).
+                    let bound = scales[j] * (0.5 + 1e-4) + 1e-12;
+                    assert!(err <= bound, "p={p} j={j}: err {err} > {bound}");
+                }
+            }
+        });
+    }
+
+    /// Exactly representable weights (integer multiples of the recovered
+    /// scale, with ±127 present so the scale round-trips) survive unchanged.
+    #[test]
+    fn per_cout_exact_grid_roundtrips() {
+        forall(30, |g| {
+            let kk = g.usize_in(2, 40);
+            let cout = g.usize_in(1, 8);
+            let mut scales = Vec::with_capacity(cout);
+            for _ in 0..cout {
+                scales.push(g.f32_in(1e-3, 0.5));
+            }
+            let mut w = vec![0.0f32; kk * cout];
+            for j in 0..cout {
+                for p in 0..kk {
+                    let q = g.i64_in(-127, 127) as f32;
+                    w[p * cout + j] = q * scales[j];
+                }
+                // Pin the extreme level so max|w|/127 recovers the scale.
+                w[g.usize_in(0, kk - 1) * cout + j] = 127.0 * scales[j];
+            }
+            let (q, rec) = quantize_weights_per_cout(&w, kk, cout);
+            let deq = dequantize_per_cout(&q, &rec, kk, cout);
+            for (a, b) in w.iter().zip(&deq) {
+                let tol = 1e-5 * a.abs().max(1e-6);
+                assert!((a - b).abs() <= tol, "{a} vs {b}");
+            }
+        });
+    }
+
+    #[test]
+    fn zero_column_gets_unit_scale() {
+        // Column 1 all-zero: scale 1.0, quantized all-zero, dequantizes to 0.
+        let w = [0.5f32, 0.0, -0.25, 0.0];
+        let (q, s) = quantize_weights_per_cout(&w, 2, 2);
+        assert_eq!(s[1], 1.0);
+        assert_eq!(q[1], 0);
+        assert_eq!(q[3], 0);
+        assert!((s[0] - 0.5 / 127.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn activation_quantization_covers_range() {
+        forall(40, |g| {
+            let n = g.usize_in(1, 200);
+            let x = g.vec_f32(n, -3.0, 3.0);
+            let s = act_scale_i8(max_abs(&x));
+            let mut q = vec![0i8; n];
+            quantize_i8_into(&x, s, &mut q);
+            for (&xi, &qi) in x.iter().zip(&q) {
+                assert!((-127..=127).contains(&(qi as i32)));
+                let err = (xi - qi as f32 * s).abs();
+                assert!(err <= s * (0.5 + 1e-4), "err {err} scale {s}");
+            }
+        });
+        // All-zero input: scale 1.0, everything quantizes to 0.
+        assert_eq!(act_scale_i8(max_abs(&[0.0, 0.0])), 1.0);
     }
 }

@@ -116,7 +116,7 @@ fn bind_dims(df: Dataflow, g: &GemmShape) -> (usize, usize, usize) {
 /// Ceiling division.
 #[inline]
 pub fn ceil_div(a: usize, b: usize) -> usize {
-    (a + b - 1) / b
+    a.div_ceil(b)
 }
 
 /// Simulate one GEMM (with `groups` independent repetitions for

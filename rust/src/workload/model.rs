@@ -162,6 +162,17 @@ impl Model {
             .sum()
     }
 
+    /// Conv-like weight params only (1 byte each under the int8 conv
+    /// deployment; biases stay wider).
+    pub fn conv_weight_params(&self) -> u64 {
+        self.layers.iter().filter(|l| l.is_conv_like()).map(|l| l.weight_params()).sum()
+    }
+
+    /// Conv-like bias params only.
+    pub fn conv_bias_params(&self) -> u64 {
+        self.layers.iter().filter(|l| l.is_conv_like()).map(|l| l.bias_params()).sum()
+    }
+
     /// Dense weight params (ternary in RRAM on the TPU-IMAC; no biases —
     /// analog sigmoid neurons have no bias input).
     pub fn fc_weight_params(&self) -> u64 {
@@ -300,6 +311,9 @@ mod tests {
     fn param_accounting() {
         let m = tiny();
         assert_eq!(m.conv_params(), (25 * 6 + 6) as u64);
+        assert_eq!(m.conv_weight_params(), (25 * 6) as u64);
+        assert_eq!(m.conv_bias_params(), 6);
+        assert_eq!(m.conv_weight_params() + m.conv_bias_params(), m.conv_params());
         assert_eq!(m.fc_weight_params(), (864 * 10) as u64);
         assert_eq!(m.fc_bias_params(), 10);
         assert_eq!(m.total_params_fp32(), (25 * 6 + 6 + 864 * 10 + 10) as u64);

@@ -1,7 +1,9 @@
 //! Counting-allocator proof of the zero-allocation inference hot path:
 //! after warmup, the GEMM conv plan + bridge + IMAC fabric must perform
 //! **zero** heap allocations per image (the scratch arena is fully grown
-//! and every buffer is reused).
+//! and every buffer is reused) — on the fp32 path AND the int8 quantized
+//! path (whose i8 staging and i32 accumulator buffers live in the same
+//! arena).
 //!
 //! This file contains exactly one test so no concurrent test thread can
 //! pollute the global allocation counter.
@@ -11,7 +13,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 use tpu_imac::imac::{AdcConfig, ImacConfig};
 use tpu_imac::nn::synthetic::lenet_weights_doc;
-use tpu_imac::nn::{DeployedModel, Scratch, Tensor};
+use tpu_imac::nn::{DeployedModel, PrecisionPolicy, Scratch, Tensor};
 use tpu_imac::util::rng::Xoshiro256;
 
 struct CountingAlloc;
@@ -43,43 +45,53 @@ static GLOBAL: CountingAlloc = CountingAlloc;
 fn steady_state_inference_allocates_nothing() {
     let mut rng = Xoshiro256::seed_from_u64(99);
     let doc = lenet_weights_doc(&mut rng);
-    let model = DeployedModel::from_json(
-        &doc,
-        &ImacConfig::default(),
-        AdcConfig { bits: 0, full_scale: 1.0 },
-        0,
-    )
-    .unwrap();
     let images: Vec<Tensor> = (0..8)
         .map(|_| Tensor::from_vec(28, 28, 1, (0..784).map(|_| rng.next_f32() - 0.5).collect()))
         .collect();
     let refs: Vec<&Tensor> = images.iter().collect();
-    let mut scratch = Scratch::new();
 
-    // Warmup: grow the arena to the workload's high-water mark (single
-    // image AND batch shapes — the batch is the larger footprint).
-    let mut sum = 0.0f32;
-    for img in &images {
-        sum += model.infer_into(img, &mut scratch)[0];
-    }
-    model.infer_batch_into(&refs, &mut scratch, |_, scores| sum += scores[0]);
-    let warm_grows = scratch.grow_events;
-    assert!(warm_grows > 0, "warmup should have grown the arena");
+    for precision in [PrecisionPolicy::Fp32, PrecisionPolicy::Int8] {
+        let model = DeployedModel::from_json_with(
+            &doc,
+            &ImacConfig::default(),
+            AdcConfig { bits: 0, full_scale: 1.0 },
+            0,
+            precision,
+        )
+        .unwrap();
+        let mut scratch = Scratch::new();
 
-    // Steady state: count every heap allocation across single-image and
-    // batched inference. Must be exactly zero.
-    let before = ALLOCS.load(Ordering::SeqCst);
-    for _ in 0..3 {
+        // Warmup: grow the arena to the workload's high-water mark (single
+        // image AND batch shapes — the batch is the larger footprint).
+        let mut sum = 0.0f32;
         for img in &images {
             sum += model.infer_into(img, &mut scratch)[0];
         }
         model.infer_batch_into(&refs, &mut scratch, |_, scores| sum += scores[0]);
+        let warm_grows = scratch.grow_events;
+        assert!(warm_grows > 0, "warmup should have grown the arena");
+
+        // Steady state: count every heap allocation across single-image and
+        // batched inference. Must be exactly zero, in either precision.
+        let before = ALLOCS.load(Ordering::SeqCst);
+        for _ in 0..3 {
+            for img in &images {
+                sum += model.infer_into(img, &mut scratch)[0];
+            }
+            model.infer_batch_into(&refs, &mut scratch, |_, scores| sum += scores[0]);
+        }
+        let delta = ALLOCS.load(Ordering::SeqCst) - before;
+        assert!(sum.is_finite());
+        assert_eq!(
+            delta,
+            0,
+            "steady-state {} request path performed {delta} heap allocations (want 0)",
+            precision.label()
+        );
+        assert_eq!(
+            scratch.grow_events, warm_grows,
+            "{} scratch arena regrew at steady state",
+            precision.label()
+        );
     }
-    let delta = ALLOCS.load(Ordering::SeqCst) - before;
-    assert!(sum.is_finite());
-    assert_eq!(
-        delta, 0,
-        "steady-state request path performed {delta} heap allocations (want 0)"
-    );
-    assert_eq!(scratch.grow_events, warm_grows, "scratch arena regrew at steady state");
 }

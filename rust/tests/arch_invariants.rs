@@ -63,7 +63,16 @@ fn memory_model_identities() {
         let fc_fp32 = (m.fc_weight_params() + m.fc_bias_params()) * 4;
         assert_eq!(f.tpu_bytes, f.hybrid_sram_bytes + fc_fp32);
         // RRAM = 2 bits per FC weight.
-        assert_eq!(f.hybrid_rram_bytes, (2 * m.fc_weight_params() + 7) / 8);
+        assert_eq!(f.hybrid_rram_bytes, (2 * m.fc_weight_params()).div_ceil(8));
+        // int8 conv deployment: weights 1 B + (bias + requantize scale)
+        // 4 B each per channel, strictly below the fp32 SRAM share;
+        // reduction strictly improves.
+        assert_eq!(
+            f.hybrid_int8_sram_bytes,
+            m.conv_weight_params() + 8 * m.conv_bias_params()
+        );
+        assert!(f.hybrid_int8_sram_bytes < f.hybrid_sram_bytes);
+        assert!(f.int8_reduction() > f.reduction());
         // Reduction in (0, 1).
         let r = f.reduction();
         assert!(r > 0.0 && r < 1.0, "r={r}");
