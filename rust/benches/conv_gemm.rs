@@ -1,16 +1,21 @@
 //! Conv hot-path bench: the scalar direct oracle (`nn::ops`, the seed's
 //! request path) vs the batched im2col+GEMM engine (`nn::gemm` +
 //! `ConvPlan`) — in both conv precisions — on the LeNet conv stack at
-//! batch 8, the serving shape.
+//! batch 8, the serving shape; plus a MobileNet-style depthwise stack in
+//! fp32 / dynamic-int8 / calibrated-int8 (the DwI8 kernel and the
+//! static-activation-scale path).
 //!
 //! Run with `cargo bench --bench conv_gemm`; add `-- --json
-//! BENCH_hotpath.json` for a machine-readable report tracked across PRs.
-//! The int8 rows track the fp32→int8 speedup (acceptance floor 1.30×:
-//! both staged matrices drop to 1/4 the memory traffic).
+//! BENCH_hotpath.json` for a machine-readable report tracked across PRs
+//! (CI uploads it as a workflow artifact). Existing row names keep their
+//! PR-1/PR-2 spelling so the JSON series stay comparable; the dw rows are
+//! new series. The int8 rows track the fp32→int8 speedup (acceptance
+//! floor 1.30×: both staged matrices drop to 1/4 the memory traffic).
 
 use tpu_imac::imac::{AdcConfig, ImacConfig};
-use tpu_imac::nn::synthetic::lenet_weights_doc;
+use tpu_imac::nn::synthetic::{lenet_weights_doc, mobilenet_mini_weights_doc};
 use tpu_imac::nn::{DeployedModel, PrecisionPolicy, Scratch, Tensor};
+use tpu_imac::quant::{calibrate_conv_ops, CalibrationTable};
 use tpu_imac::util::bench::{black_box, BenchSuite};
 use tpu_imac::util::json::Json;
 use tpu_imac::util::rng::Xoshiro256;
@@ -18,12 +23,21 @@ use tpu_imac::util::rng::Xoshiro256;
 const BATCH: usize = 8;
 
 fn load_model(doc: &Json, precision: PrecisionPolicy) -> DeployedModel {
-    DeployedModel::from_json_with(
+    load_model_calibrated(doc, precision, None)
+}
+
+fn load_model_calibrated(
+    doc: &Json,
+    precision: PrecisionPolicy,
+    calib: Option<&CalibrationTable>,
+) -> DeployedModel {
+    DeployedModel::from_json_calibrated(
         doc,
         &ImacConfig::default(),
         AdcConfig { bits: 0, full_scale: 1.0 },
         0,
         precision,
+        calib,
     )
     .expect("synthetic model")
 }
@@ -40,6 +54,7 @@ fn run_plan(m: &DeployedModel, imgs: &[Tensor], s: &mut Scratch) -> u64 {
         &mut s.act_a,
         &mut s.act_b,
         &mut s.grow_events,
+        &mut s.maxabs_scans,
     );
     feats[0].to_bits() as u64
 }
@@ -146,10 +161,53 @@ fn main() {
         });
     }
 
+    // Depthwise (MobileNet-mini) stack: fp32, dynamic int8 (the DwI8
+    // kernel) and calibrated int8 (static scales, no max-abs pass). New
+    // JSON series — existing row names above are untouched.
+    let dw_doc = mobilenet_mini_weights_doc(&mut rng);
+    let dw_oracle = load_model(&dw_doc, PrecisionPolicy::Fp32);
+    let dw_table = calibrate_conv_ops(&dw_oracle.conv_ops, &images, 100.0).expect("calibrate");
+    drop(dw_oracle);
+    {
+        let m = load_model(&dw_doc, PrecisionPolicy::Fp32);
+        let imgs = images.clone();
+        let mut s = Scratch::new();
+        suite.bench_throughput("dw-stack fp32, batched (hot path)", BATCH as f64, move || {
+            black_box(run_plan(&m, &imgs, &mut s))
+        });
+    }
+    {
+        let m = load_model(&dw_doc, PrecisionPolicy::Int8);
+        let imgs = images.clone();
+        let mut s = Scratch::new();
+        suite.bench_throughput("dw-stack int8, batched (hot path)", BATCH as f64, move || {
+            black_box(run_plan(&m, &imgs, &mut s))
+        });
+    }
+    {
+        let m = load_model_calibrated(&dw_doc, PrecisionPolicy::Int8, Some(&dw_table));
+        let imgs = images.clone();
+        let mut s = Scratch::new();
+        suite.bench_throughput(
+            "dw-stack int8 calibrated, batched (hot path)",
+            BATCH as f64,
+            move || black_box(run_plan(&m, &imgs, &mut s)),
+        );
+    }
+
     let results = suite.run_cli();
-    let direct = results[0].mean_ns;
-    let gemm_f32 = results[2].mean_ns;
-    let gemm_i8 = results[3].mean_ns;
+    // Look rows up by name (not position) so inserting a bench row can
+    // never silently corrupt the reported cross-PR speedup series.
+    let mean = |name: &str| {
+        results
+            .iter()
+            .find(|r| r.name == name)
+            .unwrap_or_else(|| panic!("bench row '{name}' missing"))
+            .mean_ns
+    };
+    let direct = mean("direct conv (seed request path)");
+    let gemm_f32 = mean("im2col+GEMM, batched (hot path)");
+    let gemm_i8 = mean("im2col+GEMM int8, batched (hot path)");
     println!(
         "speedup (direct / batched fp32 GEMM): {:.2}x  [acceptance floor: 3.00x]",
         direct / gemm_f32
@@ -158,11 +216,25 @@ fn main() {
         "speedup (fp32 GEMM / int8 GEMM):      {:.2}x  [acceptance floor: 1.30x]",
         gemm_f32 / gemm_i8
     );
+    let dw_f32 = mean("dw-stack fp32, batched (hot path)");
+    let dw_i8_cal = mean("dw-stack int8 calibrated, batched (hot path)");
+    println!(
+        "speedup (dw-stack fp32 / int8 calibrated): {:.2}x",
+        dw_f32 / dw_i8_cal
+    );
 
-    // Steady-state allocation check for BOTH precisions: after warmup, a
-    // fresh scratch must converge and then never regrow.
-    for precision in [PrecisionPolicy::Fp32, PrecisionPolicy::Int8] {
-        let m = load_model(&doc, precision);
+    // Steady-state allocation check across every deployment shape: after
+    // warmup, a fresh scratch must converge and then never regrow — and a
+    // calibrated int8 plan must never run the per-image max-abs pass.
+    let configs: [(&Json, PrecisionPolicy, Option<&CalibrationTable>, &str); 5] = [
+        (&doc, PrecisionPolicy::Fp32, None, "lenet fp32"),
+        (&doc, PrecisionPolicy::Int8, None, "lenet int8"),
+        (&dw_doc, PrecisionPolicy::Fp32, None, "dw-stack fp32"),
+        (&dw_doc, PrecisionPolicy::Int8, None, "dw-stack int8"),
+        (&dw_doc, PrecisionPolicy::Int8, Some(&dw_table), "dw-stack int8 calibrated"),
+    ];
+    for (model_doc, precision, calib, label) in configs {
+        let m = load_model_calibrated(model_doc, precision, calib);
         let mut s = Scratch::new();
         let refs: Vec<&Tensor> = images.iter().collect();
         m.infer_batch_into(&refs, &mut s, |_, _| {});
@@ -171,17 +243,18 @@ fn main() {
         for _ in 0..100 {
             m.infer_batch_into(&refs, &mut s, |_, _| {});
         }
-        assert_eq!(
-            s.grow_events,
-            warm,
-            "{} scratch arena regrew at steady state",
-            precision.label()
-        );
+        assert_eq!(s.grow_events, warm, "{label} scratch arena regrew at steady state");
+        if calib.is_some() {
+            assert_eq!(
+                s.maxabs_scans, 0,
+                "{label}: calibrated plan must perform zero max-abs scans"
+            );
+        }
         println!(
-            "scratch arena [{}]: {} KiB, {} grow events (all during warmup), zero steady-state growth",
-            precision.label(),
+            "scratch arena [{label}]: {} KiB, {} grow events (all during warmup), zero steady-state growth, {} max-abs scans",
             s.bytes() / 1024,
-            warm
+            warm,
+            s.maxabs_scans
         );
     }
 }

@@ -12,11 +12,16 @@
 //!   * total = SRAM + RRAM.
 //! * **TPU-IMAC, int8 conv** (`serve --precision int8`) — the TPU's real
 //!   deployment format: conv weights 1 byte each (per-output-channel
-//!   symmetric), conv biases kept at 4 bytes, plus one 4-byte requantize
-//!   scale per output channel (counted via the bias count — one bias and
-//!   one scale per channel), FC ternary in RRAM as above. Matches
-//!   `ConvPlan::weight_bytes()` for the deployed plan, and is strictly
-//!   smaller than the FP32-conv hybrid on every model.
+//!   symmetric; depthwise layers quantize per channel through the `DwI8`
+//!   kernel and count identically), conv biases kept at 4 bytes, plus one
+//!   4-byte requantize scale per output channel (counted via the bias
+//!   count — one bias and one scale per channel), FC ternary in RRAM as
+//!   above. Matches `ConvPlan::weight_bytes()` for the deployed plan, and
+//!   is strictly smaller than the FP32-conv hybrid on every model. The
+//!   depthwise slice is tracked separately
+//!   ([`MemoryFootprint::hybrid_int8_dw_bytes`]) — it's what the int8
+//!   policy previously left in f32, and the MobileNet rows' claim to a
+//!   fully-quantized conv section rests on it.
 //! * Megabytes are **decimal** (1 MB = 10⁶ B), matching the paper's
 //!   arithmetic (e.g. LeNet: 44,426 params × 4 B = 0.177 MB).
 
@@ -35,6 +40,10 @@ pub struct MemoryFootprint {
     /// TPU-IMAC SRAM share under the int8 conv deployment (weights 1 B;
     /// biases and per-channel requantize scales 4 B each).
     pub hybrid_int8_sram_bytes: u64,
+    /// Depthwise slice of `hybrid_int8_sram_bytes` (dw weights 1 B +
+    /// per-channel bias & requantize scale at 4 B each) — 0 for models
+    /// without depthwise layers.
+    pub hybrid_int8_dw_bytes: u64,
     /// TPU-IMAC RRAM share (FC ternary, 2b packed).
     pub hybrid_rram_bytes: u64,
 }
@@ -46,12 +55,15 @@ impl MemoryFootprint {
         let conv_b = model.conv_bias_params();
         let fc_w = model.fc_weight_params();
         let fc_b = model.fc_bias_params();
+        let dw_w = model.dw_weight_params();
+        let dw_b = model.dw_bias_params();
         Self {
             tpu_bytes: (conv + fc_w + fc_b) * FP32,
             hybrid_sram_bytes: conv * FP32,
             // biases + per-output-channel requantize scales, one of each
             // per channel — mirrors ConvPlan::weight_bytes().
             hybrid_int8_sram_bytes: conv_w + 2 * conv_b * FP32,
+            hybrid_int8_dw_bytes: dw_w + 2 * dw_b * FP32,
             hybrid_rram_bytes: (2 * fc_w).div_ceil(8),
         }
     }
@@ -95,6 +107,11 @@ impl MemoryFootprint {
     }
     pub fn int8_hybrid_mb(&self) -> f64 {
         self.int8_hybrid_total_bytes() as f64 / 1e6
+    }
+    /// Depthwise int8 share in decimal kilobytes (small enough that MB
+    /// would round the MobileNet rows to noise).
+    pub fn dw_int8_kb(&self) -> f64 {
+        self.hybrid_int8_dw_bytes as f64 / 1e3
     }
 }
 
@@ -174,6 +191,34 @@ mod tests {
                 m.name
             );
             assert!(f.int8_reduction() > f.reduction(), "{}", m.name);
+        }
+    }
+
+    #[test]
+    fn dw_int8_share_accounted() {
+        // No depthwise layers: zero share.
+        assert_eq!(MemoryFootprint::of(&zoo::lenet()).hybrid_int8_dw_bytes, 0);
+        assert_eq!(
+            MemoryFootprint::of(&zoo::vgg9(Dataset::Cifar10)).hybrid_int8_dw_bytes,
+            0
+        );
+        assert_eq!(
+            MemoryFootprint::of(&zoo::resnet18(Dataset::Cifar10)).hybrid_int8_dw_bytes,
+            0
+        );
+        // MobileNets: the dw slice is positive, follows the 1-byte-weight +
+        // per-channel bias/scale rule, and sits strictly inside the int8
+        // SRAM share.
+        for m in [zoo::mobilenet_v1(Dataset::Cifar10), zoo::mobilenet_v2(Dataset::Cifar10)] {
+            let f = MemoryFootprint::of(&m);
+            assert!(f.hybrid_int8_dw_bytes > 0, "{}", m.name);
+            assert_eq!(
+                f.hybrid_int8_dw_bytes,
+                m.dw_weight_params() + 2 * m.dw_bias_params() * 4,
+                "{}",
+                m.name
+            );
+            assert!(f.hybrid_int8_dw_bytes < f.hybrid_int8_sram_bytes, "{}", m.name);
         }
     }
 

@@ -9,13 +9,18 @@
 //!              "neuron_k": 1.0, "device_sigma": 0.0, "wire_alpha": 0.0,
 //!              "adc_bits": 8},
 //!   "serve":  {"max_batch": 8, "max_queue": 1024, "batch_timeout_us": 2000,
-//!              "workers": 1, "precision": "fp32"}
+//!              "workers": 1, "precision": "fp32",
+//!              "calibration": "artifacts/calibration.json"}
 //! }
 //! ```
 //!
 //! `serve.precision` (`"fp32"` | `"int8"`) selects the conv-section
 //! arithmetic every worker's plan compiles to; `serve --precision` on the
-//! CLI overrides it per run.
+//! CLI overrides it per run. `serve.calibration` names a
+//! [`crate::quant::CalibrationTable`] JSON (written by `tpu-imac
+//! calibrate`) whose static activation scales int8 plans bake in at
+//! compile, removing the per-image max-abs scan from the hot path;
+//! `serve --calibration` overrides it.
 //!
 //! Every field is optional; omitted fields keep their defaults. The CLI's
 //! `--config <path>` loads one of these; explicit CLI flags still win.
@@ -29,7 +34,7 @@ use crate::systolic::{ArrayConfig, Dataflow, FoldOverlap, SramConfig};
 use crate::util::json::Json;
 
 /// The full resolved configuration.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Debug, Default)]
 pub struct Config {
     pub array: ArrayConfig,
     pub sram: SramConfig,
@@ -39,7 +44,7 @@ pub struct Config {
 }
 
 /// Serde-free mirror of the coordinator tunables (Duration isn't JSON).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct ServeDefaults {
     pub max_batch: usize,
     pub max_queue: usize,
@@ -48,6 +53,9 @@ pub struct ServeDefaults {
     pub workers: usize,
     /// Conv-section arithmetic each worker's plan compiles to.
     pub precision: PrecisionPolicy,
+    /// Optional calibration-table path: int8 plans bake in its static
+    /// activation scales (no per-image max-abs scan at request time).
+    pub calibration: Option<String>,
 }
 
 impl Default for ServeDefaults {
@@ -58,6 +66,7 @@ impl Default for ServeDefaults {
             batch_timeout_us: 2000,
             workers: 1,
             precision: PrecisionPolicy::Fp32,
+            calibration: None,
         }
     }
 }
@@ -173,6 +182,9 @@ impl Config {
                 cfg.serve.precision = PrecisionPolicy::parse(s)
                     .with_context(|| format!("serve.precision must be fp32|int8, got {s}"))?;
             }
+            if let Some(p) = serve.get("calibration").as_str() {
+                cfg.serve.calibration = Some(p.to_string());
+            }
         }
         Ok(cfg)
     }
@@ -230,6 +242,19 @@ mod tests {
             &Json::parse(r#"{"serve": {"precision": "fp64"}}"#).unwrap()
         )
         .is_err());
+    }
+
+    #[test]
+    fn serve_calibration_path_parses() {
+        let c = Config::from_json(
+            &Json::parse(
+                r#"{"serve": {"precision": "int8", "calibration": "cal.json"}}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.serve.calibration.as_deref(), Some("cal.json"));
+        assert!(Config::default().serve.calibration.is_none());
     }
 
     #[test]

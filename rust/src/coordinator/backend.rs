@@ -8,10 +8,13 @@
 //!   steady-state allocations. Always available, in either conv precision:
 //!   the worker's model carries its [`crate::nn::PrecisionPolicy`]
 //!   compiled into its plan at load — fp32 runs one GEMM over
-//!   `batch×patches` rows per layer, int8 runs the i8×i8→i32 kernel per
-//!   image (per-image activation scales). (The scalar direct path in
-//!   [`crate::nn::ops`] remains the numerics oracle; the paths are
-//!   property-tested equivalent/bounded.)
+//!   `batch×patches` rows per layer; int8 runs the i8×i8→i32 kernels
+//!   (standard *and* depthwise) per image, with per-image dynamic
+//!   activation scales or — when the deployment ships a calibration table
+//!   (`serve --calibration`) — static scales that eliminate the max-abs
+//!   scan from the steady state (`metrics.maxabs_scans` stays 0). (The
+//!   scalar direct path in [`crate::nn::ops`] remains the numerics
+//!   oracle; the paths are property-tested equivalent/bounded.)
 //! * [`PjrtConvBackend`] — conv via the JAX-AOT-compiled PJRT executable
 //!   (`lenet_conv_b{B}.hlo.txt`), padded to the artifact batch size. The
 //!   production path when the `pjrt` feature (and artifact set) is
@@ -61,18 +64,38 @@ impl InferenceBackend for NativeBackend {
         }
         let model = &self.model;
         let flen = model.plan.feat_len();
-        let Scratch { cols, cols_i8, act_i8, acc_i32, act_a, act_b, fc_a, fc_b, grow_events } =
-            &mut self.scratch;
+        let Scratch {
+            cols,
+            cols_i8,
+            act_i8,
+            acc_i32,
+            act_a,
+            act_b,
+            fc_a,
+            fc_b,
+            grow_events,
+            maxabs_scans,
+        } = &mut self.scratch;
 
         // Conv section: fp32 plans run one im2col + GEMM over the whole
-        // batch; int8 plans run a per-image quantize + im2col + i8 GEMM
-        // loop (per-image activation scales keep results independent of
-        // batch composition).
+        // batch; int8 plans run a per-image quantize + i8 kernel loop
+        // (per-image — or calibrated static — activation scales keep
+        // results independent of batch composition).
         let t0 = Instant::now();
-        let feats = model
-            .plan
-            .run_parts(images, cols, cols_i8, act_i8, acc_i32, act_a, act_b, grow_events);
+        let scans0 = *maxabs_scans;
+        let feats = model.plan.run_parts(
+            images,
+            cols,
+            cols_i8,
+            act_i8,
+            acc_i32,
+            act_a,
+            act_b,
+            grow_events,
+            maxabs_scans,
+        );
         metrics.conv_us_total.fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+        metrics.maxabs_scans.fetch_add(*maxabs_scans - scans0, Ordering::Relaxed);
 
         // Bridge + FC section: per image through the analog fabric.
         let t1 = Instant::now();
@@ -86,6 +109,9 @@ impl InferenceBackend for NativeBackend {
         metrics.gemm_images.fetch_add(images.len() as u64, Ordering::Relaxed);
         if self.model.precision == crate::nn::PrecisionPolicy::Int8 {
             metrics.int8_images.fetch_add(images.len() as u64, Ordering::Relaxed);
+            if self.model.plan.is_calibrated() {
+                metrics.calibrated_images.fetch_add(images.len() as u64, Ordering::Relaxed);
+            }
         }
         metrics.scratch_bytes.fetch_max(self.scratch.bytes() as u64, Ordering::Relaxed);
         out

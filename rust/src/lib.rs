@@ -38,14 +38,25 @@
 //!   heap allocations at steady state (`tests/alloc_steady_state.rs`
 //!   proves it with a counting allocator). Property-tested ≡ the oracle at
 //!   1e-4 (typically bit-equal: both accumulate in ascending HWIO order).
-//! * **Int8 GEMM hot path** — the [`quant::PrecisionPolicy::Int8`] plan
+//! * **Int8 hot path** — the [`quant::PrecisionPolicy::Int8`] plan
 //!   variant: per-output-channel symmetric int8 weights
 //!   (`scale = max|w|/127`), quantized i8 im2col staging, an i8×i8→i32
 //!   cache-blocked kernel ([`nn::gemm::gemm_i8_requant`]) and an f32
 //!   requantize epilogue with fused bias/ReLU — the edge TPU's int8
 //!   systolic numerics, at 1/4 the weight memory and GEMM traffic.
-//!   Property-tested against the oracle within the *derived* per-channel
-//!   quantization bound, and zero-alloc like the fp32 path.
+//!   Depthwise convs run the same arithmetic through a direct per-channel
+//!   kernel ([`nn::gemm::dwconv2d_i8_requant`]), so the **whole conv
+//!   section is quantized — no f32 conv ops remain** under the int8
+//!   policy (only weightless pooling stays f32). Property-tested against
+//!   the oracle within the *derived* per-channel quantization bound, and
+//!   zero-alloc like the fp32 path.
+//!
+//! Int8 activation scales are dynamic per image by default; a
+//! [`quant::calibrate`] pass (`tpu-imac calibrate`) records static
+//! per-layer scales into a [`quant::CalibrationTable`] that
+//! `serve --calibration` bakes into the plan, removing the per-image
+//! max-abs scan from the steady state (metrics prove it:
+//! `maxabs_scans` stays 0).
 //!
 //! The policy is a per-deployment choice threaded from [`config`] /
 //! `serve --precision` down to the kernels; every worker's plan compiles

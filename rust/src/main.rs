@@ -17,6 +17,7 @@ use tpu_imac::cli::Args;
 use tpu_imac::coordinator::{Coordinator, NativeBackend, PjrtConvBackend};
 use tpu_imac::imac::{AdcConfig, DeviceConfig, ImacConfig};
 use tpu_imac::nn::{DeployedModel, PrecisionPolicy, Tensor};
+use tpu_imac::quant::CalibrationTable;
 use tpu_imac::report::{self, AccuracyTable};
 use tpu_imac::runtime::Runtime;
 use tpu_imac::systolic::{self, ArrayConfig, Dataflow, FoldOverlap, Schedule, SramConfig};
@@ -81,6 +82,7 @@ fn run(args: &Args) -> Result<()> {
         "simulate" => cmd_simulate(args),
         "trace" => cmd_trace(args),
         "serve" => cmd_serve(args),
+        "calibrate" => cmd_calibrate(args),
         "imac-study" => cmd_imac_study(args),
         "energy" => cmd_energy(args),
         "spec" => cmd_spec(args),
@@ -93,7 +95,7 @@ fn run(args: &Args) -> Result<()> {
 }
 
 const HELP: &str = "tpu-imac — heterogeneous TPU-IMAC architecture reproduction
-USAGE: tpu-imac <tables|simulate|trace|serve|imac-study|spec> [--flags]
+USAGE: tpu-imac <tables|simulate|trace|serve|calibrate|imac-study|spec> [--flags]
   tables     [--format ascii|markdown|csv] [--artifacts DIR]
   simulate   --model lenet|vgg9|mobilenetv1|mobilenetv2|resnet18
              [--dataset mnist|cifar10|cifar100] [--dataflow os|ws|is]
@@ -102,8 +104,16 @@ USAGE: tpu-imac <tables|simulate|trace|serve|imac-study|spec> [--flags]
   serve      [--artifacts DIR] [--requests N] [--max-batch B] [--native]
              [--workers N]  (N>1 forces the native GEMM backend pool)
              [--precision fp32|int8]  (conv-section arithmetic; int8 runs
-             the quantized i8 GEMM kernel and forces the native backend;
+             the quantized i8 GEMM + depthwise kernels — the whole conv
+             section, no f32 conv ops — and forces the native backend;
              config-file default: serve.precision)
+             [--calibration PATH]  (static int8 activation scales from a
+             `calibrate` table: removes the per-image max-abs scan;
+             config-file default: serve.calibration)
+  calibrate  [--artifacts DIR] [--samples N] [--percentile P] [--seed S]
+             [--out PATH]  (run N sample images through the conv oracle,
+             record per-layer activation ranges, write the calibration
+             table `serve --calibration` consumes)
   imac-study [--sigma S] [--alpha A] [--trials N]
   energy     (per-model IMAC latency/energy per inference)
   spec       [--dataflow os|ws|is] [--rows R] [--cols C]";
@@ -236,13 +246,18 @@ fn cmd_trace(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn load_model_with(artifacts: &str, precision: PrecisionPolicy) -> Result<DeployedModel> {
-    DeployedModel::load_with(
+fn load_model_with(
+    artifacts: &str,
+    precision: PrecisionPolicy,
+    calib: Option<&CalibrationTable>,
+) -> Result<DeployedModel> {
+    DeployedModel::load_calibrated(
         &format!("{artifacts}/weights_lenet.json"),
         &ImacConfig::default(),
         AdcConfig { bits: 0, full_scale: 1.0 },
         0,
         precision,
+        calib,
     )
 }
 
@@ -261,8 +276,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // The int8 conv path is a native-kernel feature; the PJRT artifacts
     // are compiled fp32.
     let native = args.has("native") || precision == PrecisionPolicy::Int8;
+    // Calibration table: explicit flag wins over the config default.
+    let calibration_path = args
+        .get("calibration")
+        .map(str::to_string)
+        .or_else(|| serve_defaults.calibration.clone());
+    let calibration = match &calibration_path {
+        // Under fp32 nothing quantizes: drop the table entirely so a stale
+        // or foreign-model file can't fail an fp32 deployment's plan
+        // compile (the table is only validated when it is actually used).
+        Some(p) if precision != PrecisionPolicy::Int8 => {
+            eprintln!("calibration {p}: ignored under fp32 (nothing quantizes)");
+            None
+        }
+        Some(p) => Some(CalibrationTable::load(p)?),
+        None => None,
+    };
 
-    let model = load_model_with(&artifacts, precision)?;
+    let model = load_model_with(&artifacts, precision, calibration.as_ref())?;
     println!(
         "model {} [{}] loaded: fp32 acc {:.2}%, ternary acc {:.2}% (training-time)",
         model.row,
@@ -276,6 +307,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
         model.plan.weight_bytes() as f64 / 1024.0,
         model.fabric.rram_bytes() as f64 / 1024.0
     );
+    if model.plan.is_calibrated() {
+        let t = calibration.as_ref().unwrap();
+        println!(
+            "activation scales: calibrated static ({} layers, p{} over {} samples) — no per-image max-abs scan",
+            t.len(),
+            t.percentile,
+            t.samples
+        );
+    } else if precision == PrecisionPolicy::Int8 {
+        println!("activation scales: dynamic per image (run `tpu-imac calibrate` to make them static)");
+    }
     let input_hwc = model.input_hwc;
     drop(model);
 
@@ -292,11 +334,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
             eprintln!("--workers {workers}: forcing native GEMM backend (PJRT is single-owner)");
         }
         Coordinator::start_pool(config, move || {
-            make_backend(&artifacts2, max_batch, true, precision)
+            make_backend(&artifacts2, max_batch, true, precision, calibration.clone())
         })
     } else {
         Coordinator::start(config, move || {
-            make_backend(&artifacts2, max_batch, native, precision)
+            make_backend(&artifacts2, max_batch, native, precision, calibration)
         })
     };
 
@@ -338,9 +380,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     if snap.gemm_images > 0 {
         println!(
-            "native GEMM path: {} images ({} via int8 kernel), scratch high-water {:.1} KiB/worker (zero steady-state allocs)",
+            "native GEMM path: {} images ({} via int8 kernels, {} with calibrated scales; {} dynamic max-abs scans), scratch high-water {:.1} KiB/worker (zero steady-state allocs)",
             snap.gemm_images,
             snap.int8_images,
+            snap.calibrated_images,
+            snap.maxabs_scans,
             snap.scratch_bytes as f64 / 1024.0
         );
     }
@@ -348,18 +392,63 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Offline calibration pass: run sample images (drawn from the synthetic
+/// serving distribution) through the conv-section oracle, record per-layer
+/// activation ranges, and write the table `serve --calibration` consumes.
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    let artifacts = args.get_or("artifacts", "artifacts");
+    let samples = args.get_usize("samples", 64)?;
+    let percentile = args.get_f64("percentile", 100.0)?;
+    let seed = args.get_usize("seed", 42)? as u64;
+    let out = args.get_or("out", "calibration.json");
+    let model = load_model_with(&artifacts, PrecisionPolicy::Fp32, None)?;
+    let (h, w, c) = model.input_hwc;
+    // Same pseudo-image distribution (and default seed) as `serve`'s
+    // synthetic request stream, so the recorded ranges cover what the
+    // benchmark traffic actually sends.
+    let mut rng = tpu_imac::util::rng::Xoshiro256::seed_from_u64(seed);
+    let images: Vec<Tensor> = (0..samples)
+        .map(|_| Tensor::from_vec(h, w, c, (0..h * w * c).map(|_| rng.next_f32()).collect()))
+        .collect();
+    let table = tpu_imac::quant::calibrate_conv_ops(&model.conv_ops, &images, percentile)?;
+    table.save(&out)?;
+    let mut t = Table::new(&["conv op", "max|x| (clipped)", "int8 scale"])
+        .with_title(&format!(
+            "calibration: {} [{}], {} samples, p{}",
+            model.row, model.dataset, samples, percentile
+        ))
+        .with_aligns(&[Align::Left, Align::Right, Align::Right]);
+    for (i, m) in table.max_abs.iter().enumerate() {
+        t.row(vec![format!("{i}"), format!("{m:.4}"), format!("{:.6}", table.scale(i))]);
+    }
+    println!("{}", t.to_ascii());
+    println!(
+        "calibration table ({} layers, {} B serialized) written to {out}",
+        table.len(),
+        table.table_bytes()
+    );
+    Ok(())
+}
+
 /// Build the serving backend: PJRT conv artifact if available, else native.
 /// `precision` is the per-worker conv policy; int8 always compiles a
-/// native quantized plan (PJRT artifacts are fp32).
+/// native quantized plan (PJRT artifacts are fp32), baking in the
+/// calibration table's static activation scales when one is supplied.
 fn make_backend(
     artifacts: &str,
     max_batch: usize,
     force_native: bool,
     precision: PrecisionPolicy,
+    calibration: Option<CalibrationTable>,
 ) -> Box<dyn tpu_imac::coordinator::InferenceBackend> {
-    let model = load_model_with(artifacts, precision).expect("load weights json");
+    let calib = calibration.as_ref();
+    let model = load_model_with(artifacts, precision, calib).expect("load weights json");
     if force_native {
-        eprintln!("backend: native rust conv [{}] + IMAC fabric", precision.label());
+        eprintln!(
+            "backend: native rust conv [{}{}] + IMAC fabric",
+            precision.label(),
+            if model.plan.is_calibrated() { ", calibrated" } else { "" }
+        );
         return Box::new(NativeBackend::new(model));
     }
     let artifact = format!("lenet_conv_b{max_batch}.hlo.txt");
@@ -377,14 +466,14 @@ fn make_backend(
             Err(e) => {
                 eprintln!("PJRT backend unavailable ({e:#}); using native");
                 Box::new(NativeBackend::new(
-                    load_model_with(artifacts, precision).expect("reload"),
+                    load_model_with(artifacts, precision, calib).expect("reload"),
                 ))
             }
         },
         Err(e) => {
             eprintln!("PJRT runtime unavailable ({e:#}); using native");
             Box::new(NativeBackend::new(
-                load_model_with(artifacts, precision).expect("reload"),
+                load_model_with(artifacts, precision, calib).expect("reload"),
             ))
         }
     }

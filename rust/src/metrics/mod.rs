@@ -28,6 +28,13 @@ pub struct Metrics {
     /// Subset of `gemm_images` executed by the int8 quantized kernel
     /// (workers whose deployment policy is `--precision int8`).
     pub int8_images: AtomicU64,
+    /// Subset of `int8_images` served by plans carrying calibrated static
+    /// activation scales (`serve --calibration`).
+    pub calibrated_images: AtomicU64,
+    /// Dynamic activation-range scans (one per image per int8 layer
+    /// without a calibrated scale). Stays 0 in calibrated deployments —
+    /// the max-abs pass is off the hot path entirely.
+    pub maxabs_scans: AtomicU64,
     /// High-water scratch-arena footprint across workers (bytes); the
     /// steady-state working set of the zero-allocation hot path.
     pub scratch_bytes: AtomicU64,
@@ -50,6 +57,8 @@ pub struct Snapshot {
     pub queue_us_total: u64,
     pub gemm_images: u64,
     pub int8_images: u64,
+    pub calibrated_images: u64,
+    pub maxabs_scans: u64,
     pub scratch_bytes: u64,
 }
 
@@ -98,6 +107,8 @@ impl Metrics {
             queue_us_total: self.queue_us_total.load(Ordering::Relaxed),
             gemm_images: self.gemm_images.load(Ordering::Relaxed),
             int8_images: self.int8_images.load(Ordering::Relaxed),
+            calibrated_images: self.calibrated_images.load(Ordering::Relaxed),
+            maxabs_scans: self.maxabs_scans.load(Ordering::Relaxed),
             scratch_bytes: self.scratch_bytes.load(Ordering::Relaxed),
         }
     }

@@ -14,7 +14,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::arch::bridge::sign_level;
 use crate::imac::{AdcConfig, ImacConfig, ImacFabric};
-use crate::quant::{self, PrecisionPolicy};
+use crate::quant::{self, CalibrationTable, PrecisionPolicy};
 use crate::util::json::Json;
 
 use super::gemm;
@@ -51,8 +51,9 @@ enum PlanOp {
     },
     /// Standard conv, prepacked int8: `wq` is the per-output-channel
     /// quantized `(k·k·cin) × cout` B matrix, `wscale[j] = max|w_j|/127`.
-    /// Activations quantize per image per layer (dynamic symmetric
-    /// per-tensor scale, independent of batch composition), accumulate in
+    /// Activations quantize with `sx` when a calibration table supplied a
+    /// static scale, else per image per layer (dynamic symmetric
+    /// per-tensor scale, independent of batch composition); accumulate in
     /// i32, requantize to f32 in the epilogue — the TPU int8 datapath.
     GemmI8 {
         k: usize,
@@ -64,8 +65,28 @@ enum PlanOp {
         wq: Vec<i8>,
         wscale: Vec<f32>,
         bias: Vec<f32>,
+        /// Calibrated static input-activation scale; `None` = dynamic
+        /// per-image max-abs scan.
+        sx: Option<f32>,
     },
     Dw { k: usize, c: usize, stride: usize, pad: usize, relu: bool, w: Vec<f32>, bias: Vec<f32> },
+    /// Depthwise conv, prepacked per-channel int8: `wq` is the quantized
+    /// `(k·k) × c` weight block (`quantize_weights_per_cout` with
+    /// `kk = k·k`), `wscale[ch] = max|w_ch|/127`. Same activation-scale
+    /// convention as [`PlanOp::GemmI8`]; executes the direct
+    /// `gemm::dwconv2d_i8_requant` kernel — no f32 conv arithmetic remains
+    /// under the int8 policy.
+    DwI8 {
+        k: usize,
+        c: usize,
+        stride: usize,
+        pad: usize,
+        relu: bool,
+        wq: Vec<i8>,
+        wscale: Vec<f32>,
+        bias: Vec<f32>,
+        sx: Option<f32>,
+    },
     MaxPool { k: usize, stride: usize },
     AvgPool { k: usize, stride: usize },
     Gap,
@@ -77,26 +98,57 @@ enum PlanOp {
 /// [`ops`] remains the numerics oracle; this is the serving hot path.
 ///
 /// Compilation is precision-aware: under [`PrecisionPolicy::Int8`] every
-/// standard conv prepacks per-output-channel int8 weights and executes
-/// through the i8×i8→i32 kernel (depthwise and pooling stay f32 — they
-/// carry no GEMM weight matrix to quantize and a negligible share of the
-/// arithmetic).
+/// conv — standard *and* depthwise — prepacks per-channel int8 weights and
+/// executes through an i8×i8→i32 kernel ([`gemm::gemm_i8_requant`] /
+/// [`gemm::dwconv2d_i8_requant`]), so an int8 plan runs **zero f32 conv
+/// arithmetic**; only pooling (weightless, comparison/average-only) stays
+/// f32. With a [`CalibrationTable`] the quantized ops additionally carry
+/// static input-activation scales, eliminating the per-image max-abs scan
+/// ([`ConvPlan::compile_calibrated`]).
 #[derive(Clone, Debug)]
 pub struct ConvPlan {
     ops: Vec<PlanOp>,
     in_hwc: (usize, usize, usize),
     feat_len: usize,
     precision: PrecisionPolicy,
+    calibrated: bool,
 }
 
 impl ConvPlan {
     /// Shape-check `conv_ops` against the model input and prepack weights
-    /// in the arithmetic `precision` selects.
+    /// in the arithmetic `precision` selects (dynamic activation scales).
     pub fn compile(
         conv_ops: &[ConvOp],
         in_hwc: (usize, usize, usize),
         precision: PrecisionPolicy,
     ) -> Result<Self> {
+        Self::compile_calibrated(conv_ops, in_hwc, precision, None)
+    }
+
+    /// [`ConvPlan::compile`] with an optional calibration table: under
+    /// [`PrecisionPolicy::Int8`] every quantized op takes its static input
+    /// scale from `calib` (indexed by conv-op position), so the compiled
+    /// plan never scans activations for their range at request time. The
+    /// table must carry exactly one entry per conv op; an fp32 plan
+    /// ignores it (nothing quantizes).
+    pub fn compile_calibrated(
+        conv_ops: &[ConvOp],
+        in_hwc: (usize, usize, usize),
+        precision: PrecisionPolicy,
+        calib: Option<&CalibrationTable>,
+    ) -> Result<Self> {
+        // An fp32 plan truly ignores the table (nothing quantizes), so a
+        // stale or foreign-model file can't fail an fp32 deployment.
+        let calib = if precision == PrecisionPolicy::Int8 { calib } else { None };
+        if let Some(t) = calib {
+            if t.len() != conv_ops.len() {
+                bail!(
+                    "calibration table has {} layer entries but the model has {} conv ops",
+                    t.len(),
+                    conv_ops.len()
+                );
+            }
+        }
         let (mut h, mut w, mut c) = in_hwc;
         let mut ops_out = Vec::with_capacity(conv_ops.len());
         for (idx, op) in conv_ops.iter().enumerate() {
@@ -149,6 +201,7 @@ impl ConvPlan {
                                 wq,
                                 wscale,
                                 bias: b.clone(),
+                                sx: calib.map(|t| t.scale(idx)),
                             });
                         }
                     }
@@ -170,15 +223,39 @@ impl ConvPlan {
                         bail!("dwconv op {idx}: window {k}/{stride}/{pad} does not fit {h}x{w}");
                     }
                     let (oh, ow) = gemm::conv_out_dims(h, w, *k, *stride, *pad);
-                    ops_out.push(PlanOp::Dw {
-                        k: *k,
-                        c,
-                        stride: *stride,
-                        pad: *pad,
-                        relu: *relu,
-                        w: wgt.clone(),
-                        bias: b.clone(),
-                    });
+                    match precision {
+                        PrecisionPolicy::Fp32 => ops_out.push(PlanOp::Dw {
+                            k: *k,
+                            c,
+                            stride: *stride,
+                            pad: *pad,
+                            relu: *relu,
+                            w: wgt.clone(),
+                            bias: b.clone(),
+                        }),
+                        PrecisionPolicy::Int8 => {
+                            if k * k > gemm::I8_GEMM_MAX_KK {
+                                bail!(
+                                    "dwconv op {idx}: window depth {} overflows i32 \
+                                     accumulation (max {})",
+                                    k * k,
+                                    gemm::I8_GEMM_MAX_KK
+                                );
+                            }
+                            let (wq, wscale) = quant::quantize_weights_per_cout(wgt, k * k, c);
+                            ops_out.push(PlanOp::DwI8 {
+                                k: *k,
+                                c,
+                                stride: *stride,
+                                pad: *pad,
+                                relu: *relu,
+                                wq,
+                                wscale,
+                                bias: b.clone(),
+                                sx: calib.map(|t| t.scale(idx)),
+                            });
+                        }
+                    }
                     h = oh;
                     w = ow;
                 }
@@ -200,7 +277,13 @@ impl ConvPlan {
                 }
             }
         }
-        Ok(Self { ops: ops_out, in_hwc, feat_len: h * w * c, precision })
+        Ok(Self {
+            ops: ops_out,
+            in_hwc,
+            feat_len: h * w * c,
+            precision,
+            calibrated: calib.is_some() && precision == PrecisionPolicy::Int8,
+        })
     }
 
     /// Bridge-feature width produced per image.
@@ -213,6 +296,13 @@ impl ConvPlan {
         self.precision
     }
 
+    /// Whether the quantized ops carry calibrated static activation scales
+    /// (true only for int8 plans compiled with a table) — such a plan
+    /// performs no per-image max-abs scans at request time.
+    pub fn is_calibrated(&self) -> bool {
+        self.calibrated
+    }
+
     /// Bytes of prepacked conv-section parameters (the Table-2 "SRAM"
     /// share as deployed): int8 convs count 1 byte per weight plus f32
     /// scales; everything else is f32.
@@ -221,7 +311,8 @@ impl ConvPlan {
             .iter()
             .map(|op| match op {
                 PlanOp::Gemm { w, bias, .. } => 4 * (w.len() + bias.len()),
-                PlanOp::GemmI8 { wq, wscale, bias, .. } => {
+                PlanOp::GemmI8 { wq, wscale, bias, .. }
+                | PlanOp::DwI8 { wq, wscale, bias, .. } => {
                     wq.len() + 4 * (wscale.len() + bias.len())
                 }
                 PlanOp::Dw { w, bias, .. } => 4 * (w.len() + bias.len()),
@@ -232,14 +323,17 @@ impl ConvPlan {
 
     /// Execute the plan over a whole batch. Fp32 conv layers stage im2col
     /// once per batch layer and run one GEMM over `batch·patches` rows;
-    /// int8 conv layers loop per image (quantize with that image's scale,
-    /// stage, i8 GEMM over `patches` rows) so a request's numerics never
-    /// depend on its co-batched neighbours. Takes the scratch buffers as
-    /// separate parts so callers can keep borrowing the rest of the arena
-    /// (see [`DeployedModel::infer_batch_into`]). The i8/i32 buffers are
-    /// only touched by int8-compiled plans (an fp32 plan never grows
-    /// them, and vice versa for `cols`). Returns the flattened
-    /// `batch × feat_len` feature block living in one of the act buffers.
+    /// int8 conv layers (standard and depthwise) loop per image (quantize
+    /// with that image's scale — or the calibrated static scale — then run
+    /// the i8 kernel) so a request's numerics never depend on its
+    /// co-batched neighbours. Takes the scratch buffers as separate parts
+    /// so callers can keep borrowing the rest of the arena (see
+    /// [`DeployedModel::infer_batch_into`]). The i8/i32 buffers are only
+    /// touched by int8-compiled plans (an fp32 plan never grows them, and
+    /// vice versa for `cols`). `maxabs_scans` counts dynamic
+    /// activation-range scans (zero for calibrated plans). Returns the
+    /// flattened `batch × feat_len` feature block living in one of the act
+    /// buffers.
     pub fn run_parts<'s>(
         &self,
         images: &[&Tensor],
@@ -250,6 +344,7 @@ impl ConvPlan {
         act_a: &'s mut Vec<f32>,
         act_b: &'s mut Vec<f32>,
         grow_events: &mut u64,
+        maxabs_scans: &mut u64,
     ) -> &'s mut [f32] {
         let n = images.len();
         let (mut h, mut w, mut c) = self.in_hwc;
@@ -299,7 +394,7 @@ impl ConvPlan {
                     w = ow;
                     c = *cout;
                 }
-                PlanOp::GemmI8 { k, cin, cout, stride, pad, relu, wq, wscale, bias } => {
+                PlanOp::GemmI8 { k, cin, cout, stride, pad, relu, wq, wscale, bias, sx } => {
                     let (oh, ow) = gemm::conv_out_dims(h, w, *k, *stride, *pad);
                     let patches = oh * ow;
                     let kk = k * k * cin;
@@ -309,16 +404,24 @@ impl ConvPlan {
                     Scratch::ensure(acc, grow_events, patches * cout);
                     Scratch::ensure(nxt, grow_events, n * patches * cout);
                     // Layer boundary: activations arrive f32. Each image
-                    // quantizes with its OWN symmetric scale — a request's
-                    // int8 numerics never depend on what the coordinator
-                    // co-batched it with (and match the single-image
-                    // convenience path bit-for-bit) — then stages
-                    // quantized patches, runs the i8×i8→i32 kernel, and
-                    // leaves f32 activations behind.
+                    // quantizes with the calibrated static scale when the
+                    // plan carries one, else with its OWN dynamic symmetric
+                    // scale — either way a request's int8 numerics never
+                    // depend on what the coordinator co-batched it with
+                    // (and match the single-image convenience path
+                    // bit-for-bit) — then stages quantized patches, runs
+                    // the i8×i8→i32 kernel, and leaves f32 activations
+                    // behind.
                     for i in 0..n {
                         let src = &cur[i * in_len..(i + 1) * in_len];
-                        let sx = quant::act_scale_i8(quant::max_abs(src));
-                        quant::quantize_i8_into(src, sx, act_i8);
+                        let s = match sx {
+                            Some(s) => *s,
+                            None => {
+                                *maxabs_scans += 1;
+                                quant::act_scale_i8(quant::max_abs(src))
+                            }
+                        };
+                        quant::quantize_i8_into(src, s, act_i8);
                         gemm::im2col_into(
                             &act_i8[..in_len],
                             h,
@@ -335,7 +438,7 @@ impl ConvPlan {
                             kk,
                             wq,
                             *cout,
-                            sx,
+                            s,
                             wscale,
                             bias,
                             *relu,
@@ -364,6 +467,46 @@ impl ConvPlan {
                             *stride,
                             *pad,
                             *relu,
+                            &mut nxt[i * out_len..(i + 1) * out_len],
+                        );
+                    }
+                    h = oh;
+                    w = ow;
+                }
+                PlanOp::DwI8 { k, c: ch, stride, pad, relu, wq, wscale, bias, sx } => {
+                    let (oh, ow) = gemm::conv_out_dims(h, w, *k, *stride, *pad);
+                    let in_len = h * w * c;
+                    let out_len = oh * ow * ch;
+                    Scratch::ensure(act_i8, grow_events, in_len);
+                    Scratch::ensure(acc, grow_events, *ch);
+                    Scratch::ensure(nxt, grow_events, n * out_len);
+                    // Same per-image quantize convention as GemmI8; the
+                    // direct depthwise i8 kernel needs no im2col staging
+                    // (each channel reduces over its own k·k window only).
+                    for i in 0..n {
+                        let src = &cur[i * in_len..(i + 1) * in_len];
+                        let s = match sx {
+                            Some(s) => *s,
+                            None => {
+                                *maxabs_scans += 1;
+                                quant::act_scale_i8(quant::max_abs(src))
+                            }
+                        };
+                        quant::quantize_i8_into(src, s, act_i8);
+                        gemm::dwconv2d_i8_requant(
+                            &act_i8[..in_len],
+                            h,
+                            w,
+                            *ch,
+                            wq,
+                            *k,
+                            *stride,
+                            *pad,
+                            s,
+                            wscale,
+                            bias,
+                            *relu,
+                            acc,
                             &mut nxt[i * out_len..(i + 1) * out_len],
                         );
                     }
@@ -444,9 +587,23 @@ impl DeployedModel {
         seed: u64,
         precision: PrecisionPolicy,
     ) -> Result<Self> {
+        Self::load_calibrated(path, imac, adc, seed, precision, None)
+    }
+
+    /// [`DeployedModel::load_with`] plus an optional calibration table
+    /// (`serve --calibration <path>` lands here): under int8 the plan's
+    /// quantized ops take static activation scales from the table.
+    pub fn load_calibrated(
+        path: &str,
+        imac: &ImacConfig,
+        adc: AdcConfig,
+        seed: u64,
+        precision: PrecisionPolicy,
+        calib: Option<&CalibrationTable>,
+    ) -> Result<Self> {
         let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
         let doc = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
-        Self::from_json_with(&doc, imac, adc, seed, precision)
+        Self::from_json_calibrated(&doc, imac, adc, seed, precision, calib)
     }
 
     /// Build from a parsed weights document (fp32 conv path).
@@ -460,6 +617,17 @@ impl DeployedModel {
         adc: AdcConfig,
         seed: u64,
         precision: PrecisionPolicy,
+    ) -> Result<Self> {
+        Self::from_json_calibrated(doc, imac, adc, seed, precision, None)
+    }
+
+    pub fn from_json_calibrated(
+        doc: &Json,
+        imac: &ImacConfig,
+        adc: AdcConfig,
+        seed: u64,
+        precision: PrecisionPolicy,
+        calib: Option<&CalibrationTable>,
     ) -> Result<Self> {
         let dataset = doc.get("dataset").as_str().unwrap_or("mnist").to_string();
         let input_hwc = match dataset.as_str() {
@@ -518,8 +686,8 @@ impl DeployedModel {
             bail!("model has no FC layers");
         }
         let fabric = ImacFabric::build(&fc_specs, imac, adc, seed);
-        let plan =
-            ConvPlan::compile(&conv_ops, input_hwc, precision).context("compiling conv plan")?;
+        let plan = ConvPlan::compile_calibrated(&conv_ops, input_hwc, precision, calib)
+            .context("compiling conv plan")?;
         if plan.feat_len() != fabric.n_in() {
             bail!(
                 "conv section produces {} bridge features but FC section expects {}",
@@ -590,10 +758,20 @@ impl DeployedModel {
     /// Hot-path conv stack (im2col+GEMM plan): image -> raw bridge features
     /// staged in the scratch arena. Zero allocations once warm.
     pub fn conv_features_into<'s>(&self, img: &Tensor, scratch: &'s mut Scratch) -> &'s [f32] {
-        let Scratch { cols, cols_i8, act_i8, acc_i32, act_a, act_b, grow_events, .. } = scratch;
-        &*self
-            .plan
-            .run_parts(&[img], cols, cols_i8, act_i8, acc_i32, act_a, act_b, grow_events)
+        let Scratch {
+            cols, cols_i8, act_i8, acc_i32, act_a, act_b, grow_events, maxabs_scans, ..
+        } = scratch;
+        &*self.plan.run_parts(
+            &[img],
+            cols,
+            cols_i8,
+            act_i8,
+            acc_i32,
+            act_a,
+            act_b,
+            grow_events,
+            maxabs_scans,
+        )
     }
 
     /// Hot-path full inference: image -> class scores through the GEMM conv
@@ -601,10 +779,29 @@ impl DeployedModel {
     /// returned slice lives in `scratch` — copy it out before the next call.
     /// Zero allocations once warm.
     pub fn infer_into<'s>(&self, img: &Tensor, scratch: &'s mut Scratch) -> &'s [f32] {
-        let Scratch { cols, cols_i8, act_i8, acc_i32, act_a, act_b, fc_a, fc_b, grow_events } =
-            scratch;
-        let feats =
-            self.plan.run_parts(&[img], cols, cols_i8, act_i8, acc_i32, act_a, act_b, grow_events);
+        let Scratch {
+            cols,
+            cols_i8,
+            act_i8,
+            acc_i32,
+            act_a,
+            act_b,
+            fc_a,
+            fc_b,
+            grow_events,
+            maxabs_scans,
+        } = scratch;
+        let feats = self.plan.run_parts(
+            &[img],
+            cols,
+            cols_i8,
+            act_i8,
+            acc_i32,
+            act_a,
+            act_b,
+            grow_events,
+            maxabs_scans,
+        );
         Self::bridge_in_place(feats);
         self.fabric.forward_into(feats, fc_a, fc_b)
     }
@@ -624,11 +821,29 @@ impl DeployedModel {
             return;
         }
         let flen = self.plan.feat_len();
-        let Scratch { cols, cols_i8, act_i8, acc_i32, act_a, act_b, fc_a, fc_b, grow_events } =
-            scratch;
-        let feats = self
-            .plan
-            .run_parts(images, cols, cols_i8, act_i8, acc_i32, act_a, act_b, grow_events);
+        let Scratch {
+            cols,
+            cols_i8,
+            act_i8,
+            acc_i32,
+            act_a,
+            act_b,
+            fc_a,
+            fc_b,
+            grow_events,
+            maxabs_scans,
+        } = scratch;
+        let feats = self.plan.run_parts(
+            images,
+            cols,
+            cols_i8,
+            act_i8,
+            acc_i32,
+            act_a,
+            act_b,
+            grow_events,
+            maxabs_scans,
+        );
         for (i, row) in feats.chunks_exact_mut(flen).enumerate() {
             Self::bridge_in_place(row);
             let scores = self.fabric.forward_into(row, fc_a, fc_b);
@@ -762,10 +977,11 @@ mod tests {
         assert_eq!(scratch.grow_events, grows, "scratch regrew at steady state");
     }
 
-    /// Chain the int8 convenience conv (`conv2d_gemm_i8`) + oracle
-    /// pools/relu by hand — the reference the compiled int8 plan must
-    /// reproduce exactly (activation scales are per image, so batching
-    /// cannot change a request's numerics).
+    /// Chain the int8 convenience convs (`conv2d_gemm_i8` /
+    /// `dwconv2d_i8`) + oracle pools/relu by hand — the reference the
+    /// compiled int8 plan must reproduce exactly (activation scales are
+    /// per image, so batching cannot change a request's numerics). No
+    /// conv op executes in f32: the whole conv section is quantized.
     fn i8_reference_features(ops_list: &[ConvOp], img: &Tensor) -> Vec<f32> {
         let mut x = img.clone();
         for op in ops_list {
@@ -778,7 +994,7 @@ mod tests {
                     y
                 }
                 ConvOp::DwConv { k, stride, pad, relu, w, b } => {
-                    let mut y = ops::dwconv2d(&x, w, b, *k, *stride, *pad);
+                    let mut y = gemm::dwconv2d_i8(&x, w, b, *k, *stride, *pad);
                     if *relu {
                         ops::relu(&mut y);
                     }
@@ -860,6 +1076,193 @@ mod tests {
             let _ = m8.infer_into(&img, &mut s8);
         }
         assert_eq!(s8.grow_events, grows, "int8 scratch regrew at steady state");
+    }
+
+    /// The compiled int8 plan on a depthwise stack must reproduce the
+    /// per-image quantized reference exactly — including the DwI8 ops, so
+    /// no f32 conv arithmetic hides in the plan.
+    #[test]
+    fn int8_dw_stack_plan_matches_quantized_reference() {
+        let mut rng = crate::util::rng::Xoshiro256::seed_from_u64(13);
+        let doc = crate::nn::synthetic::mobilenet_mini_weights_doc(&mut rng);
+        let m = DeployedModel::from_json_with(
+            &doc,
+            &ImacConfig::default(),
+            AdcConfig { bits: 0, full_scale: 1.0 },
+            0,
+            PrecisionPolicy::Int8,
+        )
+        .unwrap();
+        assert!(
+            m.plan.ops.iter().any(|op| matches!(op, PlanOp::DwI8 { .. })),
+            "int8 dw stack must compile DwI8 ops"
+        );
+        assert!(
+            !m.plan.ops.iter().any(|op| matches!(op, PlanOp::Dw { .. } | PlanOp::Gemm { .. })),
+            "int8 plan must carry no f32 conv ops"
+        );
+        let mut scratch = Scratch::new();
+        for _ in 0..4 {
+            let img =
+                Tensor::from_vec(28, 28, 1, (0..784).map(|_| rng.next_f32() - 0.5).collect());
+            let want = i8_reference_features(&m.conv_ops, &img);
+            let got = m.conv_features_into(&img, &mut scratch).to_vec();
+            assert_eq!(got.len(), want.len());
+            let d = crate::util::stats::max_abs_diff(&got, &want);
+            assert!(d < 1e-5, "int8 dw plan diverges from quantized reference: {d}");
+        }
+        // Dynamic plan: one scan per image per quantized layer (5 here).
+        assert_eq!(scratch.maxabs_scans, 4 * 5, "dynamic dw stack scan count");
+    }
+
+    /// Satellite: the int8-vs-fp32 top-1 agreement property extended to a
+    /// depthwise stack. Random weights put bridge features closer to the
+    /// sign threshold than trained ones and the mini stack has only 32
+    /// features, so the hard floor sits at 80% (acceptance target ≥99% on
+    /// trained weights; see `int8_top1_agrees_with_fp32` for the LeNet
+    /// rationale).
+    #[test]
+    fn int8_dw_stack_top1_agrees_with_fp32() {
+        let mut rng = crate::util::rng::Xoshiro256::seed_from_u64(37);
+        let doc = crate::nn::synthetic::mobilenet_mini_weights_doc(&mut rng);
+        let imac = ImacConfig::default();
+        let adc = AdcConfig { bits: 0, full_scale: 1.0 };
+        let m32 = DeployedModel::from_json_with(&doc, &imac, adc, 0, PrecisionPolicy::Fp32)
+            .unwrap();
+        let m8 = DeployedModel::from_json_with(&doc, &imac, adc, 0, PrecisionPolicy::Int8)
+            .unwrap();
+        let mut s32 = Scratch::new();
+        let mut s8 = Scratch::new();
+        let n = 100;
+        let mut agree = 0usize;
+        for _ in 0..n {
+            let img =
+                Tensor::from_vec(28, 28, 1, (0..784).map(|_| rng.next_f32() - 0.5).collect());
+            let p32 = crate::util::stats::argmax(m32.infer_into(&img, &mut s32));
+            let p8 = crate::util::stats::argmax(m8.infer_into(&img, &mut s8));
+            if p32 == p8 {
+                agree += 1;
+            }
+        }
+        assert!(
+            agree * 100 >= n * 80,
+            "dw-stack int8 top-1 agreement {agree}/{n} below the 80% random-weight floor"
+        );
+        // The fp32 deployment never scans activation ranges.
+        assert_eq!(s32.maxabs_scans, 0, "fp32 plan must not scan activation ranges");
+    }
+
+    /// A calibrated int8 plan must (a) perform zero max-abs scans, (b) be
+    /// deterministic, and (c) track the dynamic-scale deployment's top-1.
+    #[test]
+    fn calibrated_plan_skips_maxabs_and_tracks_dynamic() {
+        let mut rng = crate::util::rng::Xoshiro256::seed_from_u64(41);
+        let doc = crate::nn::synthetic::mobilenet_mini_weights_doc(&mut rng);
+        let imac = ImacConfig::default();
+        let adc = AdcConfig { bits: 0, full_scale: 1.0 };
+        let m_dyn = DeployedModel::from_json_with(&doc, &imac, adc, 0, PrecisionPolicy::Int8)
+            .unwrap();
+        // Calibrate on a sample set from the serving distribution.
+        let samples: Vec<Tensor> = (0..16)
+            .map(|_| {
+                Tensor::from_vec(28, 28, 1, (0..784).map(|_| rng.next_f32() - 0.5).collect())
+            })
+            .collect();
+        let table =
+            quant::calibrate_conv_ops(&m_dyn.conv_ops, &samples, 100.0).unwrap();
+        assert_eq!(table.len(), m_dyn.conv_ops.len());
+        let m_cal = DeployedModel::from_json_calibrated(
+            &doc,
+            &imac,
+            adc,
+            0,
+            PrecisionPolicy::Int8,
+            Some(&table),
+        )
+        .unwrap();
+        assert!(m_cal.plan.is_calibrated());
+        assert!(!m_dyn.plan.is_calibrated());
+        let mut s_dyn = Scratch::new();
+        let mut s_cal = Scratch::new();
+        let n = 60;
+        let mut agree = 0usize;
+        let mut first_pass = Vec::new();
+        let mut imgs = Vec::new();
+        for _ in 0..n {
+            let img =
+                Tensor::from_vec(28, 28, 1, (0..784).map(|_| rng.next_f32() - 0.5).collect());
+            let pd = crate::util::stats::argmax(m_dyn.infer_into(&img, &mut s_dyn));
+            let pc = crate::util::stats::argmax(m_cal.infer_into(&img, &mut s_cal));
+            if pd == pc {
+                agree += 1;
+            }
+            first_pass.push(pc);
+            imgs.push(img);
+        }
+        assert_eq!(s_cal.maxabs_scans, 0, "calibrated plan must never scan for ranges");
+        assert_eq!(s_dyn.maxabs_scans, n as u64 * 5, "dynamic plan scans once per i8 layer");
+        assert!(
+            agree * 100 >= n * 80,
+            "calibrated vs dynamic top-1 agreement {agree}/{n} below the 80% floor"
+        );
+        // Determinism: a second pass reproduces every score bit-for-bit.
+        for (img, want) in imgs.iter().zip(&first_pass) {
+            let p = crate::util::stats::argmax(m_cal.infer_into(img, &mut s_cal));
+            assert_eq!(p, *want, "calibrated plan must be deterministic");
+        }
+    }
+
+    /// A calibration table whose layer count disagrees with the model must
+    /// fail at load, not index out of bounds at request time.
+    #[test]
+    fn calibration_table_len_mismatch_rejected() {
+        let mut rng = crate::util::rng::Xoshiro256::seed_from_u64(43);
+        let doc = crate::nn::synthetic::mobilenet_mini_weights_doc(&mut rng);
+        let bad = quant::CalibrationTable {
+            max_abs: vec![1.0; 2],
+            percentile: 100.0,
+            samples: 1,
+        };
+        let r = DeployedModel::from_json_calibrated(
+            &doc,
+            &ImacConfig::default(),
+            AdcConfig { bits: 0, full_scale: 1.0 },
+            0,
+            PrecisionPolicy::Int8,
+            Some(&bad),
+        );
+        assert!(r.is_err());
+        // An fp32 plan ignores the table entirely — the same stale file
+        // must not fail an fp32 deployment.
+        let r32 = DeployedModel::from_json_calibrated(
+            &doc,
+            &ImacConfig::default(),
+            AdcConfig { bits: 0, full_scale: 1.0 },
+            0,
+            PrecisionPolicy::Fp32,
+            Some(&bad),
+        );
+        assert!(r32.is_ok());
+        assert!(!r32.unwrap().plan.is_calibrated());
+    }
+
+    /// Depthwise int8 weights pack 1 byte each plus per-channel scale+bias
+    /// — the dw share of the deployment format the memory tables account.
+    #[test]
+    fn int8_dw_stack_packs_weights_smaller() {
+        let mut rng = crate::util::rng::Xoshiro256::seed_from_u64(47);
+        let doc = crate::nn::synthetic::mobilenet_mini_weights_doc(&mut rng);
+        let imac = ImacConfig::default();
+        let adc = AdcConfig { bits: 0, full_scale: 1.0 };
+        let m32 = DeployedModel::from_json_with(&doc, &imac, adc, 0, PrecisionPolicy::Fp32)
+            .unwrap();
+        let m8 = DeployedModel::from_json_with(&doc, &imac, adc, 0, PrecisionPolicy::Int8)
+            .unwrap();
+        // Weights: 72+72+128+144+512 = 928; channels: 8+8+16+16+32 = 80.
+        // fp32: 4·(928+80). int8: 928 + 4·(80 scales + 80 biases).
+        assert_eq!(m32.plan.weight_bytes(), 4 * (928 + 80));
+        assert_eq!(m8.plan.weight_bytes(), 928 + 4 * (80 + 80));
+        assert!(m8.plan.weight_bytes() * 2 < m32.plan.weight_bytes());
     }
 
     #[test]

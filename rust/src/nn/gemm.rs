@@ -279,13 +279,29 @@ pub fn conv2d_gemm_i8(
     stride: usize,
     pad: usize,
 ) -> super::tensor::Tensor {
+    let sx = crate::quant::act_scale_i8(crate::quant::max_abs(&x.data));
+    conv2d_gemm_i8_with_scale(x, w, b, k, cout, stride, pad, sx)
+}
+
+/// [`conv2d_gemm_i8`] with an explicit activation scale — the
+/// calibrated-static form (`quant::calibrate` produces the scale; the
+/// kernel clamps out-of-range samples to ±127 like a deployed TPU).
+pub fn conv2d_gemm_i8_with_scale(
+    x: &super::tensor::Tensor,
+    w: &[f32],
+    b: &[f32],
+    k: usize,
+    cout: usize,
+    stride: usize,
+    pad: usize,
+    sx: f32,
+) -> super::tensor::Tensor {
     let cin = x.c;
     assert_eq!(w.len(), k * k * cin * cout, "weight len");
     assert_eq!(b.len(), cout, "bias len");
     let (oh, ow) = conv_out_dims(x.h, x.w, k, stride, pad);
     let kk = k * k * cin;
     let (wq, scales) = crate::quant::quantize_weights_per_cout(w, kk, cout);
-    let sx = crate::quant::act_scale_i8(crate::quant::max_abs(&x.data));
     let mut xq = vec![0i8; x.data.len()];
     crate::quant::quantize_i8_into(&x.data, sx, &mut xq);
     let mut cols = vec![0i8; oh * ow * kk];
@@ -296,6 +312,126 @@ pub fn conv2d_gemm_i8(
         &cols, oh * ow, kk, &wq, cout, sx, &scales, b, false, &mut acc, &mut out.data,
     );
     out
+}
+
+/// Quantized depthwise conv with fused requantize/bias/ReLU epilogue — the
+/// int8 counterpart of [`dwconv2d_into`] (depthwise gains nothing from
+/// im2col, so like the f32 form this is direct, channel-vectorized):
+///
+/// `acc[ch] = Σ_{ky,kx} x[iy][ix][ch] · wq[ky][kx][ch]` in exact i32
+/// arithmetic per output pixel, then
+/// `out[..][ch] = acc[ch] · scale_x·wscale[ch] + bias[ch]` (ReLU optional).
+///
+/// `x` is the quantized input image (per-tensor activation scale
+/// `scale_x` — dynamic per image or calibrated static), `wq` the prepacked
+/// per-channel int8 weights in `w[ky][kx][ch]` layout with
+/// `wscale[ch] = max|w_ch|/127` (exactly [`crate::quant::quantize_weights_per_cout`]
+/// with `kk = k·k`, `cout = c`). `acc` is caller-owned scratch (≥ `c` i32)
+/// so the steady state allocates nothing; out-of-bounds taps contribute
+/// zero just like the f32 path, and the i32 section is exact —
+/// overflow-guarded by the same `k·k · 127² ≤ i32::MAX` bound as
+/// [`gemm_i8_requant`] ([`I8_GEMM_MAX_KK`]).
+pub fn dwconv2d_i8_requant(
+    x: &[i8],
+    h: usize,
+    w: usize,
+    c: usize,
+    wq: &[i8],
+    k: usize,
+    stride: usize,
+    pad: usize,
+    scale_x: f32,
+    wscale: &[f32],
+    bias: &[f32],
+    relu: bool,
+    acc: &mut [i32],
+    out: &mut [f32],
+) -> (usize, usize) {
+    assert_eq!(x.len(), h * w * c, "input shape");
+    assert_eq!(wq.len(), k * k * c, "weight shape");
+    assert_eq!(wscale.len(), c, "weight scales shape");
+    assert_eq!(bias.len(), c, "bias shape");
+    assert!(acc.len() >= c, "acc scratch too small");
+    assert!(k * k <= I8_GEMM_MAX_KK, "window {k}x{k} overflows i32 accumulation");
+    let (oh, ow) = conv_out_dims(h, w, k, stride, pad);
+    assert_eq!(out.len(), oh * ow * c, "out shape");
+    let acc = &mut acc[..c];
+    for oy in 0..oh {
+        for ox in 0..ow {
+            acc.fill(0);
+            for ky in 0..k {
+                let iy = (oy * stride + ky) as isize - pad as isize;
+                if iy < 0 || iy as usize >= h {
+                    continue;
+                }
+                for kx in 0..k {
+                    let ix = (ox * stride + kx) as isize - pad as isize;
+                    if ix < 0 || ix as usize >= w {
+                        continue;
+                    }
+                    let xin = &x[((iy as usize) * w + ix as usize) * c..][..c];
+                    let wrow = &wq[(ky * k + kx) * c..][..c];
+                    for ((a, &xv), &wv) in acc.iter_mut().zip(xin).zip(wrow) {
+                        *a += xv as i32 * wv as i32;
+                    }
+                }
+            }
+            // Requantize epilogue: one f32 multiply-add per channel.
+            let orow = &mut out[(oy * ow + ox) * c..][..c];
+            for (((o, &av), &sw), &bv) in
+                orow.iter_mut().zip(acc.iter()).zip(wscale).zip(bias)
+            {
+                let v = av as f32 * (scale_x * sw) + bv;
+                *o = if relu && v < 0.0 { 0.0 } else { v };
+            }
+        }
+    }
+    (oh, ow)
+}
+
+/// Allocating convenience: int8 depthwise conv (quantize → i8 direct conv
+/// → requantize) on one image with an explicit activation scale (the
+/// calibrated-static form; [`dwconv2d_i8`] derives the dynamic scale). The
+/// hot path runs the same arithmetic through `engine::ConvPlan`'s `DwI8`
+/// op with scratch reuse; this form exists for tests and is the function
+/// the depthwise quantization-error property is stated over.
+pub fn dwconv2d_i8_with_scale(
+    x: &super::tensor::Tensor,
+    w: &[f32],
+    b: &[f32],
+    k: usize,
+    stride: usize,
+    pad: usize,
+    scale_x: f32,
+) -> super::tensor::Tensor {
+    let c = x.c;
+    assert_eq!(w.len(), k * k * c, "weight len");
+    assert_eq!(b.len(), c, "bias len");
+    let (wq, wscale) = crate::quant::quantize_weights_per_cout(w, k * k, c);
+    let mut xq = vec![0i8; x.data.len()];
+    crate::quant::quantize_i8_into(&x.data, scale_x, &mut xq);
+    let (oh, ow) = conv_out_dims(x.h, x.w, k, stride, pad);
+    let mut acc = vec![0i32; c];
+    let mut out = super::tensor::Tensor::zeros(oh, ow, c);
+    dwconv2d_i8_requant(
+        &xq, x.h, x.w, c, &wq, k, stride, pad, scale_x, &wscale, b, false, &mut acc,
+        &mut out.data,
+    );
+    out
+}
+
+/// Allocating convenience: int8 depthwise conv with a dynamic per-image
+/// activation scale (mirrors [`conv2d_gemm_i8`]).
+pub fn dwconv2d_i8(
+    x: &super::tensor::Tensor,
+    w: &[f32],
+    b: &[f32],
+    k: usize,
+    stride: usize,
+    pad: usize,
+) -> super::tensor::Tensor {
+    let sx = crate::quant::act_scale_i8(crate::quant::max_abs(&x.data));
+    dwconv2d_i8_with_scale(x, w, b, k, stride, pad, sx)
 }
 
 /// Depthwise conv into a caller-owned buffer with fused ReLU (depthwise
@@ -478,6 +614,19 @@ mod tests {
     use crate::util::prop::forall;
     use crate::util::stats::max_abs_diff;
 
+    /// Per-output-channel max |w| over a `kk × cout` row-major weight
+    /// matrix (channels fastest-varying) — the |ŵ| term shared by every
+    /// derived-quantization-bound property below.
+    fn per_cout_max_abs(w: &[f32], cout: usize) -> Vec<f64> {
+        let mut mw = vec![0.0f64; cout];
+        for row in w.chunks_exact(cout) {
+            for (m, &v) in mw.iter_mut().zip(row) {
+                *m = m.max(v.abs() as f64);
+            }
+        }
+        mw
+    }
+
     /// The tentpole equivalence: GEMM path ≡ direct oracle across random
     /// shapes, strides and paddings (satellite: property test at 1e-4).
     #[test]
@@ -624,13 +773,7 @@ mod tests {
             let mx = crate::quant::max_abs(&x.data) as f64;
             let sx = crate::quant::act_scale_i8(mx as f32) as f64;
             let (_, sw) = crate::quant::quantize_weights_per_cout(&wgt, kk, cout);
-            // Per-channel max |w| (the |ŵ| bound).
-            let mut mw = vec![0.0f64; cout];
-            for row in wgt.chunks_exact(cout) {
-                for (m, &v) in mw.iter_mut().zip(row) {
-                    *m = m.max(v.abs() as f64);
-                }
-            }
+            let mw = per_cout_max_abs(&wgt, cout);
             for (idx, (gv, wv)) in got.data.iter().zip(&want.data).enumerate() {
                 let j = idx % cout;
                 // 1% headroom covers both paths' f32 accumulation error
@@ -643,6 +786,158 @@ mod tests {
                     "k={k} s={stride} p={pad} cin={cin} cout={cout} j={j}: diff {d} > bound {bound}"
                 );
             }
+        });
+    }
+
+    /// Headline satellite property: the int8 depthwise path agrees with the
+    /// FP32 oracle within the *derived* per-channel quantization bound across
+    /// randomized shapes/strides/paddings — no tuned epsilon. Identical
+    /// derivation to [`conv2d_gemm_i8_within_derived_quant_bound`] with
+    /// `kk = k·k` (each output channel reduces over its own window only):
+    /// `|y_ch − ŷ_ch| ≤ k²·(max|x|·sw_ch + max|w_ch|·sx)/2`, i32 exact.
+    #[test]
+    fn dwconv2d_i8_within_derived_quant_bound() {
+        forall(60, |g| {
+            let k = *g.choose(&[1usize, 2, 3, 5]);
+            let stride = g.usize_in(1, 3);
+            let pad = g.usize_in(0, 2);
+            let c = g.usize_in(1, 8);
+            let h = g.usize_in(k.max(2 * pad + 1), k + 8);
+            let w = g.usize_in(k.max(2 * pad + 1), k + 8);
+            let x = Tensor::from_vec(h, w, c, g.vec_f32(h * w * c, -1.0, 1.0));
+            let wgt = g.vec_f32(k * k * c, -1.0, 1.0);
+            let b = g.vec_f32(c, -0.5, 0.5);
+            let want = ops::dwconv2d(&x, &wgt, &b, k, stride, pad);
+            let got = dwconv2d_i8(&x, &wgt, &b, k, stride, pad);
+            assert_eq!((got.h, got.w, got.c), (want.h, want.w, want.c));
+            let kk = (k * k) as f64;
+            let mx = crate::quant::max_abs(&x.data) as f64;
+            let sx = crate::quant::act_scale_i8(mx as f32) as f64;
+            let (_, sw) = crate::quant::quantize_weights_per_cout(&wgt, k * k, c);
+            let mw = per_cout_max_abs(&wgt, c);
+            for (idx, (gv, wv)) in got.data.iter().zip(&want.data).enumerate() {
+                let j = idx % c;
+                let bound =
+                    kk * (mx * sw[j] as f64 + mw[j] * sx) * 0.5 * 1.01 + 1e-4;
+                let d = (*gv as f64 - *wv as f64).abs();
+                assert!(
+                    d <= bound,
+                    "dw k={k} s={stride} p={pad} c={c} j={j}: diff {d} > bound {bound}"
+                );
+            }
+        });
+    }
+
+    /// The depthwise i8 kernel's i32 accumulation + requantize epilogue must
+    /// match an integer reference exactly, padding and ReLU fusion included.
+    #[test]
+    fn dwconv2d_i8_requant_matches_integer_reference() {
+        forall(30, |g| {
+            let k = *g.choose(&[1usize, 2, 3]);
+            let stride = g.usize_in(1, 2);
+            let pad = g.usize_in(0, 1);
+            let c = g.usize_in(1, 5);
+            let h = g.usize_in(k.max(2 * pad + 1), k + 5);
+            let w = g.usize_in(k.max(2 * pad + 1), k + 5);
+            let x: Vec<i8> = (0..h * w * c).map(|_| g.i64_in(-127, 127) as i8).collect();
+            let wq: Vec<i8> = (0..k * k * c).map(|_| g.i64_in(-127, 127) as i8).collect();
+            let sx = g.f32_in(1e-4, 0.1);
+            let sw = g.vec_f32(c, 1e-4, 0.1);
+            let bias = g.vec_f32(c, -0.5, 0.5);
+            let relu = g.bool();
+            let (oh, ow) = conv_out_dims(h, w, k, stride, pad);
+            let mut acc = vec![0i32; c];
+            let mut out = vec![0.0f32; oh * ow * c];
+            dwconv2d_i8_requant(
+                &x, h, w, c, &wq, k, stride, pad, sx, &sw, &bias, relu, &mut acc, &mut out,
+            );
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    for j in 0..c {
+                        let mut iacc = 0i64;
+                        for ky in 0..k {
+                            for kx in 0..k {
+                                let iy = (oy * stride + ky) as isize - pad as isize;
+                                let ix = (ox * stride + kx) as isize - pad as isize;
+                                if iy < 0 || iy as usize >= h || ix < 0 || ix as usize >= w {
+                                    continue;
+                                }
+                                iacc += x[((iy as usize) * w + ix as usize) * c + j] as i64
+                                    * wq[(ky * k + kx) * c + j] as i64;
+                            }
+                        }
+                        let v = iacc as f32 * (sx * sw[j]) + bias[j];
+                        let v = if relu && v < 0.0 { 0.0 } else { v };
+                        assert_eq!(out[(oy * ow + ox) * c + j], v, "oy={oy} ox={ox} j={j}");
+                    }
+                }
+            }
+        });
+    }
+
+    /// Satellite: a calibrated *static* activation scale that covers the
+    /// sample set (percentile-100 clip over a batch) keeps the int8 conv
+    /// within the same derived bound — stated with the static scale in the
+    /// activation-error term — and reproduces the dynamic-scale result
+    /// bit-for-bit on the image that attains the calibrated range.
+    #[test]
+    fn conv2d_gemm_i8_calibrated_static_scale_within_derived_bound() {
+        forall(30, |g| {
+            let k = *g.choose(&[1usize, 3]);
+            let stride = g.usize_in(1, 2);
+            let pad = g.usize_in(0, 1);
+            let cin = g.usize_in(1, 4);
+            let cout = g.usize_in(1, 12);
+            let h = g.usize_in(k.max(2 * pad + 1), k + 7);
+            let w = g.usize_in(k.max(2 * pad + 1), k + 7);
+            let kk = k * k * cin;
+            let wgt = g.vec_f32(kk * cout, -1.0, 1.0);
+            let b = g.vec_f32(cout, -0.5, 0.5);
+            let batch: Vec<Tensor> = (0..4)
+                .map(|_| Tensor::from_vec(h, w, cin, g.vec_f32(h * w * cin, -1.0, 1.0)))
+                .collect();
+            // Calibration: percentile-100 clip of the per-image max-abs.
+            let cal_max = batch
+                .iter()
+                .map(|t| crate::quant::max_abs(&t.data))
+                .fold(0.0f32, f32::max);
+            let s_cal = crate::quant::act_scale_i8(cal_max) as f64;
+            let (_, sw) = crate::quant::quantize_weights_per_cout(&wgt, kk, cout);
+            let mw = per_cout_max_abs(&wgt, cout);
+            for x in &batch {
+                let want = ops::conv2d(x, &wgt, &b, k, cout, stride, pad);
+                let got = conv2d_gemm_i8_with_scale(
+                    x, &wgt, &b, k, cout, stride, pad, s_cal as f32,
+                );
+                let mx = crate::quant::max_abs(&x.data) as f64;
+                for (idx, (gv, wv)) in got.data.iter().zip(&want.data).enumerate() {
+                    let j = idx % cout;
+                    // s_cal ≥ this image's range, so no sample clips and
+                    // the activation error stays ≤ s_cal/2 per element.
+                    let bound =
+                        kk as f64 * (mx * sw[j] as f64 + mw[j] * s_cal) * 0.5 * 1.01 + 1e-4;
+                    let d = (*gv as f64 - *wv as f64).abs();
+                    assert!(
+                        d <= bound,
+                        "static k={k} s={stride} p={pad} cin={cin} cout={cout} j={j}: \
+                         diff {d} > bound {bound}"
+                    );
+                }
+            }
+            // The range-attaining image sees the identical scale either way.
+            let attain = batch
+                .iter()
+                .max_by(|a, b| {
+                    crate::quant::max_abs(&a.data)
+                        .partial_cmp(&crate::quant::max_abs(&b.data))
+                        .unwrap()
+                })
+                .unwrap();
+            let stat = conv2d_gemm_i8_with_scale(
+                attain, &wgt, &b, k, cout, stride, pad, s_cal as f32,
+            );
+            let dynv = conv2d_gemm_i8(attain, &wgt, &b, k, cout, stride, pad);
+            assert_eq!(stat.data, dynv.data, "static scale at the attained range must be exact");
         });
     }
 

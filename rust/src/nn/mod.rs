@@ -10,12 +10,17 @@
 //!   path**: batched im2col + cache-blocked GEMM with prepacked weights
 //!   and a per-worker [`Scratch`] arena, zero heap allocations at steady
 //!   state. Property-tested ≡ the oracle at 1e-4.
-//! * [`gemm::gemm_i8_requant`] + the int8 [`engine::ConvPlan`] variant —
-//!   the **int8 serving hot path** ([`quant::PrecisionPolicy::Int8`]):
-//!   per-output-channel symmetric int8 weights, quantized i8 im2col
-//!   staging, i32 accumulation, f32 requantize with fused bias/ReLU.
-//!   Property-tested against the oracle within the *derived* per-channel
-//!   quantization bound (no tuned epsilons).
+//! * [`gemm::gemm_i8_requant`] / [`gemm::dwconv2d_i8_requant`] + the int8
+//!   [`engine::ConvPlan`] variant — the **int8 serving hot path**
+//!   ([`quant::PrecisionPolicy::Int8`]): per-output-channel symmetric
+//!   int8 weights, quantized i8 im2col staging (depthwise runs direct,
+//!   per channel), i32 accumulation, f32 requantize with fused
+//!   bias/ReLU. The whole conv section — standard *and* depthwise —
+//!   executes quantized; activation scales are dynamic per image or
+//!   calibrated static ([`crate::quant::CalibrationTable`], which also
+//!   removes the max-abs scan from the hot path). Property-tested
+//!   against the oracle within the *derived* per-channel quantization
+//!   bound (no tuned epsilons).
 //!
 //! Rule: any change to conv numerics must update the oracle **and** the
 //! equivalence/bound property tests — or be oracle-only plus the tests.

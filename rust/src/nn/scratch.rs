@@ -34,6 +34,10 @@ pub struct Scratch {
     pub fc_b: Vec<f32>,
     /// Number of times any buffer had to reallocate (warmup growth).
     pub grow_events: u64,
+    /// Dynamic activation-range scans (one per image per int8 layer whose
+    /// plan carries no calibrated static scale). A calibrated int8 plan
+    /// never increments this — asserted by the alloc/metrics tests.
+    pub maxabs_scans: u64,
 }
 
 impl Scratch {

@@ -43,11 +43,71 @@ pub fn lenet_weights_doc(rng: &mut Xoshiro256) -> Json {
     Json::parse(&text).expect("synthetic doc")
 }
 
+/// A MobileNet-style mini stack (random values) exercising the depthwise
+/// path: conv 3×3×1×8 s1 p1 + ReLU, dwconv 3×3×8 s2 p1 + ReLU, pointwise
+/// 1×1×8×16 + ReLU, dwconv 3×3×16 s2 p1 + ReLU, pointwise 1×1×16×32
+/// (linear — bridge features must be sign-bearing), GAP → 32 features,
+/// ternary FC 32→10. The shape the int8 depthwise kernel, the calibration
+/// path and their alloc/conformance tests all share.
+pub fn mobilenet_mini_weights_doc(rng: &mut Xoshiro256) -> Json {
+    let randf = |rng: &mut Xoshiro256, n: usize| -> String {
+        let v: Vec<String> = (0..n).map(|_| format!("{:.4}", rng.uniform(-0.2, 0.2))).collect();
+        format!("[{}]", v.join(","))
+    };
+    let randt = |rng: &mut Xoshiro256, n: usize| -> String {
+        let v: Vec<String> =
+            (0..n).map(|_| ((rng.next_below(3) as i64) - 1).to_string()).collect();
+        format!("[{}]", v.join(","))
+    };
+    let text = format!(
+        r#"{{"row":"mobilenet-mini-synthetic","dataset":"mnist","acc_fp32":0,"acc_ternary":0,
+        "conv_layers":[
+          {{"kind":"conv","k":3,"cout":8,"stride":1,"pad":1,"relu":true,"w":{},"w_shape":[3,3,1,8],"b":{}}},
+          {{"kind":"dwconv","k":3,"stride":2,"pad":1,"relu":true,"w":{},"w_shape":[3,3,1,8],"b":{}}},
+          {{"kind":"conv","k":1,"cout":16,"stride":1,"pad":0,"relu":true,"w":{},"w_shape":[1,1,8,16],"b":{}}},
+          {{"kind":"dwconv","k":3,"stride":2,"pad":1,"relu":true,"w":{},"w_shape":[3,3,1,16],"b":{}}},
+          {{"kind":"conv","k":1,"cout":32,"stride":1,"pad":0,"relu":false,"w":{},"w_shape":[1,1,16,32],"b":{}}},
+          {{"kind":"gap"}}
+        ],
+        "fc_layers":[
+          {{"n_in":32,"n_out":10,"w_ternary":{}}}
+        ]}}"#,
+        randf(rng, 72),
+        randf(rng, 8),
+        randf(rng, 72),
+        randf(rng, 8),
+        randf(rng, 128),
+        randf(rng, 16),
+        randf(rng, 144),
+        randf(rng, 16),
+        randf(rng, 512),
+        randf(rng, 32),
+        randt(rng, 320),
+    );
+    Json::parse(&text).expect("synthetic dw doc")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::imac::{AdcConfig, ImacConfig};
     use crate::nn::DeployedModel;
+
+    #[test]
+    fn synthetic_dw_doc_loads_as_model() {
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let doc = mobilenet_mini_weights_doc(&mut rng);
+        let m = DeployedModel::from_json(
+            &doc,
+            &ImacConfig::default(),
+            AdcConfig { bits: 0, full_scale: 1.0 },
+            0,
+        )
+        .unwrap();
+        // 28→28 (conv p1) →14 (dw s2) →14 (pw) →7 (dw s2) →7 (pw) →GAP: 32.
+        assert_eq!(m.plan.feat_len(), 32);
+        assert_eq!(m.fabric.n_out(), 10);
+    }
 
     #[test]
     fn synthetic_doc_loads_as_model() {

@@ -1,0 +1,290 @@
+//! Static activation-scale calibration for the int8 conv serving path.
+//!
+//! The dynamic int8 path recomputes a symmetric per-tensor activation scale
+//! (`max|x|/127`) for every image at every quantized layer — deterministic
+//! per request, but one full pass over the activations per layer on the
+//! serving hot path. Production edge-TPU deployments instead *calibrate*:
+//! run a sample set through the float model once, record each layer's
+//! activation range, and bake the resulting static scales into the deployed
+//! artifact. This module is that pass.
+//!
+//! [`calibrate_conv_ops`] runs N sample images through the scalar oracle
+//! ([`crate::nn::ops`] — the auditable reference, not the hot path),
+//! records the max-abs of every conv-section op's *input* activations, and
+//! clips across images at a configurable percentile (100 = true max;
+//! lower percentiles trade saturation of outlier images for finer
+//! resolution everywhere else — out-of-range samples clamp to ±127 in the
+//! kernels, exactly like deployed int8 hardware).
+//!
+//! The resulting [`CalibrationTable`] serializes to JSON
+//! (`tpu-imac calibrate --out calibration.json`), travels in the deployment
+//! config (`serve --calibration <path>` / `"serve": {"calibration": ...}`),
+//! and is consumed by `ConvPlan::compile_calibrated`: every quantized op
+//! gets a static input scale and the per-image max-abs scan disappears from
+//! the steady state (`Scratch::maxabs_scans` stays 0 — asserted by the
+//! alloc/metrics tests).
+
+use anyhow::{bail, Context, Result};
+
+use crate::nn::engine::ConvOp;
+use crate::nn::{ops, Tensor};
+use crate::util::json::Json;
+use crate::util::stats::percentile_sorted;
+
+/// Serialized format version (bump on incompatible layout changes).
+const VERSION: u64 = 1;
+
+/// Per-layer static activation ranges for one model's conv section.
+///
+/// `max_abs[i]` is the clipped max-abs of conv op `i`'s input activations
+/// (indexed exactly like the model's `conv_ops`; entries for ops that never
+/// quantize — pools, GAP — are recorded too, keeping the indexing trivial).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CalibrationTable {
+    /// Clipped per-op input activation range, one entry per conv op.
+    pub max_abs: Vec<f32>,
+    /// The across-images percentile the ranges were clipped at (100 = max).
+    pub percentile: f64,
+    /// How many sample images produced the table.
+    pub samples: usize,
+}
+
+impl CalibrationTable {
+    /// The static int8 activation scale for conv op `idx`
+    /// (`max_abs/127`, unit scale for an all-zero range — same convention
+    /// as [`super::act_scale_i8`]).
+    pub fn scale(&self, idx: usize) -> f32 {
+        super::act_scale_i8(self.max_abs[idx])
+    }
+
+    /// Number of per-op entries (must equal the model's conv op count).
+    pub fn len(&self) -> usize {
+        self.max_abs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.max_abs.is_empty()
+    }
+
+    /// Serialized bytes of the deployed table (one f32 range per layer) —
+    /// the calibration share of the deployment-format accounting.
+    pub fn table_bytes(&self) -> usize {
+        4 * self.max_abs.len()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("version", Json::Num(VERSION as f64)),
+            ("percentile", Json::Num(self.percentile)),
+            ("samples", Json::Num(self.samples as f64)),
+            ("max_abs", Json::arr_f32(&self.max_abs)),
+        ])
+    }
+
+    pub fn from_json(doc: &Json) -> Result<Self> {
+        let version = doc.get("version").as_u64().context("calibration: version")?;
+        if version != VERSION {
+            bail!("calibration table version {version} (this build reads {VERSION})");
+        }
+        let max_abs = doc
+            .get("max_abs")
+            .as_f32_vec()
+            .context("calibration: max_abs array")?;
+        if max_abs.iter().any(|v| !v.is_finite() || *v < 0.0) {
+            bail!("calibration table has non-finite or negative ranges");
+        }
+        Ok(Self {
+            max_abs,
+            percentile: doc.get("percentile").as_f64().unwrap_or(100.0),
+            samples: doc.get("samples").as_usize().unwrap_or(0),
+        })
+    }
+
+    pub fn save(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_json().to_pretty())
+            .with_context(|| format!("writing {path}"))
+    }
+
+    pub fn load(path: &str) -> Result<Self> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        let doc = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        Self::from_json(&doc).with_context(|| format!("parsing {path}"))
+    }
+}
+
+/// Run `images` through the conv-section oracle and record each op's input
+/// activation range, clipped across images at `percentile` (in (0, 100];
+/// 100 keeps the true max). This is the offline calibration pass — it uses
+/// the allocating scalar oracle on purpose: clarity over speed, and the
+/// recorded f32 ranges are what the quantized deployment must cover.
+pub fn calibrate_conv_ops(
+    conv_ops: &[ConvOp],
+    images: &[Tensor],
+    percentile: f64,
+) -> Result<CalibrationTable> {
+    if images.is_empty() {
+        bail!("calibration needs at least one sample image");
+    }
+    if !(percentile > 0.0 && percentile <= 100.0) {
+        bail!("calibration percentile must be in (0, 100], got {percentile}");
+    }
+    // per_op[i][n] = max-abs of op i's input on image n.
+    let mut per_op: Vec<Vec<f64>> = vec![Vec::with_capacity(images.len()); conv_ops.len()];
+    for img in images {
+        let mut x = img.clone();
+        for (i, op) in conv_ops.iter().enumerate() {
+            per_op[i].push(super::max_abs(&x.data) as f64);
+            x = match op {
+                ConvOp::Conv { k, cout, stride, pad, relu, w, b } => {
+                    let mut y = ops::conv2d(&x, w, b, *k, *cout, *stride, *pad);
+                    if *relu {
+                        ops::relu(&mut y);
+                    }
+                    y
+                }
+                ConvOp::DwConv { k, stride, pad, relu, w, b } => {
+                    let mut y = ops::dwconv2d(&x, w, b, *k, *stride, *pad);
+                    if *relu {
+                        ops::relu(&mut y);
+                    }
+                    y
+                }
+                ConvOp::MaxPool { k, stride } => ops::maxpool(&x, *k, *stride),
+                ConvOp::AvgPool { k, stride } => ops::avgpool(&x, *k, *stride),
+                ConvOp::Gap => ops::global_avgpool(&x),
+            };
+        }
+    }
+    let max_abs: Vec<f32> = per_op
+        .into_iter()
+        .map(|mut samples| {
+            samples.sort_by(f64::total_cmp);
+            percentile_sorted(&samples, percentile) as f32
+        })
+        .collect();
+    // Degenerate weights (inf/NaN mid-stack) must surface as an error, not
+    // a poisoned table — the load-side guard in `from_json` mirrors this.
+    if max_abs.iter().any(|v| !v.is_finite()) {
+        bail!("calibration produced non-finite activation ranges (bad weights?)");
+    }
+    Ok(CalibrationTable { max_abs, percentile, samples: images.len() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::rng::Xoshiro256;
+
+    fn toy_ops() -> Vec<ConvOp> {
+        vec![
+            ConvOp::Conv {
+                k: 1,
+                cout: 2,
+                stride: 1,
+                pad: 0,
+                relu: false,
+                // 1x1x1x2 HWIO: doubles and negates the single channel.
+                w: vec![2.0, -1.0],
+                b: vec![0.0, 0.0],
+            },
+            ConvOp::MaxPool { k: 2, stride: 2 },
+        ]
+    }
+
+    #[test]
+    fn records_per_op_input_ranges() {
+        let imgs = vec![
+            Tensor::from_vec(2, 2, 1, vec![0.5, -0.25, 0.1, 0.0]),
+            Tensor::from_vec(2, 2, 1, vec![-0.75, 0.2, 0.0, 0.1]),
+        ];
+        let t = calibrate_conv_ops(&toy_ops(), &imgs, 100.0).unwrap();
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.samples, 2);
+        // Op 0 input: the raw images; max over both = 0.75.
+        assert!((t.max_abs[0] - 0.75).abs() < 1e-6);
+        // Op 1 input: conv output, channel 0 doubles -> 1.5 on image 2.
+        assert!((t.max_abs[1] - 1.5).abs() < 1e-6);
+        // Scales follow the act_scale_i8 convention.
+        assert!((t.scale(0) - 0.75 / 127.0).abs() < 1e-9);
+        assert_eq!(t.table_bytes(), 8);
+    }
+
+    #[test]
+    fn percentile_clips_across_images() {
+        // 8 images with max-abs 0.1..0.8: the 50th percentile keeps 0.4.
+        let imgs: Vec<Tensor> = (1..=8)
+            .map(|i| Tensor::from_vec(1, 1, 1, vec![i as f32 * 0.1]))
+            .collect();
+        let ops_list = vec![ConvOp::Gap];
+        let t100 = calibrate_conv_ops(&ops_list, &imgs, 100.0).unwrap();
+        let t50 = calibrate_conv_ops(&ops_list, &imgs, 50.0).unwrap();
+        assert!((t100.max_abs[0] - 0.8).abs() < 1e-6);
+        assert!((t50.max_abs[0] - 0.4).abs() < 1e-6);
+        assert!(t50.max_abs[0] < t100.max_abs[0]);
+    }
+
+    #[test]
+    fn rejects_degenerate_inputs() {
+        assert!(calibrate_conv_ops(&toy_ops(), &[], 100.0).is_err());
+        let img = vec![Tensor::from_vec(1, 1, 1, vec![0.5])];
+        assert!(calibrate_conv_ops(&[], &img, 0.0).is_err());
+        assert!(calibrate_conv_ops(&[], &img, 100.5).is_err());
+    }
+
+    #[test]
+    fn json_roundtrip_and_file_io() {
+        forall(20, |g| {
+            let n = g.usize_in(0, 12);
+            let t = CalibrationTable {
+                max_abs: g.vec_f32(n, 0.0, 4.0),
+                percentile: g.f64_in(50.0, 100.0),
+                samples: g.usize_in(1, 64),
+            };
+            let back = CalibrationTable::from_json(&t.to_json()).unwrap();
+            assert_eq!(back.samples, t.samples);
+            assert_eq!(back.max_abs.len(), t.max_abs.len());
+            for (a, b) in back.max_abs.iter().zip(&t.max_abs) {
+                assert!((a - b).abs() < 1e-6);
+            }
+        });
+        let t = CalibrationTable { max_abs: vec![0.5, 1.25], percentile: 99.0, samples: 8 };
+        let path = std::env::temp_dir().join("tpu_imac_calib_test.json");
+        let path = path.to_str().unwrap().to_string();
+        t.save(&path).unwrap();
+        let back = CalibrationTable::load(&path).unwrap();
+        assert_eq!(back, t);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn from_json_rejects_bad_tables() {
+        assert!(CalibrationTable::from_json(&Json::parse("{}").unwrap()).is_err());
+        assert!(CalibrationTable::from_json(
+            &Json::parse(r#"{"version": 99, "max_abs": []}"#).unwrap()
+        )
+        .is_err());
+        assert!(CalibrationTable::from_json(
+            &Json::parse(r#"{"version": 1, "max_abs": [-1.0]}"#).unwrap()
+        )
+        .is_err());
+    }
+
+    /// Calibrating on the serving distribution yields ranges every sampled
+    /// layer input actually attains (percentile 100 dominates each image).
+    #[test]
+    fn table_covers_every_sample_at_percentile_100() {
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let ops_list = toy_ops();
+        let imgs: Vec<Tensor> = (0..6)
+            .map(|_| {
+                Tensor::from_vec(2, 2, 1, (0..4).map(|_| rng.next_f32() - 0.5).collect())
+            })
+            .collect();
+        let t = calibrate_conv_ops(&ops_list, &imgs, 100.0).unwrap();
+        for img in &imgs {
+            assert!(crate::quant::max_abs(&img.data) <= t.max_abs[0] + 1e-7);
+        }
+    }
+}

@@ -5,6 +5,16 @@
 //! per-output-channel symmetric weights (`scale = max|w| / 127`), symmetric
 //! per-tensor activations, i32 accumulation, f32 requantize at layer
 //! boundaries — the edge-TPU numerics convention (arXiv:2102.10423).
+//!
+//! Activation scales come in two flavours: **dynamic** (recomputed per
+//! image per layer from `max|x|`) and **calibrated static** (recorded once
+//! offline by the [`calibrate`] pass and shipped with the deployment — see
+//! [`calibrate::CalibrationTable`]), which removes the per-image max-abs
+//! scan from the serving hot path.
+
+pub mod calibrate;
+
+pub use calibrate::{calibrate_conv_ops, CalibrationTable};
 
 use crate::arch::bridge::sign_level;
 

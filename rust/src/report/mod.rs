@@ -165,13 +165,13 @@ pub fn table3(evals: &[ModelEval], acc: &AccuracyTable) -> Table {
 /// hybrid, with both reductions vs the all-FP32 TPU deployment.
 pub fn table_mixed_precision(evals: &[ModelEval]) -> Table {
     let mut t = Table::new(&[
-        "Model", "Dataset", "TPU MB", "SRAM fp32", "SRAM int8", "RRAM MB",
+        "Model", "Dataset", "TPU MB", "SRAM fp32", "SRAM int8", "DW int8 KB", "RRAM MB",
         "Hybrid int8 MB", "Red. fp32", "Red. int8",
     ])
-    .with_title("Mixed-precision memory — int8 conv + ternary FC (serve --precision int8)")
+    .with_title("Mixed-precision memory — int8 conv (incl. depthwise) + ternary FC (serve --precision int8)")
     .with_aligns(&[
         Align::Left, Align::Left, Align::Right, Align::Right, Align::Right, Align::Right,
-        Align::Right, Align::Right, Align::Right,
+        Align::Right, Align::Right, Align::Right, Align::Right,
     ]);
     for e in evals {
         t.row(vec![
@@ -180,6 +180,7 @@ pub fn table_mixed_precision(evals: &[ModelEval]) -> Table {
             fmt_f(e.mem.tpu_mb(), 3),
             fmt_f(e.mem.sram_mb(), 3),
             fmt_f(e.mem.int8_sram_mb(), 3),
+            fmt_f(e.mem.dw_int8_kb(), 1),
             fmt_f(e.mem.rram_mb(), 3),
             fmt_f(e.mem.int8_hybrid_mb(), 3),
             format!("{:.2}%", e.mem.reduction() * 100.0),
@@ -216,8 +217,11 @@ mod tests {
         assert_eq!(t.n_rows(), 7);
         let s = t.to_ascii();
         assert!(s.contains("SRAM int8"));
+        assert!(s.contains("DW int8 KB"));
         // LeNet int8-conv reduction beats the fp32-conv 88.34%.
         assert!(s.contains("92.6") || s.contains("92.7"), "{s}");
+        // MobileNetV1's 84,320 dw-int8 bytes render as 84.3 KB.
+        assert!(s.contains("84.3"), "{s}");
     }
 
     #[test]

@@ -173,6 +173,27 @@ impl Model {
         self.layers.iter().filter(|l| l.is_conv_like()).map(|l| l.bias_params()).sum()
     }
 
+    /// Depthwise-conv weight params only (the dw slice of
+    /// [`Model::conv_weight_params`]; 1 byte each under the int8 conv
+    /// deployment — the `DwI8` kernel's per-channel-quantized weights).
+    pub fn dw_weight_params(&self) -> u64 {
+        self.layers
+            .iter()
+            .filter(|l| matches!(l.kind, LayerKind::DepthwiseConv2d { .. }))
+            .map(|l| l.weight_params())
+            .sum()
+    }
+
+    /// Depthwise-conv bias params (= dw channels; the int8 deployment
+    /// carries one bias and one requantize scale per channel).
+    pub fn dw_bias_params(&self) -> u64 {
+        self.layers
+            .iter()
+            .filter(|l| matches!(l.kind, LayerKind::DepthwiseConv2d { .. }))
+            .map(|l| l.bias_params())
+            .sum()
+    }
+
     /// Dense weight params (ternary in RRAM on the TPU-IMAC; no biases —
     /// analog sigmoid neurons have no bias input).
     pub fn fc_weight_params(&self) -> u64 {
@@ -317,6 +338,21 @@ mod tests {
         assert_eq!(m.fc_weight_params(), (864 * 10) as u64);
         assert_eq!(m.fc_bias_params(), 10);
         assert_eq!(m.total_params_fp32(), (25 * 6 + 6 + 864 * 10 + 10) as u64);
+        // No depthwise layers in the tiny model.
+        assert_eq!(m.dw_weight_params(), 0);
+        assert_eq!(m.dw_bias_params(), 0);
+    }
+
+    #[test]
+    fn dw_param_accounting() {
+        let mut b = ModelBuilder::new("dw", Dataset::Mnist);
+        b.conv(3, 8, 1, 1).dwconv(3, 2, 1).pwconv(16).flatten().dense(10);
+        let m = b.build();
+        assert_eq!(m.dw_weight_params(), 9 * 8);
+        assert_eq!(m.dw_bias_params(), 8);
+        // dw params are a strict subset of the conv-like totals.
+        assert!(m.dw_weight_params() < m.conv_weight_params());
+        assert!(m.dw_bias_params() < m.conv_bias_params());
     }
 
     #[test]

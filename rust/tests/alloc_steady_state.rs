@@ -1,9 +1,13 @@
 //! Counting-allocator proof of the zero-allocation inference hot path:
 //! after warmup, the GEMM conv plan + bridge + IMAC fabric must perform
 //! **zero** heap allocations per image (the scratch arena is fully grown
-//! and every buffer is reused) — on the fp32 path AND the int8 quantized
-//! path (whose i8 staging and i32 accumulator buffers live in the same
-//! arena).
+//! and every buffer is reused) — on the fp32 path, the dynamic int8 path
+//! AND the calibrated int8 path (whose i8 staging and i32 accumulator
+//! buffers live in the same arena), on both a plain conv stack (LeNet)
+//! and a depthwise MobileNet-style stack exercising the DwI8 kernel.
+//! Calibrated plans must additionally perform **zero** per-image max-abs
+//! scans (`Scratch::maxabs_scans` stays 0 — the scan is gone from the
+//! steady state, not merely cheap).
 //!
 //! This file contains exactly one test so no concurrent test thread can
 //! pollute the global allocation counter.
@@ -12,8 +16,9 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use tpu_imac::imac::{AdcConfig, ImacConfig};
-use tpu_imac::nn::synthetic::lenet_weights_doc;
+use tpu_imac::nn::synthetic::{lenet_weights_doc, mobilenet_mini_weights_doc};
 use tpu_imac::nn::{DeployedModel, PrecisionPolicy, Scratch, Tensor};
+use tpu_imac::quant::calibrate_conv_ops;
 use tpu_imac::util::rng::Xoshiro256;
 
 struct CountingAlloc;
@@ -44,54 +49,98 @@ static GLOBAL: CountingAlloc = CountingAlloc;
 #[test]
 fn steady_state_inference_allocates_nothing() {
     let mut rng = Xoshiro256::seed_from_u64(99);
-    let doc = lenet_weights_doc(&mut rng);
     let images: Vec<Tensor> = (0..8)
         .map(|_| Tensor::from_vec(28, 28, 1, (0..784).map(|_| rng.next_f32() - 0.5).collect()))
         .collect();
     let refs: Vec<&Tensor> = images.iter().collect();
 
-    for precision in [PrecisionPolicy::Fp32, PrecisionPolicy::Int8] {
-        let model = DeployedModel::from_json_with(
-            &doc,
+    // (model doc, quantized-layer count) — LeNet pins the plain conv
+    // stack, the MobileNet-mini stack adds DwI8 depthwise layers.
+    let docs =
+        [(lenet_weights_doc(&mut rng), 2u64), (mobilenet_mini_weights_doc(&mut rng), 5u64)];
+    for (doc, i8_layers) in &docs {
+        // Calibration happens offline (allocates freely, outside the
+        // counted region), like `tpu-imac calibrate`.
+        let oracle = DeployedModel::from_json(
+            doc,
             &ImacConfig::default(),
             AdcConfig { bits: 0, full_scale: 1.0 },
             0,
-            precision,
         )
         .unwrap();
-        let mut scratch = Scratch::new();
+        let table = calibrate_conv_ops(&oracle.conv_ops, &images, 100.0).unwrap();
 
-        // Warmup: grow the arena to the workload's high-water mark (single
-        // image AND batch shapes — the batch is the larger footprint).
-        let mut sum = 0.0f32;
-        for img in &images {
-            sum += model.infer_into(img, &mut scratch)[0];
-        }
-        model.infer_batch_into(&refs, &mut scratch, |_, scores| sum += scores[0]);
-        let warm_grows = scratch.grow_events;
-        assert!(warm_grows > 0, "warmup should have grown the arena");
+        for (precision, calibrated) in [
+            (PrecisionPolicy::Fp32, false),
+            (PrecisionPolicy::Int8, false),
+            (PrecisionPolicy::Int8, true),
+        ] {
+            let model = DeployedModel::from_json_calibrated(
+                doc,
+                &ImacConfig::default(),
+                AdcConfig { bits: 0, full_scale: 1.0 },
+                0,
+                precision,
+                if calibrated { Some(&table) } else { None },
+            )
+            .unwrap();
+            let mut scratch = Scratch::new();
 
-        // Steady state: count every heap allocation across single-image and
-        // batched inference. Must be exactly zero, in either precision.
-        let before = ALLOCS.load(Ordering::SeqCst);
-        for _ in 0..3 {
+            // Warmup: grow the arena to the workload's high-water mark
+            // (single image AND batch shapes — the batch is the larger
+            // footprint).
+            let mut sum = 0.0f32;
             for img in &images {
                 sum += model.infer_into(img, &mut scratch)[0];
             }
             model.infer_batch_into(&refs, &mut scratch, |_, scores| sum += scores[0]);
+            let warm_grows = scratch.grow_events;
+            assert!(warm_grows > 0, "warmup should have grown the arena");
+            let warm_scans = scratch.maxabs_scans;
+
+            // Steady state: count every heap allocation across
+            // single-image and batched inference. Must be exactly zero,
+            // in every precision/calibration combination.
+            let before = ALLOCS.load(Ordering::SeqCst);
+            for _ in 0..3 {
+                for img in &images {
+                    sum += model.infer_into(img, &mut scratch)[0];
+                }
+                model.infer_batch_into(&refs, &mut scratch, |_, scores| sum += scores[0]);
+            }
+            let delta = ALLOCS.load(Ordering::SeqCst) - before;
+            assert!(sum.is_finite());
+            let label = format!(
+                "{}{}",
+                precision.label(),
+                if calibrated { "+calibrated" } else { "" }
+            );
+            assert_eq!(
+                delta, 0,
+                "steady-state {label} request path performed {delta} heap allocations (want 0)"
+            );
+            assert_eq!(
+                scratch.grow_events, warm_grows,
+                "{label} scratch arena regrew at steady state"
+            );
+            // The max-abs pass: gone entirely under calibration, one per
+            // image per quantized layer otherwise (48 images steady-state:
+            // 3 rounds × (8 single + 8 batched)).
+            let steady_scans = scratch.maxabs_scans - warm_scans;
+            match (precision, calibrated) {
+                (PrecisionPolicy::Fp32, _) => {
+                    assert_eq!(scratch.maxabs_scans, 0, "fp32 plan never scans")
+                }
+                (PrecisionPolicy::Int8, true) => assert_eq!(
+                    scratch.maxabs_scans, 0,
+                    "calibrated int8 plan must not scan activation ranges"
+                ),
+                (PrecisionPolicy::Int8, false) => assert_eq!(
+                    steady_scans,
+                    48 * i8_layers,
+                    "dynamic int8 plan scans once per image per quantized layer"
+                ),
+            }
         }
-        let delta = ALLOCS.load(Ordering::SeqCst) - before;
-        assert!(sum.is_finite());
-        assert_eq!(
-            delta,
-            0,
-            "steady-state {} request path performed {delta} heap allocations (want 0)",
-            precision.label()
-        );
-        assert_eq!(
-            scratch.grow_events, warm_grows,
-            "{} scratch arena regrew at steady state",
-            precision.label()
-        );
     }
 }

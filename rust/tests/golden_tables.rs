@@ -63,6 +63,38 @@ fn golden_int8_memory_reduction() {
     assert!(r > 0.8834, "must beat the paper's published fp32-conv reduction");
 }
 
+/// Depthwise-int8 goldens: the dw slice of the int8-conv SRAM share (dw
+/// weights at 1 byte + per-channel bias and requantize scale at 4 bytes
+/// each — the deployment format of the `DwI8` kernel). MobileNetV1: 13 dw
+/// layers over 4,960 channels → 9·4960 + 8·4960 = 84,320 B. MobileNetV2:
+/// 17 dw layers over 7,136 channels → 9·7136 + 8·7136 = 121,312 B. The
+/// conv section is dataset-independent, so CIFAR-100 rows match CIFAR-10.
+#[test]
+fn golden_dw_int8_bytes() {
+    let golden: [(&str, u64); 7] = [
+        ("LeNet/MNIST", 0),
+        ("VGG9/CIFAR-10", 0),
+        ("MobileNetV1/CIFAR-10", 84_320),
+        ("MobileNetV2/CIFAR-10", 121_312),
+        ("ResNet-18/CIFAR-10", 0),
+        ("MobileNetV1/CIFAR-100", 84_320),
+        ("MobileNetV2/CIFAR-100", 121_312),
+    ];
+    let evals =
+        arch::evaluate_suite(&ArrayConfig::default(), &SramConfig::default()).unwrap();
+    assert_eq!(evals.len(), golden.len());
+    for (e, g) in evals.iter().zip(&golden) {
+        let key = format!("{}/{}", e.model_name, e.dataset);
+        assert_eq!(key, g.0);
+        assert_eq!(e.mem.hybrid_int8_dw_bytes, g.1, "{key} dw int8 bytes");
+        // The dw slice is part of — never beyond — the int8 SRAM share.
+        assert!(
+            e.mem.hybrid_int8_dw_bytes <= e.mem.hybrid_int8_sram_bytes,
+            "{key}: dw slice exceeds the int8 SRAM share"
+        );
+    }
+}
+
 #[test]
 fn golden_speedups() {
     let golden: [(&str, f64); 7] = [

@@ -1,10 +1,14 @@
-//! Serving-stack integration: coordinator + backends end to end.
+//! Serving-stack integration: coordinator + backends end to end, including
+//! the cross-precision conformance suite (fp32 vs dynamic-int8 vs
+//! calibrated-int8 workers over the same batch).
 
 use std::time::Duration;
 
 use tpu_imac::coordinator::{Coordinator, CoordinatorConfig, NativeBackend, PjrtConvBackend};
 use tpu_imac::imac::{AdcConfig, ImacConfig};
-use tpu_imac::nn::{DeployedModel, Tensor};
+use tpu_imac::nn::synthetic::mobilenet_mini_weights_doc;
+use tpu_imac::nn::{DeployedModel, PrecisionPolicy, Tensor};
+use tpu_imac::quant::{calibrate_conv_ops, CalibrationTable};
 use tpu_imac::runtime::Runtime;
 use tpu_imac::util::rng::Xoshiro256;
 
@@ -87,6 +91,130 @@ fn pjrt_serving_matches_native_predictions() {
     }
     assert!(agree >= 23, "only {agree}/24 predictions agree");
     coord.shutdown();
+}
+
+/// Cross-precision conformance: serve the same batch through fp32,
+/// dynamic-int8 and calibrated-int8 native workers on a depthwise
+/// (MobileNet-style) stack. Asserts per-deployment determinism, top-1
+/// agreement across precisions, `metrics.int8_images` /
+/// `metrics.calibrated_images` accounting, and that calibrated workers
+/// never run the per-image max-abs scan (`metrics.maxabs_scans` = 0).
+/// Self-contained: synthetic weights, no `make artifacts` needed.
+#[test]
+fn cross_precision_conformance_fp32_dynamic_calibrated() {
+    let mut rng = Xoshiro256::seed_from_u64(71);
+    let doc = mobilenet_mini_weights_doc(&mut rng);
+    let build = |precision: PrecisionPolicy, calib: Option<&CalibrationTable>| {
+        DeployedModel::from_json_calibrated(
+            &doc,
+            &ImacConfig::default(),
+            AdcConfig { bits: 0, full_scale: 1.0 },
+            0,
+            precision,
+            calib,
+        )
+        .unwrap()
+    };
+    // Calibrate on samples from the same distribution as the test batch.
+    let oracle = build(PrecisionPolicy::Fp32, None);
+    let samples: Vec<Tensor> = (0..16)
+        .map(|_| Tensor::from_vec(28, 28, 1, (0..784).map(|_| rng.next_f32() - 0.5).collect()))
+        .collect();
+    let table = calibrate_conv_ops(&oracle.conv_ops, &samples, 100.0).unwrap();
+
+    let n = 24usize;
+    let images: Vec<Tensor> = (0..n)
+        .map(|_| Tensor::from_vec(28, 28, 1, (0..784).map(|_| rng.next_f32() - 0.5).collect()))
+        .collect();
+
+    // Serve the identical batch through each deployment; two passes per
+    // coordinator prove determinism under arbitrary batching.
+    let mut predictions: Vec<Vec<usize>> = Vec::new();
+    let variants: [(PrecisionPolicy, Option<CalibrationTable>); 3] = [
+        (PrecisionPolicy::Fp32, None),
+        (PrecisionPolicy::Int8, None),
+        (PrecisionPolicy::Int8, Some(table.clone())),
+    ];
+    for (precision, calib) in variants {
+        let is_calibrated = calib.is_some();
+        let doc2 = doc.clone();
+        let coord = Coordinator::start(
+            CoordinatorConfig { max_batch: 5, ..Default::default() },
+            move || {
+                let m = DeployedModel::from_json_calibrated(
+                    &doc2,
+                    &ImacConfig::default(),
+                    AdcConfig { bits: 0, full_scale: 1.0 },
+                    0,
+                    precision,
+                    calib.as_ref(),
+                )
+                .unwrap();
+                Box::new(NativeBackend::new(m))
+            },
+        );
+        let client = coord.client();
+        let mut passes: Vec<Vec<usize>> = Vec::new();
+        for _ in 0..2 {
+            let rxs: Vec<_> = images
+                .iter()
+                .map(|img| client.submit(img.clone()).unwrap().1)
+                .collect();
+            passes.push(
+                rxs.into_iter()
+                    .map(|rx| rx.recv_timeout(Duration::from_secs(60)).unwrap().predicted)
+                    .collect(),
+            );
+        }
+        assert_eq!(passes[0], passes[1], "{:?} serving must be deterministic", precision);
+
+        let snap = coord.metrics.snapshot();
+        assert_eq!(snap.completed, 2 * n as u64);
+        assert_eq!(snap.gemm_images, 2 * n as u64);
+        match precision {
+            PrecisionPolicy::Fp32 => {
+                assert_eq!(snap.int8_images, 0, "fp32 worker must not count int8 images");
+                assert_eq!(snap.maxabs_scans, 0, "fp32 worker never scans ranges");
+            }
+            PrecisionPolicy::Int8 => {
+                assert_eq!(snap.int8_images, 2 * n as u64, "int8 image accounting");
+                if is_calibrated {
+                    assert_eq!(snap.calibrated_images, 2 * n as u64);
+                    assert_eq!(
+                        snap.maxabs_scans, 0,
+                        "calibrated worker must not run the max-abs pass"
+                    );
+                } else {
+                    // 5 quantized layers (3 conv + 2 dwconv) per image.
+                    assert_eq!(snap.calibrated_images, 0);
+                    assert_eq!(snap.maxabs_scans, 2 * n as u64 * 5);
+                }
+            }
+        }
+        predictions.push(passes.into_iter().next().unwrap());
+        coord.shutdown();
+    }
+
+    // Per-image top-1 must agree across precisions (random weights put
+    // features near the sign threshold, so the floor is 80%, not 100% —
+    // see the engine-level agreement tests for the rationale).
+    let [p32, p8d, p8c] = [&predictions[0], &predictions[1], &predictions[2]];
+    let agree = |a: &Vec<usize>, b: &Vec<usize>| a.iter().zip(b.iter()).filter(|(x, y)| x == y).count();
+    assert!(
+        agree(p32, p8d) * 100 >= n * 80,
+        "fp32 vs dynamic-int8 agreement {}/{n}",
+        agree(p32, p8d)
+    );
+    assert!(
+        agree(p32, p8c) * 100 >= n * 80,
+        "fp32 vs calibrated-int8 agreement {}/{n}",
+        agree(p32, p8c)
+    );
+    assert!(
+        agree(p8d, p8c) * 100 >= n * 80,
+        "dynamic vs calibrated int8 agreement {}/{n}",
+        agree(p8d, p8c)
+    );
 }
 
 #[test]
