@@ -8,9 +8,12 @@
 //! Run with `cargo bench --bench conv_gemm`; add `-- --json
 //! BENCH_hotpath.json` for a machine-readable report tracked across PRs
 //! (CI uploads it as a workflow artifact). Existing row names keep their
-//! PR-1/PR-2 spelling so the JSON series stay comparable; the dw rows are
-//! new series. The int8 rows track the fp32→int8 speedup (acceptance
-//! floor 1.30×: both staged matrices drop to 1/4 the memory traffic).
+//! PR-1/PR-2 spelling so the JSON series stay comparable; the dw rows and
+//! the FC rows (per-row fp32 fabric vs the bit-sliced batched FC hot
+//! path) are new series. The int8 rows track the fp32→int8 speedup
+//! (acceptance floor 1.30×: both staged matrices drop to 1/4 the memory
+//! traffic); the FC rows track the bit-sliced speedup (popcount layer 1 +
+//! 4-image-blocked analog MVM — see EXPERIMENTS.md §Bit-sliced FC).
 
 use tpu_imac::imac::{AdcConfig, ImacConfig};
 use tpu_imac::nn::synthetic::{lenet_weights_doc, mobilenet_mini_weights_doc};
@@ -195,6 +198,62 @@ fn main() {
         );
     }
 
+    // FC section (LeNet 256→120→84→10 ternary head): per-row fp32 fabric
+    // chain vs the bit-sliced batched hot path (layer-1 popcount bitplanes
+    // + 4-image-blocked analog MVM). New JSON series — conv row names
+    // above keep their frozen spelling. Inputs are the batch's real
+    // bridged conv features, computed once outside the timed region.
+    let fc_model = load_model(&doc, PrecisionPolicy::Fp32);
+    let bridged: Vec<f32> = {
+        let mut s = Scratch::new();
+        let mut block = Vec::new();
+        for img in &images {
+            block.extend_from_slice(fc_model.conv_features_into(img, &mut s));
+        }
+        DeployedModel::bridge_in_place(&mut block);
+        block
+    };
+    // Sanity: the two FC paths must agree bit-for-bit before we time them.
+    {
+        let mut s = Scratch::new();
+        let flen = fc_model.fabric.n_in();
+        let mut want = Vec::new();
+        for row in bridged.chunks_exact(flen) {
+            want.extend_from_slice(fc_model.fabric.forward_into(row, &mut s.fc_a, &mut s.fc_b));
+        }
+        let got = fc_model
+            .fabric
+            .forward_batch_into(&bridged, BATCH, &mut s.fc_bits, &mut s.fc_a, &mut s.fc_b)
+            .to_vec();
+        assert_eq!(got, want, "FC paths diverge before benching");
+        assert!(fc_model.fabric.uses_bitplane_path());
+    }
+    {
+        let m = load_model(&doc, PrecisionPolicy::Fp32);
+        let block = bridged.clone();
+        let mut s = Scratch::new();
+        suite.bench_throughput("FC fabric per-row fp32 (batch 8)", BATCH as f64, move || {
+            let flen = m.fabric.n_in();
+            let mut acc = 0u64;
+            for row in block.chunks_exact(flen) {
+                acc = acc.wrapping_add(
+                    m.fabric.forward_into(row, &mut s.fc_a, &mut s.fc_b)[0].to_bits() as u64,
+                );
+            }
+            acc
+        });
+    }
+    {
+        let m = load_model(&doc, PrecisionPolicy::Fp32);
+        let block = bridged.clone();
+        let mut s = Scratch::new();
+        suite.bench_throughput("FC fabric bit-sliced batched (batch 8)", BATCH as f64, move || {
+            let out =
+                m.fabric.forward_batch_into(&block, BATCH, &mut s.fc_bits, &mut s.fc_a, &mut s.fc_b);
+            black_box(out[0].to_bits() as u64)
+        });
+    }
+
     let results = suite.run_cli();
     // Look rows up by name (not position) so inserting a bench row can
     // never silently corrupt the reported cross-PR speedup series.
@@ -221,6 +280,12 @@ fn main() {
     println!(
         "speedup (dw-stack fp32 / int8 calibrated): {:.2}x",
         dw_f32 / dw_i8_cal
+    );
+    let fc_row = mean("FC fabric per-row fp32 (batch 8)");
+    let fc_bits = mean("FC fabric bit-sliced batched (batch 8)");
+    println!(
+        "speedup (FC per-row fp32 / bit-sliced batched): {:.2}x  (EXPERIMENTS.md §Bit-sliced FC)",
+        fc_row / fc_bits
     );
 
     // Steady-state allocation check across every deployment shape: after

@@ -1,7 +1,14 @@
 //! Inference backends: how a batch of images becomes class scores.
 //!
-//! Both backends mirror the hardware split — conv section FP32 (systolic
-//! array), FC section in the rust IMAC analog fabric:
+//! Both backends mirror the hardware split — conv section on the systolic
+//! array's numerics, FC section in the rust IMAC analog fabric. **Both
+//! sections execute batch-at-a-time**: conv as one im2col+GEMM (fp32) or
+//! per-image i8 kernels, the FC section through
+//! [`crate::imac::ImacFabric::forward_batch_into`] — layer 1 as the
+//! bit-sliced ±1×ternary popcount kernel on ideal fabrics (counted by
+//! `metrics.imac_bitplane_images`), later layers as the cache-blocked
+//! batched analog MVM. The batch path is bit-identical to the per-row
+//! fabric path (see ARCHITECTURE.md §FC section).
 //!
 //! * [`NativeBackend`] — conv via the im2col+GEMM plan
 //!   ([`crate::nn::ConvPlan`]) with a per-worker scratch arena, zero
@@ -18,8 +25,8 @@
 //! * [`PjrtConvBackend`] — conv via the JAX-AOT-compiled PJRT executable
 //!   (`lenet_conv_b{B}.hlo.txt`), padded to the artifact batch size. The
 //!   production path when the `pjrt` feature (and artifact set) is
-//!   available; the FC section still finishes in the analog fabric through
-//!   the same scratch buffers.
+//!   available; the FC section still finishes batch-at-a-time in the
+//!   analog fabric through the same scratch buffers.
 
 use std::sync::atomic::Ordering;
 use std::time::Instant;
@@ -63,7 +70,6 @@ impl InferenceBackend for NativeBackend {
             return Vec::new();
         }
         let model = &self.model;
-        let flen = model.plan.feat_len();
         let Scratch {
             cols,
             cols_i8,
@@ -73,6 +79,7 @@ impl InferenceBackend for NativeBackend {
             act_b,
             fc_a,
             fc_b,
+            fc_bits,
             grow_events,
             maxabs_scans,
         } = &mut self.scratch;
@@ -97,14 +104,25 @@ impl InferenceBackend for NativeBackend {
         metrics.conv_us_total.fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
         metrics.maxabs_scans.fetch_add(*maxabs_scans - scans0, Ordering::Relaxed);
 
-        // Bridge + FC section: per image through the analog fabric.
+        // Bridge + FC section, batch-at-a-time through the analog fabric:
+        // layer 1 via the bit-sliced popcount kernel (ideal fabrics),
+        // later layers via the cache-blocked batched MVM. Bit-identical to
+        // the old per-row loop.
         let t1 = Instant::now();
-        let mut out = Vec::with_capacity(images.len());
-        for row in feats.chunks_exact_mut(flen) {
-            DeployedModel::bridge_in_place(row);
-            out.push(model.fabric.forward_into(row, fc_a, fc_b).to_vec());
-        }
+        DeployedModel::bridge_in_place(feats);
+        let scores = model.fabric.forward_batch_into(feats, images.len(), fc_bits, fc_a, fc_b);
+        // Row width from the block itself (a zero-layer fabric echoes
+        // `n_in`-wide rows while `n_out()` reports 0).
+        let row_len = scores.len() / images.len();
+        let out: Vec<Vec<f32>> = if row_len == 0 {
+            vec![Vec::new(); images.len()]
+        } else {
+            scores.chunks_exact(row_len).map(|r| r.to_vec()).collect()
+        };
         metrics.imac_us_total.fetch_add(t1.elapsed().as_micros() as u64, Ordering::Relaxed);
+        if model.fabric.uses_bitplane_path() {
+            metrics.imac_bitplane_images.fetch_add(images.len() as u64, Ordering::Relaxed);
+        }
 
         metrics.gemm_images.fetch_add(images.len() as u64, Ordering::Relaxed);
         if self.model.precision == crate::nn::PrecisionPolicy::Int8 {
@@ -179,14 +197,23 @@ impl PjrtConvBackend {
         );
         metrics.conv_us_total.fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
 
+        // Bridge + FC section batch-at-a-time (live rows only — the
+        // artifact's zero-padded tail never enters the fabric).
         let t1 = Instant::now();
-        let mut out = Vec::with_capacity(chunk.len());
-        let Scratch { fc_a, fc_b, .. } = &mut self.scratch;
-        for row in feats.chunks_exact_mut(self.out_elems).take(chunk.len()) {
-            DeployedModel::bridge_in_place(row);
-            out.push(self.model.fabric.forward_into(row, fc_a, fc_b).to_vec());
-        }
+        let Scratch { fc_a, fc_b, fc_bits, .. } = &mut self.scratch;
+        let live = &mut feats[..chunk.len() * self.out_elems];
+        DeployedModel::bridge_in_place(live);
+        let scores = self.model.fabric.forward_batch_into(live, chunk.len(), fc_bits, fc_a, fc_b);
+        let row_len = scores.len() / chunk.len();
+        let out: Vec<Vec<f32>> = if row_len == 0 {
+            vec![Vec::new(); chunk.len()]
+        } else {
+            scores.chunks_exact(row_len).map(|r| r.to_vec()).collect()
+        };
         metrics.imac_us_total.fetch_add(t1.elapsed().as_micros() as u64, Ordering::Relaxed);
+        if self.model.fabric.uses_bitplane_path() {
+            metrics.imac_bitplane_images.fetch_add(chunk.len() as u64, Ordering::Relaxed);
+        }
         Ok(out)
     }
 }

@@ -19,8 +19,26 @@
 //! * differential-amplifier input-referred offset (Gaussian per column).
 //!
 //! The ideal path (`sigma = stuck = α = offset = 0`) is exact integer
-//! arithmetic in disguise and is used on the serving hot path.
+//! arithmetic in disguise and is used on the serving hot path. Ideal
+//! crossbars carry three weight views, fastest first:
+//!
+//! 1. **plus/minus bitplanes** ([`Crossbar::mvm_sign_bits_acc`]) — for
+//!    strictly ±1 inputs (the bridge's levels feeding the first logical
+//!    layer) the MVM collapses to popcounts of the input bitmask against
+//!    per-column weight bitplanes derived from the packed RRAM image
+//!    (`quant::ternary_bitplanes`): 64 rows per word, no multiplies
+//!    (EXPERIMENTS.md §Bit-sliced FC);
+//! 2. **i8 ternary copy** — 4× less weight traffic than f32 on the
+//!    bandwidth-bound analog-input MVM (EXPERIMENTS.md §Perf);
+//! 3. **f32** — narrow layers, where the i8→f32 convert dominates.
+//!
+//! [`Crossbar::mvm_batch_acc`] additionally processes four images per pass
+//! over each `KC`-row weight panel (the [`crate::nn::gemm`] blocking
+//! idioms), amortizing weight traffic 4× across a serving batch while
+//! keeping every image's accumulation order — and therefore its bits —
+//! identical to the per-row kernels.
 
+use crate::nn::gemm::KC;
 use crate::util::rng::Xoshiro256;
 
 use super::device::{DeviceConfig, SynapsePair};
@@ -57,6 +75,13 @@ pub struct Crossbar {
     amp_offsets: Vec<f32>,
     /// Whether any non-ideality is active (enables the fast path).
     ideal: bool,
+    /// Ideal-path bitplanes (column-major, `n_out × ceil(n_in/64)` words):
+    /// bit `i` of column `j`'s plane set iff `w[i][j] = +1` / `−1`. Derived
+    /// from the packed 2-bit RRAM layout via `quant::ternary_bitplanes`.
+    plus_bits: Vec<u64>,
+    minus_bits: Vec<u64>,
+    /// Per-column `n⁺ − n⁻` (the popcount identity's constant term).
+    col_bias: Vec<i32>,
 }
 
 impl Crossbar {
@@ -93,7 +118,40 @@ impl Crossbar {
             .collect();
         let ideal = ideal_devices && cfg.wire_alpha == 0.0 && cfg.amp_offset_sigma == 0.0;
         let weights_i8 = if ideal { w.to_vec() } else { Vec::new() };
-        Self { n_in, n_out, cfg, weights_norm, weights_i8, amp_offsets, ideal }
+        let (plus_bits, minus_bits, col_bias) = if ideal {
+            // The bit-sliced view is derived from the same packed 2-bit
+            // RRAM image Table 2 accounts — the planes are a transpose of
+            // what is physically programmed, not a third weight source.
+            // Built for every ideal crossbar even though only first-layer
+            // crossbars take the ±1 path: the planes cost 1/20 of the
+            // f32+i8 views (0.25 B/weight) and keeping the build here —
+            // rather than threading a layer-index flag through the fabric
+            // mapping APIs — keeps `program` the single programming entry
+            // point.
+            let packed = crate::quant::pack_ternary(w);
+            let (plus, minus) = crate::quant::ternary_bitplanes(&packed, n_in, n_out);
+            let mut bias = vec![0i32; n_out];
+            for wrow in w.chunks_exact(n_out) {
+                for (b, &wv) in bias.iter_mut().zip(wrow) {
+                    *b += wv as i32;
+                }
+            }
+            (plus, minus, bias)
+        } else {
+            (Vec::new(), Vec::new(), Vec::new())
+        };
+        Self {
+            n_in,
+            n_out,
+            cfg,
+            weights_norm,
+            weights_i8,
+            amp_offsets,
+            ideal,
+            plus_bits,
+            minus_bits,
+            col_bias,
+        }
     }
 
     /// Analog MVM: `out_j = Σ_i v_eff(i)·w_norm[i][j] + offset_j`, in
@@ -197,6 +255,133 @@ impl Crossbar {
             for (o, &wv) in out.iter_mut().zip(row) {
                 *o += xi * wv;
             }
+        }
+    }
+
+    /// Bit-sliced accumulating MVM for strictly ±1 inputs on an **ideal**
+    /// crossbar: `xbits` is the input sign bitmask
+    /// ([`crate::quant::pack_sign_bitmask`], `ceil(n_in/64)` words, bit
+    /// `i` set iff input `i` is +1). Per column the popcount identity
+    ///
+    /// `out_j += 2·(popcount(x∧plus_j) − popcount(x∧minus_j)) − (n⁺_j − n⁻_j)`
+    ///
+    /// yields the exact integer `Σ_i x_i·w_ij` — bit-identical to the f32
+    /// ideal kernels (every partial sum there is an integer below 2²⁴, so
+    /// no float rounding ever occurs on either path), at 64 rows per word
+    /// and zero multiplies. This is the first-logical-layer hot path: the
+    /// bridge guarantees ±1 inputs only there (later layers see analog
+    /// sigmoid outputs and take [`Crossbar::mvm_batch_acc`]).
+    pub fn mvm_sign_bits_acc(&self, xbits: &[u64], out: &mut [f32]) {
+        assert!(self.ideal, "bit-sliced MVM is defined for ideal crossbars only");
+        let words = crate::quant::bitplane_words(self.n_in);
+        assert_eq!(xbits.len(), words, "sign bitmask word count");
+        assert_eq!(out.len(), self.n_out);
+        for (j, o) in out.iter_mut().enumerate() {
+            let pj = &self.plus_bits[j * words..(j + 1) * words];
+            let mj = &self.minus_bits[j * words..(j + 1) * words];
+            let mut d = 0i32;
+            for ((&xw, &pw), &mw) in xbits.iter().zip(pj).zip(mj) {
+                d += (xw & pw).count_ones() as i32;
+                d -= (xw & mw).count_ones() as i32;
+            }
+            *o += (2 * d - self.col_bias[j]) as f32;
+        }
+    }
+
+    /// Batched accumulating MVM over `nimg` input rows (row `i` at
+    /// `x[i·ldx .. i·ldx + n_in]`; `out` dense `nimg × n_out`). Ideal
+    /// crossbars run a cache-blocked kernel — `KC`-row weight panels, four
+    /// images per pass (the `nn::gemm` blocking idioms), so each weight row
+    /// is read once per four images instead of once per image — that is
+    /// **bit-identical per image** to [`Crossbar::mvm_acc`]: `KC` is a
+    /// multiple of 4, so the panel walk visits the reduction dimension in
+    /// exactly the per-row kernel's 4-chunk grouping and order. Non-ideal
+    /// crossbars (and the <4-image tail) fall back to per-row
+    /// [`Crossbar::mvm_acc`].
+    pub fn mvm_batch_acc(&self, x: &[f32], ldx: usize, nimg: usize, out: &mut [f32]) {
+        if nimg == 0 {
+            return;
+        }
+        assert!(ldx >= self.n_in, "row stride {ldx} shorter than crossbar rows {}", self.n_in);
+        assert!(x.len() >= (nimg - 1) * ldx + self.n_in, "batch input shape");
+        assert_eq!(out.len(), nimg * self.n_out, "batch output shape");
+        let nb = if self.ideal { nimg - nimg % 4 } else { 0 };
+        if nb > 0 {
+            self.mvm_ideal_f32_batch4(x, ldx, nb, out);
+        }
+        for i in nb..nimg {
+            self.mvm_acc(
+                &x[i * ldx..i * ldx + self.n_in],
+                &mut out[i * self.n_out..(i + 1) * self.n_out],
+            );
+        }
+    }
+
+    /// Ideal batched kernel over a multiple-of-4 image count. Per image the
+    /// accumulation sequence — 4-chunk product groups in ascending `p`
+    /// with the same left-to-right association, then skip-zero singles —
+    /// matches `mvm_ideal_f32` term for term, so results are bit-identical
+    /// to the per-row path.
+    fn mvm_ideal_f32_batch4(&self, x: &[f32], ldx: usize, nimg4: usize, out: &mut [f32]) {
+        debug_assert_eq!(nimg4 % 4, 0);
+        let n = self.n_out;
+        let w = &self.weights_norm;
+        let mut pc = 0;
+        while pc < self.n_in {
+            // KC-row weight panel: stays cache-resident across all image
+            // blocks. KC % 4 == 0 keeps 4-chunk boundaries aligned with the
+            // per-row kernel's `chunks_exact(4)` walk.
+            let kc = KC.min(self.n_in - pc);
+            let chunk_end = pc + (kc / 4) * 4;
+            let mut ib = 0;
+            while ib < nimg4 {
+                let x0 = &x[ib * ldx..ib * ldx + self.n_in];
+                let x1 = &x[(ib + 1) * ldx..(ib + 1) * ldx + self.n_in];
+                let x2 = &x[(ib + 2) * ldx..(ib + 2) * ldx + self.n_in];
+                let x3 = &x[(ib + 3) * ldx..(ib + 3) * ldx + self.n_in];
+                let block = &mut out[ib * n..(ib + 4) * n];
+                let (r0, rest) = block.split_at_mut(n);
+                let (r1, rest) = rest.split_at_mut(n);
+                let (r2, r3) = rest.split_at_mut(n);
+                let mut p = pc;
+                while p < chunk_end {
+                    let w0 = &w[p * n..(p + 1) * n];
+                    let w1 = &w[(p + 1) * n..(p + 2) * n];
+                    let w2 = &w[(p + 2) * n..(p + 3) * n];
+                    let w3 = &w[(p + 3) * n..(p + 4) * n];
+                    let (a00, a01, a02, a03) = (x0[p], x0[p + 1], x0[p + 2], x0[p + 3]);
+                    let (a10, a11, a12, a13) = (x1[p], x1[p + 1], x1[p + 2], x1[p + 3]);
+                    let (a20, a21, a22, a23) = (x2[p], x2[p + 1], x2[p + 2], x2[p + 3]);
+                    let (a30, a31, a32, a33) = (x3[p], x3[p + 1], x3[p + 2], x3[p + 3]);
+                    for j in 0..n {
+                        let (b0, b1, b2, b3) = (w0[j], w1[j], w2[j], w3[j]);
+                        r0[j] += a00 * b0 + a01 * b1 + a02 * b2 + a03 * b3;
+                        r1[j] += a10 * b0 + a11 * b1 + a12 * b2 + a13 * b3;
+                        r2[j] += a20 * b0 + a21 * b1 + a22 * b2 + a23 * b3;
+                        r3[j] += a30 * b0 + a31 * b1 + a32 * b2 + a33 * b3;
+                    }
+                    p += 4;
+                }
+                // Panel tail rows (final panel only): skip-zero singles,
+                // mirroring the per-row remainder loop.
+                while p < pc + kc {
+                    let wrow = &w[p * n..(p + 1) * n];
+                    for (r, xs) in
+                        [(&mut *r0, x0), (&mut *r1, x1), (&mut *r2, x2), (&mut *r3, x3)]
+                    {
+                        let xv = xs[p];
+                        if xv == 0.0 {
+                            continue;
+                        }
+                        for (o, &bv) in r.iter_mut().zip(wrow) {
+                            *o += xv * bv;
+                        }
+                    }
+                    p += 1;
+                }
+                ib += 4;
+            }
+            pc += kc;
         }
     }
 
@@ -312,6 +497,94 @@ mod tests {
                 assert_eq!(acc[j], base[j] + fresh[j]);
             }
         });
+    }
+
+    /// Tentpole property: for ±1 inputs the popcount bitplane kernel is
+    /// bit-exact against the ideal f32 MVM across random shapes, including
+    /// widths straddling the 64-bit word boundary.
+    #[test]
+    fn sign_bit_mvm_is_bit_exact_vs_ideal() {
+        forall(40, |g| {
+            let n_in = g.usize_in(1, 200);
+            let n_out = g.usize_in(1, 80); // crosses the i8-kernel threshold
+            let w = g.vec_ternary(n_in * n_out);
+            let x: Vec<f32> = g.vec_sign(n_in).iter().map(|&s| s as f32).collect();
+            let mut rng = Xoshiro256::seed_from_u64(11);
+            let xb = Crossbar::program(&w, n_in, n_out, CrossbarConfig::default(), &mut rng);
+            assert!(xb.is_ideal());
+            let mut bits = vec![0u64; crate::quant::bitplane_words(n_in)];
+            crate::quant::pack_sign_bitmask(&x, &mut bits);
+            let base: Vec<f32> = (0..n_out).map(|j| (j % 5) as f32).collect();
+            let mut got = base.clone();
+            xb.mvm_sign_bits_acc(&bits, &mut got);
+            let mut want = base;
+            xb.mvm_acc(&x, &mut want);
+            assert_eq!(got, want, "bitplane kernel diverges from the ideal f32 path");
+        });
+    }
+
+    #[test]
+    fn sign_bit_mvm_rejects_non_ideal() {
+        let cfg = CrossbarConfig { wire_alpha: 0.1, ..Default::default() };
+        let mut rng = Xoshiro256::seed_from_u64(13);
+        let xb = Crossbar::program(&[1i8, -1], 2, 1, cfg, &mut rng);
+        let r = std::panic::catch_unwind(|| {
+            let mut out = vec![0.0f32; 1];
+            xb.mvm_sign_bits_acc(&[0b11u64], &mut out);
+        });
+        assert!(r.is_err(), "non-ideal crossbar must refuse the bit-sliced path");
+    }
+
+    /// The batched analog kernel must be bit-identical per image to the
+    /// per-row kernel — including reduction depths beyond one KC panel,
+    /// non-multiple-of-4 image counts, strided input rows, and widths on
+    /// both sides of the `n_out >= 64` threshold where the per-row path
+    /// dispatches to the i8 kernel (same values and accumulation order as
+    /// f32, so the equality must survive the dispatch).
+    #[test]
+    fn batched_mvm_is_bit_exact_vs_per_row() {
+        forall(25, |g| {
+            let n_in = g.usize_in(1, 600); // > KC exercises the panel loop
+            let n_out = g.usize_in(1, 96); // crosses the i8-kernel switch
+            let nimg = g.usize_in(1, 7);
+            let pad = g.usize_in(0, 3); // ldx > n_in: strided batch rows
+            let ldx = n_in + pad;
+            let w = g.vec_ternary(n_in * n_out);
+            let x = g.vec_f32(nimg * ldx, -2.0, 2.0);
+            let mut rng = Xoshiro256::seed_from_u64(17);
+            let xb = Crossbar::program(&w, n_in, n_out, CrossbarConfig::default(), &mut rng);
+            let mut got = vec![0.25f32; nimg * n_out];
+            let mut want = got.clone();
+            xb.mvm_batch_acc(&x, ldx, nimg, &mut got);
+            for i in 0..nimg {
+                xb.mvm_acc(
+                    &x[i * ldx..i * ldx + n_in],
+                    &mut want[i * n_out..(i + 1) * n_out],
+                );
+            }
+            assert_eq!(got, want, "batched kernel diverges from per-row mvm_acc");
+        });
+    }
+
+    /// Non-ideal crossbars take the per-row fallback inside the batched
+    /// entry point — offsets and IR drop accumulate exactly once per image.
+    #[test]
+    fn batched_mvm_matches_per_row_when_non_ideal() {
+        let cfg = CrossbarConfig { wire_alpha: 0.15, amp_offset_sigma: 0.2, ..Default::default() };
+        let mut rng = Xoshiro256::seed_from_u64(19);
+        let n_in = 40;
+        let n_out = 6;
+        let w: Vec<i8> = (0..n_in * n_out).map(|i| ((i % 3) as i8) - 1).collect();
+        let xb = Crossbar::program(&w, n_in, n_out, cfg, &mut rng);
+        assert!(!xb.is_ideal());
+        let x: Vec<f32> = (0..5 * n_in).map(|i| (i % 7) as f32 - 3.0).collect();
+        let mut got = vec![0.0f32; 5 * n_out];
+        let mut want = got.clone();
+        xb.mvm_batch_acc(&x, n_in, 5, &mut got);
+        for i in 0..5 {
+            xb.mvm_acc(&x[i * n_in..(i + 1) * n_in], &mut want[i * n_out..(i + 1) * n_out]);
+        }
+        assert_eq!(got, want);
     }
 
     #[test]

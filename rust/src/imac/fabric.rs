@@ -118,12 +118,94 @@ impl ImacLayer {
         }
     }
 
+    /// Whether every partition of this layer is an ideal crossbar — the
+    /// precondition for the bit-sliced and batched fast kernels.
+    pub fn is_ideal(&self) -> bool {
+        self.partitions.iter().all(|(_, xb)| xb.is_ideal())
+    }
+
+    /// Batched preact over `nimg` dense input rows (`nimg × n_in` →
+    /// `nimg × n_out`): each partition runs one cache-blocked
+    /// [`Crossbar::mvm_batch_acc`] across the whole batch instead of one
+    /// MVM per image. Bit-identical per image to [`ImacLayer::preact`]
+    /// (same per-image accumulation order; non-ideal partitions fall back
+    /// to the per-row kernel internally).
+    pub fn preact_batch(&self, x: &[f32], nimg: usize, out: &mut [f32]) {
+        assert_eq!(x.len(), nimg * self.n_in);
+        assert_eq!(out.len(), nimg * self.n_out);
+        if nimg == 0 {
+            return;
+        }
+        out.fill(0.0);
+        for (row, xb) in &self.partitions {
+            xb.mvm_batch_acc(&x[*row..], self.n_in, nimg, out);
+        }
+        for o in out.iter_mut() {
+            *o *= self.amp_gain;
+        }
+    }
+
+    /// Bit-sliced batched preact for strictly **±1** inputs (the bridge's
+    /// levels — valid for the first logical layer only) on an all-ideal
+    /// layer: per image and partition the input slice packs into the
+    /// `bits` sign bitmask ([`crate::quant::pack_sign_bitmask`], one
+    /// worker-scratch buffer, grown to the widest partition on first use)
+    /// and runs [`Crossbar::mvm_sign_bits_acc`] — the whole MVM becomes
+    /// popcounts, 64 rows per word, no multiplies. Exactly equal to
+    /// [`ImacLayer::preact`]: both paths compute the same integers, and
+    /// integers never round in f32 at these widths. Callers must fall back
+    /// to [`ImacLayer::preact_batch`] when `!self.is_ideal()`.
+    pub fn preact_sign_batch(
+        &self,
+        x: &[f32],
+        nimg: usize,
+        bits: &mut Vec<u64>,
+        out: &mut [f32],
+    ) {
+        assert!(self.is_ideal(), "bit-sliced preact requires an all-ideal layer");
+        assert_eq!(x.len(), nimg * self.n_in);
+        assert_eq!(out.len(), nimg * self.n_out);
+        if nimg == 0 {
+            return;
+        }
+        let max_words = self
+            .partitions
+            .iter()
+            .map(|(_, xb)| crate::quant::bitplane_words(xb.n_in))
+            .max()
+            .unwrap_or(0);
+        if bits.len() < max_words {
+            bits.resize(max_words, 0);
+        }
+        out.fill(0.0);
+        for (row, xb) in &self.partitions {
+            let words = crate::quant::bitplane_words(xb.n_in);
+            for i in 0..nimg {
+                let xs = &x[i * self.n_in + *row..i * self.n_in + *row + xb.n_in];
+                crate::quant::pack_sign_bitmask(xs, &mut bits[..words]);
+                let orow = &mut out[i * self.n_out..(i + 1) * self.n_out];
+                xb.mvm_sign_bits_acc(&bits[..words], orow);
+            }
+        }
+        for o in out.iter_mut() {
+            *o *= self.amp_gain;
+        }
+    }
+
+    /// Apply the per-column analog neurons to row-major `n_out`-wide rows
+    /// of preactivations in place.
+    pub fn neurons_in_place(&self, rows: &mut [f32]) {
+        for row in rows.chunks_exact_mut(self.n_out) {
+            for (o, n) in row.iter_mut().zip(&self.neurons) {
+                *o = n.transfer_f32(*o);
+            }
+        }
+    }
+
     /// Full analog forward: preact → sigmoid neurons.
     pub fn forward(&self, x: &[f32], out: &mut [f32]) {
         self.preact(x, out);
-        for (o, n) in out.iter_mut().zip(&self.neurons) {
-            *o = n.transfer_f32(*o);
-        }
+        self.neurons_in_place(out);
     }
 }
 
@@ -206,6 +288,8 @@ impl ImacFabric {
     /// through the `a`/`b` ping-pong buffers (grown on first use, reused
     /// thereafter) and returns the quantized output slice. Pass the
     /// `fc_a`/`fc_b` fields of one [`crate::nn::Scratch`] per worker.
+    /// The serving backends drive whole batches through the bit-identical
+    /// [`ImacFabric::forward_batch_into`] instead.
     pub fn forward_into<'s>(
         &self,
         x: &[f32],
@@ -232,6 +316,78 @@ impl ImacFabric {
             *v = self.adc.quantize(*v);
         }
         &cur[..width]
+    }
+
+    /// Whether the batch path executes the first logical layer with the
+    /// bit-sliced popcount kernel (all of its crossbars ideal) — surfaced
+    /// as the `imac_bitplane_images` serving metric.
+    pub fn uses_bitplane_path(&self) -> bool {
+        self.layers.first().is_some_and(|l| l.is_ideal())
+    }
+
+    /// Batch-at-a-time analog forward — the serving FC hot path. `x` holds
+    /// `nimg` dense rows of bridge sign levels (strictly ±1, `n_in` wide);
+    /// returns the `nimg × n_out` quantized score block.
+    ///
+    /// Layer 1 consumes the ±1 rows directly from `x` (no staging copy)
+    /// through the bit-sliced popcount kernel when ideal
+    /// ([`ImacLayer::preact_sign_batch`], `bits` = the worker's
+    /// `fc_bits` scratch); every later layer sees analog sigmoid outputs
+    /// and runs the cache-blocked batched MVM
+    /// ([`ImacLayer::preact_batch`], four images per weight-panel pass).
+    /// Results are **bit-identical** to per-row
+    /// [`ImacFabric::forward_into`] — both fast kernels preserve the
+    /// per-image accumulation order — so switching a backend between the
+    /// two paths can never change a served score. Zero steady-state
+    /// allocations: `bits`/`a`/`b` grow to the workload high-water mark
+    /// during warmup and are reused verbatim (pass one
+    /// [`crate::nn::Scratch`]'s `fc_bits`/`fc_a`/`fc_b` per worker).
+    pub fn forward_batch_into<'s>(
+        &self,
+        x: &[f32],
+        nimg: usize,
+        bits: &mut Vec<u64>,
+        a: &'s mut Vec<f32>,
+        b: &'s mut Vec<f32>,
+    ) -> &'s [f32] {
+        let n_in = self.n_in();
+        assert_eq!(x.len(), nimg * n_in, "batch input shape");
+        if self.layers.is_empty() {
+            if a.len() < x.len() {
+                a.resize(x.len(), 0.0);
+            }
+            a[..x.len()].copy_from_slice(x);
+            for v in a[..x.len()].iter_mut() {
+                *v = self.adc.quantize(*v);
+            }
+            return &a[..x.len()];
+        }
+        let mut cur: &mut Vec<f32> = a;
+        let mut nxt: &mut Vec<f32> = b;
+        let mut width = n_in;
+        for (li, layer) in self.layers.iter().enumerate() {
+            let out_len = nimg * layer.n_out;
+            if nxt.len() < out_len {
+                nxt.resize(out_len, 0.0);
+            }
+            let out = &mut nxt[..out_len];
+            if li == 0 {
+                if layer.is_ideal() {
+                    layer.preact_sign_batch(x, nimg, bits, out);
+                } else {
+                    layer.preact_batch(x, nimg, out);
+                }
+            } else {
+                layer.preact_batch(&cur[..nimg * width], nimg, out);
+            }
+            layer.neurons_in_place(out);
+            width = layer.n_out;
+            std::mem::swap(&mut cur, &mut nxt);
+        }
+        for v in cur[..nimg * width].iter_mut() {
+            *v = self.adc.quantize(*v);
+        }
+        &cur[..nimg * width]
     }
 
     /// Total IMAC latency in TPU cycles: one cycle per logical layer
@@ -352,6 +508,107 @@ mod tests {
             assert_eq!(first, want);
             assert_eq!(second, want);
             assert_eq!((a.capacity(), b.capacity()), (cap_a, cap_b));
+        });
+    }
+
+    /// Tentpole acceptance property: the bitplane popcount layer-1 path is
+    /// bit-exact vs the ideal f32 fabric path across random shapes AND
+    /// random partition splits (subarray_rows deliberately not a multiple
+    /// of 64, so partition bitmasks start mid-word).
+    #[test]
+    fn bitplane_layer1_bit_exact_vs_f32_path_across_partition_splits() {
+        forall(25, |g| {
+            let n_in = g.usize_in(1, 400);
+            let n_out = g.usize_in(1, 48);
+            let sub_rows = g.usize_in(1, 150);
+            let nimg = g.usize_in(1, 6);
+            let w = g.vec_ternary(n_in * n_out);
+            let cfg = ImacConfig { subarray_rows: sub_rows, subarray_cols: 32, ..ideal_cfg() };
+            let mut rng = Xoshiro256::seed_from_u64(23);
+            let layer = ImacLayer::map(&w, n_in, n_out, &cfg, &mut rng);
+            assert!(layer.is_ideal());
+            let x: Vec<f32> =
+                g.vec_sign(nimg * n_in).iter().map(|&s| s as f32).collect();
+            let mut want = vec![0.0f32; nimg * n_out];
+            for i in 0..nimg {
+                layer.preact(&x[i * n_in..(i + 1) * n_in], &mut want[i * n_out..(i + 1) * n_out]);
+            }
+            let mut bits = Vec::new();
+            let mut got = vec![0.0f32; nimg * n_out];
+            layer.preact_sign_batch(&x, nimg, &mut bits, &mut got);
+            assert_eq!(got, want, "bitplane layer-1 path diverges from the f32 fabric path");
+        });
+    }
+
+    /// The batched analog preact (later layers: arbitrary f32 inputs) is
+    /// bit-exact vs the per-row path, partition splits included and
+    /// widths crossing the per-row i8-kernel dispatch at `n_out >= 64`.
+    #[test]
+    fn batched_analog_preact_bit_exact_vs_per_row() {
+        forall(20, |g| {
+            let n_in = g.usize_in(1, 500);
+            let n_out = g.usize_in(1, 96);
+            let sub_rows = g.usize_in(1, 200);
+            let nimg = g.usize_in(1, 7);
+            let w = g.vec_ternary(n_in * n_out);
+            let cfg = ImacConfig { subarray_rows: sub_rows, subarray_cols: 64, ..ideal_cfg() };
+            let mut rng = Xoshiro256::seed_from_u64(29);
+            let layer = ImacLayer::map(&w, n_in, n_out, &cfg, &mut rng);
+            let x = g.vec_f32(nimg * n_in, 0.0, 1.0); // sigmoid-range inputs
+            let mut want = vec![0.0f32; nimg * n_out];
+            for i in 0..nimg {
+                layer.preact(&x[i * n_in..(i + 1) * n_in], &mut want[i * n_out..(i + 1) * n_out]);
+            }
+            let mut got = vec![0.0f32; nimg * n_out];
+            layer.preact_batch(&x, nimg, &mut got);
+            assert_eq!(got, want, "batched analog preact diverges from per-row");
+        });
+    }
+
+    /// End-to-end: the batch-at-a-time fabric forward (bitplane layer 1 +
+    /// batched analog chain + ADC) reproduces per-row `forward_into`
+    /// bit-for-bit, on ideal and non-ideal fabrics alike, and its scratch
+    /// buffers converge (no regrowth on a second pass).
+    #[test]
+    fn forward_batch_into_bit_exact_vs_per_row() {
+        forall(12, |g| {
+            let n_in = g.usize_in(1, 120);
+            let n_mid = g.usize_in(1, 70);
+            let n_out = g.usize_in(1, 12);
+            let nimg = g.usize_in(1, 6);
+            let noisy = g.bool();
+            let w1 = g.vec_ternary(n_in * n_mid);
+            let w2 = g.vec_ternary(n_mid * n_out);
+            let mut cfg = ImacConfig { subarray_rows: 80, ..ideal_cfg() };
+            if noisy {
+                cfg.crossbar.wire_alpha = 0.05;
+                cfg.crossbar.amp_offset_sigma = 0.01;
+            }
+            let fabric = ImacFabric::build(
+                &[(w1, n_in, n_mid), (w2, n_mid, n_out)],
+                &cfg,
+                AdcConfig::default(),
+                g.case as u64,
+            );
+            assert_eq!(fabric.uses_bitplane_path(), !noisy);
+            let x: Vec<f32> =
+                g.vec_sign(nimg * n_in).iter().map(|&s| s as f32).collect();
+            let (mut pa, mut pb) = (Vec::new(), Vec::new());
+            let mut want = Vec::new();
+            for row in x.chunks_exact(n_in) {
+                want.extend_from_slice(fabric.forward_into(row, &mut pa, &mut pb));
+            }
+            let (mut bits, mut a, mut b) = (Vec::new(), Vec::new(), Vec::new());
+            let got = fabric.forward_batch_into(&x, nimg, &mut bits, &mut a, &mut b).to_vec();
+            assert_eq!(got, want, "batched fabric path diverges from per-row forward_into");
+            let caps = (bits.capacity(), a.capacity(), b.capacity());
+            let again = fabric.forward_batch_into(&x, nimg, &mut bits, &mut a, &mut b).to_vec();
+            assert_eq!(again, want);
+            assert_eq!(
+                (bits.capacity(), a.capacity(), b.capacity()),
+                caps,
+                "batch scratch regrew at steady state"
+            );
         });
     }
 

@@ -23,6 +23,11 @@
 //!   optional multi-worker pool, metrics) — [`coordinator`];
 //! * report generators reproducing every table in the paper — [`report`].
 //!
+//! Top-level guides: `README.md` (repo map + CLI quickstart),
+//! `ARCHITECTURE.md` (the image→scores dataflow walkthrough, conv paths →
+//! sign bridge → IMAC analog chain → ADC), `EXPERIMENTS.md` (perf notes
+//! and the cross-PR benchmark workflow).
+//!
 //! ## The three conv execution paths
 //!
 //! The conv section (the part the paper maps to the TPU's systolic array)
@@ -63,6 +68,23 @@
 //! to exactly one precision. **Rule:** any change to conv numerics must
 //! update the oracle and the equivalence/bound property tests (or be
 //! oracle-only plus the tests).
+//!
+//! ## The FC hot path
+//!
+//! The FC section always executes in the ternary-analog
+//! [`imac::ImacFabric`], and the serving backends drive it
+//! **batch-at-a-time** ([`imac::ImacFabric::forward_batch_into`]): the
+//! first logical layer consumes the bridge's strictly-±1 inputs through a
+//! **bit-sliced popcount kernel** (sign bitmask × plus/minus ternary
+//! weight bitplanes derived from the packed 2-bit RRAM image —
+//! [`quant::ternary_bitplanes`]), and later (analog-input) layers run a
+//! cache-blocked batched MVM reusing [`nn::gemm`]'s blocking idioms. Both
+//! fast kernels are **bit-identical** to the per-row analog path
+//! (exact-integer layer 1; order-preserving batching elsewhere), and the
+//! whole section shares the conv plan's zero-allocation scratch arena.
+//! `metrics.imac_bitplane_images` counts images served through the
+//! bit-sliced layer-1 kernel. See `ARCHITECTURE.md` §3 and
+//! `EXPERIMENTS.md` §Bit-sliced FC.
 //!
 //! Python (JAX + Pallas) exists only on the build path (`python/compile`):
 //! it trains the mixed-precision models and AOT-lowers inference graphs to

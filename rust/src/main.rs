@@ -388,6 +388,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
             snap.scratch_bytes as f64 / 1024.0
         );
     }
+    if snap.imac_bitplane_images > 0 {
+        println!(
+            "IMAC bit-sliced FC path: {} images (layer-1 popcount bitplanes, batched analog chain)",
+            snap.imac_bitplane_images
+        );
+    }
     coord.shutdown();
     Ok(())
 }

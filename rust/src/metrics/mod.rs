@@ -38,6 +38,11 @@ pub struct Metrics {
     /// High-water scratch-arena footprint across workers (bytes); the
     /// steady-state working set of the zero-allocation hot path.
     pub scratch_bytes: AtomicU64,
+    /// Images whose FC section's first logical layer executed as the
+    /// bit-sliced popcount kernel (±1 input bitmask × ternary weight
+    /// bitplanes — ideal fabrics only; non-ideal deployments take the
+    /// analog per-row kernels and leave this at 0).
+    pub imac_bitplane_images: AtomicU64,
 }
 
 /// A read-only snapshot for reporting.
@@ -60,6 +65,7 @@ pub struct Snapshot {
     pub calibrated_images: u64,
     pub maxabs_scans: u64,
     pub scratch_bytes: u64,
+    pub imac_bitplane_images: u64,
 }
 
 impl Metrics {
@@ -110,6 +116,7 @@ impl Metrics {
             calibrated_images: self.calibrated_images.load(Ordering::Relaxed),
             maxabs_scans: self.maxabs_scans.load(Ordering::Relaxed),
             scratch_bytes: self.scratch_bytes.load(Ordering::Relaxed),
+            imac_bitplane_images: self.imac_bitplane_images.load(Ordering::Relaxed),
         }
     }
 }

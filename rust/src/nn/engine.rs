@@ -775,9 +775,10 @@ impl DeployedModel {
     }
 
     /// Hot-path full inference: image -> class scores through the GEMM conv
-    /// plan, in-place bridge, and the fabric's ping-pong buffers. The
-    /// returned slice lives in `scratch` — copy it out before the next call.
-    /// Zero allocations once warm.
+    /// plan, in-place bridge, and the fabric's batch path (bit-sliced
+    /// popcount layer 1 on ideal fabrics — bit-identical to the per-row
+    /// analog path). The returned slice lives in `scratch` — copy it out
+    /// before the next call. Zero allocations once warm.
     pub fn infer_into<'s>(&self, img: &Tensor, scratch: &'s mut Scratch) -> &'s [f32] {
         let Scratch {
             cols,
@@ -788,6 +789,7 @@ impl DeployedModel {
             act_b,
             fc_a,
             fc_b,
+            fc_bits,
             grow_events,
             maxabs_scans,
         } = scratch;
@@ -803,14 +805,17 @@ impl DeployedModel {
             maxabs_scans,
         );
         Self::bridge_in_place(feats);
-        self.fabric.forward_into(feats, fc_a, fc_b)
+        self.fabric.forward_batch_into(feats, 1, fc_bits, fc_a, fc_b)
     }
 
     /// Hot-path batched inference: conv runs as one im2col+GEMM over
-    /// `batch×patches` rows, then each image's features bridge and flow
-    /// through the analog fabric. `sink(i, scores)` is called once per
-    /// image in order. Zero allocations once warm (the sink decides what
-    /// to do with each score slice).
+    /// `batch×patches` rows, the bridge signs the whole feature block in
+    /// place, and the **FC section runs batch-at-a-time** through
+    /// [`ImacFabric::forward_batch_into`] — layer 1 via the bit-sliced
+    /// popcount kernel (ideal fabrics), later layers via the cache-blocked
+    /// batched analog MVM; bit-identical to the per-row path. `sink(i,
+    /// scores)` is called once per image in order. Zero allocations once
+    /// warm (the sink decides what to do with each score slice).
     pub fn infer_batch_into<F: FnMut(usize, &[f32])>(
         &self,
         images: &[&Tensor],
@@ -820,7 +825,6 @@ impl DeployedModel {
         if images.is_empty() {
             return;
         }
-        let flen = self.plan.feat_len();
         let Scratch {
             cols,
             cols_i8,
@@ -830,6 +834,7 @@ impl DeployedModel {
             act_b,
             fc_a,
             fc_b,
+            fc_bits,
             grow_events,
             maxabs_scans,
         } = scratch;
@@ -844,10 +849,20 @@ impl DeployedModel {
             grow_events,
             maxabs_scans,
         );
-        for (i, row) in feats.chunks_exact_mut(flen).enumerate() {
-            Self::bridge_in_place(row);
-            let scores = self.fabric.forward_into(row, fc_a, fc_b);
-            sink(i, scores);
+        Self::bridge_in_place(feats);
+        let scores = self.fabric.forward_batch_into(feats, images.len(), fc_bits, fc_a, fc_b);
+        // Row width from the block itself, not `fabric.n_out()`: a
+        // degenerate zero-layer fabric echoes the (quantized) input block,
+        // whose rows are `n_in` wide while `n_out()` reports 0.
+        let row_len = scores.len() / images.len();
+        if row_len == 0 {
+            for i in 0..images.len() {
+                sink(i, &[]);
+            }
+        } else {
+            for (i, row) in scores.chunks_exact(row_len).enumerate() {
+                sink(i, row);
+            }
         }
     }
 

@@ -22,6 +22,15 @@
 //!   against the oracle within the *derived* per-channel quantization
 //!   bound (no tuned epsilons).
 //!
+//! The FC section that follows the conv paths is always the ternary-analog
+//! [`crate::imac::ImacFabric`]; since the bit-sliced FC hot path landed,
+//! [`engine::DeployedModel::infer_into`] / `infer_batch_into` hand the
+//! whole bridged feature block to
+//! [`crate::imac::ImacFabric::forward_batch_into`] (popcount layer 1 on
+//! ideal fabrics, cache-blocked batched analog MVM after — bit-identical
+//! to the per-row fabric path). The full image→scores dataflow is walked
+//! through in `ARCHITECTURE.md`.
+//!
 //! Rule: any change to conv numerics must update the oracle **and** the
 //! equivalence/bound property tests — or be oracle-only plus the tests.
 //!

@@ -1,7 +1,9 @@
 //! Per-worker scratch arena for the zero-allocation inference hot path.
 //!
 //! One [`Scratch`] lives in each serving worker (or bench loop) and is
-//! threaded through the conv plan, the sign bridge, and the IMAC fabric.
+//! threaded through the conv plan, the sign bridge, and the IMAC fabric
+//! (whose batch path additionally stages per-partition ±1 sign bitmasks
+//! in [`Scratch::fc_bits`] for the bit-sliced layer-1 popcount kernel).
 //! Buffers grow monotonically to the high-water mark of the workload during
 //! warmup and are then reused verbatim: steady-state requests perform zero
 //! heap allocations inside the engine (proved by
@@ -32,6 +34,10 @@ pub struct Scratch {
     pub fc_a: Vec<f32>,
     /// IMAC fabric layer-chain pong buffer.
     pub fc_b: Vec<f32>,
+    /// Packed ±1 sign-bitmask staging for the bit-sliced IMAC layer-1
+    /// path (one `u64` word per 64 crossbar rows of the widest
+    /// partition; see `ImacLayer::preact_sign_batch`).
+    pub fc_bits: Vec<u64>,
     /// Number of times any buffer had to reallocate (warmup growth).
     pub grow_events: u64,
     /// Dynamic activation-range scans (one per image per int8 layer whose
@@ -65,6 +71,7 @@ impl Scratch {
             + self.fc_a.capacity()
             + self.fc_b.capacity()
             + self.acc_i32.capacity())
+            + 8 * self.fc_bits.capacity()
             + self.cols_i8.capacity()
             + self.act_i8.capacity()
     }

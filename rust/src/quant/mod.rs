@@ -173,6 +173,65 @@ pub fn pack_ternary(w: &[i8]) -> Vec<u8> {
     out
 }
 
+/// Bits per bitplane word (the popcount kernel's native lane width).
+pub const BITPLANE_WORD_BITS: usize = 64;
+
+/// Number of `u64` words one bitplane column needs for `n` rows.
+#[inline]
+pub fn bitplane_words(n: usize) -> usize {
+    n.div_ceil(BITPLANE_WORD_BITS)
+}
+
+/// Unpack a [`pack_ternary`] RRAM image (row-major `n_in × n_out`) into
+/// **column-major plus/minus bitplanes** for the bit-sliced MVM: for output
+/// column `j`, word `k` of `plus[j·W..(j+1)·W]` has bit `b` set iff
+/// `w[(k·64+b)·n_out + j] == +1` (and `minus` likewise for −1), with
+/// `W = bitplane_words(n_in)`. Padding bits above `n_in` stay zero, so a
+/// sign bitmask with arbitrary padding ANDs against them safely.
+///
+/// This is the weight transpose behind [`crate::imac::Crossbar`]'s
+/// layer-1 popcount kernel: a ±1 input vector packed by
+/// [`pack_sign_bitmask`] turns the whole MVM into
+/// `2·(popcount(x∧plus) − popcount(x∧minus)) − (n⁺ − n⁻)` per column —
+/// exact integer arithmetic at 64 rows per word.
+pub fn ternary_bitplanes(packed: &[u8], n_in: usize, n_out: usize) -> (Vec<u64>, Vec<u64>) {
+    assert!(n_in * n_out <= packed.len() * 4, "packed image too short for {n_in}x{n_out}");
+    let words = bitplane_words(n_in);
+    let mut plus = vec![0u64; n_out * words];
+    let mut minus = vec![0u64; n_out * words];
+    for i in 0..n_in {
+        let word = i / BITPLANE_WORD_BITS;
+        let bit = 1u64 << (i % BITPLANE_WORD_BITS);
+        for j in 0..n_out {
+            let idx = i * n_out + j;
+            match (packed[idx / 4] >> ((idx % 4) * 2)) & 0b11 {
+                0b00 => {}
+                0b01 => plus[j * words + word] |= bit,
+                0b10 => minus[j * words + word] |= bit,
+                code => panic!("invalid ternary code {code:#b}"),
+            }
+        }
+    }
+    (plus, minus)
+}
+
+/// Pack a strictly-±1 sign vector (the bridge's output levels) into a
+/// bitmask: bit `i` of word `i/64` set iff `x[i]` is +1 (the bridge maps
+/// `v ≥ 0 → +1`). Writes the first `bitplane_words(x.len())` words of
+/// `out` (padding bits cleared); zero allocations — the serving hot path
+/// reuses one scratch buffer per worker (`Scratch::fc_bits`).
+pub fn pack_sign_bitmask(x: &[f32], out: &mut [u64]) {
+    let words = bitplane_words(x.len());
+    assert!(out.len() >= words, "bitmask buffer too short");
+    out[..words].fill(0);
+    for (i, &v) in x.iter().enumerate() {
+        debug_assert!(v == 1.0 || v == -1.0, "non-sign input {v} at {i}");
+        if v > 0.0 {
+            out[i / BITPLANE_WORD_BITS] |= 1u64 << (i % BITPLANE_WORD_BITS);
+        }
+    }
+}
+
 /// Inverse of [`pack_ternary`].
 pub fn unpack_ternary(bytes: &[u8], n: usize) -> Vec<i8> {
     assert!(n <= bytes.len() * 4);
@@ -242,6 +301,55 @@ mod tests {
     #[test]
     fn signs_follow_bridge() {
         assert_eq!(binarize_signs(&[0.0, -0.0, 2.0, -2.0]), vec![1, 1, 1, -1]);
+    }
+
+    /// The bitplanes are an exact transposed view of the packed RRAM image:
+    /// each (row, col) lands in exactly one plane, at the right bit.
+    #[test]
+    fn bitplanes_transpose_packed_image() {
+        forall(40, |g| {
+            let n_in = g.usize_in(1, 150); // straddles the 64-bit word boundary
+            let n_out = g.usize_in(1, 20);
+            let w = g.vec_ternary(n_in * n_out);
+            let packed = pack_ternary(&w);
+            let (plus, minus) = ternary_bitplanes(&packed, n_in, n_out);
+            let words = bitplane_words(n_in);
+            assert_eq!(plus.len(), n_out * words);
+            assert_eq!(minus.len(), n_out * words);
+            for i in 0..n_in {
+                for j in 0..n_out {
+                    let p = (plus[j * words + i / 64] >> (i % 64)) & 1;
+                    let m = (minus[j * words + i / 64] >> (i % 64)) & 1;
+                    let want = w[i * n_out + j];
+                    assert_eq!((p, m), ((want == 1) as u64, (want == -1) as u64));
+                }
+            }
+            // Padding bits above n_in must stay clear in every column.
+            if n_in % 64 != 0 {
+                let mask = !0u64 << (n_in % 64);
+                for j in 0..n_out {
+                    assert_eq!(plus[j * words + words - 1] & mask, 0);
+                    assert_eq!(minus[j * words + words - 1] & mask, 0);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn sign_bitmask_round_trips() {
+        forall(40, |g| {
+            let n = g.usize_in(1, 200);
+            let x: Vec<f32> = g.vec_sign(n).iter().map(|&s| s as f32).collect();
+            let mut bits = vec![!0u64; bitplane_words(n)]; // dirty buffer
+            pack_sign_bitmask(&x, &mut bits);
+            for (i, &v) in x.iter().enumerate() {
+                let bit = (bits[i / 64] >> (i % 64)) & 1;
+                assert_eq!(bit == 1, v > 0.0, "bit {i}");
+            }
+            if n % 64 != 0 {
+                assert_eq!(bits[bitplane_words(n) - 1] & (!0u64 << (n % 64)), 0, "padding");
+            }
+        });
     }
 
     #[test]

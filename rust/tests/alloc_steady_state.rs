@@ -9,6 +9,13 @@
 //! scans (`Scratch::maxabs_scans` stays 0 — the scan is gone from the
 //! steady state, not merely cheap).
 //!
+//! Since the bit-sliced FC hot path landed, both `infer_into` and
+//! `infer_batch_into` drive the whole FC section batch-at-a-time through
+//! `ImacFabric::forward_batch_into` — layer-1 popcount bitplanes staged
+//! in `Scratch::fc_bits`, later layers through the cache-blocked batched
+//! analog MVM — so the zero-alloc budget below covers the batched FC
+//! path (and its sign-bitmask staging) across every deployment shape.
+//!
 //! This file contains exactly one test so no concurrent test thread can
 //! pollute the global allocation counter.
 
@@ -96,6 +103,10 @@ fn steady_state_inference_allocates_nothing() {
             model.infer_batch_into(&refs, &mut scratch, |_, scores| sum += scores[0]);
             let warm_grows = scratch.grow_events;
             assert!(warm_grows > 0, "warmup should have grown the arena");
+            assert!(
+                scratch.fc_bits.capacity() > 0,
+                "the bit-sliced FC path must have staged sign bitmasks during warmup"
+            );
             let warm_scans = scratch.maxabs_scans;
 
             // Steady state: count every heap allocation across

@@ -6,8 +6,8 @@ use std::time::Duration;
 
 use tpu_imac::coordinator::{Coordinator, CoordinatorConfig, NativeBackend, PjrtConvBackend};
 use tpu_imac::imac::{AdcConfig, ImacConfig};
-use tpu_imac::nn::synthetic::mobilenet_mini_weights_doc;
-use tpu_imac::nn::{DeployedModel, PrecisionPolicy, Tensor};
+use tpu_imac::nn::synthetic::{lenet_weights_doc, mobilenet_mini_weights_doc};
+use tpu_imac::nn::{DeployedModel, PrecisionPolicy, Scratch, Tensor};
 use tpu_imac::quant::{calibrate_conv_ops, CalibrationTable};
 use tpu_imac::runtime::Runtime;
 use tpu_imac::util::rng::Xoshiro256;
@@ -215,6 +215,102 @@ fn cross_precision_conformance_fp32_dynamic_calibrated() {
         "dynamic vs calibrated int8 agreement {}/{n}",
         agree(p8d, p8c)
     );
+}
+
+/// Batched-vs-per-row FC equivalence (the bit-sliced FC hot path's
+/// acceptance test): on one conv feature block, the batch-at-a-time fabric
+/// path — layer-1 popcount bitplanes + cache-blocked batched analog MVM +
+/// ADC — must reproduce the per-row `forward_into` chain **bit-for-bit**;
+/// and a coordinator serving the same images must account every one of
+/// them to `metrics.imac_bitplane_images` (the deployment's fabric is
+/// ideal). Self-contained: synthetic LeNet weights (256→120→84→10 FC head
+/// — a multi-layer chain with a >64-row bit-sliced first layer).
+#[test]
+fn batched_fc_path_bit_exact_vs_per_row_and_counted() {
+    let mut rng = Xoshiro256::seed_from_u64(83);
+    let doc = lenet_weights_doc(&mut rng);
+    let build = || {
+        DeployedModel::from_json_with(
+            &doc,
+            &ImacConfig::default(),
+            AdcConfig { bits: 0, full_scale: 1.0 },
+            0,
+            PrecisionPolicy::Fp32,
+        )
+        .unwrap()
+    };
+    let m = build();
+    assert!(m.fabric.uses_bitplane_path());
+    let n = 9usize; // not a multiple of the 4-image register block
+    let images: Vec<Tensor> = (0..n)
+        .map(|_| Tensor::from_vec(28, 28, 1, (0..784).map(|_| rng.next_f32() - 0.5).collect()))
+        .collect();
+    let refs: Vec<&Tensor> = images.iter().collect();
+
+    // One conv pass for the whole batch, then compare the two FC paths on
+    // the identical bridged feature block.
+    let mut s = Scratch::new();
+    let Scratch {
+        cols,
+        cols_i8,
+        act_i8,
+        acc_i32,
+        act_a,
+        act_b,
+        fc_a,
+        fc_b,
+        fc_bits,
+        grow_events,
+        maxabs_scans,
+    } = &mut s;
+    let feats = m.plan.run_parts(
+        &refs, cols, cols_i8, act_i8, acc_i32, act_a, act_b, grow_events, maxabs_scans,
+    );
+    DeployedModel::bridge_in_place(feats);
+    let flen = m.plan.feat_len();
+    let mut want = Vec::new();
+    for row in feats.chunks_exact(flen) {
+        want.extend_from_slice(m.fabric.forward_into(row, fc_a, fc_b));
+    }
+    let got = m.fabric.forward_batch_into(feats, n, fc_bits, fc_a, fc_b).to_vec();
+    assert_eq!(got, want, "batched FC path must be bit-exact vs the per-row fabric path");
+
+    // Serve the same images: predictions must match the per-image hot
+    // path, and the bit-sliced layer-1 accounting must cover every image.
+    let doc2 = doc.clone();
+    let coord = Coordinator::start(
+        CoordinatorConfig { max_batch: 4, ..Default::default() },
+        move || {
+            let m = DeployedModel::from_json_with(
+                &doc2,
+                &ImacConfig::default(),
+                AdcConfig { bits: 0, full_scale: 1.0 },
+                0,
+                PrecisionPolicy::Fp32,
+            )
+            .unwrap();
+            Box::new(NativeBackend::new(m))
+        },
+    );
+    let client = coord.client();
+    let rxs: Vec<_> = images.iter().map(|img| client.submit(img.clone()).unwrap().1).collect();
+    let served: Vec<usize> = rxs
+        .into_iter()
+        .map(|rx| rx.recv_timeout(Duration::from_secs(60)).unwrap().predicted)
+        .collect();
+    let mut s2 = Scratch::new();
+    for (img, &p) in images.iter().zip(&served) {
+        let want_p = tpu_imac::util::stats::argmax(m.infer_into(img, &mut s2));
+        assert_eq!(p, want_p, "served prediction diverges from the per-image hot path");
+    }
+    let snap = coord.metrics.snapshot();
+    assert_eq!(snap.completed, n as u64);
+    assert_eq!(
+        snap.imac_bitplane_images, n as u64,
+        "every served image must be accounted to the bit-sliced layer-1 path"
+    );
+    assert_eq!(snap.gemm_images, n as u64);
+    coord.shutdown();
 }
 
 #[test]
