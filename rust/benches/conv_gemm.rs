@@ -15,7 +15,9 @@
 //! traffic); the FC rows track the bit-sliced speedup (popcount layer 1 +
 //! 4-image-blocked analog MVM — see EXPERIMENTS.md §Bit-sliced FC).
 
-use tpu_imac::imac::{AdcConfig, ImacConfig};
+use std::sync::Arc;
+
+use tpu_imac::deploy::DeploymentSpec;
 use tpu_imac::nn::synthetic::{lenet_weights_doc, mobilenet_mini_weights_doc};
 use tpu_imac::nn::{DeployedModel, PrecisionPolicy, Scratch, Tensor};
 use tpu_imac::quant::{calibrate_conv_ops, CalibrationTable};
@@ -25,7 +27,7 @@ use tpu_imac::util::rng::Xoshiro256;
 
 const BATCH: usize = 8;
 
-fn load_model(doc: &Json, precision: PrecisionPolicy) -> DeployedModel {
+fn load_model(doc: &Json, precision: PrecisionPolicy) -> Arc<DeployedModel> {
     load_model_calibrated(doc, precision, None)
 }
 
@@ -33,32 +35,18 @@ fn load_model_calibrated(
     doc: &Json,
     precision: PrecisionPolicy,
     calib: Option<&CalibrationTable>,
-) -> DeployedModel {
-    DeployedModel::from_json_calibrated(
-        doc,
-        &ImacConfig::default(),
-        AdcConfig { bits: 0, full_scale: 1.0 },
-        0,
-        precision,
-        calib,
-    )
-    .expect("synthetic model")
+) -> Arc<DeployedModel> {
+    let mut spec = DeploymentSpec::doc("bench", doc.clone()).precision(precision);
+    if let Some(t) = calib {
+        spec = spec.calibration_table(t.clone());
+    }
+    spec.build().expect("synthetic model").model
 }
 
 /// Run the conv plan over the batch through a scratch arena (the hot path).
 fn run_plan(m: &DeployedModel, imgs: &[Tensor], s: &mut Scratch) -> u64 {
     let refs: Vec<&Tensor> = imgs.iter().collect();
-    let feats = m.plan.run_parts(
-        &refs,
-        &mut s.cols,
-        &mut s.cols_i8,
-        &mut s.act_i8,
-        &mut s.acc_i32,
-        &mut s.act_a,
-        &mut s.act_b,
-        &mut s.grow_events,
-        &mut s.maxabs_scans,
-    );
+    let feats = m.plan.run(&refs, &mut s.conv);
     feats[0].to_bits() as u64
 }
 
@@ -219,11 +207,11 @@ fn main() {
         let flen = fc_model.fabric.n_in();
         let mut want = Vec::new();
         for row in bridged.chunks_exact(flen) {
-            want.extend_from_slice(fc_model.fabric.forward_into(row, &mut s.fc_a, &mut s.fc_b));
+            want.extend_from_slice(fc_model.fabric.forward_into(row, &mut s.fc.a, &mut s.fc.b));
         }
         let got = fc_model
             .fabric
-            .forward_batch_into(&bridged, BATCH, &mut s.fc_bits, &mut s.fc_a, &mut s.fc_b)
+            .forward_batch_into(&bridged, BATCH, &mut s.fc.bits, &mut s.fc.a, &mut s.fc.b)
             .to_vec();
         assert_eq!(got, want, "FC paths diverge before benching");
         assert!(fc_model.fabric.uses_bitplane_path());
@@ -237,7 +225,7 @@ fn main() {
             let mut acc = 0u64;
             for row in block.chunks_exact(flen) {
                 acc = acc.wrapping_add(
-                    m.fabric.forward_into(row, &mut s.fc_a, &mut s.fc_b)[0].to_bits() as u64,
+                    m.fabric.forward_into(row, &mut s.fc.a, &mut s.fc.b)[0].to_bits() as u64,
                 );
             }
             acc
@@ -248,8 +236,9 @@ fn main() {
         let block = bridged.clone();
         let mut s = Scratch::new();
         suite.bench_throughput("FC fabric bit-sliced batched (batch 8)", BATCH as f64, move || {
+            let fc = &mut s.fc;
             let out =
-                m.fabric.forward_batch_into(&block, BATCH, &mut s.fc_bits, &mut s.fc_a, &mut s.fc_b);
+                m.fabric.forward_batch_into(&block, BATCH, &mut fc.bits, &mut fc.a, &mut fc.b);
             black_box(out[0].to_bits() as u64)
         });
     }
@@ -304,14 +293,14 @@ fn main() {
         let refs: Vec<&Tensor> = images.iter().collect();
         m.infer_batch_into(&refs, &mut s, |_, _| {});
         m.infer_batch_into(&refs, &mut s, |_, _| {});
-        let warm = s.grow_events;
+        let warm = s.grow_events();
         for _ in 0..100 {
             m.infer_batch_into(&refs, &mut s, |_, _| {});
         }
-        assert_eq!(s.grow_events, warm, "{label} scratch arena regrew at steady state");
+        assert_eq!(s.grow_events(), warm, "{label} scratch arena regrew at steady state");
         if calib.is_some() {
             assert_eq!(
-                s.maxabs_scans, 0,
+                s.maxabs_scans(), 0,
                 "{label}: calibrated plan must perform zero max-abs scans"
             );
         }
@@ -319,7 +308,7 @@ fn main() {
             "scratch arena [{label}]: {} KiB, {} grow events (all during warmup), zero steady-state growth, {} max-abs scans",
             s.bytes() / 1024,
             warm,
-            s.maxabs_scans
+            s.maxabs_scans()
         );
     }
 }

@@ -2,25 +2,47 @@
 //! IMAC fabric) on LeNet-class work. Uses trained weights when present,
 //! otherwise a synthetic LeNet-shaped model, so `cargo bench` works before
 //! `make train`.
+//!
+//! Two parts:
+//!
+//! 1. the historical max-batch sweep (plain prints, shapes unchanged);
+//! 2. a `BenchSuite` pair — single-model registry vs **multi-model
+//!    registry under mixed traffic** (2 deployments, distinct precisions,
+//!    alternating `submit_to`) — so the registry's routing overhead is a
+//!    tracked series: `cargo bench --bench e2e_serving -- --json
+//!    BENCH_hotpath.json` merges the suite into the same report the conv
+//!    bench writes (existing suite/row names untouched).
 
+use std::sync::Arc;
 use std::time::Instant;
 
-use tpu_imac::coordinator::{Coordinator, CoordinatorConfig, NativeBackend};
-use tpu_imac::imac::{AdcConfig, ImacConfig};
-use tpu_imac::nn::synthetic::lenet_weights_doc;
-use tpu_imac::nn::{DeployedModel, Tensor};
+use tpu_imac::coordinator::{Coordinator, CoordinatorConfig, ModelRegistry, NativeBackend};
+use tpu_imac::deploy::{Deployment, DeploymentSpec, SyntheticModel};
+use tpu_imac::nn::{PrecisionPolicy, Tensor};
+use tpu_imac::util::bench::BenchSuite;
 use tpu_imac::util::rng::Xoshiro256;
 
-fn load_model() -> DeployedModel {
-    let imac = ImacConfig::default();
-    let adc = AdcConfig { bits: 0, full_scale: 1.0 };
-    if let Ok(m) = DeployedModel::load("artifacts/weights_lenet.json", &imac, adc, 0) {
-        eprintln!("using trained weights");
-        return m;
+/// Trained weights when present *and loadable*, else the synthetic zoo
+/// LeNet (a truncated/corrupt artifact must not abort the bench). Built
+/// once; the `Arc`-shared model is cloned into every backend/registry.
+fn lenet_deployment() -> Deployment {
+    let trained = DeploymentSpec::json_file("lenet", "artifacts/weights_lenet.json");
+    match trained.build() {
+        Ok(dep) => {
+            eprintln!("using trained weights");
+            dep
+        }
+        Err(_) => {
+            eprintln!("no usable artifacts; using synthetic LeNet-shaped weights");
+            DeploymentSpec::synthetic("lenet", SyntheticModel::Lenet, 5)
+                .build()
+                .expect("synthetic lenet deployment")
+        }
     }
-    eprintln!("no artifacts; using synthetic LeNet-shaped weights");
-    let mut rng = Xoshiro256::seed_from_u64(5);
-    DeployedModel::from_json(&lenet_weights_doc(&mut rng), &imac, adc, 0).expect("synthetic")
+}
+
+fn rand_image(rng: &mut Xoshiro256) -> Tensor {
+    Tensor::from_vec(28, 28, 1, (0..784).map(|_| rng.next_f32()).collect())
 }
 
 fn main() {
@@ -28,19 +50,20 @@ fn main() {
         .ok()
         .map(|_| 64)
         .unwrap_or(512);
+    let lenet = lenet_deployment();
 
     for max_batch in [1usize, 8, 32] {
+        let model = lenet.model.clone();
         let coord = Coordinator::start(
             CoordinatorConfig { max_batch, ..Default::default() },
-            || Box::new(NativeBackend::new(load_model())),
+            move || Box::new(NativeBackend::new(model)),
         );
         let client = coord.client();
         let mut rng = Xoshiro256::seed_from_u64(7);
         let t0 = Instant::now();
         let mut rxs = Vec::with_capacity(n_requests);
         for _ in 0..n_requests {
-            let img = Tensor::from_vec(28, 28, 1, (0..784).map(|_| rng.next_f32()).collect());
-            rxs.push(client.submit(img).unwrap().1);
+            rxs.push(client.submit(rand_image(&mut rng)).unwrap().1);
         }
         for rx in rxs {
             rx.recv().unwrap();
@@ -58,4 +81,78 @@ fn main() {
         );
         coord.shutdown();
     }
+
+    // Registry routing overhead: one deployment with plain submits vs two
+    // deployments (fp32 LeNet + int8 dw-stack) under alternating tagged
+    // traffic. Both rows measure a full submit→recv round of `wave`
+    // requests through a live coordinator, so the delta is queue routing +
+    // per-model backend resolution, not model arithmetic alone.
+    let wave: usize = 32;
+    let mut suite = BenchSuite::new("e2e serving: registry routing (mixed traffic)");
+    {
+        let registry = Arc::new(ModelRegistry::new());
+        registry.register_built(lenet.clone()).expect("single registry");
+        let coord = Coordinator::start_registry(
+            CoordinatorConfig { max_batch: 8, ..Default::default() },
+            registry,
+        )
+        .expect("start single-model registry");
+        let client = coord.client();
+        let mut rng = Xoshiro256::seed_from_u64(11);
+        suite.bench_throughput("registry single-model (batch 8)", wave as f64, move || {
+            // coord lives in the closure so the pool survives all samples.
+            let _keepalive = &coord;
+            let rxs: Vec<_> = (0..wave)
+                .map(|_| client.submit(rand_image(&mut rng)).unwrap().1)
+                .collect();
+            rxs.into_iter().map(|rx| rx.recv().unwrap().predicted as u64).sum()
+        });
+    }
+    {
+        let registry = Arc::new(ModelRegistry::new());
+        registry.register_built(lenet.clone()).expect("two-model registry: lenet");
+        registry
+            .register(
+                &DeploymentSpec::synthetic("mm", SyntheticModel::MobilenetMini, 6)
+                    .precision(PrecisionPolicy::Int8),
+            )
+            .expect("two-model registry: mm");
+        let coord = Coordinator::start_registry(
+            CoordinatorConfig { max_batch: 8, ..Default::default() },
+            registry,
+        )
+        .expect("start multi-model registry");
+        let client = coord.client();
+        let mut rng = Xoshiro256::seed_from_u64(11);
+        suite.bench_throughput(
+            "registry multi-model mixed (2 deployments, batch 8)",
+            wave as f64,
+            move || {
+                let _keepalive = &coord;
+                let rxs: Vec<_> = (0..wave)
+                    .map(|i| {
+                        let name = if i % 2 == 0 { "lenet" } else { "mm" };
+                        client.submit_to(name, rand_image(&mut rng)).unwrap().1
+                    })
+                    .collect();
+                rxs.into_iter().map(|rx| rx.recv().unwrap().predicted as u64).sum()
+            },
+        );
+    }
+    let results = suite.run_cli();
+    let mean = |name: &str| {
+        results
+            .iter()
+            .find(|r| r.name == name)
+            .unwrap_or_else(|| panic!("bench row '{name}' missing"))
+            .mean_ns
+    };
+    let single = mean("registry single-model (batch 8)");
+    let multi = mean("registry multi-model mixed (2 deployments, batch 8)");
+    println!(
+        "registry routing: single {:.2} ms/wave vs mixed 2-model {:.2} ms/wave ({:.2}x)",
+        single / 1e6,
+        multi / 1e6,
+        multi / single
+    );
 }

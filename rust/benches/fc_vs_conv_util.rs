@@ -43,7 +43,9 @@ fn main() {
                 _ => {}
             }
         }
-        let pct = |s: f64, c: u64| if c == 0 { "-".into() } else { format!("{:.1}", 100.0 * s / c as f64) };
+        let pct = |s: f64, c: u64| {
+            if c == 0 { "-".into() } else { format!("{:.1}", 100.0 * s / c as f64) }
+        };
         t.row(vec![
             format!("{}/{}", model.name, model.dataset.label()),
             pct(cs, cc),

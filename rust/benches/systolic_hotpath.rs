@@ -31,8 +31,10 @@ fn main() {
 
     // Register-level stepper: 32x32 fold with K=64 = 65,536 MACs and
     // ~32*32*(32+32+64) PE-slot updates.
-    let a: Vec<Vec<f32>> = (0..32).map(|i| (0..64).map(|k| ((i * k) % 7) as f32).collect()).collect();
-    let b: Vec<Vec<f32>> = (0..64).map(|k| (0..32).map(|j| ((k + j) % 5) as f32).collect()).collect();
+    let a: Vec<Vec<f32>> =
+        (0..32).map(|i| (0..64).map(|k| ((i * k) % 7) as f32).collect()).collect();
+    let b: Vec<Vec<f32>> =
+        (0..64).map(|k| (0..32).map(|j| ((k + j) % 5) as f32).collect()).collect();
     let pe_slots = (32 * 32 * (32 + 32 + 64)) as f64;
     suite.bench_throughput("stepper 32x32 fold K=64 (PE-slots)", pe_slots, move || {
         let run = array::run_os_fold(&a, &b);

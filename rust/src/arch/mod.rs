@@ -91,8 +91,8 @@ mod tests {
 
     #[test]
     fn lenet_speedup_near_259() {
-        let e = evaluate(&crate::workload::zoo::lenet(), &ArrayConfig::default(), &SramConfig::default())
-            .unwrap();
+        let lenet = crate::workload::zoo::lenet();
+        let e = evaluate(&lenet, &ArrayConfig::default(), &SramConfig::default()).unwrap();
         // Paper: 2.59x. Our cycle model reproduces within ~15%.
         let s = e.speedup();
         assert!((2.2..3.0).contains(&s), "LeNet speedup {s}");

@@ -66,6 +66,44 @@ impl Args {
     pub fn has(&self, switch: &str) -> bool {
         self.switches.iter().any(|s| s == switch)
     }
+
+    /// Reject unknown/misspelled flags for a subcommand: every `--name`
+    /// (valued or switch) must appear in `known`, otherwise the error
+    /// names the nearest valid flag — `--presicion` no longer silently
+    /// falls back to a default.
+    pub fn validate(&self, known: &[&str]) -> Result<()> {
+        let switches = self.switches.iter().map(String::as_str);
+        for name in self.flags.keys().map(String::as_str).chain(switches) {
+            if known.contains(&name) {
+                continue;
+            }
+            let suggestion = known
+                .iter()
+                .map(|k| (edit_distance(name, k), *k))
+                .min()
+                .filter(|(d, _)| *d <= 3)
+                .map(|(_, k)| format!(" (did you mean --{k}?)"))
+                .unwrap_or_default();
+            bail!("unknown flag --{name} for '{}'{suggestion}", self.subcommand);
+        }
+        Ok(())
+    }
+}
+
+/// Levenshtein distance — powers the "did you mean" flag suggestions.
+fn edit_distance(a: &str, b: &str) -> usize {
+    let (a, b): (Vec<char>, Vec<char>) = (a.chars().collect(), b.chars().collect());
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, &ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
 }
 
 #[cfg(test)]
@@ -108,5 +146,29 @@ mod tests {
     fn bad_int_reported() {
         let a = parse("x --n abc");
         assert!(a.get_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn edit_distance_basics() {
+        assert_eq!(edit_distance("precision", "precision"), 0);
+        assert_eq!(edit_distance("presicion", "precision"), 2);
+        assert_eq!(edit_distance("", "abc"), 3);
+        assert_eq!(edit_distance("kitten", "sitting"), 3);
+    }
+
+    #[test]
+    fn validate_accepts_known_rejects_unknown_with_suggestion() {
+        let known = &["precision", "calibration", "workers", "native"];
+        parse("serve --precision int8 --native").validate(known).unwrap();
+        let err = parse("serve --presicion int8").validate(known).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("--presicion"), "{msg}");
+        assert!(msg.contains("did you mean --precision"), "{msg}");
+        // Misspelled switches are caught too, and flags with no close
+        // neighbour get no bogus suggestion.
+        let err = parse("serve --nativ").validate(known).unwrap_err();
+        assert!(format!("{err:#}").contains("did you mean --native"));
+        let err = parse("serve --frobnicate 3").validate(known).unwrap_err();
+        assert!(!format!("{err:#}").contains("did you mean"));
     }
 }

@@ -10,7 +10,14 @@
 //!              "adc_bits": 8},
 //!   "serve":  {"max_batch": 8, "max_queue": 1024, "batch_timeout_us": 2000,
 //!              "workers": 1, "precision": "fp32",
-//!              "calibration": "artifacts/calibration.json"}
+//!              "calibration": "artifacts/calibration.json",
+//!              "deployments": [
+//!                {"name": "lenet", "precision": "int8",
+//!                 "weights": "artifacts/weights_lenet.json",
+//!                 "calibration": "calibration.json"},
+//!                {"name": "mm", "synthetic": "mobilenet-mini", "seed": 5,
+//!                 "precision": "fp32"}
+//!              ]}
 //! }
 //! ```
 //!
@@ -21,6 +28,17 @@
 //! calibrate`) whose static activation scales int8 plans bake in at
 //! compile, removing the per-image max-abs scan from the hot path;
 //! `serve --calibration` overrides it.
+//!
+//! `serve.deployments` switches `tpu-imac serve` into multi-model registry
+//! mode: each entry becomes one [`crate::deploy::DeploymentSpec`] —
+//! `name` is required and doubles as the `submit_to` routing key; the
+//! weight source is `weights` (a trainer JSON path), or `synthetic`
+//! (a zoo name: `lenet`, `mobilenet-mini`, `mobilenetv1`, `mobilenetv2`,
+//! with optional `seed`), or — when neither is given — the name itself,
+//! resolved like `serve --models` (trained file first, then the zoo).
+//! Per-entry `precision`/`calibration` work exactly like their top-level
+//! counterparts. The CLI flag `serve --models
+//! lenet=int8:cal.json,mobilenetv1=fp32` overrides the whole array.
 //!
 //! Every field is optional; omitted fields keep their defaults. The CLI's
 //! `--config <path>` loads one of these; explicit CLI flags still win.
@@ -53,8 +71,33 @@ pub struct ServeDefaults {
     pub workers: usize,
     /// Conv-section arithmetic each worker's plan compiles to.
     pub precision: PrecisionPolicy,
+    /// Whether `serve.precision` was explicitly present in the config
+    /// file (so registry mode can notice — and say — when it ignores it).
+    pub precision_set: bool,
     /// Optional calibration-table path: int8 plans bake in its static
     /// activation scales (no per-image max-abs scan at request time).
+    pub calibration: Option<String>,
+    /// Multi-model registry deployments (`serve.deployments`). Non-empty
+    /// puts `tpu-imac serve` into registry mode; `serve --models`
+    /// overrides it.
+    pub deployments: Vec<ServeDeployment>,
+}
+
+/// One `serve.deployments` entry: the config-file mirror of a
+/// [`crate::deploy::DeploymentSpec`], resolved by the CLI.
+#[derive(Clone, Debug)]
+pub struct ServeDeployment {
+    /// Deployment name — the `submit_to` routing key.
+    pub name: String,
+    /// Weights JSON path; `None` = use `synthetic`, or resolve by name.
+    pub weights: Option<String>,
+    /// Synthetic zoo model name; `None` = use `weights`, or resolve by name.
+    pub synthetic: Option<String>,
+    /// Synthetic weight seed (only meaningful with a synthetic source).
+    pub seed: u64,
+    /// Conv-section arithmetic for this deployment.
+    pub precision: PrecisionPolicy,
+    /// Optional per-deployment calibration-table path (int8 only).
     pub calibration: Option<String>,
 }
 
@@ -66,7 +109,9 @@ impl Default for ServeDefaults {
             batch_timeout_us: 2000,
             workers: 1,
             precision: PrecisionPolicy::Fp32,
+            precision_set: false,
             calibration: None,
+            deployments: Vec::new(),
         }
     }
 }
@@ -181,9 +226,44 @@ impl Config {
             if let Some(s) = serve.get("precision").as_str() {
                 cfg.serve.precision = PrecisionPolicy::parse(s)
                     .with_context(|| format!("serve.precision must be fp32|int8, got {s}"))?;
+                cfg.serve.precision_set = true;
             }
             if let Some(p) = serve.get("calibration").as_str() {
                 cfg.serve.calibration = Some(p.to_string());
+            }
+            if let Some(entries) = serve.get("deployments").as_arr() {
+                for (i, entry) in entries.iter().enumerate() {
+                    let name = entry
+                        .get("name")
+                        .as_str()
+                        .with_context(|| format!("serve.deployments[{i}]: name required"))?
+                        .to_string();
+                    let precision = match entry.get("precision").as_str() {
+                        Some(s) => PrecisionPolicy::parse(s).with_context(|| {
+                            format!(
+                                "serve.deployments[{i}] ('{name}'): precision must be \
+                                 fp32|int8, got {s}"
+                            )
+                        })?,
+                        None => PrecisionPolicy::Fp32,
+                    };
+                    let weights = entry.get("weights").as_str().map(str::to_string);
+                    let synthetic = entry.get("synthetic").as_str().map(str::to_string);
+                    if weights.is_some() && synthetic.is_some() {
+                        bail!(
+                            "serve.deployments[{i}] ('{name}'): give weights OR synthetic, \
+                             not both"
+                        );
+                    }
+                    cfg.serve.deployments.push(ServeDeployment {
+                        name,
+                        weights,
+                        synthetic,
+                        seed: entry.get("seed").as_u64().unwrap_or(crate::deploy::SYNTHETIC_SEED),
+                        precision,
+                        calibration: entry.get("calibration").as_str().map(str::to_string),
+                    });
+                }
             }
         }
         Ok(cfg)
@@ -255,6 +335,50 @@ mod tests {
         .unwrap();
         assert_eq!(c.serve.calibration.as_deref(), Some("cal.json"));
         assert!(Config::default().serve.calibration.is_none());
+    }
+
+    #[test]
+    fn serve_deployments_array_parses_and_validates() {
+        let c = Config::from_json(
+            &Json::parse(
+                r#"{"serve": {"deployments": [
+                    {"name": "lenet", "precision": "int8",
+                     "weights": "artifacts/weights_lenet.json",
+                     "calibration": "cal.json"},
+                    {"name": "mm", "synthetic": "mobilenet-mini", "seed": 9}
+                ]}}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.serve.deployments.len(), 2);
+        let d0 = &c.serve.deployments[0];
+        assert_eq!(d0.name, "lenet");
+        assert_eq!(d0.precision, PrecisionPolicy::Int8);
+        assert_eq!(d0.weights.as_deref(), Some("artifacts/weights_lenet.json"));
+        assert_eq!(d0.calibration.as_deref(), Some("cal.json"));
+        let d1 = &c.serve.deployments[1];
+        assert_eq!((d1.synthetic.as_deref(), d1.seed), (Some("mobilenet-mini"), 9));
+        assert_eq!(d1.precision, PrecisionPolicy::Fp32);
+        assert!(Config::default().serve.deployments.is_empty());
+        // name required; weights XOR synthetic; precision validated.
+        assert!(Config::from_json(
+            &Json::parse(r#"{"serve": {"deployments": [{"precision": "int8"}]}}"#).unwrap()
+        )
+        .is_err());
+        assert!(Config::from_json(
+            &Json::parse(
+                r#"{"serve": {"deployments": [
+                    {"name": "x", "weights": "a.json", "synthetic": "lenet"}]}}"#
+            )
+            .unwrap()
+        )
+        .is_err());
+        assert!(Config::from_json(
+            &Json::parse(r#"{"serve": {"deployments": [{"name": "x", "precision": "fp64"}]}}"#)
+                .unwrap()
+        )
+        .is_err());
     }
 
     #[test]

@@ -13,22 +13,27 @@
 //! * [`NativeBackend`] — conv via the im2col+GEMM plan
 //!   ([`crate::nn::ConvPlan`]) with a per-worker scratch arena, zero
 //!   steady-state allocations. Always available, in either conv precision:
-//!   the worker's model carries its [`crate::nn::PrecisionPolicy`]
-//!   compiled into its plan at load — fp32 runs one GEMM over
-//!   `batch×patches` rows per layer; int8 runs the i8×i8→i32 kernels
-//!   (standard *and* depthwise) per image, with per-image dynamic
-//!   activation scales or — when the deployment ships a calibration table
-//!   (`serve --calibration`) — static scales that eliminate the max-abs
-//!   scan from the steady state (`metrics.maxabs_scans` stays 0). (The
-//!   scalar direct path in [`crate::nn::ops`] remains the numerics
-//!   oracle; the paths are property-tested equivalent/bounded.)
+//!   the backend's model (an `Arc` shared with its
+//!   [`crate::deploy::Deployment`] in registry mode) carries its
+//!   [`crate::nn::PrecisionPolicy`] compiled into its plan at build —
+//!   fp32 runs one GEMM over `batch×patches` rows per layer; int8 runs
+//!   the i8×i8→i32 kernels (standard *and* depthwise) per image, with
+//!   per-image dynamic activation scales or — when the deployment ships a
+//!   calibration table (`serve --calibration`) — static scales that
+//!   eliminate the max-abs scan from the steady state
+//!   (`metrics.maxabs_scans` stays 0). (The scalar direct path in
+//!   [`crate::nn::ops`] remains the numerics oracle; the paths are
+//!   property-tested equivalent/bounded.)
 //! * [`PjrtConvBackend`] — conv via the JAX-AOT-compiled PJRT executable
-//!   (`lenet_conv_b{B}.hlo.txt`), padded to the artifact batch size. The
-//!   production path when the `pjrt` feature (and artifact set) is
-//!   available; the FC section still finishes batch-at-a-time in the
-//!   analog fabric through the same scratch buffers.
+//!   (`lenet_conv_b{B}.hlo.txt`), padded to the artifact batch size with
+//!   the fixed-batch input staged in the scratch arena's pack buffer (no
+//!   per-chunk allocation). The production path when the `pjrt` feature
+//!   (and artifact set) is available; the FC section still finishes
+//!   batch-at-a-time in the analog fabric through the same scratch
+//!   buffers.
 
 use std::sync::atomic::Ordering;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
@@ -47,15 +52,19 @@ pub trait InferenceBackend {
     }
 }
 
-/// Pure-rust backend: batched GEMM conv plan + IMAC fabric.
+/// Pure-rust backend: batched GEMM conv plan + IMAC fabric. The model is
+/// `Arc`-shared (one compiled plan serves every worker); the scratch
+/// arena is this backend's own.
 pub struct NativeBackend {
-    pub model: DeployedModel,
+    pub model: Arc<DeployedModel>,
     scratch: Scratch,
 }
 
 impl NativeBackend {
-    pub fn new(model: DeployedModel) -> Self {
-        Self { model, scratch: Scratch::new() }
+    /// Accepts an owned [`DeployedModel`] or an already-shared
+    /// `Arc<DeployedModel>` (registry workers pass the deployment's Arc).
+    pub fn new(model: impl Into<Arc<DeployedModel>>) -> Self {
+        Self { model: model.into(), scratch: Scratch::new() }
     }
 
     /// Scratch arena footprint (bytes) — the steady-state working set.
@@ -70,39 +79,15 @@ impl InferenceBackend for NativeBackend {
             return Vec::new();
         }
         let model = &self.model;
-        let Scratch {
-            cols,
-            cols_i8,
-            act_i8,
-            acc_i32,
-            act_a,
-            act_b,
-            fc_a,
-            fc_b,
-            fc_bits,
-            grow_events,
-            maxabs_scans,
-        } = &mut self.scratch;
 
         // Conv section: fp32 plans run one im2col + GEMM over the whole
         // batch; int8 plans run a per-image quantize + i8 kernel loop
         // (per-image — or calibrated static — activation scales keep
         // results independent of batch composition).
         let t0 = Instant::now();
-        let scans0 = *maxabs_scans;
-        let feats = model.plan.run_parts(
-            images,
-            cols,
-            cols_i8,
-            act_i8,
-            acc_i32,
-            act_a,
-            act_b,
-            grow_events,
-            maxabs_scans,
-        );
+        let scans0 = self.scratch.conv.maxabs_scans;
+        let feats = model.plan.run(images, &mut self.scratch.conv);
         metrics.conv_us_total.fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
-        metrics.maxabs_scans.fetch_add(*maxabs_scans - scans0, Ordering::Relaxed);
 
         // Bridge + FC section, batch-at-a-time through the analog fabric:
         // layer 1 via the bit-sliced popcount kernel (ideal fabrics),
@@ -110,7 +95,9 @@ impl InferenceBackend for NativeBackend {
         // the old per-row loop.
         let t1 = Instant::now();
         DeployedModel::bridge_in_place(feats);
-        let scores = model.fabric.forward_batch_into(feats, images.len(), fc_bits, fc_a, fc_b);
+        let fc = &mut self.scratch.fc;
+        let n = images.len();
+        let scores = model.fabric.forward_batch_into(feats, n, &mut fc.bits, &mut fc.a, &mut fc.b);
         // Row width from the block itself (a zero-layer fabric echoes
         // `n_in`-wide rows while `n_out()` reports 0).
         let row_len = scores.len() / images.len();
@@ -124,6 +111,11 @@ impl InferenceBackend for NativeBackend {
             metrics.imac_bitplane_images.fetch_add(images.len() as u64, Ordering::Relaxed);
         }
 
+        // Counter deltas read once the conv arena's borrows have ended
+        // (`feats` lived in it until the fabric consumed it).
+        metrics
+            .maxabs_scans
+            .fetch_add(self.scratch.conv.maxabs_scans - scans0, Ordering::Relaxed);
         metrics.gemm_images.fetch_add(images.len() as u64, Ordering::Relaxed);
         if self.model.precision == crate::nn::PrecisionPolicy::Int8 {
             metrics.int8_images.fetch_add(images.len() as u64, Ordering::Relaxed);
@@ -144,14 +136,19 @@ pub struct PjrtConvBackend {
     batch: usize,
     in_elems: usize,
     out_elems: usize,
-    pub model: DeployedModel,
+    pub model: Arc<DeployedModel>,
     scratch: Scratch,
 }
 
 impl PjrtConvBackend {
     /// `artifact` e.g. "lenet_conv_b8.hlo.txt" (must exist in the runtime's
     /// manifest with input/output shapes).
-    pub fn new(mut runtime: Runtime, artifact: &str, model: DeployedModel) -> Result<Self> {
+    pub fn new(
+        mut runtime: Runtime,
+        artifact: &str,
+        model: impl Into<Arc<DeployedModel>>,
+    ) -> Result<Self> {
+        let model = model.into();
         let exe = runtime.load(artifact)?;
         let batch = exe.batch();
         let in_elems: usize = exe.input_shape.iter().skip(1).product();
@@ -174,20 +171,20 @@ impl PjrtConvBackend {
     }
 
     fn run_chunk(&mut self, chunk: &[&Tensor], metrics: &Metrics) -> Result<Vec<Vec<f32>>> {
-        // Pack images into the fixed-batch buffer (zero-pad the tail).
-        let mut buf = vec![0.0f32; self.batch * self.in_elems];
         for (i, img) in chunk.iter().enumerate() {
             anyhow::ensure!(
                 img.data.len() == self.in_elems,
-                "image elems {} != artifact {}",
+                "image {i} elems {} != artifact {}",
                 img.data.len(),
                 self.in_elems
             );
-            buf[i * self.in_elems..(i + 1) * self.in_elems].copy_from_slice(&img.data);
         }
+        // Stage the fixed-batch input in the scratch pack buffer
+        // (zero-padded tail) — no allocation once the arena is warm.
+        let buf = self.scratch.pack_images(chunk, self.batch, self.in_elems);
         let t0 = Instant::now();
         let exe = self.runtime.get(&self.artifact).context("artifact loaded")?;
-        let mut feats = exe.run_f32(&buf)?;
+        let mut feats = exe.run_f32(buf)?;
         anyhow::ensure!(
             feats.len() == self.batch * self.out_elems,
             "artifact returned {} elems, manifest says {}x{}",
@@ -200,10 +197,12 @@ impl PjrtConvBackend {
         // Bridge + FC section batch-at-a-time (live rows only — the
         // artifact's zero-padded tail never enters the fabric).
         let t1 = Instant::now();
-        let Scratch { fc_a, fc_b, fc_bits, .. } = &mut self.scratch;
+        let fc = &mut self.scratch.fc;
         let live = &mut feats[..chunk.len() * self.out_elems];
         DeployedModel::bridge_in_place(live);
-        let scores = self.model.fabric.forward_batch_into(live, chunk.len(), fc_bits, fc_a, fc_b);
+        let fabric = &self.model.fabric;
+        let n = chunk.len();
+        let scores = fabric.forward_batch_into(live, n, &mut fc.bits, &mut fc.a, &mut fc.b);
         let row_len = scores.len() / chunk.len();
         let out: Vec<Vec<f32>> = if row_len == 0 {
             vec![Vec::new(); chunk.len()]

@@ -2,26 +2,41 @@
 //!
 //! Requests enter a bounded queue; the batcher drains up to `max_batch`
 //! (or what arrived within `batch_timeout`), the backend executes the conv
-//! section (PJRT artifact or native rust ops — both FP32, standing in for
-//! the systolic array) and the FC section (the IMAC analog fabric), and
-//! responses flow back through per-request channels. Python is never
-//! involved: artifacts were compiled at build time.
+//! section (PJRT artifact or native rust ops) and the FC section (the IMAC
+//! analog fabric), and responses flow back through per-request channels.
+//! Python is never involved: artifacts were compiled at build time.
 //!
-//! Threading: each worker thread owns its backend exclusively — including
-//! its deployed model, whose conv plan is compiled per worker under the
-//! deployment's precision policy (`serve --precision fp32|int8`) together
-//! with its own scratch arena.
-//! [`Coordinator::start`] spawns one worker — the right shape for the PJRT
-//! backend (the executable is single-threaded `Rc` state) and for
-//! single-core hosts. [`Coordinator::start_pool`] spawns
+//! The coordinator runs in one of two shapes:
+//!
+//! * **Fixed backend** ([`Coordinator::start`] /
+//!   [`Coordinator::start_pool`]): every worker owns one
+//!   [`InferenceBackend`] built by a factory — the right shape for the
+//!   PJRT executable (single-threaded `Rc` state) and for custom backends
+//!   in tests. All requests route to that backend.
+//! * **Model registry** ([`Coordinator::start_registry`]): N named
+//!   deployments ([`crate::deploy::Deployment`]) served concurrently from
+//!   the same bounded queue. Each [`Request`] carries its deployment's
+//!   registry slot ([`Client::submit_to`] routes by name; plain
+//!   [`Client::submit`] keeps routing to the default deployment, slot 0);
+//!   batches are formed homogeneously per model, and each worker lazily
+//!   resolves a per-model [`NativeBackend`] — `Arc`-shared compiled plan,
+//!   worker-owned scratch arena — re-checking the registry generation at
+//!   every batch boundary so [`ModelRegistry::swap`] hot-reloads a
+//!   deployment without dropping in-flight requests.
+//!
+//! Threading: [`Coordinator::start`] spawns one worker;
+//! [`Coordinator::start_pool`] and [`Coordinator::start_registry`] spawn
 //! `config.workers` workers over the same bounded queue, each with its own
-//! backend + scratch arena from the factory — the native GEMM path scales
-//! across cores with no shared mutable state beyond the queue itself.
-//! Metrics are lock-cheap atomics shared by all workers.
+//! backend state — the native GEMM path scales across cores with no shared
+//! mutable state beyond the queue itself. Metrics are lock-cheap atomics
+//! shared by all workers, with per-deployment completed/latency breakdowns
+//! in registry mode.
 
 pub mod backend;
+pub mod registry;
 
 pub use backend::{InferenceBackend, NativeBackend, PjrtConvBackend};
+pub use registry::ModelRegistry;
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -30,7 +45,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::metrics::Metrics;
 use crate::nn::Tensor;
@@ -44,8 +59,9 @@ pub struct CoordinatorConfig {
     pub batch_timeout: Duration,
     /// Bounded queue depth (backpressure beyond this).
     pub max_queue: usize,
-    /// Worker threads for [`Coordinator::start_pool`] (each owns a backend
-    /// instance). [`Coordinator::start`] always uses exactly one.
+    /// Worker threads for [`Coordinator::start_pool`] /
+    /// [`Coordinator::start_registry`] (each owns its backend state).
+    /// [`Coordinator::start`] always uses exactly one.
     pub workers: usize,
 }
 
@@ -71,6 +87,9 @@ pub struct Response {
 
 struct Request {
     id: u64,
+    /// Registry slot of the deployment this request routes to (0 for a
+    /// fixed-backend coordinator, where every request takes one path).
+    slot: usize,
     image: Tensor,
     enqueued: Instant,
     resp: mpsc::Sender<Response>,
@@ -89,11 +108,33 @@ pub struct Client {
     metrics: Arc<Metrics>,
     next_id: Arc<AtomicU64>,
     max_queue: usize,
+    /// Present when the coordinator serves a [`ModelRegistry`]; resolves
+    /// `submit_to` names to queue slots at submit time, so an unknown
+    /// model id is a clean client-side error, never a worker panic.
+    registry: Option<Arc<ModelRegistry>>,
 }
 
 impl Client {
-    /// Submit one image; returns a receiver for the response.
+    /// Submit one image to the default deployment (registry slot 0, or the
+    /// fixed backend); returns a receiver for the response.
     pub fn submit(&self, image: Tensor) -> Result<(u64, mpsc::Receiver<Response>)> {
+        self.submit_slot(0, image)
+    }
+
+    /// Submit one image to the named deployment. Fails cleanly when the
+    /// name is unknown or the coordinator has no registry.
+    pub fn submit_to(&self, model: &str, image: Tensor) -> Result<(u64, mpsc::Receiver<Response>)> {
+        let registry = self
+            .registry
+            .as_ref()
+            .context("this coordinator serves a single fixed backend (no model registry)")?;
+        let slot = registry.slot(model).with_context(|| {
+            format!("unknown model '{model}' (registered: {})", registry.names().join(", "))
+        })?;
+        self.submit_slot(slot, image)
+    }
+
+    fn submit_slot(&self, slot: usize, image: Tensor) -> Result<(u64, mpsc::Receiver<Response>)> {
         let (tx, rx) = mpsc::channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         {
@@ -102,10 +143,18 @@ impl Client {
                 self.metrics.requests_rejected.fetch_add(1, Ordering::Relaxed);
                 bail!("queue full ({} requests)", q.len());
             }
-            q.push_back(Request { id, image, enqueued: Instant::now(), resp: tx });
+            q.push_back(Request { id, slot, image, enqueued: Instant::now(), resp: tx });
         }
         self.metrics.requests_enqueued.fetch_add(1, Ordering::Relaxed);
-        self.queue.cv.notify_one();
+        if self.registry.is_some() {
+            // Registry mode: a single notify could land on a worker parked
+            // in a *different* slot's top-up wait (which cannot take this
+            // request), leaving an idle worker asleep on its 50ms poll.
+            // Wake everyone; worker counts are small.
+            self.queue.cv.notify_all();
+        } else {
+            self.queue.cv.notify_one();
+        }
         Ok((id, rx))
     }
 
@@ -114,6 +163,29 @@ impl Client {
         let (_, rx) = self.submit(image)?;
         Ok(rx.recv()?)
     }
+
+    /// [`Client::infer_blocking`] routed to a named deployment.
+    pub fn infer_blocking_to(&self, model: &str, image: Tensor) -> Result<Response> {
+        let (_, rx) = self.submit_to(model, image)?;
+        Ok(rx.recv()?)
+    }
+}
+
+/// One worker's per-deployment backend, rebuilt when the registry
+/// generation moves (i.e. after a [`ModelRegistry::swap`]).
+struct SlotBackend {
+    generation: u64,
+    name: String,
+    backend: NativeBackend,
+}
+
+/// What a worker executes batches with.
+enum WorkerExec {
+    /// One fixed backend for every request (factory mode).
+    Single(Box<dyn InferenceBackend>),
+    /// Per-model native backends resolved from the registry at batch
+    /// boundaries, indexed by slot.
+    Registry { registry: Arc<ModelRegistry>, slots: Vec<Option<SlotBackend>> },
 }
 
 /// The running coordinator.
@@ -137,6 +209,7 @@ impl Coordinator {
             metrics: metrics.clone(),
             next_id: Arc::new(AtomicU64::new(0)),
             max_queue: config.max_queue,
+            registry: None,
         };
         (queue, metrics, client)
     }
@@ -154,8 +227,8 @@ impl Coordinator {
         let worker = std::thread::Builder::new()
             .name("tpu-imac-batcher".into())
             .spawn(move || {
-                let mut backend = make_backend();
-                Self::run_loop(config, &q2, &m2, backend.as_mut())
+                let mut exec = WorkerExec::Single(make_backend());
+                Self::run_loop(config, &q2, &m2, &mut exec)
             })
             .expect("spawn batcher");
         Self { client, queue, workers: vec![worker], metrics }
@@ -180,8 +253,8 @@ impl Coordinator {
                 std::thread::Builder::new()
                     .name(format!("tpu-imac-worker-{i}"))
                     .spawn(move || {
-                        let mut backend = (*f)();
-                        Self::run_loop(config, &q2, &m2, backend.as_mut())
+                        let mut exec = WorkerExec::Single((*f)());
+                        Self::run_loop(config, &q2, &m2, &mut exec)
                     })
                     .expect("spawn worker")
             })
@@ -189,19 +262,113 @@ impl Coordinator {
         Self { client, queue, workers, metrics }
     }
 
+    /// Start a multi-model pool: `config.workers` threads serve every
+    /// deployment in `registry` from one bounded queue. Batches are formed
+    /// per model; workers resolve per-model [`NativeBackend`]s lazily and
+    /// re-check the registry at each batch boundary, so
+    /// [`ModelRegistry::swap`] takes effect on the next batch without
+    /// dropping in-flight requests. Per-deployment completed/latency
+    /// metrics land in [`crate::metrics::Snapshot::models`].
+    pub fn start_registry(config: CoordinatorConfig, registry: Arc<ModelRegistry>) -> Result<Self> {
+        if registry.is_empty() {
+            bail!("model registry has no deployments");
+        }
+        let (queue, metrics, mut client) = Self::parts(&config);
+        client.registry = Some(registry.clone());
+        for (slot, name) in registry.names().iter().enumerate() {
+            metrics.register_model(slot, name);
+        }
+        let n = config.workers.max(1);
+        let workers = (0..n)
+            .map(|i| {
+                let q2 = queue.clone();
+                let m2 = metrics.clone();
+                let reg = registry.clone();
+                std::thread::Builder::new()
+                    .name(format!("tpu-imac-worker-{i}"))
+                    .spawn(move || {
+                        let mut exec =
+                            WorkerExec::Registry { registry: reg, slots: Vec::new() };
+                        Self::run_loop(config, &q2, &m2, &mut exec)
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        Ok(Self { client, queue, workers, metrics })
+    }
+
     pub fn client(&self) -> Client {
         self.client.clone()
+    }
+
+    /// Move queued requests for `slot` into `batch` (up to `max`),
+    /// preserving the arrival order of everything left behind. One full
+    /// rotation of the deque — O(len) moves, no element shifting, no
+    /// allocation — since this runs under the queue lock. Used once per
+    /// batch formation; condvar wakeups use [`Coordinator::drain_slot_tail`].
+    fn drain_slot(q: &mut VecDeque<Request>, slot: usize, batch: &mut Vec<Request>, max: usize) {
+        let mut rotated = false;
+        for _ in 0..q.len() {
+            // Until something is re-queued the remaining deque is
+            // untouched and in order, so a full batch can stop right here
+            // — the homogeneous common case (fixed-backend mode, or a
+            // single-model burst) costs O(max_batch), not O(queue).
+            // After the first push_back the rotation must complete to
+            // restore arrival order.
+            if batch.len() >= max && !rotated {
+                return;
+            }
+            let r = q.pop_front().expect("rotating within original length");
+            if batch.len() < max && r.slot == slot {
+                batch.push(r);
+            } else {
+                q.push_back(r);
+                rotated = true;
+            }
+        }
+    }
+
+    /// Top-up variant: entries before `start` are already known not to
+    /// match `slot`, so only newer arrivals are examined — a condvar
+    /// wakeup costs O(new requests), not O(queue). Removals happen near
+    /// the tail, where `VecDeque::remove` shifts few elements. Returns the
+    /// new known-clean prefix length. A concurrent worker's removals can
+    /// shift an unscanned entry below the watermark; such a request is
+    /// simply collected by the next batch-formation pass, never lost.
+    fn drain_slot_tail(
+        q: &mut VecDeque<Request>,
+        slot: usize,
+        batch: &mut Vec<Request>,
+        max: usize,
+        start: usize,
+    ) -> usize {
+        let mut i = start.min(q.len());
+        while batch.len() < max && i < q.len() {
+            if q[i].slot == slot {
+                batch.push(q.remove(i).expect("index in bounds"));
+            } else {
+                i += 1;
+            }
+        }
+        i
     }
 
     fn run_loop(
         config: CoordinatorConfig,
         queue: &Queue,
         metrics: &Metrics,
-        backend: &mut dyn InferenceBackend,
+        exec: &mut WorkerExec,
     ) {
         loop {
-            // Wait for at least one request (or shutdown).
+            // Wait for at least one request (or shutdown). The head
+            // request picks this batch's deployment slot; only same-slot
+            // requests join the batch (each deployment has its own
+            // compiled plan, so batches are homogeneous per model).
             let mut batch: Vec<Request> = Vec::with_capacity(config.max_batch);
+            let slot;
+            // Everything left queued after the initial drain is known not
+            // to match this slot; top-up wakeups only scan newer arrivals.
+            let mut clean;
             {
                 let mut q = queue.deque.lock().unwrap();
                 loop {
@@ -215,26 +382,20 @@ impl Coordinator {
                         queue.cv.wait_timeout(q, Duration::from_millis(50)).unwrap();
                     q = g;
                 }
-                // Drain immediately available requests.
-                while batch.len() < config.max_batch {
-                    match q.pop_front() {
-                        Some(r) => batch.push(r),
-                        None => break,
-                    }
-                }
+                slot = q.front().map(|r| r.slot).unwrap_or(0);
+                Self::drain_slot(&mut q, slot, &mut batch, config.max_batch);
+                clean = q.len();
             }
             // Brief top-up window to fill the batch: condvar-wait on the
             // remaining deadline instead of spinning (submitters notify).
+            // Only same-slot requests top up; others stay queued for the
+            // next batch (or another worker).
             if batch.len() < config.max_batch && config.batch_timeout > Duration::ZERO {
                 let deadline = Instant::now() + config.batch_timeout;
                 let mut q = queue.deque.lock().unwrap();
                 loop {
-                    while batch.len() < config.max_batch {
-                        match q.pop_front() {
-                            Some(r) => batch.push(r),
-                            None => break,
-                        }
-                    }
+                    clean =
+                        Self::drain_slot_tail(&mut q, slot, &mut batch, config.max_batch, clean);
                     if batch.len() >= config.max_batch
                         || queue.shutdown.load(Ordering::Acquire)
                     {
@@ -254,27 +415,64 @@ impl Coordinator {
                 batch.iter().map(|r| r.enqueued.elapsed().as_micros() as u64).sum();
             metrics.queue_us_total.fetch_add(queued_us, Ordering::Relaxed);
             let images: Vec<&Tensor> = batch.iter().map(|r| &r.image).collect();
-            let outputs = backend.infer_batch(&images, metrics);
+            let (outputs, cap) = match exec {
+                WorkerExec::Single(backend) => {
+                    let outputs = backend.infer_batch(&images, metrics);
+                    (outputs, backend.preferred_batch().unwrap_or(batch.len()))
+                }
+                WorkerExec::Registry { registry, slots } => {
+                    let Some((generation, dep)) = registry.resolve(slot) else {
+                        // Slots are never removed, so this is unreachable in
+                        // practice; dropping the batch closes the response
+                        // channels — a clean client-side error, not a panic.
+                        continue;
+                    };
+                    if slots.len() <= slot {
+                        slots.resize_with(slot + 1, || None);
+                    }
+                    let stale = slots[slot]
+                        .as_ref()
+                        .map(|sb| sb.generation != generation)
+                        .unwrap_or(true);
+                    if stale {
+                        // First batch for this model on this worker, or the
+                        // deployment was hot-swapped: point the backend at
+                        // the new Arc'd model (fresh scratch — shapes and
+                        // precision may have changed).
+                        slots[slot] = Some(SlotBackend {
+                            generation,
+                            name: dep.name.clone(),
+                            backend: NativeBackend::new(dep.model.clone()),
+                        });
+                    }
+                    let sb = slots[slot].as_mut().expect("slot backend just ensured");
+                    let outputs = sb.backend.infer_batch(&images, metrics);
+                    (outputs, batch.len())
+                }
+            };
             metrics.batches_executed.fetch_add(1, Ordering::Relaxed);
             metrics.batch_slots_used.fetch_add(batch.len() as u64, Ordering::Relaxed);
-            let cap = backend.preferred_batch().unwrap_or(batch.len());
             if cap > batch.len() {
                 metrics
                     .batch_slots_padded
                     .fetch_add((cap - batch.len()) as u64, Ordering::Relaxed);
             }
 
-            let mut lats = Vec::with_capacity(batch.len());
-            for (req, scores) in batch.into_iter().zip(outputs) {
-                let latency = req.enqueued.elapsed();
-                lats.push(latency);
+            // All counters — global *and* per-model — land before any
+            // response is sent: receivers may snapshot metrics the instant
+            // recv() returns.
+            let lats: Vec<Duration> = batch.iter().map(|r| r.enqueued.elapsed()).collect();
+            metrics.requests_completed.fetch_add(batch.len() as u64, Ordering::Relaxed);
+            metrics.record_latencies(&lats);
+            if let WorkerExec::Registry { slots, .. } = exec {
+                if let Some(sb) = slots.get(slot).and_then(|s| s.as_ref()) {
+                    metrics.record_model_batch(slot, &sb.name, &lats);
+                }
+            }
+            for ((req, scores), latency) in batch.into_iter().zip(outputs).zip(lats) {
                 let predicted = crate::util::stats::argmax(&scores);
-                // Count before sending: receivers may snapshot metrics the
-                // instant recv() returns.
-                metrics.requests_completed.fetch_add(1, Ordering::Relaxed);
                 let _ = req.resp.send(Response { id: req.id, scores, predicted, latency });
             }
-            metrics.record_latencies(&lats);
         }
     }
 
@@ -341,6 +539,18 @@ mod tests {
         let snap = coord.metrics.snapshot();
         assert_eq!(snap.completed, 10);
         assert!(snap.batches >= 3); // 10 requests / max_batch 4
+        coord.shutdown();
+    }
+
+    #[test]
+    fn submit_to_without_registry_is_a_clean_error() {
+        let coord = Coordinator::start(CoordinatorConfig::default(), || Box::new(FakeBackend));
+        let err = coord
+            .client()
+            .submit_to("lenet", Tensor::from_vec(1, 1, 1, vec![0.0]))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("no model registry"));
+        assert!(coord.metrics.snapshot().models.is_empty());
         coord.shutdown();
     }
 
@@ -449,5 +659,47 @@ mod tests {
             .unwrap();
         assert_eq!(resp.predicted, 1);
         coord.shutdown();
+    }
+
+    #[test]
+    fn drain_slot_is_order_preserving_and_selective() {
+        let mk = |id: u64, slot: usize| {
+            // These requests are only inspected, never answered, so the
+            // dropped receiver half is fine.
+            let (tx, _rx) = mpsc::channel();
+            Request {
+                id,
+                slot,
+                image: Tensor::from_vec(1, 1, 1, vec![0.0]),
+                enqueued: Instant::now(),
+                resp: tx,
+            }
+        };
+        let mut q: VecDeque<Request> =
+            [(0, 0), (1, 1), (2, 0), (3, 1), (4, 0)].iter().map(|&(i, s)| mk(i, s)).collect();
+        let mut batch = Vec::new();
+        Coordinator::drain_slot(&mut q, 0, &mut batch, 2);
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 2]);
+        assert_eq!(q.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 3, 4]);
+        Coordinator::drain_slot(&mut q, 1, &mut batch, 4);
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 2, 1, 3]);
+        assert_eq!(q.iter().map(|r| r.id).collect::<Vec<_>>(), vec![4]);
+
+        // Tail variant: entries before the watermark are trusted as
+        // non-matching (even if they would match — that is the contract),
+        // only newer arrivals are examined, and the returned watermark
+        // covers everything scanned.
+        q.push_back(mk(5, 1));
+        q.push_back(mk(6, 0));
+        q.push_back(mk(7, 1));
+        let mut batch = Vec::new();
+        let clean = Coordinator::drain_slot_tail(&mut q, 1, &mut batch, 8, 2);
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![7]);
+        assert_eq!(q.iter().map(|r| r.id).collect::<Vec<_>>(), vec![4, 5, 6]);
+        assert_eq!(clean, 3);
+        // A stale watermark past the end clamps instead of panicking.
+        let clean = Coordinator::drain_slot_tail(&mut q, 0, &mut batch, 8, 99);
+        assert_eq!(clean, 3);
+        assert_eq!(batch.len(), 1);
     }
 }

@@ -1,0 +1,190 @@
+//! Multi-model serving registry: N named deployments behind one bounded
+//! queue.
+//!
+//! A [`ModelRegistry`] maps deployment names to stable *slots* (the index
+//! a request carries through the queue) and holds each slot's current
+//! [`Deployment`] behind an `Arc` swap. Workers re-resolve their slot at
+//! every batch boundary: [`ModelRegistry::swap`] builds the replacement
+//! deployment *first* (a bad spec never disturbs the live entry), then
+//! atomically publishes it — in-flight batches finish on the `Arc` they
+//! already hold, and the next batch formed for that model picks up the new
+//! plan. Slots are never removed, so a request's routing decision can't
+//! dangle.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use anyhow::{bail, Context, Result};
+
+use crate::deploy::{Deployment, DeploymentSpec};
+
+struct Entry {
+    /// Registry key (fixed at registration; the spec's own name is not
+    /// consulted again on swap).
+    name: String,
+    current: RwLock<Arc<Deployment>>,
+    /// Bumped on every swap so workers can invalidate their cached
+    /// per-slot backends cheaply.
+    generation: AtomicU64,
+}
+
+/// Named deployments served concurrently from one coordinator queue.
+#[derive(Default)]
+pub struct ModelRegistry {
+    entries: RwLock<Vec<Entry>>,
+}
+
+impl ModelRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Build `spec` and register it under `spec.name()`. Returns the slot
+    /// index (slot 0 is the default deployment plain `submit` routes to).
+    pub fn register(&self, spec: &DeploymentSpec) -> Result<usize> {
+        self.register_built(spec.build()?)
+    }
+
+    /// Register an already-built deployment (callers that built it for
+    /// inspection first — e.g. the CLI's startup report — skip a rebuild).
+    pub fn register_built(&self, dep: Deployment) -> Result<usize> {
+        let dep = Arc::new(dep);
+        let mut entries = self.entries.write().unwrap();
+        if entries.iter().any(|e| e.name == dep.name) {
+            bail!("model '{}' is already registered", dep.name);
+        }
+        entries.push(Entry {
+            name: dep.name.clone(),
+            current: RwLock::new(dep),
+            generation: AtomicU64::new(1),
+        });
+        Ok(entries.len() - 1)
+    }
+
+    /// Convenience: a registry pre-loaded with `specs` in order.
+    pub fn with_specs(specs: &[DeploymentSpec]) -> Result<Arc<Self>> {
+        let registry = Arc::new(Self::new());
+        for spec in specs {
+            registry.register(spec)?;
+        }
+        Ok(registry)
+    }
+
+    /// Hot-reload the deployment registered as `name`: the replacement is
+    /// fully built from `spec` before the live entry is touched, then the
+    /// `Arc` is swapped and the slot's generation bumped. Workers observe
+    /// the swap at their next batch boundary; requests in flight complete
+    /// on the deployment they were batched with.
+    pub fn swap(&self, name: &str, spec: &DeploymentSpec) -> Result<()> {
+        // The deployment's own name is the routing key consumers see
+        // (logs, reports); letting it diverge from the registry entry
+        // would describe a model `submit_to` cannot reach.
+        if spec.name() != name {
+            bail!("swap: spec is named '{}' but targets registry entry '{name}'", spec.name());
+        }
+        let dep = Arc::new(spec.build()?);
+        let entries = self.entries.read().unwrap();
+        let entry = entries
+            .iter()
+            .find(|e| e.name == name)
+            .with_context(|| format!("swap: model '{name}' is not registered"))?;
+        *entry.current.write().unwrap() = dep;
+        entry.generation.fetch_add(1, Ordering::Release);
+        Ok(())
+    }
+
+    /// The slot index serving `name`, if registered.
+    pub fn slot(&self, name: &str) -> Option<usize> {
+        self.entries.read().unwrap().iter().position(|e| e.name == name)
+    }
+
+    /// The current deployment and generation for a slot. Workers compare
+    /// the generation against their cached backend to detect swaps.
+    pub fn resolve(&self, slot: usize) -> Option<(u64, Arc<Deployment>)> {
+        let entries = self.entries.read().unwrap();
+        let entry = entries.get(slot)?;
+        let generation = entry.generation.load(Ordering::Acquire);
+        Some((generation, entry.current.read().unwrap().clone()))
+    }
+
+    /// The current deployment registered as `name`.
+    pub fn deployment(&self, name: &str) -> Option<Arc<Deployment>> {
+        let slot = self.slot(name)?;
+        self.resolve(slot).map(|(_, dep)| dep)
+    }
+
+    /// Registered names, in slot order.
+    pub fn names(&self) -> Vec<String> {
+        self.entries.read().unwrap().iter().map(|e| e.name.clone()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.read().unwrap().is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::deploy::SyntheticModel;
+    use crate::nn::PrecisionPolicy;
+
+    #[test]
+    fn registers_resolves_and_rejects_duplicates() {
+        let reg = ModelRegistry::new();
+        let s0 = reg
+            .register(&DeploymentSpec::synthetic("lenet", SyntheticModel::Lenet, 1))
+            .unwrap();
+        let s1 = reg
+            .register(
+                &DeploymentSpec::synthetic("mm", SyntheticModel::MobilenetMini, 2)
+                    .precision(PrecisionPolicy::Int8),
+            )
+            .unwrap();
+        assert_eq!((s0, s1), (0, 1));
+        assert_eq!(reg.slot("lenet"), Some(0));
+        assert_eq!(reg.slot("mm"), Some(1));
+        assert_eq!(reg.slot("nope"), None);
+        assert_eq!(reg.names(), vec!["lenet".to_string(), "mm".to_string()]);
+        let (g, dep) = reg.resolve(1).unwrap();
+        assert_eq!(g, 1);
+        assert_eq!(dep.precision(), PrecisionPolicy::Int8);
+        assert!(reg
+            .register(&DeploymentSpec::synthetic("lenet", SyntheticModel::Lenet, 9))
+            .is_err());
+    }
+
+    #[test]
+    fn swap_bumps_generation_and_keeps_old_arcs_alive() {
+        let reg = ModelRegistry::new();
+        reg.register(&DeploymentSpec::synthetic("m", SyntheticModel::Lenet, 1)).unwrap();
+        let (g0, old) = reg.resolve(0).unwrap();
+        reg.swap(
+            "m",
+            &DeploymentSpec::synthetic("m", SyntheticModel::Lenet, 1)
+                .precision(PrecisionPolicy::Int8),
+        )
+        .unwrap();
+        let (g1, new) = reg.resolve(0).unwrap();
+        assert!(g1 > g0, "swap must bump the generation");
+        assert_eq!(new.precision(), PrecisionPolicy::Int8);
+        // The pre-swap deployment stays usable for in-flight work.
+        assert_eq!(old.precision(), PrecisionPolicy::Fp32);
+        assert!(old.model.plan.feat_len() > 0);
+        // Swapping an unknown name, a name-mismatched spec, or a broken
+        // replacement spec all fail without touching the live entry.
+        let nope = DeploymentSpec::synthetic("nope", SyntheticModel::Lenet, 1);
+        assert!(reg.swap("nope", &nope).is_err());
+        let mismatched = DeploymentSpec::synthetic("m2", SyntheticModel::Lenet, 1);
+        let err = reg.swap("m", &mismatched).unwrap_err();
+        assert!(format!("{err:#}").contains("targets registry entry"), "{err:#}");
+        assert!(reg.swap("m", &DeploymentSpec::json_file("m", "/nonexistent.json")).is_err());
+        let (g2, cur) = reg.resolve(0).unwrap();
+        assert_eq!(g2, g1);
+        assert_eq!(cur.precision(), PrecisionPolicy::Int8);
+    }
+}

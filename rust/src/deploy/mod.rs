@@ -1,0 +1,412 @@
+//! Deployment specification: the single front door for building servable
+//! models.
+//!
+//! A [`DeploymentSpec`] names a deployment and bundles everything that
+//! used to travel as positional arguments through the old
+//! `DeployedModel::load_calibrated` / `make_backend` call chains: the
+//! weight source (trained JSON file, parsed document, or a synthetic
+//! zoo model), the conv-section [`PrecisionPolicy`], an optional
+//! [`CalibrationTable`] (inline or by path), and the IMAC/ADC fabric
+//! configuration. `spec.build()` resolves all of it into an immutable
+//! [`Deployment`] whose model is `Arc`-shared — the unit the
+//! [`crate::coordinator::ModelRegistry`] registers, serves and
+//! hot-swaps.
+//!
+//! ```no_run
+//! use tpu_imac::deploy::DeploymentSpec;
+//! use tpu_imac::nn::PrecisionPolicy;
+//!
+//! # fn demo() -> anyhow::Result<()> {
+//! let dep = DeploymentSpec::json_file("lenet", "artifacts/weights_lenet.json")
+//!     .precision(PrecisionPolicy::Int8)
+//!     .calibration_file("calibration.json")
+//!     .build()?;
+//! assert_eq!(dep.name, "lenet");
+//! # Ok(())
+//! # }
+//! ```
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::imac::{AdcConfig, ImacConfig};
+use crate::nn::{synthetic, DeployedModel, PrecisionPolicy};
+use crate::quant::CalibrationTable;
+use crate::util::json::Json;
+use crate::util::rng::Xoshiro256;
+
+/// Where a deployment's weights come from.
+#[derive(Clone, Debug)]
+pub enum WeightSource {
+    /// A trainer-written weights JSON on disk (`artifacts/weights_*.json`).
+    JsonFile(String),
+    /// An already-parsed weights document (tests, benches, embedding).
+    Doc(Json),
+    /// A synthetic zoo model with deterministic random weights — serving
+    /// shapes without `make train` artifacts.
+    Synthetic(SyntheticModel, u64),
+}
+
+/// The synthetic weight zoo ([`crate::nn::synthetic`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SyntheticModel {
+    /// LeNet-shaped conv stack + 256→120→84→10 ternary FC head.
+    Lenet,
+    /// MobileNet-style mini depthwise stack + 32→10 ternary FC head.
+    MobilenetMini,
+}
+
+impl SyntheticModel {
+    /// Zoo name lookup. The MobileNet aliases map to the mini depthwise
+    /// stack — the full paper models need trained weight files.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "lenet" => Some(Self::Lenet),
+            "mobilenet-mini" | "mobilenetv1" | "mobilenetv2" => Some(Self::MobilenetMini),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::Lenet => "lenet",
+            Self::MobilenetMini => "mobilenet-mini",
+        }
+    }
+
+    /// Generate the synthetic weights document for this model.
+    pub fn doc(&self, seed: u64) -> Json {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        match self {
+            Self::Lenet => synthetic::lenet_weights_doc(&mut rng),
+            Self::MobilenetMini => synthetic::mobilenet_mini_weights_doc(&mut rng),
+        }
+    }
+}
+
+/// Where a deployment's int8 activation-scale table comes from.
+#[derive(Clone, Debug)]
+pub enum CalibrationSource {
+    /// A table JSON written by `tpu-imac calibrate`.
+    File(String),
+    /// An already-built table (tests, in-process calibration).
+    Table(CalibrationTable),
+}
+
+/// Builder for one named deployment. Start from [`DeploymentSpec::new`]
+/// (or the [`json_file`](DeploymentSpec::json_file) /
+/// [`doc`](DeploymentSpec::doc) / [`synthetic`](DeploymentSpec::synthetic)
+/// shorthands), chain the optional knobs, finish with
+/// [`build`](DeploymentSpec::build).
+#[derive(Clone, Debug)]
+pub struct DeploymentSpec {
+    name: String,
+    source: WeightSource,
+    precision: PrecisionPolicy,
+    calibration: Option<CalibrationSource>,
+    imac: ImacConfig,
+    adc: AdcConfig,
+    fabric_seed: u64,
+}
+
+impl DeploymentSpec {
+    /// A spec with the serving defaults: fp32, no calibration, ideal IMAC
+    /// fabric, ADC off (`bits: 0` — raw analog outputs), fabric seed 0.
+    pub fn new(name: impl Into<String>, source: WeightSource) -> Self {
+        Self {
+            name: name.into(),
+            source,
+            precision: PrecisionPolicy::Fp32,
+            calibration: None,
+            imac: ImacConfig::default(),
+            adc: AdcConfig { bits: 0, full_scale: 1.0 },
+            fabric_seed: 0,
+        }
+    }
+
+    /// Shorthand: weights from a trainer JSON file.
+    pub fn json_file(name: impl Into<String>, path: impl Into<String>) -> Self {
+        Self::new(name, WeightSource::JsonFile(path.into()))
+    }
+
+    /// Shorthand: weights from an already-parsed document.
+    pub fn doc(name: impl Into<String>, doc: Json) -> Self {
+        Self::new(name, WeightSource::Doc(doc))
+    }
+
+    /// Shorthand: synthetic zoo weights (deterministic for a given seed).
+    pub fn synthetic(name: impl Into<String>, model: SyntheticModel, seed: u64) -> Self {
+        Self::new(name, WeightSource::Synthetic(model, seed))
+    }
+
+    /// Conv-section arithmetic the plan compiles to.
+    pub fn precision(mut self, precision: PrecisionPolicy) -> Self {
+        self.precision = precision;
+        self
+    }
+
+    /// Static int8 activation scales from a `tpu-imac calibrate` table on
+    /// disk. Only valid with [`PrecisionPolicy::Int8`] — a non-int8 spec
+    /// carrying a table fails at [`DeploymentSpec::build`] (nothing would
+    /// quantize, and silently dropping it would mislead the operator).
+    pub fn calibration_file(mut self, path: impl Into<String>) -> Self {
+        self.calibration = Some(CalibrationSource::File(path.into()));
+        self
+    }
+
+    /// Static int8 activation scales from an in-memory table.
+    pub fn calibration_table(mut self, table: CalibrationTable) -> Self {
+        self.calibration = Some(CalibrationSource::Table(table));
+        self
+    }
+
+    /// IMAC fabric configuration (subarray geometry, non-idealities).
+    pub fn imac(mut self, imac: ImacConfig) -> Self {
+        self.imac = imac;
+        self
+    }
+
+    /// Terminal ADC configuration (`bits: 0` disables quantization).
+    pub fn adc(mut self, adc: AdcConfig) -> Self {
+        self.adc = adc;
+        self
+    }
+
+    /// Seed for the fabric's device-sampling RNG (non-ideal studies).
+    pub fn fabric_seed(mut self, seed: u64) -> Self {
+        self.fabric_seed = seed;
+        self
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn precision_policy(&self) -> PrecisionPolicy {
+        self.precision
+    }
+
+    /// Resolve the weight source and calibration table and compile the
+    /// deployment: weights loaded, plan prepacked in the spec's precision
+    /// (with calibrated static scales baked in when a table is supplied),
+    /// fabric programmed. Fails cleanly — a bad spec never panics a
+    /// serving worker, and [`crate::coordinator::ModelRegistry::swap`]
+    /// builds the replacement *before* touching the live entry.
+    pub fn build(&self) -> Result<Deployment> {
+        let owned_doc;
+        let doc: &Json = match &self.source {
+            WeightSource::JsonFile(path) => {
+                let text = std::fs::read_to_string(path)
+                    .with_context(|| format!("reading weights {path}"))?;
+                owned_doc =
+                    Json::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+                &owned_doc
+            }
+            WeightSource::Doc(d) => d,
+            WeightSource::Synthetic(model, seed) => {
+                owned_doc = model.doc(*seed);
+                &owned_doc
+            }
+        };
+        // A calibration source on a non-int8 spec is a configuration
+        // error: silently dropping it would leave the operator believing
+        // static scales are active. (The single-model CLI never attaches
+        // one under fp32 — it prints a notice and serves on.)
+        let calib: Option<CalibrationTable> = match &self.calibration {
+            Some(_) if self.precision != PrecisionPolicy::Int8 => bail!(
+                "deployment '{}': calibration table supplied but precision is {} — \
+                 nothing quantizes; drop the table or use int8",
+                self.name,
+                self.precision.label()
+            ),
+            Some(CalibrationSource::File(path)) => Some(CalibrationTable::load(path)?),
+            Some(CalibrationSource::Table(t)) => Some(t.clone()),
+            None => None,
+        };
+        let model = DeployedModel::from_doc(
+            doc,
+            &self.imac,
+            self.adc,
+            self.fabric_seed,
+            self.precision,
+            calib.as_ref(),
+        )
+        .with_context(|| format!("building deployment '{}'", self.name))?;
+        Ok(Deployment {
+            name: self.name.clone(),
+            calibration: calib,
+            model: Arc::new(model),
+        })
+    }
+}
+
+/// A built, immutable deployment: the unit the registry serves. The model
+/// is `Arc`-shared so every worker's backend points at one compiled plan
+/// and one programmed fabric; workers own only their scratch arenas.
+#[derive(Clone)]
+pub struct Deployment {
+    /// Deployment name (the routing key clients pass to `submit_to`).
+    pub name: String,
+    /// The resolved calibration table, if the spec shipped one (int8 only).
+    pub calibration: Option<CalibrationTable>,
+    /// The compiled model: conv plan + sign bridge + IMAC fabric.
+    pub model: Arc<DeployedModel>,
+}
+
+impl Deployment {
+    /// The conv-section arithmetic this deployment serves with.
+    pub fn precision(&self) -> PrecisionPolicy {
+        self.model.precision
+    }
+}
+
+/// Resolve a bare model name to a weight source: the trained
+/// `{artifacts}/weights_{name}.json` when present, else the synthetic zoo
+/// (`lenet`, `mobilenet-mini`, `mobilenetv1`, `mobilenetv2`).
+pub fn resolve_named_spec(name: &str, artifacts: &str) -> Result<DeploymentSpec> {
+    let path = format!("{artifacts}/weights_{name}.json");
+    if std::path::Path::new(&path).exists() {
+        return Ok(DeploymentSpec::json_file(name, path));
+    }
+    match SyntheticModel::parse(name) {
+        Some(model) => Ok(DeploymentSpec::synthetic(name, model, SYNTHETIC_SEED)),
+        None => bail!(
+            "model '{name}': no weights file at {path} and not a synthetic zoo model \
+             (lenet, mobilenet-mini, mobilenetv1, mobilenetv2)"
+        ),
+    }
+}
+
+/// Default seed for synthetic zoo weights resolved by name (matches the
+/// serving benches, so CLI runs and bench numbers describe one model).
+pub const SYNTHETIC_SEED: u64 = 5;
+
+/// Parse the `serve --models` grammar into specs:
+/// `name[=precision[:calibration.json]]`, comma-separated — e.g.
+/// `lenet=int8:cal.json,mobilenetv1=fp32`. Names resolve through
+/// [`resolve_named_spec`].
+pub fn parse_models_flag(s: &str, artifacts: &str) -> Result<Vec<DeploymentSpec>> {
+    let mut specs = Vec::new();
+    for part in s.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            bail!("--models: empty deployment entry in '{s}'");
+        }
+        // `name` alone defaults to fp32; a present-but-empty precision
+        // (`name=` — e.g. an unset shell variable) is an error, not a
+        // silent fp32: it is exactly the typo class this grammar rejects.
+        let (name, rest) = match part.split_once('=') {
+            Some((n, r)) => (n, Some(r)),
+            None => (part, None),
+        };
+        let (precision, calib) = match rest {
+            None => (PrecisionPolicy::Fp32, None),
+            Some(r) => {
+                let (prec_s, calib) = match r.split_once(':') {
+                    Some((p, c)) => (p, Some(c)),
+                    None => (r, None),
+                };
+                let precision = PrecisionPolicy::parse(prec_s).with_context(|| {
+                    format!(
+                        "--models entry '{part}': precision must be fp32|int8, got '{prec_s}'"
+                    )
+                })?;
+                (precision, calib)
+            }
+        };
+        let mut spec = resolve_named_spec(name, artifacts)?.precision(precision);
+        if let Some(c) = calib {
+            if c.is_empty() {
+                bail!("--models entry '{part}': empty calibration path");
+            }
+            spec = spec.calibration_file(c);
+        }
+        specs.push(spec);
+    }
+    if specs.is_empty() {
+        bail!("--models: no deployments in '{s}'");
+    }
+    Ok(specs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_specs_build_and_are_deterministic() {
+        let a = DeploymentSpec::synthetic("m", SyntheticModel::Lenet, 7).build().unwrap();
+        let b = DeploymentSpec::synthetic("m", SyntheticModel::Lenet, 7).build().unwrap();
+        assert_eq!(a.name, "m");
+        assert_eq!(a.precision(), PrecisionPolicy::Fp32);
+        assert_eq!(a.model.plan.feat_len(), b.model.plan.feat_len());
+        let img = crate::nn::Tensor::from_vec(28, 28, 1, vec![0.3; 784]);
+        assert_eq!(a.model.infer(&img), b.model.infer(&img), "same seed, same weights");
+    }
+
+    #[test]
+    fn int8_spec_with_inline_table_builds_calibrated() {
+        let doc = SyntheticModel::MobilenetMini.doc(3);
+        let oracle = DeploymentSpec::doc("mm", doc.clone()).build().unwrap();
+        let samples: Vec<crate::nn::Tensor> = (0..4)
+            .map(|i| crate::nn::Tensor::from_vec(28, 28, 1, vec![0.1 * i as f32; 784]))
+            .collect();
+        let table =
+            crate::quant::calibrate_conv_ops(&oracle.model.conv_ops, &samples, 100.0).unwrap();
+        let dep = DeploymentSpec::doc("mm", doc)
+            .precision(PrecisionPolicy::Int8)
+            .calibration_table(table)
+            .build()
+            .unwrap();
+        assert_eq!(dep.precision(), PrecisionPolicy::Int8);
+        assert!(dep.model.plan.is_calibrated());
+        assert!(dep.calibration.is_some());
+    }
+
+    #[test]
+    fn fp32_spec_with_calibration_is_rejected() {
+        // Nothing quantizes under fp32, so an attached table is a config
+        // error — rejected at build (before the file is even read), not
+        // silently dropped.
+        let err = DeploymentSpec::synthetic("l", SyntheticModel::Lenet, 1)
+            .calibration_file("/nonexistent/cal.json")
+            .build()
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("nothing quantizes"), "{msg}");
+        // The same spec without the table builds fine.
+        let dep = DeploymentSpec::synthetic("l", SyntheticModel::Lenet, 1).build().unwrap();
+        assert!(!dep.model.plan.is_calibrated());
+    }
+
+    #[test]
+    fn missing_weights_file_fails_cleanly() {
+        let err = DeploymentSpec::json_file("x", "/nonexistent/weights.json")
+            .build()
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("weights"));
+    }
+
+    #[test]
+    fn models_flag_grammar_parses() {
+        let specs =
+            parse_models_flag("lenet=int8:cal.json,mobilenetv1=fp32", "/nonexistent").unwrap();
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs[0].name(), "lenet");
+        assert_eq!(specs[0].precision_policy(), PrecisionPolicy::Int8);
+        assert_eq!(specs[1].name(), "mobilenetv1");
+        assert_eq!(specs[1].precision_policy(), PrecisionPolicy::Fp32);
+        // Bare name defaults to fp32; unknown precision and unknown names
+        // error with context instead of being silently ignored.
+        assert_eq!(
+            parse_models_flag("lenet", "/nonexistent").unwrap()[0].precision_policy(),
+            PrecisionPolicy::Fp32
+        );
+        assert!(parse_models_flag("lenet=int9", "/nonexistent").is_err());
+        assert!(parse_models_flag("lenet=", "/nonexistent").is_err(), "empty precision");
+        assert!(parse_models_flag("lenet=int8:", "/nonexistent").is_err(), "empty calibration");
+        assert!(parse_models_flag("resnet50", "/nonexistent").is_err());
+        assert!(parse_models_flag("", "/nonexistent").is_err());
+    }
+}

@@ -287,7 +287,7 @@ impl ImacFabric {
     /// Zero-steady-state-allocation forward: chains every logical layer
     /// through the `a`/`b` ping-pong buffers (grown on first use, reused
     /// thereafter) and returns the quantized output slice. Pass the
-    /// `fc_a`/`fc_b` fields of one [`crate::nn::Scratch`] per worker.
+    /// `a`/`b` fields of one [`crate::nn::FcScratch`] per worker.
     /// The serving backends drive whole batches through the bit-identical
     /// [`ImacFabric::forward_batch_into`] instead.
     pub fn forward_into<'s>(
@@ -332,7 +332,7 @@ impl ImacFabric {
     /// Layer 1 consumes the ±1 rows directly from `x` (no staging copy)
     /// through the bit-sliced popcount kernel when ideal
     /// ([`ImacLayer::preact_sign_batch`], `bits` = the worker's
-    /// `fc_bits` scratch); every later layer sees analog sigmoid outputs
+    /// `FcScratch::bits` staging); every later layer sees analog sigmoid outputs
     /// and runs the cache-blocked batched MVM
     /// ([`ImacLayer::preact_batch`], four images per weight-panel pass).
     /// Results are **bit-identical** to per-row
@@ -341,7 +341,7 @@ impl ImacFabric {
     /// two paths can never change a served score. Zero steady-state
     /// allocations: `bits`/`a`/`b` grow to the workload high-water mark
     /// during warmup and are reused verbatim (pass one
-    /// [`crate::nn::Scratch`]'s `fc_bits`/`fc_a`/`fc_b` per worker).
+    /// [`crate::nn::FcScratch`]'s `bits`/`a`/`b` per worker).
     pub fn forward_batch_into<'s>(
         &self,
         x: &[f32],

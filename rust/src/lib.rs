@@ -19,8 +19,14 @@
 //!   [`runtime`] (feature-gated: the default build ships a manifest-only
 //!   stub and serves natively; enable `pjrt` with a vendored `xla` crate
 //!   for the FFI path);
+//! * a **deployment layer**: the [`deploy::DeploymentSpec`] builder
+//!   resolves a named model (weights file, parsed doc, or synthetic zoo)
+//!   plus precision/calibration/fabric config into an immutable
+//!   [`deploy::Deployment`] — [`deploy`];
 //! * a threaded **serving coordinator** (batching, routing, backpressure,
-//!   optional multi-worker pool, metrics) — [`coordinator`];
+//!   optional multi-worker pool, a multi-model
+//!   [`coordinator::ModelRegistry`] with hot swap, per-model metrics) —
+//!   [`coordinator`];
 //! * report generators reproducing every table in the paper — [`report`].
 //!
 //! Top-level guides: `README.md` (repo map + CLI quickstart),
@@ -91,13 +97,9 @@
 //! the HLO text artifacts the rust runtime executes. Nothing Python runs at
 //! request time.
 
-// Kernel entry points (im2col, blocked GEMMs, conv plans) thread many
-// scalar dims; bundling them into structs would obscure the hot-path
-// signatures, so keep clippy's argument-count lint advisory crate-wide.
-#![allow(clippy::too_many_arguments)]
-
 pub mod arch;
 pub mod coordinator;
+pub mod deploy;
 pub mod metrics;
 pub mod nn;
 pub mod quant;

@@ -10,19 +10,36 @@
 //! * `imac-study`— IMAC non-ideality sweep (device variation, IR drop).
 //! * `spec`      — print the resolved architecture configuration.
 
+use std::sync::Arc;
+
 use anyhow::{bail, Context, Result};
 
 use tpu_imac::arch::{self, Mode};
 use tpu_imac::cli::Args;
-use tpu_imac::coordinator::{Coordinator, NativeBackend, PjrtConvBackend};
-use tpu_imac::imac::{AdcConfig, DeviceConfig, ImacConfig};
-use tpu_imac::nn::{DeployedModel, PrecisionPolicy, Tensor};
-use tpu_imac::quant::CalibrationTable;
+use tpu_imac::config::ServeDeployment;
+use tpu_imac::coordinator::{
+    Coordinator, CoordinatorConfig, ModelRegistry, NativeBackend, PjrtConvBackend,
+};
+use tpu_imac::deploy::{self, Deployment, DeploymentSpec, SyntheticModel};
+use tpu_imac::imac::{DeviceConfig, ImacConfig};
+use tpu_imac::metrics::Snapshot;
+use tpu_imac::nn::{PrecisionPolicy, Tensor};
 use tpu_imac::report::{self, AccuracyTable};
 use tpu_imac::runtime::Runtime;
 use tpu_imac::systolic::{self, ArrayConfig, Dataflow, FoldOverlap, Schedule, SramConfig};
 use tpu_imac::util::table::{Align, Table};
 use tpu_imac::workload::{zoo, Dataset};
+
+/// Flags every subcommand that resolves a full config accepts
+/// ([`full_config`]: `--config` plus the array overrides).
+const CONFIG_FLAGS: &[&str] = &["config", "dataflow", "rows", "cols", "conservative"];
+
+/// `CONFIG_FLAGS` + subcommand-specific flags, for [`Args::validate`].
+fn with_config_flags(extra: &[&'static str]) -> Vec<&'static str> {
+    let mut known: Vec<&'static str> = CONFIG_FLAGS.to_vec();
+    known.extend_from_slice(extra);
+    known
+}
 
 fn main() {
     let args = match Args::from_env() {
@@ -77,6 +94,12 @@ fn dataset_arg(args: &Args) -> Result<Dataset> {
 }
 
 fn run(args: &Args) -> Result<()> {
+    // `tpu-imac <cmd> --help` prints usage instead of tripping the
+    // per-subcommand unknown-flag validation.
+    if args.has("help") {
+        println!("{HELP}");
+        return Ok(());
+    }
     match args.subcommand.as_str() {
         "tables" => cmd_tables(args),
         "simulate" => cmd_simulate(args),
@@ -110,15 +133,21 @@ USAGE: tpu-imac <tables|simulate|trace|serve|calibrate|imac-study|spec> [--flags
              [--calibration PATH]  (static int8 activation scales from a
              `calibrate` table: removes the per-image max-abs scan;
              config-file default: serve.calibration)
+             [--models name[=prec[:cal.json]],...]  (multi-model registry:
+             N named deployments — weights_<name>.json or synthetic zoo —
+             served concurrently with per-model precision, per-model
+             metrics in the summary; config-file: serve.deployments)
   calibrate  [--artifacts DIR] [--samples N] [--percentile P] [--seed S]
              [--out PATH]  (run N sample images through the conv oracle,
              record per-layer activation ranges, write the calibration
              table `serve --calibration` consumes)
   imac-study [--sigma S] [--alpha A] [--trials N]
   energy     (per-model IMAC latency/energy per inference)
-  spec       [--dataflow os|ws|is] [--rows R] [--cols C]";
+  spec       [--dataflow os|ws|is] [--rows R] [--cols C]
+Unknown flags are rejected with the nearest valid name.";
 
 fn cmd_tables(args: &Args) -> Result<()> {
+    args.validate(&with_config_flags(&["format", "artifacts"]))?;
     let cfg = array_config(args)?;
     let sram = SramConfig::default();
     let evals = arch::evaluate_suite(&cfg, &sram)?;
@@ -143,6 +172,7 @@ fn cmd_tables(args: &Args) -> Result<()> {
 }
 
 fn cmd_simulate(args: &Args) -> Result<()> {
+    args.validate(&with_config_flags(&["model", "dataset", "mode"]))?;
     let model_name = args.get("model").context("--model required")?;
     let dataset = if model_name == "lenet" { Dataset::Mnist } else { dataset_arg(args)? };
     let model = zoo::by_name(model_name, dataset).context("unknown model")?;
@@ -208,6 +238,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 }
 
 fn cmd_trace(args: &Args) -> Result<()> {
+    args.validate(&with_config_flags(&["model", "dataset", "layer", "out"]))?;
     let model_name = args.get_or("model", "lenet");
     let dataset = if model_name == "lenet" { Dataset::Mnist } else { dataset_arg(args)? };
     let model = zoo::by_name(&model_name, dataset).context("unknown model")?;
@@ -246,28 +277,110 @@ fn cmd_trace(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn load_model_with(
+/// The single-model deployment `serve` builds when no registry is
+/// configured: LeNet weights from the artifacts dir, precision and
+/// calibration resolved flags-over-config.
+fn single_model_spec(
     artifacts: &str,
     precision: PrecisionPolicy,
-    calib: Option<&CalibrationTable>,
-) -> Result<DeployedModel> {
-    DeployedModel::load_calibrated(
-        &format!("{artifacts}/weights_lenet.json"),
-        &ImacConfig::default(),
-        AdcConfig { bits: 0, full_scale: 1.0 },
-        0,
-        precision,
-        calib,
-    )
+    calibration: Option<&str>,
+) -> DeploymentSpec {
+    let mut spec =
+        DeploymentSpec::json_file("lenet", format!("{artifacts}/weights_lenet.json"))
+            .precision(precision);
+    match calibration {
+        // Under fp32 nothing quantizes: don't attach the table (a spec
+        // carrying one under fp32 is rejected at build), so a stale
+        // config-file default can't fail an fp32 run — the notice tells
+        // the operator their flag is moot.
+        Some(p) if precision != PrecisionPolicy::Int8 => {
+            eprintln!("calibration {p}: ignored under fp32 (nothing quantizes)");
+        }
+        Some(p) => spec = spec.calibration_file(p),
+        None => {}
+    }
+    spec
+}
+
+/// Resolve one `serve.deployments` config entry to a spec.
+fn spec_from_config_entry(entry: &ServeDeployment, artifacts: &str) -> Result<DeploymentSpec> {
+    let mut spec = if let Some(path) = &entry.weights {
+        DeploymentSpec::json_file(&entry.name, path)
+    } else if let Some(zoo_name) = &entry.synthetic {
+        let model = SyntheticModel::parse(zoo_name).with_context(|| {
+            format!(
+                "serve.deployments '{}': unknown synthetic model '{zoo_name}' \
+                 (lenet, mobilenet-mini, mobilenetv1, mobilenetv2)",
+                entry.name
+            )
+        })?;
+        DeploymentSpec::synthetic(&entry.name, model, entry.seed)
+    } else {
+        deploy::resolve_named_spec(&entry.name, artifacts)?
+    };
+    spec = spec.precision(entry.precision);
+    if let Some(path) = &entry.calibration {
+        spec = spec.calibration_file(path);
+    }
+    Ok(spec)
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    args.validate(&with_config_flags(&[
+        "artifacts",
+        "requests",
+        "max-batch",
+        "workers",
+        "precision",
+        "calibration",
+        "models",
+        "native",
+    ]))?;
     // Config-file serve defaults (--config), overridable by explicit flags.
     let serve_defaults = full_config(args)?.serve;
     let artifacts = args.get_or("artifacts", "artifacts");
     let n_requests = args.get_usize("requests", 256)?;
     let max_batch = args.get_usize("max-batch", serve_defaults.max_batch)?;
     let workers = args.get_usize("workers", serve_defaults.workers)?;
+    let mut config = serve_defaults.coordinator();
+    config.max_batch = max_batch;
+    config.workers = workers;
+
+    // Multi-model registry mode: `--models` wins over `serve.deployments`.
+    let registry_specs: Option<Vec<DeploymentSpec>> = match args.get("models") {
+        Some(s) => Some(deploy::parse_models_flag(s, &artifacts)?),
+        None if !serve_defaults.deployments.is_empty() => Some(
+            serve_defaults
+                .deployments
+                .iter()
+                .map(|d| spec_from_config_entry(d, &artifacts))
+                .collect::<Result<_>>()?,
+        ),
+        None => None,
+    };
+    if let Some(specs) = registry_specs {
+        if args.get("precision").is_some() || args.get("calibration").is_some() {
+            bail!(
+                "multi-model serving takes per-deployment precision/calibration \
+                 (--models name=precision[:cal.json] or serve.deployments); \
+                 drop --precision/--calibration"
+            );
+        }
+        // The top-level config knobs don't apply per deployment; say so
+        // instead of silently serving with different settings than the
+        // operator's config file suggests.
+        if serve_defaults.precision_set || serve_defaults.calibration.is_some() {
+            eprintln!(
+                "serve.precision/serve.calibration: ignored in multi-model registry mode \
+                 (per-deployment settings in --models / serve.deployments apply)"
+            );
+        }
+        let registry = ModelRegistry::with_specs(&specs)?;
+        return serve_registry(config, registry, n_requests);
+    }
+
+    // Single-model mode (unchanged behavior): LeNet weights, one
+    // precision/calibration for the whole process.
     let precision = match args.get("precision") {
         Some(s) => PrecisionPolicy::parse(s)
             .with_context(|| format!("--precision must be fp32|int8, got {s}"))?,
@@ -276,24 +389,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // The int8 conv path is a native-kernel feature; the PJRT artifacts
     // are compiled fp32.
     let native = args.has("native") || precision == PrecisionPolicy::Int8;
-    // Calibration table: explicit flag wins over the config default.
+    // Calibration table path: explicit flag wins over the config default.
     let calibration_path = args
         .get("calibration")
         .map(str::to_string)
         .or_else(|| serve_defaults.calibration.clone());
-    let calibration = match &calibration_path {
-        // Under fp32 nothing quantizes: drop the table entirely so a stale
-        // or foreign-model file can't fail an fp32 deployment's plan
-        // compile (the table is only validated when it is actually used).
-        Some(p) if precision != PrecisionPolicy::Int8 => {
-            eprintln!("calibration {p}: ignored under fp32 (nothing quantizes)");
-            None
-        }
-        Some(p) => Some(CalibrationTable::load(p)?),
-        None => None,
-    };
-
-    let model = load_model_with(&artifacts, precision, calibration.as_ref())?;
+    let dep = single_model_spec(&artifacts, precision, calibration_path.as_deref()).build()?;
+    let model = dep.model.clone();
     println!(
         "model {} [{}] loaded: fp32 acc {:.2}%, ternary acc {:.2}% (training-time)",
         model.row,
@@ -308,7 +410,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         model.fabric.rram_bytes() as f64 / 1024.0
     );
     if model.plan.is_calibrated() {
-        let t = calibration.as_ref().unwrap();
+        let t = dep.calibration.as_ref().expect("calibrated plan has a table");
         println!(
             "activation scales: calibrated static ({} layers, p{} over {} samples) — no per-image max-abs scan",
             t.len(),
@@ -316,35 +418,38 @@ fn cmd_serve(args: &Args) -> Result<()> {
             t.samples
         );
     } else if precision == PrecisionPolicy::Int8 {
-        println!("activation scales: dynamic per image (run `tpu-imac calibrate` to make them static)");
+        println!(
+            "activation scales: dynamic per image (run `tpu-imac calibrate` to make them static)"
+        );
     }
-    let input_hwc = model.input_hwc;
-    drop(model);
 
-    let artifacts2 = artifacts.clone();
-    let mut config = serve_defaults.coordinator();
-    config.max_batch = max_batch;
-    config.workers = workers;
-    let coord = if workers > 1 {
-        // A worker pool requires a re-invocable factory; the PJRT backend
-        // is single-owner state, so a pool always runs the native GEMM
-        // path (one backend + scratch arena per worker, each compiling
-        // its own plan under the deployment's precision policy).
+    let coord = if native || workers > 1 {
+        // Native serving goes through a one-deployment registry: same
+        // request path as multi-model mode, per-worker scratch over the
+        // shared compiled plan.
         if !native {
             eprintln!("--workers {workers}: forcing native GEMM backend (PJRT is single-owner)");
         }
-        Coordinator::start_pool(config, move || {
-            make_backend(&artifacts2, max_batch, true, precision, calibration.clone())
-        })
+        eprintln!(
+            "backend: native rust conv [{}{}] + IMAC fabric",
+            precision.label(),
+            if model.plan.is_calibrated() { ", calibrated" } else { "" }
+        );
+        let registry = Arc::new(ModelRegistry::new());
+        registry.register_built(dep)?;
+        Coordinator::start_registry(config, registry)?
     } else {
-        Coordinator::start(config, move || {
-            make_backend(&artifacts2, max_batch, native, precision, calibration)
-        })
+        // PJRT single-owner thread; degrades to the native plan per
+        // chunk. The worker reuses the deployment built above (Arc-shared
+        // model) — no second weights load, no panic path in the thread.
+        let artifacts2 = artifacts.clone();
+        Coordinator::start(config, move || pjrt_or_native_backend(&artifacts2, max_batch, dep))
     };
 
-    // Synthetic request stream: deterministic pseudo-images.
+    // Synthetic request stream: deterministic pseudo-images to the default
+    // deployment.
     let client = coord.client();
-    let (h, w, c) = input_hwc;
+    let (h, w, c) = model.input_hwc;
     let t0 = std::time::Instant::now();
     let mut rxs = Vec::with_capacity(n_requests);
     let mut rng = tpu_imac::util::rng::Xoshiro256::seed_from_u64(42);
@@ -356,7 +461,63 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let _ = rx.recv()?;
     }
     let wall = t0.elapsed();
-    let snap = coord.metrics.snapshot();
+    print_serve_summary(&coord.metrics.snapshot(), wall);
+    coord.shutdown();
+    Ok(())
+}
+
+/// Multi-model serving driver: start the registry pool, round-robin the
+/// synthetic request stream across every deployment, report per-model.
+fn serve_registry(
+    config: CoordinatorConfig,
+    registry: Arc<ModelRegistry>,
+    n_requests: usize,
+) -> Result<()> {
+    let names = registry.names();
+    let mut shapes = Vec::with_capacity(names.len());
+    for name in &names {
+        let dep = registry.deployment(name).context("registered deployment resolves")?;
+        let m = &dep.model;
+        println!(
+            "deployment '{name}' [{}{}]: {} [{}], conv weights {:.1} KiB, FC RRAM {:.1} KiB",
+            dep.precision().label(),
+            if m.plan.is_calibrated() { ", calibrated" } else { "" },
+            m.row,
+            m.dataset,
+            m.plan.weight_bytes() as f64 / 1024.0,
+            m.fabric.rram_bytes() as f64 / 1024.0
+        );
+        shapes.push(m.input_hwc);
+    }
+    println!(
+        "registry: {} deployments over {} workers, one bounded queue (max {})",
+        names.len(),
+        config.workers.max(1),
+        config.max_queue
+    );
+    let coord = Coordinator::start_registry(config, registry)?;
+    let client = coord.client();
+    let t0 = std::time::Instant::now();
+    let mut rng = tpu_imac::util::rng::Xoshiro256::seed_from_u64(42);
+    let mut rxs = Vec::with_capacity(n_requests);
+    for i in 0..n_requests {
+        let which = i % names.len();
+        let (h, w, c) = shapes[which];
+        let img = Tensor::from_vec(h, w, c, (0..h * w * c).map(|_| rng.next_f32()).collect());
+        rxs.push(client.submit_to(&names[which], img)?.1);
+    }
+    for rx in rxs {
+        let _ = rx.recv()?;
+    }
+    let wall = t0.elapsed();
+    print_serve_summary(&coord.metrics.snapshot(), wall);
+    coord.shutdown();
+    Ok(())
+}
+
+/// The post-run report shared by single- and multi-model serving; the
+/// per-model breakdown appears whenever a registry served the run.
+fn print_serve_summary(snap: &Snapshot, wall: std::time::Duration) {
     println!(
         "served {} requests in {:.3}s => {:.1} req/s",
         snap.completed,
@@ -378,6 +539,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
         snap.imac_us_total as f64 / 1e3,
         snap.queue_us_total as f64 / 1e3
     );
+    for m in &snap.models {
+        println!(
+            "  model {:<14} {:>6} completed | mean {:.2} ms  p50 {:.2} ms  p95 {:.2} ms",
+            m.name,
+            m.completed,
+            m.mean_latency_us / 1e3,
+            m.p50_latency_us / 1e3,
+            m.p95_latency_us / 1e3
+        );
+    }
     if snap.gemm_images > 0 {
         println!(
             "native GEMM path: {} images ({} via int8 kernels, {} with calibrated scales; {} dynamic max-abs scans), scratch high-water {:.1} KiB/worker (zero steady-state allocs)",
@@ -394,20 +565,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
             snap.imac_bitplane_images
         );
     }
-    coord.shutdown();
-    Ok(())
 }
 
 /// Offline calibration pass: run sample images (drawn from the synthetic
 /// serving distribution) through the conv-section oracle, record per-layer
 /// activation ranges, and write the table `serve --calibration` consumes.
 fn cmd_calibrate(args: &Args) -> Result<()> {
+    args.validate(&["artifacts", "samples", "percentile", "seed", "out"])?;
     let artifacts = args.get_or("artifacts", "artifacts");
     let samples = args.get_usize("samples", 64)?;
     let percentile = args.get_f64("percentile", 100.0)?;
     let seed = args.get_usize("seed", 42)? as u64;
     let out = args.get_or("out", "calibration.json");
-    let model = load_model_with(&artifacts, PrecisionPolicy::Fp32, None)?;
+    let model = single_model_spec(&artifacts, PrecisionPolicy::Fp32, None).build()?.model;
     let (h, w, c) = model.input_hwc;
     // Same pseudo-image distribution (and default seed) as `serve`'s
     // synthetic request stream, so the recorded ranges cover what the
@@ -436,27 +606,15 @@ fn cmd_calibrate(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Build the serving backend: PJRT conv artifact if available, else native.
-/// `precision` is the per-worker conv policy; int8 always compiles a
-/// native quantized plan (PJRT artifacts are fp32), baking in the
-/// calibration table's static activation scales when one is supplied.
-fn make_backend(
+/// Build the single-worker serving backend around an already-built
+/// deployment: PJRT conv artifact if available, else the native plan (the
+/// model is `Arc`-shared between the attempt and the fallback — no
+/// reload).
+fn pjrt_or_native_backend(
     artifacts: &str,
     max_batch: usize,
-    force_native: bool,
-    precision: PrecisionPolicy,
-    calibration: Option<CalibrationTable>,
+    dep: Deployment,
 ) -> Box<dyn tpu_imac::coordinator::InferenceBackend> {
-    let calib = calibration.as_ref();
-    let model = load_model_with(artifacts, precision, calib).expect("load weights json");
-    if force_native {
-        eprintln!(
-            "backend: native rust conv [{}{}] + IMAC fabric",
-            precision.label(),
-            if model.plan.is_calibrated() { ", calibrated" } else { "" }
-        );
-        return Box::new(NativeBackend::new(model));
-    }
     let artifact = format!("lenet_conv_b{max_batch}.hlo.txt");
     let rt = Runtime::open(artifacts).and_then(|mut rt| {
         rt.check_spec(&ImacConfig::default())?;
@@ -464,28 +622,25 @@ fn make_backend(
         Ok(rt)
     });
     match rt {
-        Ok(rt) => match PjrtConvBackend::new(rt, &artifact, model) {
+        Ok(rt) => match PjrtConvBackend::new(rt, &artifact, dep.model.clone()) {
             Ok(b) => {
                 eprintln!("backend: PJRT conv ({artifact}) + rust IMAC fabric");
                 Box::new(b)
             }
             Err(e) => {
                 eprintln!("PJRT backend unavailable ({e:#}); using native");
-                Box::new(NativeBackend::new(
-                    load_model_with(artifacts, precision, calib).expect("reload"),
-                ))
+                Box::new(NativeBackend::new(dep.model))
             }
         },
         Err(e) => {
             eprintln!("PJRT runtime unavailable ({e:#}); using native");
-            Box::new(NativeBackend::new(
-                load_model_with(artifacts, precision, calib).expect("reload"),
-            ))
+            Box::new(NativeBackend::new(dep.model))
         }
     }
 }
 
 fn cmd_imac_study(args: &Args) -> Result<()> {
+    args.validate(&["sigma", "alpha", "trials"])?;
     let sigma = args.get_f64("sigma", 0.1)?;
     let alpha = args.get_f64("alpha", 0.1)?;
     let trials = args.get_usize("trials", 8)?;
@@ -495,11 +650,22 @@ fn cmd_imac_study(args: &Args) -> Result<()> {
 
 /// Supplementary: per-model IMAC latency/energy per inference (the paper
 /// defers detailed energy to its references; constants in imac::energy).
-fn cmd_energy(_args: &Args) -> Result<()> {
-    use tpu_imac::imac::{inference_cost, AdcConfig as Adc, EnergyConfig, ImacConfig as Ic, ImacFabric};
-    let mut t = Table::new(&["model", "fc layers", "subarrays", "cycles", "latency ns", "energy nJ"])
+fn cmd_energy(args: &Args) -> Result<()> {
+    args.validate(&[])?;
+    use tpu_imac::imac::{
+        inference_cost, AdcConfig as Adc, EnergyConfig, ImacConfig as Ic, ImacFabric,
+    };
+    let cols = ["model", "fc layers", "subarrays", "cycles", "latency ns", "energy nJ"];
+    let mut t = Table::new(&cols)
         .with_title("IMAC per-inference cost (ideal devices)")
-        .with_aligns(&[Align::Left, Align::Right, Align::Right, Align::Right, Align::Right, Align::Right]);
+        .with_aligns(&[
+            Align::Left,
+            Align::Right,
+            Align::Right,
+            Align::Right,
+            Align::Right,
+            Align::Right,
+        ]);
     let energy = EnergyConfig::default();
     for m in zoo::paper_suite() {
         let layers: Vec<(Vec<i8>, usize, usize)> = m
@@ -526,6 +692,7 @@ fn cmd_energy(_args: &Args) -> Result<()> {
 }
 
 fn cmd_spec(args: &Args) -> Result<()> {
+    args.validate(&with_config_flags(&[]))?;
     let cfg = array_config(args)?;
     let sram = SramConfig::default();
     let imac = ImacConfig::default();

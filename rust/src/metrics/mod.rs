@@ -2,10 +2,30 @@
 //! thread-shared.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::Duration;
 
 use crate::util::stats::percentile_sorted;
+
+/// Per-deployment serving counters (one per registry slot when the
+/// coordinator serves a [`crate::coordinator::ModelRegistry`]).
+#[derive(Debug, Default)]
+pub struct ModelMetrics {
+    /// Deployment name (the `submit_to` routing key).
+    pub name: String,
+    pub completed: AtomicU64,
+    latencies_us: Mutex<Vec<u64>>,
+}
+
+/// Read-only per-deployment snapshot.
+#[derive(Clone, Debug, Default)]
+pub struct ModelSnapshot {
+    pub name: String,
+    pub completed: u64,
+    pub mean_latency_us: f64,
+    pub p50_latency_us: f64,
+    pub p95_latency_us: f64,
+}
 
 /// Shared serving metrics (one instance per coordinator).
 #[derive(Debug, Default)]
@@ -43,6 +63,9 @@ pub struct Metrics {
     /// bitplanes — ideal fabrics only; non-ideal deployments take the
     /// analog per-row kernels and leave this at 0).
     pub imac_bitplane_images: AtomicU64,
+    /// Per-deployment breakdowns, indexed by registry slot. Empty when the
+    /// coordinator serves a single unnamed backend.
+    models: RwLock<Vec<Arc<ModelMetrics>>>,
 }
 
 /// A read-only snapshot for reporting.
@@ -66,6 +89,8 @@ pub struct Snapshot {
     pub maxabs_scans: u64,
     pub scratch_bytes: u64,
     pub imac_bitplane_images: u64,
+    /// Per-deployment completed/latency breakdowns (registry mode only).
+    pub models: Vec<ModelSnapshot>,
 }
 
 impl Metrics {
@@ -76,6 +101,40 @@ impl Metrics {
     pub fn record_latencies(&self, batch: &[Duration]) {
         let mut g = self.latencies_us.lock().unwrap();
         g.extend(batch.iter().map(|d| d.as_micros() as u64));
+    }
+
+    /// Register a deployment slot for per-model accounting (idempotent;
+    /// intermediate slots are back-filled so indexing stays positional).
+    pub fn register_model(&self, slot: usize, name: &str) {
+        let mut models = self.models.write().unwrap();
+        while models.len() <= slot {
+            models.push(Arc::new(ModelMetrics::default()));
+        }
+        // Names are set once per slot; a back-filled placeholder gets its
+        // name on first real registration.
+        if models[slot].name.is_empty() {
+            models[slot] =
+                Arc::new(ModelMetrics { name: name.to_string(), ..Default::default() });
+        }
+    }
+
+    /// Account one completed batch to a deployment slot (registering it
+    /// lazily — e.g. a model added to the registry while serving).
+    pub fn record_model_batch(&self, slot: usize, name: &str, lats: &[Duration]) {
+        let entry = {
+            let models = self.models.read().unwrap();
+            models.get(slot).cloned()
+        };
+        let entry = match entry {
+            Some(m) if !m.name.is_empty() => m,
+            _ => {
+                self.register_model(slot, name);
+                self.models.read().unwrap()[slot].clone()
+            }
+        };
+        entry.completed.fetch_add(lats.len() as u64, Ordering::Relaxed);
+        let mut g = entry.latencies_us.lock().unwrap();
+        g.extend(lats.iter().map(|d| d.as_micros() as u64));
     }
 
     pub fn snapshot(&self) -> Snapshot {
@@ -90,6 +149,28 @@ impl Metrics {
         let batches = self.batches_executed.load(Ordering::Relaxed);
         let used = self.batch_slots_used.load(Ordering::Relaxed);
         let padded = self.batch_slots_padded.load(Ordering::Relaxed);
+        let models: Vec<ModelSnapshot> = self
+            .models
+            .read()
+            .unwrap()
+            .iter()
+            .map(|m| {
+                let mut ml: Vec<f64> =
+                    m.latencies_us.lock().unwrap().iter().map(|&v| v as f64).collect();
+                ml.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                ModelSnapshot {
+                    name: m.name.clone(),
+                    completed: m.completed.load(Ordering::Relaxed),
+                    mean_latency_us: if ml.is_empty() {
+                        0.0
+                    } else {
+                        ml.iter().sum::<f64>() / ml.len() as f64
+                    },
+                    p50_latency_us: if ml.is_empty() { 0.0 } else { percentile_sorted(&ml, 50.0) },
+                    p95_latency_us: if ml.is_empty() { 0.0 } else { percentile_sorted(&ml, 95.0) },
+                }
+            })
+            .collect();
         Snapshot {
             enqueued: self.requests_enqueued.load(Ordering::Relaxed),
             completed: self.requests_completed.load(Ordering::Relaxed),
@@ -117,6 +198,7 @@ impl Metrics {
             maxabs_scans: self.maxabs_scans.load(Ordering::Relaxed),
             scratch_bytes: self.scratch_bytes.load(Ordering::Relaxed),
             imac_bitplane_images: self.imac_bitplane_images.load(Ordering::Relaxed),
+            models,
         }
     }
 }
@@ -140,5 +222,26 @@ mod tests {
         assert_eq!(s.p95_latency_us, 95.0);
         assert_eq!(s.completed, 100);
         assert!((s.mean_batch_fill - 0.9).abs() < 1e-9);
+        assert!(s.models.is_empty(), "no per-model slots unless registered");
+    }
+
+    #[test]
+    fn per_model_breakdowns_account_separately() {
+        let m = Metrics::new();
+        m.register_model(0, "lenet");
+        m.record_model_batch(
+            0,
+            "lenet",
+            &[Duration::from_micros(10), Duration::from_micros(20)],
+        );
+        // A slot never pre-registered (model added while serving) is
+        // picked up lazily by the first recorded batch.
+        m.record_model_batch(1, "mm", &[Duration::from_micros(30)]);
+        let s = m.snapshot();
+        assert_eq!(s.models.len(), 2);
+        assert_eq!((s.models[0].name.as_str(), s.models[0].completed), ("lenet", 2));
+        assert_eq!((s.models[1].name.as_str(), s.models[1].completed), ("mm", 1));
+        assert!(s.models[0].p95_latency_us >= s.models[0].p50_latency_us);
+        assert!((s.models[0].mean_latency_us - 15.0).abs() < 1e-9);
     }
 }

@@ -19,7 +19,7 @@ use crate::util::json::Json;
 
 use super::gemm;
 use super::ops;
-use super::scratch::Scratch;
+use super::scratch::{ConvScratch, Scratch};
 use super::tensor::Tensor;
 
 /// One conv-section op.
@@ -321,31 +321,30 @@ impl ConvPlan {
             .sum()
     }
 
-    /// Execute the plan over a whole batch. Fp32 conv layers stage im2col
-    /// once per batch layer and run one GEMM over `batch·patches` rows;
-    /// int8 conv layers (standard and depthwise) loop per image (quantize
-    /// with that image's scale — or the calibrated static scale — then run
-    /// the i8 kernel) so a request's numerics never depend on its
-    /// co-batched neighbours. Takes the scratch buffers as separate parts
-    /// so callers can keep borrowing the rest of the arena (see
-    /// [`DeployedModel::infer_batch_into`]). The i8/i32 buffers are only
-    /// touched by int8-compiled plans (an fp32 plan never grows them, and
-    /// vice versa for `cols`). `maxabs_scans` counts dynamic
-    /// activation-range scans (zero for calibrated plans). Returns the
-    /// flattened `batch × feat_len` feature block living in one of the act
-    /// buffers.
-    pub fn run_parts<'s>(
-        &self,
-        images: &[&Tensor],
-        cols: &mut Vec<f32>,
-        cols_i8: &mut Vec<i8>,
-        act_i8: &mut Vec<i8>,
-        acc: &mut Vec<i32>,
-        act_a: &'s mut Vec<f32>,
-        act_b: &'s mut Vec<f32>,
-        grow_events: &mut u64,
-        maxabs_scans: &mut u64,
-    ) -> &'s mut [f32] {
+    /// Execute the plan over a whole batch through the conv-section arena.
+    /// Fp32 conv layers stage im2col once per batch layer and run one GEMM
+    /// over `batch·patches` rows; int8 conv layers (standard and
+    /// depthwise) loop per image (quantize with that image's scale — or
+    /// the calibrated static scale — then run the i8 kernel) so a
+    /// request's numerics never depend on its co-batched neighbours. The
+    /// i8/i32 buffers are only touched by int8-compiled plans (an fp32
+    /// plan never grows them, and vice versa for `cols`);
+    /// `scratch.conv.maxabs_scans` counts dynamic activation-range scans (zero
+    /// for calibrated plans). Borrows only the conv arena, so callers keep
+    /// the FC arena free for the fabric while the returned flattened
+    /// `batch × feat_len` feature block stays live (see
+    /// [`DeployedModel::infer_batch_into`]).
+    pub fn run<'s>(&self, images: &[&Tensor], scratch: &'s mut ConvScratch) -> &'s mut [f32] {
+        let ConvScratch {
+            cols,
+            cols_i8,
+            act_i8,
+            acc_i32: acc,
+            act_a,
+            act_b,
+            grow_events,
+            maxabs_scans,
+        } = scratch;
         let n = images.len();
         let (mut h, mut w, mut c) = self.in_hwc;
         Scratch::ensure(act_a, grow_events, n * h * w * c);
@@ -573,55 +572,18 @@ pub struct DeployedModel {
 }
 
 impl DeployedModel {
-    /// Load from the trainer's weights JSON (fp32 conv path).
-    pub fn load(path: &str, imac: &ImacConfig, adc: AdcConfig, seed: u64) -> Result<Self> {
-        Self::load_with(path, imac, adc, seed, PrecisionPolicy::Fp32)
-    }
-
-    /// Load from the trainer's weights JSON with an explicit conv-section
-    /// precision policy (`serve --precision int8` lands here, per worker).
-    pub fn load_with(
-        path: &str,
-        imac: &ImacConfig,
-        adc: AdcConfig,
-        seed: u64,
-        precision: PrecisionPolicy,
-    ) -> Result<Self> {
-        Self::load_calibrated(path, imac, adc, seed, precision, None)
-    }
-
-    /// [`DeployedModel::load_with`] plus an optional calibration table
-    /// (`serve --calibration <path>` lands here): under int8 the plan's
-    /// quantized ops take static activation scales from the table.
-    pub fn load_calibrated(
-        path: &str,
-        imac: &ImacConfig,
-        adc: AdcConfig,
-        seed: u64,
-        precision: PrecisionPolicy,
-        calib: Option<&CalibrationTable>,
-    ) -> Result<Self> {
-        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
-        let doc = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
-        Self::from_json_calibrated(&doc, imac, adc, seed, precision, calib)
-    }
-
-    /// Build from a parsed weights document (fp32 conv path).
+    /// Build from a parsed weights document (fp32 conv path) — the oracle
+    /// constructor for tests and offline tooling. Serving deployments are
+    /// built through [`crate::deploy::DeploymentSpec`], which is the only
+    /// route carrying precision policies and calibration tables.
     pub fn from_json(doc: &Json, imac: &ImacConfig, adc: AdcConfig, seed: u64) -> Result<Self> {
-        Self::from_json_with(doc, imac, adc, seed, PrecisionPolicy::Fp32)
+        Self::from_doc(doc, imac, adc, seed, PrecisionPolicy::Fp32, None)
     }
 
-    pub fn from_json_with(
-        doc: &Json,
-        imac: &ImacConfig,
-        adc: AdcConfig,
-        seed: u64,
-        precision: PrecisionPolicy,
-    ) -> Result<Self> {
-        Self::from_json_calibrated(doc, imac, adc, seed, precision, None)
-    }
-
-    pub fn from_json_calibrated(
+    /// The single full constructor, crate-internal: external callers go
+    /// through [`crate::deploy::DeploymentSpec::build`] (which resolves
+    /// the weight source and calibration table before landing here).
+    pub(crate) fn from_doc(
         doc: &Json,
         imac: &ImacConfig,
         adc: AdcConfig,
@@ -758,20 +720,7 @@ impl DeployedModel {
     /// Hot-path conv stack (im2col+GEMM plan): image -> raw bridge features
     /// staged in the scratch arena. Zero allocations once warm.
     pub fn conv_features_into<'s>(&self, img: &Tensor, scratch: &'s mut Scratch) -> &'s [f32] {
-        let Scratch {
-            cols, cols_i8, act_i8, acc_i32, act_a, act_b, grow_events, maxabs_scans, ..
-        } = scratch;
-        &*self.plan.run_parts(
-            &[img],
-            cols,
-            cols_i8,
-            act_i8,
-            acc_i32,
-            act_a,
-            act_b,
-            grow_events,
-            maxabs_scans,
-        )
+        &*self.plan.run(&[img], &mut scratch.conv)
     }
 
     /// Hot-path full inference: image -> class scores through the GEMM conv
@@ -780,32 +729,10 @@ impl DeployedModel {
     /// analog path). The returned slice lives in `scratch` — copy it out
     /// before the next call. Zero allocations once warm.
     pub fn infer_into<'s>(&self, img: &Tensor, scratch: &'s mut Scratch) -> &'s [f32] {
-        let Scratch {
-            cols,
-            cols_i8,
-            act_i8,
-            acc_i32,
-            act_a,
-            act_b,
-            fc_a,
-            fc_b,
-            fc_bits,
-            grow_events,
-            maxabs_scans,
-        } = scratch;
-        let feats = self.plan.run_parts(
-            &[img],
-            cols,
-            cols_i8,
-            act_i8,
-            acc_i32,
-            act_a,
-            act_b,
-            grow_events,
-            maxabs_scans,
-        );
+        let feats = self.plan.run(&[img], &mut scratch.conv);
         Self::bridge_in_place(feats);
-        self.fabric.forward_batch_into(feats, 1, fc_bits, fc_a, fc_b)
+        let fc = &mut scratch.fc;
+        self.fabric.forward_batch_into(feats, 1, &mut fc.bits, &mut fc.a, &mut fc.b)
     }
 
     /// Hot-path batched inference: conv runs as one im2col+GEMM over
@@ -825,32 +752,11 @@ impl DeployedModel {
         if images.is_empty() {
             return;
         }
-        let Scratch {
-            cols,
-            cols_i8,
-            act_i8,
-            acc_i32,
-            act_a,
-            act_b,
-            fc_a,
-            fc_b,
-            fc_bits,
-            grow_events,
-            maxabs_scans,
-        } = scratch;
-        let feats = self.plan.run_parts(
-            images,
-            cols,
-            cols_i8,
-            act_i8,
-            acc_i32,
-            act_a,
-            act_b,
-            grow_events,
-            maxabs_scans,
-        );
+        let feats = self.plan.run(images, &mut scratch.conv);
         Self::bridge_in_place(feats);
-        let scores = self.fabric.forward_batch_into(feats, images.len(), fc_bits, fc_a, fc_b);
+        let fc = &mut scratch.fc;
+        let scores =
+            self.fabric.forward_batch_into(feats, images.len(), &mut fc.bits, &mut fc.a, &mut fc.b);
         // Row width from the block itself, not `fabric.n_out()`: a
         // degenerate zero-layer fabric echoes the (quantized) input block,
         // whose rows are `n_in` wide while `n_out()` reports 0.
@@ -987,9 +893,9 @@ mod tests {
             }
         }
         // Steady state: a second batch through the same scratch must not grow.
-        let grows = scratch.grow_events;
+        let grows = scratch.conv.grow_events;
         m.infer_batch_into(&refs, &mut scratch, |_, _| {});
-        assert_eq!(scratch.grow_events, grows, "scratch regrew at steady state");
+        assert_eq!(scratch.conv.grow_events, grows, "scratch regrew at steady state");
     }
 
     /// Chain the int8 convenience convs (`conv2d_gemm_i8` /
@@ -1027,12 +933,13 @@ mod tests {
     fn int8_plan_matches_quantized_reference() {
         let mut rng = crate::util::rng::Xoshiro256::seed_from_u64(11);
         let doc = crate::nn::synthetic::lenet_weights_doc(&mut rng);
-        let m = DeployedModel::from_json_with(
+        let m = DeployedModel::from_doc(
             &doc,
             &ImacConfig::default(),
             AdcConfig { bits: 0, full_scale: 1.0 },
             0,
             PrecisionPolicy::Int8,
+            None,
         )
         .unwrap();
         assert_eq!(m.plan.precision(), PrecisionPolicy::Int8);
@@ -1062,9 +969,9 @@ mod tests {
         let doc = crate::nn::synthetic::lenet_weights_doc(&mut rng);
         let imac = ImacConfig::default();
         let adc = AdcConfig { bits: 0, full_scale: 1.0 };
-        let m32 = DeployedModel::from_json_with(&doc, &imac, adc, 0, PrecisionPolicy::Fp32)
+        let m32 = DeployedModel::from_doc(&doc, &imac, adc, 0, PrecisionPolicy::Fp32, None)
             .unwrap();
-        let m8 = DeployedModel::from_json_with(&doc, &imac, adc, 0, PrecisionPolicy::Int8)
+        let m8 = DeployedModel::from_doc(&doc, &imac, adc, 0, PrecisionPolicy::Int8, None)
             .unwrap();
         let mut s32 = Scratch::new();
         let mut s8 = Scratch::new();
@@ -1085,12 +992,12 @@ mod tests {
              random-weight synthetic suite measures ~100%)"
         );
         // Steady state: further batches must not regrow the int8 arena.
-        let grows = s8.grow_events;
+        let grows = s8.conv.grow_events;
         let img = Tensor::from_vec(28, 28, 1, vec![0.25; 784]);
         for _ in 0..3 {
             let _ = m8.infer_into(&img, &mut s8);
         }
-        assert_eq!(s8.grow_events, grows, "int8 scratch regrew at steady state");
+        assert_eq!(s8.conv.grow_events, grows, "int8 scratch regrew at steady state");
     }
 
     /// The compiled int8 plan on a depthwise stack must reproduce the
@@ -1100,12 +1007,13 @@ mod tests {
     fn int8_dw_stack_plan_matches_quantized_reference() {
         let mut rng = crate::util::rng::Xoshiro256::seed_from_u64(13);
         let doc = crate::nn::synthetic::mobilenet_mini_weights_doc(&mut rng);
-        let m = DeployedModel::from_json_with(
+        let m = DeployedModel::from_doc(
             &doc,
             &ImacConfig::default(),
             AdcConfig { bits: 0, full_scale: 1.0 },
             0,
             PrecisionPolicy::Int8,
+            None,
         )
         .unwrap();
         assert!(
@@ -1127,7 +1035,7 @@ mod tests {
             assert!(d < 1e-5, "int8 dw plan diverges from quantized reference: {d}");
         }
         // Dynamic plan: one scan per image per quantized layer (5 here).
-        assert_eq!(scratch.maxabs_scans, 4 * 5, "dynamic dw stack scan count");
+        assert_eq!(scratch.conv.maxabs_scans, 4 * 5, "dynamic dw stack scan count");
     }
 
     /// Satellite: the int8-vs-fp32 top-1 agreement property extended to a
@@ -1142,9 +1050,9 @@ mod tests {
         let doc = crate::nn::synthetic::mobilenet_mini_weights_doc(&mut rng);
         let imac = ImacConfig::default();
         let adc = AdcConfig { bits: 0, full_scale: 1.0 };
-        let m32 = DeployedModel::from_json_with(&doc, &imac, adc, 0, PrecisionPolicy::Fp32)
+        let m32 = DeployedModel::from_doc(&doc, &imac, adc, 0, PrecisionPolicy::Fp32, None)
             .unwrap();
-        let m8 = DeployedModel::from_json_with(&doc, &imac, adc, 0, PrecisionPolicy::Int8)
+        let m8 = DeployedModel::from_doc(&doc, &imac, adc, 0, PrecisionPolicy::Int8, None)
             .unwrap();
         let mut s32 = Scratch::new();
         let mut s8 = Scratch::new();
@@ -1164,7 +1072,7 @@ mod tests {
             "dw-stack int8 top-1 agreement {agree}/{n} below the 80% random-weight floor"
         );
         // The fp32 deployment never scans activation ranges.
-        assert_eq!(s32.maxabs_scans, 0, "fp32 plan must not scan activation ranges");
+        assert_eq!(s32.conv.maxabs_scans, 0, "fp32 plan must not scan activation ranges");
     }
 
     /// A calibrated int8 plan must (a) perform zero max-abs scans, (b) be
@@ -1175,7 +1083,7 @@ mod tests {
         let doc = crate::nn::synthetic::mobilenet_mini_weights_doc(&mut rng);
         let imac = ImacConfig::default();
         let adc = AdcConfig { bits: 0, full_scale: 1.0 };
-        let m_dyn = DeployedModel::from_json_with(&doc, &imac, adc, 0, PrecisionPolicy::Int8)
+        let m_dyn = DeployedModel::from_doc(&doc, &imac, adc, 0, PrecisionPolicy::Int8, None)
             .unwrap();
         // Calibrate on a sample set from the serving distribution.
         let samples: Vec<Tensor> = (0..16)
@@ -1186,7 +1094,7 @@ mod tests {
         let table =
             quant::calibrate_conv_ops(&m_dyn.conv_ops, &samples, 100.0).unwrap();
         assert_eq!(table.len(), m_dyn.conv_ops.len());
-        let m_cal = DeployedModel::from_json_calibrated(
+        let m_cal = DeployedModel::from_doc(
             &doc,
             &imac,
             adc,
@@ -1214,8 +1122,8 @@ mod tests {
             first_pass.push(pc);
             imgs.push(img);
         }
-        assert_eq!(s_cal.maxabs_scans, 0, "calibrated plan must never scan for ranges");
-        assert_eq!(s_dyn.maxabs_scans, n as u64 * 5, "dynamic plan scans once per i8 layer");
+        assert_eq!(s_cal.conv.maxabs_scans, 0, "calibrated plan must never scan for ranges");
+        assert_eq!(s_dyn.conv.maxabs_scans, n as u64 * 5, "dynamic plan scans once per i8 layer");
         assert!(
             agree * 100 >= n * 80,
             "calibrated vs dynamic top-1 agreement {agree}/{n} below the 80% floor"
@@ -1238,7 +1146,7 @@ mod tests {
             percentile: 100.0,
             samples: 1,
         };
-        let r = DeployedModel::from_json_calibrated(
+        let r = DeployedModel::from_doc(
             &doc,
             &ImacConfig::default(),
             AdcConfig { bits: 0, full_scale: 1.0 },
@@ -1249,7 +1157,7 @@ mod tests {
         assert!(r.is_err());
         // An fp32 plan ignores the table entirely — the same stale file
         // must not fail an fp32 deployment.
-        let r32 = DeployedModel::from_json_calibrated(
+        let r32 = DeployedModel::from_doc(
             &doc,
             &ImacConfig::default(),
             AdcConfig { bits: 0, full_scale: 1.0 },
@@ -1269,9 +1177,9 @@ mod tests {
         let doc = crate::nn::synthetic::mobilenet_mini_weights_doc(&mut rng);
         let imac = ImacConfig::default();
         let adc = AdcConfig { bits: 0, full_scale: 1.0 };
-        let m32 = DeployedModel::from_json_with(&doc, &imac, adc, 0, PrecisionPolicy::Fp32)
+        let m32 = DeployedModel::from_doc(&doc, &imac, adc, 0, PrecisionPolicy::Fp32, None)
             .unwrap();
-        let m8 = DeployedModel::from_json_with(&doc, &imac, adc, 0, PrecisionPolicy::Int8)
+        let m8 = DeployedModel::from_doc(&doc, &imac, adc, 0, PrecisionPolicy::Int8, None)
             .unwrap();
         // Weights: 72+72+128+144+512 = 928; channels: 8+8+16+16+32 = 80.
         // fp32: 4·(928+80). int8: 928 + 4·(80 scales + 80 biases).
@@ -1286,9 +1194,9 @@ mod tests {
         let doc = crate::nn::synthetic::lenet_weights_doc(&mut rng);
         let imac = ImacConfig::default();
         let adc = AdcConfig { bits: 0, full_scale: 1.0 };
-        let m32 = DeployedModel::from_json_with(&doc, &imac, adc, 0, PrecisionPolicy::Fp32)
+        let m32 = DeployedModel::from_doc(&doc, &imac, adc, 0, PrecisionPolicy::Fp32, None)
             .unwrap();
-        let m8 = DeployedModel::from_json_with(&doc, &imac, adc, 0, PrecisionPolicy::Int8)
+        let m8 = DeployedModel::from_doc(&doc, &imac, adc, 0, PrecisionPolicy::Int8, None)
             .unwrap();
         let (b32, b8) = (m32.plan.weight_bytes(), m8.plan.weight_bytes());
         // LeNet conv: 2550 weights + 22 biases. fp32: 10288 B. int8:

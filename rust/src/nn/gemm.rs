@@ -44,6 +44,11 @@ pub fn conv_out_dims(h: usize, w: usize, k: usize, stride: usize, pad: usize) ->
 /// Generic over the element type so the int8 path stages pre-quantized `i8`
 /// activations through the identical control flow at 4× less memory
 /// traffic (`T::default()` is the zero pad value for both f32 and i8).
+// These kernel entry points thread many scalar dims on purpose: bundling
+// them into structs would obscure the hot-path signatures (and their
+// call-site symmetry with the oracle ops), so the argument-count lint is
+// waived per kernel rather than crate-wide.
+#[allow(clippy::too_many_arguments)]
 pub fn im2col_into<T: Copy + Default>(
     x: &[T],
     h: usize,
@@ -99,6 +104,7 @@ pub fn im2col_into<T: Copy + Default>(
 /// Every output row accumulates in ascending-`p` order (matching the direct
 /// conv oracle); rows are processed four at a time so each B row is read
 /// once per four A rows.
+#[allow(clippy::too_many_arguments)]
 pub fn gemm_bias(
     a: &[f32],
     m: usize,
@@ -187,6 +193,7 @@ pub const I8_GEMM_MAX_KK: usize = (i32::MAX / (127 * 127)) as usize;
 /// is caller-owned scratch (`m·n` i32) so the steady state allocates
 /// nothing; accumulation order over `p` is ascending, and the i32 section
 /// is *exact*, so blocking can never change results.
+#[allow(clippy::too_many_arguments)]
 pub fn gemm_i8_requant(
     a: &[i8],
     m: usize,
@@ -286,6 +293,7 @@ pub fn conv2d_gemm_i8(
 /// [`conv2d_gemm_i8`] with an explicit activation scale — the
 /// calibrated-static form (`quant::calibrate` produces the scale; the
 /// kernel clamps out-of-range samples to ±127 like a deployed TPU).
+#[allow(clippy::too_many_arguments)]
 pub fn conv2d_gemm_i8_with_scale(
     x: &super::tensor::Tensor,
     w: &[f32],
@@ -331,6 +339,7 @@ pub fn conv2d_gemm_i8_with_scale(
 /// zero just like the f32 path, and the i32 section is exact —
 /// overflow-guarded by the same `k·k · 127² ≤ i32::MAX` bound as
 /// [`gemm_i8_requant`] ([`I8_GEMM_MAX_KK`]).
+#[allow(clippy::too_many_arguments)]
 pub fn dwconv2d_i8_requant(
     x: &[i8],
     h: usize,
@@ -437,6 +446,7 @@ pub fn dwconv2d_i8(
 /// Depthwise conv into a caller-owned buffer with fused ReLU (depthwise
 /// gains nothing from im2col — each output channel touches only `k·k`
 /// weights — so this is the register-friendly direct form).
+#[allow(clippy::too_many_arguments)]
 pub fn dwconv2d_into(
     x: &[f32],
     h: usize,
@@ -516,6 +526,7 @@ pub fn avgpool_into(
     pool_into(x, h, w, c, k, stride, false, out)
 }
 
+#[allow(clippy::too_many_arguments)]
 fn pool_into(
     x: &[f32],
     h: usize,
@@ -715,7 +726,8 @@ mod tests {
             let b = g.vec_f32(c, -0.5, 0.5);
             let want = ops::dwconv2d(&x, &wgt, &b, k, stride, pad);
             let mut out = vec![0.0; want.data.len()];
-            let (oh, ow) = dwconv2d_into(&x.data, h, w, c, &wgt, &b, k, stride, pad, false, &mut out);
+            let (oh, ow) =
+                dwconv2d_into(&x.data, h, w, c, &wgt, &b, k, stride, pad, false, &mut out);
             assert_eq!((oh, ow), (want.h, want.w));
             let d = max_abs_diff(&out, &want.data);
             assert!(d < 1e-4, "dwconv k={k} s={stride} p={pad} c={c}: diff {d}");

@@ -46,5 +46,5 @@ pub mod tensor;
 
 pub use crate::quant::PrecisionPolicy;
 pub use engine::{ConvOp, ConvPlan, DeployedModel};
-pub use scratch::Scratch;
+pub use scratch::{ConvScratch, FcScratch, Scratch};
 pub use tensor::Tensor;

@@ -1,9 +1,21 @@
-//! Per-worker scratch arena for the zero-allocation inference hot path.
+//! Per-worker scratch arenas for the zero-allocation inference hot path.
 //!
-//! One [`Scratch`] lives in each serving worker (or bench loop) and is
-//! threaded through the conv plan, the sign bridge, and the IMAC fabric
-//! (whose batch path additionally stages per-partition ±1 sign bitmasks
-//! in [`Scratch::fc_bits`] for the bit-sliced layer-1 popcount kernel).
+//! One [`Scratch`] lives in each serving worker (or bench loop). It is
+//! split by pipeline stage so the conv plan and the IMAC fabric can borrow
+//! their buffers independently (the conv section's output block stays
+//! borrowed from [`ConvScratch`] while the FC section stages bitmasks and
+//! layer chains in [`FcScratch`]):
+//!
+//! * [`ConvScratch`] — everything [`crate::nn::ConvPlan::run`] touches:
+//!   f32/i8 im2col staging, the i8 activation copy, i32 accumulators and
+//!   the batched activation ping/pong pair.
+//! * [`FcScratch`] — the IMAC fabric's layer-chain ping/pong buffers plus
+//!   the packed ±1 sign-bitmask staging for the bit-sliced layer-1
+//!   popcount kernel.
+//! * [`Scratch::pack`] — the PJRT backend's fixed-batch input staging
+//!   buffer (images packed to the artifact batch, zero-padded tail), so
+//!   the PJRT request path allocates nothing at steady state either.
+//!
 //! Buffers grow monotonically to the high-water mark of the workload during
 //! warmup and are then reused verbatim: steady-state requests perform zero
 //! heap allocations inside the engine (proved by
@@ -11,12 +23,16 @@
 //! both the fp32 and the int8 conv path, including the i8 quantized
 //! staging and i32 accumulator buffers.
 //!
-//! Growth is tracked in [`Scratch::grow_events`] so tests and metrics can
-//! assert the arena has converged.
+//! Growth is tracked per arena ([`ConvScratch::grow_events`],
+//! [`Scratch::pack_grows`]; [`Scratch::grow_events`] sums them) so tests
+//! and metrics can assert the arenas have converged.
 
-/// Reusable buffers for one inference worker.
+use super::tensor::Tensor;
+
+/// Conv-section staging: the buffers [`crate::nn::ConvPlan::run`] threads
+/// through every layer of the compiled plan.
 #[derive(Debug, Default)]
-pub struct Scratch {
+pub struct ConvScratch {
     /// im2col staging: `batch·patches × k·k·cin` rows for the current layer.
     pub cols: Vec<f32>,
     /// Quantized im2col staging for the int8 conv path (one image at a
@@ -30,20 +46,41 @@ pub struct Scratch {
     pub act_a: Vec<f32>,
     /// Batched activation pong buffer.
     pub act_b: Vec<f32>,
-    /// IMAC fabric layer-chain ping buffer.
-    pub fc_a: Vec<f32>,
-    /// IMAC fabric layer-chain pong buffer.
-    pub fc_b: Vec<f32>,
-    /// Packed ±1 sign-bitmask staging for the bit-sliced IMAC layer-1
-    /// path (one `u64` word per 64 crossbar rows of the widest
-    /// partition; see `ImacLayer::preact_sign_batch`).
-    pub fc_bits: Vec<u64>,
-    /// Number of times any buffer had to reallocate (warmup growth).
+    /// Number of times any conv buffer had to reallocate (warmup growth).
     pub grow_events: u64,
     /// Dynamic activation-range scans (one per image per int8 layer whose
     /// plan carries no calibrated static scale). A calibrated int8 plan
     /// never increments this — asserted by the alloc/metrics tests.
     pub maxabs_scans: u64,
+}
+
+/// FC-section staging: the IMAC fabric's layer-chain buffers. Separate
+/// from [`ConvScratch`] so the fabric can run while the conv section's
+/// feature block is still borrowed from the conv arena.
+#[derive(Debug, Default)]
+pub struct FcScratch {
+    /// IMAC fabric layer-chain ping buffer.
+    pub a: Vec<f32>,
+    /// IMAC fabric layer-chain pong buffer.
+    pub b: Vec<f32>,
+    /// Packed ±1 sign-bitmask staging for the bit-sliced IMAC layer-1
+    /// path (one `u64` word per 64 crossbar rows of the widest
+    /// partition; see `ImacLayer::preact_sign_batch`).
+    pub bits: Vec<u64>,
+}
+
+/// Reusable buffers for one inference worker.
+#[derive(Debug, Default)]
+pub struct Scratch {
+    /// Conv-section arena (see [`ConvScratch`]).
+    pub conv: ConvScratch,
+    /// FC-section arena (see [`FcScratch`]).
+    pub fc: FcScratch,
+    /// PJRT fixed-batch input staging (`artifact_batch × in_elems`),
+    /// zero-padded past the live images. Unused by the native backend.
+    pub pack: Vec<f32>,
+    /// Reallocation count for [`Scratch::pack`] (warmup growth).
+    pub pack_grows: u64,
 }
 
 impl Scratch {
@@ -63,17 +100,43 @@ impl Scratch {
         buf.resize(len, T::default());
     }
 
+    /// Stage up to `slots` images of `elems` elements each into the PJRT
+    /// pack buffer, zero-filling the padded tail. Returns the full
+    /// `slots × elems` block. Zero allocations once the buffer is warm.
+    pub fn pack_images(&mut self, images: &[&Tensor], slots: usize, elems: usize) -> &[f32] {
+        assert!(images.len() <= slots, "chunk larger than artifact batch");
+        Self::ensure(&mut self.pack, &mut self.pack_grows, slots * elems);
+        for (i, img) in images.iter().enumerate() {
+            assert_eq!(img.data.len(), elems, "image {i} element count");
+            self.pack[i * elems..(i + 1) * elems].copy_from_slice(&img.data);
+        }
+        self.pack[images.len() * elems..slots * elems].fill(0.0);
+        &self.pack[..slots * elems]
+    }
+
+    /// Total reallocation count across every sub-arena (warmup growth;
+    /// steady state must not move this).
+    pub fn grow_events(&self) -> u64 {
+        self.conv.grow_events + self.pack_grows
+    }
+
+    /// Dynamic activation-range scans performed by the conv arena.
+    pub fn maxabs_scans(&self) -> u64 {
+        self.conv.maxabs_scans
+    }
+
     /// Current arena footprint in bytes (capacity, not live length).
     pub fn bytes(&self) -> usize {
-        4 * (self.cols.capacity()
-            + self.act_a.capacity()
-            + self.act_b.capacity()
-            + self.fc_a.capacity()
-            + self.fc_b.capacity()
-            + self.acc_i32.capacity())
-            + 8 * self.fc_bits.capacity()
-            + self.cols_i8.capacity()
-            + self.act_i8.capacity()
+        4 * (self.conv.cols.capacity()
+            + self.conv.act_a.capacity()
+            + self.conv.act_b.capacity()
+            + self.fc.a.capacity()
+            + self.fc.b.capacity()
+            + self.conv.acc_i32.capacity()
+            + self.pack.capacity())
+            + 8 * self.fc.bits.capacity()
+            + self.conv.cols_i8.capacity()
+            + self.conv.act_i8.capacity()
     }
 }
 
@@ -85,13 +148,13 @@ mod tests {
     fn ensure_counts_only_real_growth() {
         let mut s = Scratch::new();
         let mut grows = 0u64;
-        Scratch::ensure(&mut s.cols, &mut grows, 100);
+        Scratch::ensure(&mut s.conv.cols, &mut grows, 100);
         assert_eq!(grows, 1);
         // Shrink then regrow within capacity: no new allocation.
-        Scratch::ensure(&mut s.cols, &mut grows, 10);
-        Scratch::ensure(&mut s.cols, &mut grows, 100);
+        Scratch::ensure(&mut s.conv.cols, &mut grows, 10);
+        Scratch::ensure(&mut s.conv.cols, &mut grows, 100);
         assert_eq!(grows, 1);
-        Scratch::ensure(&mut s.cols, &mut grows, 200);
+        Scratch::ensure(&mut s.conv.cols, &mut grows, 200);
         assert_eq!(grows, 2);
         assert!(s.bytes() >= 200 * 4);
     }
@@ -100,15 +163,34 @@ mod tests {
     fn ensure_is_generic_over_arena_element_types() {
         let mut s = Scratch::new();
         let mut grows = 0u64;
-        Scratch::ensure(&mut s.cols_i8, &mut grows, 64);
-        Scratch::ensure(&mut s.act_i8, &mut grows, 32);
-        Scratch::ensure(&mut s.acc_i32, &mut grows, 16);
+        Scratch::ensure(&mut s.conv.cols_i8, &mut grows, 64);
+        Scratch::ensure(&mut s.conv.act_i8, &mut grows, 32);
+        Scratch::ensure(&mut s.conv.acc_i32, &mut grows, 16);
         assert_eq!(grows, 3);
-        assert_eq!(s.cols_i8.len(), 64);
-        assert_eq!(s.acc_i32.len(), 16);
+        assert_eq!(s.conv.cols_i8.len(), 64);
+        assert_eq!(s.conv.acc_i32.len(), 16);
         // i8 buffers count 1 byte each, i32 four.
         assert!(s.bytes() >= 64 + 32 + 16 * 4);
-        Scratch::ensure(&mut s.cols_i8, &mut grows, 48);
+        Scratch::ensure(&mut s.conv.cols_i8, &mut grows, 48);
         assert_eq!(grows, 3, "shrink must not count as growth");
+    }
+
+    #[test]
+    fn pack_images_zero_pads_and_converges() {
+        let mut s = Scratch::new();
+        let imgs: Vec<Tensor> =
+            (0..2).map(|i| Tensor::from_vec(1, 2, 1, vec![i as f32 + 1.0; 2])).collect();
+        let refs: Vec<&Tensor> = imgs.iter().collect();
+        let block = s.pack_images(&refs, 4, 2);
+        assert_eq!(block, &[1.0, 1.0, 2.0, 2.0, 0.0, 0.0, 0.0, 0.0]);
+        let grows = s.pack_grows;
+        assert!(grows > 0);
+        // A fuller chunk within the same slot count must not regrow — and
+        // a later partial chunk must re-zero the tail it no longer covers.
+        let all: Vec<&Tensor> = imgs.iter().chain(imgs.iter()).collect();
+        let _ = s.pack_images(&all, 4, 2);
+        let block = s.pack_images(&refs[..1], 4, 2);
+        assert_eq!(block[2..], [0.0; 6]);
+        assert_eq!(s.pack_grows, grows, "pack buffer regrew at steady state");
     }
 }

@@ -219,7 +219,7 @@ pub fn ternary_bitplanes(packed: &[u8], n_in: usize, n_out: usize) -> (Vec<u64>,
 /// bitmask: bit `i` of word `i/64` set iff `x[i]` is +1 (the bridge maps
 /// `v ≥ 0 → +1`). Writes the first `bitplane_words(x.len())` words of
 /// `out` (padding bits cleared); zero allocations — the serving hot path
-/// reuses one scratch buffer per worker (`Scratch::fc_bits`).
+/// reuses one scratch buffer per worker (`FcScratch::bits`).
 pub fn pack_sign_bitmask(x: &[f32], out: &mut [u64]) {
     let words = bitplane_words(x.len());
     assert!(out.len() >= words, "bitmask buffer too short");

@@ -293,7 +293,12 @@ mod tests {
         assert_eq!(p.output(), FeatureShape::new(12, 12, 6));
         assert_eq!(p.engine_hybrid(), Engine::Vector);
         assert!(p.gemm().is_none());
-        let f = Layer { name: "f".into(), kind: LayerKind::Flatten, input: FeatureShape::new(4, 4, 64), side: false };
+        let f = Layer {
+            name: "f".into(),
+            kind: LayerKind::Flatten,
+            input: FeatureShape::new(4, 4, 64),
+            side: false,
+        };
         assert_eq!(f.output().c, 1024);
     }
 }

@@ -121,7 +121,14 @@ impl ModelBuilder {
     /// Residual-shortcut projection conv: consumes `input` (the branch
     /// point's shape), not the running shape; does not advance the running
     /// shape. Contributes params + systolic cycles like any conv.
-    pub fn side_conv(&mut self, input: FeatureShape, k: usize, cout: usize, stride: usize, pad: usize) -> &mut Self {
+    pub fn side_conv(
+        &mut self,
+        input: FeatureShape,
+        k: usize,
+        cout: usize,
+        stride: usize,
+        pad: usize,
+    ) -> &mut Self {
         self.counter += 1;
         self.layers.push(Layer {
             name: format!("sideconv{}", self.counter),

@@ -6,13 +6,24 @@
 //! buffers live in the same arena), on both a plain conv stack (LeNet)
 //! and a depthwise MobileNet-style stack exercising the DwI8 kernel.
 //! Calibrated plans must additionally perform **zero** per-image max-abs
-//! scans (`Scratch::maxabs_scans` stays 0 — the scan is gone from the
+//! scans (`ConvScratch::maxabs_scans` stays 0 — the scan is gone from the
 //! steady state, not merely cheap).
+//!
+//! Deployments are built through `DeploymentSpec` (the same front door the
+//! serving registry uses), and the suite additionally covers:
+//!
+//! * a **two-deployment `ModelRegistry`** (fp32 LeNet + int8 dw-stack):
+//!   per-batch slot resolution plus interleaved inference through
+//!   per-model scratch arenas stays allocation-free at steady state — the
+//!   registry request path adds no heap traffic of its own;
+//! * the **PJRT pack buffer** (`Scratch::pack_images`): staging a chunk
+//!   into the fixed artifact batch reuses the arena's pack buffer instead
+//!   of allocating per chunk.
 //!
 //! Since the bit-sliced FC hot path landed, both `infer_into` and
 //! `infer_batch_into` drive the whole FC section batch-at-a-time through
 //! `ImacFabric::forward_batch_into` — layer-1 popcount bitplanes staged
-//! in `Scratch::fc_bits`, later layers through the cache-blocked batched
+//! in `FcScratch::bits`, later layers through the cache-blocked batched
 //! analog MVM — so the zero-alloc budget below covers the batched FC
 //! path (and its sign-bitmask staging) across every deployment shape.
 //!
@@ -22,9 +33,10 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use tpu_imac::imac::{AdcConfig, ImacConfig};
+use tpu_imac::coordinator::ModelRegistry;
+use tpu_imac::deploy::DeploymentSpec;
 use tpu_imac::nn::synthetic::{lenet_weights_doc, mobilenet_mini_weights_doc};
-use tpu_imac::nn::{DeployedModel, PrecisionPolicy, Scratch, Tensor};
+use tpu_imac::nn::{PrecisionPolicy, Scratch, Tensor};
 use tpu_imac::quant::calibrate_conv_ops;
 use tpu_imac::util::rng::Xoshiro256;
 
@@ -68,13 +80,7 @@ fn steady_state_inference_allocates_nothing() {
     for (doc, i8_layers) in &docs {
         // Calibration happens offline (allocates freely, outside the
         // counted region), like `tpu-imac calibrate`.
-        let oracle = DeployedModel::from_json(
-            doc,
-            &ImacConfig::default(),
-            AdcConfig { bits: 0, full_scale: 1.0 },
-            0,
-        )
-        .unwrap();
+        let oracle = DeploymentSpec::doc("oracle", doc.clone()).build().unwrap().model;
         let table = calibrate_conv_ops(&oracle.conv_ops, &images, 100.0).unwrap();
 
         for (precision, calibrated) in [
@@ -82,15 +88,11 @@ fn steady_state_inference_allocates_nothing() {
             (PrecisionPolicy::Int8, false),
             (PrecisionPolicy::Int8, true),
         ] {
-            let model = DeployedModel::from_json_calibrated(
-                doc,
-                &ImacConfig::default(),
-                AdcConfig { bits: 0, full_scale: 1.0 },
-                0,
-                precision,
-                if calibrated { Some(&table) } else { None },
-            )
-            .unwrap();
+            let mut spec = DeploymentSpec::doc("m", doc.clone()).precision(precision);
+            if calibrated {
+                spec = spec.calibration_table(table.clone());
+            }
+            let model = spec.build().unwrap().model;
             let mut scratch = Scratch::new();
 
             // Warmup: grow the arena to the workload's high-water mark
@@ -101,13 +103,13 @@ fn steady_state_inference_allocates_nothing() {
                 sum += model.infer_into(img, &mut scratch)[0];
             }
             model.infer_batch_into(&refs, &mut scratch, |_, scores| sum += scores[0]);
-            let warm_grows = scratch.grow_events;
+            let warm_grows = scratch.grow_events();
             assert!(warm_grows > 0, "warmup should have grown the arena");
             assert!(
-                scratch.fc_bits.capacity() > 0,
+                scratch.fc.bits.capacity() > 0,
                 "the bit-sliced FC path must have staged sign bitmasks during warmup"
             );
-            let warm_scans = scratch.maxabs_scans;
+            let warm_scans = scratch.maxabs_scans();
 
             // Steady state: count every heap allocation across
             // single-image and batched inference. Must be exactly zero,
@@ -131,19 +133,21 @@ fn steady_state_inference_allocates_nothing() {
                 "steady-state {label} request path performed {delta} heap allocations (want 0)"
             );
             assert_eq!(
-                scratch.grow_events, warm_grows,
+                scratch.grow_events(),
+                warm_grows,
                 "{label} scratch arena regrew at steady state"
             );
             // The max-abs pass: gone entirely under calibration, one per
             // image per quantized layer otherwise (48 images steady-state:
             // 3 rounds × (8 single + 8 batched)).
-            let steady_scans = scratch.maxabs_scans - warm_scans;
+            let steady_scans = scratch.maxabs_scans() - warm_scans;
             match (precision, calibrated) {
                 (PrecisionPolicy::Fp32, _) => {
-                    assert_eq!(scratch.maxabs_scans, 0, "fp32 plan never scans")
+                    assert_eq!(scratch.maxabs_scans(), 0, "fp32 plan never scans")
                 }
                 (PrecisionPolicy::Int8, true) => assert_eq!(
-                    scratch.maxabs_scans, 0,
+                    scratch.maxabs_scans(),
+                    0,
                     "calibrated int8 plan must not scan activation ranges"
                 ),
                 (PrecisionPolicy::Int8, false) => assert_eq!(
@@ -154,4 +158,64 @@ fn steady_state_inference_allocates_nothing() {
             }
         }
     }
+
+    // Two-deployment registry: the multi-model request path — per-batch
+    // slot resolution + per-model scratch arenas over Arc-shared plans —
+    // must stay allocation-free at steady state too, across deployment
+    // shapes (fp32 LeNet, int8 dw-stack) interleaved like mixed traffic.
+    let registry = ModelRegistry::new();
+    registry
+        .register(&DeploymentSpec::doc("lenet", docs[0].0.clone()))
+        .unwrap();
+    registry
+        .register(
+            &DeploymentSpec::doc("mm", docs[1].0.clone()).precision(PrecisionPolicy::Int8),
+        )
+        .unwrap();
+    assert_eq!(registry.slot("lenet"), Some(0));
+    assert_eq!(registry.slot("mm"), Some(1));
+    let mut scratches = [Scratch::new(), Scratch::new()];
+    let mut sum = 0.0f32;
+    // Warmup both per-model arenas through the resolved deployments.
+    for slot in [0usize, 1, 0, 1] {
+        let (_, dep) = registry.resolve(slot).unwrap();
+        dep.model.infer_batch_into(&refs, &mut scratches[slot], |_, scores| sum += scores[0]);
+    }
+    let warm: u64 = scratches.iter().map(|s| s.grow_events()).sum();
+    let before = ALLOCS.load(Ordering::SeqCst);
+    for round in 0..6 {
+        // Alternate models per "batch" exactly like interleaved traffic.
+        let slot = round % 2;
+        let (generation, dep) = registry.resolve(slot).unwrap();
+        assert_eq!(generation, 1, "no swap happened");
+        dep.model.infer_batch_into(&refs, &mut scratches[slot], |_, scores| sum += scores[0]);
+    }
+    let delta = ALLOCS.load(Ordering::SeqCst) - before;
+    assert!(sum.is_finite());
+    assert_eq!(
+        delta, 0,
+        "steady-state 2-deployment registry path performed {delta} heap allocations (want 0)"
+    );
+    assert_eq!(
+        scratches.iter().map(|s| s.grow_events()).sum::<u64>(),
+        warm,
+        "registry scratch arenas regrew at steady state"
+    );
+
+    // PJRT pack-buffer staging: packing a chunk into the fixed artifact
+    // batch must reuse the arena's pack buffer (zero-padded tail), not
+    // allocate per chunk.
+    let mut scratch = Scratch::new();
+    let _ = scratch.pack_images(&refs, 8, 784); // warmup
+    let pack_grows = scratch.pack_grows;
+    assert!(pack_grows > 0, "warmup should have grown the pack buffer");
+    let before = ALLOCS.load(Ordering::SeqCst);
+    for chunk in [&refs[..8], &refs[..3], &refs[..5]] {
+        let block = scratch.pack_images(chunk, 8, 784);
+        sum += block[0] + block[8 * 784 - 1];
+    }
+    let delta = ALLOCS.load(Ordering::SeqCst) - before;
+    assert!(sum.is_finite());
+    assert_eq!(delta, 0, "steady-state pack staging performed {delta} heap allocations (want 0)");
+    assert_eq!(scratch.pack_grows, pack_grows, "pack buffer regrew at steady state");
 }

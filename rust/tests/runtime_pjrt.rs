@@ -6,8 +6,9 @@
 //! These tests are artifact-gated: they skip (with a notice) when
 //! `artifacts/` hasn't been built yet, so `cargo test` works pre-`make`.
 
-use tpu_imac::imac::{AdcConfig, ImacConfig};
-use tpu_imac::nn::{DeployedModel, Tensor};
+use tpu_imac::deploy::DeploymentSpec;
+use tpu_imac::imac::ImacConfig;
+use tpu_imac::nn::Tensor;
 use tpu_imac::runtime::Runtime;
 use tpu_imac::util::rng::Xoshiro256;
 
@@ -33,13 +34,10 @@ fn conv_artifact_matches_rust_engine() {
     let mut rt = Runtime::open(&dir).unwrap();
     rt.check_spec(&ImacConfig::default()).unwrap();
     let exe = rt.load("lenet_conv_b1.hlo.txt").unwrap();
-    let model = DeployedModel::load(
-        &format!("{dir}/weights_lenet.json"),
-        &ImacConfig::default(),
-        AdcConfig { bits: 0, full_scale: 1.0 },
-        0,
-    )
-    .unwrap();
+    let model = DeploymentSpec::json_file("lenet", format!("{dir}/weights_lenet.json"))
+        .build()
+        .unwrap()
+        .model;
 
     let mut rng = Xoshiro256::seed_from_u64(11);
     for _ in 0..4 {
@@ -85,13 +83,10 @@ fn pjrt_fc_matches_rust_imac_fabric() {
     let Some(dir) = artifacts_dir() else { return };
     let mut rt = Runtime::open(&dir).unwrap();
     let fc = rt.load("imac_fc_b1.hlo.txt").unwrap();
-    let model = DeployedModel::load(
-        &format!("{dir}/weights_lenet.json"),
-        &ImacConfig::default(),
-        AdcConfig { bits: 0, full_scale: 1.0 },
-        0,
-    )
-    .unwrap();
+    let model = DeploymentSpec::json_file("lenet", format!("{dir}/weights_lenet.json"))
+        .build()
+        .unwrap()
+        .model;
     let n_in = model.fabric.n_in();
     let mut rng = Xoshiro256::seed_from_u64(17);
     for _ in 0..4 {
@@ -111,13 +106,10 @@ fn end_to_end_predictions_agree_native_vs_pjrt() {
     let Some(dir) = artifacts_dir() else { return };
     let mut rt = Runtime::open(&dir).unwrap();
     let full = rt.load("lenet_full_b1.hlo.txt").unwrap();
-    let model = DeployedModel::load(
-        &format!("{dir}/weights_lenet.json"),
-        &ImacConfig::default(),
-        AdcConfig { bits: 0, full_scale: 1.0 },
-        0,
-    )
-    .unwrap();
+    let model = DeploymentSpec::json_file("lenet", format!("{dir}/weights_lenet.json"))
+        .build()
+        .unwrap()
+        .model;
     let mut rng = Xoshiro256::seed_from_u64(19);
     let mut agree = 0;
     let n = 16;

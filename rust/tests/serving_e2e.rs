@@ -1,11 +1,16 @@
 //! Serving-stack integration: coordinator + backends end to end, including
 //! the cross-precision conformance suite (fp32 vs dynamic-int8 vs
-//! calibrated-int8 workers over the same batch).
+//! calibrated-int8 workers over the same batch) and the multi-model
+//! registry (interleaved tagged requests, per-model metrics, hot swap,
+//! clean unknown-model errors).
 
+use std::sync::Arc;
 use std::time::Duration;
 
-use tpu_imac::coordinator::{Coordinator, CoordinatorConfig, NativeBackend, PjrtConvBackend};
-use tpu_imac::imac::{AdcConfig, ImacConfig};
+use tpu_imac::coordinator::{
+    Coordinator, CoordinatorConfig, ModelRegistry, NativeBackend, PjrtConvBackend,
+};
+use tpu_imac::deploy::DeploymentSpec;
 use tpu_imac::nn::synthetic::{lenet_weights_doc, mobilenet_mini_weights_doc};
 use tpu_imac::nn::{DeployedModel, PrecisionPolicy, Scratch, Tensor};
 use tpu_imac::quant::{calibrate_conv_ops, CalibrationTable};
@@ -22,14 +27,11 @@ fn artifacts_dir() -> Option<String> {
     }
 }
 
-fn load_model(dir: &str) -> DeployedModel {
-    DeployedModel::load(
-        &format!("{dir}/weights_lenet.json"),
-        &ImacConfig::default(),
-        AdcConfig { bits: 0, full_scale: 1.0 },
-        0,
-    )
-    .unwrap()
+fn load_model(dir: &str) -> Arc<DeployedModel> {
+    DeploymentSpec::json_file("lenet", format!("{dir}/weights_lenet.json"))
+        .build()
+        .unwrap()
+        .model
 }
 
 #[test]
@@ -69,7 +71,7 @@ fn pjrt_serving_matches_native_predictions() {
         move || {
             let model = load_model(&dir2);
             let mut rt = Runtime::open(&dir2).unwrap();
-            rt.check_spec(&ImacConfig::default()).unwrap();
+            rt.check_spec(&tpu_imac::imac::ImacConfig::default()).unwrap();
             rt.load("lenet_conv_b8.hlo.txt").unwrap();
             Box::new(PjrtConvBackend::new(rt, "lenet_conv_b8.hlo.txt", model).unwrap())
         },
@@ -104,19 +106,8 @@ fn pjrt_serving_matches_native_predictions() {
 fn cross_precision_conformance_fp32_dynamic_calibrated() {
     let mut rng = Xoshiro256::seed_from_u64(71);
     let doc = mobilenet_mini_weights_doc(&mut rng);
-    let build = |precision: PrecisionPolicy, calib: Option<&CalibrationTable>| {
-        DeployedModel::from_json_calibrated(
-            &doc,
-            &ImacConfig::default(),
-            AdcConfig { bits: 0, full_scale: 1.0 },
-            0,
-            precision,
-            calib,
-        )
-        .unwrap()
-    };
     // Calibrate on samples from the same distribution as the test batch.
-    let oracle = build(PrecisionPolicy::Fp32, None);
+    let oracle = DeploymentSpec::doc("mm", doc.clone()).build().unwrap().model;
     let samples: Vec<Tensor> = (0..16)
         .map(|_| Tensor::from_vec(28, 28, 1, (0..784).map(|_| rng.next_f32() - 0.5).collect()))
         .collect();
@@ -137,22 +128,16 @@ fn cross_precision_conformance_fp32_dynamic_calibrated() {
     ];
     for (precision, calib) in variants {
         let is_calibrated = calib.is_some();
-        let doc2 = doc.clone();
-        let coord = Coordinator::start(
+        let mut spec = DeploymentSpec::doc("mm", doc.clone()).precision(precision);
+        if let Some(t) = calib {
+            spec = spec.calibration_table(t);
+        }
+        let registry = ModelRegistry::with_specs(&[spec]).unwrap();
+        let coord = Coordinator::start_registry(
             CoordinatorConfig { max_batch: 5, ..Default::default() },
-            move || {
-                let m = DeployedModel::from_json_calibrated(
-                    &doc2,
-                    &ImacConfig::default(),
-                    AdcConfig { bits: 0, full_scale: 1.0 },
-                    0,
-                    precision,
-                    calib.as_ref(),
-                )
-                .unwrap();
-                Box::new(NativeBackend::new(m))
-            },
-        );
+            registry,
+        )
+        .unwrap();
         let client = coord.client();
         let mut passes: Vec<Vec<usize>> = Vec::new();
         for _ in 0..2 {
@@ -199,7 +184,8 @@ fn cross_precision_conformance_fp32_dynamic_calibrated() {
     // features near the sign threshold, so the floor is 80%, not 100% —
     // see the engine-level agreement tests for the rationale).
     let [p32, p8d, p8c] = [&predictions[0], &predictions[1], &predictions[2]];
-    let agree = |a: &Vec<usize>, b: &Vec<usize>| a.iter().zip(b.iter()).filter(|(x, y)| x == y).count();
+    let agree =
+        |a: &Vec<usize>, b: &Vec<usize>| a.iter().zip(b.iter()).filter(|(x, y)| x == y).count();
     assert!(
         agree(p32, p8d) * 100 >= n * 80,
         "fp32 vs dynamic-int8 agreement {}/{n}",
@@ -217,6 +203,115 @@ fn cross_precision_conformance_fp32_dynamic_calibrated() {
     );
 }
 
+/// The multi-model registry acceptance test: two named deployments with
+/// different precision policies served concurrently from one queue.
+/// Interleaved tagged requests route to the right plan (predictions match
+/// each deployment's own hot path), per-model metrics account each stream
+/// separately, an unknown model id is a clean error (not a panic), plain
+/// `submit` keeps routing to the default deployment, and
+/// `ModelRegistry::swap` hot-reloads one deployment without disturbing
+/// the other or dropping responses.
+#[test]
+fn multi_model_registry_routes_accounts_and_swaps() {
+    let mut rng = Xoshiro256::seed_from_u64(97);
+    let lenet_doc = lenet_weights_doc(&mut rng);
+    let mm_doc = mobilenet_mini_weights_doc(&mut rng);
+    let registry = Arc::new(ModelRegistry::new());
+    registry
+        .register(&DeploymentSpec::doc("lenet", lenet_doc.clone()))
+        .unwrap();
+    registry
+        .register(
+            &DeploymentSpec::doc("mm", mm_doc.clone()).precision(PrecisionPolicy::Int8),
+        )
+        .unwrap();
+
+    // Reference models built the same way the registry builds them.
+    let lenet_oracle = registry.deployment("lenet").unwrap();
+    let mm_oracle = registry.deployment("mm").unwrap();
+    assert_eq!(lenet_oracle.precision(), PrecisionPolicy::Fp32);
+    assert_eq!(mm_oracle.precision(), PrecisionPolicy::Int8);
+
+    let coord = Coordinator::start_registry(
+        CoordinatorConfig { max_batch: 4, workers: 2, ..Default::default() },
+        registry.clone(),
+    )
+    .unwrap();
+    let client = coord.client();
+
+    // Unknown model id: clean client-side error, nothing enqueued.
+    let img = Tensor::from_vec(28, 28, 1, vec![0.1; 784]);
+    let err = client.submit_to("resnet50", img).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("unknown model 'resnet50'"), "{msg}");
+    assert!(msg.contains("lenet") && msg.contains("mm"), "{msg}");
+
+    // Interleaved tagged traffic across both deployments.
+    let n = 30usize;
+    let mut rxs = Vec::with_capacity(n);
+    let mut images = Vec::with_capacity(n);
+    for i in 0..n {
+        let img = Tensor::from_vec(28, 28, 1, (0..784).map(|_| rng.next_f32() - 0.5).collect());
+        let name = if i % 2 == 0 { "lenet" } else { "mm" };
+        rxs.push(client.submit_to(name, img.clone()).unwrap().1);
+        images.push(img);
+    }
+    let (mut s_lenet, mut s_mm) = (Scratch::new(), Scratch::new());
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        let want = if i % 2 == 0 {
+            tpu_imac::util::stats::argmax(lenet_oracle.model.infer_into(&images[i], &mut s_lenet))
+        } else {
+            tpu_imac::util::stats::argmax(mm_oracle.model.infer_into(&images[i], &mut s_mm))
+        };
+        assert_eq!(resp.predicted, want, "request {i} routed to the wrong deployment?");
+    }
+
+    // Plain submit routes to the default deployment (slot 0 = lenet).
+    let img = Tensor::from_vec(28, 28, 1, (0..784).map(|_| rng.next_f32() - 0.5).collect());
+    let resp = client.infer_blocking(img.clone()).unwrap();
+    assert_eq!(
+        resp.predicted,
+        tpu_imac::util::stats::argmax(lenet_oracle.model.infer_into(&img, &mut s_lenet))
+    );
+
+    // Per-model metrics: each stream accounted under its own name, and the
+    // global counters cover both; int8 images only from the mm stream.
+    let snap = coord.metrics.snapshot();
+    assert_eq!(snap.completed, n as u64 + 1);
+    let by_name = |name: &str| {
+        snap.models
+            .iter()
+            .find(|m| m.name == name)
+            .unwrap_or_else(|| panic!("per-model metrics missing '{name}'"))
+    };
+    assert_eq!(by_name("lenet").completed, n as u64 / 2 + 1);
+    assert_eq!(by_name("mm").completed, n as u64 / 2);
+    assert!(by_name("lenet").p95_latency_us >= by_name("lenet").p50_latency_us);
+    assert_eq!(snap.int8_images, n as u64 / 2, "only the mm stream is int8");
+
+    // Hot swap: replace 'mm' with an fp32 deployment of the same weights.
+    // Requests submitted after the swap must run the new plan; 'lenet'
+    // is untouched.
+    registry
+        .swap("mm", &DeploymentSpec::doc("mm", mm_doc.clone()))
+        .unwrap();
+    let mm_v2 = registry.deployment("mm").unwrap();
+    assert_eq!(mm_v2.precision(), PrecisionPolicy::Fp32);
+    let mut s_v2 = Scratch::new();
+    for _ in 0..8 {
+        let img = Tensor::from_vec(28, 28, 1, (0..784).map(|_| rng.next_f32() - 0.5).collect());
+        let resp = client.infer_blocking_to("mm", img.clone()).unwrap();
+        let want = tpu_imac::util::stats::argmax(mm_v2.model.infer_into(&img, &mut s_v2));
+        assert_eq!(resp.predicted, want, "post-swap request must run the swapped plan");
+    }
+    let snap2 = coord.metrics.snapshot();
+    let mm2 = snap2.models.iter().find(|m| m.name == "mm").unwrap();
+    assert_eq!(mm2.completed, n as u64 / 2 + 8, "post-swap batches keep accounting to 'mm'");
+    assert_eq!(snap2.completed, n as u64 + 9, "no response was dropped across the swap");
+    coord.shutdown();
+}
+
 /// Batched-vs-per-row FC equivalence (the bit-sliced FC hot path's
 /// acceptance test): on one conv feature block, the batch-at-a-time fabric
 /// path — layer-1 popcount bitplanes + cache-blocked batched analog MVM +
@@ -229,17 +324,7 @@ fn cross_precision_conformance_fp32_dynamic_calibrated() {
 fn batched_fc_path_bit_exact_vs_per_row_and_counted() {
     let mut rng = Xoshiro256::seed_from_u64(83);
     let doc = lenet_weights_doc(&mut rng);
-    let build = || {
-        DeployedModel::from_json_with(
-            &doc,
-            &ImacConfig::default(),
-            AdcConfig { bits: 0, full_scale: 1.0 },
-            0,
-            PrecisionPolicy::Fp32,
-        )
-        .unwrap()
-    };
-    let m = build();
+    let m = DeploymentSpec::doc("lenet", doc.clone()).build().unwrap().model;
     assert!(m.fabric.uses_bitplane_path());
     let n = 9usize; // not a multiple of the 4-image register block
     let images: Vec<Tensor> = (0..n)
@@ -250,48 +335,25 @@ fn batched_fc_path_bit_exact_vs_per_row_and_counted() {
     // One conv pass for the whole batch, then compare the two FC paths on
     // the identical bridged feature block.
     let mut s = Scratch::new();
-    let Scratch {
-        cols,
-        cols_i8,
-        act_i8,
-        acc_i32,
-        act_a,
-        act_b,
-        fc_a,
-        fc_b,
-        fc_bits,
-        grow_events,
-        maxabs_scans,
-    } = &mut s;
-    let feats = m.plan.run_parts(
-        &refs, cols, cols_i8, act_i8, acc_i32, act_a, act_b, grow_events, maxabs_scans,
-    );
+    let feats = m.plan.run(&refs, &mut s.conv);
     DeployedModel::bridge_in_place(feats);
     let flen = m.plan.feat_len();
+    let fc = &mut s.fc;
     let mut want = Vec::new();
     for row in feats.chunks_exact(flen) {
-        want.extend_from_slice(m.fabric.forward_into(row, fc_a, fc_b));
+        want.extend_from_slice(m.fabric.forward_into(row, &mut fc.a, &mut fc.b));
     }
-    let got = m.fabric.forward_batch_into(feats, n, fc_bits, fc_a, fc_b).to_vec();
+    let got = m.fabric.forward_batch_into(feats, n, &mut fc.bits, &mut fc.a, &mut fc.b).to_vec();
     assert_eq!(got, want, "batched FC path must be bit-exact vs the per-row fabric path");
 
     // Serve the same images: predictions must match the per-image hot
     // path, and the bit-sliced layer-1 accounting must cover every image.
-    let doc2 = doc.clone();
-    let coord = Coordinator::start(
+    let registry = ModelRegistry::with_specs(&[DeploymentSpec::doc("lenet", doc)]).unwrap();
+    let coord = Coordinator::start_registry(
         CoordinatorConfig { max_batch: 4, ..Default::default() },
-        move || {
-            let m = DeployedModel::from_json_with(
-                &doc2,
-                &ImacConfig::default(),
-                AdcConfig { bits: 0, full_scale: 1.0 },
-                0,
-                PrecisionPolicy::Fp32,
-            )
-            .unwrap();
-            Box::new(NativeBackend::new(m))
-        },
-    );
+        registry,
+    )
+    .unwrap();
     let client = coord.client();
     let rxs: Vec<_> = images.iter().map(|img| client.submit(img.clone()).unwrap().1).collect();
     let served: Vec<usize> = rxs
