@@ -6,9 +6,11 @@
 //! Two parts:
 //!
 //! 1. the historical max-batch sweep (plain prints, shapes unchanged);
-//! 2. a `BenchSuite` pair — single-model registry vs **multi-model
+//! 2. a `BenchSuite` trio — single-model registry vs **multi-model
 //!    registry under mixed traffic** (2 deployments, distinct precisions,
-//!    alternating `submit_to`) — so the registry's routing overhead is a
+//!    alternating `submit_to`) vs the **guarded single-model path** (every
+//!    request carries a deadline budget, measuring the resilience layer's
+//!    fault-free overhead) — so routing and resilience overheads are
 //!    tracked series: `cargo bench --bench e2e_serving -- --json
 //!    BENCH_hotpath.json` merges the suite into the same report the conv
 //!    bench writes (existing suite/row names untouched).
@@ -66,7 +68,7 @@ fn main() {
             rxs.push(client.submit(rand_image(&mut rng)).unwrap().1);
         }
         for rx in rxs {
-            rx.recv().unwrap();
+            rx.recv().unwrap().expect("fault-free bench request");
         }
         let wall = t0.elapsed();
         let snap = coord.metrics.snapshot();
@@ -105,7 +107,7 @@ fn main() {
             let rxs: Vec<_> = (0..wave)
                 .map(|_| client.submit(rand_image(&mut rng)).unwrap().1)
                 .collect();
-            rxs.into_iter().map(|rx| rx.recv().unwrap().predicted as u64).sum()
+            rxs.into_iter().map(|rx| rx.recv().unwrap().unwrap().predicted as u64).sum()
         });
     }
     {
@@ -135,7 +137,38 @@ fn main() {
                         client.submit_to(name, rand_image(&mut rng)).unwrap().1
                     })
                     .collect();
-                rxs.into_iter().map(|rx| rx.recv().unwrap().predicted as u64).sum()
+                rxs.into_iter().map(|rx| rx.recv().unwrap().unwrap().predicted as u64).sum()
+            },
+        );
+    }
+    {
+        // Guarded-path overhead: the same single-model wave, but every
+        // request carries a (generous) deadline budget — measuring what
+        // the resilience layer (deadline bookkeeping, admission check,
+        // supervised worker loop) costs on a fault-free run.
+        let registry = Arc::new(ModelRegistry::new());
+        registry.register_built(lenet.clone()).expect("guarded registry");
+        let coord = Coordinator::start_registry(
+            CoordinatorConfig { max_batch: 8, ..Default::default() },
+            registry,
+        )
+        .expect("start guarded single-model registry");
+        let client = coord.client();
+        let mut rng = Xoshiro256::seed_from_u64(11);
+        suite.bench_throughput(
+            "registry single-model guarded (deadline budget, batch 8)",
+            wave as f64,
+            move || {
+                let _keepalive = &coord;
+                let rxs: Vec<_> = (0..wave)
+                    .map(|_| {
+                        client
+                            .submit_within(rand_image(&mut rng), std::time::Duration::from_secs(30))
+                            .unwrap()
+                            .1
+                    })
+                    .collect();
+                rxs.into_iter().map(|rx| rx.recv().unwrap().unwrap().predicted as u64).sum()
             },
         );
     }
@@ -149,10 +182,17 @@ fn main() {
     };
     let single = mean("registry single-model (batch 8)");
     let multi = mean("registry multi-model mixed (2 deployments, batch 8)");
+    let guarded = mean("registry single-model guarded (deadline budget, batch 8)");
     println!(
         "registry routing: single {:.2} ms/wave vs mixed 2-model {:.2} ms/wave ({:.2}x)",
         single / 1e6,
         multi / 1e6,
         multi / single
+    );
+    println!(
+        "resilience overhead: guarded {:.2} ms/wave vs plain {:.2} ms/wave ({:+.1}%)",
+        guarded / 1e6,
+        single / 1e6,
+        (guarded / single - 1.0) * 100.0
     );
 }

@@ -14,9 +14,12 @@
 //!              "deployments": [
 //!                {"name": "lenet", "precision": "int8",
 //!                 "weights": "artifacts/weights_lenet.json",
-//!                 "calibration": "calibration.json"},
+//!                 "calibration": "calibration.json",
+//!                 "queue_quota": 64},
 //!                {"name": "mm", "synthetic": "mobilenet-mini", "seed": 5,
-//!                 "precision": "fp32"}
+//!                 "precision": "fp32",
+//!                 "faults": {"seed": 7, "panic_every": 50, "slow_every": 20,
+//!                            "slow_us": 500, "nan_every": 0}}
 //!              ]}
 //! }
 //! ```
@@ -40,12 +43,18 @@
 //! counterparts. The CLI flag `serve --models
 //! lenet=int8:cal.json,mobilenetv1=fp32` overrides the whole array.
 //!
+//! Per-entry resilience knobs: `queue_quota` caps how many of the
+//! coordinator's queued requests one deployment may hold before new
+//! submits are shed (omitted = a fair share of `serve.max_queue`);
+//! `faults` attaches a deterministic [`crate::coordinator::FaultPlan`]
+//! (chaos testing / drills only — omit it in production configs).
+//!
 //! Every field is optional; omitted fields keep their defaults. The CLI's
 //! `--config <path>` loads one of these; explicit CLI flags still win.
 
 use anyhow::{bail, Context, Result};
 
-use crate::coordinator::CoordinatorConfig;
+use crate::coordinator::{CoordinatorConfig, FaultPlan};
 use crate::imac::{AdcConfig, CrossbarConfig, DeviceConfig, ImacConfig, NeuronConfig};
 use crate::quant::PrecisionPolicy;
 use crate::systolic::{ArrayConfig, Dataflow, FoldOverlap, SramConfig};
@@ -99,6 +108,11 @@ pub struct ServeDeployment {
     pub precision: PrecisionPolicy,
     /// Optional per-deployment calibration-table path (int8 only).
     pub calibration: Option<String>,
+    /// Admission-control queue-depth quota; `None` = fair share of the
+    /// coordinator queue.
+    pub queue_quota: Option<usize>,
+    /// Deterministic fault-injection plan (chaos testing only).
+    pub faults: Option<FaultPlan>,
 }
 
 impl Default for ServeDefaults {
@@ -255,6 +269,22 @@ impl Config {
                              not both"
                         );
                     }
+                    let faults = {
+                        let f = entry.get("faults");
+                        if f.is_null() {
+                            None
+                        } else {
+                            Some(FaultPlan {
+                                seed: f.get("seed").as_u64().unwrap_or(0),
+                                panic_every: f.get("panic_every").as_u64(),
+                                die_on_batch: f.get("die_on_batch").as_u64(),
+                                slow_every: f.get("slow_every").as_u64(),
+                                slow_us: f.get("slow_us").as_u64().unwrap_or(0),
+                                nan_every: f.get("nan_every").as_u64(),
+                                fail_build: f.get("fail_build").as_bool().unwrap_or(false),
+                            })
+                        }
+                    };
                     cfg.serve.deployments.push(ServeDeployment {
                         name,
                         weights,
@@ -262,6 +292,8 @@ impl Config {
                         seed: entry.get("seed").as_u64().unwrap_or(crate::deploy::SYNTHETIC_SEED),
                         precision,
                         calibration: entry.get("calibration").as_str().map(str::to_string),
+                        queue_quota: entry.get("queue_quota").as_usize(),
+                        faults,
                     });
                 }
             }
@@ -379,6 +411,35 @@ mod tests {
                 .unwrap()
         )
         .is_err());
+    }
+
+    #[test]
+    fn deployment_resilience_knobs_parse() {
+        let c = Config::from_json(
+            &Json::parse(
+                r#"{"serve": {"deployments": [
+                    {"name": "a", "synthetic": "lenet", "queue_quota": 64},
+                    {"name": "b", "synthetic": "mobilenet-mini",
+                     "faults": {"seed": 7, "panic_every": 50, "slow_every": 20,
+                                "slow_us": 500, "fail_build": false}}
+                ]}}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        let d0 = &c.serve.deployments[0];
+        assert_eq!(d0.queue_quota, Some(64));
+        assert!(d0.faults.is_none(), "no faults block → no plan");
+        let d1 = &c.serve.deployments[1];
+        assert_eq!(d1.queue_quota, None);
+        let plan = d1.faults.as_ref().expect("faults block parses");
+        assert_eq!(plan.seed, 7);
+        assert_eq!(plan.panic_every, Some(50));
+        assert_eq!(plan.die_on_batch, None);
+        assert_eq!(plan.slow_every, Some(20));
+        assert_eq!(plan.slow_us, 500);
+        assert_eq!(plan.nan_every, None);
+        assert!(!plan.fail_build);
     }
 
     #[test]

@@ -1,0 +1,190 @@
+//! Deterministic fault injection for the serving stack — **tests only**.
+//!
+//! A [`FaultPlan`] rides on a [`crate::deploy::DeploymentSpec`] (and the
+//! config-file `faults` block) and describes *when* a deployment's batches
+//! misbehave: panic inside the backend on every Nth batch, kill the worker
+//! thread outright on one specific batch, sleep before executing, or
+//! corrupt the outputs with NaNs so the coordinator's output-sanity guard
+//! has something to catch. Everything is keyed off a per-deployment batch
+//! counter and a seeded [`Xoshiro256`] (for the latency jitter), so a
+//! chaos test with a fixed seed replays the exact same fault schedule on
+//! every run — the harness is deterministic, not probabilistic.
+//!
+//! The serving hot path pays for this only when a plan is attached: a
+//! fault-free deployment carries `None` and skips the module entirely, so
+//! the steady-state zero-allocation budget is untouched.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::util::rng::Xoshiro256;
+
+/// Declarative fault schedule for one deployment. All knobs default to
+/// "off"; [`FaultPlan::is_noop`] lets builders skip attaching state for an
+/// empty plan.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Seeds the latency-jitter RNG (and any future randomized fault).
+    pub seed: u64,
+    /// Panic inside `infer_batch` on every Nth batch (1-based count).
+    /// Caught by the worker's `catch_unwind`; requests get
+    /// `ServeError::WorkerFault`.
+    pub panic_every: Option<u64>,
+    /// Kill the worker thread on exactly this batch (1-based): the batch
+    /// is re-queued first, then the panic escapes the guard so the
+    /// supervisor must restart the worker. No request is lost.
+    pub die_on_batch: Option<u64>,
+    /// Sleep before executing every Nth batch (1-based).
+    pub slow_every: Option<u64>,
+    /// Base duration of an injected slow batch, in microseconds; the
+    /// seeded RNG adds up to 50% jitter on top.
+    pub slow_us: u64,
+    /// Overwrite the first score of every output row with NaN on every
+    /// Nth batch — exercises the output-sanity guard
+    /// (`ServeError::NumericFault`).
+    pub nan_every: Option<u64>,
+    /// Make `DeploymentSpec::build` fail — exercises swap rollback (the
+    /// registry must keep serving the old generation).
+    pub fail_build: bool,
+}
+
+impl FaultPlan {
+    /// True when every knob is off (such a plan is never attached to a
+    /// deployment, keeping the fault-free hot path untouched).
+    pub fn is_noop(&self) -> bool {
+        self.panic_every.is_none()
+            && self.die_on_batch.is_none()
+            && self.slow_every.is_none()
+            && self.nan_every.is_none()
+            && !self.fail_build
+    }
+}
+
+/// The faults scheduled for one specific batch, resolved by
+/// [`FaultState::next_batch`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BatchFaults {
+    /// Re-queue the batch and kill the worker thread.
+    pub die: bool,
+    /// Panic inside the guarded execution (batch answered with
+    /// `WorkerFault`, worker survives).
+    pub panic_in_batch: bool,
+    /// Sleep this long before executing.
+    pub slow: Option<Duration>,
+    /// Replace the first score of each output row with NaN.
+    pub corrupt: bool,
+}
+
+/// Shared per-deployment fault state: the plan plus the live batch counter
+/// and jitter RNG. One instance per deployment generation, shared by all
+/// workers through the `Deployment` `Arc` — the counter is global across
+/// workers so "every Nth batch" means Nth batch *of the deployment*, not
+/// per worker.
+#[derive(Debug)]
+pub struct FaultState {
+    plan: FaultPlan,
+    batches: AtomicU64,
+    rng: Mutex<Xoshiro256>,
+}
+
+impl FaultState {
+    pub fn new(plan: FaultPlan) -> Self {
+        let rng = Mutex::new(Xoshiro256::seed_from_u64(plan.seed));
+        Self { plan, batches: AtomicU64::new(0), rng }
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Advance the batch counter and resolve which faults fire for this
+    /// batch. Batch numbering is 1-based: `panic_every: Some(3)` fires on
+    /// batches 3, 6, 9, …; `die_on_batch: Some(3)` fires exactly once.
+    pub fn next_batch(&self) -> BatchFaults {
+        let nth = self.batches.fetch_add(1, Ordering::Relaxed) + 1;
+        let hits = |every: Option<u64>| every.is_some_and(|n| n > 0 && nth % n == 0);
+        let slow = if hits(self.plan.slow_every) && self.plan.slow_us > 0 {
+            let jitter = self.rng.lock().unwrap().next_below(self.plan.slow_us / 2 + 1);
+            Some(Duration::from_micros(self.plan.slow_us + jitter))
+        } else {
+            None
+        };
+        BatchFaults {
+            die: self.plan.die_on_batch == Some(nth),
+            panic_in_batch: hits(self.plan.panic_every),
+            slow,
+            corrupt: hits(self.plan.nan_every),
+        }
+    }
+
+    /// Corrupt a batch's outputs in place (first score of every row →
+    /// NaN), the way a drifting analog fabric would poison results.
+    pub fn corrupt(outputs: &mut [Vec<f32>]) {
+        for row in outputs.iter_mut() {
+            if let Some(first) = row.first_mut() {
+                *first = f32::NAN;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn noop_plan_is_noop() {
+        assert!(FaultPlan::default().is_noop());
+        assert!(!FaultPlan { panic_every: Some(3), ..Default::default() }.is_noop());
+        assert!(!FaultPlan { fail_build: true, ..Default::default() }.is_noop());
+    }
+
+    #[test]
+    fn schedule_is_one_based_and_deterministic() {
+        let plan = FaultPlan {
+            seed: 42,
+            panic_every: Some(3),
+            die_on_batch: Some(5),
+            slow_every: Some(2),
+            slow_us: 100,
+            nan_every: Some(4),
+            ..Default::default()
+        };
+        let replay = || {
+            let st = FaultState::new(plan.clone());
+            (1..=12u64).map(|_| st.next_batch()).collect::<Vec<_>>()
+        };
+        let a = replay();
+        let b = replay();
+        for (nth, (fa, fb)) in a.iter().zip(&b).enumerate() {
+            let nth = nth as u64 + 1;
+            assert_eq!(fa.panic_in_batch, nth % 3 == 0, "batch {nth}");
+            assert_eq!(fa.die, nth == 5, "batch {nth}");
+            assert_eq!(fa.corrupt, nth % 4 == 0, "batch {nth}");
+            assert_eq!(fa.slow.is_some(), nth % 2 == 0, "batch {nth}");
+            if let Some(d) = fa.slow {
+                // Base 100us plus at most 50% seeded jitter.
+                assert!((100..=150).contains(&(d.as_micros() as u64)), "batch {nth}: {d:?}");
+            }
+            // Same seed → identical schedule including jitter.
+            assert_eq!(fa.slow, fb.slow, "batch {nth}");
+        }
+    }
+
+    #[test]
+    fn corrupt_poisons_first_score_of_each_row() {
+        let mut outputs = vec![vec![1.0f32, 2.0], vec![3.0, 4.0], vec![]];
+        FaultState::corrupt(&mut outputs);
+        assert!(outputs[0][0].is_nan() && outputs[1][0].is_nan());
+        assert_eq!((outputs[0][1], outputs[1][1]), (2.0, 4.0));
+    }
+
+    #[test]
+    fn zero_every_never_fires() {
+        let st = FaultState::new(FaultPlan { panic_every: Some(0), ..Default::default() });
+        for _ in 0..8 {
+            assert!(!st.next_batch().panic_in_batch);
+        }
+    }
+}

@@ -24,6 +24,38 @@
 //!   every batch boundary so [`ModelRegistry::swap`] hot-reloads a
 //!   deployment without dropping in-flight requests.
 //!
+//! # Resilience
+//!
+//! Every request ends in exactly one of two ways: an `Ok(`[`Response`]`)`
+//! or a typed [`ServeError`] — never a silent drop, never a hung channel.
+//! The layers that guarantee this:
+//!
+//! * **Deadlines**: [`Client::submit_within`] / [`Client::submit_to_within`]
+//!   attach a latency budget; batch formation extracts expired requests
+//!   (any slot) and answers them with [`ServeError::DeadlineExceeded`]
+//!   instead of computing them.
+//! * **Admission control**: in registry mode each model gets a queue-depth
+//!   quota (explicit via `DeploymentSpec::queue_quota`, else a fair share
+//!   of `max_queue`); a hot model is shed with [`ServeError::ShedLoad`] at
+//!   submit time and cannot starve the rest. A full queue is
+//!   [`ServeError::QueueFull`]; after [`Coordinator::shutdown`] begins,
+//!   submits fail with [`ServeError::Draining`].
+//! * **Supervised workers**: batch execution runs behind `catch_unwind` —
+//!   a panicking batch answers its requests with
+//!   [`ServeError::WorkerFault`] and drops the (possibly poisoned) slot
+//!   backend. In registry mode a supervisor thread restarts workers that
+//!   die outright, with capped exponential backoff; the dying worker
+//!   re-queues its batch first, so no request is lost across a restart.
+//! * **Output-sanity guard**: non-finite scores never reach a client —
+//!   rows containing NaN/Inf are answered with
+//!   [`ServeError::NumericFault`].
+//! * **Fault injection**: [`faults::FaultPlan`] (tests only) deterministically
+//!   schedules panics, worker deaths, slow batches, and NaN outputs so all
+//!   of the above is exercised under a fixed seed.
+//!
+//! See `ARCHITECTURE.md` §5 "Failure modes & recovery" for the error
+//! taxonomy, supervisor lifecycle, and fault-injection knobs.
+//!
 //! Threading: [`Coordinator::start`] spawns one worker;
 //! [`Coordinator::start_pool`] and [`Coordinator::start_registry`] spawn
 //! `config.workers` workers over the same bounded queue, each with its own
@@ -33,22 +65,32 @@
 //! in registry mode.
 
 pub mod backend;
+pub mod faults;
 pub mod registry;
 
 pub use backend::{InferenceBackend, NativeBackend, PjrtConvBackend};
+pub use faults::{BatchFaults, FaultPlan, FaultState};
 pub use registry::ModelRegistry;
 
 use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 
 use crate::metrics::Metrics;
 use crate::nn::Tensor;
+
+/// How often the supervisor checks for dead workers (and for shutdown).
+const SUPERVISOR_POLL: Duration = Duration::from_millis(5);
+/// First restart delay after a worker death; doubles per consecutive
+/// death of the same worker index, capped at [`RESTART_BACKOFF_CAP`].
+const RESTART_BACKOFF_BASE: Duration = Duration::from_millis(2);
+const RESTART_BACKOFF_CAP: Duration = Duration::from_millis(250);
 
 /// Coordinator tunables.
 #[derive(Clone, Copy, Debug)]
@@ -85,6 +127,69 @@ pub struct Response {
     pub latency: Duration,
 }
 
+/// Why a request was answered without a [`Response`]. Submit-time
+/// variants come back as the `Err` of the submit call (downcastable from
+/// `anyhow::Error`); in-flight variants arrive through the response
+/// channel as the `Err` arm of [`ServeResult`].
+///
+/// See the README's "Serving error taxonomy" table for the operational
+/// meaning of each variant.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// The request's latency budget expired before a worker computed it.
+    DeadlineExceeded { waited_us: u64 },
+    /// Admission control: this model's share of the bounded queue is
+    /// already full (other models keep being admitted).
+    ShedLoad { model: String, queued: usize, quota: usize },
+    /// The whole bounded queue is full (backpressure).
+    QueueFull { depth: usize },
+    /// The worker panicked while executing this request's batch.
+    WorkerFault { model: String, message: String },
+    /// The backend produced non-finite (NaN/Inf) scores; the output-sanity
+    /// guard refused to return them.
+    NumericFault { model: String },
+    /// `submit_to` named a model the registry does not serve.
+    UnknownModel { model: String, registered: String },
+    /// `submit_to` on a coordinator with no model registry.
+    NoRegistry,
+    /// The coordinator is shutting down and no longer admits requests.
+    Draining,
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::DeadlineExceeded { waited_us } => {
+                write!(f, "deadline exceeded after {waited_us}us in queue")
+            }
+            Self::ShedLoad { model, queued, quota } => write!(
+                f,
+                "load shed for model '{model}': {queued} queued >= quota {quota}"
+            ),
+            Self::QueueFull { depth } => write!(f, "queue full ({depth} requests)"),
+            Self::WorkerFault { model, message } => {
+                write!(f, "worker fault serving model '{model}': {message}")
+            }
+            Self::NumericFault { model } => {
+                write!(f, "model '{model}' produced non-finite scores (numeric fault)")
+            }
+            Self::UnknownModel { model, registered } => {
+                write!(f, "unknown model '{model}' (registered: {registered})")
+            }
+            Self::NoRegistry => {
+                write!(f, "this coordinator serves a single fixed backend (no model registry)")
+            }
+            Self::Draining => write!(f, "coordinator is draining (shutdown in progress)"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// What a response channel carries: a completed inference or the typed
+/// reason it was not computed.
+pub type ServeResult = std::result::Result<Response, ServeError>;
+
 struct Request {
     id: u64,
     /// Registry slot of the deployment this request routes to (0 for a
@@ -92,11 +197,56 @@ struct Request {
     slot: usize,
     image: Tensor,
     enqueued: Instant,
-    resp: mpsc::Sender<Response>,
+    /// Answer with [`ServeError::DeadlineExceeded`] instead of computing
+    /// once this instant passes.
+    deadline: Option<Instant>,
+    resp: mpsc::Sender<ServeResult>,
+}
+
+/// The queue plus per-slot depth accounting (for admission control).
+/// Depths are maintained by [`QueueState::push`] / the drain helpers so
+/// `submit` can check a model's share in O(1) under the lock.
+struct QueueState {
+    deque: VecDeque<Request>,
+    depth: Vec<usize>,
+}
+
+impl QueueState {
+    fn new() -> Self {
+        Self { deque: VecDeque::new(), depth: Vec::new() }
+    }
+
+    fn push(&mut self, r: Request) {
+        if self.depth.len() <= r.slot {
+            self.depth.resize(r.slot + 1, 0);
+        }
+        self.depth[r.slot] += 1;
+        self.deque.push_back(r);
+    }
+
+    /// Re-queue at the *front* (a dying worker returning its batch).
+    fn unpush_front(&mut self, r: Request) {
+        if self.depth.len() <= r.slot {
+            self.depth.resize(r.slot + 1, 0);
+        }
+        self.depth[r.slot] += 1;
+        self.deque.push_front(r);
+    }
+
+    /// Account for a request leaving the deque by any drain path.
+    fn removed(&mut self, slot: usize) {
+        if let Some(d) = self.depth.get_mut(slot) {
+            *d = d.saturating_sub(1);
+        }
+    }
+
+    fn slot_depth(&self, slot: usize) -> usize {
+        self.depth.get(slot).copied().unwrap_or(0)
+    }
 }
 
 struct Queue {
-    deque: Mutex<VecDeque<Request>>,
+    state: Mutex<QueueState>,
     cv: Condvar,
     shutdown: AtomicBool,
 }
@@ -117,33 +267,89 @@ pub struct Client {
 impl Client {
     /// Submit one image to the default deployment (registry slot 0, or the
     /// fixed backend); returns a receiver for the response.
-    pub fn submit(&self, image: Tensor) -> Result<(u64, mpsc::Receiver<Response>)> {
-        self.submit_slot(0, image)
+    pub fn submit(&self, image: Tensor) -> Result<(u64, mpsc::Receiver<ServeResult>)> {
+        self.submit_slot(0, image, None)
+    }
+
+    /// [`Client::submit`] with a latency budget: if no worker has computed
+    /// the request when the budget expires, it is answered with
+    /// [`ServeError::DeadlineExceeded`] instead of being executed.
+    pub fn submit_within(
+        &self,
+        image: Tensor,
+        budget: Duration,
+    ) -> Result<(u64, mpsc::Receiver<ServeResult>)> {
+        self.submit_slot(0, image, Some(Instant::now() + budget))
     }
 
     /// Submit one image to the named deployment. Fails cleanly when the
     /// name is unknown or the coordinator has no registry.
-    pub fn submit_to(&self, model: &str, image: Tensor) -> Result<(u64, mpsc::Receiver<Response>)> {
-        let registry = self
-            .registry
-            .as_ref()
-            .context("this coordinator serves a single fixed backend (no model registry)")?;
-        let slot = registry.slot(model).with_context(|| {
-            format!("unknown model '{model}' (registered: {})", registry.names().join(", "))
-        })?;
-        self.submit_slot(slot, image)
+    pub fn submit_to(
+        &self,
+        model: &str,
+        image: Tensor,
+    ) -> Result<(u64, mpsc::Receiver<ServeResult>)> {
+        let slot = self.resolve_slot(model)?;
+        self.submit_slot(slot, image, None)
     }
 
-    fn submit_slot(&self, slot: usize, image: Tensor) -> Result<(u64, mpsc::Receiver<Response>)> {
+    /// [`Client::submit_to`] with a latency budget (see
+    /// [`Client::submit_within`]).
+    pub fn submit_to_within(
+        &self,
+        model: &str,
+        image: Tensor,
+        budget: Duration,
+    ) -> Result<(u64, mpsc::Receiver<ServeResult>)> {
+        let slot = self.resolve_slot(model)?;
+        self.submit_slot(slot, image, Some(Instant::now() + budget))
+    }
+
+    fn resolve_slot(&self, model: &str) -> Result<usize> {
+        let registry = self.registry.as_ref().ok_or(ServeError::NoRegistry)?;
+        registry.slot(model).ok_or_else(|| {
+            ServeError::UnknownModel {
+                model: model.to_string(),
+                registered: registry.names().join(", "),
+            }
+            .into()
+        })
+    }
+
+    fn submit_slot(
+        &self,
+        slot: usize,
+        image: Tensor,
+        deadline: Option<Instant>,
+    ) -> Result<(u64, mpsc::Receiver<ServeResult>)> {
+        if self.queue.shutdown.load(Ordering::Acquire) {
+            return Err(ServeError::Draining.into());
+        }
+        // Quota resolved before taking the queue lock (it takes the
+        // registry read lock; keeping the two disjoint avoids nesting).
+        let quota = self.registry.as_ref().map(|r| r.admission_quota(slot, self.max_queue));
         let (tx, rx) = mpsc::channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         {
-            let mut q = self.queue.deque.lock().unwrap();
-            if q.len() >= self.max_queue {
+            let mut st = self.queue.state.lock().unwrap();
+            if st.deque.len() >= self.max_queue {
                 self.metrics.requests_rejected.fetch_add(1, Ordering::Relaxed);
-                bail!("queue full ({} requests)", q.len());
+                return Err(ServeError::QueueFull { depth: st.deque.len() }.into());
             }
-            q.push_back(Request { id, slot, image, enqueued: Instant::now(), resp: tx });
+            if let Some(quota) = quota {
+                let queued = st.slot_depth(slot);
+                if queued >= quota {
+                    self.metrics.requests_shed.fetch_add(1, Ordering::Relaxed);
+                    self.metrics.record_model_shed(slot);
+                    let model = self
+                        .registry
+                        .as_ref()
+                        .and_then(|r| r.name_of(slot))
+                        .unwrap_or_default();
+                    return Err(ServeError::ShedLoad { model, queued, quota }.into());
+                }
+            }
+            st.push(Request { id, slot, image, enqueued: Instant::now(), deadline, resp: tx });
         }
         self.metrics.requests_enqueued.fetch_add(1, Ordering::Relaxed);
         if self.registry.is_some() {
@@ -161,13 +367,13 @@ impl Client {
     /// Submit and block for the response.
     pub fn infer_blocking(&self, image: Tensor) -> Result<Response> {
         let (_, rx) = self.submit(image)?;
-        Ok(rx.recv()?)
+        Ok(rx.recv()??)
     }
 
     /// [`Client::infer_blocking`] routed to a named deployment.
     pub fn infer_blocking_to(&self, model: &str, image: Tensor) -> Result<Response> {
         let (_, rx) = self.submit_to(model, image)?;
-        Ok(rx.recv()?)
+        Ok(rx.recv()??)
     }
 }
 
@@ -177,6 +383,9 @@ struct SlotBackend {
     generation: u64,
     name: String,
     backend: NativeBackend,
+    /// Present only when the deployment carries a fault-injection plan
+    /// (tests); `None` on the production path.
+    faults: Option<Arc<FaultState>>,
 }
 
 /// What a worker executes batches with.
@@ -193,13 +402,16 @@ pub struct Coordinator {
     client: Client,
     queue: Arc<Queue>,
     workers: Vec<JoinHandle<()>>,
+    /// Registry mode only: owns the worker handles and restarts dead
+    /// workers; `workers` above stays empty in that mode.
+    supervisor: Option<JoinHandle<()>>,
     pub metrics: Arc<Metrics>,
 }
 
 impl Coordinator {
     fn parts(config: &CoordinatorConfig) -> (Arc<Queue>, Arc<Metrics>, Client) {
         let queue = Arc::new(Queue {
-            deque: Mutex::new(VecDeque::new()),
+            state: Mutex::new(QueueState::new()),
             cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
         });
@@ -231,7 +443,7 @@ impl Coordinator {
                 Self::run_loop(config, &q2, &m2, &mut exec)
             })
             .expect("spawn batcher");
-        Self { client, queue, workers: vec![worker], metrics }
+        Self { client, queue, workers: vec![worker], supervisor: None, metrics }
     }
 
     /// Start a worker *pool*: `config.workers` threads drain the same
@@ -259,7 +471,7 @@ impl Coordinator {
                     .expect("spawn worker")
             })
             .collect();
-        Self { client, queue, workers, metrics }
+        Self { client, queue, workers, supervisor: None, metrics }
     }
 
     /// Start a multi-model pool: `config.workers` threads serve every
@@ -268,7 +480,9 @@ impl Coordinator {
     /// re-check the registry at each batch boundary, so
     /// [`ModelRegistry::swap`] takes effect on the next batch without
     /// dropping in-flight requests. Per-deployment completed/latency
-    /// metrics land in [`crate::metrics::Snapshot::models`].
+    /// metrics land in [`crate::metrics::Snapshot::models`]. Workers are
+    /// supervised: one that dies outright is restarted with capped
+    /// exponential backoff ([`crate::metrics::Snapshot::worker_restarts`]).
     pub fn start_registry(config: CoordinatorConfig, registry: Arc<ModelRegistry>) -> Result<Self> {
         if registry.is_empty() {
             bail!("model registry has no deployments");
@@ -279,22 +493,84 @@ impl Coordinator {
             metrics.register_model(slot, name);
         }
         let n = config.workers.max(1);
-        let workers = (0..n)
-            .map(|i| {
+        let spawn = {
+            let queue = queue.clone();
+            let metrics = metrics.clone();
+            move |i: usize| -> JoinHandle<()> {
                 let q2 = queue.clone();
                 let m2 = metrics.clone();
                 let reg = registry.clone();
                 std::thread::Builder::new()
                     .name(format!("tpu-imac-worker-{i}"))
                     .spawn(move || {
-                        let mut exec =
-                            WorkerExec::Registry { registry: reg, slots: Vec::new() };
+                        let mut exec = WorkerExec::Registry { registry: reg, slots: Vec::new() };
                         Self::run_loop(config, &q2, &m2, &mut exec)
                     })
                     .expect("spawn worker")
+            }
+        };
+        let handles: Vec<Option<JoinHandle<()>>> = (0..n).map(|i| Some(spawn(i))).collect();
+        let supervisor = Self::spawn_supervisor(queue.clone(), metrics.clone(), handles, spawn);
+        Ok(Self { client, queue, workers: Vec::new(), supervisor: Some(supervisor), metrics })
+    }
+
+    /// The supervisor thread: polls worker handles, joins normal exits,
+    /// and respawns workers whose threads died to a panic that escaped
+    /// the batch guard (e.g. injected worker death). Restart delay grows
+    /// exponentially per worker index, capped at [`RESTART_BACKOFF_CAP`],
+    /// so a hard-crashing deployment cannot spin the pool. Restarts keep
+    /// happening during drain — queued requests still need a worker.
+    fn spawn_supervisor<F>(
+        queue: Arc<Queue>,
+        metrics: Arc<Metrics>,
+        mut workers: Vec<Option<JoinHandle<()>>>,
+        spawn: F,
+    ) -> JoinHandle<()>
+    where
+        F: Fn(usize) -> JoinHandle<()> + Send + 'static,
+    {
+        std::thread::Builder::new()
+            .name("tpu-imac-supervisor".into())
+            .spawn(move || {
+                let mut deaths = vec![0u32; workers.len()];
+                loop {
+                    for i in 0..workers.len() {
+                        if !workers[i].as_ref().is_some_and(|h| h.is_finished()) {
+                            continue;
+                        }
+                        let h = workers[i].take().expect("finished handle present");
+                        if h.join().is_err() {
+                            deaths[i] += 1;
+                            let exp = (deaths[i] - 1).min(16);
+                            let delay = RESTART_BACKOFF_BASE
+                                .saturating_mul(1u32 << exp)
+                                .min(RESTART_BACKOFF_CAP);
+                            std::thread::sleep(delay);
+                            metrics.worker_restarts.fetch_add(1, Ordering::Relaxed);
+                            workers[i] = Some(spawn(i));
+                        }
+                        // A clean exit means shutdown drained; leave the
+                        // slot empty.
+                    }
+                    if queue.shutdown.load(Ordering::Acquire) {
+                        for h in workers.iter_mut().filter_map(|h| h.take()) {
+                            let _ = h.join();
+                        }
+                        // Workers only exit once the queue is empty, so
+                        // anything still here means the last worker died
+                        // mid-drain. Answer rather than strand.
+                        let mut st = queue.state.lock().unwrap();
+                        while let Some(r) = st.deque.pop_front() {
+                            st.removed(r.slot);
+                            metrics.requests_faulted.fetch_add(1, Ordering::Relaxed);
+                            let _ = r.resp.send(Err(ServeError::Draining));
+                        }
+                        return;
+                    }
+                    std::thread::sleep(SUPERVISOR_POLL);
+                }
             })
-            .collect();
-        Ok(Self { client, queue, workers, metrics })
+            .expect("spawn supervisor")
     }
 
     pub fn client(&self) -> Client {
@@ -302,13 +578,22 @@ impl Coordinator {
     }
 
     /// Move queued requests for `slot` into `batch` (up to `max`),
-    /// preserving the arrival order of everything left behind. One full
-    /// rotation of the deque — O(len) moves, no element shifting, no
-    /// allocation — since this runs under the queue lock. Used once per
-    /// batch formation; condvar wakeups use [`Coordinator::drain_slot_tail`].
-    fn drain_slot(q: &mut VecDeque<Request>, slot: usize, batch: &mut Vec<Request>, max: usize) {
+    /// preserving the arrival order of everything left behind; requests of
+    /// *any* slot whose deadline passed move to `expired` instead. One
+    /// full rotation of the deque — O(len) moves, no element shifting, no
+    /// allocation in the common case — since this runs under the queue
+    /// lock. Used once per batch formation; condvar wakeups use
+    /// [`Coordinator::drain_slot_tail`].
+    fn drain_slot(
+        st: &mut QueueState,
+        slot: usize,
+        batch: &mut Vec<Request>,
+        max: usize,
+        now: Instant,
+        expired: &mut Vec<Request>,
+    ) {
         let mut rotated = false;
-        for _ in 0..q.len() {
+        for _ in 0..st.deque.len() {
             // Until something is re-queued the remaining deque is
             // untouched and in order, so a full batch can stop right here
             // — the homogeneous common case (fixed-backend mode, or a
@@ -318,11 +603,15 @@ impl Coordinator {
             if batch.len() >= max && !rotated {
                 return;
             }
-            let r = q.pop_front().expect("rotating within original length");
-            if batch.len() < max && r.slot == slot {
+            let r = st.deque.pop_front().expect("rotating within original length");
+            if r.deadline.is_some_and(|d| d <= now) {
+                st.removed(r.slot);
+                expired.push(r);
+            } else if batch.len() < max && r.slot == slot {
+                st.removed(r.slot);
                 batch.push(r);
             } else {
-                q.push_back(r);
+                st.deque.push_back(r);
                 rotated = true;
             }
         }
@@ -330,27 +619,73 @@ impl Coordinator {
 
     /// Top-up variant: entries before `start` are already known not to
     /// match `slot`, so only newer arrivals are examined — a condvar
-    /// wakeup costs O(new requests), not O(queue). Removals happen near
-    /// the tail, where `VecDeque::remove` shifts few elements. Returns the
-    /// new known-clean prefix length. A concurrent worker's removals can
-    /// shift an unscanned entry below the watermark; such a request is
-    /// simply collected by the next batch-formation pass, never lost.
+    /// wakeup costs O(new requests), not O(queue). (A trusted entry that
+    /// expires during the window is extracted by the next full batch
+    /// formation; a deadline is a floor on the answer, not an exact
+    /// timer.) Removals happen near the tail, where `VecDeque::remove`
+    /// shifts few elements. Returns the new known-clean prefix length. A
+    /// concurrent worker's removals can shift an unscanned entry below the
+    /// watermark; such a request is simply collected by the next
+    /// batch-formation pass, never lost.
+    #[allow(clippy::too_many_arguments)]
     fn drain_slot_tail(
-        q: &mut VecDeque<Request>,
+        st: &mut QueueState,
         slot: usize,
         batch: &mut Vec<Request>,
         max: usize,
         start: usize,
+        now: Instant,
+        expired: &mut Vec<Request>,
     ) -> usize {
-        let mut i = start.min(q.len());
-        while batch.len() < max && i < q.len() {
-            if q[i].slot == slot {
-                batch.push(q.remove(i).expect("index in bounds"));
+        let mut i = start.min(st.deque.len());
+        while batch.len() < max && i < st.deque.len() {
+            if st.deque[i].deadline.is_some_and(|d| d <= now) {
+                let r = st.deque.remove(i).expect("index in bounds");
+                st.removed(r.slot);
+                expired.push(r);
+            } else if st.deque[i].slot == slot {
+                let r = st.deque.remove(i).expect("index in bounds");
+                st.removed(r.slot);
+                batch.push(r);
             } else {
                 i += 1;
             }
         }
         i
+    }
+
+    /// Answer (and drain) expired requests with
+    /// [`ServeError::DeadlineExceeded`]. Called outside the queue lock.
+    fn answer_expired(metrics: &Metrics, expired: &mut Vec<Request>) {
+        for r in expired.drain(..) {
+            metrics.deadline_drops.fetch_add(1, Ordering::Relaxed);
+            metrics.record_model_deadline_drop(r.slot);
+            let waited_us = r.enqueued.elapsed().as_micros() as u64;
+            let _ = r.resp.send(Err(ServeError::DeadlineExceeded { waited_us }));
+        }
+    }
+
+    /// Answer a whole batch with [`ServeError::WorkerFault`] after its
+    /// execution panicked. Counters land before any send (receivers may
+    /// snapshot metrics the instant `recv()` returns).
+    fn answer_worker_fault(
+        metrics: &Metrics,
+        batch: Vec<Request>,
+        model: Option<(usize, &str)>,
+        message: &str,
+    ) {
+        metrics.worker_panics.fetch_add(1, Ordering::Relaxed);
+        metrics.requests_faulted.fetch_add(batch.len() as u64, Ordering::Relaxed);
+        if let Some((slot, _)) = model {
+            metrics.record_model_faults(slot, batch.len() as u64);
+        }
+        let name = model.map(|(_, n)| n).unwrap_or("default");
+        for req in batch {
+            let _ = req.resp.send(Err(ServeError::WorkerFault {
+                model: name.to_string(),
+                message: message.to_string(),
+            }));
+        }
     }
 
     fn run_loop(
@@ -365,26 +700,33 @@ impl Coordinator {
             // requests join the batch (each deployment has its own
             // compiled plan, so batches are homogeneous per model).
             let mut batch: Vec<Request> = Vec::with_capacity(config.max_batch);
+            let mut expired: Vec<Request> = Vec::new();
             let slot;
             // Everything left queued after the initial drain is known not
             // to match this slot; top-up wakeups only scan newer arrivals.
             let mut clean;
             {
-                let mut q = queue.deque.lock().unwrap();
+                let mut st = queue.state.lock().unwrap();
                 loop {
-                    if queue.shutdown.load(Ordering::Acquire) && q.is_empty() {
+                    if queue.shutdown.load(Ordering::Acquire) && st.deque.is_empty() {
                         return;
                     }
-                    if !q.is_empty() {
+                    if !st.deque.is_empty() {
                         break;
                     }
                     let (g, _timeout) =
-                        queue.cv.wait_timeout(q, Duration::from_millis(50)).unwrap();
-                    q = g;
+                        queue.cv.wait_timeout(st, Duration::from_millis(50)).unwrap();
+                    st = g;
                 }
-                slot = q.front().map(|r| r.slot).unwrap_or(0);
-                Self::drain_slot(&mut q, slot, &mut batch, config.max_batch);
-                clean = q.len();
+                slot = st.deque.front().map(|r| r.slot).unwrap_or(0);
+                let now = Instant::now();
+                Self::drain_slot(&mut st, slot, &mut batch, config.max_batch, now, &mut expired);
+                clean = st.deque.len();
+            }
+            Self::answer_expired(metrics, &mut expired);
+            if batch.is_empty() {
+                // The head itself had expired; re-form from what is left.
+                continue;
             }
             // Brief top-up window to fill the batch: condvar-wait on the
             // remaining deadline instead of spinning (submitters notify).
@@ -392,33 +734,60 @@ impl Coordinator {
             // next batch (or another worker).
             if batch.len() < config.max_batch && config.batch_timeout > Duration::ZERO {
                 let deadline = Instant::now() + config.batch_timeout;
-                let mut q = queue.deque.lock().unwrap();
+                let mut st = queue.state.lock().unwrap();
                 loop {
-                    clean =
-                        Self::drain_slot_tail(&mut q, slot, &mut batch, config.max_batch, clean);
+                    let now = Instant::now();
+                    clean = Self::drain_slot_tail(
+                        &mut st,
+                        slot,
+                        &mut batch,
+                        config.max_batch,
+                        clean,
+                        now,
+                        &mut expired,
+                    );
                     if batch.len() >= config.max_batch
                         || queue.shutdown.load(Ordering::Acquire)
                     {
                         break;
                     }
-                    let now = Instant::now();
                     if now >= deadline {
                         break;
                     }
-                    let (g, _timeout) = queue.cv.wait_timeout(q, deadline - now).unwrap();
-                    q = g;
+                    let (g, _timeout) = queue.cv.wait_timeout(st, deadline - now).unwrap();
+                    st = g;
                 }
             }
+            Self::answer_expired(metrics, &mut expired);
 
-            // Execute.
+            // Execute, guarded: a panicking batch answers its requests
+            // with `WorkerFault` instead of stranding them.
             let queued_us: u64 =
                 batch.iter().map(|r| r.enqueued.elapsed().as_micros() as u64).sum();
             metrics.queue_us_total.fetch_add(queued_us, Ordering::Relaxed);
             let images: Vec<&Tensor> = batch.iter().map(|r| &r.image).collect();
-            let (outputs, cap) = match exec {
+            let (outputs, cap, model): (Vec<Vec<f32>>, usize, Option<(usize, String)>) = match exec
+            {
                 WorkerExec::Single(backend) => {
-                    let outputs = backend.infer_batch(&images, metrics);
-                    (outputs, backend.preferred_batch().unwrap_or(batch.len()))
+                    let result = catch_unwind(AssertUnwindSafe(|| {
+                        backend.infer_batch(&images, metrics)
+                    }));
+                    match result {
+                        Ok(outputs) => {
+                            let cap = backend.preferred_batch().unwrap_or(batch.len());
+                            (outputs, cap, None)
+                        }
+                        Err(payload) => {
+                            drop(images);
+                            Self::answer_worker_fault(
+                                metrics,
+                                batch,
+                                None,
+                                &panic_message(payload.as_ref()),
+                            );
+                            continue;
+                        }
+                    }
                 }
                 WorkerExec::Registry { registry, slots } => {
                     let Some((generation, dep)) = registry.resolve(slot) else {
@@ -443,13 +812,78 @@ impl Coordinator {
                             generation,
                             name: dep.name.clone(),
                             backend: NativeBackend::new(dep.model.clone()),
+                            faults: dep.faults.clone(),
                         });
                     }
                     let sb = slots[slot].as_mut().expect("slot backend just ensured");
-                    let outputs = sb.backend.infer_batch(&images, metrics);
-                    (outputs, batch.len())
+                    let injected =
+                        sb.faults.as_ref().map(|f| f.next_batch()).unwrap_or_default();
+                    if let Some(d) = injected.slow {
+                        metrics.slow_batches.fetch_add(1, Ordering::Relaxed);
+                        std::thread::sleep(d);
+                    }
+                    if injected.die {
+                        // Return the batch to the *front* of the queue in
+                        // original order, then kill this worker thread: the
+                        // supervisor restarts it and another worker (or the
+                        // restarted one) re-forms the batch. No request is
+                        // lost across the death.
+                        let name = sb.name.clone();
+                        drop(images);
+                        {
+                            let mut st = queue.state.lock().unwrap();
+                            for r in batch.into_iter().rev() {
+                                st.unpush_front(r);
+                            }
+                        }
+                        queue.cv.notify_all();
+                        panic!("fault injection: worker death (model '{name}')");
+                    }
+                    let panic_injected = injected.panic_in_batch;
+                    let result = catch_unwind(AssertUnwindSafe(|| {
+                        if panic_injected {
+                            panic!("fault injection: batch panic");
+                        }
+                        sb.backend.infer_batch(&images, metrics)
+                    }));
+                    match result {
+                        Ok(mut outputs) => {
+                            if injected.corrupt {
+                                FaultState::corrupt(&mut outputs);
+                            }
+                            (outputs, batch.len(), Some((slot, sb.name.clone())))
+                        }
+                        Err(payload) => {
+                            let name = sb.name.clone();
+                            // Drop the possibly-poisoned backend; the next
+                            // batch for this slot rebuilds it with fresh
+                            // scratch.
+                            slots[slot] = None;
+                            drop(images);
+                            Self::answer_worker_fault(
+                                metrics,
+                                batch,
+                                Some((slot, &name)),
+                                &panic_message(payload.as_ref()),
+                            );
+                            continue;
+                        }
+                    }
                 }
             };
+            drop(images);
+            if outputs.len() != batch.len() {
+                // A backend that loses rows is as broken as one that
+                // panics; answer everything rather than strand the tail.
+                let m = model.as_ref().map(|(s, n)| (*s, n.as_str()));
+                Self::answer_worker_fault(
+                    metrics,
+                    batch,
+                    m,
+                    "backend returned a wrong-sized output batch",
+                );
+                continue;
+            }
             metrics.batches_executed.fetch_add(1, Ordering::Relaxed);
             metrics.batch_slots_used.fetch_add(batch.len() as u64, Ordering::Relaxed);
             if cap > batch.len() {
@@ -458,31 +892,68 @@ impl Coordinator {
                     .fetch_add((cap - batch.len()) as u64, Ordering::Relaxed);
             }
 
+            // Output-sanity guard: a row containing NaN/Inf is answered
+            // with `NumericFault`, never returned as garbage scores.
+            //
             // All counters — global *and* per-model — land before any
             // response is sent: receivers may snapshot metrics the instant
             // recv() returns.
             let lats: Vec<Duration> = batch.iter().map(|r| r.enqueued.elapsed()).collect();
-            metrics.requests_completed.fetch_add(batch.len() as u64, Ordering::Relaxed);
+            let finite: Vec<bool> = outputs
+                .iter()
+                .map(|s| !s.is_empty() && s.iter().all(|v| v.is_finite()))
+                .collect();
+            let ok = finite.iter().filter(|&&f| f).count() as u64;
+            let faulted = batch.len() as u64 - ok;
+            metrics.requests_completed.fetch_add(ok, Ordering::Relaxed);
+            if faulted > 0 {
+                metrics.numeric_faults.fetch_add(faulted, Ordering::Relaxed);
+                metrics.requests_faulted.fetch_add(faulted, Ordering::Relaxed);
+            }
             metrics.record_latencies(&lats);
-            if let WorkerExec::Registry { slots, .. } = exec {
-                if let Some(sb) = slots.get(slot).and_then(|s| s.as_ref()) {
-                    metrics.record_model_batch(slot, &sb.name, &lats);
+            if let Some((mslot, name)) = &model {
+                metrics.record_model_batch(*mslot, name, &lats, ok);
+                if faulted > 0 {
+                    metrics.record_model_faults(*mslot, faulted);
                 }
             }
-            for ((req, scores), latency) in batch.into_iter().zip(outputs).zip(lats) {
-                let predicted = crate::util::stats::argmax(&scores);
-                let _ = req.resp.send(Response { id: req.id, scores, predicted, latency });
+            let model_name = model.as_ref().map(|(_, n)| n.as_str()).unwrap_or("default");
+            for (((req, scores), latency), is_finite) in
+                batch.into_iter().zip(outputs).zip(lats).zip(finite)
+            {
+                let _ = req.resp.send(if is_finite {
+                    let predicted = crate::util::stats::argmax(&scores);
+                    Ok(Response { id: req.id, scores, predicted, latency })
+                } else {
+                    Err(ServeError::NumericFault { model: model_name.to_string() })
+                });
             }
         }
     }
 
-    /// Graceful shutdown: drain the queue, stop every worker.
+    /// Graceful shutdown (drain mode): stop admissions, flush in-flight
+    /// batches and everything already queued, then join workers (and the
+    /// supervisor, in registry mode) deterministically.
     pub fn shutdown(mut self) {
         self.queue.shutdown.store(true, Ordering::Release);
         self.queue.cv.notify_all();
         for h in self.workers.drain(..) {
             let _ = h.join();
         }
+        if let Some(h) = self.supervisor.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Best-effort human-readable panic payload (what `panic!` carries).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "worker panicked".to_string()
     }
 }
 
@@ -493,6 +964,9 @@ impl Drop for Coordinator {
         for h in self.workers.drain(..) {
             let _ = h.join();
         }
+        if let Some(h) = self.supervisor.take() {
+            let _ = h.join();
+        }
     }
 }
 
@@ -500,6 +974,7 @@ impl Drop for Coordinator {
 mod tests {
     use super::*;
     use crate::metrics::Metrics;
+    use crate::util::rng::Xoshiro256;
 
     /// Backend that classifies by mean pixel (deterministic, no model).
     struct FakeBackend;
@@ -532,7 +1007,7 @@ mod tests {
             rxs.push((i, client.submit(img).unwrap().1));
         }
         for (i, rx) in rxs {
-            let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
             let want = if i % 2 == 0 { 1 } else { 0 };
             assert_eq!(resp.predicted, want, "req {i}");
         }
@@ -550,6 +1025,7 @@ mod tests {
             .submit_to("lenet", Tensor::from_vec(1, 1, 1, vec![0.0]))
             .unwrap_err();
         assert!(format!("{err:#}").contains("no model registry"));
+        assert_eq!(err.downcast_ref::<ServeError>(), Some(&ServeError::NoRegistry));
         assert!(coord.metrics.snapshot().models.is_empty());
         coord.shutdown();
     }
@@ -568,6 +1044,24 @@ mod tests {
             }
             images.iter().map(|_| vec![1.0, 0.0]).collect()
         }
+    }
+
+    fn open_gate(gate: &Arc<(Mutex<bool>, Condvar)>) {
+        let (lock, cv) = &**gate;
+        *lock.lock().unwrap() = true;
+        cv.notify_all();
+    }
+
+    /// Park the worker inside the gated backend: submit one request and
+    /// wait until the queue shows empty (the worker holds it as a batch).
+    fn park_worker(coord: &Coordinator, client: &Client) -> mpsc::Receiver<ServeResult> {
+        let rx = client.submit(Tensor::from_vec(1, 1, 1, vec![0.0])).unwrap().1;
+        let t0 = Instant::now();
+        while !coord.queue.state.lock().unwrap().deque.is_empty() {
+            assert!(t0.elapsed() < Duration::from_secs(10), "worker never picked up request");
+            std::thread::yield_now();
+        }
+        rx
     }
 
     #[test]
@@ -589,12 +1083,7 @@ mod tests {
 
         // First request: wait until the worker dequeued it and is parked
         // inside the gated backend (the queue shows empty again).
-        let rx0 = client.submit(img()).unwrap().1;
-        let t0 = Instant::now();
-        while !coord.queue.deque.lock().unwrap().is_empty() {
-            assert!(t0.elapsed() < Duration::from_secs(10), "worker never picked up request");
-            std::thread::yield_now();
-        }
+        let rx0 = park_worker(&coord, &client);
 
         // Fill the bounded queue to capacity...
         let mut rxs = Vec::new();
@@ -605,7 +1094,14 @@ mod tests {
         // is parked on the gate.
         let mut rejected = 0;
         for _ in 0..50 {
-            if client.submit(img()).is_err() {
+            if let Err(e) = client.submit(img()) {
+                assert!(
+                    matches!(
+                        e.downcast_ref::<ServeError>(),
+                        Some(ServeError::QueueFull { depth: 2 })
+                    ),
+                    "expected QueueFull, got {e:#}"
+                );
                 rejected += 1;
             }
         }
@@ -613,18 +1109,139 @@ mod tests {
         assert_eq!(coord.metrics.requests_rejected.load(Ordering::Relaxed), 50);
 
         // Open the gate: everything accepted must still complete.
-        {
-            let (lock, cv) = &*gate;
-            *lock.lock().unwrap() = true;
-            cv.notify_all();
-        }
-        rx0.recv_timeout(Duration::from_secs(10)).unwrap();
+        open_gate(&gate);
+        rx0.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
         for rx in rxs {
-            rx.recv_timeout(Duration::from_secs(10)).unwrap();
+            rx.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
         }
         let snap = coord.metrics.snapshot();
         assert_eq!(snap.completed, 3);
         assert_eq!(snap.rejected, 50);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn expired_deadline_is_answered_not_computed() {
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let g2 = gate.clone();
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                max_batch: 1,
+                batch_timeout: Duration::from_millis(0),
+                ..Default::default()
+            },
+            move || Box::new(GateBackend { gate: g2 }),
+        );
+        let client = coord.client();
+        let rx0 = park_worker(&coord, &client);
+
+        // Queued behind the parked worker: one request with a budget that
+        // expires while parked, one without. Only the former is dropped.
+        let rx_dead = client
+            .submit_within(Tensor::from_vec(1, 1, 1, vec![0.5]), Duration::from_millis(1))
+            .unwrap()
+            .1;
+        let rx_live = client.submit(Tensor::from_vec(1, 1, 1, vec![0.5])).unwrap().1;
+        std::thread::sleep(Duration::from_millis(5));
+        open_gate(&gate);
+
+        rx0.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
+        let dead = rx_dead.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert!(
+            matches!(dead, Err(ServeError::DeadlineExceeded { waited_us }) if waited_us >= 1_000),
+            "expected DeadlineExceeded, got {dead:?}"
+        );
+        rx_live.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
+        let snap = coord.metrics.snapshot();
+        assert_eq!(snap.deadline_drops, 1);
+        assert_eq!(snap.completed, 2, "the live requests must still be computed");
+        coord.shutdown();
+    }
+
+    /// Backend that panics on request (first pixel >= 9.0) — drives the
+    /// catch_unwind guard without a registry.
+    struct PanickyBackend;
+    impl InferenceBackend for PanickyBackend {
+        fn infer_batch(&mut self, images: &[&Tensor], _m: &Metrics) -> Vec<Vec<f32>> {
+            if images.iter().any(|t| t.data[0] >= 9.0) {
+                panic!("injected backend panic");
+            }
+            images.iter().map(|_| vec![1.0, 0.0]).collect()
+        }
+    }
+
+    #[test]
+    fn panicking_batch_answers_with_worker_fault() {
+        let coord = Coordinator::start(
+            CoordinatorConfig { max_batch: 1, batch_timeout: Duration::ZERO, ..Default::default() },
+            || Box::new(PanickyBackend),
+        );
+        let client = coord.client();
+        let bad = client.submit(Tensor::from_vec(1, 1, 1, vec![9.0])).unwrap().1;
+        let got = bad.recv_timeout(Duration::from_secs(10)).unwrap();
+        match got {
+            Err(ServeError::WorkerFault { model, message }) => {
+                assert_eq!(model, "default");
+                assert!(message.contains("injected backend panic"), "{message}");
+            }
+            other => panic!("expected WorkerFault, got {other:?}"),
+        }
+        // The worker survived the panic and keeps serving.
+        let ok = client.infer_blocking(Tensor::from_vec(1, 1, 1, vec![0.0])).unwrap();
+        assert_eq!(ok.predicted, 0);
+        let snap = coord.metrics.snapshot();
+        assert_eq!(snap.worker_panics, 1);
+        assert_eq!(snap.faulted, 1);
+        assert_eq!(snap.completed, 1);
+        coord.shutdown();
+    }
+
+    /// Backend that returns NaN scores for request (first pixel >= 9.0) —
+    /// drives the output-sanity guard.
+    struct NanBackend;
+    impl InferenceBackend for NanBackend {
+        fn infer_batch(&mut self, images: &[&Tensor], _m: &Metrics) -> Vec<Vec<f32>> {
+            images
+                .iter()
+                .map(|t| {
+                    if t.data[0] >= 9.0 {
+                        vec![f32::NAN, 0.0]
+                    } else {
+                        vec![1.0, 0.0]
+                    }
+                })
+                .collect()
+        }
+    }
+
+    #[test]
+    fn non_finite_scores_become_numeric_fault() {
+        let coord = Coordinator::start(
+            CoordinatorConfig { max_batch: 4, ..Default::default() },
+            || Box::new(NanBackend),
+        );
+        let client = coord.client();
+        let bad = client.submit(Tensor::from_vec(1, 1, 1, vec![9.0])).unwrap().1;
+        let good = client.submit(Tensor::from_vec(1, 1, 1, vec![0.0])).unwrap().1;
+        let got = bad.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert!(
+            matches!(got, Err(ServeError::NumericFault { ref model }) if model == "default"),
+            "expected NumericFault, got {got:?}"
+        );
+        good.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
+        let snap = coord.metrics.snapshot();
+        assert_eq!(snap.numeric_faults, 1);
+        assert_eq!(snap.completed, 1, "finite rows of a mixed batch still complete");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn submits_after_shutdown_begin_are_draining_errors() {
+        let coord = Coordinator::start(CoordinatorConfig::default(), || Box::new(FakeBackend));
+        let client = coord.client();
+        coord.queue.shutdown.store(true, Ordering::Release);
+        let err = client.submit(Tensor::from_vec(1, 1, 1, vec![0.0])).unwrap_err();
+        assert_eq!(err.downcast_ref::<ServeError>(), Some(&ServeError::Draining));
         coord.shutdown();
     }
 
@@ -641,7 +1258,7 @@ mod tests {
             rxs.push((i, client.submit(Tensor::from_vec(2, 2, 1, vec![v; 4])).unwrap().1));
         }
         for (i, rx) in rxs {
-            let resp = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+            let resp = rx.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
             let want = if i % 2 == 0 { 1 } else { 0 };
             assert_eq!(resp.predicted, want, "req {i}");
         }
@@ -661,45 +1278,161 @@ mod tests {
         coord.shutdown();
     }
 
+    fn mk_request(id: u64, slot: usize, deadline: Option<Instant>) -> Request {
+        // These requests are only inspected, never answered, so the
+        // dropped receiver half is fine.
+        let (tx, _rx) = mpsc::channel();
+        Request {
+            id,
+            slot,
+            image: Tensor::from_vec(1, 1, 1, vec![0.0]),
+            enqueued: Instant::now(),
+            deadline,
+            resp: tx,
+        }
+    }
+
+    fn state_of(reqs: Vec<Request>) -> QueueState {
+        let mut st = QueueState::new();
+        for r in reqs {
+            st.push(r);
+        }
+        st
+    }
+
     #[test]
     fn drain_slot_is_order_preserving_and_selective() {
-        let mk = |id: u64, slot: usize| {
-            // These requests are only inspected, never answered, so the
-            // dropped receiver half is fine.
-            let (tx, _rx) = mpsc::channel();
-            Request {
-                id,
-                slot,
-                image: Tensor::from_vec(1, 1, 1, vec![0.0]),
-                enqueued: Instant::now(),
-                resp: tx,
-            }
-        };
-        let mut q: VecDeque<Request> =
-            [(0, 0), (1, 1), (2, 0), (3, 1), (4, 0)].iter().map(|&(i, s)| mk(i, s)).collect();
+        let mut st = state_of(
+            [(0u64, 0usize), (1, 1), (2, 0), (3, 1), (4, 0)]
+                .iter()
+                .map(|&(i, s)| mk_request(i, s, None))
+                .collect(),
+        );
+        let now = Instant::now();
+        let mut expired = Vec::new();
         let mut batch = Vec::new();
-        Coordinator::drain_slot(&mut q, 0, &mut batch, 2);
+        Coordinator::drain_slot(&mut st, 0, &mut batch, 2, now, &mut expired);
         assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 2]);
-        assert_eq!(q.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 3, 4]);
-        Coordinator::drain_slot(&mut q, 1, &mut batch, 4);
+        assert_eq!(st.deque.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 3, 4]);
+        assert_eq!((st.slot_depth(0), st.slot_depth(1)), (1, 2));
+        Coordinator::drain_slot(&mut st, 1, &mut batch, 4, now, &mut expired);
         assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 2, 1, 3]);
-        assert_eq!(q.iter().map(|r| r.id).collect::<Vec<_>>(), vec![4]);
+        assert_eq!(st.deque.iter().map(|r| r.id).collect::<Vec<_>>(), vec![4]);
+        assert!(expired.is_empty());
 
         // Tail variant: entries before the watermark are trusted as
         // non-matching (even if they would match — that is the contract),
         // only newer arrivals are examined, and the returned watermark
         // covers everything scanned.
-        q.push_back(mk(5, 1));
-        q.push_back(mk(6, 0));
-        q.push_back(mk(7, 1));
+        st.push(mk_request(5, 1, None));
+        st.push(mk_request(6, 0, None));
+        st.push(mk_request(7, 1, None));
         let mut batch = Vec::new();
-        let clean = Coordinator::drain_slot_tail(&mut q, 1, &mut batch, 8, 2);
+        let clean = Coordinator::drain_slot_tail(&mut st, 1, &mut batch, 8, 2, now, &mut expired);
         assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![7]);
-        assert_eq!(q.iter().map(|r| r.id).collect::<Vec<_>>(), vec![4, 5, 6]);
+        assert_eq!(st.deque.iter().map(|r| r.id).collect::<Vec<_>>(), vec![4, 5, 6]);
         assert_eq!(clean, 3);
         // A stale watermark past the end clamps instead of panicking.
-        let clean = Coordinator::drain_slot_tail(&mut q, 0, &mut batch, 8, 99);
+        let clean = Coordinator::drain_slot_tail(&mut st, 0, &mut batch, 8, 99, now, &mut expired);
         assert_eq!(clean, 3);
         assert_eq!(batch.len(), 1);
+    }
+
+    #[test]
+    fn drain_slot_extracts_expired_requests_of_any_slot() {
+        let past = Some(Instant::now() - Duration::from_millis(1));
+        let mut st = state_of(vec![
+            mk_request(0, 0, past),
+            mk_request(1, 1, past),
+            mk_request(2, 0, None),
+            mk_request(3, 1, None),
+        ]);
+        let mut batch = Vec::new();
+        let mut expired = Vec::new();
+        Coordinator::drain_slot(&mut st, 0, &mut batch, 8, Instant::now(), &mut expired);
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2]);
+        assert_eq!(expired.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
+        assert_eq!(st.deque.iter().map(|r| r.id).collect::<Vec<_>>(), vec![3]);
+        assert_eq!((st.slot_depth(0), st.slot_depth(1)), (0, 1));
+    }
+
+    /// Property test: `drain_slot` over random interleavings of slots and
+    /// deadlines (a) batches only live, slot-matching requests in FIFO
+    /// order, (b) keeps the relative order of everything left queued,
+    /// (c) routes exactly the past-deadline requests to `expired`,
+    /// (d) never loses a request, and (e) leaves no live matching request
+    /// behind unless the batch filled. Depth accounting stays exact.
+    #[test]
+    fn drain_slot_property_fifo_and_no_lost_requests() {
+        let mut rng = Xoshiro256::seed_from_u64(0x5EED);
+        let past = Instant::now() - Duration::from_millis(10);
+        for round in 0..200 {
+            let n = rng.next_below(24) as usize;
+            let reqs: Vec<Request> = (0..n as u64)
+                .map(|id| {
+                    let slot = rng.next_below(3) as usize;
+                    let deadline = if rng.next_below(4) == 0 { Some(past) } else { None };
+                    mk_request(id, slot, deadline)
+                })
+                .collect();
+            let original: Vec<(u64, usize, bool)> =
+                reqs.iter().map(|r| (r.id, r.slot, r.deadline.is_some())).collect();
+            let mut st = state_of(reqs);
+            let slot = rng.next_below(3) as usize;
+            let max = rng.next_below(8) as usize + 1;
+            let mut batch = Vec::new();
+            let mut expired = Vec::new();
+            Coordinator::drain_slot(&mut st, slot, &mut batch, max, Instant::now(), &mut expired);
+
+            let live_matching: Vec<u64> = original
+                .iter()
+                .filter(|(_, s, dead)| *s == slot && !dead)
+                .map(|(id, _, _)| *id)
+                .collect();
+            let batch_ids: Vec<u64> = batch.iter().map(|r| r.id).collect();
+            // (a) the batch is a FIFO prefix of the live matching stream.
+            assert_eq!(
+                batch_ids,
+                live_matching[..batch_ids.len().min(live_matching.len())].to_vec(),
+                "round {round}: batch must be the FIFO prefix of live slot-{slot} requests"
+            );
+            assert!(batch.len() <= max, "round {round}");
+            // (e) a non-full batch means nothing matching was left live.
+            if batch.len() < max {
+                assert!(
+                    !st.deque
+                        .iter()
+                        .any(|r| r.slot == slot && r.deadline.is_none()),
+                    "round {round}: live slot-{slot} request left behind with space in the batch"
+                );
+            }
+            // (c) everything in `expired` was actually past-deadline.
+            assert!(
+                expired.iter().all(|r| r.deadline.is_some()),
+                "round {round}: live request mis-routed to expired"
+            );
+            // (b) the remainder preserves arrival order.
+            let rest: Vec<u64> = st.deque.iter().map(|r| r.id).collect();
+            let mut sorted = rest.clone();
+            sorted.sort_unstable();
+            assert_eq!(rest, sorted, "round {round}: remainder must stay in arrival order");
+            // (d) batch ∪ expired ∪ remainder == original, exactly once.
+            let mut all: Vec<u64> = batch_ids
+                .iter()
+                .chain(expired.iter().map(|r| &r.id))
+                .chain(rest.iter())
+                .copied()
+                .collect();
+            all.sort_unstable();
+            assert_eq!(all, (0..n as u64).collect::<Vec<_>>(), "round {round}: request lost");
+            // Depth accounting stays exact for every slot.
+            for s in 0..3 {
+                assert_eq!(
+                    st.slot_depth(s),
+                    st.deque.iter().filter(|r| r.slot == s).count(),
+                    "round {round}: depth accounting diverged for slot {s}"
+                );
+            }
+        }
     }
 }

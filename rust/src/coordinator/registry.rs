@@ -11,7 +11,7 @@
 //! plan. Slots are never removed, so a request's routing decision can't
 //! dangle.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, RwLock};
 
 use anyhow::{bail, Context, Result};
@@ -26,6 +26,10 @@ struct Entry {
     /// Bumped on every swap so workers can invalidate their cached
     /// per-slot backends cheaply.
     generation: AtomicU64,
+    /// Admission-control queue-depth quota (0 = unset: the model gets a
+    /// fair share of the coordinator's bounded queue). Follows the
+    /// deployment across swaps.
+    quota: AtomicUsize,
 }
 
 /// Named deployments served concurrently from one coordinator queue.
@@ -53,10 +57,12 @@ impl ModelRegistry {
         if entries.iter().any(|e| e.name == dep.name) {
             bail!("model '{}' is already registered", dep.name);
         }
+        let quota = AtomicUsize::new(dep.queue_quota.unwrap_or(0));
         entries.push(Entry {
             name: dep.name.clone(),
             current: RwLock::new(dep),
             generation: AtomicU64::new(1),
+            quota,
         });
         Ok(entries.len() - 1)
     }
@@ -88,9 +94,30 @@ impl ModelRegistry {
             .iter()
             .find(|e| e.name == name)
             .with_context(|| format!("swap: model '{name}' is not registered"))?;
+        entry.quota.store(dep.queue_quota.unwrap_or(0), Ordering::Release);
         *entry.current.write().unwrap() = dep;
         entry.generation.fetch_add(1, Ordering::Release);
         Ok(())
+    }
+
+    /// Admission-control quota for `slot` against a coordinator queue of
+    /// `max_queue`: the deployment's explicit `queue_quota` when set,
+    /// otherwise a fair share (`max_queue / models`, at least 1). A model
+    /// whose queued depth reaches this is shed at submit time.
+    pub fn admission_quota(&self, slot: usize, max_queue: usize) -> usize {
+        let entries = self.entries.read().unwrap();
+        let explicit =
+            entries.get(slot).map(|e| e.quota.load(Ordering::Acquire)).unwrap_or(0);
+        if explicit > 0 {
+            explicit
+        } else {
+            (max_queue / entries.len().max(1)).max(1)
+        }
+    }
+
+    /// The name registered at `slot`, if any.
+    pub fn name_of(&self, slot: usize) -> Option<String> {
+        self.entries.read().unwrap().get(slot).map(|e| e.name.clone())
     }
 
     /// The slot index serving `name`, if registered.
@@ -186,5 +213,28 @@ mod tests {
         let (g2, cur) = reg.resolve(0).unwrap();
         assert_eq!(g2, g1);
         assert_eq!(cur.precision(), PrecisionPolicy::Int8);
+    }
+
+    #[test]
+    fn admission_quota_fair_share_and_override() {
+        let reg = ModelRegistry::new();
+        reg.register(&DeploymentSpec::synthetic("a", SyntheticModel::Lenet, 1)).unwrap();
+        reg.register(
+            &DeploymentSpec::synthetic("b", SyntheticModel::MobilenetMini, 2).queue_quota(3),
+        )
+        .unwrap();
+        // Slot 0 gets a fair share of the queue; slot 1 has an override.
+        assert_eq!(reg.admission_quota(0, 100), 50);
+        assert_eq!(reg.admission_quota(1, 100), 3);
+        // Fair share never rounds down to zero.
+        assert_eq!(reg.admission_quota(0, 1), 1);
+        // Unknown slots fall back to a fair share too.
+        assert_eq!(reg.admission_quota(9, 100), 50);
+        assert_eq!(reg.name_of(0).as_deref(), Some("a"));
+        assert_eq!(reg.name_of(9), None);
+        // The quota follows the deployment across a swap.
+        reg.swap("b", &DeploymentSpec::synthetic("b", SyntheticModel::MobilenetMini, 2))
+            .unwrap();
+        assert_eq!(reg.admission_quota(1, 100), 50, "swap without a quota → fair share");
     }
 }

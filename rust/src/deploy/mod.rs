@@ -30,6 +30,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
+use crate::coordinator::faults::{FaultPlan, FaultState};
 use crate::imac::{AdcConfig, ImacConfig};
 use crate::nn::{synthetic, DeployedModel, PrecisionPolicy};
 use crate::quant::CalibrationTable;
@@ -108,6 +109,8 @@ pub struct DeploymentSpec {
     imac: ImacConfig,
     adc: AdcConfig,
     fabric_seed: u64,
+    queue_quota: Option<usize>,
+    faults: Option<FaultPlan>,
 }
 
 impl DeploymentSpec {
@@ -122,6 +125,8 @@ impl DeploymentSpec {
             imac: ImacConfig::default(),
             adc: AdcConfig { bits: 0, full_scale: 1.0 },
             fabric_seed: 0,
+            queue_quota: None,
+            faults: None,
         }
     }
 
@@ -179,6 +184,23 @@ impl DeploymentSpec {
         self
     }
 
+    /// Admission-control queue-depth quota for this deployment: at most
+    /// this many of its requests may sit in the coordinator's bounded
+    /// queue before further submits are shed with `ServeError::ShedLoad`.
+    /// Unset (the default) means a fair share of `max_queue`.
+    pub fn queue_quota(mut self, quota: usize) -> Self {
+        self.queue_quota = Some(quota);
+        self
+    }
+
+    /// Attach a deterministic fault-injection plan (**tests only**): the
+    /// serving workers consult it per batch to inject panics, deaths,
+    /// latency, and NaN outputs. See [`crate::coordinator::FaultPlan`].
+    pub fn faults(mut self, plan: FaultPlan) -> Self {
+        self.faults = Some(plan);
+        self
+    }
+
     pub fn name(&self) -> &str {
         &self.name
     }
@@ -194,6 +216,11 @@ impl DeploymentSpec {
     /// serving worker, and [`crate::coordinator::ModelRegistry::swap`]
     /// builds the replacement *before* touching the live entry.
     pub fn build(&self) -> Result<Deployment> {
+        if self.faults.as_ref().is_some_and(|f| f.fail_build) {
+            // Fault injection: lets tests prove the registry keeps serving
+            // the old generation when a swap's replacement fails to build.
+            bail!("deployment '{}': injected build failure (FaultPlan::fail_build)", self.name);
+        }
         let owned_doc;
         let doc: &Json = match &self.source {
             WeightSource::JsonFile(path) => {
@@ -233,10 +260,17 @@ impl DeploymentSpec {
             calib.as_ref(),
         )
         .with_context(|| format!("building deployment '{}'", self.name))?;
+        let faults = self
+            .faults
+            .as_ref()
+            .filter(|p| !p.is_noop())
+            .map(|p| Arc::new(FaultState::new(p.clone())));
         Ok(Deployment {
             name: self.name.clone(),
             calibration: calib,
             model: Arc::new(model),
+            queue_quota: self.queue_quota,
+            faults,
         })
     }
 }
@@ -252,6 +286,12 @@ pub struct Deployment {
     pub calibration: Option<CalibrationTable>,
     /// The compiled model: conv plan + sign bridge + IMAC fabric.
     pub model: Arc<DeployedModel>,
+    /// Admission-control queue-depth quota (`None` = fair share).
+    pub queue_quota: Option<usize>,
+    /// Live fault-injection state (tests only; `None` in production — the
+    /// fault-free hot path never consults it). Shared by every worker so
+    /// the batch schedule is global to the deployment.
+    pub faults: Option<Arc<FaultState>>,
 }
 
 impl Deployment {
@@ -378,6 +418,29 @@ mod tests {
         // The same spec without the table builds fine.
         let dep = DeploymentSpec::synthetic("l", SyntheticModel::Lenet, 1).build().unwrap();
         assert!(!dep.model.plan.is_calibrated());
+    }
+
+    #[test]
+    fn fault_plan_wiring_fail_build_and_noop() {
+        let err = DeploymentSpec::synthetic("f", SyntheticModel::Lenet, 1)
+            .faults(FaultPlan { fail_build: true, ..Default::default() })
+            .build()
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("injected build failure"), "{err:#}");
+        // A no-op plan attaches no live state (the fault-free hot path
+        // stays untouched); a real one does, and the quota rides along.
+        let dep = DeploymentSpec::synthetic("f", SyntheticModel::Lenet, 1)
+            .faults(FaultPlan::default())
+            .build()
+            .unwrap();
+        assert!(dep.faults.is_none(), "no-op plan must not attach live state");
+        let dep = DeploymentSpec::synthetic("f", SyntheticModel::Lenet, 1)
+            .faults(FaultPlan { nan_every: Some(2), ..Default::default() })
+            .queue_quota(4)
+            .build()
+            .unwrap();
+        assert!(dep.faults.is_some());
+        assert_eq!(dep.queue_quota, Some(4));
     }
 
     #[test]

@@ -25,8 +25,13 @@
 //!   [`deploy::Deployment`] — [`deploy`];
 //! * a threaded **serving coordinator** (batching, routing, backpressure,
 //!   optional multi-worker pool, a multi-model
-//!   [`coordinator::ModelRegistry`] with hot swap, per-model metrics) —
-//!   [`coordinator`];
+//!   [`coordinator::ModelRegistry`] with hot swap, per-model metrics) with
+//!   a **resilience layer**: per-request deadlines, per-model admission
+//!   control, panic-supervised workers with automatic restart, an
+//!   output-sanity guard, graceful drain, and a deterministic
+//!   fault-injection harness ([`coordinator::FaultPlan`]) — every request
+//!   gets exactly one reply, a [`coordinator::Response`] or a typed
+//!   [`coordinator::ServeError`] (`ARCHITECTURE.md` §5) — [`coordinator`];
 //! * report generators reproducing every table in the paper — [`report`].
 //!
 //! Top-level guides: `README.md` (repo map + CLI quickstart),

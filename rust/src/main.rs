@@ -322,6 +322,16 @@ fn spec_from_config_entry(entry: &ServeDeployment, artifacts: &str) -> Result<De
     if let Some(path) = &entry.calibration {
         spec = spec.calibration_file(path);
     }
+    if let Some(quota) = entry.queue_quota {
+        spec = spec.queue_quota(quota);
+    }
+    if let Some(plan) = &entry.faults {
+        eprintln!(
+            "serve.deployments '{}': fault injection enabled ({plan:?}) — chaos drill mode",
+            entry.name
+        );
+        spec = spec.faults(plan.clone());
+    }
     Ok(spec)
 }
 
@@ -457,8 +467,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let img = Tensor::from_vec(h, w, c, (0..h * w * c).map(|_| rng.next_f32()).collect());
         rxs.push(client.submit(img)?.1);
     }
+    let mut errors = 0usize;
     for rx in rxs {
-        let _ = rx.recv()?;
+        if rx.recv()?.is_err() {
+            errors += 1;
+        }
+    }
+    if errors > 0 {
+        eprintln!("{errors} of {n_requests} requests answered with a serve error");
     }
     let wall = t0.elapsed();
     print_serve_summary(&coord.metrics.snapshot(), wall);
@@ -506,8 +522,14 @@ fn serve_registry(
         let img = Tensor::from_vec(h, w, c, (0..h * w * c).map(|_| rng.next_f32()).collect());
         rxs.push(client.submit_to(&names[which], img)?.1);
     }
+    let mut errors = 0usize;
     for rx in rxs {
-        let _ = rx.recv()?;
+        if rx.recv()?.is_err() {
+            errors += 1;
+        }
+    }
+    if errors > 0 {
+        eprintln!("{errors} of {n_requests} requests answered with a serve error");
     }
     let wall = t0.elapsed();
     print_serve_summary(&coord.metrics.snapshot(), wall);
@@ -539,9 +561,33 @@ fn print_serve_summary(snap: &Snapshot, wall: std::time::Duration) {
         snap.imac_us_total as f64 / 1e3,
         snap.queue_us_total as f64 / 1e3
     );
-    for m in &snap.models {
+    let disturbances = snap.shed
+        + snap.deadline_drops
+        + snap.faulted
+        + snap.worker_panics
+        + snap.worker_restarts
+        + snap.numeric_faults
+        + snap.slow_batches;
+    if disturbances > 0 {
         println!(
-            "  model {:<14} {:>6} completed | mean {:.2} ms  p50 {:.2} ms  p95 {:.2} ms",
+            "resilience: {} shed, {} deadline drops, {} faulted | {} worker panics, {} restarts, {} numeric faults, {} slow batches",
+            snap.shed,
+            snap.deadline_drops,
+            snap.faulted,
+            snap.worker_panics,
+            snap.worker_restarts,
+            snap.numeric_faults,
+            snap.slow_batches
+        );
+    }
+    for m in &snap.models {
+        let stress = if m.shed + m.deadline_drops + m.faults > 0 {
+            format!("  ({} shed, {} dropped, {} faulted)", m.shed, m.deadline_drops, m.faults)
+        } else {
+            String::new()
+        };
+        println!(
+            "  model {:<14} {:>6} completed | mean {:.2} ms  p50 {:.2} ms  p95 {:.2} ms{stress}",
             m.name,
             m.completed,
             m.mean_latency_us / 1e3,

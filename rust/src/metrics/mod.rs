@@ -14,6 +14,12 @@ pub struct ModelMetrics {
     /// Deployment name (the `submit_to` routing key).
     pub name: String,
     pub completed: AtomicU64,
+    /// Requests shed at submit time by this model's admission quota.
+    pub shed: AtomicU64,
+    /// Requests answered `DeadlineExceeded` instead of computed.
+    pub deadline_drops: AtomicU64,
+    /// Requests answered with `WorkerFault`/`NumericFault`.
+    pub faults: AtomicU64,
     latencies_us: Mutex<Vec<u64>>,
 }
 
@@ -22,6 +28,9 @@ pub struct ModelMetrics {
 pub struct ModelSnapshot {
     pub name: String,
     pub completed: u64,
+    pub shed: u64,
+    pub deadline_drops: u64,
+    pub faults: u64,
     pub mean_latency_us: f64,
     pub p50_latency_us: f64,
     pub p95_latency_us: f64,
@@ -33,6 +42,23 @@ pub struct Metrics {
     pub requests_enqueued: AtomicU64,
     pub requests_completed: AtomicU64,
     pub requests_rejected: AtomicU64,
+    /// Requests refused at submit time by a model's admission quota
+    /// (`ServeError::ShedLoad`) — disjoint from `requests_rejected`,
+    /// which counts a full queue.
+    pub requests_shed: AtomicU64,
+    /// Requests answered `DeadlineExceeded` instead of computed.
+    pub deadline_drops: AtomicU64,
+    /// Requests answered with a `WorkerFault`/`NumericFault` (or drained
+    /// unservable at shutdown).
+    pub requests_faulted: AtomicU64,
+    /// Batches whose execution panicked behind the `catch_unwind` guard.
+    pub worker_panics: AtomicU64,
+    /// Worker threads respawned by the supervisor after dying outright.
+    pub worker_restarts: AtomicU64,
+    /// Requests whose outputs failed the finite-score sanity guard.
+    pub numeric_faults: AtomicU64,
+    /// Batches delayed by injected latency (fault-injection harness).
+    pub slow_batches: AtomicU64,
     pub batches_executed: AtomicU64,
     pub batch_slots_used: AtomicU64,
     pub batch_slots_padded: AtomicU64,
@@ -74,6 +100,13 @@ pub struct Snapshot {
     pub enqueued: u64,
     pub completed: u64,
     pub rejected: u64,
+    pub shed: u64,
+    pub deadline_drops: u64,
+    pub faulted: u64,
+    pub worker_panics: u64,
+    pub worker_restarts: u64,
+    pub numeric_faults: u64,
+    pub slow_batches: u64,
     pub batches: u64,
     pub mean_batch_fill: f64,
     pub p50_latency_us: f64,
@@ -118,9 +151,12 @@ impl Metrics {
         }
     }
 
-    /// Account one completed batch to a deployment slot (registering it
-    /// lazily — e.g. a model added to the registry while serving).
-    pub fn record_model_batch(&self, slot: usize, name: &str, lats: &[Duration]) {
+    /// Account one executed batch to a deployment slot (registering it
+    /// lazily — e.g. a model added to the registry while serving). `ok`
+    /// is the number of requests that actually completed (rows failing
+    /// the output-sanity guard are excluded from `completed` but still
+    /// contribute latency samples).
+    pub fn record_model_batch(&self, slot: usize, name: &str, lats: &[Duration], ok: u64) {
         let entry = {
             let models = self.models.read().unwrap();
             models.get(slot).cloned()
@@ -132,9 +168,37 @@ impl Metrics {
                 self.models.read().unwrap()[slot].clone()
             }
         };
-        entry.completed.fetch_add(lats.len() as u64, Ordering::Relaxed);
+        entry.completed.fetch_add(ok, Ordering::Relaxed);
         let mut g = entry.latencies_us.lock().unwrap();
         g.extend(lats.iter().map(|d| d.as_micros() as u64));
+    }
+
+    /// The registered slot entry, if any. Per-model resilience counters
+    /// are best-effort: an unregistered slot (single fixed-backend mode)
+    /// is a no-op, keeping `Snapshot::models` empty there.
+    fn model_at(&self, slot: usize) -> Option<Arc<ModelMetrics>> {
+        self.models.read().unwrap().get(slot).cloned()
+    }
+
+    /// Count a request shed by `slot`'s admission quota.
+    pub fn record_model_shed(&self, slot: usize) {
+        if let Some(m) = self.model_at(slot) {
+            m.shed.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Count a request answered `DeadlineExceeded` for `slot`.
+    pub fn record_model_deadline_drop(&self, slot: usize) {
+        if let Some(m) = self.model_at(slot) {
+            m.deadline_drops.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Count `n` requests answered with a worker/numeric fault for `slot`.
+    pub fn record_model_faults(&self, slot: usize, n: u64) {
+        if let Some(m) = self.model_at(slot) {
+            m.faults.fetch_add(n, Ordering::Relaxed);
+        }
     }
 
     pub fn snapshot(&self) -> Snapshot {
@@ -161,6 +225,9 @@ impl Metrics {
                 ModelSnapshot {
                     name: m.name.clone(),
                     completed: m.completed.load(Ordering::Relaxed),
+                    shed: m.shed.load(Ordering::Relaxed),
+                    deadline_drops: m.deadline_drops.load(Ordering::Relaxed),
+                    faults: m.faults.load(Ordering::Relaxed),
                     mean_latency_us: if ml.is_empty() {
                         0.0
                     } else {
@@ -175,6 +242,13 @@ impl Metrics {
             enqueued: self.requests_enqueued.load(Ordering::Relaxed),
             completed: self.requests_completed.load(Ordering::Relaxed),
             rejected: self.requests_rejected.load(Ordering::Relaxed),
+            shed: self.requests_shed.load(Ordering::Relaxed),
+            deadline_drops: self.deadline_drops.load(Ordering::Relaxed),
+            faulted: self.requests_faulted.load(Ordering::Relaxed),
+            worker_panics: self.worker_panics.load(Ordering::Relaxed),
+            worker_restarts: self.worker_restarts.load(Ordering::Relaxed),
+            numeric_faults: self.numeric_faults.load(Ordering::Relaxed),
+            slow_batches: self.slow_batches.load(Ordering::Relaxed),
             batches,
             mean_batch_fill: if used + padded == 0 {
                 0.0
@@ -233,15 +307,54 @@ mod tests {
             0,
             "lenet",
             &[Duration::from_micros(10), Duration::from_micros(20)],
+            2,
         );
         // A slot never pre-registered (model added while serving) is
         // picked up lazily by the first recorded batch.
-        m.record_model_batch(1, "mm", &[Duration::from_micros(30)]);
+        m.record_model_batch(1, "mm", &[Duration::from_micros(30)], 1);
         let s = m.snapshot();
         assert_eq!(s.models.len(), 2);
         assert_eq!((s.models[0].name.as_str(), s.models[0].completed), ("lenet", 2));
         assert_eq!((s.models[1].name.as_str(), s.models[1].completed), ("mm", 1));
         assert!(s.models[0].p95_latency_us >= s.models[0].p50_latency_us);
         assert!((s.models[0].mean_latency_us - 15.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn resilience_counters_per_model_and_best_effort() {
+        let m = Metrics::new();
+        m.register_model(0, "lenet");
+        m.record_model_shed(0);
+        m.record_model_shed(0);
+        m.record_model_deadline_drop(0);
+        m.record_model_faults(0, 3);
+        // A faulted row is excluded from `completed` but keeps its
+        // latency sample.
+        m.record_model_batch(0, "lenet", &[Duration::from_micros(5); 4], 3);
+        // Unregistered slots are a best-effort no-op (single-backend
+        // mode must keep `models` empty).
+        m.record_model_shed(7);
+        m.record_model_deadline_drop(7);
+        m.record_model_faults(7, 1);
+        let s = m.snapshot();
+        assert_eq!(s.models.len(), 1);
+        assert_eq!(s.models[0].shed, 2);
+        assert_eq!(s.models[0].deadline_drops, 1);
+        assert_eq!(s.models[0].faults, 3);
+        assert_eq!(s.models[0].completed, 3);
+        // Global resilience counters surface in the snapshot.
+        m.requests_shed.store(2, Ordering::Relaxed);
+        m.deadline_drops.store(1, Ordering::Relaxed);
+        m.worker_panics.store(1, Ordering::Relaxed);
+        m.worker_restarts.store(1, Ordering::Relaxed);
+        m.numeric_faults.store(1, Ordering::Relaxed);
+        m.slow_batches.store(4, Ordering::Relaxed);
+        m.requests_faulted.store(2, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(
+            (s.shed, s.deadline_drops, s.worker_panics, s.worker_restarts),
+            (2, 1, 1, 1)
+        );
+        assert_eq!((s.numeric_faults, s.slow_batches, s.faulted), (1, 4, 2));
     }
 }

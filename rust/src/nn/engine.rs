@@ -554,6 +554,25 @@ impl ConvPlan {
     }
 }
 
+/// Typed weight-ingest rejection: a corrupt artifact (non-finite values,
+/// shape mismatches) is refused at build time, naming the offending
+/// layer, instead of deploying and serving garbage scores. Downcastable
+/// from the `anyhow::Error` that `DeploymentSpec::build` returns.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WeightError {
+    /// The layer that failed validation, e.g. `conv_layers[2] (dwconv)`.
+    pub layer: String,
+    pub reason: String,
+}
+
+impl std::fmt::Display for WeightError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "weights rejected at {}: {}", self.layer, self.reason)
+    }
+}
+
+impl std::error::Error for WeightError {}
+
 /// A deployed mixed-precision model.
 pub struct DeployedModel {
     pub row: String,
@@ -598,7 +617,12 @@ impl DeployedModel {
             other => bail!("unknown dataset {other}"),
         };
         let mut conv_ops = Vec::new();
-        for layer in doc.get("conv_layers").as_arr().context("conv_layers")? {
+        // Channel count tracked through the stack so each layer's weight
+        // and bias shapes can be validated at ingest.
+        let mut c = input_hwc.2;
+        for (idx, layer) in
+            doc.get("conv_layers").as_arr().context("conv_layers")?.iter().enumerate()
+        {
             let kind = layer.get("kind").as_str().context("kind")?;
             match kind {
                 "conv" | "dwconv" => {
@@ -608,10 +632,43 @@ impl DeployedModel {
                     let relu = layer.get("relu").as_bool().unwrap_or(false);
                     let w = layer.get("w").as_f32_vec().context("w")?;
                     let b = layer.get("b").as_f32_vec().context("b")?;
+                    let lname = format!("conv_layers[{idx}] ({kind})");
+                    if let Some(bad) = w.iter().chain(b.iter()).find(|v| !v.is_finite()) {
+                        return Err(WeightError {
+                            layer: lname,
+                            reason: format!("non-finite weight/bias value {bad}"),
+                        }
+                        .into());
+                    }
                     if kind == "conv" {
                         let cout = layer.get("cout").as_usize().context("cout")?;
+                        if w.len() != k * k * c * cout || b.len() != cout {
+                            return Err(WeightError {
+                                layer: lname,
+                                reason: format!(
+                                    "shape mismatch: {} weights / {} biases for \
+                                     k={k} cin={c} cout={cout}",
+                                    w.len(),
+                                    b.len()
+                                ),
+                            }
+                            .into());
+                        }
+                        c = cout;
                         conv_ops.push(ConvOp::Conv { k, cout, stride, pad, relu, w, b });
                     } else {
+                        if w.len() != k * k * c || b.len() != c {
+                            return Err(WeightError {
+                                layer: lname,
+                                reason: format!(
+                                    "shape mismatch: {} weights / {} biases for \
+                                     k={k} channels={c}",
+                                    w.len(),
+                                    b.len()
+                                ),
+                            }
+                            .into());
+                        }
                         conv_ops.push(ConvOp::DwConv { k, stride, pad, relu, w, b });
                     }
                 }
@@ -628,12 +685,17 @@ impl DeployedModel {
             }
         }
         let mut fc_specs = Vec::new();
-        for layer in doc.get("fc_layers").as_arr().context("fc_layers")? {
+        for (i, layer) in doc.get("fc_layers").as_arr().context("fc_layers")?.iter().enumerate()
+        {
             let n_in = layer.get("n_in").as_usize().context("n_in")?;
             let n_out = layer.get("n_out").as_usize().context("n_out")?;
             let wt = layer.get("w_ternary").as_arr().context("w_ternary")?;
             if wt.len() != n_in * n_out {
-                bail!("fc layer weight count {} != {n_in}x{n_out}", wt.len());
+                return Err(WeightError {
+                    layer: format!("fc_layers[{i}]"),
+                    reason: format!("weight count {} != {n_in}x{n_out}", wt.len()),
+                }
+                .into());
             }
             let w: Vec<i8> = wt
                 .iter()
@@ -1246,5 +1308,61 @@ mod tests {
             0,
         );
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn weight_ingest_rejects_non_finite_naming_the_layer() {
+        // JSON text can't spell NaN, but a corrupted in-memory doc (or a
+        // writer bug) can; ingest refuses it with a typed error that says
+        // exactly which layer is poisoned.
+        let mut doc = tiny_doc();
+        if let Json::Obj(o) = &mut doc {
+            if let Some(Json::Arr(layers)) = o.get_mut("conv_layers") {
+                if let Json::Obj(l) = &mut layers[0] {
+                    l.insert("w".into(), Json::Arr(vec![Json::Num(f64::NAN)]));
+                }
+            }
+        }
+        let err =
+            DeployedModel::from_json(&doc, &ImacConfig::default(), AdcConfig::default(), 0)
+                .unwrap_err();
+        let we = err.downcast_ref::<WeightError>().expect("typed WeightError");
+        assert_eq!(we.layer, "conv_layers[0] (conv)");
+        assert!(we.reason.contains("non-finite"), "{we}");
+        assert!(we.to_string().starts_with("weights rejected at conv_layers[0]"), "{we}");
+    }
+
+    #[test]
+    fn weight_ingest_rejects_shape_mismatch_with_typed_error() {
+        // Conv weight count inconsistent with k/cin/cout.
+        let mut doc = tiny_doc();
+        if let Json::Obj(o) = &mut doc {
+            if let Some(Json::Arr(layers)) = o.get_mut("conv_layers") {
+                if let Json::Obj(l) = &mut layers[0] {
+                    l.insert("w".into(), Json::arr_f32(&[1.0, 2.0, 3.0]));
+                }
+            }
+        }
+        let err =
+            DeployedModel::from_json(&doc, &ImacConfig::default(), AdcConfig::default(), 0)
+                .unwrap_err();
+        let we = err.downcast_ref::<WeightError>().expect("typed WeightError");
+        assert_eq!(we.layer, "conv_layers[0] (conv)");
+        assert!(we.reason.contains("shape mismatch"), "{we}");
+
+        // FC weight count inconsistent with n_in x n_out.
+        let mut doc = tiny_doc();
+        if let Json::Obj(o) = &mut doc {
+            o.insert(
+                "fc_layers".into(),
+                Json::parse(r#"[{"n_in": 2, "n_out": 2, "w_ternary": [1, -1]}]"#).unwrap(),
+            );
+        }
+        let err =
+            DeployedModel::from_json(&doc, &ImacConfig::default(), AdcConfig::default(), 0)
+                .unwrap_err();
+        let we = err.downcast_ref::<WeightError>().expect("typed WeightError");
+        assert_eq!(we.layer, "fc_layers[0]");
+        assert!(we.reason.contains("weight count 2 != 2x2"), "{we}");
     }
 }

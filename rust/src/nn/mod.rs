@@ -45,6 +45,6 @@ pub mod synthetic;
 pub mod tensor;
 
 pub use crate::quant::PrecisionPolicy;
-pub use engine::{ConvOp, ConvPlan, DeployedModel};
+pub use engine::{ConvOp, ConvPlan, DeployedModel, WeightError};
 pub use scratch::{ConvScratch, FcScratch, Scratch};
 pub use tensor::Tensor;

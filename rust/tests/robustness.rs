@@ -3,7 +3,7 @@
 
 use tpu_imac::cli::Args;
 use tpu_imac::imac::{AdcConfig, ImacConfig};
-use tpu_imac::nn::DeployedModel;
+use tpu_imac::nn::{DeployedModel, WeightError};
 use tpu_imac::util::json::Json;
 use tpu_imac::util::prop::{forall, Gen};
 
@@ -71,6 +71,50 @@ fn deployed_model_rejects_malformed_docs() {
         );
         assert!(r.is_err(), "should reject: {c}");
     }
+}
+
+#[test]
+fn weight_ingest_rejects_corrupt_artifacts_with_typed_errors() {
+    // A model doc whose weights are the wrong shape for its declared
+    // geometry is refused at ingest with a WeightError naming the layer —
+    // it must never reach the registry and serve garbage.
+    let shape = Json::parse(
+        r#"{"dataset": "mnist",
+            "conv_layers": [{"kind": "conv", "k": 3, "cout": 4, "stride": 1,
+                             "pad": 1, "relu": true, "w": [1.0, 2.0],
+                             "b": [0.0, 0.0, 0.0, 0.0]}],
+            "fc_layers": [{"n_in": 4, "n_out": 1, "w_ternary": [1, 0, -1, 1]}]}"#,
+    )
+    .unwrap();
+    let err =
+        DeployedModel::from_json(&shape, &ImacConfig::default(), AdcConfig::default(), 0)
+            .unwrap_err();
+    let we = err.downcast_ref::<WeightError>().expect("typed WeightError for bad shape");
+    assert_eq!(we.layer, "conv_layers[0] (conv)");
+    assert!(we.reason.contains("shape mismatch"), "{we}");
+
+    // Non-finite weights (a corrupt writer, truncated file recovered as
+    // NaN, ...) are likewise refused with the poisoned layer named.
+    let mut doc = Json::parse(
+        r#"{"dataset": "mnist",
+            "conv_layers": [{"kind": "dwconv", "k": 1, "stride": 1, "pad": 0,
+                             "relu": false, "w": [1.0], "b": [0.0]},
+                            {"kind": "maxpool", "k": 28, "stride": 28}],
+            "fc_layers": [{"n_in": 1, "n_out": 2, "w_ternary": [1, -1]}]}"#,
+    )
+    .unwrap();
+    if let Json::Obj(o) = &mut doc {
+        if let Some(Json::Arr(layers)) = o.get_mut("conv_layers") {
+            if let Json::Obj(l) = &mut layers[0] {
+                l.insert("b".into(), Json::Arr(vec![Json::Num(f64::INFINITY)]));
+            }
+        }
+    }
+    let err = DeployedModel::from_json(&doc, &ImacConfig::default(), AdcConfig::default(), 0)
+        .unwrap_err();
+    let we = err.downcast_ref::<WeightError>().expect("typed WeightError for non-finite");
+    assert_eq!(we.layer, "conv_layers[0] (dwconv)");
+    assert!(we.reason.contains("non-finite"), "{we}");
 }
 
 #[test]

@@ -8,7 +8,8 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use tpu_imac::coordinator::{
-    Coordinator, CoordinatorConfig, ModelRegistry, NativeBackend, PjrtConvBackend,
+    Coordinator, CoordinatorConfig, FaultPlan, ModelRegistry, NativeBackend, PjrtConvBackend,
+    ServeError,
 };
 use tpu_imac::deploy::DeploymentSpec;
 use tpu_imac::nn::synthetic::{lenet_weights_doc, mobilenet_mini_weights_doc};
@@ -86,7 +87,7 @@ fn pjrt_serving_matches_native_predictions() {
     }
     let mut agree = 0;
     for (want, rx) in pairs {
-        let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap().unwrap();
         if resp.predicted == want {
             agree += 1;
         }
@@ -147,7 +148,9 @@ fn cross_precision_conformance_fp32_dynamic_calibrated() {
                 .collect();
             passes.push(
                 rxs.into_iter()
-                    .map(|rx| rx.recv_timeout(Duration::from_secs(60)).unwrap().predicted)
+                    .map(|rx| {
+                        rx.recv_timeout(Duration::from_secs(60)).unwrap().unwrap().predicted
+                    })
                     .collect(),
             );
         }
@@ -258,7 +261,7 @@ fn multi_model_registry_routes_accounts_and_swaps() {
     }
     let (mut s_lenet, mut s_mm) = (Scratch::new(), Scratch::new());
     for (i, rx) in rxs.into_iter().enumerate() {
-        let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap().unwrap();
         let want = if i % 2 == 0 {
             tpu_imac::util::stats::argmax(lenet_oracle.model.infer_into(&images[i], &mut s_lenet))
         } else {
@@ -358,7 +361,7 @@ fn batched_fc_path_bit_exact_vs_per_row_and_counted() {
     let rxs: Vec<_> = images.iter().map(|img| client.submit(img.clone()).unwrap().1).collect();
     let served: Vec<usize> = rxs
         .into_iter()
-        .map(|rx| rx.recv_timeout(Duration::from_secs(60)).unwrap().predicted)
+        .map(|rx| rx.recv_timeout(Duration::from_secs(60)).unwrap().unwrap().predicted)
         .collect();
     let mut s2 = Scratch::new();
     for (img, &p) in images.iter().zip(&served) {
@@ -372,6 +375,199 @@ fn batched_fc_path_bit_exact_vs_per_row_and_counted() {
         "every served image must be accounted to the bit-sliced layer-1 path"
     );
     assert_eq!(snap.gemm_images, n as u64);
+    coord.shutdown();
+}
+
+/// The resilience-layer anchor: a chaos soak with deterministic fault
+/// injection across two models — in-batch panics, one worker death, NaN
+/// output corruption and slow batches — while a second thread hot-swaps
+/// one deployment (including one injected build failure that must roll
+/// back). The contract under all of it: **every accepted request gets
+/// exactly one reply** — a response or a typed [`ServeError`] — with zero
+/// hangs and zero lost replies, the supervisor restarts the dead worker,
+/// and swap generations stay monotonic. Self-contained synthetic weights;
+/// fixed seeds end to end.
+#[test]
+fn chaos_soak_zero_lost_responses() {
+    let mut rng = Xoshiro256::seed_from_u64(0xC4A05);
+    let lenet_doc = lenet_weights_doc(&mut rng);
+    let mm_doc = mobilenet_mini_weights_doc(&mut rng);
+    let lenet_faults = FaultPlan {
+        seed: 1,
+        panic_every: Some(7),
+        slow_every: Some(5),
+        slow_us: 300,
+        nan_every: Some(9),
+        ..Default::default()
+    };
+    let mm_faults =
+        FaultPlan { seed: 2, die_on_batch: Some(3), nan_every: Some(6), ..Default::default() };
+    let registry = Arc::new(ModelRegistry::new());
+    registry
+        .register(&DeploymentSpec::doc("lenet", lenet_doc.clone()).faults(lenet_faults))
+        .unwrap();
+    registry
+        .register(
+            &DeploymentSpec::doc("mm", mm_doc)
+                .precision(PrecisionPolicy::Int8)
+                .faults(mm_faults),
+        )
+        .unwrap();
+
+    let coord = Coordinator::start_registry(
+        CoordinatorConfig { max_batch: 4, workers: 3, ..Default::default() },
+        registry.clone(),
+    )
+    .unwrap();
+    let client = coord.client();
+
+    // Concurrent hot swaps while the soak runs: clean swaps bump the
+    // generation monotonically; the injected build failure must leave the
+    // live generation serving (rollback).
+    let swapper = {
+        let registry = registry.clone();
+        let lenet_doc = lenet_doc.clone();
+        std::thread::spawn(move || {
+            let mut last_gen = registry.resolve(0).unwrap().0;
+            for i in 0..4 {
+                std::thread::sleep(Duration::from_millis(15));
+                if i == 2 {
+                    let bad = DeploymentSpec::doc("lenet", lenet_doc.clone())
+                        .faults(FaultPlan { fail_build: true, ..Default::default() });
+                    let err = registry.swap("lenet", &bad).unwrap_err();
+                    assert!(format!("{err:#}").contains("injected build failure"), "{err:#}");
+                    assert_eq!(
+                        registry.resolve(0).unwrap().0,
+                        last_gen,
+                        "failed swap must not bump the generation"
+                    );
+                    continue;
+                }
+                registry
+                    .swap("lenet", &DeploymentSpec::doc("lenet", lenet_doc.clone()))
+                    .unwrap();
+                let generation = registry.resolve(0).unwrap().0;
+                assert!(generation > last_gen, "swap generations must be monotonic");
+                last_gen = generation;
+            }
+        })
+    };
+
+    // 240 requests round-robin across both models; a few carry (generous)
+    // deadline budgets so the guarded submit path soaks too.
+    let n = 240usize;
+    let mut rxs = Vec::with_capacity(n);
+    for i in 0..n {
+        let img = Tensor::from_vec(28, 28, 1, (0..784).map(|_| rng.next_f32() - 0.5).collect());
+        let name = if i % 2 == 0 { "lenet" } else { "mm" };
+        let rx = if i % 16 == 3 {
+            client.submit_to_within(name, img, Duration::from_secs(30)).unwrap().1
+        } else {
+            client.submit_to(name, img).unwrap().1
+        };
+        rxs.push(rx);
+    }
+
+    let (mut ok, mut typed) = (0u64, 0u64);
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let reply = rx
+            .recv_timeout(Duration::from_secs(60))
+            .unwrap_or_else(|_| panic!("request {i}: no reply within 60s — a request was lost"));
+        match reply {
+            Ok(_) => ok += 1,
+            Err(
+                ServeError::WorkerFault { .. }
+                | ServeError::NumericFault { .. }
+                | ServeError::DeadlineExceeded { .. },
+            ) => typed += 1,
+            Err(other) => panic!("request {i}: unexpected serve error under chaos: {other}"),
+        }
+        // Exactly one reply per request: the sender is consumed by it.
+        assert!(rx.try_recv().is_err(), "request {i}: second reply on one channel");
+    }
+    assert_eq!(ok + typed, n as u64, "every request answered exactly once");
+    swapper.join().unwrap();
+
+    // The injected worker death must be observed and repaired by the
+    // supervisor (its poll runs every few ms; give it a bounded moment).
+    let t0 = std::time::Instant::now();
+    while coord.metrics.snapshot().worker_restarts < 1 {
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "supervisor never restarted the dead worker"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let snap = coord.metrics.snapshot();
+    assert_eq!(snap.completed, ok, "completed counts exactly the Ok replies");
+    assert!(snap.worker_panics >= 1, "panic_every plan never fired");
+    assert!(snap.numeric_faults >= 1, "nan_every plan never fired");
+    assert!(snap.slow_batches >= 1, "slow_every plan never fired");
+    assert!(
+        snap.faulted + snap.deadline_drops >= typed,
+        "fault accounting covers the typed error replies"
+    );
+    coord.shutdown();
+}
+
+/// Deadline expiry and admission control, end to end: a single slow
+/// deployment with an explicit `queue_quota` — an over-quota submit is
+/// shed with a typed `ShedLoad` at submit time, a queued request whose
+/// budget lapses is answered `DeadlineExceeded` without being computed,
+/// and both show up in the global and per-model metrics.
+#[test]
+fn chaos_deadline_expiry_and_load_shed_are_typed() {
+    let mut rng = Xoshiro256::seed_from_u64(0xD1CE);
+    let doc = lenet_weights_doc(&mut rng);
+    // Every batch sleeps ~40ms before executing, so the queue observably
+    // backs up behind the worker.
+    let faults =
+        FaultPlan { seed: 4, slow_every: Some(1), slow_us: 40_000, ..Default::default() };
+    let registry = ModelRegistry::with_specs(&[DeploymentSpec::doc("a", doc)
+        .queue_quota(3)
+        .faults(faults)])
+    .unwrap();
+    let coord = Coordinator::start_registry(
+        CoordinatorConfig { max_batch: 1, workers: 1, ..Default::default() },
+        registry,
+    )
+    .unwrap();
+    let client = coord.client();
+    let img = || Tensor::from_vec(28, 28, 1, vec![0.25; 784]);
+
+    // r1 is drained immediately; the worker then sleeps inside the
+    // injected slow path, pinning r2..r4 in the queue.
+    let r1 = client.submit_to("a", img()).unwrap().1;
+    std::thread::sleep(Duration::from_millis(20));
+    let r2 = client.submit_to("a", img()).unwrap().1;
+    let r3 = client.submit_to_within("a", img(), Duration::from_millis(1)).unwrap().1;
+    let r4 = client.submit_to("a", img()).unwrap().1;
+    // Queue depth for 'a' is now 3 == quota: the next submit is shed.
+    let err = client.submit_to("a", img()).unwrap_err();
+    match err.downcast_ref::<ServeError>() {
+        Some(ServeError::ShedLoad { model, queued, quota }) => {
+            assert_eq!((model.as_str(), *queued, *quota), ("a", 3, 3));
+        }
+        other => panic!("expected ShedLoad, got {other:?} ({err:#})"),
+    }
+
+    // Live requests complete; the expired one is answered, not computed.
+    assert!(r1.recv_timeout(Duration::from_secs(60)).unwrap().is_ok());
+    assert!(r2.recv_timeout(Duration::from_secs(60)).unwrap().is_ok());
+    match r3.recv_timeout(Duration::from_secs(60)).unwrap() {
+        Err(ServeError::DeadlineExceeded { waited_us }) => {
+            assert!(waited_us >= 1_000, "budget was 1ms, waited only {waited_us}us");
+        }
+        other => panic!("expected DeadlineExceeded, got {other:?}"),
+    }
+    assert!(r4.recv_timeout(Duration::from_secs(60)).unwrap().is_ok());
+
+    let snap = coord.metrics.snapshot();
+    assert_eq!(snap.completed, 3);
+    assert_eq!(snap.shed, 1);
+    assert_eq!(snap.deadline_drops, 1);
+    let m = snap.models.iter().find(|m| m.name == "a").expect("per-model metrics for 'a'");
+    assert_eq!((m.shed, m.deadline_drops), (1, 1));
     coord.shutdown();
 }
 
@@ -393,7 +589,7 @@ fn metrics_accumulate_under_load() {
         })
         .collect();
     for rx in rxs {
-        rx.recv().unwrap();
+        rx.recv().unwrap().unwrap();
     }
     let snap = coord.metrics.snapshot();
     assert_eq!(snap.completed, 40);
