@@ -243,6 +243,58 @@ fn main() {
         });
     }
 
+    // SIMD kernel micro-rows (new, non-frozen series): the two dispatched
+    // inner loops — i8×i8→i32 GEMM and the popcount bitplane MVM — timed
+    // scalar-forced vs at the host's detected level. On a host without
+    // AVX2/NEON (or under TPU_IMAC_SIMD=scalar) the pairs coincide and the
+    // printed speedup is ~1.00x by construction.
+    let host_level = tpu_imac::nn::simd::active();
+    let (gm, gk, gn) = (128usize, 512usize, 256usize);
+    let ga: Vec<i8> = (0..gm * gk).map(|i| ((i * 7 + 3) % 255) as i8).collect();
+    let gb: Vec<i8> = (0..gk * gn).map(|i| ((i * 13 + 5) % 255) as i8).collect();
+    let gscale_w = vec![0.02f32; gn];
+    let gbias = vec![0.1f32; gn];
+    for (row, level) in [
+        ("i8 GEMM kernel scalar (128x512x256)", tpu_imac::nn::SimdLevel::Scalar),
+        ("i8 GEMM kernel simd (128x512x256)", host_level),
+    ] {
+        let (a, b, sw, bias) = (ga.clone(), gb.clone(), gscale_w.clone(), gbias.clone());
+        let mut acc = vec![0i32; gm * gn];
+        let mut out = vec![0.0f32; gm * gn];
+        suite.bench_throughput(row, (gm * gk * gn) as f64, move || {
+            tpu_imac::nn::gemm::gemm_i8_requant_tiled_at(
+                level, &a, gm, gk, &b, gn, 0.05, &sw, &bias, false, &mut acc, &mut out, 256, 4,
+            );
+            out[0].to_bits() as u64
+        });
+    }
+    let (pn_in, pn_out) = (1024usize, 256usize);
+    let pw: Vec<i8> = (0..pn_in * pn_out).map(|i| ((i % 3) as i8) - 1).collect();
+    let mut prng = Xoshiro256::seed_from_u64(29);
+    let xb = tpu_imac::imac::Crossbar::program(
+        &pw,
+        pn_in,
+        pn_out,
+        tpu_imac::imac::CrossbarConfig::default(),
+        &mut prng,
+    );
+    let levels: Vec<f32> =
+        (0..pn_in).map(|i| if i % 3 == 0 { -1.0 } else { 1.0 }).collect();
+    let mut xbits = vec![0u64; tpu_imac::quant::bitplane_words(pn_in)];
+    tpu_imac::quant::pack_sign_bitmask(&levels, &mut xbits);
+    for (row, level) in [
+        ("popcount bitplane MVM scalar (1024x256)", tpu_imac::nn::SimdLevel::Scalar),
+        ("popcount bitplane MVM simd (1024x256)", host_level),
+    ] {
+        let (xb, xbits) = (xb.clone(), xbits.clone());
+        let mut out = vec![0.0f32; pn_out];
+        suite.bench_throughput(row, (pn_in * pn_out) as f64, move || {
+            out.fill(0.0);
+            xb.mvm_level_bits_acc_at(level, &xbits, 1, &mut out);
+            out[0].to_bits() as u64
+        });
+    }
+
     let results = suite.run_cli();
     // Look rows up by name (not position) so inserting a bench row can
     // never silently corrupt the reported cross-PR speedup series.
@@ -275,6 +327,16 @@ fn main() {
     println!(
         "speedup (FC per-row fp32 / bit-sliced batched): {:.2}x  (EXPERIMENTS.md §Bit-sliced FC)",
         fc_row / fc_bits
+    );
+    let g_sc = mean("i8 GEMM kernel scalar (128x512x256)");
+    let g_sd = mean("i8 GEMM kernel simd (128x512x256)");
+    let p_sc = mean("popcount bitplane MVM scalar (1024x256)");
+    let p_sd = mean("popcount bitplane MVM simd (1024x256)");
+    println!(
+        "speedup (scalar / '{}' kernels): i8 GEMM {:.2}x, popcount bitplane MVM {:.2}x",
+        host_level.label(),
+        g_sc / g_sd,
+        p_sc / p_sd
     );
 
     // Steady-state allocation check across every deployment shape: after
@@ -309,6 +371,42 @@ fn main() {
             s.bytes() / 1024,
             warm,
             s.maxabs_scans()
+        );
+    }
+
+    // The PR-7 FC kernels share the same steady-state guarantee: the
+    // batched analog micro-kernel (non-ideal fabric) and the multi-plane
+    // popcount path (2-bit bridge) must not allocate once warm.
+    use tpu_imac::imac::{CrossbarConfig, DeviceConfig, ImacConfig};
+    let noisy = ImacConfig {
+        crossbar: CrossbarConfig {
+            device: DeviceConfig { sigma: 0.05, ..Default::default() },
+            wire_alpha: 0.02,
+            amp_offset_sigma: 0.01,
+        },
+        ..Default::default()
+    };
+    let multibit = ImacConfig { bridge_bits: 2, bridge_full_scale: 2.0, ..Default::default() };
+    for (imac, label) in [(noisy, "lenet fp32 non-ideal"), (multibit, "lenet fp32 2-bit bridge")] {
+        let m = DeploymentSpec::doc("bench", doc.clone())
+            .imac(imac)
+            .fabric_seed(7)
+            .build()
+            .expect("synthetic model")
+            .model;
+        let mut s = Scratch::new();
+        let refs: Vec<&Tensor> = images.iter().collect();
+        m.infer_batch_into(&refs, &mut s, |_, _| {});
+        m.infer_batch_into(&refs, &mut s, |_, _| {});
+        let warm = s.grow_events();
+        for _ in 0..100 {
+            m.infer_batch_into(&refs, &mut s, |_, _| {});
+        }
+        assert_eq!(s.grow_events(), warm, "{label} scratch arena regrew at steady state");
+        println!(
+            "scratch arena [{label}]: {} KiB, {} grow events (all during warmup), zero steady-state growth",
+            s.bytes() / 1024,
+            warm
         );
     }
 }

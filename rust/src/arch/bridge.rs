@@ -84,6 +84,27 @@ pub fn sign_levels(xs: &[f32]) -> Vec<f32> {
     xs.iter().map(|&x| sign_level(x)).collect()
 }
 
+/// Multi-bit bridge quantizer: a `bits`-bit flash-ADC front end driving the
+/// IMAC word lines at **odd-integer levels** `{±1, ±3, …, ±(2ᵇ−1)}` —
+/// the symmetric mid-rise grid (no zero level, so every word line always
+/// drives, like the sign bridge). With `half = 2ᵇ⁻¹` and step
+/// `Δ = full_scale / half`:
+///
+/// `level(x) = 2·clamp(⌊x/Δ⌋, −half, half−1) + 1`
+///
+/// `bits = 1` reproduces [`sign_level`] exactly for every input (including
+/// −0.0 → +1: `⌊−0.0/Δ⌋ = −0.0`, clamped to 0 ⇒ +1). Inputs beyond
+/// ±`full_scale` saturate at the extreme levels.
+#[inline]
+pub fn bridge_level(x: f32, bits: u32, full_scale: f32) -> f32 {
+    debug_assert!((1..=8).contains(&bits), "bridge width {bits} out of range");
+    debug_assert!(full_scale > 0.0, "non-positive bridge full scale {full_scale}");
+    let half = (1u32 << (bits - 1)) as f32;
+    let delta = full_scale / half;
+    let q = (x / delta).floor().clamp(-half, half - 1.0);
+    2.0 * q + 1.0
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -133,5 +154,50 @@ mod tests {
     fn zero_transfer_cycles() {
         let b = SignBridge::new(256, 1024).unwrap();
         assert_eq!(b.transfer_cycles(), 0);
+    }
+
+    /// `bits = 1` is the sign bridge, bit for bit — including −0.0 and the
+    /// saturating extremes.
+    #[test]
+    fn one_bit_bridge_is_sign_level() {
+        for x in [0.0, -0.0, 1e-30, -1e-30, 0.7, -0.7, 5.0, -5.0, f32::INFINITY, f32::NEG_INFINITY]
+        {
+            assert_eq!(bridge_level(x, 1, 1.0), sign_level(x), "x = {x}");
+        }
+        forall(40, |g| {
+            let x = g.f32_in(-4.0, 4.0);
+            let fs = g.f32_in(0.1, 3.0);
+            assert_eq!(bridge_level(x, 1, fs), sign_level(x));
+        });
+    }
+
+    /// Levels are odd integers in `[−(2ᵇ−1), 2ᵇ−1]`, monotone in x, and
+    /// saturate outside ±full_scale.
+    #[test]
+    fn multi_bit_levels_are_odd_monotone_saturating() {
+        forall(60, |g| {
+            let bits = g.usize_in(1, 8) as u32;
+            let m = (1i32 << bits) - 1;
+            let fs = g.f32_in(0.25, 4.0);
+            let a = g.f32_in(-3.0 * fs, 3.0 * fs);
+            let b = g.f32_in(-3.0 * fs, 3.0 * fs);
+            let la = bridge_level(a, bits, fs) as i32;
+            let lb = bridge_level(b, bits, fs) as i32;
+            for l in [la, lb] {
+                assert!(l.abs() <= m && l.rem_euclid(2) == 1, "level {l} bits {bits}");
+            }
+            if a <= b {
+                assert!(la <= lb, "monotonicity: {a}→{la}, {b}→{lb}");
+            } else {
+                assert!(la >= lb);
+            }
+        });
+        assert_eq!(bridge_level(99.0, 3, 1.0), 7.0);
+        assert_eq!(bridge_level(-99.0, 3, 1.0), -7.0);
+        // Mid-scale sanity for b=2, full_scale 1: Δ = 0.5.
+        assert_eq!(bridge_level(0.2, 2, 1.0), 1.0);
+        assert_eq!(bridge_level(0.6, 2, 1.0), 3.0);
+        assert_eq!(bridge_level(-0.2, 2, 1.0), -1.0);
+        assert_eq!(bridge_level(-0.6, 2, 1.0), -3.0);
     }
 }

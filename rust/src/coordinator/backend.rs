@@ -6,9 +6,15 @@
 //! per-image i8 kernels, the FC section through
 //! [`crate::imac::ImacFabric::forward_batch_into`] — layer 1 as the
 //! bit-sliced ±1×ternary popcount kernel on ideal fabrics (counted by
-//! `metrics.imac_bitplane_images`), later layers as the cache-blocked
-//! batched analog MVM. The batch path is bit-identical to the per-row
-//! fabric path (see ARCHITECTURE.md §FC section).
+//! `metrics.imac_bitplane_images`; multi-bit bridges run the same kernel
+//! over `bridge_bits` planes), later layers as the cache-blocked batched
+//! analog MVM. Non-ideal fabrics run the batched analog micro-kernel for
+//! full 4-image blocks (`metrics.imac_analog_batch_images`) with a
+//! per-row tail (`metrics.imac_analog_tail_images`). Every batch path is
+//! bit-identical to the per-row fabric path (see ARCHITECTURE.md §FC
+//! section), and the bridge is deployment-aware
+//! ([`DeployedModel::bridge_batch`] — sign bits at 1 bit, odd-integer
+//! levels beyond).
 //!
 //! * [`NativeBackend`] — conv via the im2col+GEMM plan
 //!   ([`crate::nn::ConvPlan`]) with a per-worker scratch arena, zero
@@ -41,6 +47,21 @@ use anyhow::{Context, Result};
 use crate::metrics::Metrics;
 use crate::nn::{DeployedModel, Scratch, Tensor};
 use crate::runtime::Runtime;
+
+/// Account which IMAC fast path served `nimg` images, making the kernel
+/// choice observable next to the latency split: ideal fabrics run the
+/// bit-sliced popcount path (all images); non-ideal fabrics run the
+/// 4-image batched analog micro-kernel for full blocks and fall back to
+/// the per-row kernel for the `nimg % 4` tail.
+fn record_fc_path_images(metrics: &Metrics, model: &DeployedModel, nimg: usize) {
+    let nimg = nimg as u64;
+    if model.fabric.uses_bitplane_path() {
+        metrics.imac_bitplane_images.fetch_add(nimg, Ordering::Relaxed);
+    } else {
+        metrics.imac_analog_batch_images.fetch_add(nimg - nimg % 4, Ordering::Relaxed);
+        metrics.imac_analog_tail_images.fetch_add(nimg % 4, Ordering::Relaxed);
+    }
+}
 
 /// A batch executor. `infer_batch` returns one score vector per image.
 pub trait InferenceBackend {
@@ -94,7 +115,7 @@ impl InferenceBackend for NativeBackend {
         // later layers via the cache-blocked batched MVM. Bit-identical to
         // the old per-row loop.
         let t1 = Instant::now();
-        DeployedModel::bridge_in_place(feats);
+        model.bridge_batch(feats);
         let fc = &mut self.scratch.fc;
         let n = images.len();
         let scores = model.fabric.forward_batch_into(feats, n, &mut fc.bits, &mut fc.a, &mut fc.b);
@@ -107,9 +128,7 @@ impl InferenceBackend for NativeBackend {
             scores.chunks_exact(row_len).map(|r| r.to_vec()).collect()
         };
         metrics.imac_us_total.fetch_add(t1.elapsed().as_micros() as u64, Ordering::Relaxed);
-        if model.fabric.uses_bitplane_path() {
-            metrics.imac_bitplane_images.fetch_add(images.len() as u64, Ordering::Relaxed);
-        }
+        record_fc_path_images(metrics, model, images.len());
 
         // Counter deltas read once the conv arena's borrows have ended
         // (`feats` lived in it until the fabric consumed it).
@@ -199,7 +218,7 @@ impl PjrtConvBackend {
         let t1 = Instant::now();
         let fc = &mut self.scratch.fc;
         let live = &mut feats[..chunk.len() * self.out_elems];
-        DeployedModel::bridge_in_place(live);
+        self.model.bridge_batch(live);
         let fabric = &self.model.fabric;
         let n = chunk.len();
         let scores = fabric.forward_batch_into(live, n, &mut fc.bits, &mut fc.a, &mut fc.b);
@@ -210,9 +229,7 @@ impl PjrtConvBackend {
             scores.chunks_exact(row_len).map(|r| r.to_vec()).collect()
         };
         metrics.imac_us_total.fetch_add(t1.elapsed().as_micros() as u64, Ordering::Relaxed);
-        if self.model.fabric.uses_bitplane_path() {
-            metrics.imac_bitplane_images.fetch_add(chunk.len() as u64, Ordering::Relaxed);
-        }
+        record_fc_path_images(metrics, &self.model, chunk.len());
         Ok(out)
     }
 }

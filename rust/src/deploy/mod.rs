@@ -28,7 +28,7 @@
 
 use std::sync::Arc;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::coordinator::faults::{FaultPlan, FaultState};
 use crate::imac::{AdcConfig, ImacConfig};
@@ -236,6 +236,21 @@ impl DeploymentSpec {
                 &owned_doc
             }
         };
+        // Validate the bridge before compiling anything: the fabric builder
+        // asserts these same bounds, and a panic there would take a serving
+        // worker down instead of failing the swap cleanly.
+        ensure!(
+            (1..=8).contains(&self.imac.bridge_bits),
+            "deployment '{}': bridge_bits {} out of range 1..=8",
+            self.name,
+            self.imac.bridge_bits
+        );
+        ensure!(
+            self.imac.bridge_full_scale > 0.0,
+            "deployment '{}': bridge_full_scale {} must be positive",
+            self.name,
+            self.imac.bridge_full_scale
+        );
         // A calibration source on a non-int8 spec is a configuration
         // error: silently dropping it would leave the operator believing
         // static scales are active. (The single-model CLI never attaches
@@ -251,7 +266,7 @@ impl DeploymentSpec {
             Some(CalibrationSource::Table(t)) => Some(t.clone()),
             None => None,
         };
-        let model = DeployedModel::from_doc(
+        let mut model = DeployedModel::from_doc(
             doc,
             &self.imac,
             self.adc,
@@ -260,6 +275,13 @@ impl DeploymentSpec {
             calib.as_ref(),
         )
         .with_context(|| format!("building deployment '{}'", self.name))?;
+        // Autotune: stamp the host's benchmarked tile plan onto the conv
+        // plan and the fabric. The probe runs once per process (cached in
+        // `simd::host_tile`) and every candidate is output-identical — the
+        // tile is a pure speed choice, pinned by the kernel property tests.
+        let tile = crate::nn::simd::host_tile();
+        model.plan.set_tile(tile);
+        model.fabric.set_tile(tile);
         let faults = self
             .faults
             .as_ref()
@@ -418,6 +440,54 @@ mod tests {
         // The same spec without the table builds fine.
         let dep = DeploymentSpec::synthetic("l", SyntheticModel::Lenet, 1).build().unwrap();
         assert!(!dep.model.plan.is_calibrated());
+    }
+
+    /// Bad bridge configs fail the build cleanly (no fabric-builder panic
+    /// in a serving worker); good multi-bit configs build and report their
+    /// width through the fabric.
+    #[test]
+    fn bridge_config_validated_at_build() {
+        let err = DeploymentSpec::synthetic("b", SyntheticModel::Lenet, 1)
+            .imac(ImacConfig { bridge_bits: 0, ..Default::default() })
+            .build()
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("bridge_bits"), "{err:#}");
+        let err = DeploymentSpec::synthetic("b", SyntheticModel::Lenet, 1)
+            .imac(ImacConfig { bridge_bits: 9, ..Default::default() })
+            .build()
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("bridge_bits"), "{err:#}");
+        let err = DeploymentSpec::synthetic("b", SyntheticModel::Lenet, 1)
+            .imac(ImacConfig { bridge_full_scale: 0.0, ..Default::default() })
+            .build()
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("bridge_full_scale"), "{err:#}");
+        let dep = DeploymentSpec::synthetic("b", SyntheticModel::Lenet, 1)
+            .imac(ImacConfig { bridge_bits: 3, bridge_full_scale: 2.0, ..Default::default() })
+            .build()
+            .unwrap();
+        assert_eq!(dep.model.fabric.bridge_bits(), 3);
+        assert_eq!(dep.model.fabric.bridge_full_scale(), 2.0);
+    }
+
+    /// `build()` stamps the autotuned host tile onto both the conv plan
+    /// and the fabric, and the chosen tile sits on the candidate grid.
+    #[test]
+    fn build_stamps_autotuned_tile() {
+        use crate::nn::simd::{
+            GEMM_KC_CANDIDATES, GEMM_MC_CANDIDATES, IMAC_IMGS_CANDIDATES, IMAC_KC_CANDIDATES,
+        };
+        let dep = DeploymentSpec::synthetic("t", SyntheticModel::Lenet, 1).build().unwrap();
+        let plan_tile = dep.model.plan.tile();
+        let fabric_tile = dep.model.fabric.tile();
+        assert_eq!(plan_tile, fabric_tile, "plan and fabric must share one tile");
+        assert_eq!(plan_tile, crate::nn::simd::host_tile(), "tile must be the cached host tile");
+        if !matches!(std::env::var("TPU_IMAC_AUTOTUNE").as_deref(), Ok("off") | Ok("0")) {
+            assert!(GEMM_KC_CANDIDATES.contains(&plan_tile.gemm_kc));
+            assert!(GEMM_MC_CANDIDATES.contains(&plan_tile.gemm_mc));
+            assert!(IMAC_KC_CANDIDATES.contains(&plan_tile.imac_kc));
+            assert!(IMAC_IMGS_CANDIDATES.contains(&plan_tile.imac_imgs));
+        }
     }
 
     #[test]

@@ -33,12 +33,22 @@
 //! 3. **f32** — narrow layers, where the i8→f32 convert dominates.
 //!
 //! [`Crossbar::mvm_batch_acc`] additionally processes four images per pass
-//! over each `KC`-row weight panel (the [`crate::nn::gemm`] blocking
-//! idioms), amortizing weight traffic 4× across a serving batch while
-//! keeping every image's accumulation order — and therefore its bits —
-//! identical to the per-row kernels.
+//! over each weight panel (the [`crate::nn::gemm`] blocking idioms),
+//! amortizing weight traffic 4× across a serving batch while keeping every
+//! image's accumulation order — and therefore its bits — identical to the
+//! per-row kernels. **Non-ideal (study) crossbars batch too** since the
+//! SIMD/autotune PR: a dedicated kernel replays the per-row IR-drop and
+//! offset arithmetic term for term across a 4-image block, so study fabrics
+//! no longer drop to per-row (only the <4-image batch tail does, on either
+//! path, and the fabric's metrics make that observable). Panel/image-block
+//! widths come from the deployment's autotuned
+//! [`crate::nn::simd::TilePlan`]; popcounts route through
+//! [`crate::nn::simd::popcnt_diff_at`] (hardware POPCNT when detected).
+//! Multi-bit bridge levels run the same popcount identity per bit-plane —
+//! see [`Crossbar::mvm_level_bits_acc`].
 
 use crate::nn::gemm::KC;
+use crate::nn::simd;
 use crate::util::rng::Xoshiro256;
 
 use super::device::{DeviceConfig, SynapsePair};
@@ -272,42 +282,101 @@ impl Crossbar {
     /// bridge guarantees ±1 inputs only there (later layers see analog
     /// sigmoid outputs and take [`Crossbar::mvm_batch_acc`]).
     pub fn mvm_sign_bits_acc(&self, xbits: &[u64], out: &mut [f32]) {
-        assert!(self.ideal, "bit-sliced MVM is defined for ideal crossbars only");
         let words = crate::quant::bitplane_words(self.n_in);
         assert_eq!(xbits.len(), words, "sign bitmask word count");
+        self.mvm_level_bits_acc(xbits, 1, out)
+    }
+
+    /// Multi-plane generalization of [`Crossbar::mvm_sign_bits_acc`] for
+    /// **odd-integer bridge levels** `x ∈ {±1, ±3, …, ±(2ᵇ−1)}` (b =
+    /// `nplanes`): with `u_i = (x_i + M)/2 ∈ [0, M]`, `M = 2ᵇ−1`, packed
+    /// bit-plane-major by [`crate::quant::pack_level_bitplanes`],
+    ///
+    /// `Σ_i x_i·w_ij = 2·Σ_t 2ᵗ·(pc(uₜ∧plus_j) − pc(uₜ∧minus_j)) − M·(n⁺_j − n⁻_j)`
+    ///
+    /// — exact integer arithmetic (b ≤ 8 keeps every magnitude far below
+    /// 2²⁴, so the f32 cast and the f32 per-row path are both exact and the
+    /// two stay bit-identical). `nplanes = 1` is precisely the ±1 sign
+    /// kernel. Popcounts run through the [`simd`] dispatch layer.
+    pub fn mvm_level_bits_acc(&self, xbits: &[u64], nplanes: usize, out: &mut [f32]) {
+        self.mvm_level_bits_acc_at(simd::active(), xbits, nplanes, out)
+    }
+
+    /// [`Crossbar::mvm_level_bits_acc`] at an explicit SIMD level — the
+    /// test/bench entry point for the scalar-vs-POPCNT comparison.
+    pub fn mvm_level_bits_acc_at(
+        &self,
+        level: simd::SimdLevel,
+        xbits: &[u64],
+        nplanes: usize,
+        out: &mut [f32],
+    ) {
+        assert!(self.ideal, "bit-sliced MVM is defined for ideal crossbars only");
+        assert!((1..=8).contains(&nplanes), "bridge plane count {nplanes} out of range");
+        let words = crate::quant::bitplane_words(self.n_in);
+        assert!(xbits.len() >= words * nplanes, "level bitplane word count");
         assert_eq!(out.len(), self.n_out);
+        let m = (1i64 << nplanes) - 1;
         for (j, o) in out.iter_mut().enumerate() {
             let pj = &self.plus_bits[j * words..(j + 1) * words];
             let mj = &self.minus_bits[j * words..(j + 1) * words];
-            let mut d = 0i32;
-            for ((&xw, &pw), &mw) in xbits.iter().zip(pj).zip(mj) {
-                d += (xw & pw).count_ones() as i32;
-                d -= (xw & mw).count_ones() as i32;
+            let mut d = 0i64;
+            for t in 0..nplanes {
+                let xt = &xbits[t * words..(t + 1) * words];
+                d += (simd::popcnt_diff_at(level, xt, pj, mj) as i64) << t;
             }
-            *o += (2 * d - self.col_bias[j]) as f32;
+            *o += (2 * d - m * self.col_bias[j] as i64) as f32;
         }
     }
 
     /// Batched accumulating MVM over `nimg` input rows (row `i` at
-    /// `x[i·ldx .. i·ldx + n_in]`; `out` dense `nimg × n_out`). Ideal
-    /// crossbars run a cache-blocked kernel — `KC`-row weight panels, four
-    /// images per pass (the `nn::gemm` blocking idioms), so each weight row
-    /// is read once per four images instead of once per image — that is
-    /// **bit-identical per image** to [`Crossbar::mvm_acc`]: `KC` is a
-    /// multiple of 4, so the panel walk visits the reduction dimension in
-    /// exactly the per-row kernel's 4-chunk grouping and order. Non-ideal
-    /// crossbars (and the <4-image tail) fall back to per-row
-    /// [`Crossbar::mvm_acc`].
+    /// `x[i·ldx .. i·ldx + n_in]`; `out` dense `nimg × n_out`) with the
+    /// default tile (`KC`-row panels, 4-image blocks) — see
+    /// [`Crossbar::mvm_batch_acc_tiled`].
     pub fn mvm_batch_acc(&self, x: &[f32], ldx: usize, nimg: usize, out: &mut [f32]) {
+        self.mvm_batch_acc_tiled(x, ldx, nimg, out, KC, 4)
+    }
+
+    /// Batched accumulating MVM with explicit blocking from an autotuned
+    /// [`crate::nn::simd::TilePlan`]. Ideal crossbars run the cache-blocked
+    /// kernel — `kc_tile`-row weight panels, `img_block`-image blocks of
+    /// 4-image micro-kernels, so each weight row is read once per four
+    /// images instead of once per image — **bit-identical per image** to
+    /// [`Crossbar::mvm_acc`]: `kc_tile` must be a multiple of 4 so the
+    /// panel walk visits the reduction dimension in exactly the per-row
+    /// kernel's 4-chunk grouping and order. Non-ideal crossbars run
+    /// [`Crossbar::mvm_nonideal_f32_batch4`], equally bit-identical. Only
+    /// the `nimg % 4` batch tail falls back to per-row `mvm_acc`.
+    pub fn mvm_batch_acc_tiled(
+        &self,
+        x: &[f32],
+        ldx: usize,
+        nimg: usize,
+        out: &mut [f32],
+        kc_tile: usize,
+        img_block: usize,
+    ) {
         if nimg == 0 {
             return;
         }
         assert!(ldx >= self.n_in, "row stride {ldx} shorter than crossbar rows {}", self.n_in);
         assert!(x.len() >= (nimg - 1) * ldx + self.n_in, "batch input shape");
         assert_eq!(out.len(), nimg * self.n_out, "batch output shape");
-        let nb = if self.ideal { nimg - nimg % 4 } else { 0 };
+        assert!(
+            kc_tile > 0 && kc_tile % 4 == 0,
+            "imac kc tile {kc_tile} must be a positive multiple of 4 (per-row chunk grid)"
+        );
+        assert!(
+            img_block > 0 && img_block % 4 == 0,
+            "image block {img_block} must be a positive multiple of 4 (micro-kernel height)"
+        );
+        let nb = nimg - nimg % 4;
         if nb > 0 {
-            self.mvm_ideal_f32_batch4(x, ldx, nb, out);
+            if self.ideal {
+                self.mvm_ideal_f32_batched(x, ldx, nb, out, kc_tile, img_block);
+            } else {
+                self.mvm_nonideal_f32_batch4(x, ldx, nb, out);
+            }
         }
         for i in nb..nimg {
             self.mvm_acc(
@@ -321,67 +390,144 @@ impl Crossbar {
     /// accumulation sequence — 4-chunk product groups in ascending `p`
     /// with the same left-to-right association, then skip-zero singles —
     /// matches `mvm_ideal_f32` term for term, so results are bit-identical
-    /// to the per-row path.
-    fn mvm_ideal_f32_batch4(&self, x: &[f32], ldx: usize, nimg4: usize, out: &mut [f32]) {
+    /// to the per-row path for every `(kc_tile, img_block)` candidate.
+    fn mvm_ideal_f32_batched(
+        &self,
+        x: &[f32],
+        ldx: usize,
+        nimg4: usize,
+        out: &mut [f32],
+        kc_tile: usize,
+        img_block: usize,
+    ) {
         debug_assert_eq!(nimg4 % 4, 0);
         let n = self.n_out;
         let w = &self.weights_norm;
-        let mut pc = 0;
-        while pc < self.n_in {
-            // KC-row weight panel: stays cache-resident across all image
-            // blocks. KC % 4 == 0 keeps 4-chunk boundaries aligned with the
-            // per-row kernel's `chunks_exact(4)` walk.
-            let kc = KC.min(self.n_in - pc);
-            let chunk_end = pc + (kc / 4) * 4;
-            let mut ib = 0;
-            while ib < nimg4 {
-                let x0 = &x[ib * ldx..ib * ldx + self.n_in];
-                let x1 = &x[(ib + 1) * ldx..(ib + 1) * ldx + self.n_in];
-                let x2 = &x[(ib + 2) * ldx..(ib + 2) * ldx + self.n_in];
-                let x3 = &x[(ib + 3) * ldx..(ib + 3) * ldx + self.n_in];
-                let block = &mut out[ib * n..(ib + 4) * n];
-                let (r0, rest) = block.split_at_mut(n);
-                let (r1, rest) = rest.split_at_mut(n);
-                let (r2, r3) = rest.split_at_mut(n);
-                let mut p = pc;
-                while p < chunk_end {
-                    let w0 = &w[p * n..(p + 1) * n];
-                    let w1 = &w[(p + 1) * n..(p + 2) * n];
-                    let w2 = &w[(p + 2) * n..(p + 3) * n];
-                    let w3 = &w[(p + 3) * n..(p + 4) * n];
-                    let (a00, a01, a02, a03) = (x0[p], x0[p + 1], x0[p + 2], x0[p + 3]);
-                    let (a10, a11, a12, a13) = (x1[p], x1[p + 1], x1[p + 2], x1[p + 3]);
-                    let (a20, a21, a22, a23) = (x2[p], x2[p + 1], x2[p + 2], x2[p + 3]);
-                    let (a30, a31, a32, a33) = (x3[p], x3[p + 1], x3[p + 2], x3[p + 3]);
-                    for j in 0..n {
-                        let (b0, b1, b2, b3) = (w0[j], w1[j], w2[j], w3[j]);
-                        r0[j] += a00 * b0 + a01 * b1 + a02 * b2 + a03 * b3;
-                        r1[j] += a10 * b0 + a11 * b1 + a12 * b2 + a13 * b3;
-                        r2[j] += a20 * b0 + a21 * b1 + a22 * b2 + a23 * b3;
-                        r3[j] += a30 * b0 + a31 * b1 + a32 * b2 + a33 * b3;
+        let mut ib0 = 0;
+        while ib0 < nimg4 {
+            // Image superblock: bounds how much input/output must stay
+            // cache-resident while a weight panel is streamed.
+            let blk = img_block.min(nimg4 - ib0);
+            let mut pc = 0;
+            while pc < self.n_in {
+                // kc-row weight panel: stays cache-resident across the image
+                // block. kc_tile % 4 == 0 keeps 4-chunk boundaries aligned
+                // with the per-row kernel's `chunks_exact(4)` walk.
+                let kc = kc_tile.min(self.n_in - pc);
+                let chunk_end = pc + (kc / 4) * 4;
+                let mut ib = ib0;
+                while ib < ib0 + blk {
+                    let x0 = &x[ib * ldx..ib * ldx + self.n_in];
+                    let x1 = &x[(ib + 1) * ldx..(ib + 1) * ldx + self.n_in];
+                    let x2 = &x[(ib + 2) * ldx..(ib + 2) * ldx + self.n_in];
+                    let x3 = &x[(ib + 3) * ldx..(ib + 3) * ldx + self.n_in];
+                    let block = &mut out[ib * n..(ib + 4) * n];
+                    let (r0, rest) = block.split_at_mut(n);
+                    let (r1, rest) = rest.split_at_mut(n);
+                    let (r2, r3) = rest.split_at_mut(n);
+                    let mut p = pc;
+                    while p < chunk_end {
+                        let w0 = &w[p * n..(p + 1) * n];
+                        let w1 = &w[(p + 1) * n..(p + 2) * n];
+                        let w2 = &w[(p + 2) * n..(p + 3) * n];
+                        let w3 = &w[(p + 3) * n..(p + 4) * n];
+                        let (a00, a01, a02, a03) = (x0[p], x0[p + 1], x0[p + 2], x0[p + 3]);
+                        let (a10, a11, a12, a13) = (x1[p], x1[p + 1], x1[p + 2], x1[p + 3]);
+                        let (a20, a21, a22, a23) = (x2[p], x2[p + 1], x2[p + 2], x2[p + 3]);
+                        let (a30, a31, a32, a33) = (x3[p], x3[p + 1], x3[p + 2], x3[p + 3]);
+                        for j in 0..n {
+                            let (b0, b1, b2, b3) = (w0[j], w1[j], w2[j], w3[j]);
+                            r0[j] += a00 * b0 + a01 * b1 + a02 * b2 + a03 * b3;
+                            r1[j] += a10 * b0 + a11 * b1 + a12 * b2 + a13 * b3;
+                            r2[j] += a20 * b0 + a21 * b1 + a22 * b2 + a23 * b3;
+                            r3[j] += a30 * b0 + a31 * b1 + a32 * b2 + a33 * b3;
+                        }
+                        p += 4;
                     }
-                    p += 4;
+                    // Panel tail rows (final panel only): skip-zero singles,
+                    // mirroring the per-row remainder loop.
+                    while p < pc + kc {
+                        let wrow = &w[p * n..(p + 1) * n];
+                        for (r, xs) in
+                            [(&mut *r0, x0), (&mut *r1, x1), (&mut *r2, x2), (&mut *r3, x3)]
+                        {
+                            let xv = xs[p];
+                            if xv == 0.0 {
+                                continue;
+                            }
+                            for (o, &bv) in r.iter_mut().zip(wrow) {
+                                *o += xv * bv;
+                            }
+                        }
+                        p += 1;
+                    }
+                    ib += 4;
                 }
-                // Panel tail rows (final panel only): skip-zero singles,
-                // mirroring the per-row remainder loop.
-                while p < pc + kc {
-                    let wrow = &w[p * n..(p + 1) * n];
-                    for (r, xs) in
-                        [(&mut *r0, x0), (&mut *r1, x1), (&mut *r2, x2), (&mut *r3, x3)]
+                pc += kc;
+            }
+            ib0 += blk;
+        }
+    }
+
+    /// Non-ideal (study) batched kernel over a multiple-of-4 image count —
+    /// the satellite that stops study fabrics from silently dropping to
+    /// per-row. Per image it replays [`Crossbar::mvm_acc`]'s non-ideal
+    /// arithmetic term for term: ascending rows, the identical
+    /// `v_eff = x_i·(1 − α·i/n)` expression, the same `v_eff == 0.0` skip,
+    /// and amplifier offsets added exactly once per image at the end — so
+    /// results are bit-identical to the per-row path while each weight row
+    /// is read once per four images.
+    fn mvm_nonideal_f32_batch4(&self, x: &[f32], ldx: usize, nimg4: usize, out: &mut [f32]) {
+        debug_assert_eq!(nimg4 % 4, 0);
+        let n = self.n_out;
+        let alpha = self.cfg.wire_alpha as f32;
+        let nf = self.n_in as f32;
+        let mut ib = 0;
+        while ib < nimg4 {
+            let x0 = &x[ib * ldx..ib * ldx + self.n_in];
+            let x1 = &x[(ib + 1) * ldx..(ib + 1) * ldx + self.n_in];
+            let x2 = &x[(ib + 2) * ldx..(ib + 2) * ldx + self.n_in];
+            let x3 = &x[(ib + 3) * ldx..(ib + 3) * ldx + self.n_in];
+            let block = &mut out[ib * n..(ib + 4) * n];
+            let (r0, rest) = block.split_at_mut(n);
+            let (r1, rest) = rest.split_at_mut(n);
+            let (r2, r3) = rest.split_at_mut(n);
+            for i in 0..self.n_in {
+                // Same expression shape as mvm_acc so the f32 bits match.
+                let atten = 1.0 - alpha * i as f32 / nf;
+                let v0 = x0[i] * atten;
+                let v1 = x1[i] * atten;
+                let v2 = x2[i] * atten;
+                let v3 = x3[i] * atten;
+                let row = &self.weights_norm[i * n..(i + 1) * n];
+                if v0 != 0.0 && v1 != 0.0 && v2 != 0.0 && v3 != 0.0 {
+                    for j in 0..n {
+                        let wv = row[j];
+                        r0[j] += v0 * wv;
+                        r1[j] += v1 * wv;
+                        r2[j] += v2 * wv;
+                        r3[j] += v3 * wv;
+                    }
+                } else {
+                    // Mixed zero/nonzero drives: per-image conditional adds,
+                    // preserving mvm_acc's `v_eff == 0.0 → skip` semantics.
+                    for (r, v) in [(&mut *r0, v0), (&mut *r1, v1), (&mut *r2, v2), (&mut *r3, v3)]
                     {
-                        let xv = xs[p];
-                        if xv == 0.0 {
+                        if v == 0.0 {
                             continue;
                         }
-                        for (o, &bv) in r.iter_mut().zip(wrow) {
-                            *o += xv * bv;
+                        for (o, &wv) in r.iter_mut().zip(row) {
+                            *o += v * wv;
                         }
                     }
-                    p += 1;
                 }
-                ib += 4;
             }
-            pc += kc;
+            for r in [r0, r1, r2, r3] {
+                for (o, &off) in r.iter_mut().zip(&self.amp_offsets) {
+                    *o += off;
+                }
+            }
+            ib += 4;
         }
     }
 
@@ -411,6 +557,38 @@ pub fn reference_mvm(w: &[i8], n_in: usize, n_out: usize, x: &[f32]) -> Vec<f32>
         }
     }
     out
+}
+
+/// Deployment-time micro-benchmark for the IMAC batched-MVM tile: times a
+/// representative ideal crossbar (768×64, 8 images — the FC shape class the
+/// fabric serves) across the `simd` candidate grid and returns the fastest
+/// `(imac_kc, imac_imgs)`. Deterministic inputs; every candidate computes
+/// bit-identical results (pinned by tests), so the pick is purely a speed
+/// choice. Called once per process via [`crate::nn::simd::host_tile`].
+pub(crate) fn autotune_imac_tile() -> (usize, usize) {
+    let (n_in, n_out, nimg) = (768usize, 64usize, 8usize);
+    let w: Vec<i8> = (0..n_in * n_out).map(|i| ((i % 3) as i8) - 1).collect();
+    let mut rng = Xoshiro256::seed_from_u64(42);
+    let xb = Crossbar::program(&w, n_in, n_out, CrossbarConfig::default(), &mut rng);
+    let x: Vec<f32> = (0..nimg * n_in).map(|i| ((i % 13) as f32 - 6.0) * 0.25).collect();
+    let mut out = vec![0.0f32; nimg * n_out];
+    let mut best = (KC, 4usize);
+    let mut best_t = std::time::Duration::MAX;
+    for &kc in simd::IMAC_KC_CANDIDATES {
+        for &imgs in simd::IMAC_IMGS_CANDIDATES {
+            let mut run = || {
+                out.fill(0.0);
+                xb.mvm_batch_acc_tiled(&x, n_in, nimg, &mut out, kc, imgs);
+            };
+            run(); // warm caches before timing
+            let t = simd::best_time_of(2, run);
+            if t < best_t {
+                best_t = t;
+                best = (kc, imgs);
+            }
+        }
+    }
+    best
 }
 
 #[cfg(test)]
@@ -566,8 +744,9 @@ mod tests {
         });
     }
 
-    /// Non-ideal crossbars take the per-row fallback inside the batched
-    /// entry point — offsets and IR drop accumulate exactly once per image.
+    /// Non-ideal crossbars run the dedicated batched kernel (4-image blocks
+    /// + per-row tail) — offsets and IR drop accumulate exactly once per
+    /// image, bit-identical to per-row `mvm_acc`.
     #[test]
     fn batched_mvm_matches_per_row_when_non_ideal() {
         let cfg = CrossbarConfig { wire_alpha: 0.15, amp_offset_sigma: 0.2, ..Default::default() };
@@ -594,5 +773,113 @@ mod tests {
         let xb = Crossbar::program(&w, 8, 1, CrossbarConfig::default(), &mut rng);
         let x = vec![0.0f32; 8];
         assert_eq!(xb.mvm_vec(&x), vec![0.0]);
+    }
+
+    /// Satellite property: the non-ideal batched kernel is bit-identical to
+    /// per-row `mvm_acc` across random IR-drop/offset/variation configs,
+    /// shapes, strided rows, batch tails, and inputs containing exact
+    /// zeros (which exercise the per-image skip fallback inside a block).
+    #[test]
+    fn nonideal_batched_mvm_bit_exact_vs_per_row() {
+        forall(25, |g| {
+            let n_in = g.usize_in(1, 120);
+            let n_out = g.usize_in(1, 24);
+            let nimg = g.usize_in(1, 9);
+            let ldx = n_in + g.usize_in(0, 3);
+            let cfg = CrossbarConfig {
+                device: DeviceConfig {
+                    sigma: if g.bool() { 0.05 } else { 0.0 },
+                    ..Default::default()
+                },
+                wire_alpha: g.f32_in(0.0, 0.3) as f64,
+                amp_offset_sigma: g.f32_in(0.01, 0.4) as f64,
+            };
+            let w = g.vec_ternary(n_in * n_out);
+            let mut rng = Xoshiro256::seed_from_u64(23);
+            let xb = Crossbar::program(&w, n_in, n_out, cfg, &mut rng);
+            assert!(!xb.is_ideal());
+            // Mix exact zeros into the drive pattern so some rows hit the
+            // `v_eff == 0.0` skip while others in the same 4-block don't.
+            let x: Vec<f32> = (0..nimg * ldx)
+                .map(|i| if i % 5 == 0 { 0.0 } else { g.f32_in(-2.0, 2.0) })
+                .collect();
+            let mut got = vec![0.5f32; nimg * n_out];
+            let mut want = got.clone();
+            xb.mvm_batch_acc(&x, ldx, nimg, &mut got);
+            for i in 0..nimg {
+                xb.mvm_acc(&x[i * ldx..i * ldx + n_in], &mut want[i * n_out..(i + 1) * n_out]);
+            }
+            assert_eq!(got, want, "non-ideal batched kernel diverges from per-row");
+        });
+    }
+
+    /// Tile-grid property: every `(imac_kc, imac_imgs)` candidate computes
+    /// the identical bits as the default tile, on ideal and non-ideal
+    /// crossbars alike — the precondition for autotuning to be a pure
+    /// speed choice.
+    #[test]
+    fn tiled_batched_mvm_bit_exact_across_grid() {
+        forall(10, |g| {
+            let n_in = g.usize_in(1, 600); // > smallest kc candidate panels
+            let n_out = g.usize_in(1, 70);
+            let nimg = g.usize_in(1, 10);
+            let noisy = g.bool();
+            let cfg = CrossbarConfig {
+                wire_alpha: if noisy { 0.1 } else { 0.0 },
+                ..Default::default()
+            };
+            let w = g.vec_ternary(n_in * n_out);
+            let x = g.vec_f32(nimg * n_in, -2.0, 2.0);
+            let mut rng = Xoshiro256::seed_from_u64(29);
+            let xb = Crossbar::program(&w, n_in, n_out, cfg, &mut rng);
+            let mut want = vec![0.0f32; nimg * n_out];
+            xb.mvm_batch_acc_tiled(&x, n_in, nimg, &mut want, KC, 4);
+            for &kc in simd::IMAC_KC_CANDIDATES {
+                for &imgs in simd::IMAC_IMGS_CANDIDATES {
+                    let mut got = vec![0.0f32; nimg * n_out];
+                    xb.mvm_batch_acc_tiled(&x, n_in, nimg, &mut got, kc, imgs);
+                    assert_eq!(got, want, "tile ({kc},{imgs}) changes batched-MVM bits");
+                }
+            }
+        });
+    }
+
+    /// Multi-bit bridge satellite: for odd-integer levels `±1..±(2ᵇ−1)`
+    /// the multi-plane popcount kernel is bit-exact against the ideal f32
+    /// path, at every runnable SIMD level, including sub-64-row widths.
+    #[test]
+    fn multi_plane_level_bits_bit_exact_vs_ideal() {
+        forall(30, |g| {
+            let nplanes = g.usize_in(2, 3);
+            let m = (1i32 << nplanes) - 1;
+            let n_in = g.usize_in(1, 150);
+            let n_out = g.usize_in(1, 80);
+            let w = g.vec_ternary(n_in * n_out);
+            // Odd levels: 2k − m for k ∈ [0, m] (m odd ⇒ 2k − m odd).
+            let x: Vec<f32> =
+                (0..n_in).map(|_| (2 * g.usize_in(0, m as usize) as i32 - m) as f32).collect();
+            let mut rng = Xoshiro256::seed_from_u64(31);
+            let xb = Crossbar::program(&w, n_in, n_out, CrossbarConfig::default(), &mut rng);
+            assert!(xb.is_ideal());
+            let words = crate::quant::bitplane_words(n_in);
+            let mut bits = vec![0u64; words * nplanes];
+            crate::quant::pack_level_bitplanes(&x, nplanes, &mut bits);
+            let base: Vec<f32> = (0..n_out).map(|j| (j % 3) as f32).collect();
+            let mut want = base.clone();
+            xb.mvm_acc(&x, &mut want);
+            for level in simd::runnable_levels() {
+                let mut got = base.clone();
+                xb.mvm_level_bits_acc_at(level, &bits, nplanes, &mut got);
+                assert_eq!(got, want, "{nplanes}-plane kernel diverges at {level:?}");
+            }
+        });
+    }
+
+    #[test]
+    fn autotune_imac_tile_stays_on_grid() {
+        let (kc, imgs) = autotune_imac_tile();
+        assert!(simd::IMAC_KC_CANDIDATES.contains(&kc));
+        assert!(simd::IMAC_IMGS_CANDIDATES.contains(&imgs));
+        assert_eq!(kc % 4, 0);
     }
 }

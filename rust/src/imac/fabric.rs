@@ -14,6 +14,7 @@
 //! (the paper's key point: no ADC/DAC between layers); only the final
 //! layer's outputs pass through the ADC.
 
+use crate::nn::simd::TilePlan;
 use crate::util::rng::Xoshiro256;
 
 use super::crossbar::{Crossbar, CrossbarConfig};
@@ -30,6 +31,13 @@ pub struct ImacConfig {
     /// Differential-amp gain policy: `gain = gain_num / sqrt(fan_in)`.
     /// The Python trainer bakes the same policy (see python/compile/imac.py).
     pub gain_num: f64,
+    /// PE→IMAC bridge resolution in bits (1 = the paper's sign bridge;
+    /// 2..=8 drive odd-integer levels via
+    /// [`crate::arch::bridge::bridge_level`]).
+    pub bridge_bits: u32,
+    /// Bridge full-scale input range (the flash-ADC reference); only
+    /// meaningful for `bridge_bits > 1`.
+    pub bridge_full_scale: f32,
 }
 
 impl Default for ImacConfig {
@@ -40,6 +48,8 @@ impl Default for ImacConfig {
             subarray_rows: 256,
             subarray_cols: 256,
             gain_num: 4.0,
+            bridge_bits: 1,
+            bridge_full_scale: 1.0,
         }
     }
 }
@@ -131,6 +141,21 @@ impl ImacLayer {
     /// (same per-image accumulation order; non-ideal partitions fall back
     /// to the per-row kernel internally).
     pub fn preact_batch(&self, x: &[f32], nimg: usize, out: &mut [f32]) {
+        let t = TilePlan::default();
+        self.preact_batch_tiled(x, nimg, out, t.imac_kc, t.imac_imgs)
+    }
+
+    /// [`ImacLayer::preact_batch`] with explicit blocking from the
+    /// deployment's autotuned [`TilePlan`] — bit-identical for every
+    /// candidate tile (pinned by the crossbar grid property tests).
+    pub fn preact_batch_tiled(
+        &self,
+        x: &[f32],
+        nimg: usize,
+        out: &mut [f32],
+        kc_tile: usize,
+        img_block: usize,
+    ) {
         assert_eq!(x.len(), nimg * self.n_in);
         assert_eq!(out.len(), nimg * self.n_out);
         if nimg == 0 {
@@ -138,27 +163,42 @@ impl ImacLayer {
         }
         out.fill(0.0);
         for (row, xb) in &self.partitions {
-            xb.mvm_batch_acc(&x[*row..], self.n_in, nimg, out);
+            xb.mvm_batch_acc_tiled(&x[*row..], self.n_in, nimg, out, kc_tile, img_block);
         }
         for o in out.iter_mut() {
             *o *= self.amp_gain;
         }
     }
 
-    /// Bit-sliced batched preact for strictly **±1** inputs (the bridge's
-    /// levels — valid for the first logical layer only) on an all-ideal
-    /// layer: per image and partition the input slice packs into the
-    /// `bits` sign bitmask ([`crate::quant::pack_sign_bitmask`], one
-    /// worker-scratch buffer, grown to the widest partition on first use)
-    /// and runs [`Crossbar::mvm_sign_bits_acc`] — the whole MVM becomes
-    /// popcounts, 64 rows per word, no multiplies. Exactly equal to
-    /// [`ImacLayer::preact`]: both paths compute the same integers, and
-    /// integers never round in f32 at these widths. Callers must fall back
-    /// to [`ImacLayer::preact_batch`] when `!self.is_ideal()`.
+    /// Bit-sliced batched preact for strictly **±1** inputs (the 1-bit
+    /// bridge's levels — first logical layer only) on an all-ideal layer —
+    /// the single-plane case of [`ImacLayer::preact_level_batch`].
     pub fn preact_sign_batch(
         &self,
         x: &[f32],
         nimg: usize,
+        bits: &mut Vec<u64>,
+        out: &mut [f32],
+    ) {
+        self.preact_level_batch(x, nimg, 1, bits, out)
+    }
+
+    /// Bit-sliced batched preact for **odd-integer bridge levels**
+    /// `±1..±(2ᵇ−1)` (`b = nplanes`; the multi-bit bridge's outputs —
+    /// valid for the first logical layer only) on an all-ideal layer: per
+    /// image and partition the input slice packs into `nplanes` plane-major
+    /// bitmasks ([`crate::quant::pack_level_bitplanes`], one worker-scratch
+    /// buffer, grown to the widest partition × plane count on first use)
+    /// and runs [`Crossbar::mvm_level_bits_acc`] — the whole MVM becomes
+    /// popcounts, 64 rows per word per plane, no multiplies. Exactly equal
+    /// to [`ImacLayer::preact`]: both paths compute the same integers, and
+    /// integers never round in f32 at these widths (b ≤ 8). Callers must
+    /// fall back to [`ImacLayer::preact_batch`] when `!self.is_ideal()`.
+    pub fn preact_level_batch(
+        &self,
+        x: &[f32],
+        nimg: usize,
+        nplanes: usize,
         bits: &mut Vec<u64>,
         out: &mut [f32],
     ) {
@@ -173,18 +213,19 @@ impl ImacLayer {
             .iter()
             .map(|(_, xb)| crate::quant::bitplane_words(xb.n_in))
             .max()
-            .unwrap_or(0);
+            .unwrap_or(0)
+            * nplanes;
         if bits.len() < max_words {
             bits.resize(max_words, 0);
         }
         out.fill(0.0);
         for (row, xb) in &self.partitions {
-            let words = crate::quant::bitplane_words(xb.n_in);
+            let words = crate::quant::bitplane_words(xb.n_in) * nplanes;
             for i in 0..nimg {
                 let xs = &x[i * self.n_in + *row..i * self.n_in + *row + xb.n_in];
-                crate::quant::pack_sign_bitmask(xs, &mut bits[..words]);
+                crate::quant::pack_level_bitplanes(xs, nplanes, &mut bits[..words]);
                 let orow = &mut out[i * self.n_out..(i + 1) * self.n_out];
-                xb.mvm_sign_bits_acc(&bits[..words], orow);
+                xb.mvm_level_bits_acc(&bits[..words], nplanes, orow);
             }
         }
         for o in out.iter_mut() {
@@ -243,6 +284,13 @@ impl AdcConfig {
 pub struct ImacFabric {
     pub layers: Vec<ImacLayer>,
     pub adc: AdcConfig,
+    /// Cache-blocking parameters for the batched kernels — defaults at
+    /// build, overwritten by deployment-time autotuning
+    /// ([`crate::deploy::DeploymentSpec::build`] via [`ImacFabric::set_tile`]).
+    tile: TilePlan,
+    /// Bridge resolution driving layer 1 (from [`ImacConfig::bridge_bits`]).
+    bridge_bits: u32,
+    bridge_full_scale: f32,
 }
 
 impl ImacFabric {
@@ -253,6 +301,16 @@ impl ImacFabric {
         adc: AdcConfig,
         seed: u64,
     ) -> Self {
+        assert!(
+            (1..=8).contains(&cfg.bridge_bits),
+            "bridge width {} out of range (1..=8 bits)",
+            cfg.bridge_bits
+        );
+        assert!(
+            cfg.bridge_full_scale > 0.0,
+            "non-positive bridge full scale {}",
+            cfg.bridge_full_scale
+        );
         let mut rng = Xoshiro256::seed_from_u64(seed);
         let mut mapped = Vec::new();
         let mut prev_out: Option<usize> = None;
@@ -263,7 +321,46 @@ impl ImacFabric {
             mapped.push(ImacLayer::map(w, *n_in, *n_out, cfg, &mut rng));
             prev_out = Some(*n_out);
         }
-        Self { layers: mapped, adc }
+        Self {
+            layers: mapped,
+            adc,
+            tile: TilePlan::default(),
+            bridge_bits: cfg.bridge_bits,
+            bridge_full_scale: cfg.bridge_full_scale,
+        }
+    }
+
+    /// The fabric's active cache-blocking parameters.
+    pub fn tile(&self) -> TilePlan {
+        self.tile
+    }
+
+    /// Record the deployment's autotuned tile (serve-time batched kernels
+    /// read `imac_kc`/`imac_imgs` from here).
+    pub fn set_tile(&mut self, tile: TilePlan) {
+        self.tile = tile;
+    }
+
+    /// Bridge resolution in bits (1 = sign bridge).
+    pub fn bridge_bits(&self) -> u32 {
+        self.bridge_bits
+    }
+
+    /// Bridge full-scale range (the flash-ADC reference for multi-bit).
+    pub fn bridge_full_scale(&self) -> f32 {
+        self.bridge_full_scale
+    }
+
+    /// Which layer-1 kernel the batch path executes: `"bitplane"` (popcount
+    /// bit-slicing, all layer-1 crossbars ideal) or `"analog-batch"` (the
+    /// cache-blocked non-ideal batched kernel). Surfaced in the serve
+    /// summary so coverage regressions are visible.
+    pub fn fast_path(&self) -> &'static str {
+        if self.uses_bitplane_path() {
+            "bitplane"
+        } else {
+            "analog-batch"
+        }
     }
 
     pub fn n_in(&self) -> usize {
@@ -326,21 +423,22 @@ impl ImacFabric {
     }
 
     /// Batch-at-a-time analog forward — the serving FC hot path. `x` holds
-    /// `nimg` dense rows of bridge sign levels (strictly ±1, `n_in` wide);
-    /// returns the `nimg × n_out` quantized score block.
+    /// `nimg` dense rows of bridge levels (strictly ±1 for the 1-bit
+    /// bridge, odd integers `±1..±(2ᵇ−1)` for a `b`-bit bridge; `n_in`
+    /// wide); returns the `nimg × n_out` quantized score block.
     ///
-    /// Layer 1 consumes the ±1 rows directly from `x` (no staging copy)
+    /// Layer 1 consumes the level rows directly from `x` (no staging copy)
     /// through the bit-sliced popcount kernel when ideal
-    /// ([`ImacLayer::preact_sign_batch`], `bits` = the worker's
-    /// `FcScratch::bits` staging); every later layer sees analog sigmoid outputs
-    /// and runs the cache-blocked batched MVM
-    /// ([`ImacLayer::preact_batch`], four images per weight-panel pass).
-    /// Results are **bit-identical** to per-row
-    /// [`ImacFabric::forward_into`] — both fast kernels preserve the
+    /// ([`ImacLayer::preact_level_batch`], one plane per bridge bit,
+    /// `bits` = the worker's `FcScratch::bits` staging); non-ideal layer-1
+    /// and every later layer run the cache-blocked batched MVM
+    /// ([`ImacLayer::preact_batch_tiled`] with the fabric's autotuned
+    /// [`TilePlan`]). Results are **bit-identical** to per-row
+    /// [`ImacFabric::forward_into`] — every fast kernel preserves the
     /// per-image accumulation order — so switching a backend between the
-    /// two paths can never change a served score. Zero steady-state
-    /// allocations: `bits`/`a`/`b` grow to the workload high-water mark
-    /// during warmup and are reused verbatim (pass one
+    /// two paths (or retuning the tile) can never change a served score.
+    /// Zero steady-state allocations: `bits`/`a`/`b` grow to the workload
+    /// high-water mark during warmup and are reused verbatim (pass one
     /// [`crate::nn::FcScratch`]'s `bits`/`a`/`b` per worker).
     pub fn forward_batch_into<'s>(
         &self,
@@ -373,12 +471,18 @@ impl ImacFabric {
             let out = &mut nxt[..out_len];
             if li == 0 {
                 if layer.is_ideal() {
-                    layer.preact_sign_batch(x, nimg, bits, out);
+                    layer.preact_level_batch(x, nimg, self.bridge_bits as usize, bits, out);
                 } else {
-                    layer.preact_batch(x, nimg, out);
+                    layer.preact_batch_tiled(x, nimg, out, self.tile.imac_kc, self.tile.imac_imgs);
                 }
             } else {
-                layer.preact_batch(&cur[..nimg * width], nimg, out);
+                layer.preact_batch_tiled(
+                    &cur[..nimg * width],
+                    nimg,
+                    out,
+                    self.tile.imac_kc,
+                    self.tile.imac_imgs,
+                );
             }
             layer.neurons_in_place(out);
             width = layer.n_out;
@@ -609,6 +713,83 @@ mod tests {
                 caps,
                 "batch scratch regrew at steady state"
             );
+        });
+    }
+
+    /// Multi-bit bridge satellite: with a `b`-bit bridge (odd-integer
+    /// levels), the batch path — multi-plane popcount layer 1 + batched
+    /// analog chain — reproduces per-row `forward_into` bit-for-bit, and
+    /// the fabric still reports the bitplane fast path.
+    #[test]
+    fn forward_batch_multi_bit_bridge_bit_exact_vs_per_row() {
+        forall(12, |g| {
+            let bits_w = g.usize_in(2, 3) as u32;
+            let m = (1i32 << bits_w) - 1;
+            let n_in = g.usize_in(1, 120);
+            let n_mid = g.usize_in(1, 70);
+            let n_out = g.usize_in(1, 12);
+            let nimg = g.usize_in(1, 6);
+            let w1 = g.vec_ternary(n_in * n_mid);
+            let w2 = g.vec_ternary(n_mid * n_out);
+            let cfg = ImacConfig { subarray_rows: 80, bridge_bits: bits_w, ..ideal_cfg() };
+            let fabric = ImacFabric::build(
+                &[(w1, n_in, n_mid), (w2, n_mid, n_out)],
+                &cfg,
+                AdcConfig::default(),
+                g.case as u64,
+            );
+            assert!(fabric.uses_bitplane_path());
+            assert_eq!(fabric.fast_path(), "bitplane");
+            assert_eq!(fabric.bridge_bits(), bits_w);
+            let x: Vec<f32> = (0..nimg * n_in)
+                .map(|_| (2 * g.usize_in(0, m as usize) as i32 - m) as f32)
+                .collect();
+            let (mut pa, mut pb) = (Vec::new(), Vec::new());
+            let mut want = Vec::new();
+            for row in x.chunks_exact(n_in) {
+                want.extend_from_slice(fabric.forward_into(row, &mut pa, &mut pb));
+            }
+            let (mut bits, mut a, mut b) = (Vec::new(), Vec::new(), Vec::new());
+            let got = fabric.forward_batch_into(&x, nimg, &mut bits, &mut a, &mut b).to_vec();
+            assert_eq!(got, want, "multi-bit batch path diverges from per-row forward_into");
+        });
+    }
+
+    /// Autotune precondition at the fabric level: retuning the tile can
+    /// never change a served score — every candidate tile produces the
+    /// identical bits, on ideal and non-ideal fabrics alike.
+    #[test]
+    fn retuning_tile_never_changes_scores() {
+        forall(6, |g| {
+            let n_in = g.usize_in(1, 300);
+            let n_mid = g.usize_in(1, 60);
+            let n_out = g.usize_in(1, 10);
+            let nimg = g.usize_in(1, 9);
+            let noisy = g.bool();
+            let w1 = g.vec_ternary(n_in * n_mid);
+            let w2 = g.vec_ternary(n_mid * n_out);
+            let mut cfg = ideal_cfg();
+            if noisy {
+                cfg.crossbar.wire_alpha = 0.08;
+            }
+            let mut fabric = ImacFabric::build(
+                &[(w1, n_in, n_mid), (w2, n_mid, n_out)],
+                &cfg,
+                AdcConfig::default(),
+                g.case as u64,
+            );
+            assert_eq!(fabric.fast_path(), if noisy { "analog-batch" } else { "bitplane" });
+            let x: Vec<f32> = g.vec_sign(nimg * n_in).iter().map(|&s| s as f32).collect();
+            let (mut bits, mut a, mut b) = (Vec::new(), Vec::new(), Vec::new());
+            let want = fabric.forward_batch_into(&x, nimg, &mut bits, &mut a, &mut b).to_vec();
+            for &kc in crate::nn::simd::IMAC_KC_CANDIDATES {
+                for &imgs in crate::nn::simd::IMAC_IMGS_CANDIDATES {
+                    fabric.set_tile(TilePlan { imac_kc: kc, imac_imgs: imgs, ..TilePlan::default() });
+                    let got =
+                        fabric.forward_batch_into(&x, nimg, &mut bits, &mut a, &mut b).to_vec();
+                    assert_eq!(got, want, "tile ({kc},{imgs}) changed a served score");
+                }
+            }
         });
     }
 

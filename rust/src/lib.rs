@@ -85,16 +85,20 @@
 //! The FC section always executes in the ternary-analog
 //! [`imac::ImacFabric`], and the serving backends drive it
 //! **batch-at-a-time** ([`imac::ImacFabric::forward_batch_into`]): the
-//! first logical layer consumes the bridge's strictly-±1 inputs through a
-//! **bit-sliced popcount kernel** (sign bitmask × plus/minus ternary
-//! weight bitplanes derived from the packed 2-bit RRAM image —
-//! [`quant::ternary_bitplanes`]), and later (analog-input) layers run a
-//! cache-blocked batched MVM reusing [`nn::gemm`]'s blocking idioms. Both
-//! fast kernels are **bit-identical** to the per-row analog path
-//! (exact-integer layer 1; order-preserving batching elsewhere), and the
-//! whole section shares the conv plan's zero-allocation scratch arena.
-//! `metrics.imac_bitplane_images` counts images served through the
-//! bit-sliced layer-1 kernel. See `ARCHITECTURE.md` §3 and
+//! first logical layer consumes the bridge's levels (±1 sign bits, or
+//! odd-integer multi-bit levels) through a **bit-sliced popcount kernel**
+//! (level bitplanes × plus/minus ternary weight bitplanes derived from
+//! the packed 2-bit RRAM image — [`quant::ternary_bitplanes`]), and later
+//! (analog-input) layers run a cache-blocked batched MVM reusing
+//! [`nn::gemm`]'s blocking idioms — non-ideal fabrics included, via a
+//! batched kernel that replays the per-row float-op order. All the fast
+//! kernels are **bit-identical** to the per-row analog path
+//! (exact-integer layer 1; order-preserving batching elsewhere), run
+//! through the [`nn::simd`] dispatch layer with autotuned
+//! [`nn::TilePlan`] blocking, and the whole section shares the conv
+//! plan's zero-allocation scratch arena. `metrics.imac_bitplane_images`,
+//! `imac_analog_batch_images` and `imac_analog_tail_images` count which
+//! kernel served each image. See `ARCHITECTURE.md` §3 and
 //! `EXPERIMENTS.md` §Bit-sliced FC.
 //!
 //! Python (JAX + Pallas) exists only on the build path (`python/compile`):

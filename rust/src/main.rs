@@ -611,6 +611,13 @@ fn print_serve_summary(snap: &Snapshot, wall: std::time::Duration) {
             snap.imac_bitplane_images
         );
     }
+    if snap.imac_analog_batch_images + snap.imac_analog_tail_images > 0 {
+        println!(
+            "IMAC batched analog FC path: {} images in 4-image blocks, {} per-row tail images",
+            snap.imac_analog_batch_images, snap.imac_analog_tail_images
+        );
+    }
+    println!("kernels: simd {} | tile {}", snap.simd_level, snap.tile);
 }
 
 /// Offline calibration pass: run sample images (drawn from the synthetic

@@ -89,6 +89,14 @@ pub struct Metrics {
     /// bitplanes — ideal fabrics only; non-ideal deployments take the
     /// analog per-row kernels and leave this at 0).
     pub imac_bitplane_images: AtomicU64,
+    /// Images whose FC section ran through the cache-blocked **batched
+    /// analog** MVM kernel (non-ideal fabrics, full 4-image micro-kernel
+    /// blocks). Ideal deployments leave this at 0 — their layer 1 counts
+    /// under `imac_bitplane_images`.
+    pub imac_analog_batch_images: AtomicU64,
+    /// Images that fell to the per-row analog tail (batch remainder `nimg
+    /// % 4` on non-ideal fabrics) — the observable cost of ragged batches.
+    pub imac_analog_tail_images: AtomicU64,
     /// Per-deployment breakdowns, indexed by registry slot. Empty when the
     /// coordinator serves a single unnamed backend.
     models: RwLock<Vec<Arc<ModelMetrics>>>,
@@ -122,6 +130,14 @@ pub struct Snapshot {
     pub maxabs_scans: u64,
     pub scratch_bytes: u64,
     pub imac_bitplane_images: u64,
+    pub imac_analog_batch_images: u64,
+    pub imac_analog_tail_images: u64,
+    /// The SIMD dispatch level the serving kernels run at (host-detected,
+    /// `TPU_IMAC_SIMD=scalar` pins the fallback).
+    pub simd_level: &'static str,
+    /// The autotuned [`crate::nn::TilePlan`] label stamped on deployments
+    /// built this process.
+    pub tile: String,
     /// Per-deployment completed/latency breakdowns (registry mode only).
     pub models: Vec<ModelSnapshot>,
 }
@@ -272,6 +288,10 @@ impl Metrics {
             maxabs_scans: self.maxabs_scans.load(Ordering::Relaxed),
             scratch_bytes: self.scratch_bytes.load(Ordering::Relaxed),
             imac_bitplane_images: self.imac_bitplane_images.load(Ordering::Relaxed),
+            imac_analog_batch_images: self.imac_analog_batch_images.load(Ordering::Relaxed),
+            imac_analog_tail_images: self.imac_analog_tail_images.load(Ordering::Relaxed),
+            simd_level: crate::nn::simd::active().label(),
+            tile: crate::nn::simd::host_tile().label(),
             models,
         }
     }
@@ -297,6 +317,21 @@ mod tests {
         assert_eq!(s.completed, 100);
         assert!((s.mean_batch_fill - 0.9).abs() < 1e-9);
         assert!(s.models.is_empty(), "no per-model slots unless registered");
+    }
+
+    /// The snapshot surfaces the kernel-dispatch observability fields: the
+    /// active SIMD level, the autotuned tile label, and the analog
+    /// batch/tail image counters.
+    #[test]
+    fn snapshot_reports_simd_level_and_tile() {
+        let m = Metrics::new();
+        m.imac_analog_batch_images.store(8, Ordering::Relaxed);
+        m.imac_analog_tail_images.store(3, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.imac_analog_batch_images, 8);
+        assert_eq!(s.imac_analog_tail_images, 3);
+        assert!(["scalar", "avx2", "neon"].contains(&s.simd_level), "{}", s.simd_level);
+        assert!(s.tile.contains("gemm kc=") && s.tile.contains("imac kc="), "{}", s.tile);
     }
 
     #[test]

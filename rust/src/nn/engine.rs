@@ -12,7 +12,7 @@
 
 use anyhow::{bail, Context, Result};
 
-use crate::arch::bridge::sign_level;
+use crate::arch::bridge::{bridge_level, sign_level};
 use crate::imac::{AdcConfig, ImacConfig, ImacFabric};
 use crate::quant::{self, CalibrationTable, PrecisionPolicy};
 use crate::util::json::Json;
@@ -20,6 +20,7 @@ use crate::util::json::Json;
 use super::gemm;
 use super::ops;
 use super::scratch::{ConvScratch, Scratch};
+use super::simd::TilePlan;
 use super::tensor::Tensor;
 
 /// One conv-section op.
@@ -112,6 +113,12 @@ pub struct ConvPlan {
     feat_len: usize,
     precision: PrecisionPolicy,
     calibrated: bool,
+    /// Cache-blocking parameters the GEMM kernels read at run time —
+    /// defaults at compile, overwritten by deployment-time autotuning
+    /// ([`crate::deploy::DeploymentSpec::build`] via [`ConvPlan::set_tile`]).
+    /// Every candidate tile computes identical results (grid property
+    /// tests), so retuning can never change served numerics.
+    tile: TilePlan,
 }
 
 impl ConvPlan {
@@ -283,12 +290,24 @@ impl ConvPlan {
             feat_len: h * w * c,
             precision,
             calibrated: calib.is_some() && precision == PrecisionPolicy::Int8,
+            tile: TilePlan::default(),
         })
     }
 
     /// Bridge-feature width produced per image.
     pub fn feat_len(&self) -> usize {
         self.feat_len
+    }
+
+    /// The plan's active cache-blocking parameters.
+    pub fn tile(&self) -> TilePlan {
+        self.tile
+    }
+
+    /// Record the deployment's autotuned tile (run-time GEMMs read
+    /// `gemm_kc`/`gemm_mc` from here).
+    pub fn set_tile(&mut self, tile: TilePlan) {
+        self.tile = tile;
     }
 
     /// The arithmetic this plan was compiled for.
@@ -379,7 +398,7 @@ impl ConvPlan {
                             &mut cols[i * patches * kk..(i + 1) * patches * kk],
                         );
                     }
-                    gemm::gemm_bias(
+                    gemm::gemm_bias_tiled(
                         &cols[..n * patches * kk],
                         n * patches,
                         kk,
@@ -388,6 +407,8 @@ impl ConvPlan {
                         bias,
                         *relu,
                         &mut nxt[..n * patches * cout],
+                        self.tile.gemm_kc,
+                        self.tile.gemm_mc,
                     );
                     h = oh;
                     w = ow;
@@ -431,7 +452,7 @@ impl ConvPlan {
                             *pad,
                             &mut cols_i8[..patches * kk],
                         );
-                        gemm::gemm_i8_requant(
+                        gemm::gemm_i8_requant_tiled(
                             &cols_i8[..patches * kk],
                             patches,
                             kk,
@@ -443,6 +464,8 @@ impl ConvPlan {
                             *relu,
                             &mut acc[..patches * cout],
                             &mut nxt[i * patches * cout..(i + 1) * patches * cout],
+                            self.tile.gemm_kc,
+                            self.tile.gemm_mc,
                         );
                     }
                     h = oh;
@@ -759,16 +782,38 @@ impl DeployedModel {
         x.flatten()
     }
 
-    /// The bridge: features -> ±1 levels.
+    /// The bridge: features -> levels (±1 for the 1-bit sign bridge, odd
+    /// integers `±1..±(2ᵇ−1)` for a multi-bit deployment — resolution
+    /// comes from the fabric's [`ImacConfig::bridge_bits`]).
     pub fn bridge(&self, feats: &[f32]) -> Vec<f32> {
-        feats.iter().map(|&v| sign_level(v)).collect()
+        let mut out = feats.to_vec();
+        self.bridge_batch(&mut out);
+        out
     }
 
-    /// The bridge applied in place (the hot path re-uses the feature
-    /// buffer as the sign buffer — no copy, no allocation).
+    /// The 1-bit sign bridge applied in place — kept for callers that
+    /// bridge features without a deployed model in hand (PJRT tooling,
+    /// benches). Deployment-aware paths use [`DeployedModel::bridge_batch`].
     pub fn bridge_in_place(feats: &mut [f32]) {
         for v in feats.iter_mut() {
             *v = sign_level(*v);
+        }
+    }
+
+    /// The deployment's bridge applied in place over a whole feature block
+    /// (any number of images, flattened): the hot path re-uses the feature
+    /// buffer as the level buffer — no copy, no allocation. A 1-bit bridge
+    /// is exactly [`DeployedModel::bridge_in_place`]
+    /// ([`bridge_level`]`(x, 1, fs) ≡ `[`sign_level`]`(x)` for every input,
+    /// pinned by the bridge property tests).
+    pub fn bridge_batch(&self, feats: &mut [f32]) {
+        let bits = self.fabric.bridge_bits();
+        if bits == 1 {
+            return Self::bridge_in_place(feats);
+        }
+        let fs = self.fabric.bridge_full_scale();
+        for v in feats.iter_mut() {
+            *v = bridge_level(*v, bits, fs);
         }
     }
 
@@ -792,7 +837,7 @@ impl DeployedModel {
     /// before the next call. Zero allocations once warm.
     pub fn infer_into<'s>(&self, img: &Tensor, scratch: &'s mut Scratch) -> &'s [f32] {
         let feats = self.plan.run(&[img], &mut scratch.conv);
-        Self::bridge_in_place(feats);
+        self.bridge_batch(feats);
         let fc = &mut scratch.fc;
         self.fabric.forward_batch_into(feats, 1, &mut fc.bits, &mut fc.a, &mut fc.b)
     }
@@ -815,7 +860,7 @@ impl DeployedModel {
             return;
         }
         let feats = self.plan.run(images, &mut scratch.conv);
-        Self::bridge_in_place(feats);
+        self.bridge_batch(feats);
         let fc = &mut scratch.fc;
         let scores =
             self.fabric.forward_batch_into(feats, images.len(), &mut fc.bits, &mut fc.a, &mut fc.b);
@@ -958,6 +1003,83 @@ mod tests {
         let grows = scratch.conv.grow_events;
         m.infer_batch_into(&refs, &mut scratch, |_, _| {});
         assert_eq!(scratch.conv.grow_events, grows, "scratch regrew at steady state");
+    }
+
+    /// Autotune safety at the plan level: stamping any candidate tile onto
+    /// a compiled plan (fp32 and int8) leaves every served feature and
+    /// score bit-identical — retuning is a pure speed choice.
+    #[test]
+    fn retuned_plan_tile_preserves_features() {
+        use crate::nn::simd::{GEMM_KC_CANDIDATES, GEMM_MC_CANDIDATES};
+        let mut rng = crate::util::rng::Xoshiro256::seed_from_u64(53);
+        let doc = crate::nn::synthetic::lenet_weights_doc(&mut rng);
+        for precision in [PrecisionPolicy::Fp32, PrecisionPolicy::Int8] {
+            let mut m = DeployedModel::from_doc(
+                &doc,
+                &ImacConfig::default(),
+                AdcConfig { bits: 0, full_scale: 1.0 },
+                0,
+                precision,
+                None,
+            )
+            .unwrap();
+            let img =
+                Tensor::from_vec(28, 28, 1, (0..784).map(|_| rng.next_f32() - 0.5).collect());
+            let mut scratch = Scratch::new();
+            let want = m.conv_features_into(&img, &mut scratch).to_vec();
+            for &kc in GEMM_KC_CANDIDATES {
+                for &mc in GEMM_MC_CANDIDATES {
+                    m.plan.set_tile(TilePlan { gemm_kc: kc, gemm_mc: mc, ..TilePlan::default() });
+                    assert_eq!(m.plan.tile().gemm_kc, kc);
+                    let got = m.conv_features_into(&img, &mut scratch).to_vec();
+                    assert_eq!(
+                        got, want,
+                        "{precision:?} tile (kc={kc}, mc={mc}) changed conv features"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Multi-bit bridge satellite, end to end through the engine: a 2-bit
+    /// deployment's hot path (plan + in-place level bridge + batched
+    /// fabric) reproduces the oracle path (direct convs + allocating
+    /// bridge + per-row fabric), and the bridge really emits odd levels
+    /// beyond ±1.
+    #[test]
+    fn multi_bit_bridge_deployment_matches_oracle_path() {
+        let mut rng = crate::util::rng::Xoshiro256::seed_from_u64(59);
+        let doc = crate::nn::synthetic::lenet_weights_doc(&mut rng);
+        // Full scale 0.25 (Δ = 0.125) sits inside the synthetic conv
+        // features' typical magnitude, so both inner and saturated levels
+        // actually occur.
+        let imac = ImacConfig { bridge_bits: 2, bridge_full_scale: 0.25, ..Default::default() };
+        let m = DeployedModel::from_doc(
+            &doc,
+            &imac,
+            AdcConfig { bits: 0, full_scale: 1.0 },
+            0,
+            PrecisionPolicy::Fp32,
+            None,
+        )
+        .unwrap();
+        assert_eq!(m.fabric.bridge_bits(), 2);
+        let mut scratch = Scratch::new();
+        let mut saw_wide_level = false;
+        for _ in 0..4 {
+            let img =
+                Tensor::from_vec(28, 28, 1, (0..784).map(|_| rng.next_f32() - 0.5).collect());
+            let levels = m.bridge(&m.conv_features(&img));
+            assert!(levels.iter().all(|&v| [-3.0, -1.0, 1.0, 3.0].contains(&v)));
+            saw_wide_level |= levels.iter().any(|&v| v.abs() == 3.0);
+            let want = m.infer(&img);
+            let got = m.infer_into(&img, &mut scratch).to_vec();
+            assert_eq!(got.len(), want.len());
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-6, "{g} vs {w}");
+            }
+        }
+        assert!(saw_wide_level, "2-bit bridge never emitted a ±3 level");
     }
 
     /// Chain the int8 convenience convs (`conv2d_gemm_i8` /

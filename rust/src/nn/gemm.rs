@@ -25,8 +25,19 @@
 //! Weights stay in HWIO layout (`w[ky][kx][cin][cout]`), which *is* the
 //! row-major B matrix — the prepack in `engine::ConvPlan` is a one-time
 //! copy into its own contiguous allocation plus shape bookkeeping.
+//!
+//! Since the SIMD/autotune PR, the inner loops route through the
+//! [`super::simd`] dispatch layer (i8 axpy, depthwise MAC, staging moves —
+//! one scalar reference, AVX2/NEON variants selected at runtime) and the
+//! blocking parameters come from a [`super::simd::TilePlan`]: the `_tiled`
+//! kernel forms take `(kc, mc)` from the deployment's autotuned plan, while
+//! the original entry points keep the shipped constants (`KC = 256`, 4-row
+//! micro-kernel) so standalone callers behave exactly as before.
 
-/// Reduction-dimension block size (rows of B kept hot per pass).
+use super::simd::{self, SimdLevel, StageElem};
+
+/// Reduction-dimension block size (rows of B kept hot per pass) — the
+/// default `TilePlan::gemm_kc`; autotuned deployments may override per host.
 pub const KC: usize = 256;
 
 /// Output spatial dims for a conv/pool window. Panics when the kernel does
@@ -49,7 +60,24 @@ pub fn conv_out_dims(h: usize, w: usize, k: usize, stride: usize, pad: usize) ->
 // call-site symmetry with the oracle ops), so the argument-count lint is
 // waived per kernel rather than crate-wide.
 #[allow(clippy::too_many_arguments)]
-pub fn im2col_into<T: Copy + Default>(
+pub fn im2col_into<T: StageElem>(
+    x: &[T],
+    h: usize,
+    w: usize,
+    c: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    cols: &mut [T],
+) -> (usize, usize) {
+    im2col_into_at(simd::active(), x, h, w, c, k, stride, pad, cols)
+}
+
+/// [`im2col_into`] at an explicit SIMD level (test/bench entry point; the
+/// staging moves are pure data movement, bit-identical at every level).
+#[allow(clippy::too_many_arguments)]
+pub fn im2col_into_at<T: StageElem>(
+    level: SimdLevel,
     x: &[T],
     h: usize,
     w: usize,
@@ -70,25 +98,25 @@ pub fn im2col_into<T: Copy + Default>(
                 let iy = (oy * stride + ky) as isize - pad as isize;
                 let dst = row + ky * k * c;
                 if iy < 0 || iy as usize >= h {
-                    cols[dst..dst + k * c].fill(T::default());
+                    T::stage_zero_at(level, &mut cols[dst..dst + k * c]);
                     continue;
                 }
                 let iy = iy as usize;
                 let ix0 = (ox * stride) as isize - pad as isize;
                 if ix0 >= 0 && ix0 as usize + k <= w {
                     // The kx taps are consecutive input columns regardless
-                    // of stride; whole run in-bounds: one memcpy.
+                    // of stride; whole run in-bounds: one wide copy.
                     let src = (iy * w + ix0 as usize) * c;
-                    cols[dst..dst + k * c].copy_from_slice(&x[src..src + k * c]);
+                    T::stage_copy_at(level, &x[src..src + k * c], &mut cols[dst..dst + k * c]);
                 } else {
                     for kx in 0..k {
                         let ix = (ox * stride + kx) as isize - pad as isize;
                         let d = dst + kx * c;
                         if ix < 0 || ix as usize >= w {
-                            cols[d..d + c].fill(T::default());
+                            T::stage_zero_at(level, &mut cols[d..d + c]);
                         } else {
                             let src = (iy * w + ix as usize) * c;
-                            cols[d..d + c].copy_from_slice(&x[src..src + c]);
+                            T::stage_copy_at(level, &x[src..src + c], &mut cols[d..d + c]);
                         }
                     }
                 }
@@ -115,19 +143,43 @@ pub fn gemm_bias(
     relu: bool,
     out: &mut [f32],
 ) {
+    gemm_bias_tiled(a, m, kk, b, n, bias, relu, out, KC, 4)
+}
+
+/// [`gemm_bias`] with explicit blocking parameters from an autotuned
+/// [`simd::TilePlan`] (`kc_tile` = B-panel rows, `mc` = 1 or 4 A rows per
+/// pass). Every output element still accumulates one product per `p` in
+/// ascending order regardless of tile, so all candidates agree to the bit
+/// on real data (`mc` only changes the all-zero-row skip granularity, which
+/// is observable solely through −0.0 inputs).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_bias_tiled(
+    a: &[f32],
+    m: usize,
+    kk: usize,
+    b: &[f32],
+    n: usize,
+    bias: &[f32],
+    relu: bool,
+    out: &mut [f32],
+    kc_tile: usize,
+    mc: usize,
+) {
     assert_eq!(a.len(), m * kk, "A shape");
     assert_eq!(b.len(), kk * n, "B shape");
     assert_eq!(bias.len(), n, "bias shape");
     assert_eq!(out.len(), m * n, "out shape");
+    assert!(kc_tile > 0, "kc tile must be positive");
+    assert!(mc == 1 || mc == 4, "mc tile must be 1 or 4 (the micro-kernel heights)");
     for row in out.chunks_exact_mut(n) {
         row.copy_from_slice(bias);
     }
     let mut pc = 0;
     while pc < kk {
-        let kc = KC.min(kk - pc);
+        let kc = kc_tile.min(kk - pc);
         let mut i = 0;
         // Four-row register blocking over the current B panel.
-        while i + 4 <= m {
+        while mc == 4 && i + 4 <= m {
             let block = &mut out[i * n..(i + 4) * n];
             let (r0, rest) = block.split_at_mut(n);
             let (r1, rest) = rest.split_at_mut(n);
@@ -150,7 +202,7 @@ pub fn gemm_bias(
             }
             i += 4;
         }
-        // Tail rows, scalar.
+        // Tail rows (all rows when mc == 1), scalar.
         while i < m {
             let orow = &mut out[i * n..(i + 1) * n];
             for p in pc..pc + kc {
@@ -207,6 +259,67 @@ pub fn gemm_i8_requant(
     acc: &mut [i32],
     out: &mut [f32],
 ) {
+    gemm_i8_requant_tiled(a, m, kk, b, n, scale_x, scale_w, bias, relu, acc, out, KC, 4)
+}
+
+/// [`gemm_i8_requant`] with explicit blocking parameters from an autotuned
+/// [`simd::TilePlan`], at the process-active SIMD level. The i32 section is
+/// exact integer arithmetic, so neither tile nor level can change results.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_i8_requant_tiled(
+    a: &[i8],
+    m: usize,
+    kk: usize,
+    b: &[i8],
+    n: usize,
+    scale_x: f32,
+    scale_w: &[f32],
+    bias: &[f32],
+    relu: bool,
+    acc: &mut [i32],
+    out: &mut [f32],
+    kc_tile: usize,
+    mc: usize,
+) {
+    gemm_i8_requant_tiled_at(
+        simd::active(),
+        a,
+        m,
+        kk,
+        b,
+        n,
+        scale_x,
+        scale_w,
+        bias,
+        relu,
+        acc,
+        out,
+        kc_tile,
+        mc,
+    )
+}
+
+/// [`gemm_i8_requant_tiled`] at an explicit SIMD level — the test/bench
+/// entry point the equivalence properties and the scalar-vs-SIMD bench rows
+/// are stated over. The inner loop is [`simd::i8_axpy_i32_at`]: one
+/// activation scalar against a packed B row, accumulating in i32.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_i8_requant_tiled_at(
+    level: SimdLevel,
+    a: &[i8],
+    m: usize,
+    kk: usize,
+    b: &[i8],
+    n: usize,
+    scale_x: f32,
+    scale_w: &[f32],
+    bias: &[f32],
+    relu: bool,
+    acc: &mut [i32],
+    out: &mut [f32],
+    kc_tile: usize,
+    mc: usize,
+) {
     assert_eq!(a.len(), m * kk, "A shape");
     assert_eq!(b.len(), kk * n, "B shape");
     assert_eq!(scale_w.len(), n, "weight scales shape");
@@ -214,48 +327,54 @@ pub fn gemm_i8_requant(
     assert_eq!(acc.len(), m * n, "acc shape");
     assert_eq!(out.len(), m * n, "out shape");
     assert!(kk <= I8_GEMM_MAX_KK, "reduction depth {kk} overflows i32 accumulation");
+    assert!(kc_tile > 0, "kc tile must be positive");
+    assert!(mc == 1 || mc == 4, "mc tile must be 1 or 4 (the micro-kernel heights)");
     acc.fill(0);
     let mut pc = 0;
     while pc < kk {
-        let kc = KC.min(kk - pc);
+        let kc = kc_tile.min(kk - pc);
         let mut i = 0;
-        // Four-row register blocking over the current B panel.
-        while i + 4 <= m {
+        // Four-row register blocking over the current B panel: each B row
+        // is loaded once per four A rows (and stays L1-resident across the
+        // per-row axpy passes).
+        while mc == 4 && i + 4 <= m {
             let block = &mut acc[i * n..(i + 4) * n];
             let (r0, rest) = block.split_at_mut(n);
             let (r1, rest) = rest.split_at_mut(n);
             let (r2, r3) = rest.split_at_mut(n);
             for p in pc..pc + kc {
-                let a0 = a[i * kk + p] as i32;
-                let a1 = a[(i + 1) * kk + p] as i32;
-                let a2 = a[(i + 2) * kk + p] as i32;
-                let a3 = a[(i + 3) * kk + p] as i32;
-                if (a0 | a1 | a2 | a3) == 0 {
+                let a0 = a[i * kk + p];
+                let a1 = a[(i + 1) * kk + p];
+                let a2 = a[(i + 2) * kk + p];
+                let a3 = a[(i + 3) * kk + p];
+                if (a0 as i32 | a1 as i32 | a2 as i32 | a3 as i32) == 0 {
                     continue;
                 }
                 let brow = &b[p * n..(p + 1) * n];
-                for (j, &bv) in brow.iter().enumerate() {
-                    let bv = bv as i32;
-                    r0[j] += a0 * bv;
-                    r1[j] += a1 * bv;
-                    r2[j] += a2 * bv;
-                    r3[j] += a3 * bv;
+                if a0 != 0 {
+                    simd::i8_axpy_i32_at(level, a0, brow, r0);
+                }
+                if a1 != 0 {
+                    simd::i8_axpy_i32_at(level, a1, brow, r1);
+                }
+                if a2 != 0 {
+                    simd::i8_axpy_i32_at(level, a2, brow, r2);
+                }
+                if a3 != 0 {
+                    simd::i8_axpy_i32_at(level, a3, brow, r3);
                 }
             }
             i += 4;
         }
-        // Tail rows, scalar.
+        // Tail rows (all rows when mc == 1), per-row axpy.
         while i < m {
             let arow = &mut acc[i * n..(i + 1) * n];
             for p in pc..pc + kc {
-                let av = a[i * kk + p] as i32;
+                let av = a[i * kk + p];
                 if av == 0 {
                     continue;
                 }
-                let brow = &b[p * n..(p + 1) * n];
-                for (o, &bv) in arow.iter_mut().zip(brow) {
-                    *o += av * bv as i32;
-                }
+                simd::i8_axpy_i32_at(level, av, &b[p * n..(p + 1) * n], arow);
             }
             i += 1;
         }
@@ -356,6 +475,46 @@ pub fn dwconv2d_i8_requant(
     acc: &mut [i32],
     out: &mut [f32],
 ) -> (usize, usize) {
+    dwconv2d_i8_requant_at(
+        simd::active(),
+        x,
+        h,
+        w,
+        c,
+        wq,
+        k,
+        stride,
+        pad,
+        scale_x,
+        wscale,
+        bias,
+        relu,
+        acc,
+        out,
+    )
+}
+
+/// [`dwconv2d_i8_requant`] at an explicit SIMD level (test/bench entry
+/// point). The tap loop is [`simd::i8_mac_i32_at`] — one input channel row
+/// against one kernel-tap row, exact i32, so level can't change results.
+#[allow(clippy::too_many_arguments)]
+pub fn dwconv2d_i8_requant_at(
+    level: SimdLevel,
+    x: &[i8],
+    h: usize,
+    w: usize,
+    c: usize,
+    wq: &[i8],
+    k: usize,
+    stride: usize,
+    pad: usize,
+    scale_x: f32,
+    wscale: &[f32],
+    bias: &[f32],
+    relu: bool,
+    acc: &mut [i32],
+    out: &mut [f32],
+) -> (usize, usize) {
     assert_eq!(x.len(), h * w * c, "input shape");
     assert_eq!(wq.len(), k * k * c, "weight shape");
     assert_eq!(wscale.len(), c, "weight scales shape");
@@ -380,9 +539,7 @@ pub fn dwconv2d_i8_requant(
                     }
                     let xin = &x[((iy as usize) * w + ix as usize) * c..][..c];
                     let wrow = &wq[(ky * k + kx) * c..][..c];
-                    for ((a, &xv), &wv) in acc.iter_mut().zip(xin).zip(wrow) {
-                        *a += xv as i32 * wv as i32;
-                    }
+                    simd::i8_mac_i32_at(level, xin, wrow, acc);
                 }
             }
             // Requantize epilogue: one f32 multiply-add per channel.
@@ -615,6 +772,43 @@ pub fn conv2d_gemm(
     let mut out = super::tensor::Tensor::zeros(oh, ow, cout);
     gemm_bias(&cols, oh * ow, kk, w, cout, b, false, &mut out.data);
     out
+}
+
+/// Time the i8 GEMM over the candidate `(kc, mc)` grid on a fixed synthetic
+/// workload and return the fastest pair — the GEMM half of
+/// [`simd::host_tile`]'s deployment-build autotune. A few milliseconds,
+/// runs once per process (cached behind `host_tile`'s `OnceLock`), and only
+/// ever picks grid members every equivalence property is tested over.
+pub(crate) fn autotune_gemm_tile() -> (usize, usize) {
+    // Big enough to tell the panel candidates apart (kk spans the largest),
+    // small enough to stay in the millisecond budget.
+    let (m, kk, n) = (16, 768, 48);
+    let mut a = vec![0i8; m * kk];
+    let mut b = vec![0i8; kk * n];
+    simd::autotune_pattern_i8(&mut a);
+    simd::autotune_pattern_i8(&mut b);
+    let sw = vec![0.01f32; n];
+    let bias = vec![0.0f32; n];
+    let mut acc = vec![0i32; m * n];
+    let mut out = vec![0.0f32; m * n];
+    let mut best = (KC, 4);
+    let mut best_t = std::time::Duration::MAX;
+    for &kc in simd::GEMM_KC_CANDIDATES {
+        for &mc in simd::GEMM_MC_CANDIDATES {
+            let mut run = || {
+                gemm_i8_requant_tiled(
+                    &a, m, kk, &b, n, 0.05, &sw, &bias, false, &mut acc, &mut out, kc, mc,
+                )
+            };
+            run(); // warmup (page-in + branch training)
+            let t = simd::best_time_of(2, run);
+            if t < best_t {
+                best_t = t;
+                best = (kc, mc);
+            }
+        }
+    }
+    best
 }
 
 #[cfg(test)]
@@ -1056,5 +1250,221 @@ mod tests {
         im2col_into(&x.data, 1, 1, 1, 3, 1, 1, &mut cols);
         let want = [0.0, 0.0, 0.0, 0.0, 7.0, 0.0, 0.0, 0.0, 0.0];
         assert_eq!(cols, want);
+    }
+
+    /// Tentpole safety net: every (SIMD level × tile candidate) combination
+    /// of the i8 GEMM is *exactly* equal to the scalar default-tile
+    /// reference — i32 section and requantized f32 output both — across
+    /// shapes spanning sub-panel, multi-panel, and vector-width tails.
+    #[test]
+    fn gemm_i8_tiled_simd_variants_exact_across_grid() {
+        use crate::nn::simd::{
+            runnable_levels, SimdLevel, GEMM_KC_CANDIDATES, GEMM_MC_CANDIDATES,
+        };
+        forall(12, |g| {
+            let m = g.usize_in(1, 9);
+            let kk = g.usize_in(1, 2 * KC + 40);
+            let n = g.usize_in(1, 19); // odd widths exercise the lane tails
+            let a: Vec<i8> = (0..m * kk).map(|_| g.i64_in(-127, 127) as i8).collect();
+            let b: Vec<i8> = (0..kk * n).map(|_| g.i64_in(-127, 127) as i8).collect();
+            let sx = g.f32_in(1e-4, 0.1);
+            let sw = g.vec_f32(n, 1e-4, 0.1);
+            let bias = g.vec_f32(n, -0.5, 0.5);
+            let relu = g.bool();
+            let mut acc_ref = vec![0i32; m * n];
+            let mut out_ref = vec![0.0f32; m * n];
+            gemm_i8_requant_tiled_at(
+                SimdLevel::Scalar,
+                &a,
+                m,
+                kk,
+                &b,
+                n,
+                sx,
+                &sw,
+                &bias,
+                relu,
+                &mut acc_ref,
+                &mut out_ref,
+                KC,
+                4,
+            );
+            for level in runnable_levels() {
+                for &kc in GEMM_KC_CANDIDATES {
+                    for &mc in GEMM_MC_CANDIDATES {
+                        let mut acc = vec![0i32; m * n];
+                        let mut out = vec![0.0f32; m * n];
+                        gemm_i8_requant_tiled_at(
+                            level, &a, m, kk, &b, n, sx, &sw, &bias, relu, &mut acc,
+                            &mut out, kc, mc,
+                        );
+                        assert_eq!(acc, acc_ref, "{level:?} kc={kc} mc={mc}");
+                        assert_eq!(out, out_ref, "{level:?} kc={kc} mc={mc}");
+                    }
+                }
+            }
+        });
+    }
+
+    /// Deterministic lane-tail sweep: widths straddling every AVX2/NEON
+    /// boundary shape (1..2 lanes ± 1) stay exact at all runnable levels.
+    #[test]
+    fn gemm_i8_vector_width_tails_exact() {
+        use crate::nn::simd::{runnable_levels, SimdLevel};
+        let (m, kk) = (3usize, 70usize);
+        for n in [1usize, 2, 3, 5, 7, 8, 9, 15, 16, 17, 31, 33] {
+            let a: Vec<i8> = (0..m * kk).map(|i| ((i * 37 + 11) % 255) as i64 as i8).collect();
+            let b: Vec<i8> = (0..kk * n).map(|i| ((i * 53 + 5) % 255) as i64 as i8).collect();
+            let sw = vec![0.02f32; n];
+            let bias = vec![0.1f32; n];
+            let mut acc_ref = vec![0i32; m * n];
+            let mut out_ref = vec![0.0f32; m * n];
+            gemm_i8_requant_tiled_at(
+                SimdLevel::Scalar,
+                &a,
+                m,
+                kk,
+                &b,
+                n,
+                0.03,
+                &sw,
+                &bias,
+                false,
+                &mut acc_ref,
+                &mut out_ref,
+                KC,
+                4,
+            );
+            for level in runnable_levels() {
+                let mut acc = vec![0i32; m * n];
+                let mut out = vec![0.0f32; m * n];
+                gemm_i8_requant_tiled_at(
+                    level, &a, m, kk, &b, n, 0.03, &sw, &bias, false, &mut acc, &mut out,
+                    KC, 4,
+                );
+                assert_eq!(acc, acc_ref, "{level:?} n={n}");
+                assert_eq!(out, out_ref, "{level:?} n={n}");
+            }
+        }
+    }
+
+    /// The f32 GEMM is bit-identical across the whole tile grid on real
+    /// (non-signed-zero) data: one product per `p` per output in ascending
+    /// order regardless of `kc`, and `mc` only changes the zero-row skip
+    /// granularity (invisible without −0.0 inputs).
+    #[test]
+    fn gemm_bias_tiled_bit_identical_across_grid() {
+        use crate::nn::simd::{GEMM_KC_CANDIDATES, GEMM_MC_CANDIDATES};
+        forall(8, |g| {
+            let m = g.usize_in(1, 9);
+            let kk = g.usize_in(1, 2 * KC + 40);
+            let n = g.usize_in(1, 13);
+            let a = g.vec_f32(m * kk, -1.0, 1.0);
+            let b = g.vec_f32(kk * n, -1.0, 1.0);
+            let bias = g.vec_f32(n, -0.5, 0.5);
+            let relu = g.bool();
+            let mut want = vec![0.0f32; m * n];
+            gemm_bias(&a, m, kk, &b, n, &bias, relu, &mut want);
+            for &kc in GEMM_KC_CANDIDATES {
+                for &mc in GEMM_MC_CANDIDATES {
+                    let mut got = vec![0.0f32; m * n];
+                    gemm_bias_tiled(&a, m, kk, &b, n, &bias, relu, &mut got, kc, mc);
+                    let same = got.iter().zip(&want).all(|(x, y)| x.to_bits() == y.to_bits());
+                    assert!(same, "kc={kc} mc={mc}");
+                }
+            }
+        });
+    }
+
+    /// Depthwise-i8 SIMD variants are exact vs the scalar reference across
+    /// odd channel counts (1..9 includes every sub-lane shape).
+    #[test]
+    fn dwconv_i8_simd_levels_exact() {
+        use crate::nn::simd::{runnable_levels, SimdLevel};
+        forall(20, |g| {
+            let k = *g.choose(&[1usize, 2, 3]);
+            let stride = g.usize_in(1, 2);
+            let pad = g.usize_in(0, 1);
+            let c = g.usize_in(1, 9);
+            let h = g.usize_in(k.max(2 * pad + 1), k + 5);
+            let w = g.usize_in(k.max(2 * pad + 1), k + 5);
+            let x: Vec<i8> = (0..h * w * c).map(|_| g.i64_in(-127, 127) as i8).collect();
+            let wq: Vec<i8> = (0..k * k * c).map(|_| g.i64_in(-127, 127) as i8).collect();
+            let sx = g.f32_in(1e-4, 0.1);
+            let sw = g.vec_f32(c, 1e-4, 0.1);
+            let bias = g.vec_f32(c, -0.5, 0.5);
+            let relu = g.bool();
+            let (oh, ow) = conv_out_dims(h, w, k, stride, pad);
+            let mut acc = vec![0i32; c];
+            let mut want = vec![0.0f32; oh * ow * c];
+            dwconv2d_i8_requant_at(
+                SimdLevel::Scalar,
+                &x,
+                h,
+                w,
+                c,
+                &wq,
+                k,
+                stride,
+                pad,
+                sx,
+                &sw,
+                &bias,
+                relu,
+                &mut acc,
+                &mut want,
+            );
+            for level in runnable_levels() {
+                let mut got = vec![0.0f32; oh * ow * c];
+                dwconv2d_i8_requant_at(
+                    level, &x, h, w, c, &wq, k, stride, pad, sx, &sw, &bias, relu,
+                    &mut acc, &mut got,
+                );
+                assert_eq!(got, want, "{level:?} c={c}");
+            }
+        });
+    }
+
+    /// im2col staging is bit-identical at every SIMD level for both element
+    /// types (pure data movement).
+    #[test]
+    fn im2col_simd_levels_bit_identical() {
+        use crate::nn::simd::{runnable_levels, SimdLevel};
+        forall(20, |g| {
+            let k = *g.choose(&[1usize, 2, 3, 5]);
+            let stride = g.usize_in(1, 2);
+            let pad = g.usize_in(0, 2);
+            let c = g.usize_in(1, 5);
+            let h = g.usize_in(k.max(2 * pad + 1), k + 6);
+            let w = g.usize_in(k.max(2 * pad + 1), k + 6);
+            let xf = g.vec_f32(h * w * c, -1.0, 1.0);
+            let xi: Vec<i8> = (0..h * w * c).map(|_| g.i64_in(-127, 127) as i8).collect();
+            let (oh, ow) = conv_out_dims(h, w, k, stride, pad);
+            let kk = k * k * c;
+            let mut want_f = vec![0.0f32; oh * ow * kk];
+            im2col_into_at(SimdLevel::Scalar, &xf, h, w, c, k, stride, pad, &mut want_f);
+            let mut want_i = vec![0i8; oh * ow * kk];
+            im2col_into_at(SimdLevel::Scalar, &xi, h, w, c, k, stride, pad, &mut want_i);
+            for level in runnable_levels() {
+                let mut got_f = vec![9.0f32; oh * ow * kk];
+                im2col_into_at(level, &xf, h, w, c, k, stride, pad, &mut got_f);
+                assert!(
+                    got_f.iter().zip(&want_f).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "{level:?} f32"
+                );
+                let mut got_i = vec![9i8; oh * ow * kk];
+                im2col_into_at(level, &xi, h, w, c, k, stride, pad, &mut got_i);
+                assert_eq!(got_i, want_i, "{level:?} i8");
+            }
+        });
+    }
+
+    /// The autotuner half belonging to this module picks from the published
+    /// grid (its choices are all covered by the properties above).
+    #[test]
+    fn autotune_gemm_tile_stays_on_grid() {
+        let (kc, mc) = autotune_gemm_tile();
+        assert!(crate::nn::simd::GEMM_KC_CANDIDATES.contains(&kc));
+        assert!(crate::nn::simd::GEMM_MC_CANDIDATES.contains(&mc));
     }
 }

@@ -31,6 +31,11 @@
 //! to the per-row fabric path). The full image→scores dataflow is walked
 //! through in `ARCHITECTURE.md`.
 //!
+//! Both hot paths run their inner loops through the [`simd`] dispatch
+//! layer (runtime-detected AVX2/NEON with a scalar reference; pinned
+//! equal by property tests) and read cache-blocking parameters from the
+//! deployment's autotuned [`simd::TilePlan`].
+//!
 //! Rule: any change to conv numerics must update the oracle **and** the
 //! equivalence/bound property tests — or be oracle-only plus the tests.
 //!
@@ -41,10 +46,12 @@ pub mod engine;
 pub mod gemm;
 pub mod ops;
 pub mod scratch;
+pub mod simd;
 pub mod synthetic;
 pub mod tensor;
 
 pub use crate::quant::PrecisionPolicy;
 pub use engine::{ConvOp, ConvPlan, DeployedModel, WeightError};
 pub use scratch::{ConvScratch, FcScratch, Scratch};
+pub use simd::{SimdLevel, TilePlan};
 pub use tensor::Tensor;

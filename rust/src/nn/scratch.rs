@@ -63,9 +63,10 @@ pub struct FcScratch {
     pub a: Vec<f32>,
     /// IMAC fabric layer-chain pong buffer.
     pub b: Vec<f32>,
-    /// Packed ±1 sign-bitmask staging for the bit-sliced IMAC layer-1
-    /// path (one `u64` word per 64 crossbar rows of the widest
-    /// partition; see `ImacLayer::preact_sign_batch`).
+    /// Packed level-bitplane staging for the bit-sliced IMAC layer-1 path:
+    /// `bridge_bits` planes of one `u64` word per 64 crossbar rows of the
+    /// widest partition (plane 0 alone is the ±1 sign bitmask; see
+    /// `ImacLayer::preact_level_batch`).
     pub bits: Vec<u64>,
 }
 

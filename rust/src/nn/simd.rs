@@ -1,0 +1,643 @@
+//! SIMD dispatch layer + per-host tile autotuning for the serving kernels.
+//!
+//! Every hot loop in the stack — the i8×i8→i32 GEMM inner loop, the
+//! depthwise-i8 taps, im2col staging, and the sign-bitmask popcounts —
+//! routes through exactly one **scalar reference** here plus N accelerated
+//! variants (AVX2 on x86-64, NEON on aarch64), selected once per process by
+//! runtime feature detection. The scalar body *is* the specification: every
+//! accelerated variant is pinned to it by property tests (exact for the
+//! integer kernels, bit-identical for the staging moves and popcounts), so
+//! the dispatch can never change serving numerics.
+//!
+//! Dispatch rules:
+//!
+//! - `TPU_IMAC_SIMD=scalar` (or `off`/`0`) pins the scalar fallback — this
+//!   is the knob CI's portable-path job uses.
+//! - Otherwise x86-64 uses AVX2 when `is_x86_feature_detected!` reports
+//!   both `avx2` and `popcnt`; aarch64 uses NEON (baseline); anything else
+//!   falls back to scalar.
+//! - Requesting a level the host arch can't express (e.g. `Neon` on
+//!   x86-64 via the `_at` test entry points) silently runs scalar.
+//!
+//! On top of dispatch sits [`TilePlan`]: the cache-blocking parameters the
+//! kernels used to hard-code (`gemm::KC = 256`, the fixed 4-image block in
+//! `Crossbar::mvm_batch_acc`). [`host_tile`] benchmarks a small candidate
+//! grid against the host at deployment build (a few milliseconds, cached
+//! per process; `TPU_IMAC_AUTOTUNE=off` pins the defaults) and
+//! `DeploymentSpec::build` records the winner in the `ConvPlan` and the
+//! IMAC fabric, so serve-time kernels read their tile from the plan instead
+//! of compile-time constants. Tile choice is *performance-only*: every
+//! candidate is bit-identical by construction (integer kernels are exact;
+//! the f32 GEMM accumulates one product per k per output in the same order
+//! for any `kc`; the IMAC panel width is constrained to multiples of the
+//! kernels' 4-product grouping).
+
+use std::sync::OnceLock;
+
+/// The instruction-set level a kernel variant targets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdLevel {
+    /// Portable scalar Rust — the reference semantics on every host.
+    Scalar,
+    /// x86-64 AVX2 + POPCNT (runtime-detected).
+    Avx2,
+    /// aarch64 NEON (baseline on that arch).
+    Neon,
+}
+
+impl SimdLevel {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::Scalar => "scalar",
+            Self::Avx2 => "avx2",
+            Self::Neon => "neon",
+        }
+    }
+}
+
+/// Parse the `TPU_IMAC_SIMD` override. `Some(Scalar)` pins the fallback;
+/// `None` means "auto-detect". Unrecognized values auto-detect rather than
+/// erroring, so a typo can't silently change numerics (every level agrees).
+fn level_from_env_str(v: &str) -> Option<SimdLevel> {
+    match v {
+        "scalar" | "off" | "0" => Some(SimdLevel::Scalar),
+        _ => None,
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect_host() -> SimdLevel {
+    if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("popcnt") {
+        SimdLevel::Avx2
+    } else {
+        SimdLevel::Scalar
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn detect_host() -> SimdLevel {
+    SimdLevel::Neon
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn detect_host() -> SimdLevel {
+    SimdLevel::Scalar
+}
+
+/// The SIMD level serving kernels run at, resolved once per process
+/// (env override first, then feature detection).
+pub fn active() -> SimdLevel {
+    static LEVEL: OnceLock<SimdLevel> = OnceLock::new();
+    *LEVEL.get_or_init(|| {
+        if let Ok(v) = std::env::var("TPU_IMAC_SIMD") {
+            if let Some(l) = level_from_env_str(&v) {
+                return l;
+            }
+        }
+        detect_host()
+    })
+}
+
+/// Levels runnable on this host — always `Scalar`, plus the detected
+/// accelerated level. Property tests and benches iterate this so every
+/// variant that can execute here is exercised against the reference.
+pub fn runnable_levels() -> Vec<SimdLevel> {
+    let mut ls = vec![SimdLevel::Scalar];
+    let host = detect_host();
+    if host != SimdLevel::Scalar {
+        ls.push(host);
+    }
+    ls
+}
+
+// ---------------------------------------------------------------------------
+// Primitive 1: i8 axpy into i32 — `out[j] += a · b[j]`.
+//
+// The i8 GEMM inner loop: one activation scalar broadcast against a packed
+// weight row, accumulating in i32. Exact integer arithmetic at every level.
+// ---------------------------------------------------------------------------
+
+#[inline(always)]
+fn i8_axpy_i32_scalar(a: i32, b: &[i8], out: &mut [i32]) {
+    for (o, &bv) in out.iter_mut().zip(b) {
+        *o += a * bv as i32;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn i8_axpy_i32_avx2(a: i8, b: &[i8], out: &mut [i32]) {
+    use std::arch::x86_64::*;
+    let n = b.len().min(out.len());
+    let va = _mm256_set1_epi32(a as i32);
+    let mut j = 0;
+    // 8 lanes: sign-extend 8 packed i8 weights to i32, multiply, add.
+    unsafe {
+        while j + 8 <= n {
+            let vb8 = _mm_loadl_epi64(b.as_ptr().add(j) as *const __m128i);
+            let vb = _mm256_cvtepi8_epi32(vb8);
+            let po = out.as_mut_ptr().add(j) as *mut __m256i;
+            let vo = _mm256_loadu_si256(po);
+            _mm256_storeu_si256(po, _mm256_add_epi32(vo, _mm256_mullo_epi32(va, vb)));
+            j += 8;
+        }
+    }
+    i8_axpy_i32_scalar(a as i32, &b[j..n], &mut out[j..n]);
+}
+
+#[cfg(target_arch = "aarch64")]
+unsafe fn i8_axpy_i32_neon(a: i8, b: &[i8], out: &mut [i32]) {
+    use std::arch::aarch64::*;
+    let n = b.len().min(out.len());
+    let mut j = 0;
+    unsafe {
+        while j + 8 <= n {
+            let w16 = vmovl_s8(vld1_s8(b.as_ptr().add(j)));
+            let lo = vmovl_s16(vget_low_s16(w16));
+            let hi = vmovl_s16(vget_high_s16(w16));
+            let o0 = vld1q_s32(out.as_ptr().add(j));
+            let o1 = vld1q_s32(out.as_ptr().add(j + 4));
+            vst1q_s32(out.as_mut_ptr().add(j), vmlaq_n_s32(o0, lo, a as i32));
+            vst1q_s32(out.as_mut_ptr().add(j + 4), vmlaq_n_s32(o1, hi, a as i32));
+            j += 8;
+        }
+    }
+    i8_axpy_i32_scalar(a as i32, &b[j..n], &mut out[j..n]);
+}
+
+/// `out[j] += a · b[j]` at an explicit level (test/bench entry point).
+/// Slices must be equal length.
+#[inline]
+pub fn i8_axpy_i32_at(level: SimdLevel, a: i8, b: &[i8], out: &mut [i32]) {
+    debug_assert_eq!(b.len(), out.len());
+    match level {
+        SimdLevel::Scalar => i8_axpy_i32_scalar(a as i32, b, out),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2 is only selected by `active()` after runtime
+        // detection; the `_at` caller contract mirrors that.
+        SimdLevel::Avx2 => unsafe { i8_axpy_i32_avx2(a, b, out) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64.
+        SimdLevel::Neon => unsafe { i8_axpy_i32_neon(a, b, out) },
+        _ => i8_axpy_i32_scalar(a as i32, b, out),
+    }
+}
+
+/// `out[j] += a · b[j]` at the process-active level.
+#[inline]
+pub fn i8_axpy_i32(a: i8, b: &[i8], out: &mut [i32]) {
+    i8_axpy_i32_at(active(), a, b, out)
+}
+
+// ---------------------------------------------------------------------------
+// Primitive 2: i8 elementwise MAC into i32 — `acc[j] += x[j] · w[j]`.
+//
+// The depthwise-i8 tap: one input row against one kernel-tap row, per
+// channel. Exact integer arithmetic at every level.
+// ---------------------------------------------------------------------------
+
+#[inline(always)]
+fn i8_mac_i32_scalar(x: &[i8], w: &[i8], acc: &mut [i32]) {
+    for ((a, &xv), &wv) in acc.iter_mut().zip(x).zip(w) {
+        *a += xv as i32 * wv as i32;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn i8_mac_i32_avx2(x: &[i8], w: &[i8], acc: &mut [i32]) {
+    use std::arch::x86_64::*;
+    let n = x.len().min(w.len()).min(acc.len());
+    let mut j = 0;
+    unsafe {
+        while j + 8 <= n {
+            let vx = _mm256_cvtepi8_epi32(_mm_loadl_epi64(x.as_ptr().add(j) as *const __m128i));
+            let vw = _mm256_cvtepi8_epi32(_mm_loadl_epi64(w.as_ptr().add(j) as *const __m128i));
+            let pa = acc.as_mut_ptr().add(j) as *mut __m256i;
+            let va = _mm256_loadu_si256(pa);
+            _mm256_storeu_si256(pa, _mm256_add_epi32(va, _mm256_mullo_epi32(vx, vw)));
+            j += 8;
+        }
+    }
+    i8_mac_i32_scalar(&x[j..n], &w[j..n], &mut acc[j..n]);
+}
+
+/// `acc[j] += x[j] · w[j]` at an explicit level (test/bench entry point).
+/// Slices must be equal length.
+#[inline]
+pub fn i8_mac_i32_at(level: SimdLevel, x: &[i8], w: &[i8], acc: &mut [i32]) {
+    debug_assert_eq!(x.len(), w.len());
+    debug_assert_eq!(x.len(), acc.len());
+    match level {
+        SimdLevel::Scalar => i8_mac_i32_scalar(x, w, acc),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2 only selected after runtime detection.
+        SimdLevel::Avx2 => unsafe { i8_mac_i32_avx2(x, w, acc) },
+        _ => i8_mac_i32_scalar(x, w, acc),
+    }
+}
+
+/// `acc[j] += x[j] · w[j]` at the process-active level.
+#[inline]
+pub fn i8_mac_i32(x: &[i8], w: &[i8], acc: &mut [i32]) {
+    i8_mac_i32_at(active(), x, w, acc)
+}
+
+// ---------------------------------------------------------------------------
+// Primitive 3: staging moves (im2col copy / zero-fill), f32 and i8.
+//
+// Pure data movement — bit-identical at every level by construction (wide
+// unaligned loads/stores move the same bytes `copy_from_slice` would).
+// ---------------------------------------------------------------------------
+
+/// Element types the im2col staging loop can move through the dispatch
+/// layer. The scalar reference is `copy_from_slice` / `fill(default)`.
+pub trait StageElem: Copy + Default {
+    /// `dst[..] = src[..]` (equal lengths) at an explicit level.
+    fn stage_copy_at(level: SimdLevel, src: &[Self], dst: &mut [Self]);
+    /// `dst[..] = default()` at an explicit level.
+    fn stage_zero_at(level: SimdLevel, dst: &mut [Self]);
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn copy_f32_avx2(src: &[f32], dst: &mut [f32]) {
+    use std::arch::x86_64::*;
+    let n = src.len().min(dst.len());
+    let mut j = 0;
+    unsafe {
+        while j + 8 <= n {
+            _mm256_storeu_ps(dst.as_mut_ptr().add(j), _mm256_loadu_ps(src.as_ptr().add(j)));
+            j += 8;
+        }
+    }
+    dst[j..n].copy_from_slice(&src[j..n]);
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn zero_f32_avx2(dst: &mut [f32]) {
+    use std::arch::x86_64::*;
+    let n = dst.len();
+    let z = _mm256_setzero_ps();
+    let mut j = 0;
+    unsafe {
+        while j + 8 <= n {
+            _mm256_storeu_ps(dst.as_mut_ptr().add(j), z);
+            j += 8;
+        }
+    }
+    dst[j..].fill(0.0);
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn copy_i8_avx2(src: &[i8], dst: &mut [i8]) {
+    use std::arch::x86_64::*;
+    let n = src.len().min(dst.len());
+    let mut j = 0;
+    unsafe {
+        while j + 32 <= n {
+            let v = _mm256_loadu_si256(src.as_ptr().add(j) as *const __m256i);
+            _mm256_storeu_si256(dst.as_mut_ptr().add(j) as *mut __m256i, v);
+            j += 32;
+        }
+    }
+    dst[j..n].copy_from_slice(&src[j..n]);
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn zero_i8_avx2(dst: &mut [i8]) {
+    use std::arch::x86_64::*;
+    let n = dst.len();
+    let z = _mm256_setzero_si256();
+    let mut j = 0;
+    unsafe {
+        while j + 32 <= n {
+            _mm256_storeu_si256(dst.as_mut_ptr().add(j) as *mut __m256i, z);
+            j += 32;
+        }
+    }
+    dst[j..].fill(0);
+}
+
+impl StageElem for f32 {
+    #[inline]
+    fn stage_copy_at(level: SimdLevel, src: &[Self], dst: &mut [Self]) {
+        debug_assert_eq!(src.len(), dst.len());
+        match level {
+            SimdLevel::Scalar => dst.copy_from_slice(src),
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: Avx2 only selected after runtime detection.
+            SimdLevel::Avx2 => unsafe { copy_f32_avx2(src, dst) },
+            _ => dst.copy_from_slice(src),
+        }
+    }
+
+    #[inline]
+    fn stage_zero_at(level: SimdLevel, dst: &mut [Self]) {
+        match level {
+            SimdLevel::Scalar => dst.fill(0.0),
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: Avx2 only selected after runtime detection.
+            SimdLevel::Avx2 => unsafe { zero_f32_avx2(dst) },
+            _ => dst.fill(0.0),
+        }
+    }
+}
+
+impl StageElem for i8 {
+    #[inline]
+    fn stage_copy_at(level: SimdLevel, src: &[Self], dst: &mut [Self]) {
+        debug_assert_eq!(src.len(), dst.len());
+        match level {
+            SimdLevel::Scalar => dst.copy_from_slice(src),
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: Avx2 only selected after runtime detection.
+            SimdLevel::Avx2 => unsafe { copy_i8_avx2(src, dst) },
+            _ => dst.copy_from_slice(src),
+        }
+    }
+
+    #[inline]
+    fn stage_zero_at(level: SimdLevel, dst: &mut [Self]) {
+        match level {
+            SimdLevel::Scalar => dst.fill(0),
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: Avx2 only selected after runtime detection.
+            SimdLevel::Avx2 => unsafe { zero_i8_avx2(dst) },
+            _ => dst.fill(0),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Primitive 4: masked popcount difference — Σ pc(x∧plus) − pc(x∧minus).
+//
+// The bit-sliced IMAC column kernel. Baseline x86-64 codegen lowers
+// `count_ones` to a SWAR sequence; the accelerated variant recompiles the
+// identical body under `target_feature(enable = "popcnt")` so it becomes
+// one hardware POPCNT per word. Same integer result by definition.
+// ---------------------------------------------------------------------------
+
+#[inline(always)]
+fn popcnt_diff_scalar(x: &[u64], plus: &[u64], minus: &[u64]) -> i32 {
+    let mut d = 0i32;
+    for ((&xw, &pw), &mw) in x.iter().zip(plus).zip(minus) {
+        d += (xw & pw).count_ones() as i32;
+        d -= (xw & mw).count_ones() as i32;
+    }
+    d
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "popcnt")]
+unsafe fn popcnt_diff_hw(x: &[u64], plus: &[u64], minus: &[u64]) -> i32 {
+    popcnt_diff_scalar(x, plus, minus)
+}
+
+/// `Σ_w pc(x[w]∧plus[w]) − pc(x[w]∧minus[w])` at an explicit level.
+/// Iterates `x.len()` words; `plus`/`minus` must be at least as long.
+#[inline]
+pub fn popcnt_diff_at(level: SimdLevel, x: &[u64], plus: &[u64], minus: &[u64]) -> i32 {
+    debug_assert!(plus.len() >= x.len() && minus.len() >= x.len());
+    match level {
+        SimdLevel::Scalar => popcnt_diff_scalar(x, plus, minus),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2 level implies POPCNT was runtime-detected too.
+        SimdLevel::Avx2 => unsafe { popcnt_diff_hw(x, plus, minus) },
+        _ => popcnt_diff_scalar(x, plus, minus),
+    }
+}
+
+/// Masked popcount difference at the process-active level.
+#[inline]
+pub fn popcnt_diff(x: &[u64], plus: &[u64], minus: &[u64]) -> i32 {
+    popcnt_diff_at(active(), x, plus, minus)
+}
+
+// ---------------------------------------------------------------------------
+// TilePlan: the cache-blocking parameters, autotuned per host.
+// ---------------------------------------------------------------------------
+
+/// Cache-blocking parameters for the serving kernels, chosen per host at
+/// deployment build and recorded in the `ConvPlan` / IMAC fabric. The
+/// defaults reproduce the constants the kernels shipped with, so a
+/// deployment that never autotunes behaves exactly as before.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TilePlan {
+    /// GEMM k-panel width (was the hard-coded `gemm::KC = 256`).
+    pub gemm_kc: usize,
+    /// GEMM row-block height: 4 = the 4-row micro-kernel, 1 = per-row.
+    pub gemm_mc: usize,
+    /// IMAC batched-MVM k-panel width (must be a multiple of 4: the
+    /// per-row kernels group products in 4-chunks and tile equivalence is
+    /// bit-exact only on that grid).
+    pub imac_kc: usize,
+    /// IMAC image-block width (multiple of the 4-image micro-kernel).
+    pub imac_imgs: usize,
+}
+
+impl Default for TilePlan {
+    fn default() -> Self {
+        Self { gemm_kc: 256, gemm_mc: 4, imac_kc: 256, imac_imgs: 4 }
+    }
+}
+
+impl TilePlan {
+    /// Human-readable form for the serve summary / metrics snapshot.
+    pub fn label(&self) -> String {
+        format!(
+            "gemm kc={} mc={} | imac kc={} imgs={}",
+            self.gemm_kc, self.gemm_mc, self.imac_kc, self.imac_imgs
+        )
+    }
+}
+
+/// Candidate k-panel widths for the i8 GEMM autotune grid.
+pub const GEMM_KC_CANDIDATES: &[usize] = &[128, 256, 512];
+/// Candidate row-block heights for the GEMM autotune grid.
+pub const GEMM_MC_CANDIDATES: &[usize] = &[1, 4];
+/// Candidate k-panel widths for the IMAC batched MVM (all multiples of 4 —
+/// see [`TilePlan::imac_kc`]).
+pub const IMAC_KC_CANDIDATES: &[usize] = &[128, 256, 512];
+/// Candidate image-block widths for the IMAC batched MVM.
+pub const IMAC_IMGS_CANDIDATES: &[usize] = &[4, 8];
+
+/// The host's autotuned tile, measured once per process at first use
+/// (intended: from `DeploymentSpec::build`, off the serving hot path).
+/// `TPU_IMAC_AUTOTUNE=off` (or `0`) pins the defaults.
+pub fn host_tile() -> TilePlan {
+    static TILE: OnceLock<TilePlan> = OnceLock::new();
+    *TILE.get_or_init(|| {
+        if let Ok(v) = std::env::var("TPU_IMAC_AUTOTUNE") {
+            if v == "off" || v == "0" {
+                return TilePlan::default();
+            }
+        }
+        let (gemm_kc, gemm_mc) = crate::nn::gemm::autotune_gemm_tile();
+        let (imac_kc, imac_imgs) = crate::imac::crossbar::autotune_imac_tile();
+        TilePlan { gemm_kc, gemm_mc, imac_kc, imac_imgs }
+    })
+}
+
+/// Time `reps` runs of `f`, returning the best (minimum) elapsed time —
+/// the standard micro-bench estimator (least-noise sample).
+pub(crate) fn best_time_of<F: FnMut()>(reps: usize, mut f: F) -> std::time::Duration {
+    let mut best = std::time::Duration::MAX;
+    for _ in 0..reps {
+        let t0 = std::time::Instant::now();
+        f();
+        best = best.min(t0.elapsed());
+    }
+    best
+}
+
+/// Deterministic autotune fill pattern (no RNG dependency; xorshift64*).
+pub(crate) fn autotune_pattern_i8(buf: &mut [i8]) {
+    let mut s = 0x9e3779b97f4a7c15u64;
+    for v in buf.iter_mut() {
+        s ^= s << 13;
+        s ^= s >> 7;
+        s ^= s << 17;
+        *v = (s % 255) as i64 as i8;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    fn gen_i8s(g: &mut crate::util::prop::Gen, n: usize) -> Vec<i8> {
+        (0..n).map(|_| g.i64_in(-127, 127) as i8).collect()
+    }
+
+    #[test]
+    fn env_override_parses() {
+        assert_eq!(level_from_env_str("scalar"), Some(SimdLevel::Scalar));
+        assert_eq!(level_from_env_str("off"), Some(SimdLevel::Scalar));
+        assert_eq!(level_from_env_str("0"), Some(SimdLevel::Scalar));
+        assert_eq!(level_from_env_str("auto"), None);
+        assert_eq!(level_from_env_str("avx2"), None); // can't force-enable
+    }
+
+    #[test]
+    fn runnable_levels_always_include_scalar() {
+        let ls = runnable_levels();
+        assert!(ls.contains(&SimdLevel::Scalar));
+        assert!(ls.len() <= 2);
+        // The active level is always runnable.
+        assert!(ls.contains(&active()));
+    }
+
+    /// Every runnable axpy variant matches the scalar reference exactly,
+    /// including vector-width tails (n not a multiple of 8).
+    #[test]
+    fn axpy_variants_match_scalar_exactly() {
+        forall(60, |g| {
+            let n = g.usize_in(0, 67); // straddles 0, sub-lane, and tail shapes
+            let a = g.i64_in(-127, 127) as i8;
+            let b = gen_i8s(g, n);
+            let base: Vec<i32> = (0..n).map(|_| g.i64_in(-100_000, 100_000) as i32).collect();
+            let mut want = base.clone();
+            i8_axpy_i32_at(SimdLevel::Scalar, a, &b, &mut want);
+            for level in runnable_levels() {
+                let mut got = base.clone();
+                i8_axpy_i32_at(level, a, &b, &mut got);
+                assert_eq!(got, want, "level {level:?} n {n}");
+            }
+        });
+    }
+
+    /// Every runnable elementwise-MAC variant matches the scalar reference
+    /// exactly, including tails.
+    #[test]
+    fn mac_variants_match_scalar_exactly() {
+        forall(60, |g| {
+            let n = g.usize_in(0, 67);
+            let x = gen_i8s(g, n);
+            let w = gen_i8s(g, n);
+            let base: Vec<i32> = (0..n).map(|_| g.i64_in(-100_000, 100_000) as i32).collect();
+            let mut want = base.clone();
+            i8_mac_i32_at(SimdLevel::Scalar, &x, &w, &mut want);
+            for level in runnable_levels() {
+                let mut got = base.clone();
+                i8_mac_i32_at(level, &x, &w, &mut got);
+                assert_eq!(got, want, "level {level:?} n {n}");
+            }
+        });
+    }
+
+    /// Staging moves are bit-identical at every level, odd lengths included.
+    #[test]
+    fn stage_moves_bit_identical() {
+        forall(60, |g| {
+            let n = g.usize_in(0, 100);
+            let src_f: Vec<f32> = g.vec_f32(n, -4.0, 4.0);
+            let src_i = gen_i8s(g, n);
+            for level in runnable_levels() {
+                let mut df = vec![7.0f32; n];
+                f32::stage_copy_at(level, &src_f, &mut df);
+                assert!(df.iter().zip(&src_f).all(|(a, b)| a.to_bits() == b.to_bits()));
+                f32::stage_zero_at(level, &mut df);
+                assert!(df.iter().all(|v| v.to_bits() == 0));
+                let mut di = vec![42i8; n];
+                i8::stage_copy_at(level, &src_i, &mut di);
+                assert_eq!(di, src_i);
+                i8::stage_zero_at(level, &mut di);
+                assert!(di.iter().all(|&v| v == 0));
+            }
+        });
+    }
+
+    /// Popcount-diff variants agree exactly on random masks, including
+    /// zero-word and single-word shapes (sub-64-row crossbars).
+    #[test]
+    fn popcnt_variants_match_scalar_exactly() {
+        forall(60, |g| {
+            let words = g.usize_in(0, 9);
+            let x: Vec<u64> = (0..words).map(|_| g.u64_in(0, u64::MAX)).collect();
+            let p: Vec<u64> = (0..words).map(|_| g.u64_in(0, u64::MAX)).collect();
+            let m: Vec<u64> = (0..words).map(|_| g.u64_in(0, u64::MAX)).collect();
+            let want = popcnt_diff_at(SimdLevel::Scalar, &x, &p, &m);
+            for level in runnable_levels() {
+                assert_eq!(popcnt_diff_at(level, &x, &p, &m), want, "level {level:?}");
+            }
+        });
+    }
+
+    #[test]
+    fn default_tile_reproduces_shipped_constants() {
+        let t = TilePlan::default();
+        assert_eq!(t.gemm_kc, crate::nn::gemm::KC);
+        assert_eq!(t.gemm_mc, 4);
+        assert_eq!(t.imac_kc, crate::nn::gemm::KC);
+        assert_eq!(t.imac_imgs, 4);
+        assert_eq!(t.label(), "gemm kc=256 mc=4 | imac kc=256 imgs=4");
+    }
+
+    /// The autotuner only ever picks from the published candidate grids
+    /// (every member of which is equivalence-tested), and the IMAC panel
+    /// stays on the 4-product grid the per-row kernels require.
+    #[test]
+    fn host_tile_picks_from_candidate_grid() {
+        let t = host_tile();
+        assert!(GEMM_KC_CANDIDATES.contains(&t.gemm_kc));
+        assert!(GEMM_MC_CANDIDATES.contains(&t.gemm_mc));
+        assert!(IMAC_KC_CANDIDATES.contains(&t.imac_kc));
+        assert!(IMAC_IMGS_CANDIDATES.contains(&t.imac_imgs));
+        assert_eq!(t.imac_kc % 4, 0);
+        assert_eq!(t.imac_imgs % 4, 0);
+        // Cached: a second call returns the same plan without re-timing.
+        assert_eq!(host_tile(), t);
+    }
+
+    #[test]
+    fn labels_are_stable() {
+        assert_eq!(SimdLevel::Scalar.label(), "scalar");
+        assert_eq!(SimdLevel::Avx2.label(), "avx2");
+        assert_eq!(SimdLevel::Neon.label(), "neon");
+    }
+}

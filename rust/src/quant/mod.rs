@@ -232,6 +232,36 @@ pub fn pack_sign_bitmask(x: &[f32], out: &mut [u64]) {
     }
 }
 
+/// Pack a vector of **odd-integer bridge levels** `x ∈ {±1, ±3, …, ±M}`
+/// (`M = 2^nplanes − 1`) into `nplanes` plane-major bitmasks for the
+/// multi-plane popcount MVM ([`crate::imac::Crossbar::mvm_level_bits_acc`]):
+/// with `u_i = (x_i + M)/2 ∈ [0, M]`, bit `i` of plane `t` (stored at
+/// `out[t·W .. (t+1)·W]`, `W = bitplane_words(x.len())`) is bit `t` of
+/// `u_i`. `nplanes = 1` reproduces [`pack_sign_bitmask`] exactly (u ∈
+/// {0, 1} is the sign bit). Writes the first `W·nplanes` words of `out`
+/// (padding bits cleared); zero allocations on the serving hot path.
+pub fn pack_level_bitplanes(x: &[f32], nplanes: usize, out: &mut [u64]) {
+    assert!((1..=8).contains(&nplanes), "bridge plane count {nplanes} out of range");
+    let words = bitplane_words(x.len());
+    assert!(out.len() >= words * nplanes, "level bitplane buffer too short");
+    out[..words * nplanes].fill(0);
+    let m = (1i32 << nplanes) - 1;
+    for (i, &v) in x.iter().enumerate() {
+        let vi = v as i32;
+        debug_assert!(
+            v == vi as f32 && vi.abs() <= m && vi.rem_euclid(2) == 1,
+            "non-level input {v} at {i} for {nplanes} planes"
+        );
+        let u = ((vi + m) / 2) as u32;
+        let bit = 1u64 << (i % BITPLANE_WORD_BITS);
+        for (t, plane) in out.chunks_exact_mut(words).take(nplanes).enumerate() {
+            if (u >> t) & 1 == 1 {
+                plane[i / BITPLANE_WORD_BITS] |= bit;
+            }
+        }
+    }
+}
+
 /// Inverse of [`pack_ternary`].
 pub fn unpack_ternary(bytes: &[u8], n: usize) -> Vec<i8> {
     assert!(n <= bytes.len() * 4);
@@ -348,6 +378,50 @@ mod tests {
             }
             if n % 64 != 0 {
                 assert_eq!(bits[bitplane_words(n) - 1] & (!0u64 << (n % 64)), 0, "padding");
+            }
+        });
+    }
+
+    /// One plane reproduces the sign bitmask word-for-word (u = sign bit).
+    #[test]
+    fn level_bitplanes_one_plane_is_sign_bitmask() {
+        forall(40, |g| {
+            let n = g.usize_in(1, 200);
+            let x: Vec<f32> = g.vec_sign(n).iter().map(|&s| s as f32).collect();
+            let words = bitplane_words(n);
+            let mut a = vec![!0u64; words];
+            let mut b = vec![!0u64; words];
+            pack_sign_bitmask(&x, &mut a);
+            pack_level_bitplanes(&x, 1, &mut b);
+            assert_eq!(a, b);
+        });
+    }
+
+    /// Plane bits reconstruct each level: `x_i = 2·(Σ_t 2^t·bit_t) − M`,
+    /// and padding above `n` stays clear in every plane.
+    #[test]
+    fn level_bitplanes_round_trip_levels() {
+        forall(40, |g| {
+            let nplanes = g.usize_in(1, 4);
+            let m = (1i32 << nplanes) - 1;
+            let n = g.usize_in(1, 150);
+            let x: Vec<f32> =
+                (0..n).map(|_| (2 * g.usize_in(0, m as usize) as i32 - m) as f32).collect();
+            let words = bitplane_words(n);
+            let mut bits = vec![!0u64; words * nplanes]; // dirty buffer
+            pack_level_bitplanes(&x, nplanes, &mut bits);
+            for (i, &v) in x.iter().enumerate() {
+                let mut u = 0u32;
+                for t in 0..nplanes {
+                    u |= (((bits[t * words + i / 64] >> (i % 64)) & 1) as u32) << t;
+                }
+                assert_eq!(2 * u as i32 - m, v as i32, "level {i}");
+            }
+            if n % 64 != 0 {
+                let mask = !0u64 << (n % 64);
+                for t in 0..nplanes {
+                    assert_eq!(bits[t * words + words - 1] & mask, 0, "plane {t} padding");
+                }
             }
         });
     }

@@ -18,7 +18,11 @@
 //!   registry request path adds no heap traffic of its own;
 //! * the **PJRT pack buffer** (`Scratch::pack_images`): staging a chunk
 //!   into the fixed artifact batch reuses the arena's pack buffer instead
-//!   of allocating per chunk.
+//!   of allocating per chunk;
+//! * the **SIMD-dispatched FC kernels** (PR 7): a non-ideal deployment
+//!   (batched analog micro-kernel + per-row batch tail) and a 2-bit
+//!   bridge deployment (multi-plane popcount layer 1) — runtime dispatch
+//!   and autotuned tiling add no heap traffic.
 //!
 //! Since the bit-sliced FC hot path landed, both `infer_into` and
 //! `infer_batch_into` drive the whole FC section batch-at-a-time through
@@ -156,6 +160,60 @@ fn steady_state_inference_allocates_nothing() {
                     "dynamic int8 plan scans once per image per quantized layer"
                 ),
             }
+        }
+    }
+
+    // The PR-7 FC kernels share the budget: a non-ideal deployment (the
+    // cache-blocked batched analog micro-kernel + per-row batch tail) and
+    // a 2-bit-bridge deployment (multi-plane popcount layer 1 with the
+    // in-place level quantizer) must also serve with zero steady-state
+    // allocations — SIMD dispatch and tiling never touch the heap. The
+    // 5-image batch exercises the `nimg % 4` tail path explicitly.
+    {
+        use tpu_imac::imac::{CrossbarConfig, DeviceConfig, ImacConfig};
+        let noisy = ImacConfig {
+            crossbar: CrossbarConfig {
+                device: DeviceConfig { sigma: 0.05, ..Default::default() },
+                wire_alpha: 0.02,
+                amp_offset_sigma: 0.01,
+            },
+            ..Default::default()
+        };
+        let multibit = ImacConfig { bridge_bits: 2, bridge_full_scale: 2.0, ..Default::default() };
+        for (imac, label) in [(noisy, "non-ideal analog-batch"), (multibit, "2-bit bridge")] {
+            let model = DeploymentSpec::doc("m", docs[0].0.clone())
+                .imac(imac)
+                .fabric_seed(7)
+                .build()
+                .unwrap()
+                .model;
+            let mut scratch = Scratch::new();
+            let mut sum = 0.0f32;
+            for img in &images {
+                sum += model.infer_into(img, &mut scratch)[0];
+            }
+            model.infer_batch_into(&refs, &mut scratch, |_, scores| sum += scores[0]);
+            model.infer_batch_into(&refs[..5], &mut scratch, |_, scores| sum += scores[0]);
+            let warm_grows = scratch.grow_events();
+            let before = ALLOCS.load(Ordering::SeqCst);
+            for _ in 0..3 {
+                for img in &images {
+                    sum += model.infer_into(img, &mut scratch)[0];
+                }
+                model.infer_batch_into(&refs, &mut scratch, |_, scores| sum += scores[0]);
+                model.infer_batch_into(&refs[..5], &mut scratch, |_, scores| sum += scores[0]);
+            }
+            let delta = ALLOCS.load(Ordering::SeqCst) - before;
+            assert!(sum.is_finite());
+            assert_eq!(
+                delta, 0,
+                "steady-state {label} path performed {delta} heap allocations (want 0)"
+            );
+            assert_eq!(
+                scratch.grow_events(),
+                warm_grows,
+                "{label} scratch arena regrew at steady state"
+            );
         }
     }
 

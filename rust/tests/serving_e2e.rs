@@ -378,6 +378,51 @@ fn batched_fc_path_bit_exact_vs_per_row_and_counted() {
     coord.shutdown();
 }
 
+/// Non-ideal deployments now run the cache-blocked **batched analog**
+/// kernel instead of the per-row fallback, and the split is observable:
+/// a 7-image batch on a noisy fabric must account 4 images to
+/// `imac_analog_batch_images` (one full micro-kernel block) and 3 to
+/// `imac_analog_tail_images` (the per-row remainder) — never to the
+/// bitplane counter — while the backend's scores stay bit-identical to
+/// the per-image hot path. The snapshot also surfaces the active SIMD
+/// level and the autotuned tile label.
+#[test]
+fn nonideal_backend_runs_batched_analog_path_and_counts() {
+    use tpu_imac::coordinator::InferenceBackend;
+    use tpu_imac::imac::{CrossbarConfig, ImacConfig};
+    let mut rng = Xoshiro256::seed_from_u64(97);
+    let doc = lenet_weights_doc(&mut rng);
+    let imac = ImacConfig {
+        crossbar: CrossbarConfig { wire_alpha: 0.02, amp_offset_sigma: 0.05, ..Default::default() },
+        ..Default::default()
+    };
+    let m = DeploymentSpec::doc("noisy", doc).imac(imac).fabric_seed(7).build().unwrap().model;
+    assert!(!m.fabric.uses_bitplane_path(), "a noisy fabric must not claim the bitplane path");
+    assert_eq!(m.fabric.fast_path(), "analog-batch");
+
+    let images: Vec<Tensor> = (0..7)
+        .map(|_| Tensor::from_vec(28, 28, 1, (0..784).map(|_| rng.next_f32() - 0.5).collect()))
+        .collect();
+    let refs: Vec<&Tensor> = images.iter().collect();
+    let mut backend = NativeBackend::new(m.clone());
+    let metrics = tpu_imac::metrics::Metrics::new();
+    let scores = backend.infer_batch(&refs, &metrics);
+    let mut s = Scratch::new();
+    for (img, got) in images.iter().zip(&scores) {
+        assert_eq!(
+            got.as_slice(),
+            m.infer_into(img, &mut s),
+            "backend scores diverge from the per-image hot path"
+        );
+    }
+    let snap = metrics.snapshot();
+    assert_eq!(snap.imac_bitplane_images, 0, "noisy fabric must not count as bit-sliced");
+    assert_eq!(snap.imac_analog_batch_images, 4, "one full 4-image block");
+    assert_eq!(snap.imac_analog_tail_images, 3, "per-row remainder");
+    assert!(["scalar", "avx2", "neon"].contains(&snap.simd_level));
+    assert!(snap.tile.contains("imac kc="), "{}", snap.tile);
+}
+
 /// The resilience-layer anchor: a chaos soak with deterministic fault
 /// injection across two models — in-batch panics, one worker death, NaN
 /// output corruption and slow batches — while a second thread hot-swaps
