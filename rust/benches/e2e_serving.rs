@@ -3,7 +3,7 @@
 //! otherwise a synthetic LeNet-shaped model, so `cargo bench` works before
 //! `make train`.
 //!
-//! Two parts:
+//! Three parts:
 //!
 //! 1. the historical max-batch sweep (plain prints, shapes unchanged);
 //! 2. a `BenchSuite` trio — single-model registry vs **multi-model
@@ -13,15 +13,25 @@
 //!    fault-free overhead) — so routing and resilience overheads are
 //!    tracked series: `cargo bench --bench e2e_serving -- --json
 //!    BENCH_hotpath.json` merges the suite into the same report the conv
-//!    bench writes (existing suite/row names untouched).
+//!    bench writes (existing suite/row names untouched);
+//! 3. a **sustained-load soak**: a flooding tenant plus a weighted,
+//!    deadline-guarded background tenant under concurrent hot swaps,
+//!    driving `TPU_IMAC_SOAK_REQUESTS` mixed-model requests (default
+//!    200k, 2k under `TPU_IMAC_BENCH_FAST=1`) through the weighted
+//!    scheduler, then emitting p50/p95/p99 latency and worst-tenant p95
+//!    queue-wait rows into the same `--json` report (new suite name; the
+//!    frozen rows above are untouched).
 
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use tpu_imac::coordinator::{Coordinator, CoordinatorConfig, ModelRegistry, NativeBackend};
+use tpu_imac::coordinator::{
+    Coordinator, CoordinatorConfig, ModelRegistry, NativeBackend, SchedPolicy,
+};
 use tpu_imac::deploy::{Deployment, DeploymentSpec, SyntheticModel};
 use tpu_imac::nn::{PrecisionPolicy, Tensor};
-use tpu_imac::util::bench::BenchSuite;
+use tpu_imac::util::bench::{json_path_from_args, write_json, BenchResult, BenchSuite};
 use tpu_imac::util::rng::Xoshiro256;
 
 /// Trained weights when present *and loadable*, else the synthetic zoo
@@ -195,4 +205,176 @@ fn main() {
         single / 1e6,
         (guarded / single - 1.0) * 100.0
     );
+
+    run_soak();
+}
+
+/// Sustained-load soak: a flooding tenant (fire-and-forget, retried
+/// through admission sheds) plus a weight-2 deadline-guarded background
+/// tenant, served by the weighted scheduler while a third thread hot-swaps
+/// the background deployment (alternating weights, so re-derivation is
+/// exercised live). Completion is observed through the metrics counters —
+/// every accepted request must be completed or answered with a typed drop —
+/// so the soak doubles as a zero-lost-replies check at scale.
+fn run_soak() {
+    let fast = std::env::var("TPU_IMAC_BENCH_FAST").as_deref() == Ok("1");
+    let total: u64 = std::env::var("TPU_IMAC_SOAK_REQUESTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if fast { 2_000 } else { 200_000 });
+
+    let registry = Arc::new(ModelRegistry::new());
+    registry
+        .register(
+            &DeploymentSpec::synthetic("flood", SyntheticModel::Lenet, 5).queue_quota(256),
+        )
+        .expect("soak: flood deployment");
+    let bg_spec = |weight: usize| {
+        DeploymentSpec::synthetic("bg", SyntheticModel::MobilenetMini, 6)
+            .precision(PrecisionPolicy::Int8)
+            .queue_quota(64)
+            .weight(weight)
+    };
+    registry.register(&bg_spec(2)).expect("soak: bg deployment");
+    let coord = Coordinator::start_registry(
+        CoordinatorConfig {
+            max_batch: 8,
+            workers: 2,
+            batch_timeout: Duration::from_micros(200),
+            scheduling: SchedPolicy::Weighted,
+            ..Default::default()
+        },
+        registry.clone(),
+    )
+    .expect("soak: start registry coordinator");
+
+    let accepted = Arc::new(AtomicU64::new(0));
+    let stop = Arc::new(AtomicBool::new(false));
+
+    // Flooding tenant: ~3/4 of all traffic, receivers dropped on purpose.
+    let flood_n = total * 3 / 4;
+    let flooder = {
+        let client = coord.client();
+        let accepted = accepted.clone();
+        std::thread::spawn(move || {
+            let mut rng = Xoshiro256::seed_from_u64(0x50AC);
+            let mut sent = 0u64;
+            while sent < flood_n {
+                if client.submit_to("flood", rand_image(&mut rng)).is_ok() {
+                    sent += 1;
+                    accepted.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    std::thread::sleep(Duration::from_micros(50));
+                }
+            }
+        })
+    };
+
+    // Background tenant: every request carries a deadline budget.
+    let bg_n = total - flood_n;
+    let bg = {
+        let client = coord.client();
+        let accepted = accepted.clone();
+        std::thread::spawn(move || {
+            let mut rng = Xoshiro256::seed_from_u64(0x50AD);
+            let budget = Duration::from_secs(10);
+            let mut sent = 0u64;
+            while sent < bg_n {
+                if client.submit_to_within("bg", rand_image(&mut rng), budget).is_ok() {
+                    sent += 1;
+                    accepted.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    std::thread::sleep(Duration::from_micros(50));
+                }
+            }
+        })
+    };
+
+    // Concurrent hot swaps flip the background tenant's weight 2↔3; the
+    // scheduler must pick the new share up without dropping a request.
+    let swapper = {
+        let registry = registry.clone();
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            let mut flip = false;
+            while !stop.load(Ordering::Relaxed) {
+                std::thread::sleep(Duration::from_millis(50));
+                registry
+                    .swap("bg", &bg_spec(if flip { 3 } else { 2 }))
+                    .expect("soak: bg swap");
+                flip = !flip;
+            }
+        })
+    };
+
+    let t0 = Instant::now();
+    flooder.join().unwrap();
+    bg.join().unwrap();
+    // Receivers are dropped, so completion is observed via the counters:
+    // every accepted request ends as completed, faulted or deadline-dropped.
+    let target = accepted.load(Ordering::Relaxed);
+    let snap = loop {
+        let snap = coord.metrics.snapshot();
+        if snap.completed + snap.deadline_drops + snap.faulted >= target {
+            break snap;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(600),
+            "soak stalled: {}/{} answered after 600s",
+            snap.completed + snap.deadline_drops + snap.faulted,
+            target
+        );
+        std::thread::sleep(Duration::from_millis(2));
+    };
+    let wall = t0.elapsed();
+    stop.store(true, Ordering::Relaxed);
+    swapper.join().unwrap();
+    let hist_kib = coord.metrics.histogram_footprint_bytes() / 1024;
+    coord.shutdown();
+
+    let worst_wait_us =
+        snap.models.iter().map(|m| m.p95_queue_wait_us).fold(0.0f64, f64::max);
+    println!(
+        "soak: {} requests in {:.2}s ({:.0} req/s, {} deadline drops)",
+        target,
+        wall.as_secs_f64(),
+        target as f64 / wall.as_secs_f64(),
+        snap.deadline_drops,
+    );
+    println!(
+        "soak latency: p50 {:.2} ms p95 {:.2} ms p99 {:.2} ms | worst-tenant p95 wait {:.2} ms",
+        snap.p50_latency_us / 1e3,
+        snap.p95_latency_us / 1e3,
+        snap.p99_latency_us / 1e3,
+        worst_wait_us / 1e3,
+    );
+    println!(
+        "soak batch closes: full {} shallow {} deadline {} timeout {} | histograms {} KiB",
+        snap.batch_close_full,
+        snap.batch_close_shallow,
+        snap.batch_close_deadline,
+        snap.batch_close_timeout,
+        hist_kib,
+    );
+
+    let row = |name: &str, us: f64| BenchResult {
+        name: name.to_string(),
+        iters: target,
+        mean_ns: us * 1e3,
+        median_ns: us * 1e3,
+        p95_ns: us * 1e3,
+        items_per_iter: None,
+    };
+    let rows = [
+        row("soak mixed-tenant p50 latency", snap.p50_latency_us),
+        row("soak mixed-tenant p95 latency", snap.p95_latency_us),
+        row("soak mixed-tenant p99 latency", snap.p99_latency_us),
+        row("soak worst-tenant p95 queue wait", worst_wait_us),
+    ];
+    if let Some(path) = json_path_from_args(std::env::args().skip(1)) {
+        match write_json(&path, "e2e serving: sustained soak (weighted scheduling)", &rows) {
+            Ok(()) => eprintln!("soak results appended to {path}"),
+            Err(e) => eprintln!("failed to write {path}: {e}"),
+        }
+    }
 }

@@ -15,7 +15,7 @@
 //!                {"name": "lenet", "precision": "int8",
 //!                 "weights": "artifacts/weights_lenet.json",
 //!                 "calibration": "calibration.json",
-//!                 "queue_quota": 64},
+//!                 "queue_quota": 64, "weight": 4},
 //!                {"name": "mm", "synthetic": "mobilenet-mini", "seed": 5,
 //!                 "precision": "fp32",
 //!                 "faults": {"seed": 7, "panic_every": 50, "slow_every": 20,
@@ -46,8 +46,12 @@
 //! Per-entry resilience knobs: `queue_quota` caps how many of the
 //! coordinator's queued requests one deployment may hold before new
 //! submits are shed (omitted = a fair share of `serve.max_queue`);
-//! `faults` attaches a deterministic [`crate::coordinator::FaultPlan`]
-//! (chaos testing / drills only — omit it in production configs).
+//! `weight` (≥ 1, default 1) sets the deployment's share of batch
+//! formation under the coordinator's weighted slot selection — a
+//! weight-4 model receives up to 4× the batches of a weight-1 one when
+//! both are backlogged; `faults` attaches a deterministic
+//! [`crate::coordinator::FaultPlan`] (chaos testing / drills only —
+//! omit it in production configs).
 //!
 //! Every field is optional; omitted fields keep their defaults. The CLI's
 //! `--config <path>` loads one of these; explicit CLI flags still win.
@@ -111,6 +115,8 @@ pub struct ServeDeployment {
     /// Admission-control queue-depth quota; `None` = fair share of the
     /// coordinator queue.
     pub queue_quota: Option<usize>,
+    /// Weighted-scheduling share; `None` = default weight 1.
+    pub weight: Option<usize>,
     /// Deterministic fault-injection plan (chaos testing only).
     pub faults: Option<FaultPlan>,
 }
@@ -137,6 +143,7 @@ impl ServeDefaults {
             max_queue: self.max_queue,
             batch_timeout: std::time::Duration::from_micros(self.batch_timeout_us),
             workers: self.workers,
+            ..Default::default()
         }
     }
 }
@@ -293,6 +300,7 @@ impl Config {
                         precision,
                         calibration: entry.get("calibration").as_str().map(str::to_string),
                         queue_quota: entry.get("queue_quota").as_usize(),
+                        weight: entry.get("weight").as_usize(),
                         faults,
                     });
                 }
@@ -418,7 +426,7 @@ mod tests {
         let c = Config::from_json(
             &Json::parse(
                 r#"{"serve": {"deployments": [
-                    {"name": "a", "synthetic": "lenet", "queue_quota": 64},
+                    {"name": "a", "synthetic": "lenet", "queue_quota": 64, "weight": 4},
                     {"name": "b", "synthetic": "mobilenet-mini",
                      "faults": {"seed": 7, "panic_every": 50, "slow_every": 20,
                                 "slow_us": 500, "fail_build": false}}
@@ -429,9 +437,11 @@ mod tests {
         .unwrap();
         let d0 = &c.serve.deployments[0];
         assert_eq!(d0.queue_quota, Some(64));
+        assert_eq!(d0.weight, Some(4));
         assert!(d0.faults.is_none(), "no faults block → no plan");
         let d1 = &c.serve.deployments[1];
         assert_eq!(d1.queue_quota, None);
+        assert_eq!(d1.weight, None, "omitted weight → coordinator default 1");
         let plan = d1.faults.as_ref().expect("faults block parses");
         assert_eq!(plan.seed, 7);
         assert_eq!(plan.panic_every, Some(50));

@@ -24,6 +24,22 @@
 //!   every batch boundary so [`ModelRegistry::swap`] hot-reloads a
 //!   deployment without dropping in-flight requests.
 //!
+//! # Scheduling
+//!
+//! Which deployment the next batch serves is a policy decision
+//! ([`SchedPolicy`], default [`SchedPolicy::Weighted`]): per-slot stride
+//! scheduling picks the backlogged slot with the smallest virtual pass,
+//! so under contention every deployment receives batches in proportion
+//! to its `DeploymentSpec::weight` and a flooding tenant cannot starve a
+//! cold one (its requests are still bounded by its admission quota, and
+//! its *turns* are now bounded by its weight). Batch size adapts per
+//! batch: a full drain closes immediately (`Full`), a queue that ran dry
+//! skips the `batch_timeout` top-up window (`Shallow` — latency mode), a
+//! member with a tight remaining deadline budget shrinks the window
+//! (`Deadline`), and only a backlogged-but-unfilled batch holds the full
+//! window open (`Timeout`). Close reasons and submit→execution queue
+//! waits land in [`crate::metrics::Metrics`] per deployment.
+//!
 //! # Resilience
 //!
 //! Every request ends in exactly one of two ways: an `Ok(`[`Response`]`)`
@@ -92,12 +108,38 @@ const SUPERVISOR_POLL: Duration = Duration::from_millis(5);
 const RESTART_BACKOFF_BASE: Duration = Duration::from_millis(2);
 const RESTART_BACKOFF_CAP: Duration = Duration::from_millis(250);
 
+/// Stride-scheduling quantum: the pass advance a weight-1 slot pays per
+/// served request. Integer division by the weight keeps shares exact for
+/// weights up to `2^16` without floating point in the queue lock.
+const STRIDE_ONE: u64 = 1 << 16;
+
+/// How batch formation picks the next batch's deployment slot.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SchedPolicy {
+    /// Head-of-queue FIFO: the oldest queued request dictates the slot.
+    /// Starves cold models behind a flooding tenant — kept only as the
+    /// regression baseline (and for single-model coordinators, where the
+    /// two policies are identical).
+    FifoHead,
+    /// Weighted stride scheduling over the backlogged slots: each slot
+    /// carries a virtual *pass* that advances by `STRIDE_ONE / weight`
+    /// per served request, and the backlogged slot with the smallest pass
+    /// forms the next batch. Under contention every deployment receives
+    /// batches in proportion to its [`crate::deploy::DeploymentSpec::weight`];
+    /// a slot going idle→backlogged re-enters at the current virtual time,
+    /// so it cannot bank credit while idle and then monopolize.
+    #[default]
+    Weighted,
+}
+
 /// Coordinator tunables.
 #[derive(Clone, Copy, Debug)]
 pub struct CoordinatorConfig {
     /// Maximum images per executed batch.
     pub max_batch: usize,
     /// How long the batcher waits to fill a batch once one request exists.
+    /// Adaptive batch sizing may shrink or skip this window per batch —
+    /// see [`crate::metrics::BatchClose`].
     pub batch_timeout: Duration,
     /// Bounded queue depth (backpressure beyond this).
     pub max_queue: usize,
@@ -105,6 +147,9 @@ pub struct CoordinatorConfig {
     /// [`Coordinator::start_registry`] (each owns its backend state).
     /// [`Coordinator::start`] always uses exactly one.
     pub workers: usize,
+    /// Slot-selection policy for batch formation (default
+    /// [`SchedPolicy::Weighted`]).
+    pub scheduling: SchedPolicy,
 }
 
 impl Default for CoordinatorConfig {
@@ -114,6 +159,7 @@ impl Default for CoordinatorConfig {
             batch_timeout: Duration::from_millis(2),
             max_queue: 1024,
             workers: 1,
+            scheduling: SchedPolicy::default(),
         }
     }
 }
@@ -203,33 +249,51 @@ struct Request {
     resp: mpsc::Sender<ServeResult>,
 }
 
-/// The queue plus per-slot depth accounting (for admission control).
-/// Depths are maintained by [`QueueState::push`] / the drain helpers so
-/// `submit` can check a model's share in O(1) under the lock.
+/// The queue plus per-slot depth accounting (for admission control) and
+/// per-slot stride-scheduling state (for weighted slot selection). Depths
+/// are maintained by [`QueueState::push`] / the drain helpers so `submit`
+/// can check a model's share in O(1) under the lock; passes advance via
+/// [`QueueState::charge`] as batches are served.
 struct QueueState {
     deque: VecDeque<Request>,
     depth: Vec<usize>,
+    /// Per-slot virtual pass (stride scheduling). The backlogged slot with
+    /// the smallest pass forms the next batch; serving advances it by
+    /// `STRIDE_ONE / weight` per request.
+    pass: Vec<u64>,
+    /// Global virtual time: the pass of the most recently selected slot.
+    /// Slots turning idle→backlogged are clamped up to this so idleness
+    /// never banks scheduling credit.
+    vtime: u64,
 }
 
 impl QueueState {
     fn new() -> Self {
-        Self { deque: VecDeque::new(), depth: Vec::new() }
+        Self { deque: VecDeque::new(), depth: Vec::new(), pass: Vec::new(), vtime: 0 }
+    }
+
+    /// Depth/pass bookkeeping for a request entering the deque (either
+    /// end): grow the per-slot tables, clamp an idle slot's pass to the
+    /// current virtual time, bump its depth.
+    fn arrived(&mut self, slot: usize) {
+        if self.depth.len() <= slot {
+            self.depth.resize(slot + 1, 0);
+            self.pass.resize(slot + 1, 0);
+        }
+        if self.depth[slot] == 0 {
+            self.pass[slot] = self.pass[slot].max(self.vtime);
+        }
+        self.depth[slot] += 1;
     }
 
     fn push(&mut self, r: Request) {
-        if self.depth.len() <= r.slot {
-            self.depth.resize(r.slot + 1, 0);
-        }
-        self.depth[r.slot] += 1;
+        self.arrived(r.slot);
         self.deque.push_back(r);
     }
 
     /// Re-queue at the *front* (a dying worker returning its batch).
     fn unpush_front(&mut self, r: Request) {
-        if self.depth.len() <= r.slot {
-            self.depth.resize(r.slot + 1, 0);
-        }
-        self.depth[r.slot] += 1;
+        self.arrived(r.slot);
         self.deque.push_front(r);
     }
 
@@ -242,6 +306,45 @@ impl QueueState {
 
     fn slot_depth(&self, slot: usize) -> usize {
         self.depth.get(slot).copied().unwrap_or(0)
+    }
+
+    /// Pick the slot the next batch is formed for. `FifoHead` takes the
+    /// head request's slot (the pre-weighted behavior); `Weighted` scans
+    /// the backlogged slots for the smallest pass — O(slots), a handful
+    /// of deployments — and advances the virtual time to it. Callers must
+    /// only invoke this on a non-empty deque.
+    fn select_slot(&mut self, policy: SchedPolicy) -> usize {
+        let head = match self.deque.front() {
+            Some(r) => r.slot,
+            None => return 0,
+        };
+        if policy == SchedPolicy::FifoHead {
+            return head;
+        }
+        let mut best = usize::MAX;
+        let mut best_pass = u64::MAX;
+        for (slot, &queued) in self.depth.iter().enumerate() {
+            if queued > 0 && self.pass[slot] < best_pass {
+                best = slot;
+                best_pass = self.pass[slot];
+            }
+        }
+        if best == usize::MAX {
+            // Unreachable while depth accounting holds (the head request
+            // proves its slot is backlogged); serve the head, never hang.
+            return head;
+        }
+        self.vtime = best_pass;
+        best
+    }
+
+    /// Advance `slot`'s pass for `served` requests at `weight` (≥ 1).
+    /// Per-request charging makes long batches pay proportionally — a
+    /// slot's share of *requests*, not batches, tracks its weight.
+    fn charge(&mut self, slot: usize, served: usize, weight: u64) {
+        if let Some(p) = self.pass.get_mut(slot) {
+            *p = p.saturating_add(served as u64 * (STRIDE_ONE / weight.max(1)));
+        }
     }
 }
 
@@ -325,6 +428,19 @@ impl Client {
         if self.queue.shutdown.load(Ordering::Acquire) {
             return Err(ServeError::Draining.into());
         }
+        // A dead-on-arrival budget (zero or already elapsed) never touches
+        // the queue: enqueued, it would burn queue depth and this model's
+        // admission quota until a worker reaped it. Answer it through the
+        // response channel now — same `DeadlineExceeded` path a client
+        // sees for an in-queue expiry, with zero wait.
+        if deadline.is_some_and(|d| d <= Instant::now()) {
+            let (tx, rx) = mpsc::channel();
+            let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+            self.metrics.deadline_drops.fetch_add(1, Ordering::Relaxed);
+            self.metrics.record_model_deadline_drop(slot);
+            let _ = tx.send(Err(ServeError::DeadlineExceeded { waited_us: 0 }));
+            return Ok((id, rx));
+        }
         // Quota resolved before taking the queue lock (it takes the
         // registry read lock; keeping the two disjoint avoids nesting).
         let quota = self.registry.as_ref().map(|r| r.admission_quota(slot, self.max_queue));
@@ -355,8 +471,8 @@ impl Client {
         if self.registry.is_some() {
             // Registry mode: a single notify could land on a worker parked
             // in a *different* slot's top-up wait (which cannot take this
-            // request), leaving an idle worker asleep on its 50ms poll.
-            // Wake everyone; worker counts are small.
+            // request), leaving an idle worker blocked on the condvar
+            // indefinitely. Wake everyone; worker counts are small.
             self.queue.cv.notify_all();
         } else {
             self.queue.cv.notify_one();
@@ -694,17 +810,29 @@ impl Coordinator {
         metrics: &Metrics,
         exec: &mut WorkerExec,
     ) {
+        // Per-slot scheduling weights, refreshed from the registry once
+        // per batch cycle *before* the queue lock is taken (the registry
+        // read lock is never nested inside it). Reused across iterations
+        // — steady state touches it without allocating. Empty in
+        // fixed-backend mode: every slot falls back to weight 1.
+        let mut weights: Vec<u64> = Vec::new();
         loop {
-            // Wait for at least one request (or shutdown). The head
-            // request picks this batch's deployment slot; only same-slot
+            // Wait for at least one request (or shutdown). The scheduling
+            // policy picks this batch's deployment slot; only same-slot
             // requests join the batch (each deployment has its own
             // compiled plan, so batches are homogeneous per model).
             let mut batch: Vec<Request> = Vec::with_capacity(config.max_batch);
             let mut expired: Vec<Request> = Vec::new();
+            if let WorkerExec::Registry { registry, .. } = exec {
+                registry.copy_weights_into(&mut weights);
+            }
             let slot;
             // Everything left queued after the initial drain is known not
             // to match this slot; top-up wakeups only scan newer arrivals.
             let mut clean;
+            // Whether the queue ran dry after the initial drain (adaptive
+            // batch sizing: arrivals are sparse → skip the top-up window).
+            let shallow;
             {
                 let mut st = queue.state.lock().unwrap();
                 loop {
@@ -714,13 +842,17 @@ impl Coordinator {
                     if !st.deque.is_empty() {
                         break;
                     }
-                    let (g, _timeout) =
-                        queue.cv.wait_timeout(st, Duration::from_millis(50)).unwrap();
-                    st = g;
+                    // Block until a submitter or shutdown notifies — both
+                    // store their flag/request under the queue lock before
+                    // notifying, so this wait cannot miss a wakeup.
+                    st = queue.cv.wait(st).unwrap();
                 }
-                slot = st.deque.front().map(|r| r.slot).unwrap_or(0);
+                slot = st.select_slot(config.scheduling);
                 let now = Instant::now();
                 Self::drain_slot(&mut st, slot, &mut batch, config.max_batch, now, &mut expired);
+                let weight = weights.get(slot).copied().unwrap_or(1);
+                st.charge(slot, batch.len(), weight);
+                shallow = st.deque.is_empty();
                 clean = st.deque.len();
             }
             Self::answer_expired(metrics, &mut expired);
@@ -728,12 +860,35 @@ impl Coordinator {
                 // The head itself had expired; re-form from what is left.
                 continue;
             }
-            // Brief top-up window to fill the batch: condvar-wait on the
-            // remaining deadline instead of spinning (submitters notify).
+            // Adaptive batch sizing: decide how long the top-up window
+            // runs before committing to it. Full and Shallow skip it
+            // entirely; a member's tight remaining budget shrinks it
+            // (half of what's left — the other half stays for compute).
+            let mut close = crate::metrics::BatchClose::Timeout;
+            let mut window = config.batch_timeout;
+            if batch.len() >= config.max_batch {
+                close = crate::metrics::BatchClose::Full;
+                window = Duration::ZERO;
+            } else if shallow {
+                close = crate::metrics::BatchClose::Shallow;
+                window = Duration::ZERO;
+            } else if window > Duration::ZERO {
+                let tightest = batch.iter().filter_map(|r| r.deadline).min();
+                if let Some(d) = tightest {
+                    let remaining = d.saturating_duration_since(Instant::now());
+                    if remaining <= window {
+                        window = remaining / 2;
+                        close = crate::metrics::BatchClose::Deadline;
+                    }
+                }
+            }
+            // Top-up window to fill the batch: condvar-wait on the
+            // remaining window instead of spinning (submitters notify).
             // Only same-slot requests top up; others stay queued for the
             // next batch (or another worker).
-            if batch.len() < config.max_batch && config.batch_timeout > Duration::ZERO {
-                let deadline = Instant::now() + config.batch_timeout;
+            if window > Duration::ZERO {
+                let deadline = Instant::now() + window;
+                let before = batch.len();
                 let mut st = queue.state.lock().unwrap();
                 loop {
                     let now = Instant::now();
@@ -757,14 +912,23 @@ impl Coordinator {
                     let (g, _timeout) = queue.cv.wait_timeout(st, deadline - now).unwrap();
                     st = g;
                 }
+                let weight = weights.get(slot).copied().unwrap_or(1);
+                st.charge(slot, batch.len() - before, weight);
+            }
+            if batch.len() >= config.max_batch {
+                // A Deadline/Timeout window that filled anyway counts as
+                // Full — the reason records why the batch *closed*.
+                close = crate::metrics::BatchClose::Full;
             }
             Self::answer_expired(metrics, &mut expired);
 
             // Execute, guarded: a panicking batch answers its requests
             // with `WorkerFault` instead of stranding them.
-            let queued_us: u64 =
-                batch.iter().map(|r| r.enqueued.elapsed().as_micros() as u64).sum();
-            metrics.queue_us_total.fetch_add(queued_us, Ordering::Relaxed);
+            metrics.record_batch_close(close);
+            metrics.record_queue_waits(
+                slot,
+                batch.iter().map(|r| r.enqueued.elapsed().as_micros() as u64),
+            );
             let images: Vec<&Tensor> = batch.iter().map(|r| &r.image).collect();
             let (outputs, cap, model): (Vec<Vec<f32>>, usize, Option<(usize, String)>) = match exec
             {
@@ -935,7 +1099,16 @@ impl Coordinator {
     /// batches and everything already queued, then join workers (and the
     /// supervisor, in registry mode) deterministically.
     pub fn shutdown(mut self) {
-        self.queue.shutdown.store(true, Ordering::Release);
+        // The flag is stored while holding the queue lock: an idle worker
+        // is either inside its flag-check (still holding the lock, will
+        // re-check after this store) or parked in `cv.wait` (released the
+        // lock, will see the notify below). Without the lock the store
+        // could land between a worker's check and its wait — a lost
+        // wakeup, now that idle workers block indefinitely.
+        {
+            let _st = self.queue.state.lock().unwrap();
+            self.queue.shutdown.store(true, Ordering::Release);
+        }
         self.queue.cv.notify_all();
         for h in self.workers.drain(..) {
             let _ = h.join();
@@ -959,7 +1132,12 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        self.queue.shutdown.store(true, Ordering::Release);
+        // Same store-under-lock discipline as `shutdown` (lost-wakeup
+        // avoidance for indefinitely-blocked idle workers).
+        {
+            let _st = self.queue.state.lock().unwrap();
+            self.queue.shutdown.store(true, Ordering::Release);
+        }
         self.queue.cv.notify_all();
         for h in self.workers.drain(..) {
             let _ = h.join();
@@ -1434,5 +1612,227 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// Weighted slot selection with every slot saturated: served request
+    /// shares track the configured weights exactly (stride scheduling is
+    /// deterministic), batches stay homogeneous, and the FifoHead
+    /// baseline still serves the head's slot.
+    #[test]
+    fn weighted_selection_shares_track_weights() {
+        let weights: [u64; 3] = [1, 2, 4];
+        let mut st = QueueState::new();
+        for i in 0..2100u64 {
+            st.push(mk_request(i, (i % 3) as usize, None));
+        }
+        assert_eq!(st.select_slot(SchedPolicy::FifoHead), 0, "FIFO serves the head's slot");
+        let now = Instant::now();
+        let mut served = [0usize; 3];
+        let mut expired = Vec::new();
+        for round in 0..175 {
+            let slot = st.select_slot(SchedPolicy::Weighted);
+            let mut batch = Vec::new();
+            Coordinator::drain_slot(&mut st, slot, &mut batch, 4, now, &mut expired);
+            assert_eq!(batch.len(), 4, "round {round}: every slot stays saturated");
+            assert!(batch.iter().all(|r| r.slot == slot), "round {round}: homogeneous batch");
+            st.charge(slot, batch.len(), weights[slot]);
+            served[slot] += batch.len();
+        }
+        assert!(expired.is_empty());
+        // 700 requests served across 175 batches of 4; a 1:2:4 weight
+        // split is exact up to a batch granule or two.
+        assert_eq!(served.iter().sum::<usize>(), 700);
+        for (slot, want) in [(0usize, 100usize), (1, 200), (2, 400)] {
+            assert!(
+                served[slot].abs_diff(want) <= 8,
+                "slot {slot}: served {} want ~{want} (weights {weights:?})",
+                served[slot]
+            );
+        }
+        // Depth accounting tracks the drains exactly.
+        for s in 0..3 {
+            assert_eq!(st.slot_depth(s), 700 - served[s]);
+        }
+        // A slot turning backlogged after the scheduler has been running
+        // enters at the current virtual time — no credit banked while
+        // idle, so it cannot monopolize the next N batches.
+        assert!(st.vtime > 0);
+        st.push(mk_request(9_000, 3, None));
+        assert_eq!(st.pass[3], st.vtime, "idle->backlogged clamps pass to vtime");
+    }
+
+    /// Weighted selection under random churn: selection only ever returns
+    /// a backlogged slot, depth accounting stays exact through mixed
+    /// push/drain/expiry traffic, and no request is lost or duplicated.
+    #[test]
+    fn weighted_selection_property_exact_accounting_no_lost_requests() {
+        let mut rng = Xoshiro256::seed_from_u64(0x57EED);
+        let past = Instant::now() - Duration::from_millis(10);
+        let weights: [u64; 4] = [1, 3, 2, 5];
+        let mut st = QueueState::new();
+        let mut next_id = 0u64;
+        let mut served: Vec<u64> = Vec::new();
+        let mut dropped: Vec<u64> = Vec::new();
+        for round in 0..300 {
+            for _ in 0..rng.next_below(6) {
+                let slot = rng.next_below(4) as usize;
+                let deadline = if rng.next_below(5) == 0 { Some(past) } else { None };
+                st.push(mk_request(next_id, slot, deadline));
+                next_id += 1;
+            }
+            if st.deque.is_empty() {
+                continue;
+            }
+            let slot = st.select_slot(SchedPolicy::Weighted);
+            assert!(st.slot_depth(slot) > 0, "round {round}: selected an idle slot");
+            let max = rng.next_below(8) as usize + 1;
+            let mut batch = Vec::new();
+            let mut expired = Vec::new();
+            Coordinator::drain_slot(&mut st, slot, &mut batch, max, Instant::now(), &mut expired);
+            assert!(batch.iter().all(|r| r.slot == slot), "round {round}: homogeneous batch");
+            st.charge(slot, batch.len(), weights[slot]);
+            served.extend(batch.iter().map(|r| r.id));
+            dropped.extend(expired.iter().map(|r| r.id));
+            for s in 0..4 {
+                assert_eq!(
+                    st.slot_depth(s),
+                    st.deque.iter().filter(|r| r.slot == s).count(),
+                    "round {round}: depth accounting diverged for slot {s}"
+                );
+            }
+        }
+        let mut all: Vec<u64> = served
+            .iter()
+            .chain(dropped.iter())
+            .chain(st.deque.iter().map(|r| &r.id))
+            .copied()
+            .collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..next_id).collect::<Vec<_>>(), "request lost or duplicated");
+    }
+
+    /// A zero/elapsed budget is answered `DeadlineExceeded` at submit time
+    /// — the queue, its depth accounting, and the enqueued counter are
+    /// never touched.
+    #[test]
+    fn dead_on_arrival_budget_never_enqueues() {
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let g2 = gate.clone();
+        let coord = Coordinator::start(
+            CoordinatorConfig { max_batch: 1, batch_timeout: Duration::ZERO, ..Default::default() },
+            move || Box::new(GateBackend { gate: g2 }),
+        );
+        let client = coord.client();
+        let rx0 = park_worker(&coord, &client);
+        let (_, rx) = client
+            .submit_within(Tensor::from_vec(1, 1, 1, vec![0.5]), Duration::ZERO)
+            .unwrap();
+        let got = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(
+            matches!(got, Err(ServeError::DeadlineExceeded { waited_us: 0 })),
+            "expected immediate DeadlineExceeded, got {got:?}"
+        );
+        {
+            let st = coord.queue.state.lock().unwrap();
+            assert!(st.deque.is_empty(), "DOA request must never enter the queue");
+            assert_eq!(st.slot_depth(0), 0);
+        }
+        let snap = coord.metrics.snapshot();
+        assert_eq!(snap.deadline_drops, 1);
+        assert_eq!(snap.enqueued, 1, "only the parked warmup request was enqueued");
+        open_gate(&gate);
+        rx0.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
+        coord.shutdown();
+    }
+
+    /// Adaptive batch sizing, observable close reasons: max_batch-filling
+    /// drains close `Full`; a drain that empties the queue skips the
+    /// top-up window (`Shallow`) — proven by an hour-long `batch_timeout`
+    /// that the request does not wait for.
+    #[test]
+    fn adaptive_close_full_and_shallow_are_recorded() {
+        let coord = Coordinator::start(
+            CoordinatorConfig { max_batch: 1, ..Default::default() },
+            || Box::new(FakeBackend),
+        );
+        let client = coord.client();
+        for _ in 0..3 {
+            client.infer_blocking(Tensor::from_vec(1, 1, 1, vec![0.1])).unwrap();
+        }
+        let snap = coord.metrics.snapshot();
+        assert_eq!(snap.batch_close_full, 3, "max_batch 1: every drain fills the batch");
+        assert_eq!(snap.batch_close_timeout, 0);
+        coord.shutdown();
+
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                max_batch: 8,
+                batch_timeout: Duration::from_secs(3600),
+                ..Default::default()
+            },
+            || Box::new(FakeBackend),
+        );
+        let client = coord.client();
+        let t0 = Instant::now();
+        client.infer_blocking(Tensor::from_vec(1, 1, 1, vec![0.1])).unwrap();
+        assert!(
+            t0.elapsed() < Duration::from_secs(60),
+            "a shallow queue must skip the top-up window"
+        );
+        let snap = coord.metrics.snapshot();
+        assert_eq!(snap.batch_close_shallow, 1);
+        assert!(snap.max_queue_wait_us as f64 >= snap.p95_queue_wait_us);
+        coord.shutdown();
+    }
+
+    /// Deadline-aware window shrinking: with another model's request
+    /// keeping the queue non-shallow, a batched request whose remaining
+    /// budget is tighter than the (hour-long) `batch_timeout` shrinks the
+    /// top-up window instead of blowing its SLO.
+    #[test]
+    fn adaptive_close_shrinks_window_for_tight_deadlines() {
+        use crate::deploy::{DeploymentSpec, SyntheticModel};
+        let registry = ModelRegistry::with_specs(&[
+            DeploymentSpec::synthetic("a", SyntheticModel::Lenet, 1)
+                .faults(FaultPlan { slow_every: Some(1), slow_us: 50_000, ..Default::default() }),
+            DeploymentSpec::synthetic("b", SyntheticModel::Lenet, 2),
+        ])
+        .unwrap();
+        let coord = Coordinator::start_registry(
+            CoordinatorConfig {
+                max_batch: 8,
+                batch_timeout: Duration::from_secs(3600),
+                workers: 1,
+                ..Default::default()
+            },
+            registry,
+        )
+        .unwrap();
+        let client = coord.client();
+        let image = || Tensor::from_vec(28, 28, 1, vec![0.1; 28 * 28]);
+        // Warmup: park the worker inside model a's injected 50ms slow
+        // batch, then land one tight-budget request per model while it is
+        // busy — both are queued when it next forms a batch.
+        let (_, rx_warm) = client.submit_to("a", image()).unwrap();
+        let t0 = Instant::now();
+        while !coord.queue.state.lock().unwrap().deque.is_empty() {
+            assert!(t0.elapsed() < Duration::from_secs(10), "worker never took the warmup");
+            std::thread::yield_now();
+        }
+        let budget = Duration::from_millis(800);
+        let (_, rx_b) = client.submit_to_within("b", image(), budget).unwrap();
+        let (_, rx_a) = client.submit_to_within("a", image(), budget).unwrap();
+        rx_warm.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
+        // Model b's batch forms against a queue still holding model a's
+        // request (not shallow) and a ~800ms budget against a 3600s
+        // window → Deadline close, window shrunk to half the remaining
+        // budget. Both requests complete well inside their budgets.
+        rx_b.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
+        rx_a.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
+        let snap = coord.metrics.snapshot();
+        assert_eq!(snap.batch_close_deadline, 1, "b's batch must close on the deadline rule");
+        assert_eq!(snap.deadline_drops, 0, "nothing may expire: the window left compute room");
+        assert_eq!(snap.completed, 3);
+        coord.shutdown();
     }
 }

@@ -30,6 +30,9 @@ struct Entry {
     /// fair share of the coordinator's bounded queue). Follows the
     /// deployment across swaps.
     quota: AtomicUsize,
+    /// Weighted-scheduling share (≥ 1). Like `quota`, re-derived from the
+    /// deployment on every swap; workers re-read it per batch cycle.
+    weight: AtomicUsize,
 }
 
 /// Named deployments served concurrently from one coordinator queue.
@@ -58,11 +61,13 @@ impl ModelRegistry {
             bail!("model '{}' is already registered", dep.name);
         }
         let quota = AtomicUsize::new(dep.queue_quota.unwrap_or(0));
+        let weight = AtomicUsize::new(dep.weight.max(1));
         entries.push(Entry {
             name: dep.name.clone(),
             current: RwLock::new(dep),
             generation: AtomicU64::new(1),
             quota,
+            weight,
         });
         Ok(entries.len() - 1)
     }
@@ -95,6 +100,7 @@ impl ModelRegistry {
             .find(|e| e.name == name)
             .with_context(|| format!("swap: model '{name}' is not registered"))?;
         entry.quota.store(dep.queue_quota.unwrap_or(0), Ordering::Release);
+        entry.weight.store(dep.weight.max(1), Ordering::Release);
         *entry.current.write().unwrap() = dep;
         entry.generation.fetch_add(1, Ordering::Release);
         Ok(())
@@ -113,6 +119,17 @@ impl ModelRegistry {
         } else {
             (max_queue / entries.len().max(1)).max(1)
         }
+    }
+
+    /// Copy the per-slot scheduling weights into `buf` (slot order,
+    /// cleared first). Workers refresh this once per batch cycle *before*
+    /// taking the queue lock — the registry read lock is never nested
+    /// inside it — and reuse the buffer, keeping the hot path
+    /// allocation-free once `buf` has grown to the registry size.
+    pub fn copy_weights_into(&self, buf: &mut Vec<u64>) {
+        let entries = self.entries.read().unwrap();
+        buf.clear();
+        buf.extend(entries.iter().map(|e| e.weight.load(Ordering::Acquire) as u64));
     }
 
     /// The name registered at `slot`, if any.
@@ -236,5 +253,36 @@ mod tests {
         reg.swap("b", &DeploymentSpec::synthetic("b", SyntheticModel::MobilenetMini, 2))
             .unwrap();
         assert_eq!(reg.admission_quota(1, 100), 50, "swap without a quota → fair share");
+    }
+
+    #[test]
+    fn scheduling_weights_default_follow_swaps_and_reuse_buffer() {
+        let reg = ModelRegistry::new();
+        reg.register(&DeploymentSpec::synthetic("a", SyntheticModel::Lenet, 1)).unwrap();
+        reg.register(
+            &DeploymentSpec::synthetic("b", SyntheticModel::MobilenetMini, 2).weight(4),
+        )
+        .unwrap();
+        let mut buf = Vec::new();
+        reg.copy_weights_into(&mut buf);
+        assert_eq!(buf, vec![1, 4], "default weight 1; explicit weight carried");
+        // Weight 0 is a spec-validation error, not a silent starve.
+        let err = DeploymentSpec::synthetic("z", SyntheticModel::Lenet, 1)
+            .weight(0)
+            .build()
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("weight"), "{err:#}");
+        // Like quota, the weight is re-derived from the swapped-in spec.
+        reg.swap("b", &DeploymentSpec::synthetic("b", SyntheticModel::MobilenetMini, 2))
+            .unwrap();
+        reg.copy_weights_into(&mut buf);
+        assert_eq!(buf, vec![1, 1], "swap without a weight → default 1");
+        reg.swap(
+            "a",
+            &DeploymentSpec::synthetic("a", SyntheticModel::Lenet, 1).weight(7),
+        )
+        .unwrap();
+        reg.copy_weights_into(&mut buf);
+        assert_eq!(buf, vec![7, 1]);
     }
 }

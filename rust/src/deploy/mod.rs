@@ -110,6 +110,7 @@ pub struct DeploymentSpec {
     adc: AdcConfig,
     fabric_seed: u64,
     queue_quota: Option<usize>,
+    weight: usize,
     faults: Option<FaultPlan>,
 }
 
@@ -126,6 +127,7 @@ impl DeploymentSpec {
             adc: AdcConfig { bits: 0, full_scale: 1.0 },
             fabric_seed: 0,
             queue_quota: None,
+            weight: 1,
             faults: None,
         }
     }
@@ -193,6 +195,16 @@ impl DeploymentSpec {
         self
     }
 
+    /// Scheduling weight for the coordinator's weighted slot selection:
+    /// under contention this deployment receives batches in proportion to
+    /// its weight relative to the other deployments' (default 1 —
+    /// equal-share round-robin). Must be ≥ 1; re-derived on
+    /// [`crate::coordinator::ModelRegistry::swap`] like `queue_quota`.
+    pub fn weight(mut self, weight: usize) -> Self {
+        self.weight = weight;
+        self
+    }
+
     /// Attach a deterministic fault-injection plan (**tests only**): the
     /// serving workers consult it per batch to inject panics, deaths,
     /// latency, and NaN outputs. See [`crate::coordinator::FaultPlan`].
@@ -251,6 +263,15 @@ impl DeploymentSpec {
             self.name,
             self.imac.bridge_full_scale
         );
+        // Weight 0 would starve the deployment outright — the scheduler's
+        // stride arithmetic divides by it, and "never schedule" should be
+        // expressed by not registering the model, not by a silent hang.
+        ensure!(
+            self.weight >= 1,
+            "deployment '{}': scheduling weight must be >= 1 (got {})",
+            self.name,
+            self.weight
+        );
         // A calibration source on a non-int8 spec is a configuration
         // error: silently dropping it would leave the operator believing
         // static scales are active. (The single-model CLI never attaches
@@ -292,6 +313,7 @@ impl DeploymentSpec {
             calibration: calib,
             model: Arc::new(model),
             queue_quota: self.queue_quota,
+            weight: self.weight,
             faults,
         })
     }
@@ -310,6 +332,8 @@ pub struct Deployment {
     pub model: Arc<DeployedModel>,
     /// Admission-control queue-depth quota (`None` = fair share).
     pub queue_quota: Option<usize>,
+    /// Weighted-scheduling share (≥ 1; default 1 = equal round-robin).
+    pub weight: usize,
     /// Live fault-injection state (tests only; `None` in production — the
     /// fault-free hot path never consults it). Shared by every worker so
     /// the batch schedule is global to the deployment.

@@ -325,6 +325,9 @@ fn spec_from_config_entry(entry: &ServeDeployment, artifacts: &str) -> Result<De
     if let Some(quota) = entry.queue_quota {
         spec = spec.queue_quota(quota);
     }
+    if let Some(weight) = entry.weight {
+        spec = spec.weight(weight);
+    }
     if let Some(plan) = &entry.faults {
         eprintln!(
             "serve.deployments '{}': fault injection enabled ({plan:?}) — chaos drill mode",
@@ -561,6 +564,15 @@ fn print_serve_summary(snap: &Snapshot, wall: std::time::Duration) {
         snap.imac_us_total as f64 / 1e3,
         snap.queue_us_total as f64 / 1e3
     );
+    println!(
+        "scheduling: batch closes full {} / shallow {} / deadline {} / timeout {} | queue wait p95 {:.2} ms max {:.2} ms",
+        snap.batch_close_full,
+        snap.batch_close_shallow,
+        snap.batch_close_deadline,
+        snap.batch_close_timeout,
+        snap.p95_queue_wait_us / 1e3,
+        snap.max_queue_wait_us as f64 / 1e3
+    );
     let disturbances = snap.shed
         + snap.deadline_drops
         + snap.faulted
@@ -587,12 +599,13 @@ fn print_serve_summary(snap: &Snapshot, wall: std::time::Duration) {
             String::new()
         };
         println!(
-            "  model {:<14} {:>6} completed | mean {:.2} ms  p50 {:.2} ms  p95 {:.2} ms{stress}",
+            "  model {:<14} {:>6} completed | mean {:.2} ms  p50 {:.2} ms  p95 {:.2} ms | wait p95 {:.2} ms{stress}",
             m.name,
             m.completed,
             m.mean_latency_us / 1e3,
             m.p50_latency_us / 1e3,
-            m.p95_latency_us / 1e3
+            m.p95_latency_us / 1e3,
+            m.p95_queue_wait_us / 1e3
         );
     }
     if snap.gemm_images > 0 {

@@ -1,11 +1,154 @@
 //! Serving metrics: counters and latency histograms, lock-cheap and
 //! thread-shared.
+//!
+//! Latency and queue-wait distributions are kept in [`LatencyHistogram`]s
+//! — fixed-footprint, lock-free log-bucketed histograms — so a
+//! million-request soak records in O(1) memory and `snapshot()` computes
+//! percentiles in O(buckets), never sorting the full sample history.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::{Arc, RwLock};
 use std::time::Duration;
 
-use crate::util::stats::percentile_sorted;
+/// Linear sub-buckets per power-of-two octave (`2^SUB_BITS`).
+const SUB_BITS: usize = 4;
+const SUBS: usize = 1 << SUB_BITS;
+
+/// Why batch formation stopped growing a batch (adaptive batch sizing).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BatchClose {
+    /// The batch reached `max_batch` — throughput mode under pressure.
+    Full,
+    /// Nothing else was queued after the initial drain: arrivals are
+    /// sparse, so the top-up window was skipped for latency.
+    Shallow,
+    /// A batched request's remaining deadline budget was tighter than the
+    /// `batch_timeout` top-up window, which was shrunk (possibly to zero)
+    /// so filling the batch cannot blow the SLO.
+    Deadline,
+    /// The full `batch_timeout` top-up window elapsed without filling.
+    Timeout,
+}
+
+/// Bounded-memory latency histogram: per power-of-two octave, [`SUBS`]
+/// linear sub-buckets (HdrHistogram-style). Values below [`SUBS`] µs are
+/// recorded exactly; above that the relative quantization error is at most
+/// `2^-(SUB_BITS+1)` (≈3.2%) of the value. Recording is a handful of
+/// relaxed atomic ops — no lock, no allocation — and the footprint is
+/// fixed at construction regardless of how many samples land.
+pub struct LatencyHistogram {
+    buckets: Box<[AtomicU64]>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl LatencyHistogram {
+    /// Total bucket count: [`SUBS`] exact small-value buckets plus
+    /// `(64 - SUB_BITS) * SUBS` octave sub-buckets covering all of `u64`.
+    pub const BUCKETS: usize = SUBS + (64 - SUB_BITS) * SUBS;
+
+    pub fn new() -> Self {
+        Self {
+            buckets: (0..Self::BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// The fixed per-histogram footprint (the soak asserts this never
+    /// grows with the sample count).
+    pub const fn footprint_bytes() -> usize {
+        (Self::BUCKETS + 3) * std::mem::size_of::<AtomicU64>()
+    }
+
+    fn bucket_index(us: u64) -> usize {
+        if us < SUBS as u64 {
+            us as usize
+        } else {
+            let msb = 63 - us.leading_zeros() as usize;
+            let offset = ((us >> (msb - SUB_BITS)) & (SUBS as u64 - 1)) as usize;
+            SUBS + (msb - SUB_BITS) * SUBS + offset
+        }
+    }
+
+    /// Representative (midpoint) value of a bucket, in µs.
+    fn bucket_value(idx: usize) -> f64 {
+        if idx < SUBS {
+            idx as f64
+        } else {
+            let octave = (idx - SUBS) / SUBS;
+            let offset = (idx - SUBS) % SUBS;
+            let low = ((SUBS + offset) as u64) << octave;
+            let half_width = (1u64 << octave) / 2;
+            (low + half_width) as f64
+        }
+    }
+
+    /// Record one sample (µs).
+    pub fn record(&self, us: u64) {
+        self.buckets[Self::bucket_index(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(us, Ordering::Relaxed);
+        self.max.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Largest recorded sample (µs) — exact, not bucketed.
+    pub fn max_us(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    /// Mean of all samples (µs) — exact (the sum is tracked directly).
+    pub fn mean(&self) -> f64 {
+        let count = self.count.load(Ordering::Relaxed);
+        if count == 0 {
+            0.0
+        } else {
+            self.sum.load(Ordering::Relaxed) as f64 / count as f64
+        }
+    }
+
+    /// Nearest-rank percentile over the bucketed samples: the same rank
+    /// rule as [`crate::util::stats::percentile_sorted`] applied to the
+    /// histogram, answering with the matched bucket's midpoint — within
+    /// the documented ≤3.2% relative error of the exact sample.
+    pub fn percentile(&self, p: f64) -> f64 {
+        let count = self.count.load(Ordering::Relaxed);
+        if count == 0 {
+            return 0.0;
+        }
+        let rank = ((p / 100.0 * count as f64).ceil() as u64).clamp(1, count);
+        let mut cum = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            cum += b.load(Ordering::Relaxed);
+            if cum >= rank {
+                return Self::bucket_value(i);
+            }
+        }
+        self.max.load(Ordering::Relaxed) as f64
+    }
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl std::fmt::Debug for LatencyHistogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("LatencyHistogram")
+            .field("count", &self.count())
+            .field("mean_us", &self.mean())
+            .field("max_us", &self.max_us())
+            .finish()
+    }
+}
 
 /// Per-deployment serving counters (one per registry slot when the
 /// coordinator serves a [`crate::coordinator::ModelRegistry`]).
@@ -20,7 +163,12 @@ pub struct ModelMetrics {
     pub deadline_drops: AtomicU64,
     /// Requests answered with `WorkerFault`/`NumericFault`.
     pub faults: AtomicU64,
-    latencies_us: Mutex<Vec<u64>>,
+    /// End-to-end latency distribution (µs), bounded memory.
+    latency_us: LatencyHistogram,
+    /// Queue-wait distribution (µs): submit → batch execution start. The
+    /// scheduler's fairness is judged on this — a starved tenant shows up
+    /// as a blown queue-wait tail even when its compute is cheap.
+    queue_wait_us: LatencyHistogram,
 }
 
 /// Read-only per-deployment snapshot.
@@ -34,6 +182,11 @@ pub struct ModelSnapshot {
     pub mean_latency_us: f64,
     pub p50_latency_us: f64,
     pub p95_latency_us: f64,
+    /// p95 of the submit→execution queue wait (µs) — the tenant-fairness
+    /// number the weighted scheduler bounds.
+    pub p95_queue_wait_us: f64,
+    /// Worst observed queue wait (µs), exact.
+    pub max_queue_wait_us: u64,
 }
 
 /// Shared serving metrics (one instance per coordinator).
@@ -46,7 +199,8 @@ pub struct Metrics {
     /// (`ServeError::ShedLoad`) — disjoint from `requests_rejected`,
     /// which counts a full queue.
     pub requests_shed: AtomicU64,
-    /// Requests answered `DeadlineExceeded` instead of computed.
+    /// Requests answered `DeadlineExceeded` instead of computed (both
+    /// dead-on-arrival submits and in-queue expiries).
     pub deadline_drops: AtomicU64,
     /// Requests answered with a `WorkerFault`/`NumericFault` (or drained
     /// unservable at shutdown).
@@ -62,9 +216,19 @@ pub struct Metrics {
     pub batches_executed: AtomicU64,
     pub batch_slots_used: AtomicU64,
     pub batch_slots_padded: AtomicU64,
-    /// End-to-end latencies (µs). Mutex-guarded; appenders batch at batch
-    /// granularity so contention is negligible.
-    latencies_us: Mutex<Vec<u64>>,
+    /// Batches closed at `max_batch` (throughput mode under pressure).
+    pub batch_close_full: AtomicU64,
+    /// Batches closed early because the queue was shallow (latency mode).
+    pub batch_close_shallow: AtomicU64,
+    /// Batches whose top-up window was shrunk/skipped by a member's
+    /// remaining deadline budget.
+    pub batch_close_deadline: AtomicU64,
+    /// Batches that held the full `batch_timeout` top-up window open.
+    pub batch_close_timeout: AtomicU64,
+    /// End-to-end latency distribution (µs), bounded memory.
+    latency_us: LatencyHistogram,
+    /// Queue-wait distribution (µs) across all deployments.
+    queue_wait_us: LatencyHistogram,
     /// Per-stage time (µs) totals.
     pub conv_us_total: AtomicU64,
     pub imac_us_total: AtomicU64,
@@ -117,10 +281,19 @@ pub struct Snapshot {
     pub slow_batches: u64,
     pub batches: u64,
     pub mean_batch_fill: f64,
+    /// Adaptive batch-sizing close reasons (see [`BatchClose`]).
+    pub batch_close_full: u64,
+    pub batch_close_shallow: u64,
+    pub batch_close_deadline: u64,
+    pub batch_close_timeout: u64,
     pub p50_latency_us: f64,
     pub p95_latency_us: f64,
     pub p99_latency_us: f64,
     pub mean_latency_us: f64,
+    /// p95 of the submit→execution queue wait (µs) across all tenants.
+    pub p95_queue_wait_us: f64,
+    /// Worst observed queue wait (µs), exact.
+    pub max_queue_wait_us: u64,
     pub conv_us_total: u64,
     pub imac_us_total: u64,
     pub queue_us_total: u64,
@@ -148,8 +321,45 @@ impl Metrics {
     }
 
     pub fn record_latencies(&self, batch: &[Duration]) {
-        let mut g = self.latencies_us.lock().unwrap();
-        g.extend(batch.iter().map(|d| d.as_micros() as u64));
+        for d in batch {
+            self.latency_us.record(d.as_micros() as u64);
+        }
+    }
+
+    /// Record one batch's queue waits (µs, measured at execution start):
+    /// the global histogram/total plus the per-slot breakdown (best-effort
+    /// — an unregistered slot records globally only, as in single-backend
+    /// mode).
+    pub fn record_queue_waits(&self, slot: usize, waits_us: impl Iterator<Item = u64>) {
+        let model = self.model_at(slot);
+        let mut total = 0u64;
+        for us in waits_us {
+            total += us;
+            self.queue_wait_us.record(us);
+            if let Some(m) = &model {
+                m.queue_wait_us.record(us);
+            }
+        }
+        self.queue_us_total.fetch_add(total, Ordering::Relaxed);
+    }
+
+    /// Count one formed batch's close reason (adaptive batch sizing).
+    pub fn record_batch_close(&self, close: BatchClose) {
+        let counter = match close {
+            BatchClose::Full => &self.batch_close_full,
+            BatchClose::Shallow => &self.batch_close_shallow,
+            BatchClose::Deadline => &self.batch_close_deadline,
+            BatchClose::Timeout => &self.batch_close_timeout,
+        };
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The fixed histogram footprint in bytes (global latency + queue-wait
+    /// pair plus one pair per registered model). Constant no matter how
+    /// many samples were recorded — the soak test asserts exactly this.
+    pub fn histogram_footprint_bytes(&self) -> usize {
+        let models = self.models.read().unwrap().len();
+        (2 + 2 * models) * LatencyHistogram::footprint_bytes()
     }
 
     /// Register a deployment slot for per-model accounting (idempotent;
@@ -185,8 +395,9 @@ impl Metrics {
             }
         };
         entry.completed.fetch_add(ok, Ordering::Relaxed);
-        let mut g = entry.latencies_us.lock().unwrap();
-        g.extend(lats.iter().map(|d| d.as_micros() as u64));
+        for d in lats {
+            entry.latency_us.record(d.as_micros() as u64);
+        }
     }
 
     /// The registered slot entry, if any. Per-model resilience counters
@@ -218,14 +429,6 @@ impl Metrics {
     }
 
     pub fn snapshot(&self) -> Snapshot {
-        let mut lat: Vec<f64> = self
-            .latencies_us
-            .lock()
-            .unwrap()
-            .iter()
-            .map(|&v| v as f64)
-            .collect();
-        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let batches = self.batches_executed.load(Ordering::Relaxed);
         let used = self.batch_slots_used.load(Ordering::Relaxed);
         let padded = self.batch_slots_padded.load(Ordering::Relaxed);
@@ -234,24 +437,17 @@ impl Metrics {
             .read()
             .unwrap()
             .iter()
-            .map(|m| {
-                let mut ml: Vec<f64> =
-                    m.latencies_us.lock().unwrap().iter().map(|&v| v as f64).collect();
-                ml.sort_by(|a, b| a.partial_cmp(b).unwrap());
-                ModelSnapshot {
-                    name: m.name.clone(),
-                    completed: m.completed.load(Ordering::Relaxed),
-                    shed: m.shed.load(Ordering::Relaxed),
-                    deadline_drops: m.deadline_drops.load(Ordering::Relaxed),
-                    faults: m.faults.load(Ordering::Relaxed),
-                    mean_latency_us: if ml.is_empty() {
-                        0.0
-                    } else {
-                        ml.iter().sum::<f64>() / ml.len() as f64
-                    },
-                    p50_latency_us: if ml.is_empty() { 0.0 } else { percentile_sorted(&ml, 50.0) },
-                    p95_latency_us: if ml.is_empty() { 0.0 } else { percentile_sorted(&ml, 95.0) },
-                }
+            .map(|m| ModelSnapshot {
+                name: m.name.clone(),
+                completed: m.completed.load(Ordering::Relaxed),
+                shed: m.shed.load(Ordering::Relaxed),
+                deadline_drops: m.deadline_drops.load(Ordering::Relaxed),
+                faults: m.faults.load(Ordering::Relaxed),
+                mean_latency_us: m.latency_us.mean(),
+                p50_latency_us: m.latency_us.percentile(50.0),
+                p95_latency_us: m.latency_us.percentile(95.0),
+                p95_queue_wait_us: m.queue_wait_us.percentile(95.0),
+                max_queue_wait_us: m.queue_wait_us.max_us(),
             })
             .collect();
         Snapshot {
@@ -271,14 +467,16 @@ impl Metrics {
             } else {
                 used as f64 / (used + padded) as f64
             },
-            p50_latency_us: if lat.is_empty() { 0.0 } else { percentile_sorted(&lat, 50.0) },
-            p95_latency_us: if lat.is_empty() { 0.0 } else { percentile_sorted(&lat, 95.0) },
-            p99_latency_us: if lat.is_empty() { 0.0 } else { percentile_sorted(&lat, 99.0) },
-            mean_latency_us: if lat.is_empty() {
-                0.0
-            } else {
-                lat.iter().sum::<f64>() / lat.len() as f64
-            },
+            batch_close_full: self.batch_close_full.load(Ordering::Relaxed),
+            batch_close_shallow: self.batch_close_shallow.load(Ordering::Relaxed),
+            batch_close_deadline: self.batch_close_deadline.load(Ordering::Relaxed),
+            batch_close_timeout: self.batch_close_timeout.load(Ordering::Relaxed),
+            p50_latency_us: self.latency_us.percentile(50.0),
+            p95_latency_us: self.latency_us.percentile(95.0),
+            p99_latency_us: self.latency_us.percentile(99.0),
+            mean_latency_us: self.latency_us.mean(),
+            p95_queue_wait_us: self.queue_wait_us.percentile(95.0),
+            max_queue_wait_us: self.queue_wait_us.max_us(),
             conv_us_total: self.conv_us_total.load(Ordering::Relaxed),
             imac_us_total: self.imac_us_total.load(Ordering::Relaxed),
             queue_us_total: self.queue_us_total.load(Ordering::Relaxed),
@@ -300,6 +498,8 @@ impl Metrics {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Xoshiro256;
+    use crate::util::stats::percentile_sorted;
 
     #[test]
     fn snapshot_percentiles() {
@@ -312,11 +512,75 @@ mod tests {
         m.batch_slots_used.store(90, Ordering::Relaxed);
         m.batch_slots_padded.store(10, Ordering::Relaxed);
         let s = m.snapshot();
-        assert_eq!(s.p50_latency_us, 50.0);
-        assert_eq!(s.p95_latency_us, 95.0);
+        // Histogram percentiles answer within the documented ≤3.2%
+        // relative quantization error of the exact nearest-rank values
+        // (50 and 95 for this sample set).
+        assert!((s.p50_latency_us - 50.0).abs() <= 50.0 * 0.04, "p50 {}", s.p50_latency_us);
+        assert!((s.p95_latency_us - 95.0).abs() <= 95.0 * 0.04, "p95 {}", s.p95_latency_us);
+        assert!((s.mean_latency_us - 50.5).abs() < 1e-9, "mean is tracked exactly");
         assert_eq!(s.completed, 100);
         assert!((s.mean_batch_fill - 0.9).abs() < 1e-9);
         assert!(s.models.is_empty(), "no per-model slots unless registered");
+    }
+
+    /// Small values (< 16µs) are recorded exactly; larger values stay
+    /// within the documented relative error against the exact
+    /// `percentile_sorted` over the same samples, across magnitudes.
+    #[test]
+    fn histogram_matches_percentile_sorted_within_error() {
+        let h = LatencyHistogram::new();
+        for us in 0..16u64 {
+            h.record(us);
+            assert_eq!(LatencyHistogram::bucket_value(LatencyHistogram::bucket_index(us)), us as f64);
+        }
+        let h = LatencyHistogram::new();
+        let mut rng = Xoshiro256::seed_from_u64(0xFA1);
+        let mut exact: Vec<f64> = Vec::new();
+        for _ in 0..20_000 {
+            // Log-uniform-ish spread from 1µs to ~10s.
+            let magnitude = 1u64 << rng.next_below(24);
+            let us = 1 + rng.next_below(magnitude.max(2));
+            h.record(us);
+            exact.push(us as f64);
+        }
+        exact.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for p in [10.0, 50.0, 90.0, 95.0, 99.0, 99.9] {
+            let want = percentile_sorted(&exact, p);
+            let got = h.percentile(p);
+            assert!(
+                (got - want).abs() <= want * 0.033 + 0.5,
+                "p{p}: histogram {got} vs exact {want}"
+            );
+        }
+        assert_eq!(h.count(), 20_000);
+        assert_eq!(h.max_us() as f64, *exact.last().unwrap());
+    }
+
+    /// The histogram's memory is fixed at construction: a million records
+    /// later, the footprint reported (and the struct itself) is unchanged
+    /// — the bug this replaces grew a `Vec<u64>` forever.
+    #[test]
+    fn histogram_memory_is_bounded_across_a_soak() {
+        let m = Metrics::new();
+        m.register_model(0, "flood");
+        m.register_model(1, "cold");
+        let before = m.histogram_footprint_bytes();
+        let lat = [Duration::from_micros(1234); 64];
+        for i in 0..20_000u64 {
+            m.record_latencies(&lat);
+            m.record_model_batch((i % 2) as usize, "x", &lat, 64);
+            m.record_queue_waits((i % 2) as usize, lat.iter().map(|d| d.as_micros() as u64));
+        }
+        assert_eq!(m.snapshot().models[0].completed, 640_000);
+        assert_eq!(
+            m.histogram_footprint_bytes(),
+            before,
+            "histogram footprint must not grow with samples"
+        );
+        assert_eq!(before, 6 * LatencyHistogram::footprint_bytes());
+        // Snapshot percentiles stay O(buckets): all mass on one value.
+        let s = m.snapshot();
+        assert!((s.p99_latency_us - 1234.0).abs() <= 1234.0 * 0.033);
     }
 
     /// The snapshot surfaces the kernel-dispatch observability fields: the
@@ -353,6 +617,30 @@ mod tests {
         assert_eq!((s.models[1].name.as_str(), s.models[1].completed), ("mm", 1));
         assert!(s.models[0].p95_latency_us >= s.models[0].p50_latency_us);
         assert!((s.models[0].mean_latency_us - 15.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn queue_waits_and_batch_close_reasons_accumulate() {
+        let m = Metrics::new();
+        m.register_model(0, "lenet");
+        m.record_queue_waits(0, [100u64, 200, 300].into_iter());
+        // An unregistered slot still lands in the global histogram.
+        m.record_queue_waits(5, [5_000u64].into_iter());
+        m.record_batch_close(BatchClose::Full);
+        m.record_batch_close(BatchClose::Shallow);
+        m.record_batch_close(BatchClose::Shallow);
+        m.record_batch_close(BatchClose::Deadline);
+        m.record_batch_close(BatchClose::Timeout);
+        let s = m.snapshot();
+        assert_eq!(s.queue_us_total, 5_600);
+        assert_eq!(s.max_queue_wait_us, 5_000);
+        assert_eq!(s.models[0].max_queue_wait_us, 300);
+        assert!(s.models[0].p95_queue_wait_us >= 280.0);
+        assert!(s.p95_queue_wait_us >= s.models[0].p95_queue_wait_us);
+        assert_eq!(
+            (s.batch_close_full, s.batch_close_shallow, s.batch_close_deadline, s.batch_close_timeout),
+            (1, 2, 1, 1)
+        );
     }
 
     #[test]

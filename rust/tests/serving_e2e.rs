@@ -9,7 +9,7 @@ use std::time::Duration;
 
 use tpu_imac::coordinator::{
     Coordinator, CoordinatorConfig, FaultPlan, ModelRegistry, NativeBackend, PjrtConvBackend,
-    ServeError,
+    SchedPolicy, ServeError,
 };
 use tpu_imac::deploy::DeploymentSpec;
 use tpu_imac::nn::synthetic::{lenet_weights_doc, mobilenet_mini_weights_doc};
@@ -614,6 +614,106 @@ fn chaos_deadline_expiry_and_load_shed_are_typed() {
     let m = snap.models.iter().find(|m| m.name == "a").expect("per-model metrics for 'a'");
     assert_eq!((m.shed, m.deadline_drops), (1, 1));
     coord.shutdown();
+}
+
+/// The SLO-scheduling regression anchor: a flooding tenant keeps its own
+/// queue pinned at quota while a cold tenant submits sporadic blocking
+/// requests. Under [`SchedPolicy::Weighted`] the cold tenant's p95 queue
+/// wait must stay bounded (it re-enters at the current virtual time and
+/// wins the next batch slot); under the old head-of-queue FIFO drain the
+/// same workload demonstrably starves it — every cold request waits for
+/// the flooder's entire backlog. Deterministic fault injection (a fixed
+/// per-batch slow sleep) keeps the queue observably backed up on any
+/// machine; the assertion is relative (FIFO ≥ 2× weighted) plus a generous
+/// absolute bound, so it is robust to debug-vs-release compute speed.
+#[test]
+fn weighted_scheduling_bounds_cold_tenant_queue_wait() {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    /// Runs the flood-vs-cold workload under `policy` and returns the cold
+    /// deployment's p95 queue wait in microseconds.
+    fn cold_p95_queue_wait_us(policy: SchedPolicy) -> f64 {
+        let mut rng = Xoshiro256::seed_from_u64(0x5C0);
+        let doc = lenet_weights_doc(&mut rng);
+        // Every batch sleeps ~5ms inside the worker, so service is slow
+        // relative to submission no matter how fast the machine is.
+        let slow = |seed| FaultPlan {
+            seed,
+            slow_every: Some(1),
+            slow_us: 5_000,
+            ..Default::default()
+        };
+        let registry = ModelRegistry::with_specs(&[
+            DeploymentSpec::doc("flood", doc.clone()).queue_quota(48).faults(slow(3)),
+            DeploymentSpec::doc("cold", doc).queue_quota(8).faults(slow(4)),
+        ])
+        .unwrap();
+        let coord = Coordinator::start_registry(
+            CoordinatorConfig {
+                max_batch: 8,
+                workers: 1,
+                batch_timeout: Duration::ZERO,
+                scheduling: policy,
+                ..Default::default()
+            },
+            registry,
+        )
+        .unwrap();
+
+        // Flooding tenant: fire-and-forget submits (receivers dropped — the
+        // exactly-one-reply contract tolerates unclaimed replies), retrying
+        // whenever admission control sheds it at quota.
+        let stop = Arc::new(AtomicBool::new(false));
+        let flooder = {
+            let client = coord.client();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let img = Tensor::from_vec(28, 28, 1, vec![0.2; 784]);
+                while !stop.load(Ordering::Relaxed) {
+                    if client.submit_to("flood", img.clone()).is_err() {
+                        std::thread::sleep(Duration::from_micros(200));
+                    }
+                }
+            })
+        };
+
+        // Let the flood back up to quota, then run sporadic blocking cold
+        // traffic — one request at a time, like a latency-sensitive tenant.
+        std::thread::sleep(Duration::from_millis(50));
+        let client = coord.client();
+        for _ in 0..20 {
+            let img = Tensor::from_vec(28, 28, 1, vec![0.4; 784]);
+            client.infer_blocking_to("cold", img).unwrap();
+        }
+
+        let snap = coord.metrics.snapshot();
+        let cold = snap.models.iter().find(|m| m.name == "cold").unwrap();
+        assert_eq!(cold.completed, 20, "every cold request must complete");
+        let p95 = cold.p95_queue_wait_us;
+        stop.store(true, Ordering::Relaxed);
+        flooder.join().unwrap();
+        coord.shutdown();
+        p95
+    }
+
+    let weighted = cold_p95_queue_wait_us(SchedPolicy::Weighted);
+    let fifo = cold_p95_queue_wait_us(SchedPolicy::FifoHead);
+    // The FIFO baseline must actually starve: 6 flood batches of injected
+    // 5ms sleeps alone put the cold wait past 20ms.
+    assert!(
+        fifo > 20_000.0,
+        "FIFO baseline never backed up (cold p95 queue wait {fifo:.0}us) — \
+         the flooder is not saturating the queue"
+    );
+    assert!(
+        fifo >= 2.0 * weighted,
+        "weighted scheduling must beat head-of-queue FIFO by 2x on cold-tenant \
+         p95 queue wait; got weighted {weighted:.0}us vs fifo {fifo:.0}us"
+    );
+    assert!(
+        weighted < 1_500_000.0,
+        "cold tenant p95 queue wait unbounded under weighted scheduling: {weighted:.0}us"
+    );
 }
 
 #[test]
