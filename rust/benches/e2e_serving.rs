@@ -31,6 +31,7 @@ use tpu_imac::coordinator::{
 };
 use tpu_imac::deploy::{Deployment, DeploymentSpec, SyntheticModel};
 use tpu_imac::nn::{PrecisionPolicy, Tensor};
+use tpu_imac::serve_http::{HttpConfig, HttpServer};
 use tpu_imac::util::bench::{json_path_from_args, write_json, BenchResult, BenchSuite};
 use tpu_imac::util::rng::Xoshiro256;
 
@@ -55,6 +56,42 @@ fn lenet_deployment() -> Deployment {
 
 fn rand_image(rng: &mut Xoshiro256) -> Tensor {
     Tensor::from_vec(28, 28, 1, (0..784).map(|_| rng.next_f32()).collect())
+}
+
+/// Read one `Content-Length`-framed HTTP response and return its
+/// `"predicted"` field (panics on any non-200 — the bench is fault-free).
+fn read_predicted(stream: &mut std::net::TcpStream) -> u64 {
+    use std::io::Read;
+    let mut buf = Vec::with_capacity(1024);
+    let head_end = loop {
+        if let Some(i) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+            break i + 4;
+        }
+        let mut chunk = [0u8; 1024];
+        let n = stream.read(&mut chunk).expect("read http response");
+        assert!(n > 0, "server closed mid-response");
+        buf.extend_from_slice(&chunk[..n]);
+    };
+    let head = std::str::from_utf8(&buf[..head_end]).expect("ascii head");
+    assert!(head.starts_with("HTTP/1.1 200"), "bench request failed: {head}");
+    let content_length: usize = head
+        .lines()
+        .find_map(|l| l.strip_prefix("Content-Length: "))
+        .and_then(|v| v.parse().ok())
+        .expect("content-length");
+    while buf.len() < head_end + content_length {
+        let mut chunk = [0u8; 1024];
+        let n = stream.read(&mut chunk).expect("read http body");
+        assert!(n > 0, "server closed mid-body");
+        buf.extend_from_slice(&chunk[..n]);
+    }
+    let body = std::str::from_utf8(&buf[head_end..head_end + content_length]).expect("utf8 body");
+    let tail = body.split("\"predicted\":").nth(1).expect("predicted field");
+    tail.chars()
+        .take_while(char::is_ascii_digit)
+        .collect::<String>()
+        .parse()
+        .expect("predicted digits")
 }
 
 fn main() {
@@ -182,6 +219,81 @@ fn main() {
             },
         );
     }
+    {
+        // HTTP front-end overhead: the same single-model wave, but over
+        // the wire — 8 warmed persistent connections (so batch formation
+        // matches the in-process concurrency), full request-format →
+        // scan → submit → response-format round trip per request. The
+        // delta vs "registry single-model (batch 8)" is the whole wire
+        // layer: framing, JSON scan, TCP. New row; frozen rows untouched.
+        let registry = Arc::new(ModelRegistry::new());
+        registry.register_built(lenet.clone()).expect("http registry");
+        let coord = Coordinator::start_registry(
+            CoordinatorConfig { max_batch: 8, ..Default::default() },
+            Arc::clone(&registry),
+        )
+        .expect("start http-bench registry");
+        let server = HttpServer::start(
+            HttpConfig { addr: "127.0.0.1:0".to_string(), ..Default::default() },
+            coord.client(),
+            registry,
+            Arc::clone(&coord.metrics),
+        )
+        .expect("start http-bench server");
+        let addr = server.addr();
+        let conns = 8usize;
+        let mut rng = Xoshiro256::seed_from_u64(11);
+        // Pre-format distinct request buffers (cycled), outside timing.
+        let requests: Vec<Vec<u8>> = (0..4)
+            .map(|_| {
+                let img = rand_image(&mut rng);
+                let mut body = String::from("{\"model\":\"lenet\",\"image\":[");
+                for (i, v) in img.data.iter().enumerate() {
+                    if i > 0 {
+                        body.push(',');
+                    }
+                    body.push_str(&format!("{v}"));
+                }
+                body.push_str("],\"timeout_ms\":30000}");
+                format!(
+                    "POST /v1/infer HTTP/1.1\r\nHost: bench\r\nContent-Length: {}\r\n\r\n{body}",
+                    body.len()
+                )
+                .into_bytes()
+            })
+            .collect();
+        let mut streams: Vec<std::net::TcpStream> = (0..conns)
+            .map(|_| std::net::TcpStream::connect(addr).expect("connect http bench"))
+            .collect();
+        let per_conn = wave / conns;
+        suite.bench_throughput(
+            "http infer round-trip (batch 8, persistent conn)",
+            wave as f64,
+            move || {
+                let _keepalive = (&coord, &server);
+                let requests = &requests;
+                std::thread::scope(|s| {
+                    let handles: Vec<_> = streams
+                        .iter_mut()
+                        .enumerate()
+                        .map(|(t, stream)| {
+                            s.spawn(move || {
+                                let mut sum = 0u64;
+                                for i in 0..per_conn {
+                                    let req = &requests[(t + i) % requests.len()];
+                                    std::io::Write::write_all(stream, req)
+                                        .expect("write http request");
+                                    sum += read_predicted(stream);
+                                }
+                                sum
+                            })
+                        })
+                        .collect();
+                    handles.into_iter().map(|h| h.join().expect("http bench conn")).sum()
+                })
+            },
+        );
+    }
     let results = suite.run_cli();
     let mean = |name: &str| {
         results
@@ -193,6 +305,7 @@ fn main() {
     let single = mean("registry single-model (batch 8)");
     let multi = mean("registry multi-model mixed (2 deployments, batch 8)");
     let guarded = mean("registry single-model guarded (deadline budget, batch 8)");
+    let http = mean("http infer round-trip (batch 8, persistent conn)");
     println!(
         "registry routing: single {:.2} ms/wave vs mixed 2-model {:.2} ms/wave ({:.2}x)",
         single / 1e6,
@@ -204,6 +317,12 @@ fn main() {
         guarded / 1e6,
         single / 1e6,
         (guarded / single - 1.0) * 100.0
+    );
+    println!(
+        "http wire overhead: {:.2} ms/wave over 8 persistent conns vs in-process {:.2} ms/wave ({:.2}x)",
+        http / 1e6,
+        single / 1e6,
+        http / single
     );
 
     run_soak();

@@ -11,6 +11,8 @@
 //!   "serve":  {"max_batch": 8, "max_queue": 1024, "batch_timeout_us": 2000,
 //!              "workers": 1, "precision": "fp32",
 //!              "calibration": "artifacts/calibration.json",
+//!              "http": {"addr": "127.0.0.1:8080", "default_timeout_ms": 1000,
+//!                       "max_body_kb": 1024},
 //!              "deployments": [
 //!                {"name": "lenet", "precision": "int8",
 //!                 "weights": "artifacts/weights_lenet.json",
@@ -43,6 +45,12 @@
 //! counterparts. The CLI flag `serve --models
 //! lenet=int8:cal.json,mobilenetv1=fp32` overrides the whole array.
 //!
+//! `serve.http` turns network serving on: `addr` is the listen address
+//! (`serve --http ADDR` overrides it), `default_timeout_ms` the deadline
+//! budget for `POST /v1/infer` bodies that omit `timeout_ms`, and
+//! `max_body_kb` the request-body cap (oversized bodies answer `413`).
+//! See [`crate::serve_http`] for the wire protocol and admin plane.
+//!
 //! Per-entry resilience knobs: `queue_quota` caps how many of the
 //! coordinator's queued requests one deployment may hold before new
 //! submits are shed (omitted = a fair share of `serve.max_queue`);
@@ -59,6 +67,7 @@
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::{CoordinatorConfig, FaultPlan};
+use crate::deploy::{DeploymentSpec, SyntheticModel};
 use crate::imac::{AdcConfig, CrossbarConfig, DeviceConfig, ImacConfig, NeuronConfig};
 use crate::quant::PrecisionPolicy;
 use crate::systolic::{ArrayConfig, Dataflow, FoldOverlap, SramConfig};
@@ -94,6 +103,31 @@ pub struct ServeDefaults {
     /// puts `tpu-imac serve` into registry mode; `serve --models`
     /// overrides it.
     pub deployments: Vec<ServeDeployment>,
+    /// HTTP front-end defaults (`serve.http`). A configured `addr` (or the
+    /// CLI's `serve --http ADDR`, which wins) puts `tpu-imac serve` into
+    /// network mode: the coordinator answers wire requests instead of the
+    /// synthetic benchmark stream. See [`crate::serve_http`].
+    pub http: ServeHttp,
+}
+
+/// The `serve.http` block: listener address plus the per-request knobs the
+/// wire protocol needs but in-process clients pass explicitly.
+#[derive(Clone, Debug)]
+pub struct ServeHttp {
+    /// Listen address (`"127.0.0.1:8080"`); `None` = HTTP serving off
+    /// unless `serve --http ADDR` enables it.
+    pub addr: Option<String>,
+    /// Deadline budget applied to `POST /v1/infer` requests that omit
+    /// `timeout_ms`.
+    pub default_timeout_ms: u64,
+    /// Largest accepted request body (KiB); bigger bodies get `413`.
+    pub max_body_kb: usize,
+}
+
+impl Default for ServeHttp {
+    fn default() -> Self {
+        Self { addr: None, default_timeout_ms: 1000, max_body_kb: 1024 }
+    }
 }
 
 /// One `serve.deployments` entry: the config-file mirror of a
@@ -132,7 +166,98 @@ impl Default for ServeDefaults {
             precision_set: false,
             calibration: None,
             deployments: Vec::new(),
+            http: ServeHttp::default(),
         }
+    }
+}
+
+impl ServeDeployment {
+    /// Parse one deployment-entry object. The same shape serves two
+    /// callers: `serve.deployments[i]` in a config file and a
+    /// `POST /admin/swap` request body (see [`crate::serve_http`]) — `ctx`
+    /// names the source in errors.
+    pub fn from_json(entry: &Json, ctx: &str) -> Result<Self> {
+        let name = entry
+            .get("name")
+            .as_str()
+            .with_context(|| format!("{ctx}: name required"))?
+            .to_string();
+        let precision = match entry.get("precision").as_str() {
+            Some(s) => PrecisionPolicy::parse(s).with_context(|| {
+                format!("{ctx} ('{name}'): precision must be fp32|int8, got {s}")
+            })?,
+            None => PrecisionPolicy::Fp32,
+        };
+        let weights = entry.get("weights").as_str().map(str::to_string);
+        let synthetic = entry.get("synthetic").as_str().map(str::to_string);
+        if weights.is_some() && synthetic.is_some() {
+            bail!("{ctx} ('{name}'): give weights OR synthetic, not both");
+        }
+        let faults = {
+            let f = entry.get("faults");
+            if f.is_null() {
+                None
+            } else {
+                Some(FaultPlan {
+                    seed: f.get("seed").as_u64().unwrap_or(0),
+                    panic_every: f.get("panic_every").as_u64(),
+                    die_on_batch: f.get("die_on_batch").as_u64(),
+                    slow_every: f.get("slow_every").as_u64(),
+                    slow_us: f.get("slow_us").as_u64().unwrap_or(0),
+                    nan_every: f.get("nan_every").as_u64(),
+                    fail_build: f.get("fail_build").as_bool().unwrap_or(false),
+                })
+            }
+        };
+        Ok(ServeDeployment {
+            name,
+            weights,
+            synthetic,
+            seed: entry.get("seed").as_u64().unwrap_or(crate::deploy::SYNTHETIC_SEED),
+            precision,
+            calibration: entry.get("calibration").as_str().map(str::to_string),
+            queue_quota: entry.get("queue_quota").as_usize(),
+            weight: entry.get("weight").as_usize(),
+            faults,
+        })
+    }
+
+    /// Resolve this entry to a buildable [`DeploymentSpec`]: `weights` path
+    /// first, then the `synthetic` zoo, else the name itself resolved like
+    /// `serve --models` (trained artifact in `artifacts`, then the zoo).
+    pub fn to_spec(&self, artifacts: &str) -> Result<DeploymentSpec> {
+        let mut spec = if let Some(path) = &self.weights {
+            DeploymentSpec::json_file(&self.name, path)
+        } else if let Some(zoo_name) = &self.synthetic {
+            let model = SyntheticModel::parse(zoo_name).with_context(|| {
+                format!(
+                    "deployment '{}': unknown synthetic model '{zoo_name}' \
+                     (lenet, mobilenet-mini, mobilenetv1, mobilenetv2)",
+                    self.name
+                )
+            })?;
+            DeploymentSpec::synthetic(&self.name, model, self.seed)
+        } else {
+            crate::deploy::resolve_named_spec(&self.name, artifacts)?
+        };
+        spec = spec.precision(self.precision);
+        if let Some(path) = &self.calibration {
+            spec = spec.calibration_file(path);
+        }
+        if let Some(quota) = self.queue_quota {
+            spec = spec.queue_quota(quota);
+        }
+        if let Some(weight) = self.weight {
+            spec = spec.weight(weight);
+        }
+        if let Some(plan) = &self.faults {
+            eprintln!(
+                "deployment '{}': fault injection enabled ({plan:?}) — chaos drill mode",
+                self.name
+            );
+            spec = spec.faults(plan.clone());
+        }
+        Ok(spec)
     }
 }
 
@@ -254,55 +379,25 @@ impl Config {
             }
             if let Some(entries) = serve.get("deployments").as_arr() {
                 for (i, entry) in entries.iter().enumerate() {
-                    let name = entry
-                        .get("name")
-                        .as_str()
-                        .with_context(|| format!("serve.deployments[{i}]: name required"))?
-                        .to_string();
-                    let precision = match entry.get("precision").as_str() {
-                        Some(s) => PrecisionPolicy::parse(s).with_context(|| {
-                            format!(
-                                "serve.deployments[{i}] ('{name}'): precision must be \
-                                 fp32|int8, got {s}"
-                            )
-                        })?,
-                        None => PrecisionPolicy::Fp32,
-                    };
-                    let weights = entry.get("weights").as_str().map(str::to_string);
-                    let synthetic = entry.get("synthetic").as_str().map(str::to_string);
-                    if weights.is_some() && synthetic.is_some() {
-                        bail!(
-                            "serve.deployments[{i}] ('{name}'): give weights OR synthetic, \
-                             not both"
-                        );
+                    cfg.serve.deployments.push(ServeDeployment::from_json(
+                        entry,
+                        &format!("serve.deployments[{i}]"),
+                    )?);
+                }
+            }
+            let http = serve.get("http");
+            if !http.is_null() {
+                if let Some(a) = http.get("addr").as_str() {
+                    cfg.serve.http.addr = Some(a.to_string());
+                }
+                if let Some(v) = http.get("default_timeout_ms").as_u64() {
+                    cfg.serve.http.default_timeout_ms = v;
+                }
+                if let Some(v) = http.get("max_body_kb").as_usize() {
+                    if v == 0 {
+                        bail!("serve.http.max_body_kb must be positive");
                     }
-                    let faults = {
-                        let f = entry.get("faults");
-                        if f.is_null() {
-                            None
-                        } else {
-                            Some(FaultPlan {
-                                seed: f.get("seed").as_u64().unwrap_or(0),
-                                panic_every: f.get("panic_every").as_u64(),
-                                die_on_batch: f.get("die_on_batch").as_u64(),
-                                slow_every: f.get("slow_every").as_u64(),
-                                slow_us: f.get("slow_us").as_u64().unwrap_or(0),
-                                nan_every: f.get("nan_every").as_u64(),
-                                fail_build: f.get("fail_build").as_bool().unwrap_or(false),
-                            })
-                        }
-                    };
-                    cfg.serve.deployments.push(ServeDeployment {
-                        name,
-                        weights,
-                        synthetic,
-                        seed: entry.get("seed").as_u64().unwrap_or(crate::deploy::SYNTHETIC_SEED),
-                        precision,
-                        calibration: entry.get("calibration").as_str().map(str::to_string),
-                        queue_quota: entry.get("queue_quota").as_usize(),
-                        weight: entry.get("weight").as_usize(),
-                        faults,
-                    });
+                    cfg.serve.http.max_body_kb = v;
                 }
             }
         }
@@ -456,5 +551,68 @@ mod tests {
     fn empty_object_is_all_defaults() {
         let c = Config::from_json(&Json::parse("{}").unwrap()).unwrap();
         assert_eq!(c.array.rows, Config::default().array.rows);
+    }
+
+    #[test]
+    fn serve_http_block_parses_and_validates() {
+        let c = Config::from_json(
+            &Json::parse(
+                r#"{"serve": {"http": {"addr": "127.0.0.1:9000",
+                                       "default_timeout_ms": 250,
+                                       "max_body_kb": 64}}}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.serve.http.addr.as_deref(), Some("127.0.0.1:9000"));
+        assert_eq!(c.serve.http.default_timeout_ms, 250);
+        assert_eq!(c.serve.http.max_body_kb, 64);
+        // Defaults: HTTP serving off, sane timeout/body caps.
+        let d = Config::default().serve.http;
+        assert_eq!(d.addr, None);
+        assert_eq!(d.default_timeout_ms, 1000);
+        assert_eq!(d.max_body_kb, 1024);
+        // Partial block keeps the other defaults.
+        let c = Config::from_json(
+            &Json::parse(r#"{"serve": {"http": {"addr": "0.0.0.0:80"}}}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.serve.http.default_timeout_ms, 1000);
+        // A zero body cap would reject every request; refuse the config.
+        assert!(Config::from_json(
+            &Json::parse(r#"{"serve": {"http": {"max_body_kb": 0}}}"#).unwrap()
+        )
+        .is_err());
+    }
+
+    /// `ServeDeployment::to_spec` is the shared resolve path for config
+    /// entries and `/admin/swap` bodies: the spec builds and carries the
+    /// entry's knobs.
+    #[test]
+    fn deployment_entry_to_spec_builds() {
+        let entry = ServeDeployment::from_json(
+            &Json::parse(
+                r#"{"name": "mm", "synthetic": "mobilenet-mini", "seed": 9,
+                    "precision": "int8", "weight": 3}"#,
+            )
+            .unwrap(),
+            "body",
+        )
+        .unwrap();
+        let dep = entry.to_spec("artifacts").unwrap().build().unwrap();
+        assert_eq!(dep.name, "mm");
+        assert_eq!(dep.precision(), PrecisionPolicy::Int8);
+        assert_eq!(dep.weight, 3);
+        // Unknown zoo names fail at resolve, naming the deployment.
+        let bad = ServeDeployment::from_json(
+            &Json::parse(r#"{"name": "x", "synthetic": "nope"}"#).unwrap(),
+            "body",
+        )
+        .unwrap();
+        let err = bad.to_spec("artifacts").unwrap_err();
+        assert!(format!("{err:#}").contains("unknown synthetic model"), "{err:#}");
+        // The admin-body context string lands in parse errors.
+        let err = ServeDeployment::from_json(&Json::parse("{}").unwrap(), "body").unwrap_err();
+        assert!(format!("{err:#}").contains("body: name required"), "{err:#}");
     }
 }

@@ -106,6 +106,39 @@ impl ModelRegistry {
         Ok(())
     }
 
+    /// Runtime re-balance of `name`'s scheduling share without a swap (the
+    /// admin plane's `/admin/weight`): workers pick the new weight up at
+    /// their next batch cycle via [`ModelRegistry::copy_weights_into`].
+    /// Weight 0 is rejected for the same reason
+    /// [`DeploymentSpec::weight`](crate::deploy::DeploymentSpec::weight)
+    /// rejects it — it would silently starve the deployment. The override
+    /// lasts until the next [`ModelRegistry::swap`], which re-derives the
+    /// weight from the swapped-in spec (the spec stays the source of
+    /// truth across deploys).
+    pub fn set_weight(&self, name: &str, weight: usize) -> Result<()> {
+        if weight == 0 {
+            bail!("set_weight('{name}'): scheduling weight must be >= 1 (got 0)");
+        }
+        let entries = self.entries.read().unwrap();
+        let entry = entries
+            .iter()
+            .find(|e| e.name == name)
+            .with_context(|| format!("set_weight: model '{name}' is not registered"))?;
+        entry.weight.store(weight, Ordering::Release);
+        Ok(())
+    }
+
+    /// The scheduling weight currently stored for `slot` (observability:
+    /// the `/metrics` deployments section reports it).
+    pub fn weight_of(&self, slot: usize) -> Option<usize> {
+        self.entries.read().unwrap().get(slot).map(|e| e.weight.load(Ordering::Acquire))
+    }
+
+    /// The swap generation of `slot` (1 at registration, bumped per swap).
+    pub fn generation_of(&self, slot: usize) -> Option<u64> {
+        self.entries.read().unwrap().get(slot).map(|e| e.generation.load(Ordering::Acquire))
+    }
+
     /// Admission-control quota for `slot` against a coordinator queue of
     /// `max_queue`: the deployment's explicit `queue_quota` when set,
     /// otherwise a fair share (`max_queue / models`, at least 1). A model
@@ -284,5 +317,38 @@ mod tests {
         .unwrap();
         reg.copy_weights_into(&mut buf);
         assert_eq!(buf, vec![7, 1]);
+    }
+
+    #[test]
+    fn set_weight_rebalances_without_swap_until_next_swap() {
+        let reg = ModelRegistry::new();
+        reg.register(&DeploymentSpec::synthetic("a", SyntheticModel::Lenet, 1)).unwrap();
+        reg.register(
+            &DeploymentSpec::synthetic("b", SyntheticModel::MobilenetMini, 2).weight(4),
+        )
+        .unwrap();
+        let gen_before = reg.generation_of(1).unwrap();
+        reg.set_weight("b", 9).unwrap();
+        assert_eq!(reg.weight_of(1), Some(9));
+        let mut buf = Vec::new();
+        reg.copy_weights_into(&mut buf);
+        assert_eq!(buf, vec![1, 9], "workers see the re-balance on their next refresh");
+        // No swap happened: the generation (and thus worker backend caches)
+        // is untouched by a pure weight re-balance.
+        assert_eq!(reg.generation_of(1), Some(gen_before));
+        // Invalid inputs are typed errors, not silent no-ops.
+        assert!(reg.set_weight("b", 0).is_err());
+        assert!(reg.set_weight("nope", 2).is_err());
+        assert_eq!(reg.weight_of(1), Some(9));
+        assert_eq!(reg.weight_of(9), None);
+        assert_eq!(reg.generation_of(9), None);
+        // The next swap re-derives the weight from its spec.
+        reg.swap(
+            "b",
+            &DeploymentSpec::synthetic("b", SyntheticModel::MobilenetMini, 2).weight(4),
+        )
+        .unwrap();
+        assert_eq!(reg.weight_of(1), Some(4));
+        assert_eq!(reg.generation_of(1), Some(gen_before + 1));
     }
 }

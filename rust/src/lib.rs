@@ -32,6 +32,11 @@
 //!   fault-injection harness ([`coordinator::FaultPlan`]) — every request
 //!   gets exactly one reply, a [`coordinator::Response`] or a typed
 //!   [`coordinator::ServeError`] (`ARCHITECTURE.md` §5) — [`coordinator`];
+//! * a dependency-free **HTTP/1.1 JSON front-end + admin plane** over the
+//!   coordinator: `POST /v1/infer`, `GET /metrics`, `POST /admin/swap`,
+//!   `POST /admin/weight`, with a lazy single-pass body scanner and
+//!   per-connection arenas keeping the infer wire path allocation-free
+//!   (`ARCHITECTURE.md` §6) — [`serve_http`];
 //! * report generators reproducing every table in the paper — [`report`].
 //!
 //! Top-level guides: `README.md` (repo map + CLI quickstart),
@@ -116,6 +121,7 @@ pub mod runtime;
 pub mod cli;
 pub mod config;
 pub mod report;
+pub mod serve_http;
 pub mod studies;
 pub mod imac;
 pub mod systolic;

@@ -16,16 +16,16 @@ use anyhow::{bail, Context, Result};
 
 use tpu_imac::arch::{self, Mode};
 use tpu_imac::cli::Args;
-use tpu_imac::config::ServeDeployment;
 use tpu_imac::coordinator::{
     Coordinator, CoordinatorConfig, ModelRegistry, NativeBackend, PjrtConvBackend,
 };
-use tpu_imac::deploy::{self, Deployment, DeploymentSpec, SyntheticModel};
+use tpu_imac::deploy::{self, Deployment, DeploymentSpec};
 use tpu_imac::imac::{DeviceConfig, ImacConfig};
 use tpu_imac::metrics::Snapshot;
 use tpu_imac::nn::{PrecisionPolicy, Tensor};
 use tpu_imac::report::{self, AccuracyTable};
 use tpu_imac::runtime::Runtime;
+use tpu_imac::serve_http::{HttpConfig, HttpServer};
 use tpu_imac::systolic::{self, ArrayConfig, Dataflow, FoldOverlap, Schedule, SramConfig};
 use tpu_imac::util::table::{Align, Table};
 use tpu_imac::workload::{zoo, Dataset};
@@ -137,6 +137,10 @@ USAGE: tpu-imac <tables|simulate|trace|serve|calibrate|imac-study|spec> [--flags
              N named deployments — weights_<name>.json or synthetic zoo —
              served concurrently with per-model precision, per-model
              metrics in the summary; config-file: serve.deployments)
+             [--http ADDR]  (HTTP/1.1 JSON front-end + admin plane on ADDR
+             instead of the synthetic stream: POST /v1/infer, GET /metrics,
+             POST /admin/swap, POST /admin/weight; config-file default:
+             serve.http.addr; runs until Ctrl-C)
   calibrate  [--artifacts DIR] [--samples N] [--percentile P] [--seed S]
              [--out PATH]  (run N sample images through the conv oracle,
              record per-layer activation ranges, write the calibration
@@ -302,42 +306,6 @@ fn single_model_spec(
     spec
 }
 
-/// Resolve one `serve.deployments` config entry to a spec.
-fn spec_from_config_entry(entry: &ServeDeployment, artifacts: &str) -> Result<DeploymentSpec> {
-    let mut spec = if let Some(path) = &entry.weights {
-        DeploymentSpec::json_file(&entry.name, path)
-    } else if let Some(zoo_name) = &entry.synthetic {
-        let model = SyntheticModel::parse(zoo_name).with_context(|| {
-            format!(
-                "serve.deployments '{}': unknown synthetic model '{zoo_name}' \
-                 (lenet, mobilenet-mini, mobilenetv1, mobilenetv2)",
-                entry.name
-            )
-        })?;
-        DeploymentSpec::synthetic(&entry.name, model, entry.seed)
-    } else {
-        deploy::resolve_named_spec(&entry.name, artifacts)?
-    };
-    spec = spec.precision(entry.precision);
-    if let Some(path) = &entry.calibration {
-        spec = spec.calibration_file(path);
-    }
-    if let Some(quota) = entry.queue_quota {
-        spec = spec.queue_quota(quota);
-    }
-    if let Some(weight) = entry.weight {
-        spec = spec.weight(weight);
-    }
-    if let Some(plan) = &entry.faults {
-        eprintln!(
-            "serve.deployments '{}': fault injection enabled ({plan:?}) — chaos drill mode",
-            entry.name
-        );
-        spec = spec.faults(plan.clone());
-    }
-    Ok(spec)
-}
-
 fn cmd_serve(args: &Args) -> Result<()> {
     args.validate(&with_config_flags(&[
         "artifacts",
@@ -348,6 +316,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "calibration",
         "models",
         "native",
+        "http",
     ]))?;
     // Config-file serve defaults (--config), overridable by explicit flags.
     let serve_defaults = full_config(args)?.serve;
@@ -366,11 +335,50 @@ fn cmd_serve(args: &Args) -> Result<()> {
             serve_defaults
                 .deployments
                 .iter()
-                .map(|d| spec_from_config_entry(d, &artifacts))
+                .map(|d| d.to_spec(&artifacts))
                 .collect::<Result<_>>()?,
         ),
         None => None,
     };
+    // HTTP front-end mode: `--http ADDR` (or `serve.http.addr` in the
+    // config file) serves over the network instead of driving the
+    // synthetic self-test request stream.
+    let http_addr =
+        args.get("http").map(str::to_string).or_else(|| serve_defaults.http.addr.clone());
+    if let Some(addr) = http_addr {
+        let specs = match registry_specs {
+            Some(specs) => {
+                if args.get("precision").is_some() || args.get("calibration").is_some() {
+                    bail!(
+                        "multi-model serving takes per-deployment precision/calibration \
+                         (--models name=precision[:cal.json] or serve.deployments); \
+                         drop --precision/--calibration"
+                    );
+                }
+                specs
+            }
+            None => {
+                let precision = match args.get("precision") {
+                    Some(s) => PrecisionPolicy::parse(s)
+                        .with_context(|| format!("--precision must be fp32|int8, got {s}"))?,
+                    None => serve_defaults.precision,
+                };
+                let calibration_path = args
+                    .get("calibration")
+                    .map(str::to_string)
+                    .or_else(|| serve_defaults.calibration.clone());
+                vec![single_model_spec(&artifacts, precision, calibration_path.as_deref())]
+            }
+        };
+        let http_cfg = HttpConfig {
+            addr,
+            default_timeout_ms: serve_defaults.http.default_timeout_ms,
+            max_body_bytes: serve_defaults.http.max_body_kb * 1024,
+            artifacts: artifacts.clone(),
+        };
+        return serve_http_mode(config, &specs, http_cfg);
+    }
+
     if let Some(specs) = registry_specs {
         if args.get("precision").is_some() || args.get("calibration").is_some() {
             bail!(
@@ -483,6 +491,38 @@ fn cmd_serve(args: &Args) -> Result<()> {
     print_serve_summary(&coord.metrics.snapshot(), wall);
     coord.shutdown();
     Ok(())
+}
+
+/// HTTP front-end driver: start the registry worker pool and the network
+/// front door, print the endpoint map, then serve until the process is
+/// killed (Ctrl-C) — there is no synthetic request stream in this mode;
+/// traffic comes over the wire.
+fn serve_http_mode(
+    config: CoordinatorConfig,
+    specs: &[DeploymentSpec],
+    http: HttpConfig,
+) -> Result<()> {
+    let registry = ModelRegistry::with_specs(specs)?;
+    let names = registry.names();
+    let coord = Coordinator::start_registry(config, Arc::clone(&registry))?;
+    let metrics = Arc::clone(&coord.metrics);
+    let server = HttpServer::start(http, coord.client(), registry, metrics)?;
+    let addr = server.addr();
+    println!(
+        "http front-end serving {} deployment(s) [{}] on {addr}",
+        names.len(),
+        names.join(", ")
+    );
+    println!(
+        "  POST http://{addr}/v1/infer     {{\"model\":NAME,\"image\":[..],\"timeout_ms\":N}}"
+    );
+    println!("  GET  http://{addr}/metrics");
+    println!("  POST http://{addr}/admin/swap   (one serve.deployments[]-shaped object)");
+    println!("  POST http://{addr}/admin/weight {{\"model\":NAME,\"weight\":N}}");
+    println!("Ctrl-C to stop.");
+    loop {
+        std::thread::park();
+    }
 }
 
 /// Multi-model serving driver: start the registry pool, round-robin the

@@ -495,6 +495,75 @@ impl Metrics {
     }
 }
 
+impl Snapshot {
+    /// Serialize the snapshot as a JSON document — the `GET /metrics` wire
+    /// payload (see [`crate::serve_http`]). Counters are emitted under the
+    /// snapshot's field names so the wire schema matches the in-process
+    /// one; per-deployment breakdowns land under `"models"` in slot order.
+    /// Cold path: this builds a [`Json`](crate::util::json::Json) DOM and
+    /// allocates freely (scrapes are rare; inference is not on this path).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let num = |v: u64| Json::Num(v as f64);
+        let models: Vec<Json> = self
+            .models
+            .iter()
+            .map(|m| {
+                Json::obj(vec![
+                    ("name", Json::Str(m.name.clone())),
+                    ("completed", num(m.completed)),
+                    ("shed", num(m.shed)),
+                    ("deadline_drops", num(m.deadline_drops)),
+                    ("faults", num(m.faults)),
+                    ("mean_latency_us", Json::Num(m.mean_latency_us)),
+                    ("p50_latency_us", Json::Num(m.p50_latency_us)),
+                    ("p95_latency_us", Json::Num(m.p95_latency_us)),
+                    ("p95_queue_wait_us", Json::Num(m.p95_queue_wait_us)),
+                    ("max_queue_wait_us", num(m.max_queue_wait_us)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("enqueued", num(self.enqueued)),
+            ("completed", num(self.completed)),
+            ("rejected", num(self.rejected)),
+            ("shed", num(self.shed)),
+            ("deadline_drops", num(self.deadline_drops)),
+            ("faulted", num(self.faulted)),
+            ("worker_panics", num(self.worker_panics)),
+            ("worker_restarts", num(self.worker_restarts)),
+            ("numeric_faults", num(self.numeric_faults)),
+            ("slow_batches", num(self.slow_batches)),
+            ("batches", num(self.batches)),
+            ("mean_batch_fill", Json::Num(self.mean_batch_fill)),
+            ("batch_close_full", num(self.batch_close_full)),
+            ("batch_close_shallow", num(self.batch_close_shallow)),
+            ("batch_close_deadline", num(self.batch_close_deadline)),
+            ("batch_close_timeout", num(self.batch_close_timeout)),
+            ("p50_latency_us", Json::Num(self.p50_latency_us)),
+            ("p95_latency_us", Json::Num(self.p95_latency_us)),
+            ("p99_latency_us", Json::Num(self.p99_latency_us)),
+            ("mean_latency_us", Json::Num(self.mean_latency_us)),
+            ("p95_queue_wait_us", Json::Num(self.p95_queue_wait_us)),
+            ("max_queue_wait_us", num(self.max_queue_wait_us)),
+            ("conv_us_total", num(self.conv_us_total)),
+            ("imac_us_total", num(self.imac_us_total)),
+            ("queue_us_total", num(self.queue_us_total)),
+            ("gemm_images", num(self.gemm_images)),
+            ("int8_images", num(self.int8_images)),
+            ("calibrated_images", num(self.calibrated_images)),
+            ("maxabs_scans", num(self.maxabs_scans)),
+            ("scratch_bytes", num(self.scratch_bytes)),
+            ("imac_bitplane_images", num(self.imac_bitplane_images)),
+            ("imac_analog_batch_images", num(self.imac_analog_batch_images)),
+            ("imac_analog_tail_images", num(self.imac_analog_tail_images)),
+            ("simd_level", Json::Str(self.simd_level.to_string())),
+            ("tile", Json::Str(self.tile.clone())),
+            ("models", Json::Arr(models)),
+        ])
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -596,6 +665,28 @@ mod tests {
         assert_eq!(s.imac_analog_tail_images, 3);
         assert!(["scalar", "avx2", "neon"].contains(&s.simd_level), "{}", s.simd_level);
         assert!(s.tile.contains("gemm kc=") && s.tile.contains("imac kc="), "{}", s.tile);
+    }
+
+    /// The wire serialization round-trips through the repo's own parser
+    /// and carries the per-model breakdown — `GET /metrics` clients see
+    /// exactly the snapshot's numbers.
+    #[test]
+    fn snapshot_to_json_round_trips() {
+        let m = Metrics::new();
+        m.register_model(0, "lenet");
+        m.record_model_batch(0, "lenet", &[Duration::from_micros(10); 4], 4);
+        m.requests_completed.store(4, Ordering::Relaxed);
+        m.batches_executed.store(1, Ordering::Relaxed);
+        let s = m.snapshot();
+        let doc = crate::util::json::Json::parse(&s.to_json().to_string()).unwrap();
+        assert_eq!(doc.get("completed").as_u64(), Some(4));
+        assert_eq!(doc.get("batches").as_u64(), Some(1));
+        assert_eq!(doc.get("simd_level").as_str(), Some(s.simd_level));
+        let models = doc.get("models").as_arr().unwrap();
+        assert_eq!(models.len(), 1);
+        assert_eq!(models[0].get("name").as_str(), Some("lenet"));
+        assert_eq!(models[0].get("completed").as_u64(), Some(4));
+        assert_eq!(models[0].get("mean_latency_us").as_f64(), Some(10.0));
     }
 
     #[test]

@@ -1,0 +1,124 @@
+//! Admin-plane handlers: live model swap and scheduling-weight rebalance.
+//!
+//! Admin requests are rare, operator-initiated, and want maximal
+//! validation feedback — so unlike the infer hot path they use the full
+//! DOM parser ([`crate::util::json::Json`]) and the existing
+//! [`crate::config::ServeDeployment`] spec pipeline. Allocating here is a
+//! deliberate trade: the zero-alloc discipline covers `POST /v1/infer`
+//! only.
+//!
+//! Status contract (pinned by `tests/http_taxonomy.rs` /
+//! `tests/http_chaos.rs`):
+//!
+//! - `400 Protocol` — body is not UTF-8 / not JSON / fails spec
+//!   validation (missing name, bad precision, conflicting weight source).
+//! - `404 UnknownModel` — the named deployment is not registered. Swap
+//!   replaces an existing slot; registering new names is a config-file
+//!   restart decision, not a runtime mutation.
+//! - `422 SwapRejected` — the spec parsed but the replacement model
+//!   failed to build or install; the serving registry is untouched and
+//!   the incumbent generation keeps serving.
+//! - `400 WeightRejected` — weight rebalance refused (zero weight).
+
+use std::sync::Arc;
+
+use crate::config::ServeDeployment;
+use crate::coordinator::{ModelRegistry, ServeError};
+use crate::serve_http::conn::{write_error, ResponseBuf};
+use crate::serve_http::router::write_serve_error;
+use crate::serve_http::scanner::{scan_weight, WeightRequest};
+use crate::util::json::Json;
+
+/// `POST /admin/swap`: body is one `serve.deployments[]`-shaped object
+/// (same schema as the config file — one vocabulary for both planes).
+/// On success the replacement is fully built before installation and the
+/// new generation number is returned.
+pub fn handle_swap(
+    registry: &Arc<ModelRegistry>,
+    artifacts: &str,
+    body: &[u8],
+    resp: &mut ResponseBuf,
+) {
+    let text = match std::str::from_utf8(body) {
+        Ok(t) => t,
+        Err(_) => {
+            write_error(resp, 400, "Protocol", format_args!("request body is not valid UTF-8"));
+            return;
+        }
+    };
+    let doc = match Json::parse(text) {
+        Ok(d) => d,
+        Err(e) => {
+            write_error(resp, 400, "Protocol", format_args!("{e}"));
+            return;
+        }
+    };
+    let dep = match ServeDeployment::from_json(&doc, "swap body") {
+        Ok(d) => d,
+        Err(e) => {
+            write_error(resp, 400, "Protocol", format_args!("{e:#}"));
+            return;
+        }
+    };
+    let Some(slot) = registry.slot(&dep.name) else {
+        let e = ServeError::UnknownModel {
+            model: dep.name.clone(),
+            registered: registry.names().join(", "),
+        };
+        write_serve_error(resp, &e);
+        return;
+    };
+    let spec = match dep.to_spec(artifacts) {
+        Ok(s) => s,
+        Err(e) => {
+            write_error(resp, 422, "SwapRejected", format_args!("{e:#}"));
+            return;
+        }
+    };
+    match registry.swap(&dep.name, &spec) {
+        Ok(()) => {
+            let generation = registry.generation_of(slot).unwrap_or(0);
+            resp.status = 200;
+            let out = Json::obj(vec![
+                ("swapped", Json::Str(dep.name)),
+                ("generation", Json::Num(generation as f64)),
+            ]);
+            resp.body.extend_from_slice(out.to_string().as_bytes());
+        }
+        Err(e) => write_error(resp, 422, "SwapRejected", format_args!("{e:#}")),
+    }
+}
+
+/// `POST /admin/weight`: `{"model":NAME,"weight":N}` — retune the
+/// weighted-scheduling share without rebuilding the deployment. Workers
+/// pick the change up at their next schedule refresh.
+pub fn handle_weight(
+    registry: &Arc<ModelRegistry>,
+    req: &mut WeightRequest,
+    body: &[u8],
+    resp: &mut ResponseBuf,
+) {
+    if let Err(e) = scan_weight(body, req) {
+        write_error(resp, 400, "Protocol", format_args!("{e}"));
+        return;
+    }
+    if registry.slot(&req.model).is_none() {
+        let e = ServeError::UnknownModel {
+            model: req.model.clone(),
+            registered: registry.names().join(", "),
+        };
+        write_serve_error(resp, &e);
+        return;
+    }
+    match registry.set_weight(&req.model, req.weight as usize) {
+        Ok(()) => {
+            resp.status = 200;
+            let out = Json::obj(vec![
+                ("model", Json::Str(req.model.clone())),
+                ("weight", Json::Num(req.weight as f64)),
+            ]);
+            resp.body.extend_from_slice(out.to_string().as_bytes());
+        }
+        Err(e) => write_error(resp, 400, "WeightRejected", format_args!("{e:#}")),
+    }
+}

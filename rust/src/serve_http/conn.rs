@@ -1,0 +1,588 @@
+//! HTTP/1.1 framing over any `Read + Write` stream.
+//!
+//! [`serve_connection`] is the whole per-connection lifecycle: accumulate
+//! a request head, frame the body by `Content-Length`, dispatch to an
+//! [`App`], write the response, compact, repeat until the peer closes (or
+//! sends `Connection: close`). It is generic over the stream so the
+//! protocol tests and the counting-allocator suite drive it over
+//! deterministic in-memory streams — the TCP listener in
+//! [`crate::serve_http`] adds nothing but sockets.
+//!
+//! Memory discipline mirrors the compute hot path's `Scratch` arenas: one
+//! [`ConnArena`] per connection owns the read buffer and the response
+//! staging buffers; after a warm-up request has grown them, serving a
+//! persistent connection performs **zero allocations** in the framing
+//! layer (`tests/alloc_http_steady_state.rs`). Pipelined requests are
+//! supported: bytes past the current request are compacted to the buffer
+//! front, never dropped.
+//!
+//! Every malformed input is answered with a typed JSON error (status 400,
+//! 411, 413 or 431) — never a panic, and never a silently dropped
+//! connection while a parseable request is pending. When the framing
+//! itself is intact (e.g. a semantic JSON error with a correct
+//! `Content-Length`) the connection stays usable for the next request;
+//! when it is not (truncated head/body, oversized payload), the
+//! connection closes after the error reply since resynchronization is
+//! impossible.
+
+use std::io::{self, Read, Write};
+
+/// Per-connection framing limits.
+#[derive(Clone, Copy, Debug)]
+pub struct HttpLimits {
+    /// Maximum request-head bytes (request line + headers); `431` beyond.
+    pub max_head: usize,
+    /// Maximum `Content-Length`; `413` beyond.
+    pub max_body: usize,
+}
+
+impl Default for HttpLimits {
+    fn default() -> Self {
+        Self { max_head: 16 * 1024, max_body: 1024 * 1024 }
+    }
+}
+
+/// Route handler: fills `resp` for one framed request. Implementations
+/// must not panic on any input (the fuzz suite drives this boundary).
+pub trait App {
+    fn handle(&mut self, method: &str, path: &str, body: &[u8], resp: &mut ResponseBuf);
+}
+
+/// Reusable response staging: the app sets `status` and writes the JSON
+/// `body`; the connection loop frames and flushes both from persistent
+/// buffers.
+#[derive(Debug, Default)]
+pub struct ResponseBuf {
+    pub status: u16,
+    pub body: Vec<u8>,
+    /// App-requested connection close (in addition to protocol-driven
+    /// closes).
+    pub close: bool,
+    head: Vec<u8>,
+}
+
+impl ResponseBuf {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn reset(&mut self) {
+        self.status = 200;
+        self.body.clear();
+        self.close = false;
+        self.head.clear();
+    }
+
+    fn write_to<S: Write>(&mut self, stream: &mut S, keep_alive: bool) -> io::Result<()> {
+        self.head.clear();
+        // `write!` into a `Vec<u8>` goes through `io::Write` (core::fmt,
+        // no intermediate String) — allocation-free once the buffer is
+        // warm.
+        write!(
+            self.head,
+            "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+            self.status,
+            reason(self.status),
+            self.body.len(),
+            if keep_alive { "keep-alive" } else { "close" }
+        )?;
+        stream.write_all(&self.head)?;
+        stream.write_all(&self.body)?;
+        stream.flush()
+    }
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        411 => "Length Required",
+        413 => "Payload Too Large",
+        422 => "Unprocessable Entity",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Unknown",
+    }
+}
+
+/// Append `{"error":CODE,"message":MSG}` to `resp` with `msg` JSON-escaped
+/// via [`JsonEscape`] — the one error-body shape every layer (framing,
+/// router, admin) emits, allocation-free.
+pub fn write_error(resp: &mut ResponseBuf, status: u16, code: &str, msg: std::fmt::Arguments<'_>) {
+    resp.status = status;
+    resp.body.extend_from_slice(b"{\"error\":\"");
+    resp.body.extend_from_slice(code.as_bytes());
+    resp.body.extend_from_slice(b"\",\"message\":\"");
+    let _ = std::fmt::write(&mut JsonEscape(&mut resp.body), msg);
+    resp.body.extend_from_slice(b"\"}");
+}
+
+/// `fmt::Write` adapter that JSON-escapes into a byte buffer, so error
+/// messages (which may embed user-controlled model names) can be formatted
+/// straight into the response body without an intermediate `String`.
+pub struct JsonEscape<'a>(pub &'a mut Vec<u8>);
+
+impl std::fmt::Write for JsonEscape<'_> {
+    fn write_str(&mut self, s: &str) -> std::fmt::Result {
+        for c in s.chars() {
+            match c {
+                '"' => self.0.extend_from_slice(b"\\\""),
+                '\\' => self.0.extend_from_slice(b"\\\\"),
+                '\n' => self.0.extend_from_slice(b"\\n"),
+                '\r' => self.0.extend_from_slice(b"\\r"),
+                '\t' => self.0.extend_from_slice(b"\\t"),
+                c if (c as u32) < 0x20 => {
+                    let mut hex = [0u8; 6];
+                    hex[..2].copy_from_slice(b"\\u");
+                    let v = c as u32;
+                    for (i, shift) in [12u32, 8, 4, 0].iter().enumerate() {
+                        hex[2 + i] = b"0123456789abcdef"[((v >> shift) & 0xf) as usize];
+                    }
+                    self.0.extend_from_slice(&hex);
+                }
+                c => {
+                    let mut utf8 = [0u8; 4];
+                    self.0.extend_from_slice(c.encode_utf8(&mut utf8).as_bytes());
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Per-connection reusable buffers (the `Scratch` discipline applied to
+/// the wire): the read buffer, its fill watermark, and the response
+/// staging. Created once per connection and reused across every request
+/// it carries.
+#[derive(Debug, Default)]
+pub struct ConnArena {
+    buf: Vec<u8>,
+    len: usize,
+    resp: ResponseBuf,
+}
+
+impl ConnArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+enum Fill {
+    Bytes,
+    Eof,
+    Stopped,
+}
+
+/// Read more bytes into the arena, doubling the buffer when full (growth
+/// stops once the connection's working set is warm). `WouldBlock`/
+/// `TimedOut` poll `stop` — the TCP listener sets a short read timeout so
+/// idle keep-alive connections notice shutdown.
+fn fill<S: Read>(
+    stream: &mut S,
+    arena: &mut ConnArena,
+    stop: &dyn Fn() -> bool,
+) -> io::Result<Fill> {
+    if arena.len == arena.buf.len() {
+        let grown = (arena.buf.len() * 2).max(4096);
+        arena.buf.resize(grown, 0);
+    }
+    loop {
+        match stream.read(&mut arena.buf[arena.len..]) {
+            Ok(0) => return Ok(Fill::Eof),
+            Ok(n) => {
+                arena.len += n;
+                return Ok(Fill::Bytes);
+            }
+            Err(e) if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) => {
+                if stop() {
+                    return Ok(Fill::Stopped);
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// Byte index just past the `\r\n\r\n` head terminator, if present.
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n").map(|i| i + 4)
+}
+
+/// Parsed request head, as byte ranges into the arena (no owned strings —
+/// the dispatch borrows straight from the read buffer).
+struct Head {
+    method: std::ops::Range<usize>,
+    path: std::ops::Range<usize>,
+    /// `Content-Length`, when present.
+    content_length: Option<usize>,
+    keep_alive: bool,
+}
+
+/// Trim optional whitespace (the HTTP OWS: space / horizontal tab only).
+fn trim_ows(mut s: &[u8]) -> &[u8] {
+    while let [b' ' | b'\t', rest @ ..] = s {
+        s = rest;
+    }
+    while let [rest @ .., b' ' | b'\t'] = s {
+        s = rest;
+    }
+    s
+}
+
+/// Parse `head` (everything up to and including the blank line). Returns a
+/// static error message for any malformed framing — mapped to `400`.
+fn parse_head(head: &[u8], base: usize) -> Result<Head, &'static str> {
+    let line_end = head.windows(2).position(|w| w == b"\r\n").ok_or("missing request line")?;
+    let line = &head[..line_end];
+    let sp1 = line.iter().position(|&b| b == b' ').ok_or("malformed request line")?;
+    let sp2 =
+        line.iter().rposition(|&b| b == b' ').filter(|&i| i > sp1).ok_or("malformed request line")?;
+    let (method, path, version) = (&line[..sp1], &line[sp1 + 1..sp2], &line[sp2 + 1..]);
+    if method.is_empty() || !method.iter().all(u8::is_ascii_uppercase) {
+        return Err("malformed method");
+    }
+    if path.first() != Some(&b'/') || !path.iter().all(|&b| (0x21..=0x7e).contains(&b)) {
+        return Err("malformed request path");
+    }
+    let http11 = match version {
+        b"HTTP/1.1" => true,
+        b"HTTP/1.0" => false,
+        _ => return Err("unsupported HTTP version"),
+    };
+    let mut content_length: Option<usize> = None;
+    let mut keep_alive = http11;
+    let mut rest = &head[line_end + 2..];
+    loop {
+        let eol = rest.windows(2).position(|w| w == b"\r\n").ok_or("malformed header")?;
+        let line = &rest[..eol];
+        rest = &rest[eol + 2..];
+        if line.is_empty() {
+            break;
+        }
+        let colon = line.iter().position(|&b| b == b':').ok_or("malformed header")?;
+        let (name, value) = (&line[..colon], trim_ows(&line[colon + 1..]));
+        if name.eq_ignore_ascii_case(b"content-length") {
+            if value.is_empty() || !value.iter().all(u8::is_ascii_digit) {
+                return Err("malformed content-length");
+            }
+            let mut v: usize = 0;
+            for &d in value {
+                v = v
+                    .checked_mul(10)
+                    .and_then(|v| v.checked_add((d - b'0') as usize))
+                    .ok_or("malformed content-length")?;
+            }
+            if content_length.is_some_and(|prev| prev != v) {
+                return Err("conflicting content-length headers");
+            }
+            content_length = Some(v);
+        } else if name.eq_ignore_ascii_case(b"connection") {
+            if value.eq_ignore_ascii_case(b"close") {
+                keep_alive = false;
+            } else if value.eq_ignore_ascii_case(b"keep-alive") {
+                keep_alive = true;
+            }
+        } else if name.eq_ignore_ascii_case(b"transfer-encoding") {
+            return Err("chunked transfer encoding unsupported (use content-length)");
+        }
+    }
+    Ok(Head {
+        method: base..base + sp1,
+        path: base + sp1 + 1..base + sp2,
+        content_length,
+        keep_alive,
+    })
+}
+
+/// Serve one connection to completion. Returns when the peer closes, the
+/// app or protocol forces a close, `stop()` fires during an idle read, or
+/// the stream errors. All protocol violations are answered in-band;
+/// `Err` is reserved for transport failures.
+pub fn serve_connection<S: Read + Write>(
+    stream: &mut S,
+    arena: &mut ConnArena,
+    app: &mut dyn App,
+    limits: &HttpLimits,
+    stop: &dyn Fn() -> bool,
+) -> io::Result<()> {
+    loop {
+        // 1. Accumulate a complete head.
+        let head_len = loop {
+            if let Some(n) = find_head_end(&arena.buf[..arena.len]) {
+                break n;
+            }
+            if arena.len > limits.max_head {
+                arena.resp.reset();
+                write_error(
+                    &mut arena.resp,
+                    431,
+                    "Protocol",
+                    format_args!("request head exceeds {} bytes", limits.max_head),
+                );
+                return arena.resp.write_to(stream, false);
+            }
+            match fill(stream, arena, stop)? {
+                Fill::Bytes => {}
+                Fill::Stopped => return Ok(()),
+                Fill::Eof => {
+                    if arena.len == 0 {
+                        // Clean close between requests.
+                        return Ok(());
+                    }
+                    arena.resp.reset();
+                    write_error(
+                        &mut arena.resp,
+                        400,
+                        "Protocol",
+                        format_args!("connection closed mid-request (truncated head)"),
+                    );
+                    return arena.resp.write_to(stream, false);
+                }
+            }
+        };
+
+        // 2. Parse the head; unframeable input closes after the reply.
+        let head = match parse_head(&arena.buf[..head_len], 0) {
+            Ok(h) => h,
+            Err(msg) => {
+                arena.resp.reset();
+                write_error(&mut arena.resp, 400, "Protocol", format_args!("{msg}"));
+                return arena.resp.write_to(stream, false);
+            }
+        };
+
+        // 3. Frame the body. POST without a length is 411 (framing is
+        // still intact — no body follows — so keep-alive survives).
+        let method_is_post = &arena.buf[head.method.clone()] == b"POST";
+        let content_length = match head.content_length {
+            Some(n) => n,
+            None if method_is_post => {
+                arena.resp.reset();
+                write_error(
+                    &mut arena.resp,
+                    411,
+                    "Protocol",
+                    format_args!("POST requires content-length"),
+                );
+                arena.resp.write_to(stream, head.keep_alive)?;
+                arena.buf.copy_within(head_len..arena.len, 0);
+                arena.len -= head_len;
+                if head.keep_alive {
+                    continue;
+                }
+                return Ok(());
+            }
+            None => 0,
+        };
+        if content_length > limits.max_body {
+            // The oversized body is never read; resync is impossible.
+            arena.resp.reset();
+            write_error(
+                &mut arena.resp,
+                413,
+                "Protocol",
+                format_args!("content-length {content_length} exceeds limit {}", limits.max_body),
+            );
+            return arena.resp.write_to(stream, false);
+        }
+        let total = head_len + content_length;
+        while arena.len < total {
+            match fill(stream, arena, stop)? {
+                Fill::Bytes => {}
+                Fill::Stopped => return Ok(()),
+                Fill::Eof => {
+                    arena.resp.reset();
+                    write_error(
+                        &mut arena.resp,
+                        400,
+                        "Protocol",
+                        format_args!("connection closed mid-request (truncated body)"),
+                    );
+                    return arena.resp.write_to(stream, false);
+                }
+            }
+        }
+
+        // 4. Dispatch. Method/path bytes were validated ASCII in
+        // `parse_head`, so the str views cannot fail.
+        let keep_alive = {
+            let ConnArena { ref buf, ref mut resp, .. } = *arena;
+            resp.reset();
+            let method = std::str::from_utf8(&buf[head.method.clone()]).unwrap_or("");
+            let path = std::str::from_utf8(&buf[head.path.clone()]).unwrap_or("");
+            let body = &buf[head_len..total];
+            app.handle(method, path, body, resp);
+            head.keep_alive && !resp.close
+        };
+
+        // 5. Reply, then compact any pipelined bytes to the front.
+        arena.resp.write_to(stream, keep_alive)?;
+        arena.buf.copy_within(total..arena.len, 0);
+        arena.len -= total;
+        if !keep_alive {
+            return Ok(());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Echo app: replies with the body length, closing when asked.
+    struct EchoApp;
+    impl App for EchoApp {
+        fn handle(&mut self, method: &str, path: &str, body: &[u8], resp: &mut ResponseBuf) {
+            resp.status = 200;
+            let _ = write!(
+                resp.body,
+                "{{\"method\":\"{method}\",\"path\":\"{path}\",\"len\":{}}}",
+                body.len()
+            );
+        }
+    }
+
+    /// In-memory stream delivering the scripted input in fixed-size read
+    /// chunks, then EOF; writes are captured.
+    struct MemStream {
+        input: Vec<u8>,
+        pos: usize,
+        chunk: usize,
+        out: Vec<u8>,
+    }
+
+    impl MemStream {
+        fn new(input: &[u8], chunk: usize) -> Self {
+            Self { input: input.to_vec(), pos: 0, chunk, out: Vec::new() }
+        }
+    }
+
+    impl Read for MemStream {
+        fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+            let n = self.chunk.min(buf.len()).min(self.input.len() - self.pos);
+            buf[..n].copy_from_slice(&self.input[self.pos..self.pos + n]);
+            self.pos += n;
+            Ok(n)
+        }
+    }
+
+    impl Write for MemStream {
+        fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+            self.out.extend_from_slice(buf);
+            Ok(buf.len())
+        }
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+
+    fn serve(input: &[u8], chunk: usize) -> String {
+        let mut stream = MemStream::new(input, chunk);
+        let mut arena = ConnArena::new();
+        let mut app = EchoApp;
+        serve_connection(&mut stream, &mut arena, &mut app, &HttpLimits::default(), &|| false)
+            .unwrap();
+        String::from_utf8(stream.out).unwrap()
+    }
+
+    #[test]
+    fn frames_pipelined_requests_across_tiny_reads() {
+        let input = b"POST /a HTTP/1.1\r\nContent-Length: 2\r\n\r\nhi\
+                      GET /b HTTP/1.1\r\n\r\n";
+        for chunk in [1, 3, 7, 1024] {
+            let out = serve(input, chunk);
+            assert_eq!(out.matches("HTTP/1.1 200 OK").count(), 2, "chunk {chunk}: {out}");
+            assert!(out.contains("\"path\":\"/a\",\"len\":2"), "{out}");
+            assert!(out.contains("\"path\":\"/b\",\"len\":0"), "{out}");
+        }
+    }
+
+    #[test]
+    fn truncated_head_and_body_close_with_400() {
+        let out = serve(b"POST /a HTT", 1024);
+        assert!(out.starts_with("HTTP/1.1 400"), "{out}");
+        assert!(out.contains("truncated head"), "{out}");
+        let out = serve(b"POST /a HTTP/1.1\r\nContent-Length: 10\r\n\r\nshort", 1024);
+        assert!(out.starts_with("HTTP/1.1 400"), "{out}");
+        assert!(out.contains("truncated body"), "{out}");
+        // A clean close between requests is not an error (no reply owed).
+        assert_eq!(serve(b"", 1024), "");
+    }
+
+    #[test]
+    fn content_length_violations_are_typed() {
+        let out = serve(b"POST /a HTTP/1.1\r\nContent-Length: abc\r\n\r\n", 1024);
+        assert!(out.starts_with("HTTP/1.1 400"), "{out}");
+        let out = serve(
+            b"POST /a HTTP/1.1\r\nContent-Length: 2\r\nContent-Length: 3\r\n\r\nhi",
+            1024,
+        );
+        assert!(out.starts_with("HTTP/1.1 400"), "{out}");
+        let out = serve(b"POST /a HTTP/1.1\r\n\r\n", 1024);
+        assert!(out.starts_with("HTTP/1.1 411"), "{out}");
+        let out = serve(b"POST /a HTTP/1.1\r\nContent-Length: 99999999\r\n\r\n", 1024);
+        assert!(out.starts_with("HTTP/1.1 413"), "{out}");
+        let out = serve(b"POST /a HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n", 1024);
+        assert!(out.starts_with("HTTP/1.1 400"), "{out}");
+        assert!(out.contains("chunked"), "{out}");
+    }
+
+    /// 411 keeps the connection alive (framing intact): the follow-up
+    /// request on the same stream still gets served.
+    #[test]
+    fn connection_survives_length_required() {
+        let out = serve(b"POST /a HTTP/1.1\r\n\r\nGET /b HTTP/1.1\r\n\r\n", 1024);
+        assert!(out.contains("HTTP/1.1 411"), "{out}");
+        assert!(out.contains("\"path\":\"/b\""), "{out}");
+    }
+
+    #[test]
+    fn oversized_head_is_431() {
+        let mut input = Vec::from(&b"GET /a HTTP/1.1\r\nX-Pad: "[..]);
+        input.resize(input.len() + 64 * 1024, b'x');
+        let out = serve(&input, 1024);
+        assert!(out.starts_with("HTTP/1.1 431"), "{out}");
+    }
+
+    #[test]
+    fn connection_close_header_is_honored() {
+        let input = b"GET /a HTTP/1.1\r\nConnection: close\r\n\r\nGET /b HTTP/1.1\r\n\r\n";
+        let out = serve(input, 1024);
+        assert_eq!(out.matches("HTTP/1.1 200").count(), 1, "{out}");
+        assert!(out.contains("Connection: close"), "{out}");
+        // HTTP/1.0 defaults to close; 1.1 defaults to keep-alive.
+        let out = serve(b"GET /a HTTP/1.0\r\n\r\nGET /b HTTP/1.0\r\n\r\n", 1024);
+        assert_eq!(out.matches("HTTP/1.1 200").count(), 1, "{out}");
+    }
+
+    #[test]
+    fn malformed_request_lines_are_400() {
+        for bad in [
+            &b"GARBAGE\r\n\r\n"[..],
+            b"get /a HTTP/1.1\r\n\r\n",
+            b"GET a HTTP/1.1\r\n\r\n",
+            b"GET /a HTTP/2\r\n\r\n",
+            b"GET /a\x7fb HTTP/1.1\r\n\r\n",
+            b"GET /a HTTP/1.1\r\nNoColonHere\r\n\r\n",
+        ] {
+            let out = serve(bad, 1024);
+            assert!(out.starts_with("HTTP/1.1 400"), "{:?} -> {out}", String::from_utf8_lossy(bad));
+        }
+    }
+
+    #[test]
+    fn json_escape_escapes_controls_and_quotes() {
+        let mut resp = ResponseBuf::new();
+        write_error(&mut resp, 400, "Protocol", format_args!("a\"b\\c\nd\u{1}e"));
+        let body = String::from_utf8(resp.body.clone()).unwrap();
+        assert_eq!(body, "{\"error\":\"Protocol\",\"message\":\"a\\\"b\\\\c\\nd\\u0001e\"}");
+        // The body must itself parse as JSON.
+        crate::util::json::Json::parse(&body).unwrap();
+    }
+}

@@ -1,0 +1,197 @@
+//! HTTP/1.1 JSON serving front-end and admin plane.
+//!
+//! A dependency-free network front door over the
+//! [`coordinator`](crate::coordinator): plain `std::net::TcpListener`,
+//! hand-rolled HTTP/1.1 framing ([`conn`]), a lazy single-pass JSON
+//! scanner for the hot path ([`scanner`]), and four routes ([`router`],
+//! [`admin`]):
+//!
+//! | endpoint             | method | purpose                                    |
+//! |----------------------|--------|--------------------------------------------|
+//! | `/v1/infer`          | POST   | submit one image, wait for the result      |
+//! | `/metrics`           | GET    | full metrics snapshot + live routing view  |
+//! | `/admin/swap`        | POST   | hot-swap a deployment (config-file schema) |
+//! | `/admin/weight`      | POST   | retune a deployment's scheduling share     |
+//!
+//! ## Infer request / response
+//!
+//! ```json
+//! {"model": "lenet", "image": [0.0, ...], "timeout_ms": 50}
+//! ```
+//!
+//! `image` is required (row-major HWC f32, length must equal the model's
+//! input shape); `model` defaults to registry slot 0; `timeout_ms`
+//! defaults to the configured `serve.http.default_timeout_ms`. A 200
+//! reply carries `{"id","predicted","latency_us","scores"}`.
+//!
+//! ## Status contract
+//!
+//! Protocol errors: `400` malformed framing or JSON, `404` unknown route,
+//! `405` wrong method, `411` POST without `Content-Length`, `413` body
+//! over `serve.http.max_body_kb`, `431` oversized head. Serving errors map
+//! one [`ServeError`](crate::coordinator::ServeError) variant to one
+//! status (see [`router::serve_error_parts`]); every error body is
+//! `{"error":CODE,"message":TEXT}`. The whole contract is pinned by
+//! `tests/http_protocol.rs` (fuzz) and `tests/http_taxonomy.rs`
+//! (per-variant conformance).
+//!
+//! ## Memory discipline
+//!
+//! One [`conn::ConnArena`] + [`router::CoordinatorApp`] per connection;
+//! after warm-up, a persistent connection serves `POST /v1/infer` with
+//! zero allocations in the HTTP layer (scan, dispatch, response
+//! formatting) — proven by `tests/alloc_http_steady_state.rs`, the same
+//! discipline the compute hot path's `Scratch` arenas enforce.
+
+pub mod admin;
+pub mod conn;
+pub mod router;
+pub mod scanner;
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{Client, ModelRegistry};
+use crate::metrics::Metrics;
+use crate::serve_http::conn::{serve_connection, ConnArena, HttpLimits};
+use crate::serve_http::router::CoordinatorApp;
+
+/// Front-end configuration (the `serve.http` config block, resolved).
+#[derive(Clone, Debug)]
+pub struct HttpConfig {
+    /// Bind address, e.g. `127.0.0.1:8080` (port 0 lets the OS pick —
+    /// used by every test; read the real port back via
+    /// [`HttpServer::addr`]).
+    pub addr: String,
+    /// Deadline applied when an infer request omits `timeout_ms`.
+    pub default_timeout_ms: u64,
+    /// Request-body cap in bytes (`413` beyond).
+    pub max_body_bytes: usize,
+    /// Artifacts directory for `/admin/swap` weight resolution.
+    pub artifacts: String,
+}
+
+impl Default for HttpConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:8080".to_string(),
+            default_timeout_ms: 1000,
+            max_body_bytes: 1024 * 1024,
+            artifacts: "artifacts".to_string(),
+        }
+    }
+}
+
+/// The running front-end: an accept loop plus one thread per live
+/// connection. Threads (not async) keep the server dependency-free and
+/// match the coordinator's own worker model; serving concurrency is
+/// bounded by the coordinator's queue, not the connection count.
+pub struct HttpServer {
+    local_addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind `cfg.addr` and start accepting. Each connection gets a fresh
+    /// arena + app (both reused across all requests on that connection)
+    /// and a short read timeout so idle keep-alive connections observe
+    /// shutdown promptly.
+    pub fn start(
+        cfg: HttpConfig,
+        client: Client,
+        registry: Arc<ModelRegistry>,
+        metrics: Arc<Metrics>,
+    ) -> Result<Self> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("http: bind {} failed", cfg.addr))?;
+        let local_addr = listener.local_addr().context("http: local_addr")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let accept = {
+            let stop = Arc::clone(&stop);
+            std::thread::Builder::new()
+                .name("http-accept".to_string())
+                .spawn(move || accept_loop(listener, &cfg, client, registry, metrics, &stop))
+                .context("http: spawn accept thread")?
+        };
+        Ok(Self { local_addr, stop, accept: Some(accept) })
+    }
+
+    /// The bound address (resolves port 0 to the OS-assigned port).
+    pub fn addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Stop accepting and unblock the accept thread. Live connections
+    /// notice via their read-timeout stop checks and drain naturally.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        // `accept()` has no timeout: poke it with a throwaway connection
+        // so the loop re-checks the stop flag and exits.
+        let _ = TcpStream::connect(self.local_addr);
+        if let Some(handle) = self.accept.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        if self.accept.is_some() {
+            self.stop_and_join();
+        }
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    cfg: &HttpConfig,
+    client: Client,
+    registry: Arc<ModelRegistry>,
+    metrics: Arc<Metrics>,
+    stop: &Arc<AtomicBool>,
+) {
+    let limits = HttpLimits { max_head: 16 * 1024, max_body: cfg.max_body_bytes };
+    loop {
+        if stop.load(Ordering::Acquire) {
+            return;
+        }
+        let stream = match listener.accept() {
+            Ok((stream, _)) => stream,
+            Err(_) => continue,
+        };
+        if stop.load(Ordering::Acquire) {
+            return;
+        }
+        let _ = stream.set_read_timeout(Some(Duration::from_millis(250)));
+        let _ = stream.set_nodelay(true);
+        let conn_stop = Arc::clone(stop);
+        let mut app = CoordinatorApp::new(
+            client.clone(),
+            Arc::clone(&registry),
+            Arc::clone(&metrics),
+            cfg.default_timeout_ms,
+            cfg.artifacts.clone(),
+        );
+        let spawned = std::thread::Builder::new().name("http-conn".to_string()).spawn(move || {
+            let mut stream = stream;
+            let mut arena = ConnArena::new();
+            let stop_fn = || conn_stop.load(Ordering::Acquire);
+            let _ = serve_connection(&mut stream, &mut arena, &mut app, &limits, &stop_fn);
+        });
+        if spawned.is_err() {
+            // Thread exhaustion: drop the connection rather than the
+            // server. The peer sees a close and retries.
+            continue;
+        }
+    }
+}

@@ -1,0 +1,342 @@
+//! Route table, `ServeError` → HTTP status mapping, and the coordinator-
+//! backed [`App`] implementation.
+//!
+//! The status mapping below is the wire contract — pinned one variant at a
+//! time by `tests/http_taxonomy.rs` and documented in the README error
+//! taxonomy table:
+//!
+//! | `ServeError` variant | status |
+//! |----------------------|--------|
+//! | `DeadlineExceeded`   | 504    |
+//! | `ShedLoad`           | 429    |
+//! | `QueueFull`          | 503    |
+//! | `Draining`           | 503    |
+//! | `WorkerFault`        | 500    |
+//! | `NumericFault`       | 500    |
+//! | `UnknownModel`       | 404    |
+//! | `NoRegistry`         | 500    |
+//!
+//! The infer path reuses per-connection scratch ([`scanner::InferRequest`]
+//! buffers live inside [`CoordinatorApp`], one app per connection) and
+//! formats responses with `write!` into the arena's body buffer — after
+//! warm-up the HTTP layer adds zero allocations per request
+//! (`tests/alloc_http_steady_state.rs`).
+
+use std::io::Write as _;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::coordinator::{Client, ModelRegistry, ServeError};
+use crate::metrics::Metrics;
+use crate::nn::Tensor;
+use crate::serve_http::admin;
+use crate::serve_http::conn::{write_error, App, ResponseBuf};
+use crate::serve_http::scanner::{scan_infer, scan_weight, InferRequest, WeightRequest};
+use crate::util::json::Json;
+
+/// The four endpoints of the serving plane.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Route {
+    /// `POST /v1/infer`
+    Infer,
+    /// `GET /metrics`
+    Metrics,
+    /// `POST /admin/swap`
+    AdminSwap,
+    /// `POST /admin/weight`
+    AdminWeight,
+}
+
+/// Resolve `(method, path)` to a route, or the `(status, message)` pair
+/// for the protocol error to reply with (405 wrong method on a known
+/// path, 404 otherwise).
+pub fn route(method: &str, path: &str) -> Result<Route, (u16, &'static str)> {
+    let (want, route) = match path {
+        "/v1/infer" => ("POST", Route::Infer),
+        "/metrics" => ("GET", Route::Metrics),
+        "/admin/swap" => ("POST", Route::AdminSwap),
+        "/admin/weight" => ("POST", Route::AdminWeight),
+        _ => return Err((404, "unknown route")),
+    };
+    if method == want {
+        Ok(route)
+    } else {
+        Err((405, "method not allowed for this route"))
+    }
+}
+
+/// The HTTP status and stable error-code string for a [`ServeError`] —
+/// the taxonomy table's wire form. Message text comes from the variant's
+/// `Display` impl, which is already part of the serving contract.
+pub fn serve_error_parts(e: &ServeError) -> (u16, &'static str) {
+    match e {
+        ServeError::DeadlineExceeded { .. } => (504, "DeadlineExceeded"),
+        ServeError::ShedLoad { .. } => (429, "ShedLoad"),
+        ServeError::QueueFull { .. } => (503, "QueueFull"),
+        ServeError::Draining => (503, "Draining"),
+        ServeError::WorkerFault { .. } => (500, "WorkerFault"),
+        ServeError::NumericFault { .. } => (500, "NumericFault"),
+        ServeError::UnknownModel { .. } => (404, "UnknownModel"),
+        ServeError::NoRegistry => (500, "NoRegistry"),
+    }
+}
+
+/// Write the standard error body for a [`ServeError`].
+pub fn write_serve_error(resp: &mut ResponseBuf, e: &ServeError) {
+    let (status, code) = serve_error_parts(e);
+    write_error(resp, status, code, format_args!("{e}"));
+}
+
+/// Write the 200 infer response:
+/// `{"id":N,"predicted":N,"latency_us":N,"scores":[..]}`.
+///
+/// Public so the counting-allocator suite can drive the exact production
+/// formatting path over an in-memory stream.
+pub fn write_infer_response(
+    resp: &mut ResponseBuf,
+    id: u64,
+    predicted: usize,
+    latency_us: u128,
+    scores: &[f32],
+) {
+    resp.status = 200;
+    let _ = write!(
+        resp.body,
+        "{{\"id\":{id},\"predicted\":{predicted},\"latency_us\":{latency_us},\"scores\":["
+    );
+    for (i, s) in scores.iter().enumerate() {
+        if i > 0 {
+            resp.body.push(b',');
+        }
+        // f32 Display always emits valid JSON numbers for finite values;
+        // the coordinator's numeric-fault guard rejects NaN/inf upstream.
+        let _ = write!(resp.body, "{s}");
+    }
+    resp.body.extend_from_slice(b"]}");
+}
+
+/// Coordinator-backed route handler: one instance per connection, owning
+/// the connection's request-scratch ([`InferRequest`] / [`WeightRequest`]
+/// reusable buffers).
+pub struct CoordinatorApp {
+    client: Client,
+    registry: Arc<ModelRegistry>,
+    metrics: Arc<Metrics>,
+    /// Applied when an infer request omits `timeout_ms`.
+    default_timeout_ms: u64,
+    /// Artifacts directory for resolving swap weight sources.
+    artifacts: String,
+    infer: InferRequest,
+    weight: WeightRequest,
+}
+
+impl CoordinatorApp {
+    pub fn new(
+        client: Client,
+        registry: Arc<ModelRegistry>,
+        metrics: Arc<Metrics>,
+        default_timeout_ms: u64,
+        artifacts: String,
+    ) -> Self {
+        Self {
+            client,
+            registry,
+            metrics,
+            default_timeout_ms,
+            artifacts,
+            infer: InferRequest::new(),
+            weight: WeightRequest::new(),
+        }
+    }
+
+    fn handle_infer(&mut self, body: &[u8], resp: &mut ResponseBuf) {
+        if let Err(e) = scan_infer(body, &mut self.infer) {
+            write_error(resp, 400, "Protocol", format_args!("{e}"));
+            return;
+        }
+        // Resolve the deployment first so shape validation can use its
+        // declared input geometry (and a bogus name is a clean 404, not a
+        // submit-time surprise).
+        let dep = if self.infer.has_model {
+            match self.registry.deployment(&self.infer.model) {
+                Some(dep) => dep,
+                None => {
+                    let e = ServeError::UnknownModel {
+                        model: self.infer.model.clone(),
+                        registered: self.registry.names().join(", "),
+                    };
+                    write_serve_error(resp, &e);
+                    return;
+                }
+            }
+        } else {
+            match self.registry.resolve(0) {
+                Some((_, dep)) => dep,
+                None => {
+                    write_serve_error(resp, &ServeError::NoRegistry);
+                    return;
+                }
+            }
+        };
+        let (h, w, c) = dep.model.input_hwc;
+        if self.infer.image.len() != h * w * c {
+            write_error(
+                resp,
+                400,
+                "Protocol",
+                format_args!(
+                    "image has {} values; model '{}' expects {}x{}x{} = {}",
+                    self.infer.image.len(),
+                    dep.name,
+                    h,
+                    w,
+                    c,
+                    h * w * c
+                ),
+            );
+            return;
+        }
+        // The image buffer is cloned into the Tensor: the submission
+        // outlives this request, so this is an inherent per-request copy
+        // (same as the in-process API), not HTTP overhead.
+        let image = Tensor::from_vec(h, w, c, self.infer.image.clone());
+        let budget =
+            Duration::from_millis(self.infer.timeout_ms.unwrap_or(self.default_timeout_ms));
+        let submitted = if self.infer.has_model {
+            self.client.submit_to_within(&self.infer.model, image, budget)
+        } else {
+            self.client.submit_within(image, budget)
+        };
+        let rx = match submitted {
+            Ok((_, rx)) => rx,
+            Err(err) => {
+                match err.downcast_ref::<ServeError>() {
+                    Some(se) => write_serve_error(resp, se),
+                    None => write_error(resp, 500, "Internal", format_args!("{err:#}")),
+                }
+                return;
+            }
+        };
+        match rx.recv() {
+            Ok(Ok(r)) => {
+                write_infer_response(resp, r.id, r.predicted, r.latency.as_micros(), &r.scores);
+            }
+            Ok(Err(se)) => write_serve_error(resp, &se),
+            Err(_) => write_error(
+                resp,
+                500,
+                "ChannelClosed",
+                format_args!("response channel closed before a reply (worker lost)"),
+            ),
+        }
+    }
+
+    fn handle_metrics(&mut self, resp: &mut ResponseBuf) {
+        let mut doc = self.metrics.snapshot().to_json();
+        // Enrich the snapshot with the registry's live routing view —
+        // generation and scheduling weight per slot — so one GET shows
+        // both counters and topology (the chaos suite reads `generation`
+        // here to prove a swap landed).
+        let mut deployments = Vec::with_capacity(self.registry.len());
+        for slot in 0..self.registry.len() {
+            let Some((generation, dep)) = self.registry.resolve(slot) else { continue };
+            let weight = self.registry.weight_of(slot).unwrap_or(dep.weight);
+            deployments.push(Json::obj(vec![
+                ("name", Json::Str(dep.name.clone())),
+                ("generation", Json::Num(generation as f64)),
+                ("weight", Json::Num(weight as f64)),
+                ("precision", Json::Str(dep.precision().label().to_string())),
+            ]));
+        }
+        if let Json::Obj(map) = &mut doc {
+            map.insert("deployments".to_string(), Json::Arr(deployments));
+        }
+        resp.status = 200;
+        // The metrics path allocates (snapshot + JSON tree) — it is the
+        // observability plane, not the hot path; zero-alloc discipline
+        // covers `/v1/infer` only.
+        resp.body.extend_from_slice(doc.to_string().as_bytes());
+    }
+}
+
+impl App for CoordinatorApp {
+    fn handle(&mut self, method: &str, path: &str, body: &[u8], resp: &mut ResponseBuf) {
+        match route(method, path) {
+            Ok(Route::Infer) => self.handle_infer(body, resp),
+            Ok(Route::Metrics) => self.handle_metrics(resp),
+            Ok(Route::AdminSwap) => {
+                admin::handle_swap(&self.registry, &self.artifacts, body, resp);
+            }
+            Ok(Route::AdminWeight) => {
+                admin::handle_weight(&self.registry, &mut self.weight, body, resp);
+            }
+            Err((status, msg)) => {
+                let code = if status == 405 { "MethodNotAllowed" } else { "NotFound" };
+                write_error(resp, status, code, format_args!("{msg}: {method} {path}"));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn route_table_matches_contract() {
+        assert_eq!(route("POST", "/v1/infer"), Ok(Route::Infer));
+        assert_eq!(route("GET", "/metrics"), Ok(Route::Metrics));
+        assert_eq!(route("POST", "/admin/swap"), Ok(Route::AdminSwap));
+        assert_eq!(route("POST", "/admin/weight"), Ok(Route::AdminWeight));
+        assert_eq!(route("GET", "/v1/infer").unwrap_err().0, 405);
+        assert_eq!(route("POST", "/metrics").unwrap_err().0, 405);
+        assert_eq!(route("GET", "/nope").unwrap_err().0, 404);
+    }
+
+    #[test]
+    fn serve_error_statuses_are_pinned() {
+        let cases: Vec<(ServeError, u16, &str)> = vec![
+            (ServeError::DeadlineExceeded { waited_us: 7 }, 504, "DeadlineExceeded"),
+            (
+                ServeError::ShedLoad { model: "m".into(), queued: 2, quota: 1 },
+                429,
+                "ShedLoad",
+            ),
+            (ServeError::QueueFull { depth: 9 }, 503, "QueueFull"),
+            (ServeError::Draining, 503, "Draining"),
+            (
+                ServeError::WorkerFault { model: "m".into(), message: "boom".into() },
+                500,
+                "WorkerFault",
+            ),
+            (ServeError::NumericFault { model: "m".into() }, 500, "NumericFault"),
+            (
+                ServeError::UnknownModel { model: "x".into(), registered: "m".into() },
+                404,
+                "UnknownModel",
+            ),
+            (ServeError::NoRegistry, 500, "NoRegistry"),
+        ];
+        for (e, status, code) in cases {
+            assert_eq!(serve_error_parts(&e), (status, code), "{e}");
+        }
+    }
+
+    #[test]
+    fn infer_response_body_is_valid_json() {
+        let mut resp = ResponseBuf::new();
+        write_infer_response(&mut resp, 42, 3, 1234, &[0.125, -1.5, 0.0]);
+        let body = String::from_utf8(resp.body.clone()).unwrap();
+        let doc = Json::parse(&body).unwrap();
+        assert_eq!(doc.get("id").as_f64(), Some(42.0));
+        assert_eq!(doc.get("predicted").as_f64(), Some(3.0));
+        assert_eq!(doc.get("latency_us").as_f64(), Some(1234.0));
+        match doc.get("scores") {
+            Json::Arr(scores) => {
+                assert_eq!(scores.len(), 3);
+                assert_eq!(scores[0].as_f64(), Some(0.125));
+            }
+            other => panic!("scores not an array: {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,609 @@
+//! Lazy single-pass JSON request scanner.
+//!
+//! The infer hot path never builds a [`crate::util::json::Json`] DOM:
+//! [`scan_infer`] walks the body bytes once, extracting only the fields
+//! the route needs (`model`, `image`, `timeout_ms`) into caller-owned
+//! reusable buffers and validating-but-skipping everything else. After the
+//! first few requests warm a connection's [`InferRequest`] capacity, a
+//! scan performs **zero allocations** (`tests/alloc_http_steady_state.rs`
+//! proves it with a counting allocator).
+//!
+//! The scanner is strict where it matters for a public wire surface:
+//! strings must be valid UTF-8 with legal escapes (including surrogate
+//! pairs), numbers must be finite, nesting in skipped values is
+//! depth-limited ([`MAX_DEPTH`]), and trailing bytes after the top-level
+//! object are rejected. Every failure is a typed [`ScanError`] carrying a
+//! static message and byte offset — never a panic (the protocol fuzz
+//! suite in `tests/http_protocol.rs` holds it to that).
+
+/// Maximum nesting depth inside *skipped* values (the extracted fields are
+/// flat by schema). Bounds stack use against `[[[[…` bombs.
+pub const MAX_DEPTH: usize = 32;
+
+/// A scan failure: static description plus the byte offset it was
+/// detected at. Mapped to HTTP `400` by the router.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ScanError {
+    pub msg: &'static str,
+    /// Byte offset into the request body.
+    pub at: usize,
+}
+
+impl std::fmt::Display for ScanError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} (at body byte {})", self.msg, self.at)
+    }
+}
+
+impl std::error::Error for ScanError {}
+
+/// Reusable parse target for `POST /v1/infer` bodies. Owned by the
+/// connection and reset per request — `String`/`Vec` capacity persists, so
+/// steady-state scans allocate nothing.
+#[derive(Debug, Default)]
+pub struct InferRequest {
+    /// Routing key (`"model"`); empty + `has_model == false` when omitted
+    /// (the request then routes to the default deployment, slot 0).
+    pub model: String,
+    pub has_model: bool,
+    /// Flattened HWC image payload (`"image"`), required.
+    pub image: Vec<f32>,
+    /// Per-request deadline budget (`"timeout_ms"`); `None` = server
+    /// default. `0` is answered dead-on-arrival (`504`) by design.
+    pub timeout_ms: Option<u64>,
+    key: String,
+}
+
+impl InferRequest {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn reset(&mut self) {
+        self.model.clear();
+        self.has_model = false;
+        self.image.clear();
+        self.timeout_ms = None;
+        self.key.clear();
+    }
+}
+
+/// Reusable parse target for `POST /admin/weight` bodies.
+#[derive(Debug, Default)]
+pub struct WeightRequest {
+    /// Deployment to re-balance (`"model"`), required.
+    pub model: String,
+    /// New scheduling share (`"weight"`), required.
+    pub weight: u64,
+    key: String,
+}
+
+impl WeightRequest {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// Single-pass scan of a `POST /v1/infer` body into `req`. `image` is
+/// required; `model` and `timeout_ms` are optional; unknown fields are
+/// validated and skipped.
+pub fn scan_infer(body: &[u8], req: &mut InferRequest) -> Result<(), ScanError> {
+    req.reset();
+    let mut s = Scanner { buf: body, pos: 0 };
+    let mut has_image = false;
+    s.object_open()?;
+    while s.object_next_key()? {
+        // Borrow dance: the key buffer and the field targets live in the
+        // same struct, so compare on a temporary swap-out.
+        let mut key = std::mem::take(&mut req.key);
+        s.string(Some(&mut key))?;
+        s.pair_sep()?;
+        let result = match key.as_str() {
+            "model" => s.string(Some(&mut req.model)).map(|()| req.has_model = true),
+            "image" => s.f32_array(&mut req.image).map(|()| has_image = true),
+            "timeout_ms" => s.u64_value().map(|v| req.timeout_ms = Some(v)),
+            _ => s.skip_value(0),
+        };
+        req.key = key;
+        result?;
+    }
+    s.end_of_body()?;
+    if !has_image {
+        return Err(ScanError { msg: "missing required field: image", at: s.pos });
+    }
+    Ok(())
+}
+
+/// Single-pass scan of a `POST /admin/weight` body into `req`. Both
+/// `model` and `weight` are required.
+pub fn scan_weight(body: &[u8], req: &mut WeightRequest) -> Result<(), ScanError> {
+    req.model.clear();
+    req.weight = 0;
+    req.key.clear();
+    let mut s = Scanner { buf: body, pos: 0 };
+    let (mut has_model, mut has_weight) = (false, false);
+    s.object_open()?;
+    while s.object_next_key()? {
+        let mut key = std::mem::take(&mut req.key);
+        s.string(Some(&mut key))?;
+        s.pair_sep()?;
+        let result = match key.as_str() {
+            "model" => s.string(Some(&mut req.model)).map(|()| has_model = true),
+            "weight" => s.u64_value().map(|v| {
+                req.weight = v;
+                has_weight = true;
+            }),
+            _ => s.skip_value(0),
+        };
+        req.key = key;
+        result?;
+    }
+    s.end_of_body()?;
+    if !has_model {
+        return Err(ScanError { msg: "missing required field: model", at: s.pos });
+    }
+    if !has_weight {
+        return Err(ScanError { msg: "missing required field: weight", at: s.pos });
+    }
+    Ok(())
+}
+
+struct Scanner<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl Scanner<'_> {
+    fn err(&self, msg: &'static str) -> ScanError {
+        ScanError { msg, at: self.pos }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.buf.get(self.pos).copied()
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, b: u8, msg: &'static str) -> Result<(), ScanError> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(self.err(msg))
+        }
+    }
+
+    /// Consume the top-level `{` and position inside the object. Tracks
+    /// whether the object walk is mid-list via `object_next_key`.
+    fn object_open(&mut self) -> Result<(), ScanError> {
+        self.skip_ws();
+        self.expect(b'{', "body must be a JSON object")
+    }
+
+    /// Advance to the next key. Returns `false` once the closing `}` has
+    /// been consumed. Accepts the state right after `{`, and right after a
+    /// completed value (where a `,` or `}` must follow).
+    fn object_next_key(&mut self) -> Result<bool, ScanError> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'}') => {
+                self.pos += 1;
+                Ok(false)
+            }
+            Some(b'"') => Ok(true),
+            Some(b',') => {
+                self.pos += 1;
+                self.skip_ws();
+                if self.peek() == Some(b'"') {
+                    Ok(true)
+                } else {
+                    Err(self.err("expected object key after ','"))
+                }
+            }
+            _ => Err(self.err("expected ',' or '}' in object")),
+        }
+    }
+
+    /// The `:` between a key and its value.
+    fn pair_sep(&mut self) -> Result<(), ScanError> {
+        self.skip_ws();
+        self.expect(b':', "expected ':' after object key")?;
+        self.skip_ws();
+        Ok(())
+    }
+
+    /// After the top-level object closed: nothing but whitespace may
+    /// remain (trailing-garbage rejection — the framing said this was one
+    /// JSON document).
+    fn end_of_body(&mut self) -> Result<(), ScanError> {
+        self.skip_ws();
+        if self.pos == self.buf.len() {
+            Ok(())
+        } else {
+            Err(self.err("trailing bytes after JSON body"))
+        }
+    }
+
+    /// Parse a JSON string. With `out`, the decoded content is appended to
+    /// the (cleared) buffer; without, the string is validated and skipped.
+    /// Escapes, surrogate pairs, and raw multibyte UTF-8 are all checked —
+    /// invalid UTF-8 is a scan error, never a lossy decode.
+    fn string(&mut self, mut out: Option<&mut String>) -> Result<(), ScanError> {
+        if let Some(o) = out.as_deref_mut() {
+            o.clear();
+        }
+        self.expect(b'"', "expected a string")?;
+        loop {
+            let b = self.peek().ok_or_else(|| self.err("unterminated string"))?;
+            match b {
+                b'"' => {
+                    self.pos += 1;
+                    return Ok(());
+                }
+                b'\\' => {
+                    self.pos += 1;
+                    let e = self.peek().ok_or_else(|| self.err("unterminated string"))?;
+                    self.pos += 1;
+                    let c = match e {
+                        b'"' => '"',
+                        b'\\' => '\\',
+                        b'/' => '/',
+                        b'b' => '\u{8}',
+                        b'f' => '\u{c}',
+                        b'n' => '\n',
+                        b'r' => '\r',
+                        b't' => '\t',
+                        b'u' => self.unicode_escape()?,
+                        _ => {
+                            self.pos -= 1;
+                            return Err(self.err("invalid string escape"));
+                        }
+                    };
+                    if let Some(o) = out.as_deref_mut() {
+                        o.push(c);
+                    }
+                }
+                0x00..=0x1f => return Err(self.err("raw control character in string")),
+                0x20..=0x7f => {
+                    self.pos += 1;
+                    if let Some(o) = out.as_deref_mut() {
+                        o.push(b as char);
+                    }
+                }
+                _ => {
+                    let len = match b {
+                        0xc2..=0xdf => 2,
+                        0xe0..=0xef => 3,
+                        0xf0..=0xf4 => 4,
+                        _ => return Err(self.err("invalid UTF-8 in string")),
+                    };
+                    let bytes = self
+                        .buf
+                        .get(self.pos..self.pos + len)
+                        .ok_or_else(|| self.err("invalid UTF-8 in string"))?;
+                    let s = std::str::from_utf8(bytes)
+                        .map_err(|_| self.err("invalid UTF-8 in string"))?;
+                    if let Some(o) = out.as_deref_mut() {
+                        o.push_str(s);
+                    }
+                    self.pos += len;
+                }
+            }
+        }
+    }
+
+    /// The 4 hex digits after `\u`, combining surrogate pairs.
+    fn unicode_escape(&mut self) -> Result<char, ScanError> {
+        let hi = self.hex4()?;
+        let code = match hi {
+            0xd800..=0xdbff => {
+                // High surrogate: a `\uDC00..\uDFFF` low half must follow.
+                if self.peek() == Some(b'\\') {
+                    self.pos += 1;
+                } else {
+                    return Err(self.err("unpaired surrogate escape"));
+                }
+                self.expect(b'u', "unpaired surrogate escape")?;
+                let lo = self.hex4()?;
+                if !(0xdc00..=0xdfff).contains(&lo) {
+                    return Err(self.err("unpaired surrogate escape"));
+                }
+                0x10000 + ((hi - 0xd800) << 10) + (lo - 0xdc00)
+            }
+            0xdc00..=0xdfff => return Err(self.err("unpaired surrogate escape")),
+            c => c,
+        };
+        char::from_u32(code).ok_or_else(|| self.err("invalid unicode escape"))
+    }
+
+    fn hex4(&mut self) -> Result<u32, ScanError> {
+        let mut v = 0u32;
+        for _ in 0..4 {
+            let b = self.peek().ok_or_else(|| self.err("truncated unicode escape"))?;
+            let d = match b {
+                b'0'..=b'9' => (b - b'0') as u32,
+                b'a'..=b'f' => (b - b'a' + 10) as u32,
+                b'A'..=b'F' => (b - b'A' + 10) as u32,
+                _ => return Err(self.err("invalid unicode escape")),
+            };
+            v = (v << 4) | d;
+            self.pos += 1;
+        }
+        Ok(v)
+    }
+
+    /// A finite JSON number.
+    fn number(&mut self) -> Result<f64, ScanError> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while matches!(self.peek(), Some(b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-')) {
+            self.pos += 1;
+        }
+        let span = &self.buf[start..self.pos];
+        let text = std::str::from_utf8(span).map_err(|_| ScanError {
+            msg: "expected a number",
+            at: start,
+        })?;
+        let v: f64 =
+            text.parse().map_err(|_| ScanError { msg: "expected a number", at: start })?;
+        if !v.is_finite() {
+            return Err(ScanError { msg: "number out of range", at: start });
+        }
+        Ok(v)
+    }
+
+    /// A number that must be a non-negative integer (`timeout_ms`,
+    /// `weight`).
+    fn u64_value(&mut self) -> Result<u64, ScanError> {
+        let at = self.pos;
+        let v = self.number()?;
+        if v < 0.0 || v.fract() != 0.0 || v > (1u64 << 53) as f64 {
+            return Err(ScanError { msg: "expected a non-negative integer", at });
+        }
+        Ok(v as u64)
+    }
+
+    /// A flat `[f32, ...]` array appended to `out` (cleared first). Values
+    /// must be finite after the f64→f32 narrowing — a score payload that
+    /// overflows f32 is a client error, not a silent `inf`.
+    fn f32_array(&mut self, out: &mut Vec<f32>) -> Result<(), ScanError> {
+        out.clear();
+        self.expect(b'[', "image must be an array of numbers")?;
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(());
+        }
+        loop {
+            self.skip_ws();
+            let at = self.pos;
+            let v = self.number()? as f32;
+            if !v.is_finite() {
+                return Err(ScanError { msg: "image value out of f32 range", at });
+            }
+            out.push(v);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(());
+                }
+                _ => return Err(self.err("expected ',' or ']' in image array")),
+            }
+        }
+    }
+
+    fn literal(&mut self, text: &'static [u8]) -> Result<(), ScanError> {
+        if self.buf[self.pos..].starts_with(text) {
+            self.pos += text.len();
+            Ok(())
+        } else {
+            Err(self.err("invalid literal"))
+        }
+    }
+
+    /// Validate and discard any JSON value (unknown fields). Recursion is
+    /// bounded by [`MAX_DEPTH`].
+    fn skip_value(&mut self, depth: usize) -> Result<(), ScanError> {
+        if depth >= MAX_DEPTH {
+            return Err(self.err("value nested too deeply"));
+        }
+        self.skip_ws();
+        match self.peek() {
+            Some(b'{') => {
+                self.pos += 1;
+                self.skip_ws();
+                if self.peek() == Some(b'}') {
+                    self.pos += 1;
+                    return Ok(());
+                }
+                loop {
+                    self.skip_ws();
+                    self.string(None)?;
+                    self.pair_sep()?;
+                    self.skip_value(depth + 1)?;
+                    self.skip_ws();
+                    match self.peek() {
+                        Some(b',') => self.pos += 1,
+                        Some(b'}') => {
+                            self.pos += 1;
+                            return Ok(());
+                        }
+                        _ => return Err(self.err("expected ',' or '}' in object")),
+                    }
+                }
+            }
+            Some(b'[') => {
+                self.pos += 1;
+                self.skip_ws();
+                if self.peek() == Some(b']') {
+                    self.pos += 1;
+                    return Ok(());
+                }
+                loop {
+                    self.skip_value(depth + 1)?;
+                    self.skip_ws();
+                    match self.peek() {
+                        Some(b',') => self.pos += 1,
+                        Some(b']') => {
+                            self.pos += 1;
+                            return Ok(());
+                        }
+                        _ => return Err(self.err("expected ',' or ']' in array")),
+                    }
+                }
+            }
+            Some(b'"') => self.string(None),
+            Some(b't') => self.literal(b"true"),
+            Some(b'f') => self.literal(b"false"),
+            Some(b'n') => self.literal(b"null"),
+            Some(_) => self.number().map(|_| ()),
+            None => Err(self.err("unexpected end of body")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scans_full_infer_body() {
+        let mut req = InferRequest::new();
+        scan_infer(
+            br#"{"model": "lenet", "image": [0.5, -1, 2e-1], "timeout_ms": 250}"#,
+            &mut req,
+        )
+        .unwrap();
+        assert!(req.has_model);
+        assert_eq!(req.model, "lenet");
+        assert_eq!(req.image, vec![0.5, -1.0, 0.2]);
+        assert_eq!(req.timeout_ms, Some(250));
+    }
+
+    #[test]
+    fn model_and_timeout_are_optional_image_is_not() {
+        let mut req = InferRequest::new();
+        scan_infer(br#"{"image":[1]}"#, &mut req).unwrap();
+        assert!(!req.has_model);
+        assert_eq!(req.timeout_ms, None);
+        let err = scan_infer(br#"{"model":"lenet"}"#, &mut req).unwrap_err();
+        assert_eq!(err.msg, "missing required field: image");
+        // timeout_ms: 0 is legal (deliberate dead-on-arrival probe).
+        scan_infer(br#"{"image":[1],"timeout_ms":0}"#, &mut req).unwrap();
+        assert_eq!(req.timeout_ms, Some(0));
+    }
+
+    #[test]
+    fn unknown_fields_are_validated_and_skipped() {
+        let mut req = InferRequest::new();
+        scan_infer(
+            br#"{"trace": {"a": [1, {"b": null}], "c": "x"}, "flag": true,
+                 "image": [3], "extra": -1.5e3}"#,
+            &mut req,
+        )
+        .unwrap();
+        assert_eq!(req.image, vec![3.0]);
+        // ...but a malformed unknown value still fails the scan.
+        assert!(scan_infer(br#"{"trace": {"a": }, "image": [1]}"#, &mut req).is_err());
+        assert!(scan_infer(br#"{"flag": truthy, "image": [1]}"#, &mut req).is_err());
+    }
+
+    #[test]
+    fn depth_limit_stops_nesting_bombs() {
+        let mut body = Vec::from(&br#"{"x":"#[..]);
+        let open = body.len() + 200;
+        body.resize(open, b'[');
+        body.resize(open + 200, b']');
+        body.extend_from_slice(br#","image":[1]}"#);
+        let mut req = InferRequest::new();
+        let err = scan_infer(&body, &mut req).unwrap_err();
+        assert_eq!(err.msg, "value nested too deeply");
+    }
+
+    #[test]
+    fn rejects_trailing_garbage_and_non_objects() {
+        let mut req = InferRequest::new();
+        let err = scan_infer(br#"{"image":[1]} extra"#, &mut req).unwrap_err();
+        assert_eq!(err.msg, "trailing bytes after JSON body");
+        assert!(scan_infer(br#"{"image":[1]}{}"#, &mut req).is_err());
+        assert!(scan_infer(br#"[1,2,3]"#, &mut req).is_err());
+        assert!(scan_infer(b"", &mut req).is_err());
+        assert!(scan_infer(br#"{"image":[1],}"#, &mut req).is_err());
+    }
+
+    #[test]
+    fn string_escapes_and_utf8() {
+        let mut req = InferRequest::new();
+        scan_infer(
+            "{\"model\": \"a\\\"b\\\\c\\u00e9\\ud83d\\ude00é\", \"image\": [1]}".as_bytes(),
+            &mut req,
+        )
+        .unwrap();
+        assert_eq!(req.model, "a\"b\\cé\u{1f600}é");
+        // Invalid raw UTF-8, lone surrogates, raw control chars, bad
+        // escapes: all typed errors.
+        assert!(scan_infer(b"{\"model\": \"\xff\", \"image\": [1]}", &mut req).is_err());
+        assert!(scan_infer(b"{\"model\": \"\xe0\x80\", \"image\": [1]}", &mut req).is_err());
+        assert!(scan_infer(br#"{"model": "\ud800x", "image": [1]}"#, &mut req).is_err());
+        assert!(scan_infer(br#"{"model": "\udc00", "image": [1]}"#, &mut req).is_err());
+        assert!(scan_infer(b"{\"model\": \"a\nb\", \"image\": [1]}", &mut req).is_err());
+        assert!(scan_infer(br#"{"model": "\q", "image": [1]}"#, &mut req).is_err());
+        assert!(scan_infer(br#"{"model": "unterminated"#, &mut req).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_numbers() {
+        let mut req = InferRequest::new();
+        assert!(scan_infer(br#"{"image": [1e999]}"#, &mut req).is_err());
+        assert!(scan_infer(br#"{"image": [1e39]}"#, &mut req).is_err(), "f32 overflow");
+        assert!(scan_infer(br#"{"image": [--1]}"#, &mut req).is_err());
+        assert!(scan_infer(br#"{"image": ["1"]}"#, &mut req).is_err());
+        assert!(scan_infer(br#"{"image": [1], "timeout_ms": -5}"#, &mut req).is_err());
+        assert!(scan_infer(br#"{"image": [1], "timeout_ms": 1.5}"#, &mut req).is_err());
+        assert!(scan_infer(br#"{"image": [1], "timeout_ms": "1"}"#, &mut req).is_err());
+    }
+
+    #[test]
+    fn scan_weight_requires_both_fields() {
+        let mut req = WeightRequest::new();
+        scan_weight(br#"{"model": "mm", "weight": 4}"#, &mut req).unwrap();
+        assert_eq!((req.model.as_str(), req.weight), ("mm", 4));
+        // Weight 0 scans fine — rejecting it is the registry's call
+        // (`set_weight`), so the wire error names the real invariant.
+        scan_weight(br#"{"weight": 0, "model": "x"}"#, &mut req).unwrap();
+        assert_eq!(req.weight, 0);
+        let err = scan_weight(br#"{"weight": 1}"#, &mut req).unwrap_err();
+        assert_eq!(err.msg, "missing required field: model");
+        let err = scan_weight(br#"{"model": "x"}"#, &mut req).unwrap_err();
+        assert_eq!(err.msg, "missing required field: weight");
+        assert!(scan_weight(br#"{"model": "x", "weight": -1}"#, &mut req).is_err());
+    }
+
+    /// Buffer reuse: after a first scan warmed the buffers, re-scanning
+    /// equal-shaped bodies must not grow capacity (the counting-allocator
+    /// suite asserts the stronger zero-alloc property end to end).
+    #[test]
+    fn rescan_reuses_capacity() {
+        let body = br#"{"model": "lenet", "image": [1, 2, 3, 4], "timeout_ms": 9}"#;
+        let mut req = InferRequest::new();
+        scan_infer(body, &mut req).unwrap();
+        let caps = (req.model.capacity(), req.image.capacity(), req.key.capacity());
+        for _ in 0..100 {
+            scan_infer(body, &mut req).unwrap();
+        }
+        assert_eq!(
+            (req.model.capacity(), req.image.capacity(), req.key.capacity()),
+            caps,
+            "steady-state scans must not grow buffers"
+        );
+        assert_eq!(req.image, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+}

@@ -31,6 +31,13 @@
 //! analog MVM — so the zero-alloc budget below covers the batched FC
 //! path (and its sign-bitmask staging) across every deployment shape.
 //!
+//! The HTTP front-end's wire layer has the same discipline, pinned by its
+//! own single-test counting-allocator suite
+//! (`tests/alloc_http_steady_state.rs`): a warmed persistent connection
+//! serves `POST /v1/infer` — framing, body scan, response formatting —
+//! with zero allocations on top of the in-process request path this file
+//! covers.
+//!
 //! This file contains exactly one test so no concurrent test thread can
 //! pollute the global allocation counter.
 

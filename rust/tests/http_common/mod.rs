@@ -1,0 +1,193 @@
+//! Shared raw-HTTP plumbing for the wire-level suites
+//! (`http_protocol.rs`, `http_taxonomy.rs`, `http_chaos.rs`). Kept
+//! dependency-free like the server: hand-written request formatting and
+//! `Content-Length`-framed response parsing over `TcpStream`, so the
+//! tests exercise the real wire format rather than a client library's
+//! idea of it.
+#![allow(dead_code)]
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use tpu_imac::coordinator::{Coordinator, CoordinatorConfig, ModelRegistry};
+use tpu_imac::deploy::DeploymentSpec;
+use tpu_imac::serve_http::conn::{serve_connection, App, ConnArena, HttpLimits};
+use tpu_imac::serve_http::{HttpConfig, HttpServer};
+use tpu_imac::util::json::Json;
+
+/// One parsed HTTP response: status code and body text.
+#[derive(Debug)]
+pub struct WireResponse {
+    pub status: u16,
+    pub body: String,
+}
+
+impl WireResponse {
+    /// Parse the JSON body (every endpoint replies JSON).
+    pub fn json(&self) -> Json {
+        Json::parse(&self.body)
+            .unwrap_or_else(|e| panic!("body is not JSON ({e}): {:?}", self.body))
+    }
+
+    /// The `error` code string from a standard error body.
+    pub fn error_code(&self) -> String {
+        self.json().get("error").as_str().unwrap_or("<missing>").to_string()
+    }
+
+    /// The `message` string from a standard error body.
+    pub fn message(&self) -> String {
+        self.json().get("message").as_str().unwrap_or("<missing>").to_string()
+    }
+}
+
+/// Format one request with `Content-Length` framing (keep-alive implied
+/// by HTTP/1.1).
+pub fn format_request(method: &str, path: &str, body: &str) -> Vec<u8> {
+    format!(
+        "{method} {path} HTTP/1.1\r\nHost: test\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .into_bytes()
+}
+
+/// Read exactly one `Content-Length`-framed response off the stream.
+/// Panics on malformed framing — the server is under test here.
+pub fn read_response(stream: &mut impl Read) -> WireResponse {
+    let mut buf = Vec::new();
+    let head_end = loop {
+        if let Some(i) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+            break i + 4;
+        }
+        let mut chunk = [0u8; 4096];
+        let n = stream.read(&mut chunk).expect("read response head");
+        assert!(n > 0, "connection closed mid-response head: {:?}", String::from_utf8_lossy(&buf));
+        buf.extend_from_slice(&chunk[..n]);
+    };
+    let head = std::str::from_utf8(&buf[..head_end]).expect("response head is ASCII");
+    let status: u16 = head
+        .strip_prefix("HTTP/1.1 ")
+        .and_then(|rest| rest.get(..3))
+        .and_then(|code| code.parse().ok())
+        .unwrap_or_else(|| panic!("malformed status line: {head:?}"));
+    let content_length: usize = head
+        .lines()
+        .find_map(|l| l.to_ascii_lowercase().strip_prefix("content-length:").map(str::to_string))
+        .and_then(|v| v.trim().parse().ok())
+        .unwrap_or_else(|| panic!("response missing content-length: {head:?}"));
+    let mut body = buf[head_end..].to_vec();
+    while body.len() < content_length {
+        let mut chunk = [0u8; 4096];
+        let n = stream.read(&mut chunk).expect("read response body");
+        assert!(n > 0, "connection closed mid-response body");
+        body.extend_from_slice(&chunk[..n]);
+    }
+    assert_eq!(body.len(), content_length, "server over-sent past content-length");
+    WireResponse { status, body: String::from_utf8(body).expect("response body is UTF-8") }
+}
+
+/// Write one request and read one response on an existing stream
+/// (persistent-connection round trip).
+pub fn roundtrip(stream: &mut TcpStream, method: &str, path: &str, body: &str) -> WireResponse {
+    stream.write_all(&format_request(method, path, body)).expect("write request");
+    read_response(stream)
+}
+
+/// One-shot request on a fresh connection.
+pub fn request(addr: std::net::SocketAddr, method: &str, path: &str, body: &str) -> WireResponse {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    roundtrip(&mut stream, method, path, body)
+}
+
+/// In-memory `Read + Write` stream: serves the scripted input then EOF;
+/// writes are captured.
+struct MemStream {
+    input: Vec<u8>,
+    pos: usize,
+    out: Vec<u8>,
+}
+
+impl Read for MemStream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let n = buf.len().min(self.input.len() - self.pos);
+        buf[..n].copy_from_slice(&self.input[self.pos..self.pos + n]);
+        self.pos += n;
+        Ok(n)
+    }
+}
+
+impl Write for MemStream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.out.extend_from_slice(buf);
+        Ok(buf.len())
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+/// Drive one framed request through `serve_connection` over an in-memory
+/// stream — the production wire path minus the socket. For contract cases
+/// a [`TestServer`] cannot reach (e.g. a fixed-backend coordinator, which
+/// registry mode refuses to build).
+pub fn serve_in_memory(app: &mut dyn App, request: &[u8]) -> WireResponse {
+    let mut stream = MemStream { input: request.to_vec(), pos: 0, out: Vec::new() };
+    let mut arena = ConnArena::new();
+    serve_connection(&mut stream, &mut arena, app, &HttpLimits::default(), &|| false)
+        .expect("in-memory serve_connection");
+    read_response(&mut stream.out.as_slice())
+}
+
+/// A deterministic 28×28×1 image payload as a JSON array literal.
+pub fn image_json() -> String {
+    let mut out = String::with_capacity(784 * 6);
+    out.push('[');
+    for i in 0..784usize {
+        if i > 0 {
+            out.push(',');
+        }
+        // Small varied values; exact content is irrelevant to the wire
+        // tests, determinism is not.
+        out.push_str(&format!("{:.3}", ((i % 17) as f64 - 8.0) / 16.0));
+    }
+    out.push(']');
+    out
+}
+
+/// An infer body for `model` using the standard test image.
+pub fn infer_body(model: &str) -> String {
+    format!("{{\"model\":\"{model}\",\"image\":{}}}", image_json())
+}
+
+/// Everything a wire test needs running: coordinator + registry + HTTP
+/// front door on an OS-assigned port.
+pub struct TestServer {
+    pub coord: Coordinator,
+    pub registry: Arc<ModelRegistry>,
+    pub server: HttpServer,
+    pub addr: std::net::SocketAddr,
+}
+
+impl TestServer {
+    /// Start serving `specs` with the given coordinator config.
+    pub fn start(config: CoordinatorConfig, specs: &[DeploymentSpec]) -> Self {
+        let registry = ModelRegistry::with_specs(specs).expect("build registry");
+        let coord =
+            Coordinator::start_registry(config, Arc::clone(&registry)).expect("start coordinator");
+        let server = HttpServer::start(
+            HttpConfig { addr: "127.0.0.1:0".to_string(), ..Default::default() },
+            coord.client(),
+            Arc::clone(&registry),
+            Arc::clone(&coord.metrics),
+        )
+        .expect("start http server");
+        let addr = server.addr();
+        Self { coord, registry, server, addr }
+    }
+
+    /// Tear down front door then coordinator.
+    pub fn shutdown(self) {
+        self.server.shutdown();
+        self.coord.shutdown();
+    }
+}

@@ -1,0 +1,288 @@
+//! Wire-protocol conformance + seeded random-mutation fuzz for the HTTP
+//! front-end.
+//!
+//! Drives [`serve_connection`] directly over an in-memory stream (instead
+//! of TCP) with the real [`CoordinatorApp`] behind it, so a panic
+//! anywhere in the framing/scanner/router stack fails the test on the
+//! spot, and read-boundary placement is fully deterministic. The contract
+//! under fuzz:
+//!
+//! 1. **never a panic** — any byte stream is handled;
+//! 2. **always a typed reply** — every complete (framed) request gets
+//!    exactly one JSON response with a documented 2xx/4xx/5xx status, and
+//!    a truncated/unframeable stream gets exactly one 4xx before close;
+//! 3. **the connection survives semantic errors** — after a bad-but-framed
+//!    request (e.g. malformed JSON with a correct `Content-Length`), the
+//!    next request on the same connection is served normally.
+//!
+//! Self-contained synthetic weights; fixed seeds end to end.
+
+mod http_common;
+
+use std::collections::VecDeque;
+use std::io::{self, Read, Write};
+use std::sync::Arc;
+
+use http_common::infer_body;
+use tpu_imac::coordinator::{Coordinator, CoordinatorConfig, ModelRegistry};
+use tpu_imac::deploy::DeploymentSpec;
+use tpu_imac::nn::synthetic::lenet_weights_doc;
+use tpu_imac::serve_http::conn::{serve_connection, ConnArena, HttpLimits};
+use tpu_imac::serve_http::router::CoordinatorApp;
+use tpu_imac::util::json::Json;
+use tpu_imac::util::rng::Xoshiro256;
+
+/// In-memory stream: reads hand out the scripted chunks one `read()` call
+/// at a time (then EOF), writes are captured. Chunk boundaries are the
+/// fuzz dimension TCP never lets a test control.
+struct ChunkedStream {
+    chunks: VecDeque<Vec<u8>>,
+    out: Vec<u8>,
+}
+
+impl ChunkedStream {
+    fn new(chunks: Vec<Vec<u8>>) -> Self {
+        Self { chunks: chunks.into(), out: Vec::new() }
+    }
+}
+
+impl Read for ChunkedStream {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        let Some(chunk) = self.chunks.front_mut() else { return Ok(0) };
+        let n = buf.len().min(chunk.len());
+        buf[..n].copy_from_slice(&chunk[..n]);
+        chunk.drain(..n);
+        if chunk.is_empty() {
+            self.chunks.pop_front();
+        }
+        Ok(n)
+    }
+}
+
+impl Write for ChunkedStream {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        self.out.extend_from_slice(buf);
+        Ok(buf.len())
+    }
+    fn flush(&mut self) -> io::Result<()> {
+        Ok(())
+    }
+}
+
+/// Parse every `Content-Length`-framed response in the captured output.
+/// Panics on any framing violation — a malformed response is itself a
+/// protocol bug.
+fn parse_responses(mut out: &[u8]) -> Vec<(u16, String)> {
+    let mut responses = Vec::new();
+    while !out.is_empty() {
+        let head_end = out
+            .windows(4)
+            .position(|w| w == b"\r\n\r\n")
+            .unwrap_or_else(|| panic!("unterminated response head: {:?}", lossy(out)))
+            + 4;
+        let head = std::str::from_utf8(&out[..head_end]).expect("response head is ASCII");
+        assert!(head.starts_with("HTTP/1.1 "), "bad status line: {head:?}");
+        let status: u16 = head[9..12].parse().unwrap_or_else(|_| panic!("bad status: {head:?}"));
+        let content_length: usize = head
+            .lines()
+            .find_map(|l| l.strip_prefix("Content-Length: "))
+            .and_then(|v| v.parse().ok())
+            .unwrap_or_else(|| panic!("missing content-length: {head:?}"));
+        let body_end = head_end + content_length;
+        assert!(out.len() >= body_end, "response truncated by server: {head:?}");
+        let body = String::from_utf8(out[head_end..body_end].to_vec()).expect("UTF-8 body");
+        responses.push((status, body));
+        out = &out[body_end..];
+    }
+    responses
+}
+
+fn lossy(b: &[u8]) -> String {
+    String::from_utf8_lossy(&b[..b.len().min(120)]).into_owned()
+}
+
+/// Shared serving stack for all fuzz cases (building a model per case
+/// would dominate the runtime). One [`CoordinatorApp`] per "connection",
+/// exactly like the TCP accept loop.
+struct Stack {
+    coord: Coordinator,
+    registry: Arc<ModelRegistry>,
+    limits: HttpLimits,
+}
+
+impl Stack {
+    fn start() -> Self {
+        let mut rng = Xoshiro256::seed_from_u64(0xF0_22);
+        let spec = DeploymentSpec::doc("lenet", lenet_weights_doc(&mut rng));
+        let registry = ModelRegistry::with_specs(&[spec]).unwrap();
+        let coord =
+            Coordinator::start_registry(CoordinatorConfig::default(), Arc::clone(&registry))
+                .unwrap();
+        Self { coord, registry, limits: HttpLimits { max_head: 16 * 1024, max_body: 256 * 1024 } }
+    }
+
+    fn app(&self) -> CoordinatorApp {
+        CoordinatorApp::new(
+            self.coord.client(),
+            Arc::clone(&self.registry),
+            Arc::clone(&self.coord.metrics),
+            1000,
+            "artifacts".to_string(),
+        )
+    }
+
+    /// Run one connection over the scripted chunks; return the parsed
+    /// responses. The `serve_connection` result must be `Ok` — in-memory
+    /// writes cannot fail, so any `Err` is a framing-logic bug.
+    fn serve(&self, chunks: Vec<Vec<u8>>) -> Vec<(u16, String)> {
+        let mut stream = ChunkedStream::new(chunks);
+        let mut arena = ConnArena::new();
+        let mut app = self.app();
+        serve_connection(&mut stream, &mut arena, &mut app, &self.limits, &|| false)
+            .expect("in-memory serve_connection must not error");
+        parse_responses(&stream.out)
+    }
+}
+
+/// Split `bytes` into 1..=4 chunks at rng-chosen boundaries.
+fn random_split(rng: &mut Xoshiro256, bytes: &[u8]) -> Vec<Vec<u8>> {
+    let cuts = (rng.next_u64() % 4) as usize;
+    let mut points: Vec<usize> =
+        (0..cuts).map(|_| (rng.next_u64() as usize) % (bytes.len() + 1)).collect();
+    points.sort_unstable();
+    let mut chunks = Vec::with_capacity(cuts + 1);
+    let mut prev = 0;
+    for p in points.into_iter().chain(std::iter::once(bytes.len())) {
+        if p > prev {
+            chunks.push(bytes[prev..p].to_vec());
+            prev = p;
+        }
+    }
+    if chunks.is_empty() {
+        chunks.push(Vec::new());
+    }
+    chunks
+}
+
+/// The seeded mutation fuzz: hundreds of corrupted variants of a valid
+/// request, delivered with random read-boundary placement. Every case
+/// must produce only documented statuses and no panic; 200s are allowed
+/// (some mutations leave the request semantically intact).
+#[test]
+fn mutation_fuzz_never_panics_and_always_answers() {
+    let stack = Stack::start();
+    let valid = http_common::format_request("POST", "/v1/infer", &infer_body("lenet"));
+    let mut rng = Xoshiro256::seed_from_u64(0xFA_55);
+    let mut status_seen = std::collections::BTreeMap::<u16, usize>::new();
+    for case in 0..200u32 {
+        let mut bytes = valid.clone();
+        match case % 8 {
+            // Truncation at a random byte.
+            0 => bytes.truncate((rng.next_u64() as usize) % bytes.len()),
+            // Random single-byte corruption (possibly multiple).
+            1 => {
+                for _ in 0..=(rng.next_u64() % 3) {
+                    let i = (rng.next_u64() as usize) % bytes.len();
+                    bytes[i] = (rng.next_u64() & 0xff) as u8;
+                }
+            }
+            // Garbage content-length value.
+            2 => {
+                let text = String::from_utf8(bytes).unwrap();
+                bytes = text.replacen("Content-Length: ", "Content-Length: 12x", 1).into_bytes();
+            }
+            // Oversized content-length (past the body cap).
+            3 => {
+                let text = String::from_utf8(bytes).unwrap();
+                let start = text.find("Content-Length: ").unwrap();
+                let end = start + text[start..].find("\r\n").unwrap();
+                let mut t = text.clone();
+                t.replace_range(start..end, "Content-Length: 99999999");
+                bytes = t.into_bytes();
+            }
+            // Invalid UTF-8 injected into the JSON body.
+            4 => {
+                let i = bytes.len() - 1 - ((rng.next_u64() as usize) % 100);
+                bytes[i] = 0xff;
+            }
+            // Header-section garbage: a line with no colon.
+            5 => {
+                let text = String::from_utf8(bytes).unwrap();
+                bytes = text.replacen("\r\n\r\n", "\r\nGARBAGE LINE\r\n\r\n", 1).into_bytes();
+            }
+            // Control bytes spliced into the request line.
+            6 => {
+                let i = (rng.next_u64() as usize) % 12;
+                bytes[i] = (rng.next_u64() % 0x20) as u8;
+            }
+            // No mutation: the valid request must still serve under
+            // whatever read-boundary split this round draws.
+            _ => {}
+        }
+        let responses = stack.serve(random_split(&mut rng, &bytes));
+        assert!(
+            responses.len() <= 2,
+            "case {case}: more responses than requests: {responses:?}"
+        );
+        for (status, body) in &responses {
+            assert!(
+                matches!(status, 200 | 400 | 404 | 405 | 411 | 413 | 431 | 500 | 503 | 504),
+                "case {case}: undocumented status {status}: {body}"
+            );
+            // Every body — success or error — must be valid JSON.
+            Json::parse(body)
+                .unwrap_or_else(|e| panic!("case {case}: non-JSON body ({e}): {body}"));
+            *status_seen.entry(*status).or_default() += 1;
+        }
+    }
+    // The mutation set must actually exercise the error space, not
+    // collapse into one rejection path.
+    assert!(status_seen.contains_key(&200), "no 200s seen: {status_seen:?}");
+    assert!(status_seen.contains_key(&400), "no 400s seen: {status_seen:?}");
+    assert!(status_seen.contains_key(&413), "no 413s seen: {status_seen:?}");
+    stack.coord.shutdown();
+}
+
+/// A valid request delivered one byte per `read()` call still parses and
+/// serves (the scanner/framing layer holds no per-read state assumptions).
+#[test]
+fn single_byte_reads_still_serve() {
+    let stack = Stack::start();
+    let valid = http_common::format_request("POST", "/v1/infer", &infer_body("lenet"));
+    let chunks: Vec<Vec<u8>> = valid.iter().map(|&b| vec![b]).collect();
+    let responses = stack.serve(chunks);
+    assert_eq!(responses.len(), 1, "{responses:?}");
+    assert_eq!(responses[0].0, 200, "{responses:?}");
+    stack.coord.shutdown();
+}
+
+/// Connection reuse after a semantic error: a framed-but-malformed JSON
+/// body answers 400, then a good request on the SAME connection answers
+/// 200 — the error must not poison the connection or leak parser state
+/// into the next request.
+#[test]
+fn connection_survives_bad_request_then_serves_good_one() {
+    let stack = Stack::start();
+    let mut bytes = http_common::format_request("POST", "/v1/infer", "{\"image\":[1,2,");
+    let good = http_common::format_request("POST", "/v1/infer", &infer_body("lenet"));
+    bytes.extend_from_slice(&good);
+    let responses = stack.serve(vec![bytes]);
+    assert_eq!(responses.len(), 2, "{responses:?}");
+    assert_eq!(responses[0].0, 400, "{responses:?}");
+    assert_eq!(responses[1].0, 200, "{responses:?}");
+    stack.coord.shutdown();
+}
+
+/// Pipelining: two complete requests in one read chunk get exactly two
+/// responses, in order.
+#[test]
+fn pipelined_requests_answer_in_order() {
+    let stack = Stack::start();
+    let mut bytes = http_common::format_request("POST", "/v1/infer", &infer_body("lenet"));
+    bytes.extend_from_slice(&http_common::format_request("POST", "/v1/infer", &infer_body("nope")));
+    let responses = stack.serve(vec![bytes]);
+    assert_eq!(responses.len(), 2, "{responses:?}");
+    assert_eq!(responses[0].0, 200, "{responses:?}");
+    assert_eq!(responses[1].0, 404, "{responses:?}");
+    stack.coord.shutdown();
+}

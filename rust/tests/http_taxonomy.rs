@@ -1,0 +1,206 @@
+//! Wire-level error-taxonomy conformance: one test per [`ServeError`]
+//! variant, pinning the HTTP status code AND the JSON error body each
+//! maps to. This file is the executable form of the README taxonomy
+//! table's status column — change a mapping and exactly one test here
+//! names the variant you broke.
+//!
+//! Self-contained synthetic weights throughout; every server binds port 0.
+
+mod http_common;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use http_common::{image_json, infer_body, request, serve_in_memory, TestServer};
+use tpu_imac::coordinator::{
+    Coordinator, CoordinatorConfig, FaultPlan, ModelRegistry, NativeBackend,
+};
+use tpu_imac::deploy::DeploymentSpec;
+use tpu_imac::nn::synthetic::lenet_weights_doc;
+use tpu_imac::serve_http::router::CoordinatorApp;
+use tpu_imac::util::rng::Xoshiro256;
+
+fn lenet_spec(seed: u64) -> DeploymentSpec {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    DeploymentSpec::doc("lenet", lenet_weights_doc(&mut rng))
+}
+
+/// `UnknownModel` → 404, body names the bogus model and the registered
+/// set (the variant's `Display` contract).
+#[test]
+fn unknown_model_is_404() {
+    let ts = TestServer::start(CoordinatorConfig::default(), &[lenet_spec(1)]);
+    let r = request(ts.addr, "POST", "/v1/infer", &infer_body("nope"));
+    assert_eq!(r.status, 404, "{r:?}");
+    assert_eq!(r.error_code(), "UnknownModel");
+    assert_eq!(r.message(), "unknown model 'nope' (registered: lenet)");
+    ts.shutdown();
+}
+
+/// `DeadlineExceeded` → 504: a zero budget is dead on arrival, answered
+/// deterministically from the deadline guard (never executed).
+#[test]
+fn deadline_exceeded_is_504() {
+    let ts = TestServer::start(CoordinatorConfig::default(), &[lenet_spec(2)]);
+    let body = format!("{{\"model\":\"lenet\",\"image\":{},\"timeout_ms\":0}}", image_json());
+    let r = request(ts.addr, "POST", "/v1/infer", &body);
+    assert_eq!(r.status, 504, "{r:?}");
+    assert_eq!(r.error_code(), "DeadlineExceeded");
+    assert_eq!(r.message(), "deadline exceeded after 0us in queue");
+    ts.shutdown();
+}
+
+/// `Draining` → 503: the coordinator has shut down but the front door is
+/// still up — requests are refused at admission, not hung.
+#[test]
+fn draining_is_503() {
+    let ts = TestServer::start(CoordinatorConfig::default(), &[lenet_spec(3)]);
+    let TestServer { coord, server, addr, .. } = ts;
+    coord.shutdown();
+    let r = request(addr, "POST", "/v1/infer", &infer_body("lenet"));
+    assert_eq!(r.status, 503, "{r:?}");
+    assert_eq!(r.error_code(), "Draining");
+    assert_eq!(r.message(), "coordinator is draining (shutdown in progress)");
+    server.shutdown();
+}
+
+/// `WorkerFault` → 500: every batch panics (injected), the supervisor
+/// restarts the worker, and the request is answered with the fault.
+#[test]
+fn worker_fault_is_500() {
+    let spec =
+        lenet_spec(4).faults(FaultPlan { seed: 1, panic_every: Some(1), ..Default::default() });
+    let ts = TestServer::start(CoordinatorConfig::default(), &[spec]);
+    let r = request(ts.addr, "POST", "/v1/infer", &infer_body("lenet"));
+    assert_eq!(r.status, 500, "{r:?}");
+    assert_eq!(r.error_code(), "WorkerFault");
+    assert!(r.message().starts_with("worker fault serving model 'lenet'"), "{r:?}");
+    ts.shutdown();
+}
+
+/// `NumericFault` → 500: the output-sanity guard refuses injected NaN
+/// scores.
+#[test]
+fn numeric_fault_is_500() {
+    let spec =
+        lenet_spec(5).faults(FaultPlan { seed: 1, nan_every: Some(1), ..Default::default() });
+    let ts = TestServer::start(CoordinatorConfig::default(), &[spec]);
+    let r = request(ts.addr, "POST", "/v1/infer", &infer_body("lenet"));
+    assert_eq!(r.status, 500, "{r:?}");
+    assert_eq!(r.error_code(), "NumericFault");
+    assert_eq!(r.message(), "model 'lenet' produced non-finite scores (numeric fault)");
+    ts.shutdown();
+}
+
+/// `ShedLoad` → 429: per-model admission quota. One slow in-flight batch
+/// (injected), one queued request filling the quota — the third submit is
+/// shed at admission while the first two still get answered.
+#[test]
+fn shed_load_is_429() {
+    let spec = lenet_spec(6)
+        .queue_quota(1)
+        .faults(FaultPlan { seed: 1, slow_every: Some(1), slow_us: 300_000, ..Default::default() });
+    let config = CoordinatorConfig { max_batch: 1, workers: 1, ..Default::default() };
+    let ts = TestServer::start(config, &[spec]);
+    // Generous per-request budgets so A and B never trip the deadline
+    // guard — this test isolates the quota.
+    let body = format!("{{\"model\":\"lenet\",\"image\":{},\"timeout_ms\":10000}}", image_json());
+    let slow = |addr, body: String| {
+        std::thread::spawn(move || request(addr, "POST", "/v1/infer", &body))
+    };
+    let a = slow(ts.addr, body.clone()); // dequeued by the (slow) worker
+    std::thread::sleep(Duration::from_millis(120));
+    let b = slow(ts.addr, body.clone()); // queued: fills quota 1
+    std::thread::sleep(Duration::from_millis(60));
+    let r = request(ts.addr, "POST", "/v1/infer", &body); // over quota
+    assert_eq!(r.status, 429, "{r:?}");
+    assert_eq!(r.error_code(), "ShedLoad");
+    assert_eq!(r.message(), "load shed for model 'lenet': 1 queued >= quota 1");
+    for handle in [a, b] {
+        let r = handle.join().expect("request thread");
+        assert!(r.status == 200 || r.status == 504, "shed must not lose replies: {r:?}");
+    }
+    ts.shutdown();
+}
+
+/// `QueueFull` → 503: whole-queue backpressure (checked before the
+/// per-model quota). Same slow-worker shape as the shed test but with the
+/// global queue capped at 1 and no quota.
+#[test]
+fn queue_full_is_503() {
+    let spec = lenet_spec(7)
+        .faults(FaultPlan { seed: 1, slow_every: Some(1), slow_us: 300_000, ..Default::default() });
+    let config =
+        CoordinatorConfig { max_batch: 1, workers: 1, max_queue: 1, ..Default::default() };
+    let ts = TestServer::start(config, &[spec]);
+    let body = format!("{{\"model\":\"lenet\",\"image\":{},\"timeout_ms\":10000}}", image_json());
+    let slow = |addr, body: String| {
+        std::thread::spawn(move || request(addr, "POST", "/v1/infer", &body))
+    };
+    let a = slow(ts.addr, body.clone()); // in flight
+    std::thread::sleep(Duration::from_millis(120));
+    let b = slow(ts.addr, body.clone()); // occupies the 1-deep queue
+    std::thread::sleep(Duration::from_millis(60));
+    let r = request(ts.addr, "POST", "/v1/infer", &body);
+    assert_eq!(r.status, 503, "{r:?}");
+    assert_eq!(r.error_code(), "QueueFull");
+    assert_eq!(r.message(), "queue full (1 requests)");
+    for handle in [a, b] {
+        let r = handle.join().expect("request thread");
+        assert!(r.status == 200 || r.status == 504, "backpressure must not lose replies: {r:?}");
+    }
+    ts.shutdown();
+}
+
+/// `NoRegistry` → 500: a routed submit against a *fixed-backend*
+/// coordinator (`Coordinator::start`, no registry wired into its client).
+/// `TestServer` cannot reach this variant — `start_registry` refuses an
+/// empty registry — so it drives the production [`CoordinatorApp`]
+/// through the real framing layer over an in-memory stream: same request
+/// bytes, same response bytes, minus the socket.
+#[test]
+fn no_registry_is_500() {
+    let dep = lenet_spec(9).build().expect("build deployment");
+    let model = Arc::clone(&dep.model);
+    let coord = Coordinator::start(
+        CoordinatorConfig::default(),
+        move || Box::new(NativeBackend::new(model)),
+    );
+    // The app's registry can resolve the name — the coordinator behind it
+    // cannot: that mismatch is exactly what this variant reports.
+    let registry = Arc::new(ModelRegistry::new());
+    registry.register_built(dep).expect("register");
+    let mut app = CoordinatorApp::new(
+        coord.client(),
+        registry,
+        Arc::clone(&coord.metrics),
+        1000,
+        "artifacts".to_string(),
+    );
+    let req = http_common::format_request("POST", "/v1/infer", &infer_body("lenet"));
+    let r = serve_in_memory(&mut app, &req);
+    assert_eq!(r.status, 500, "{r:?}");
+    assert_eq!(r.error_code(), "NoRegistry");
+    assert_eq!(
+        r.message(),
+        "this coordinator serves a single fixed backend (no model registry)"
+    );
+    coord.shutdown();
+}
+
+/// The non-error side of the contract: a well-formed infer on a healthy
+/// server is a 200 whose body carries id/predicted/latency_us/scores.
+#[test]
+fn healthy_infer_is_200_with_scores() {
+    let ts = TestServer::start(CoordinatorConfig::default(), &[lenet_spec(8)]);
+    let r = request(ts.addr, "POST", "/v1/infer", &infer_body("lenet"));
+    assert_eq!(r.status, 200, "{r:?}");
+    let doc = r.json();
+    assert!(doc.get("id").as_f64().is_some(), "{r:?}");
+    let predicted = doc.get("predicted").as_f64().expect("predicted");
+    assert!((0.0..10.0).contains(&predicted), "{r:?}");
+    let scores = doc.get("scores").as_f64_vec().expect("scores");
+    assert_eq!(scores.len(), 10);
+    assert!(scores.iter().all(|s| s.is_finite()));
+    ts.shutdown();
+}
