@@ -1,0 +1,187 @@
+//! `tpu-imac-lint` — in-repo invariant linter for the TPU-IMAC reproduction.
+//!
+//! Dependency-free static analysis over `rust/src`, `rust/tests`,
+//! `rust/benches`, and the docs. Seven rules, each anchored to `file:line`:
+//!
+//! 1. `unsafe-safety`   — every `unsafe` has an immediately preceding
+//!    `// SAFETY:` comment (attributes may interleave).
+//! 2. `taxonomy-sync`   — the `ServeError` enum, the `serve_error_parts`
+//!    status match, the router module-doc table, and the README taxonomy
+//!    table agree on variant names and statuses.
+//! 3. `bench-rows`      — frozen `BENCH_hotpath.json` row names (manifest:
+//!    `rust/lint/frozen_bench_rows.txt`) appear verbatim in bench sources.
+//! 4. `metrics-surface` — every `Metrics` counter is read by `fn snapshot`;
+//!    every `Snapshot` field is a `to_json` key and appears in the serve
+//!    summary printed by `main.rs`.
+//! 5. `config-docs`     — every config key parsed in `config/mod.rs` is
+//!    documented in the README.
+//! 6. `hotpath-alloc`   — alloc-prone constructs are forbidden on hot-path
+//!    modules outside `// lint: allow(alloc)` regions.
+//! 7. `flag-ordering`   — `Ordering::Relaxed` on cross-thread control flags
+//!    (shutdown/drain/generation) is rejected.
+//!
+//! Usage: `cargo run -p tpu-imac-lint [-- <repo-root>]`. Without an argument
+//! the repo root is found by walking up from the current directory. Exits 0
+//! when clean, 1 when any rule fires, 2 on usage/setup errors.
+
+mod rules;
+mod scan;
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use rules::{Finding, FLAG_ALLOWLIST};
+use scan::{parse_with_raw, SourceFile};
+
+/// Modules whose steady state must not allocate (rule 6). Matched by
+/// path suffix against `rust/src`.
+const HOT_PATHS: [&str; 5] = [
+    "nn/gemm.rs",
+    "nn/simd.rs",
+    "imac/crossbar.rs",
+    "serve_http/conn.rs",
+    "serve_http/scanner.rs",
+];
+
+fn main() {
+    let mut args = std::env::args().skip(1);
+    let root = match args.next() {
+        Some(s) if s == "--help" || s == "-h" => {
+            print_help();
+            return;
+        }
+        Some(p) => PathBuf::from(p),
+        None => match find_root() {
+            Some(r) => r,
+            None => {
+                eprintln!("tpu-imac-lint: could not locate the repo root (rust/src + README.md)");
+                std::process::exit(2);
+            }
+        },
+    };
+    match run(&root) {
+        Ok(findings) => {
+            for f in &findings {
+                println!("{f}");
+            }
+            if findings.is_empty() {
+                println!("tpu-imac-lint: clean (7 rules)");
+            } else {
+                eprintln!("tpu-imac-lint: {} finding(s)", findings.len());
+                std::process::exit(1);
+            }
+        }
+        Err(e) => {
+            eprintln!("tpu-imac-lint: {e}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn print_help() {
+    println!("tpu-imac-lint [repo-root]");
+    println!("Runs the repo invariant rules; exits non-zero on any finding.");
+}
+
+/// Walk up from the current directory to the checkout root.
+fn find_root() -> Option<PathBuf> {
+    let mut dir = std::env::current_dir().ok()?;
+    loop {
+        if dir.join("rust/src").is_dir() && dir.join("README.md").is_file() {
+            return Some(dir);
+        }
+        if !dir.pop() {
+            return None;
+        }
+    }
+}
+
+/// Recursively collect `.rs` files under `dir`, sorted for determinism.
+fn rust_files(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = fs::read_dir(dir) else { return };
+    let mut paths: Vec<PathBuf> = entries.flatten().map(|e| e.path()).collect();
+    paths.sort();
+    for p in paths {
+        if p.is_dir() {
+            rust_files(&p, out);
+        } else if p.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(p);
+        }
+    }
+}
+
+/// Path relative to the repo root, with forward slashes, for findings.
+fn rel(root: &Path, p: &Path) -> String {
+    p.strip_prefix(root).unwrap_or(p).to_string_lossy().replace('\\', "/")
+}
+
+fn read(path: &Path) -> Result<String, String> {
+    fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))
+}
+
+fn run(root: &Path) -> Result<Vec<Finding>, String> {
+    let mut files = Vec::new();
+    for sub in ["rust/src", "rust/tests", "rust/benches"] {
+        rust_files(&root.join(sub), &mut files);
+    }
+    if files.is_empty() {
+        return Err(format!("no .rs files under {}", root.display()));
+    }
+
+    let mut parsed: Vec<SourceFile> = Vec::new();
+    for p in &files {
+        parsed.push(parse_with_raw(&rel(root, p), &read(p)?));
+    }
+
+    let readme = read(&root.join("README.md"))?;
+    let mut findings: Vec<Finding> = Vec::new();
+
+    // Rule 1 over every Rust file; rules 6/7 over their scoped subsets.
+    for f in &parsed {
+        findings.extend(rules::rule_unsafe_safety(f));
+        if HOT_PATHS.iter().any(|h| f.path.ends_with(h)) {
+            findings.extend(rules::rule_hotpath_alloc(f));
+        }
+        if f.path.starts_with("rust/src") {
+            findings.extend(rules::rule_flag_ordering(f, &FLAG_ALLOWLIST));
+        }
+    }
+
+    // Rule 2: the four-way ServeError taxonomy.
+    let coord = parsed.iter().find(|f| f.path.ends_with("coordinator/mod.rs"));
+    let router = parsed.iter().find(|f| f.path.ends_with("serve_http/router.rs"));
+    match (coord, router) {
+        (Some(c), Some(r)) => findings.extend(rules::rule_taxonomy(c, r, "README.md", &readme)),
+        _ => return Err("coordinator/mod.rs or serve_http/router.rs not found".into()),
+    }
+
+    // Rule 3: frozen bench rows.
+    let manifest_path = root.join("rust/lint/frozen_bench_rows.txt");
+    let manifest = read(&manifest_path)?;
+    let benches: Vec<(String, String)> = parsed
+        .iter()
+        .filter(|f| f.path.starts_with("rust/benches"))
+        .map(|f| {
+            let text: Vec<String> = f.lines.iter().map(|l| l.raw.clone()).collect();
+            (f.path.clone(), text.join("\n"))
+        })
+        .collect();
+    findings.extend(rules::rule_bench_rows("rust/lint/frozen_bench_rows.txt", &manifest, &benches));
+
+    // Rule 4: metrics plumbed end to end.
+    let metrics = parsed.iter().find(|f| f.path.ends_with("metrics/mod.rs"));
+    let main_src = parsed.iter().find(|f| f.path.ends_with("src/main.rs"));
+    match (metrics, main_src) {
+        (Some(m), Some(s)) => findings.extend(rules::rule_metrics_surface(m, s)),
+        _ => return Err("metrics/mod.rs or src/main.rs not found".into()),
+    }
+
+    // Rule 5: config keys documented.
+    match parsed.iter().find(|f| f.path.ends_with("config/mod.rs")) {
+        Some(c) => findings.extend(rules::rule_config_docs(c, "README.md", &readme)),
+        None => return Err("config/mod.rs not found".into()),
+    }
+
+    findings.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    Ok(findings)
+}

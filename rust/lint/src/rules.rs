@@ -1,0 +1,906 @@
+//! The seven invariant rules. Each takes pre-scanned sources and returns
+//! `Finding`s with exact `file:line` anchors; the driver aggregates and
+//! exits non-zero when any rule fires.
+
+use crate::scan::{brace_delta, fn_region, has_word, leading_ident, SourceFile};
+
+/// One diagnostic: `file:line: rule-id: message`.
+#[derive(Debug, PartialEq, Eq)]
+pub struct Finding {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: {}: {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+fn finding(file: &str, line: usize, rule: &'static str, message: String) -> Finding {
+    Finding { file: file.to_string(), line, rule, message }
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+// ---------------------------------------------------------------------------
+// Rule 1: unsafe-safety — every `unsafe` is preceded by a `// SAFETY:` comment.
+// ---------------------------------------------------------------------------
+
+/// Flag `unsafe` tokens whose contiguous preceding comment/attribute block
+/// (or trailing same-line comment) lacks a `SAFETY:` marker. Attributes may
+/// interleave with the comment in either order; a blank line breaks the block.
+pub fn rule_unsafe_safety(file: &SourceFile) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for (idx, line) in file.lines.iter().enumerate() {
+        if !has_word(&line.code, "unsafe") {
+            continue;
+        }
+        if line.comment.contains("SAFETY:") {
+            continue;
+        }
+        let mut ok = false;
+        let mut j = idx;
+        while j > 0 {
+            j -= 1;
+            let l = &file.lines[j];
+            let ct = l.code.trim();
+            let is_attr = ct.starts_with("#[") || ct.starts_with("#!");
+            let pure_comment = ct.is_empty() && !l.comment.is_empty();
+            if l.comment.contains("SAFETY:") && (pure_comment || is_attr) {
+                ok = true;
+                break;
+            }
+            if pure_comment || is_attr {
+                continue;
+            }
+            break; // code or a blank line ends the contiguous block
+        }
+        if !ok {
+            out.push(finding(
+                &file.path,
+                file.lineno(idx),
+                "unsafe-safety",
+                "`unsafe` without an immediately preceding `// SAFETY:` comment".to_string(),
+            ));
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Rule 2: taxonomy-sync — ServeError variants/statuses agree four ways.
+// ---------------------------------------------------------------------------
+
+/// Extract `(variant, line)` pairs from `enum <name> { … }`.
+fn enum_variants(file: &SourceFile, name: &str) -> Vec<(String, usize)> {
+    let mut out = Vec::new();
+    let mut depth = 0i64;
+    let mut in_enum = false;
+    for (i, l) in file.lines.iter().enumerate() {
+        if !in_enum {
+            if has_word(&l.code, "enum") && has_word(&l.code, name) {
+                in_enum = true;
+                depth = brace_delta(&l.code);
+            }
+            continue;
+        }
+        if depth == 1 {
+            if let Some(v) = leading_ident(&l.code) {
+                if v.chars().next().map(|c| c.is_ascii_uppercase()).unwrap_or(false) {
+                    out.push((v, file.lineno(i)));
+                }
+            }
+        }
+        depth += brace_delta(&l.code);
+        if depth <= 0 {
+            break;
+        }
+    }
+    out
+}
+
+/// Parse `| `Variant …` | 504 | …` markdown rows (first cell backticked
+/// identifier, second cell a bare status number).
+fn table_row(row: &str) -> Option<(String, u16)> {
+    let cells: Vec<&str> = row.split('|').collect();
+    if cells.len() < 3 {
+        return None;
+    }
+    let first = cells[1].trim();
+    let status: u16 = cells[2].trim().parse().ok()?;
+    let tick = first.find('`')?;
+    let after = &first[tick + 1..];
+    let ident: String = after
+        .chars()
+        .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+        .collect();
+    if ident.is_empty() {
+        None
+    } else {
+        Some((ident, status))
+    }
+}
+
+/// Rows of the `//! | … |` module-doc table in the router file.
+fn router_doc_rows(router: &SourceFile) -> Vec<(String, u16, usize)> {
+    let mut out = Vec::new();
+    for (i, l) in router.lines.iter().enumerate() {
+        let t = l.raw.trim_start();
+        if let Some(rest) = t.strip_prefix("//!") {
+            let rest = rest.trim_start();
+            if rest.starts_with('|') {
+                if let Some((v, s)) = table_row(rest) {
+                    out.push((v, s, router.lineno(i)));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// `ServeError::X { .. } => (504, "X")` arms inside `fn serve_error_parts`.
+fn status_match_arms(router: &SourceFile) -> Vec<(String, u16, String, usize)> {
+    let mut out = Vec::new();
+    let Some((lo, hi)) = fn_region(router, "serve_error_parts") else {
+        return out;
+    };
+    for i in lo..=hi {
+        let raw = &router.lines[i].raw;
+        let Some(pos) = raw.find("ServeError::") else { continue };
+        let after = &raw[pos + "ServeError::".len()..];
+        let variant: String =
+            after.chars().take_while(|c| c.is_ascii_alphanumeric() || *c == '_').collect();
+        if variant.is_empty() || !raw.contains("=>") {
+            continue;
+        }
+        let arrow = raw.find("=>").unwrap_or(0);
+        let tail = &raw[arrow..];
+        let digits: String = tail
+            .chars()
+            .skip_while(|c| !c.is_ascii_digit())
+            .take_while(|c| c.is_ascii_digit())
+            .collect();
+        let Ok(status) = digits.parse::<u16>() else { continue };
+        let code = match (tail.find('"'), tail.rfind('"')) {
+            (Some(a), Some(b)) if b > a => tail[a + 1..b].to_string(),
+            _ => String::new(),
+        };
+        out.push((variant, status, code, router.lineno(i)));
+    }
+    out
+}
+
+/// Rows of the README taxonomy table, scoped to its section heading.
+fn readme_taxonomy_rows(readme: &str) -> Vec<(String, u16, usize)> {
+    let mut out = Vec::new();
+    let mut in_section = false;
+    for (i, line) in readme.lines().enumerate() {
+        if line.starts_with("## ") {
+            in_section = line.contains("Serving error taxonomy");
+            continue;
+        }
+        if in_section && line.trim_start().starts_with('|') {
+            if let Some((v, s)) = table_row(line) {
+                out.push((v, s, i + 1));
+            }
+        }
+    }
+    out
+}
+
+/// Diff the four representations of the `ServeError` taxonomy.
+pub fn rule_taxonomy(
+    enum_file: &SourceFile,
+    router_file: &SourceFile,
+    readme_path: &str,
+    readme: &str,
+) -> Vec<Finding> {
+    const RULE: &str = "taxonomy-sync";
+    let mut out = Vec::new();
+    let variants = enum_variants(enum_file, "ServeError");
+    if variants.is_empty() {
+        out.push(finding(&enum_file.path, 1, RULE, "could not locate `enum ServeError`".into()));
+        return out;
+    }
+    let arms = status_match_arms(router_file);
+    let doc = router_doc_rows(router_file);
+    let md = readme_taxonomy_rows(readme);
+    let arm_line = arms.first().map(|a| a.3).unwrap_or(1);
+
+    // Every enum variant must appear in all three derived tables.
+    for (v, line) in &variants {
+        if !arms.iter().any(|(a, _, _, _)| a == v) {
+            out.push(finding(
+                &router_file.path,
+                arm_line,
+                RULE,
+                format!(
+                    "variant `{v}` (enum at {}:{line}) missing from `serve_error_parts`",
+                    enum_file.path
+                ),
+            ));
+        }
+        if !doc.iter().any(|(a, _, _)| a == v) {
+            out.push(finding(
+                &router_file.path,
+                1,
+                RULE,
+                format!("variant `{v}` missing from the router module-doc table"),
+            ));
+        }
+        if !md.iter().any(|(a, _, _)| a == v) {
+            out.push(finding(
+                readme_path,
+                1,
+                RULE,
+                format!("variant `{v}` missing from the README taxonomy table"),
+            ));
+        }
+    }
+    // No stale rows anywhere.
+    for (a, _, _, line) in &arms {
+        if !variants.iter().any(|(v, _)| v == a) {
+            out.push(finding(
+                &router_file.path,
+                *line,
+                RULE,
+                format!("`serve_error_parts` arm `{a}` has no matching enum variant"),
+            ));
+        }
+    }
+    for (a, _, line) in &doc {
+        if !variants.iter().any(|(v, _)| v == a) {
+            out.push(finding(
+                &router_file.path,
+                *line,
+                RULE,
+                format!("module-doc table row `{a}` has no matching enum variant"),
+            ));
+        }
+    }
+    for (a, _, line) in &md {
+        if !variants.iter().any(|(v, _)| v == a) {
+            out.push(finding(
+                readme_path,
+                *line,
+                RULE,
+                format!("README taxonomy row `{a}` has no matching enum variant"),
+            ));
+        }
+    }
+    // Statuses and wire code strings must agree with the match arms.
+    for (a, status, code, line) in &arms {
+        if code != a {
+            out.push(finding(
+                &router_file.path,
+                *line,
+                RULE,
+                format!("wire code string \"{code}\" does not equal variant name `{a}`"),
+            ));
+        }
+        if let Some((_, doc_status, doc_line)) = doc.iter().find(|(v, _, _)| v == a) {
+            if doc_status != status {
+                out.push(finding(
+                    &router_file.path,
+                    *doc_line,
+                    RULE,
+                    format!(
+                        "module-doc table says `{a}` → {doc_status}, match arm at line {line} \
+                         says {status}"
+                    ),
+                ));
+            }
+        }
+        if let Some((_, md_status, md_line)) = md.iter().find(|(v, _, _)| v == a) {
+            if md_status != status {
+                out.push(finding(
+                    readme_path,
+                    *md_line,
+                    RULE,
+                    format!(
+                        "README taxonomy says `{a}` → {md_status}, match arm at line {line} \
+                         says {status}"
+                    ),
+                ));
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Rule 3: bench-rows — frozen BENCH_hotpath.json rows stay in the sources.
+// ---------------------------------------------------------------------------
+
+/// Every manifest row name must appear verbatim (as a string literal) in at
+/// least one bench source. `bench_sources` is `(path, raw text)`.
+pub fn rule_bench_rows(
+    manifest_path: &str,
+    manifest: &str,
+    bench_sources: &[(String, String)],
+) -> Vec<Finding> {
+    const RULE: &str = "bench-rows";
+    let mut out = Vec::new();
+    let mut rows = 0usize;
+    for (i, line) in manifest.lines().enumerate() {
+        let row = line.trim();
+        if row.is_empty() || row.starts_with('#') {
+            continue;
+        }
+        rows += 1;
+        let needle = format!("\"{row}\"");
+        if !bench_sources.iter().any(|(_, text)| text.contains(&needle)) {
+            out.push(finding(
+                manifest_path,
+                i + 1,
+                RULE,
+                format!("frozen bench row \"{row}\" not found in any bench source"),
+            ));
+        }
+    }
+    if rows == 0 {
+        out.push(finding(manifest_path, 1, RULE, "frozen-row manifest is empty".into()));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Rule 4: metrics-surface — counters flow into Snapshot, JSON, and summary.
+// ---------------------------------------------------------------------------
+
+/// `(field, line)` pairs of `name: <type>` fields inside `struct <name>`,
+/// filtered by a substring the field's type must contain.
+fn struct_fields(file: &SourceFile, name: &str, type_filter: &str) -> Vec<(String, usize)> {
+    let mut out = Vec::new();
+    let mut depth = 0i64;
+    let mut in_struct = false;
+    for (i, l) in file.lines.iter().enumerate() {
+        if !in_struct {
+            if has_word(&l.code, "struct") && has_word(&l.code, name) {
+                in_struct = true;
+                depth = brace_delta(&l.code);
+            }
+            continue;
+        }
+        if depth == 1 && l.code.contains(type_filter) && l.code.contains(':') {
+            let t = l.code.trim();
+            let t = t.strip_prefix("pub ").unwrap_or(t);
+            if let Some(f) = leading_ident(t) {
+                out.push((f, file.lineno(i)));
+            }
+        }
+        depth += brace_delta(&l.code);
+        if depth <= 0 {
+            break;
+        }
+    }
+    out
+}
+
+fn region_text(file: &SourceFile, region: Option<(usize, usize)>, raw: bool) -> String {
+    let Some((lo, hi)) = region else { return String::new() };
+    let mut s = String::new();
+    for l in &file.lines[lo..=hi] {
+        s.push_str(if raw { &l.raw } else { &l.code });
+        s.push('\n');
+    }
+    s
+}
+
+/// Every `Metrics` AtomicU64 counter must be read in `fn snapshot`; every
+/// `Snapshot` field must be emitted as a JSON key in `fn to_json` and
+/// referenced by `print_serve_summary` in main.rs.
+pub fn rule_metrics_surface(metrics: &SourceFile, main: &SourceFile) -> Vec<Finding> {
+    const RULE: &str = "metrics-surface";
+    let mut out = Vec::new();
+    let counters = struct_fields(metrics, "Metrics", "AtomicU64");
+    if counters.is_empty() {
+        out.push(finding(
+            &metrics.path,
+            1,
+            RULE,
+            "no AtomicU64 counters found in `struct Metrics`".into(),
+        ));
+    }
+    let snapshot_body = region_text(metrics, fn_region(metrics, "snapshot"), false);
+    for (c, line) in &counters {
+        if !has_word(&snapshot_body, c) {
+            out.push(finding(
+                &metrics.path,
+                *line,
+                RULE,
+                format!("counter `{c}` is not read in `fn snapshot`"),
+            ));
+        }
+    }
+    let fields = struct_fields(metrics, "Snapshot", ":");
+    if fields.is_empty() {
+        out.push(finding(&metrics.path, 1, RULE, "no fields found in `struct Snapshot`".into()));
+    }
+    let json_body = region_text(metrics, fn_region(metrics, "to_json"), true);
+    let summary_body = region_text(main, fn_region(main, "print_serve_summary"), false);
+    for (f, line) in &fields {
+        if !json_body.contains(&format!("\"{f}\"")) {
+            out.push(finding(
+                &metrics.path,
+                *line,
+                RULE,
+                format!("Snapshot field `{f}` is not emitted as a key in `fn to_json`"),
+            ));
+        }
+        if !has_word(&summary_body, f) {
+            out.push(finding(
+                &metrics.path,
+                *line,
+                RULE,
+                format!(
+                    "Snapshot field `{f}` does not surface in `print_serve_summary` ({})",
+                    main.path
+                ),
+            ));
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Rule 5: config-docs — every parsed config key is documented in the README.
+// ---------------------------------------------------------------------------
+
+/// Keys are any `get("…")` argument in non-test config code; each must appear
+/// (word-bounded) somewhere in the README.
+pub fn rule_config_docs(config: &SourceFile, readme_path: &str, readme: &str) -> Vec<Finding> {
+    const RULE: &str = "config-docs";
+    let mut keys: Vec<(String, usize)> = Vec::new();
+    for (i, l) in config.lines.iter().enumerate() {
+        if l.in_test {
+            continue;
+        }
+        let mut rest = l.raw.as_str();
+        while let Some(pos) = rest.find("get(\"") {
+            let after = &rest[pos + 5..];
+            let Some(end) = after.find('"') else { break };
+            let key = &after[..end];
+            if !key.is_empty() && !keys.iter().any(|(k, _)| k == key) {
+                keys.push((key.to_string(), config.lineno(i)));
+            }
+            rest = &after[end..];
+        }
+    }
+    let mut out = Vec::new();
+    if keys.is_empty() {
+        out.push(finding(&config.path, 1, RULE, "no `get(\"…\")` config keys found".into()));
+    }
+    for (k, line) in &keys {
+        if !has_word(readme, k) {
+            out.push(finding(
+                &config.path,
+                *line,
+                RULE,
+                format!("config key `{k}` is parsed here but not documented in {readme_path}"),
+            ));
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Rule 6: hotpath-alloc — allocation-prone constructs on hot-path modules.
+// ---------------------------------------------------------------------------
+
+/// Allocation-prone constructs forbidden on hot-path modules.
+pub const ALLOC_CONSTRUCTS: [&str; 5] = ["vec!", "Vec::new", "format!", "to_string", "Box::new"];
+
+/// Boundary-aware construct search on the code view.
+fn has_construct(code: &str, pat: &str) -> bool {
+    let bytes = code.as_bytes();
+    let pat_ends_ident = pat.as_bytes().last().map(|b| is_ident_byte(*b)).unwrap_or(false);
+    let mut start = 0usize;
+    while let Some(pos) = code[start..].find(pat) {
+        let p = start + pos;
+        let before_ok = p == 0 || !is_ident_byte(bytes[p - 1]);
+        let end = p + pat.len();
+        let after_ok = !pat_ends_ident || end >= bytes.len() || !is_ident_byte(bytes[end]);
+        if before_ok && after_ok {
+            return true;
+        }
+        start = end;
+    }
+    false
+}
+
+/// Flag alloc-prone constructs outside tests and `lint: allow(alloc)` regions.
+pub fn rule_hotpath_alloc(file: &SourceFile) -> Vec<Finding> {
+    const RULE: &str = "hotpath-alloc";
+    let mut out = Vec::new();
+    for (i, l) in file.lines.iter().enumerate() {
+        if l.in_test || l.allowed("alloc") {
+            continue;
+        }
+        for pat in ALLOC_CONSTRUCTS {
+            if has_construct(&l.code, pat) {
+                out.push(finding(
+                    &file.path,
+                    file.lineno(i),
+                    RULE,
+                    format!(
+                        "`{pat}` on a hot-path module (wrap in `// lint: allow(alloc)` if cold)"
+                    ),
+                ));
+                break;
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Rule 7: flag-ordering — no Relaxed on cross-thread control flags.
+// ---------------------------------------------------------------------------
+
+/// Atom names that act as cross-thread control flags: a `Relaxed` load/store
+/// on a line naming one of these is almost always an ordering bug.
+pub const FLAG_ALLOWLIST: [&str; 4] = ["shutdown", "drain", "draining", "generation"];
+
+/// Flag `Ordering::Relaxed` (or a bare `Relaxed` token) on lines that also
+/// name a cross-thread control flag. `// lint: allow(relaxed-flag)` waives.
+pub fn rule_flag_ordering(file: &SourceFile, flags: &[&str]) -> Vec<Finding> {
+    const RULE: &str = "flag-ordering";
+    let mut out = Vec::new();
+    for (i, l) in file.lines.iter().enumerate() {
+        if l.in_test || l.allowed("relaxed-flag") {
+            continue;
+        }
+        if !has_word(&l.code, "Relaxed") {
+            continue;
+        }
+        for flag in flags {
+            if has_word(&l.code, flag) {
+                out.push(finding(
+                    &file.path,
+                    file.lineno(i),
+                    RULE,
+                    format!(
+                        "`Ordering::Relaxed` on cross-thread flag `{flag}` — use Acquire/Release"
+                    ),
+                ));
+                break;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scan::parse_with_raw;
+
+    fn one(mut findings: Vec<Finding>) -> Finding {
+        assert_eq!(findings.len(), 1, "expected exactly one finding, got {findings:?}");
+        findings.pop().unwrap()
+    }
+
+    // --- rule 1 -----------------------------------------------------------
+
+    #[test]
+    fn unsafe_safety_passes_with_comment() {
+        let src = "\
+// SAFETY: len-bounded unaligned loads; AVX2 checked by the dispatcher.
+#[target_feature(enable = \"avx2\")]
+unsafe fn kernel(a: &[f32]) {}
+
+fn call() {
+    // SAFETY: kernel only reads a.len() floats.
+    unsafe { kernel(&[]) };
+    let ok = \"the word unsafe in a string is fine\";
+}
+";
+        let f = parse_with_raw("fix.rs", src);
+        assert!(rule_unsafe_safety(&f).is_empty());
+    }
+
+    #[test]
+    fn unsafe_safety_flags_missing_comment() {
+        let src = "\
+fn call() {
+    let x = 1;
+    unsafe { core::hint::unreachable_unchecked() };
+}
+";
+        let f = parse_with_raw("fix.rs", src);
+        let fnd = one(rule_unsafe_safety(&f));
+        assert_eq!((fnd.file.as_str(), fnd.line, fnd.rule), ("fix.rs", 3, "unsafe-safety"));
+    }
+
+    #[test]
+    fn unsafe_safety_blank_line_breaks_block() {
+        let src = "// SAFETY: too far away.\n\nunsafe fn f() {}\n";
+        let f = parse_with_raw("fix.rs", src);
+        assert_eq!(one(rule_unsafe_safety(&f)).line, 3);
+    }
+
+    #[test]
+    fn unsafe_safety_accepts_comment_above_attribute() {
+        let src = "// SAFETY: fine.\n#[inline]\nunsafe fn f() {}\n";
+        let f = parse_with_raw("fix.rs", src);
+        assert!(rule_unsafe_safety(&f).is_empty());
+    }
+
+    // --- rule 2 -----------------------------------------------------------
+
+    fn taxonomy_enum(src: &str) -> SourceFile {
+        parse_with_raw("coordinator.rs", src)
+    }
+
+    const ENUM_OK: &str = "\
+pub enum ServeError {
+    /// Budget lapsed.
+    DeadlineExceeded { waited_us: u64 },
+    QueueFull { depth: usize },
+}
+";
+
+    const ROUTER_OK: &str = "\
+//! | `ServeError` variant | status |
+//! |----------------------|--------|
+//! | `DeadlineExceeded`   | 504    |
+//! | `QueueFull`          | 503    |
+
+pub fn serve_error_parts(e: &ServeError) -> (u16, &'static str) {
+    match e {
+        ServeError::DeadlineExceeded { .. } => (504, \"DeadlineExceeded\"),
+        ServeError::QueueFull { .. } => (503, \"QueueFull\"),
+    }
+}
+";
+
+    const README_OK: &str = "\
+## Serving error taxonomy
+
+| variant | http status | when |
+|---------|-------------|------|
+| `DeadlineExceeded { waited_us }` | 504 | budget lapsed |
+| `QueueFull { depth }` | 503 | queue full |
+
+## Next section
+";
+
+    #[test]
+    fn taxonomy_passes_when_synced() {
+        let e = taxonomy_enum(ENUM_OK);
+        let r = parse_with_raw("router.rs", ROUTER_OK);
+        assert!(rule_taxonomy(&e, &r, "README.md", README_OK).is_empty());
+    }
+
+    #[test]
+    fn taxonomy_flags_status_drift() {
+        let e = taxonomy_enum(ENUM_OK);
+        let drifted = ROUTER_OK.replace(
+            "| `QueueFull`          | 503    |",
+            "| `QueueFull`          | 500    |",
+        );
+        let r = parse_with_raw("router.rs", &drifted);
+        let fnd = one(rule_taxonomy(&e, &r, "README.md", README_OK));
+        // The drifted module-doc row is line 4 of the router fixture.
+        assert_eq!((fnd.file.as_str(), fnd.line, fnd.rule), ("router.rs", 4, "taxonomy-sync"));
+        assert!(fnd.message.contains("500"));
+    }
+
+    #[test]
+    fn taxonomy_flags_missing_readme_row() {
+        let e = taxonomy_enum(ENUM_OK);
+        let r = parse_with_raw("router.rs", ROUTER_OK);
+        let md = README_OK.replace("| `QueueFull { depth }` | 503 | queue full |\n", "");
+        let findings = rule_taxonomy(&e, &r, "README.md", &md);
+        let fnd = one(findings);
+        assert_eq!((fnd.file.as_str(), fnd.rule), ("README.md", "taxonomy-sync"));
+        assert!(fnd.message.contains("`QueueFull`"));
+    }
+
+    #[test]
+    fn taxonomy_flags_stale_arm() {
+        let e = taxonomy_enum(
+            "pub enum ServeError {\n    DeadlineExceeded { waited_us: u64 },\n    QueueFull { \
+             depth: usize },\n    Draining,\n}\n",
+        );
+        let r = parse_with_raw("router.rs", ROUTER_OK);
+        let findings = rule_taxonomy(&e, &r, "README.md", README_OK);
+        // `Draining` missing from all three derived tables.
+        assert_eq!(findings.len(), 3);
+        assert!(findings.iter().all(|f| f.message.contains("`Draining`")));
+    }
+
+    // --- rule 3 -----------------------------------------------------------
+
+    #[test]
+    fn bench_rows_pass_when_present() {
+        let bench = (
+            "b.rs".to_string(),
+            "suite.bench(\"im2col+GEMM, per image\", || {})".to_string(),
+        );
+        let manifest = "# frozen\nim2col+GEMM, per image\n";
+        assert!(rule_bench_rows("m.txt", manifest, &[bench]).is_empty());
+    }
+
+    #[test]
+    fn bench_rows_flag_missing_row() {
+        let bench = ("b.rs".to_string(), "suite.bench(\"other row\", || {})".to_string());
+        let manifest = "# frozen\nim2col+GEMM, per image\n";
+        let fnd = one(rule_bench_rows("m.txt", manifest, &[bench]));
+        assert_eq!((fnd.file.as_str(), fnd.line, fnd.rule), ("m.txt", 2, "bench-rows"));
+    }
+
+    // --- rule 4 -----------------------------------------------------------
+
+    const METRICS_OK: &str = "\
+pub struct Metrics {
+    pub requests_enqueued: AtomicU64,
+}
+
+pub struct Snapshot {
+    pub enqueued: u64,
+}
+
+impl Metrics {
+    pub fn snapshot(&self) -> Snapshot {
+        Snapshot { enqueued: self.requests_enqueued.load(Ordering::Relaxed) }
+    }
+}
+
+impl Snapshot {
+    pub fn to_json(&self) -> Vec<(&'static str, u64)> {
+        vec![(\"enqueued\", self.enqueued)]
+    }
+}
+";
+
+    #[test]
+    fn metrics_surface_passes_when_plumbed() {
+        let m = parse_with_raw("metrics.rs", METRICS_OK);
+        let main = parse_with_raw(
+            "main.rs",
+            "fn print_serve_summary(s: &Snapshot) {\n    println!(\"{}\", s.enqueued);\n}\n",
+        );
+        assert!(rule_metrics_surface(&m, &main).is_empty());
+    }
+
+    #[test]
+    fn metrics_surface_flags_summary_gap() {
+        let m = parse_with_raw("metrics.rs", METRICS_OK);
+        let main = parse_with_raw("main.rs", "fn print_serve_summary(_s: &Snapshot) {}\n");
+        let fnd = one(rule_metrics_surface(&m, &main));
+        // `enqueued` is declared on line 6 of the metrics fixture.
+        assert_eq!((fnd.file.as_str(), fnd.line, fnd.rule), ("metrics.rs", 6, "metrics-surface"));
+        assert!(fnd.message.contains("print_serve_summary"));
+    }
+
+    #[test]
+    fn metrics_surface_flags_unread_counter() {
+        let src = METRICS_OK.replace(
+            "Snapshot { enqueued: self.requests_enqueued.load(Ordering::Relaxed) }",
+            "Snapshot { enqueued: 0 }",
+        );
+        let m = parse_with_raw("metrics.rs", &src);
+        let main = parse_with_raw(
+            "main.rs",
+            "fn print_serve_summary(s: &Snapshot) {\n    println!(\"{}\", s.enqueued);\n}\n",
+        );
+        let fnd = one(rule_metrics_surface(&m, &main));
+        assert_eq!((fnd.line, fnd.rule), (2, "metrics-surface"));
+        assert!(fnd.message.contains("requests_enqueued"));
+    }
+
+    // --- rule 5 -----------------------------------------------------------
+
+    #[test]
+    fn config_docs_pass_when_documented() {
+        let c = parse_with_raw("config.rs", "let r = doc.get(\"rows\");\n");
+        let readme = "The `rows` key sets the array height.";
+        assert!(rule_config_docs(&c, "README.md", readme).is_empty());
+    }
+
+    #[test]
+    fn config_docs_flag_undocumented_key() {
+        let c = parse_with_raw(
+            "config.rs",
+            "let r = doc.get(\"rows\");\nlet c = doc.get(\"cols\");\n",
+        );
+        let fnd = one(rule_config_docs(&c, "README.md", "Only `rows` is documented."));
+        assert_eq!((fnd.file.as_str(), fnd.line, fnd.rule), ("config.rs", 2, "config-docs"));
+        assert!(fnd.message.contains("`cols`"));
+    }
+
+    #[test]
+    fn config_docs_skip_test_keys() {
+        let src = "let r = doc.get(\"rows\");\n#[cfg(test)]\nmod tests {\n    fn t() { \
+                   doc.get(\"only_in_tests\"); }\n}\n";
+        let c = parse_with_raw("config.rs", src);
+        assert!(rule_config_docs(&c, "README.md", "`rows` documented.").is_empty());
+    }
+
+    // --- rule 6 -----------------------------------------------------------
+
+    #[test]
+    fn hotpath_alloc_passes_with_annotations() {
+        let src = "\
+fn hot(out: &mut [f32]) {
+    out[0] = 1.0;
+}
+
+// lint: allow(alloc) — builder path, runs once at startup.
+fn cold() -> Vec<f32> {
+    vec![0.0; 8]
+}
+// lint: end-allow(alloc)
+
+fn label() -> String {
+    format!(\"t{}\", 1) // lint: allow(alloc)
+}
+
+#[cfg(test)]
+mod tests {
+    fn t() -> Vec<u8> {
+        vec![1, 2, 3]
+    }
+}
+";
+        let f = parse_with_raw("hot.rs", src);
+        assert!(rule_hotpath_alloc(&f).is_empty());
+    }
+
+    #[test]
+    fn hotpath_alloc_flags_bare_construct() {
+        let src = "fn hot() {\n    let v = vec![0u8; 64];\n}\n";
+        let f = parse_with_raw("hot.rs", src);
+        let fnd = one(rule_hotpath_alloc(&f));
+        assert_eq!((fnd.file.as_str(), fnd.line, fnd.rule), ("hot.rs", 2, "hotpath-alloc"));
+        assert!(fnd.message.contains("vec!"));
+    }
+
+    #[test]
+    fn hotpath_alloc_ignores_lookalikes() {
+        // `to_vec`, `my_format!`-style idents, and strings must not fire.
+        let src = "fn hot() {\n    let s = \"vec! format! Box::new\";\n    let n = \
+                   slice.to_vec_len();\n}\n";
+        let f = parse_with_raw("hot.rs", src);
+        assert!(rule_hotpath_alloc(&f).is_empty());
+    }
+
+    // --- rule 7 -----------------------------------------------------------
+
+    #[test]
+    fn flag_ordering_passes_on_acquire_release() {
+        let src = "\
+fn drain(&self) {
+    self.shutdown.store(true, Ordering::Release);
+    while !self.shutdown.load(Ordering::Acquire) {}
+    self.requests_completed.fetch_add(1, Ordering::Relaxed);
+}
+";
+        let f = parse_with_raw("coord.rs", src);
+        assert!(rule_flag_ordering(&f, &FLAG_ALLOWLIST).is_empty());
+    }
+
+    #[test]
+    fn flag_ordering_flags_relaxed_flag() {
+        let src = "fn stop(&self) {\n    self.shutdown.store(true, Ordering::Relaxed);\n}\n";
+        let f = parse_with_raw("coord.rs", src);
+        let fnd = one(rule_flag_ordering(&f, &FLAG_ALLOWLIST));
+        assert_eq!((fnd.file.as_str(), fnd.line, fnd.rule), ("coord.rs", 2, "flag-ordering"));
+        assert!(fnd.message.contains("shutdown"));
+    }
+
+    #[test]
+    fn flag_ordering_ignores_substrings() {
+        // `deadline_drops` contains "dr" but not the word "drain".
+        let src = "fn f(&self) {\n    self.deadline_drops.fetch_add(1, Ordering::Relaxed);\n}\n";
+        let f = parse_with_raw("coord.rs", src);
+        assert!(rule_flag_ordering(&f, &FLAG_ALLOWLIST).is_empty());
+    }
+}

@@ -1,0 +1,497 @@
+//! Line/token scanner shared by every lint rule.
+//!
+//! The scanner splits a Rust source file into per-line views:
+//!
+//! * `raw`     — the line exactly as written (used where string literals
+//!   matter, e.g. extracting `"DeadlineExceeded"` from a match arm),
+//! * `code`    — the line with comments stripped and string/char literal
+//!   *contents* blanked to spaces (delimiters kept), so token searches never
+//!   match inside literals or comments,
+//! * `comment` — the text of any comment on the line (`//`, `///`, `//!`,
+//!   and `/* .. */` interiors), without the comment markers.
+//!
+//! On top of that it tracks two kinds of exemption region:
+//!
+//! * `#[cfg(test)] mod … { … }` bodies (brace-counted on the `code` view),
+//!   so rules can skip test code, and
+//! * `// lint: allow(TAG)` … `// lint: end-allow(TAG)` regions plus
+//!   trailing `// lint: allow(TAG)` single-line waivers.
+
+/// One source line with its comment-aware views and exemption state.
+pub struct Line {
+    /// The line exactly as read from disk (no trailing newline).
+    pub raw: String,
+    /// Comments stripped, string/char contents blanked to spaces.
+    pub code: String,
+    /// Comment text on this line (without `//` / `/*` markers).
+    pub comment: String,
+    /// True when the line sits inside a `#[cfg(test)] mod … { … }` body.
+    pub in_test: bool,
+    /// `lint: allow(TAG)` region tags active on this line.
+    region_allows: Vec<String>,
+    /// Tags from a trailing `// lint: allow(TAG)` on this very line.
+    line_allows: Vec<String>,
+}
+
+impl Line {
+    /// True when `tag` is waived for this line, either by an enclosing
+    /// `lint: allow(tag)` region or a trailing same-line annotation.
+    pub fn allowed(&self, tag: &str) -> bool {
+        self.region_allows.iter().any(|t| t == tag) || self.line_allows.iter().any(|t| t == tag)
+    }
+}
+
+/// A scanned file: path (as reported in findings) plus per-line views.
+pub struct SourceFile {
+    pub path: String,
+    pub lines: Vec<Line>,
+}
+
+impl SourceFile {
+    /// Scan `text` (the file contents) into per-line code/comment views.
+    pub fn parse(path: &str, text: &str) -> SourceFile {
+        let mut lines = split_views(text);
+        mark_test_mods(&mut lines);
+        mark_allow_regions(&mut lines);
+        SourceFile { path: path.to_string(), lines }
+    }
+
+    /// 1-based line number for an index into `lines`.
+    pub fn lineno(&self, idx: usize) -> usize {
+        idx + 1
+    }
+}
+
+/// Tokenizer state across characters.
+enum St {
+    Code,
+    LineComment,
+    BlockComment(u32),
+    Str,
+    RawStr(u32),
+    CharLit,
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Split the file into lines, separating code from comments and blanking
+/// string/char literal contents in the `code` view.
+fn split_views(text: &str) -> Vec<Line> {
+    let chars: Vec<char> = text.chars().collect();
+    let mut lines = Vec::new();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut st = St::Code;
+    let mut i = 0usize;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            lines.push(new_line(&code, &comment));
+            code.clear();
+            comment.clear();
+            if matches!(st, St::LineComment) {
+                st = St::Code;
+            }
+            i += 1;
+            continue;
+        }
+        match st {
+            St::Code => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('/') {
+                    st = St::LineComment;
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    st = St::BlockComment(1);
+                    code.push(' ');
+                    i += 2;
+                } else if c == '"' {
+                    code.push('"');
+                    st = St::Str;
+                    i += 1;
+                } else if c == 'r' && !code.ends_with(is_ident) {
+                    if let Some(h) = raw_str_hashes(&chars, i) {
+                        code.push('"');
+                        st = St::RawStr(h);
+                        i += 2 + h as usize; // r, hashes, opening quote
+                    } else {
+                        code.push(c);
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    // Distinguish char literals from lifetimes.
+                    let n1 = chars.get(i + 1).copied();
+                    let n2 = chars.get(i + 2).copied();
+                    if n1 == Some('\\') {
+                        // Escaped char literal: skip quote, backslash, escaped char.
+                        code.push('\'');
+                        st = St::CharLit;
+                        i += 3;
+                    } else if n2 == Some('\'') && n1 != Some('\'') {
+                        // Plain char literal like 'x'.
+                        code.push('\'');
+                        code.push(' ');
+                        code.push('\'');
+                        i += 3;
+                    } else {
+                        // Lifetime: keep the tick, continue in code.
+                        code.push('\'');
+                        i += 1;
+                    }
+                } else {
+                    code.push(c);
+                    i += 1;
+                }
+            }
+            St::LineComment => {
+                comment.push(c);
+                i += 1;
+            }
+            St::BlockComment(depth) => {
+                let next = chars.get(i + 1).copied();
+                if c == '*' && next == Some('/') {
+                    st = if depth == 1 { St::Code } else { St::BlockComment(depth - 1) };
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    st = St::BlockComment(depth + 1);
+                    i += 2;
+                } else {
+                    comment.push(c);
+                    i += 1;
+                }
+            }
+            St::Str => {
+                if c == '\\' {
+                    // Skip escaped quote/backslash wholesale; other escapes
+                    // advance one char and let the payload blank normally.
+                    if matches!(chars.get(i + 1).copied(), Some('"' | '\\')) {
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                } else if c == '"' {
+                    code.push('"');
+                    st = St::Code;
+                    i += 1;
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            St::RawStr(h) => {
+                if c == '"' && (0..h as usize).all(|k| chars.get(i + 1 + k) == Some(&'#')) {
+                    code.push('"');
+                    st = St::Code;
+                    i += 1 + h as usize;
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            St::CharLit => {
+                if c == '\'' {
+                    code.push('\'');
+                    st = St::Code;
+                }
+                i += 1;
+            }
+        }
+    }
+    // Push the final (newline-less) line; a trailing newline already flushed it.
+    if !text.ends_with('\n') && (!code.is_empty() || !comment.is_empty()) {
+        lines.push(new_line(&code, &comment));
+    }
+    lines
+}
+
+/// If `chars[i]` starts a raw string (`r"` / `r#"` / …), return the hash count.
+fn raw_str_hashes(chars: &[char], i: usize) -> Option<u32> {
+    let mut j = i + 1;
+    let mut hashes = 0u32;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if chars.get(j) == Some(&'"') {
+        Some(hashes)
+    } else {
+        None
+    }
+}
+
+fn new_line(code: &str, comment: &str) -> Line {
+    Line {
+        raw: String::new(), // filled by caller of SourceFile::parse via raw split below
+        code: code.to_string(),
+        comment: comment.to_string(),
+        in_test: false,
+        region_allows: Vec::new(),
+        line_allows: Vec::new(),
+    }
+}
+
+/// Brace-count `#[cfg(test)] mod … { … }` bodies and flag their lines.
+fn mark_test_mods(lines: &mut [Line]) {
+    let mut i = 0usize;
+    while i < lines.len() {
+        if lines[i].code.contains("#[cfg(test)]") {
+            // Skip further attributes / comments / blank lines, then require
+            // a `mod` item so `#[cfg(test)]` on fns does not start a region.
+            let mut j = i + 1;
+            while j < lines.len() {
+                let ct = lines[j].code.trim();
+                if ct.starts_with("#[") || (ct.is_empty() && !lines[j].comment.is_empty()) {
+                    j += 1;
+                } else {
+                    break;
+                }
+            }
+            let starts_mod = lines
+                .get(j)
+                .map(|l| {
+                    let ct = l.code.trim();
+                    ct.starts_with("mod ") || ct.starts_with("pub mod ") || ct == "mod"
+                })
+                .unwrap_or(false);
+            if starts_mod {
+                let mut depth = 0i64;
+                let mut opened = false;
+                let mut k = j;
+                while k < lines.len() {
+                    for ch in lines[k].code.chars() {
+                        match ch {
+                            '{' => {
+                                depth += 1;
+                                opened = true;
+                            }
+                            '}' => depth -= 1,
+                            _ => {}
+                        }
+                    }
+                    lines[k].in_test = true;
+                    if opened && depth <= 0 {
+                        break;
+                    }
+                    k += 1;
+                }
+                i = k + 1;
+                continue;
+            }
+        }
+        i += 1;
+    }
+}
+
+/// Track `lint: allow(TAG)` / `lint: end-allow(TAG)` annotations.
+fn mark_allow_regions(lines: &mut [Line]) {
+    let mut active: Vec<String> = Vec::new();
+    for line in lines.iter_mut() {
+        let starts = parse_tags(&line.comment, "lint: allow(");
+        let ends = parse_tags(&line.comment, "lint: end-allow(");
+        let pure_comment = line.code.trim().is_empty();
+        if pure_comment {
+            for t in &starts {
+                if !active.contains(t) {
+                    active.push(t.clone());
+                }
+            }
+        } else {
+            line.line_allows = starts.clone();
+        }
+        line.region_allows = active.clone();
+        for t in &ends {
+            active.retain(|a| a != t);
+        }
+    }
+}
+
+/// Extract every `<marker>TAG)` tag from a comment string.
+fn parse_tags(comment: &str, marker: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut rest = comment;
+    while let Some(pos) = rest.find(marker) {
+        let after = &rest[pos + marker.len()..];
+        if let Some(close) = after.find(')') {
+            out.push(after[..close].trim().to_string());
+            rest = &after[close + 1..];
+        } else {
+            break;
+        }
+    }
+    out
+}
+
+/// Attach raw line text (parse blanks it, findings want the original).
+pub fn parse_with_raw(path: &str, text: &str) -> SourceFile {
+    let mut file = SourceFile::parse(path, text);
+    for (i, raw) in text.lines().enumerate() {
+        if let Some(l) = file.lines.get_mut(i) {
+            l.raw = raw.to_string();
+        }
+    }
+    file
+}
+
+/// Word-boundary substring search: `word` must not be flanked by identifier
+/// characters. Works on the `code` view so literals/comments never match.
+pub fn has_word(hay: &str, word: &str) -> bool {
+    if word.is_empty() {
+        return false;
+    }
+    let bytes = hay.as_bytes();
+    let mut start = 0usize;
+    while let Some(pos) = hay[start..].find(word) {
+        let p = start + pos;
+        let before_ok = p == 0 || !is_ident(bytes[p - 1] as char);
+        let end = p + word.len();
+        let after_ok = end >= bytes.len() || !is_ident(bytes[end] as char);
+        if before_ok && after_ok {
+            return true;
+        }
+        start = p + word.len();
+    }
+    false
+}
+
+/// Leading identifier of a trimmed line (`DeadlineExceeded { .. },` → name).
+pub fn leading_ident(s: &str) -> Option<String> {
+    let t = s.trim_start();
+    let ident: String = t.chars().take_while(|c| is_ident(*c)).collect();
+    if ident.is_empty() || ident.chars().next().map(|c| c.is_ascii_digit()).unwrap_or(true) {
+        None
+    } else {
+        Some(ident)
+    }
+}
+
+/// Net `{`/`}` delta of a code-view line.
+pub fn brace_delta(code: &str) -> i64 {
+    let mut d = 0i64;
+    for c in code.chars() {
+        match c {
+            '{' => d += 1,
+            '}' => d -= 1,
+            _ => {}
+        }
+    }
+    d
+}
+
+/// Locate the body of `fn <name>` as an inclusive line-index range
+/// (from the signature line through the closing brace).
+pub fn fn_region(file: &SourceFile, name: &str) -> Option<(usize, usize)> {
+    let needle = format!("fn {name}");
+    let mut start = None;
+    for (i, l) in file.lines.iter().enumerate() {
+        if l.code.contains(&needle) && has_word(&l.code, name) {
+            start = Some(i);
+            break;
+        }
+    }
+    let start = start?;
+    let mut depth = 0i64;
+    let mut opened = false;
+    for (i, l) in file.lines.iter().enumerate().skip(start) {
+        for c in l.code.chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    opened = true;
+                }
+                '}' => depth -= 1,
+                _ => {}
+            }
+        }
+        if opened && depth <= 0 {
+            return Some((start, i));
+        }
+    }
+    Some((start, file.lines.len().saturating_sub(1)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_are_stripped_from_code_view() {
+        let f = parse_with_raw("t.rs", "let x = 1; // vec! here\n");
+        assert_eq!(f.lines[0].code.trim_end(), "let x = 1;");
+        assert!(f.lines[0].comment.contains("vec! here"));
+    }
+
+    #[test]
+    fn string_contents_are_blanked() {
+        let f = parse_with_raw("t.rs", "let s = \"unsafe vec! { } \"; let y = 2;\n");
+        assert!(!f.lines[0].code.contains("unsafe"));
+        assert!(!f.lines[0].code.contains("vec!"));
+        // Braces inside strings must not affect brace counting.
+        assert_eq!(brace_delta(&f.lines[0].code), 0);
+        assert!(f.lines[0].code.contains("let y = 2;"));
+    }
+
+    #[test]
+    fn raw_strings_and_escapes_are_blanked() {
+        let src = "let a = r#\"unsafe \"quoted\" {\"#; let b = \"\\\"unsafe\\\"\";\n";
+        let f = parse_with_raw("t.rs", src);
+        assert!(!f.lines[0].code.contains("unsafe"));
+        assert_eq!(brace_delta(&f.lines[0].code), 0);
+    }
+
+    #[test]
+    fn char_literals_and_lifetimes() {
+        let src = "fn f<'a>(c: char) -> bool { c == '{' || c == '\\'' }\n";
+        let f = parse_with_raw("t.rs", src);
+        // The '{' char literal is blanked; only the fn-body braces count.
+        assert_eq!(brace_delta(&f.lines[0].code), 0);
+        assert!(f.lines[0].code.contains("fn f<'a>"));
+    }
+
+    #[test]
+    fn block_comments_nest() {
+        let src = "let x = 1; /* outer /* inner */ still comment */ let y = 2;\n";
+        let f = parse_with_raw("t.rs", src);
+        assert!(f.lines[0].code.contains("let x = 1;"));
+        assert!(f.lines[0].code.contains("let y = 2;"));
+        assert!(!f.lines[0].code.contains("still comment"));
+    }
+
+    #[test]
+    fn cfg_test_mod_marks_lines() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\nfn after() {}\n";
+        let f = parse_with_raw("t.rs", src);
+        assert!(!f.lines[0].in_test);
+        assert!(f.lines[2].in_test);
+        assert!(f.lines[3].in_test);
+        assert!(f.lines[4].in_test);
+        assert!(!f.lines[5].in_test);
+    }
+
+    #[test]
+    fn allow_regions_and_line_waivers() {
+        let src = "// lint: allow(alloc)\nlet v = vec![1];\n// lint: end-allow(alloc)\nlet w = \
+                   vec![2];\nlet x = vec![3]; // lint: allow(alloc)\n";
+        let f = parse_with_raw("t.rs", src);
+        assert!(f.lines[1].allowed("alloc"));
+        assert!(!f.lines[3].allowed("alloc"));
+        assert!(f.lines[4].allowed("alloc"));
+    }
+
+    #[test]
+    fn word_boundaries() {
+        assert!(has_word("use Ordering::Relaxed;", "Relaxed"));
+        assert!(!has_word("deadline_drops", "drain"));
+        assert!(!has_word("shutdown_flag", "shutdown"));
+        assert!(has_word("self.shutdown.store", "shutdown"));
+    }
+
+    #[test]
+    fn fn_region_spans_body() {
+        let src = "fn a() {\n    let x = 1;\n}\nfn b() {}\n";
+        let f = parse_with_raw("t.rs", src);
+        assert_eq!(fn_region(&f, "a"), Some((0, 2)));
+        assert_eq!(fn_region(&f, "b"), Some((3, 3)));
+    }
+}

@@ -63,6 +63,10 @@
 //!
 //! Every field is optional; omitted fields keep their defaults. The CLI's
 //! `--config <path>` loads one of these; explicit CLI flags still win.
+//!
+//! Every key this module parses must appear in the README's "Full config
+//! schema" table — the `config-docs` rule of `tpu-imac-lint`
+//! (ARCHITECTURE.md §7) fails CI on any undocumented `get("key")`.
 
 use anyhow::{bail, Context, Result};
 

@@ -179,7 +179,10 @@ pub struct Response {
 /// channel as the `Err` arm of [`ServeResult`].
 ///
 /// See the README's "Serving error taxonomy" table for the operational
-/// meaning of each variant.
+/// meaning of each variant. Adding a variant means touching four places —
+/// this enum, `serve_http/router.rs::serve_error_parts`, the router
+/// module-doc table, and the README table; the `taxonomy-sync` lint rule
+/// (ARCHITECTURE.md §7) fails CI until all four agree.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum ServeError {
     /// The request's latency budget expired before a worker computed it.

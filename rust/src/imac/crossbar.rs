@@ -96,6 +96,8 @@ pub struct Crossbar {
 
 impl Crossbar {
     /// Program ternary weights `w[i][j]` (row-major `n_in × n_out`).
+    // lint: allow(alloc) — programming happens at deployment build, never
+    // on the per-request path; the MVM kernels below are allocation-free.
     pub fn program(
         w: &[i8],
         n_in: usize,
@@ -163,6 +165,7 @@ impl Crossbar {
             col_bias,
         }
     }
+    // lint: end-allow(alloc)
 
     /// Analog MVM: `out_j = Σ_i v_eff(i)·w_norm[i][j] + offset_j`, in
     /// weight·input logical units (the diff-amp normalization).
@@ -532,11 +535,13 @@ impl Crossbar {
     }
 
     /// Convenience allocating wrapper.
+    // lint: allow(alloc) — test/inspection convenience, not the hot path.
     pub fn mvm_vec(&self, x: &[f32]) -> Vec<f32> {
         let mut out = vec![0.0; self.n_out];
         self.mvm(x, &mut out);
         out
     }
+    // lint: end-allow(alloc)
 
     /// The realized (normalized) weight matrix — for inspection/tests.
     pub fn realized_weights(&self) -> &[f32] {
@@ -549,6 +554,8 @@ impl Crossbar {
 }
 
 /// Reference integer MVM for the ideal case.
+// lint: allow(alloc) — scalar oracle plus once-per-process autotune below;
+// neither runs per request.
 pub fn reference_mvm(w: &[i8], n_in: usize, n_out: usize, x: &[f32]) -> Vec<f32> {
     let mut out = vec![0.0f32; n_out];
     for i in 0..n_in {
@@ -590,6 +597,7 @@ pub(crate) fn autotune_imac_tile() -> (usize, usize) {
     }
     best
 }
+// lint: end-allow(alloc)
 
 #[cfg(test)]
 mod tests {

@@ -584,10 +584,12 @@ fn serve_registry(
 /// per-model breakdown appears whenever a registry served the run.
 fn print_serve_summary(snap: &Snapshot, wall: std::time::Duration) {
     println!(
-        "served {} requests in {:.3}s => {:.1} req/s",
+        "served {} requests in {:.3}s => {:.1} req/s ({} enqueued, {} rejected)",
         snap.completed,
         wall.as_secs_f64(),
-        snap.completed as f64 / wall.as_secs_f64()
+        snap.completed as f64 / wall.as_secs_f64(),
+        snap.enqueued,
+        snap.rejected
     );
     println!(
         "latency: mean {:.2} ms  p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms",

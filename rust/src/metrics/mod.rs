@@ -5,6 +5,12 @@
 //! — fixed-footprint, lock-free log-bucketed histograms — so a
 //! million-request soak records in O(1) memory and `snapshot()` computes
 //! percentiles in O(buckets), never sorting the full sample history.
+//!
+//! Surfacing is machine-checked: the `metrics-surface` rule of
+//! `tpu-imac-lint` (ARCHITECTURE.md §7) requires every [`Metrics`] counter
+//! to be read in `snapshot()` and every [`Snapshot`] field to appear in
+//! `to_json()` and the CLI serve summary — a counter that can't be
+//! observed is a bug, not a spare.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};

@@ -412,6 +412,8 @@ pub fn conv2d_gemm_i8(
 /// [`conv2d_gemm_i8`] with an explicit activation scale — the
 /// calibrated-static form (`quant::calibrate` produces the scale; the
 /// kernel clamps out-of-range samples to ±127 like a deployed TPU).
+// lint: allow(alloc) — allocating convenience wrapper for tests/properties;
+// the serving path runs the same arithmetic through `ConvPlan` scratch.
 #[allow(clippy::too_many_arguments)]
 pub fn conv2d_gemm_i8_with_scale(
     x: &super::tensor::Tensor,
@@ -440,6 +442,7 @@ pub fn conv2d_gemm_i8_with_scale(
     );
     out
 }
+// lint: end-allow(alloc)
 
 /// Quantized depthwise conv with fused requantize/bias/ReLU epilogue — the
 /// int8 counterpart of [`dwconv2d_into`] (depthwise gains nothing from
@@ -561,6 +564,8 @@ pub fn dwconv2d_i8_requant_at(
 /// hot path runs the same arithmetic through `engine::ConvPlan`'s `DwI8`
 /// op with scratch reuse; this form exists for tests and is the function
 /// the depthwise quantization-error property is stated over.
+// lint: allow(alloc) — allocating convenience wrapper for tests/properties;
+// the serving path runs the same arithmetic through `ConvPlan` scratch.
 pub fn dwconv2d_i8_with_scale(
     x: &super::tensor::Tensor,
     w: &[f32],
@@ -585,6 +590,7 @@ pub fn dwconv2d_i8_with_scale(
     );
     out
 }
+// lint: end-allow(alloc)
 
 /// Allocating convenience: int8 depthwise conv with a dynamic per-image
 /// activation scale (mirrors [`conv2d_gemm_i8`]).
@@ -753,6 +759,8 @@ pub fn gap_into(x: &[f32], h: usize, w: usize, c: usize, out: &mut [f32]) {
 /// goes through `engine::ConvPlan` with scratch reuse; this form exists for
 /// tests and one-off use, and is the function the equivalence property
 /// (`conv2d_gemm ≡ ops::conv2d`) is stated over.
+// lint: allow(alloc) — allocating convenience + once-per-process autotune
+// below; the per-request path reuses `Scratch` and never reaches here.
 pub fn conv2d_gemm(
     x: &super::tensor::Tensor,
     w: &[f32],
@@ -810,6 +818,7 @@ pub(crate) fn autotune_gemm_tile() -> (usize, usize) {
     }
     best
 }
+// lint: end-allow(alloc)
 
 #[cfg(test)]
 mod tests {

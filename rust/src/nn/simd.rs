@@ -102,7 +102,7 @@ pub fn active() -> SimdLevel {
 /// accelerated level. Property tests and benches iterate this so every
 /// variant that can execute here is exercised against the reference.
 pub fn runnable_levels() -> Vec<SimdLevel> {
-    let mut ls = vec![SimdLevel::Scalar];
+    let mut ls = vec![SimdLevel::Scalar]; // lint: allow(alloc) — test/bench path
     let host = detect_host();
     if host != SimdLevel::Scalar {
         ls.push(host);
@@ -126,12 +126,19 @@ fn i8_axpy_i32_scalar(a: i32, b: &[i8], out: &mut [i32]) {
 
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
+// SAFETY: callers must have runtime-detected AVX2 (every dispatcher below
+// selects `Avx2` only via `active()` / `runnable_levels()`); the body
+// itself touches memory only through the length-bounded offsets below.
 unsafe fn i8_axpy_i32_avx2(a: i8, b: &[i8], out: &mut [i32]) {
     use std::arch::x86_64::*;
     let n = b.len().min(out.len());
     let va = _mm256_set1_epi32(a as i32);
     let mut j = 0;
     // 8 lanes: sign-extend 8 packed i8 weights to i32, multiply, add.
+    // SAFETY: `j + 8 <= n <= min(b.len(), out.len())` bounds every pointer
+    // offset (8 i8 reads, 8 i32 read/writes); the loadl/loadu/storeu
+    // intrinsics tolerate any alignment, so slices need no alignment
+    // guarantee. The scalar tail handles `n % 8` in safe code.
     unsafe {
         while j + 8 <= n {
             let vb8 = _mm_loadl_epi64(b.as_ptr().add(j) as *const __m128i);
@@ -146,10 +153,15 @@ unsafe fn i8_axpy_i32_avx2(a: i8, b: &[i8], out: &mut [i32]) {
 }
 
 #[cfg(target_arch = "aarch64")]
+// SAFETY: NEON is baseline on aarch64, so the target-feature contract is
+// met by construction; memory access is length-bounded below.
 unsafe fn i8_axpy_i32_neon(a: i8, b: &[i8], out: &mut [i32]) {
     use std::arch::aarch64::*;
     let n = b.len().min(out.len());
     let mut j = 0;
+    // SAFETY: `j + 8 <= n <= min(b.len(), out.len())` bounds the 8 i8
+    // reads and the two 4-lane i32 read/write pairs at `j` and `j + 4`;
+    // vld1/vst1 are unaligned-tolerant. Scalar tail handles `n % 8`.
     unsafe {
         while j + 8 <= n {
             let w16 = vmovl_s8(vld1_s8(b.as_ptr().add(j)));
@@ -205,10 +217,16 @@ fn i8_mac_i32_scalar(x: &[i8], w: &[i8], acc: &mut [i32]) {
 
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
+// SAFETY: callers must have runtime-detected AVX2 (dispatchers select
+// `Avx2` only via `active()` / `runnable_levels()`); memory access is
+// length-bounded below.
 unsafe fn i8_mac_i32_avx2(x: &[i8], w: &[i8], acc: &mut [i32]) {
     use std::arch::x86_64::*;
     let n = x.len().min(w.len()).min(acc.len());
     let mut j = 0;
+    // SAFETY: `j + 8 <= n <= min(x.len(), w.len(), acc.len())` bounds the
+    // two 8-byte i8 loads and the 8-lane i32 read/write; all intrinsics
+    // used are unaligned-tolerant. Scalar tail handles `n % 8`.
     unsafe {
         while j + 8 <= n {
             let vx = _mm256_cvtepi8_epi32(_mm_loadl_epi64(x.as_ptr().add(j) as *const __m128i));
@@ -261,10 +279,13 @@ pub trait StageElem: Copy + Default {
 
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
+// SAFETY: callers must have runtime-detected AVX2; access is bounded below.
 unsafe fn copy_f32_avx2(src: &[f32], dst: &mut [f32]) {
     use std::arch::x86_64::*;
     let n = src.len().min(dst.len());
     let mut j = 0;
+    // SAFETY: `j + 8 <= n <= min(src.len(), dst.len())` bounds each 8-lane
+    // f32 load/store; loadu/storeu accept any alignment. Safe tail copy.
     unsafe {
         while j + 8 <= n {
             _mm256_storeu_ps(dst.as_mut_ptr().add(j), _mm256_loadu_ps(src.as_ptr().add(j)));
@@ -276,11 +297,14 @@ unsafe fn copy_f32_avx2(src: &[f32], dst: &mut [f32]) {
 
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
+// SAFETY: callers must have runtime-detected AVX2; access is bounded below.
 unsafe fn zero_f32_avx2(dst: &mut [f32]) {
     use std::arch::x86_64::*;
     let n = dst.len();
     let z = _mm256_setzero_ps();
     let mut j = 0;
+    // SAFETY: `j + 8 <= n = dst.len()` bounds each 8-lane store; storeu
+    // accepts any alignment. Safe `fill` handles the tail.
     unsafe {
         while j + 8 <= n {
             _mm256_storeu_ps(dst.as_mut_ptr().add(j), z);
@@ -292,10 +316,13 @@ unsafe fn zero_f32_avx2(dst: &mut [f32]) {
 
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
+// SAFETY: callers must have runtime-detected AVX2; access is bounded below.
 unsafe fn copy_i8_avx2(src: &[i8], dst: &mut [i8]) {
     use std::arch::x86_64::*;
     let n = src.len().min(dst.len());
     let mut j = 0;
+    // SAFETY: `j + 32 <= n <= min(src.len(), dst.len())` bounds each
+    // 32-byte load/store; loadu/storeu accept any alignment. Safe tail.
     unsafe {
         while j + 32 <= n {
             let v = _mm256_loadu_si256(src.as_ptr().add(j) as *const __m256i);
@@ -308,11 +335,14 @@ unsafe fn copy_i8_avx2(src: &[i8], dst: &mut [i8]) {
 
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
+// SAFETY: callers must have runtime-detected AVX2; access is bounded below.
 unsafe fn zero_i8_avx2(dst: &mut [i8]) {
     use std::arch::x86_64::*;
     let n = dst.len();
     let z = _mm256_setzero_si256();
     let mut j = 0;
+    // SAFETY: `j + 32 <= n = dst.len()` bounds each 32-byte store; storeu
+    // accepts any alignment. Safe `fill` handles the tail.
     unsafe {
         while j + 32 <= n {
             _mm256_storeu_si256(dst.as_mut_ptr().add(j) as *mut __m256i, z);
@@ -393,6 +423,9 @@ fn popcnt_diff_scalar(x: &[u64], plus: &[u64], minus: &[u64]) -> i32 {
 
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "popcnt")]
+// SAFETY: no raw memory access — the body is the safe scalar kernel,
+// recompiled with POPCNT enabled. Callers must have runtime-detected
+// POPCNT (the `Avx2` dispatch level implies it was).
 unsafe fn popcnt_diff_hw(x: &[u64], plus: &[u64], minus: &[u64]) -> i32 {
     popcnt_diff_scalar(x, plus, minus)
 }
@@ -447,12 +480,15 @@ impl Default for TilePlan {
 
 impl TilePlan {
     /// Human-readable form for the serve summary / metrics snapshot.
+    // lint: allow(alloc) — label formatting runs at snapshot time, not on
+    // the per-request path.
     pub fn label(&self) -> String {
         format!(
             "gemm kc={} mc={} | imac kc={} imgs={}",
             self.gemm_kc, self.gemm_mc, self.imac_kc, self.imac_imgs
         )
     }
+    // lint: end-allow(alloc)
 }
 
 /// Candidate k-panel widths for the i8 GEMM autotune grid.

@@ -3,7 +3,9 @@
 //!
 //! The status mapping below is the wire contract — pinned one variant at a
 //! time by `tests/http_taxonomy.rs` and documented in the README error
-//! taxonomy table:
+//! taxonomy table. The table, the `serve_error_parts` match, the enum, and
+//! the README are machine-checked against each other by the `taxonomy-sync`
+//! rule of `tpu-imac-lint` (ARCHITECTURE.md §7) — edit all four together:
 //!
 //! | `ServeError` variant | status |
 //! |----------------------|--------|
